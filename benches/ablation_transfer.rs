@@ -1,0 +1,57 @@
+//! Ablation (DESIGN.md design-choice list): does Algorithm 2's subspace
+//! TRANSFER (M' = M A_old A_newᵀ on resample, the paper's §2.4 remedy #2)
+//! actually matter, or is resampling alone enough?
+//!
+//! Compares FLORA(16) momentum with and without the transfer at an
+//! aggressive resample interval (κ=5, so ~16 transfers over the run) where
+//! the effect is visible; Naive momentum is the reference ceiling.
+//!
+//! Run: cargo bench --bench ablation_transfer [-- --steps N]
+
+use flora::bench::paper::{base_config, shared_runtime, BenchArgs};
+use flora::bench::Table;
+use flora::config::TaskKind;
+use flora::coordinator::{MethodSpec, Trainer};
+
+fn main() {
+    let args = BenchArgs::parse();
+    if !args.require_artifacts() {
+        return;
+    }
+    let rt = shared_runtime(&args.artifacts).expect("runtime");
+    let steps = args.steps.unwrap_or(if args.quick { 20 } else { 80 });
+    let mut table = Table::new(
+        &format!("Ablation — Algorithm 2 subspace transfer (mt task, kappa=5, {steps} steps)"),
+        &["Method", "BLEU", "final loss"],
+    );
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    for method in [
+        MethodSpec::Naive,
+        MethodSpec::Flora { rank: 16 },
+        MethodSpec::FloraNoTransfer { rank: 16 },
+    ] {
+        eprintln!("[ablation] {}", method.label());
+        let mut cfg = base_config(TaskKind::Mt, steps, 1);
+        cfg.method = method;
+        cfg.kappa = 5;
+        match Trainer::with_runtime(cfg, rt.clone()).and_then(|mut t| t.run()) {
+            Ok(r) => {
+                let q = r.metric.map(|m| m.quality()).unwrap_or(f64::MIN);
+                rows.push((method.label(), q));
+                table.row(vec![
+                    method.label(),
+                    r.metric.map(|m| m.render()).unwrap_or_default(),
+                    format!("{:.3}", r.final_train_loss()),
+                ]);
+            }
+            Err(e) => table.row(vec![method.label(), format!("ERR {e}"), "-".into()]),
+        }
+    }
+    table.print();
+    if rows.len() == 3 {
+        println!(
+            "\ncheck: transfer >= no-transfer under frequent resampling: {}",
+            if rows[1].1 >= rows[2].1 - 0.5 { "OK" } else { "MISS" }
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Microbenchmark — the rp hot path (not a paper table; feeds §Perf).
+//!
+//! Times the rust-substrate compress/decompress/transfer GEMMs across the
+//! shapes the bench models use, plus projection regeneration from seed
+//! (the "store the seed" trade: regeneration cost vs storing A).
+//!
+//! Run: cargo bench --bench micro_rp
+
+use flora::bench::{report, time_it};
+use flora::rp;
+use flora::tensor::Matrix;
+use flora::util::rng::Rng;
+
+fn main() {
+    let shapes = [(64usize, 64usize, 8usize), (256, 256, 16), (768, 768, 32), (2048, 512, 64)];
+    for (n, m, r) in shapes {
+        let mut rng = Rng::new(0);
+        let g = Matrix::gaussian(n, m, 1.0, &mut rng);
+        let a = rp::projection(1, r, m);
+        let c = rp::compress(&g, &a);
+        let a2 = rp::projection(2, r, m);
+
+        let s = time_it(2, 10, || {
+            std::hint::black_box(rp::projection(3, r, m));
+        });
+        report(&format!("projection from seed  [{r}x{m}]"), &s);
+        let s = time_it(2, 10, || {
+            std::hint::black_box(rp::compress(&g, &a));
+        });
+        report(&format!("compress    G[{n}x{m}] r={r}"), &s);
+        let s = time_it(2, 10, || {
+            std::hint::black_box(rp::decompress(&c, &a));
+        });
+        report(&format!("decompress  C[{n}x{r}] m={m}"), &s);
+        let s = time_it(2, 10, || {
+            std::hint::black_box(rp::transfer(&c, &a, &a2));
+        });
+        report(&format!("transfer    M[{n}x{r}]"), &s);
+        println!();
+    }
+}

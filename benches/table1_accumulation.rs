@@ -1,0 +1,61 @@
+//! Table 1 — gradient accumulation under compression.
+//!
+//! (a) T5-sim on XSum-sim (ROUGE), (b) GPT-2-sim on IWSLT-sim (BLEU).
+//! Methods: None / Naive / LoRA(r)×4 / FLORA(r)×4, Adafactor base, τ-step
+//! accumulation (Algorithm 1). Mem/ΔM columns are the analytic accountant
+//! at the paper's model sizes; quality/loss are measured end-to-end on the
+//! local artifacts through the full rust↔PJRT stack.
+//!
+//! Run: cargo bench --bench table1_accumulation [-- --quick | --steps N]
+
+use flora::bench::paper::*;
+use flora::config::TaskKind;
+use flora::memory::{Dims, OptKind, StateRole};
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = args.steps.unwrap_or(if args.quick { 8 } else { 30 });
+    let tau = if args.quick { 4 } else { 8 };
+    let cells = table_grid();
+    // one runtime for the whole bench: sum+mt share the lm-small executables
+    let rt = if args.require_artifacts() {
+        Some(shared_runtime(&args.artifacts).expect("runtime"))
+    } else {
+        None
+    };
+    let role = StateRole::Accumulation;
+    let opt = OptKind::Adafactor;
+
+    for (task, small_dims, big_dims, small_label, big_label, metric) in [
+        (TaskKind::Sum, Dims::t5_small_sim(), Dims::t5_3b_sim(), "60M", "3B", "R1/R2/RL"),
+        (TaskKind::Mt, Dims::gpt2_base_sim(), Dims::gpt2_xl_sim(), "110M", "1.5B", "BLEU"),
+    ] {
+        let title = format!(
+            "Table 1{} — gradient accumulation ({}, tau={tau}, {} steps)",
+            if task == TaskKind::Sum { 'a' } else { 'b' },
+            task.name(),
+            steps
+        );
+        if let Some(rt) = &rt {
+            let base = base_config(task, steps, tau);
+            let reports: Vec<_> = cells
+                .iter()
+                .map(|c| {
+                    eprintln!("[table1/{}] {}", task.name(), paper_label(c));
+                    run_cell(&base, c, rt)
+                })
+                .collect();
+            render_table(&title, small_label, &small_dims, opt, role, &cells, &reports, metric)
+                .print();
+        }
+        render_analytic_only(
+            &format!("Table 1 ({big_label} rows, analytic memory)"),
+            big_label,
+            &big_dims,
+            opt,
+            role,
+            &cells,
+        )
+        .print();
+    }
+}

@@ -1,0 +1,48 @@
+//! Table 2 — momentum compression, training FROM SCRATCH (Algorithm 2).
+//!
+//! Methods: None / Naive / LoRA(r)×4 / FLORA(r)×4 with Adafactor base and
+//! EMA momentum over gradients; FLORA keeps the momentum in the projected
+//! space with κ-interval subspace transfer. κ defaults to 50 locally
+//! (scaled from the paper's 1000 by the step-count ratio; Table 3 sweeps it).
+//!
+//! Run: cargo bench --bench table2_momentum [-- --quick | --steps N]
+
+use flora::bench::paper::*;
+use flora::config::TaskKind;
+use flora::memory::{Dims, OptKind, StateRole};
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = args.steps.unwrap_or(if args.quick { 12 } else { 60 });
+    let cells = table_grid();
+    // one runtime for the whole bench: sum+mt share the lm-small executables
+    let rt = if args.require_artifacts() {
+        Some(shared_runtime(&args.artifacts).expect("runtime"))
+    } else {
+        None
+    };
+    let role = StateRole::Momentum;
+    let opt = OptKind::Adafactor;
+
+    for (task, dims, label, metric) in [
+        (TaskKind::Sum, Dims::t5_small_sim(), "T5 60M XSum-sim", "R1/R2/RL"),
+        (TaskKind::Mt, Dims::gpt2_base_sim(), "GPT-2 110M IWSLT-sim", "BLEU"),
+    ] {
+        let title = format!("Table 2 — momentum ({label}, {steps} steps, kappa=50)");
+        if let Some(rt) = &rt {
+            let mut base = base_config(task, steps, 1); // tau=1 ⇒ momentum mode
+            base.kappa = 50;
+            let reports: Vec<_> = cells
+                .iter()
+                .map(|c| {
+                    eprintln!("[table2/{}] {}", task.name(), paper_label(c));
+                    run_cell(&base, c, rt)
+                })
+                .collect();
+            render_table(&title, label, &dims, opt, role, &cells, &reports, metric)
+                .print();
+        } else {
+            render_analytic_only(&title, label, &dims, opt, role, &cells).print();
+        }
+    }
+}

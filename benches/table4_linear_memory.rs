@@ -1,0 +1,68 @@
+//! Table 4 — linear-memory base optimizer (unfactored Adafactor).
+//!
+//! The paper's point: with Adafactor the optimizer state is already
+//! sublinear, so LoRA cannot save memory (it even adds some); with a
+//! LINEAR-memory optimizer LoRA's small trainable set wins at small r —
+//! but FLORA overtakes it at r=256 (smaller constant) while beating it on
+//! quality by 2–3 ROUGE everywhere.
+//!
+//! Run: cargo bench --bench table4_linear_memory [-- --quick | --steps N]
+
+use flora::bench::paper::*;
+use flora::config::TaskKind;
+use flora::memory::{Dims, OptKind, StateRole};
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = args.steps.unwrap_or(if args.quick { 8 } else { 30 });
+    let tau = if args.quick { 4 } else { 8 };
+    let cells = table_grid();
+    let dims = Dims::t5_small_sim();
+    let title = format!(
+        "Table 4 — linear-memory optimizer (unfactored Adafactor, sum task, tau={tau}, {steps} steps)"
+    );
+    if args.require_artifacts() {
+        let rt = shared_runtime(&args.artifacts).expect("runtime");
+        let mut base = base_config(TaskKind::Sum, steps, tau);
+        base.optimizer = "adafactor_nofactor".into();
+        let reports: Vec<_> = cells
+            .iter()
+            .map(|c| {
+                eprintln!("[table4] {}", paper_label(c));
+                run_cell(&base, c, &rt)
+            })
+            .collect();
+        render_table(
+            &title,
+            "T5 60M",
+            &dims,
+            OptKind::AdafactorNoFactor,
+            StateRole::Accumulation,
+            &cells,
+            &reports,
+            "R1/R2/RL",
+        )
+        .print();
+    } else {
+        render_analytic_only(
+            &title, "T5 60M", &dims, OptKind::AdafactorNoFactor,
+            StateRole::Accumulation, &cells,
+        )
+        .print();
+    }
+    // the crossover check the paper calls out
+    use flora::memory::{breakdown, Method};
+    let state = |m: Method| {
+        let b = breakdown(&dims, m, OptKind::AdafactorNoFactor, StateRole::Accumulation, 1, false);
+        b.opt_state + b.method_state + b.extra_params
+    };
+    println!("\nchecks (paper §3.3):");
+    println!(
+        "  LoRA(8) beats FLORA(8) on memory : {}",
+        if state(Method::Lora(8)) < state(Method::Flora(8)) { "OK" } else { "MISS" }
+    );
+    println!(
+        "  FLORA(256) beats LoRA(256)       : {}",
+        if state(Method::Flora(256)) < state(Method::Lora(256)) { "OK" } else { "MISS" }
+    );
+}

@@ -1,0 +1,85 @@
+//! Table 5 (Appendix C.1) — image classification with ViT on CIFAR-sim.
+//!
+//! Adam (full state) vs FLORA (compressed momentum + factored second
+//! moment): the paper reports matched accuracy with 24–32% less training
+//! memory. Accuracy is measured end-to-end on the vit-cifar artifacts; the
+//! memory column is the accountant at ViT-Base/Large scale.
+//!
+//! Run: cargo bench --bench table5_vit [-- --quick | --steps N]
+
+use flora::bench::paper::{shared_runtime, BenchArgs};
+use flora::bench::Table;
+use flora::config::{TaskKind, TrainConfig};
+use flora::coordinator::{MethodSpec, Trainer};
+use flora::memory::{breakdown, Dims, Method, OptKind, StateRole};
+use flora::util::human;
+
+fn vit_dims(d: u64, layers: u64, ff: u64) -> Dims {
+    // accountant reuse: ViT encoder ~ LM without the big vocab embedding
+    Dims { vocab: 1000, d_model: d, n_layers: layers, d_ff: ff, seq_len: 197, n_heads: d / 64 }
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = args.steps.unwrap_or(if args.quick { 10 } else { 60 });
+    let mut table = Table::new(
+        &format!("Table 5 — ViT on CIFAR-sim ({steps} steps)"),
+        &["Model", "Optimizer", "Accuracy", "Mem (analytic)", "local state"],
+    );
+    let cases = [
+        ("Base", MethodSpec::None, "adam", 0.003f32),
+        ("Base", MethodSpec::Flora { rank: 16 }, "adafactor", 0.01),
+    ];
+    if args.require_artifacts() {
+        let rt = shared_runtime(&args.artifacts).expect("runtime");
+        for (scale, method, opt, lr) in cases {
+            eprintln!("[table5] {} {}", scale, method.label());
+            let cfg = TrainConfig {
+                model: "vit-cifar".into(),
+                task: TaskKind::Vit,
+                method,
+                optimizer: opt.into(),
+                lr,
+                steps,
+                tau: 1,
+                kappa: 50,
+                batch: 4,
+                seed: 0,
+                eval_every: 0,
+                eval_samples: 64,
+            };
+            let report = Trainer::with_runtime(cfg, rt.clone()).and_then(|mut t| t.run());
+            // analytic memory at ViT-Base scale (86M)
+            let dims = vit_dims(768, 12, 3072);
+            let (m, okind) = match method {
+                MethodSpec::None => (Method::None, OptKind::Adam),
+                _ => (Method::Flora(256), OptKind::Adafactor),
+            };
+            let b = breakdown(&dims, m, okind, StateRole::Momentum, 32, false);
+            match report {
+                Ok(r) => table.row(vec![
+                    scale.into(),
+                    if method == MethodSpec::None { "Adam".into() } else { "FLORA".into() },
+                    r.metric.map(|mv| mv.render()).unwrap_or_default(),
+                    format!("{:.2} GiB", human::gib(b.total())),
+                    human::bytes(r.total_state_bytes()),
+                ]),
+                Err(e) => table.row(vec![scale.into(), method.label(), format!("ERR {e}"), "-".into(), "-".into()]),
+            }
+        }
+    }
+    // ViT-Base and ViT-Large analytic rows (the paper's 23.8% / 32.4% savings)
+    for (label, d, l, ff) in [("Base(86M)", 768u64, 12u64, 3072u64), ("Large(307M)", 1024, 24, 4096)] {
+        let dims = vit_dims(d, l, ff);
+        let adam = breakdown(&dims, Method::None, OptKind::Adam, StateRole::Momentum, 32, false);
+        let flora = breakdown(&dims, Method::Flora(256), OptKind::Adafactor, StateRole::Momentum, 32, false);
+        let saving = 100.0 * (1.0 - flora.total() as f64 / adam.total() as f64);
+        table.row(vec![
+            label.into(), "Adam→FLORA".into(),
+            format!("saving {saving:.1}%"),
+            format!("{:.2} → {:.2} GiB", human::gib(adam.total()), human::gib(flora.total())),
+            "-".into(),
+        ]);
+    }
+    table.print();
+}

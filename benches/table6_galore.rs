@@ -1,0 +1,105 @@
+//! Table 6 (Appendix C.2) — FLORA vs GaLore on C4-sim LM pre-training.
+//!
+//! GaLore stores the SVD projection P on device and keeps Adam moments in
+//! the projected space; FLORA regenerates its projection from a seed and
+//! keeps a compressed first moment + factored second moment. The paper
+//! reports FLORA ≤ GaLore on both perplexity and memory.
+//!
+//! Run: cargo bench --bench table6_galore [-- --quick | --steps N]
+
+use flora::bench::paper::{shared_runtime, BenchArgs};
+use flora::bench::Table;
+use flora::config::{TaskKind, TrainConfig};
+use flora::coordinator::{MethodSpec, Trainer};
+use flora::memory::{breakdown, Dims, Method, OptKind, StateRole};
+use flora::util::human;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = args.steps.unwrap_or(if args.quick { 15 } else { 200 });
+    let mut table = Table::new(
+        &format!("Table 6 — FLORA vs GaLore (C4-sim LM, {steps} steps)"),
+        &["Size", "Optimizer", "PPL", "final loss", "Mem (analytic)", "local state"],
+    );
+    // per-method tuned LRs (the paper tunes both; its FLORA lr is 3x
+    // smaller than GaLore's suggested one — here the sweep favored these)
+    let cases = [
+        (MethodSpec::Galore { rank: 16 }, 0.01f32),
+        (MethodSpec::Flora { rank: 32 }, 0.02),
+    ];
+    let mut quality = Vec::new();
+    if args.require_artifacts() {
+        let rt = shared_runtime(&args.artifacts).expect("runtime");
+        for (method, lr) in cases {
+            eprintln!("[table6] {}", method.label());
+            let mut cfg = TrainConfig {
+                model: "lm-small".into(),
+                task: TaskKind::Lm,
+                method,
+                optimizer: "adafactor".into(),
+                lr,
+                steps,
+                tau: 1,
+                kappa: 1000, // paper's momentum interval (Table 3 optimum)
+                batch: 4,
+                seed: 0,
+                eval_every: 0,
+                eval_samples: 64,
+            };
+            if matches!(method, MethodSpec::Galore { .. }) {
+                cfg.optimizer = "adam".into(); // GaLore runs Adam-in-subspace
+            }
+            let report = Trainer::with_runtime(cfg, rt.clone()).and_then(|mut t| t.run());
+            let dims = Dims::t5_small_sim();
+            let (m, o) = match method {
+                MethodSpec::Galore { .. } => (Method::Galore(128), OptKind::Adam),
+                _ => (Method::Flora(128), OptKind::Adafactor),
+            };
+            let b = breakdown(&dims, m, o, StateRole::Momentum, 16, false);
+            let mem = b.opt_state + b.method_state;
+            match report {
+                Ok(r) => {
+                    quality.push((method.label(), r.metric.map(|mv| mv.quality()).unwrap_or(f64::MIN)));
+                    table.row(vec![
+                        "60M".into(),
+                        method.label(),
+                        r.metric.map(|mv| mv.render()).unwrap_or_default(),
+                        format!("{:.3}", r.final_train_loss()),
+                        human::bytes(mem),
+                        human::bytes(r.total_state_bytes()),
+                    ]);
+                }
+                Err(e) => table.row(vec![
+                    "60M".into(), method.label(), format!("ERR {e}"), "-".into(), "-".into(), "-".into(),
+                ]),
+            }
+        }
+    }
+    // analytic 350M/7B rows (paper's larger sizes)
+    for (label, dims) in [
+        ("350M", Dims { vocab: 32128, d_model: 1024, n_layers: 24, d_ff: 4096, seq_len: 512, n_heads: 16 }),
+        ("7B", Dims { vocab: 32000, d_model: 4096, n_layers: 32, d_ff: 11008, seq_len: 2048, n_heads: 32 }),
+    ] {
+        let ga = breakdown(&dims, Method::Galore(256), OptKind::Adam, StateRole::Momentum, 16, false);
+        let fl = breakdown(&dims, Method::Flora(256), OptKind::Adafactor, StateRole::Momentum, 16, false);
+        table.row(vec![
+            label.into(),
+            "GaLore vs FLORA".into(),
+            "-".into(),
+            "-".into(),
+            format!(
+                "{:.1} vs {:.1} GiB state",
+                human::gib(ga.opt_state + ga.method_state),
+                human::gib(fl.opt_state + fl.method_state)
+            ),
+            "-".into(),
+        ]);
+    }
+    table.print();
+    if quality.len() == 2 {
+        println!(
+            "\ncheck (paper Table 6): FLORA PPL <= GaLore PPL: {}",
+            if quality[1].1 >= quality[0].1 { "OK" } else { "MISS" }
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Quickstart: the smallest end-to-end FLORA workflow.
+//!
+//! Loads the AOT artifacts, trains lm-tiny with FLORA gradient-accumulation
+//! compression (Algorithm 1) for a handful of cycles, prints the loss curve
+//! and the compressed-state memory ledger.
+//!
+//! Run: make artifacts && cargo run --release --example quickstart
+
+use flora::config::{TaskKind, TrainConfig};
+use flora::coordinator::{MethodSpec, Trainer};
+use flora::util::human;
+
+fn main() -> Result<(), String> {
+    let cfg = TrainConfig {
+        model: "lm-tiny".into(),
+        task: TaskKind::Sum,
+        method: MethodSpec::Flora { rank: 4 },
+        optimizer: "adafactor".into(),
+        lr: 0.05,
+        steps: 12,   // 12 optimizer steps = 12 x tau microbatches
+        tau: 4,      // Algorithm 1 accumulation length
+        kappa: 1000,
+        batch: 4,
+        seed: 0,
+        eval_every: 4,
+        eval_samples: 16,
+    };
+    println!("quickstart: FLORA(4) gradient accumulation on lm-tiny/sum");
+    let mut trainer = Trainer::new(cfg, "artifacts")?;
+    let report = trainer.run()?;
+
+    println!("\nloss curve: {}", flora::bench::sparkline(&report.train_losses, 48));
+    println!("first loss : {:.4}", report.train_losses.first().unwrap());
+    println!("final loss : {:.4}", report.final_train_loss());
+    println!("ROUGE      : {}", report.metric.map(|m| m.render()).unwrap());
+    println!("\nstate ledger (the paper's point — look at [method]):");
+    for (g, b) in &report.state_bytes {
+        if *b > 0 {
+            println!("  {g:<8} {}", human::bytes(*b));
+        }
+    }
+    println!(
+        "\nFLORA keeps the accumulator at rank 4: a naive accumulator would \
+     need the full parameter size ({}).",
+        human::bytes(report.state_bytes.iter().find(|(g, _)| g == "params").unwrap().1)
+    );
+    Ok(())
+}

@@ -1,0 +1,299 @@
+"""AOT driver: lower every (model × method × optimizer) step function to HLO
+TEXT and write artifacts/manifest.json describing the flat ABI.
+
+This is the ONLY entry point where python runs; after ``make artifacts`` the
+rust binary is self-contained. Interchange is HLO **text**, not
+``.serialize()`` protos — jax ≥ 0.5 emits 64-bit instruction ids that the
+xla crate's XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only PREFIX] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_registry
+from . import optimizers, steps
+
+# Ranks per model width: chosen as the same *fractions* of d_model the paper
+# sweeps (8..256 of 512 ≈ 1/64..1/2). lm-small has d=64 -> 4..32.
+BENCH_RANKS = [4, 8, 16, 32]
+BETA = 0.9  # momentum decay, paper's EMA example
+BATCH = 4  # physical batch for bench/test configs (paper Table 2 uses 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_structs(in_specs):
+    out = []
+    for _, shape, dtype in in_specs:
+        out.append(jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype)))
+    return out
+
+
+class Catalog:
+    """Collects executables to lower, then emits files + manifest."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = {}  # name -> (fn, in_specs, out_names, model_name)
+        self.models = {}
+
+    def add_model(self, cfg):
+        self.models[cfg.name] = cfg.to_json_dict()
+
+    def add(self, name: str, built, model_name: str):
+        fn, in_specs, out_names = built
+        assert name not in self.entries, f"duplicate executable {name}"
+        self.entries[name] = (fn, in_specs, out_names, model_name)
+
+    def emit(self, only: str | None = None, list_only: bool = False) -> None:
+        os.makedirs(self.out_dir, exist_ok=True)
+        manifest = {"version": 1, "models": self.models, "executables": {}}
+        t_total = time.time()
+        for name in sorted(self.entries):
+            fn, in_specs, out_names, model_name = self.entries[name]
+            fname = name.replace("/", "__") + ".hlo.txt"
+            if list_only:
+                print(name)
+                continue
+            selected = only is None or name.startswith(only)
+            path = os.path.join(self.out_dir, fname)
+            args = _arg_structs(in_specs)
+            # output shapes from abstract eval (cheap; also validates fn)
+            out_shapes = jax.eval_shape(fn, *args)
+            assert len(out_shapes) == len(out_names), (
+                f"{name}: {len(out_shapes)} outputs vs {len(out_names)} names"
+            )
+            if selected:
+                t0 = time.time()
+                # keep_unused=True: the manifest ABI promises EVERY declared
+                # input is a real parameter — without it XLA drops args the
+                # graph doesn't read (e.g. the seed trio in naive-momentum
+                # steps, frozen base weights in lora init) and the rust-side
+                # buffer count no longer matches.
+                text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+                with open(path, "w") as f:
+                    f.write(text)
+                print(
+                    f"[aot] {name}: {len(text) / 1024:.0f} KiB "
+                    f"({time.time() - t0:.1f}s)",
+                    flush=True,
+                )
+            manifest["executables"][name] = {
+                "file": fname,
+                "model": model_name,
+                "inputs": [
+                    {"name": n, "shape": list(s), "dtype": d}
+                    for (n, s, d) in in_specs
+                ],
+                "outputs": [
+                    {
+                        "name": n,
+                        "shape": [int(x) for x in o.shape],
+                        "dtype": str(o.dtype),
+                    }
+                    for n, o in zip(out_names, out_shapes)
+                ],
+            }
+        if not list_only:
+            with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1, sort_keys=True)
+            print(
+                f"[aot] wrote {len(manifest['executables'])} executables in "
+                f"{time.time() - t_total:.0f}s -> {self.out_dir}/manifest.json"
+            )
+
+
+def _add_lm_bundle(cat, cfg, ranks, *, lora=True, momentum=True, galore=False,
+                   nofactor=False):
+    """The full executable family for one LM config."""
+    m = cfg.name
+    adafactor = optimizers.make_optimizer("adafactor")
+    cat.add_model(cfg)
+    cat.add(f"{m}/init", steps.build_lm_init(cfg), m)
+    cat.add(f"{m}/eval", steps.build_lm_eval(cfg, BATCH), m)
+    cat.add(f"{m}/greedy", steps.build_lm_greedy(cfg, BATCH), m)
+    # -- accumulation (Algorithm 1) --
+    cat.add(f"{m}/micro_naive", steps.build_lm_micro(cfg, "naive", 0, BATCH), m)
+    cat.add(
+        f"{m}/update_naive_adafactor",
+        steps.build_lm_update(cfg, "naive", 0, adafactor),
+        m,
+    )
+    cat.add(
+        f"{m}/plain_step_adafactor",
+        steps.build_lm_plain_step(cfg, adafactor, BATCH),
+        m,
+    )
+    for r in ranks:
+        cat.add(
+            f"{m}/micro_flora_r{r}",
+            steps.build_lm_micro(cfg, "flora", r, BATCH),
+            m,
+        )
+        cat.add(
+            f"{m}/update_flora_r{r}_adafactor",
+            steps.build_lm_update(cfg, "flora", r, adafactor),
+            m,
+        )
+    # -- momentum (Algorithm 2) --
+    if momentum:
+        cat.add(
+            f"{m}/mom_step_naive_adafactor",
+            steps.build_lm_momentum_step(cfg, "naive", 0, BETA, adafactor, BATCH),
+            m,
+        )
+        for r in ranks:
+            cat.add(
+                f"{m}/mom_step_flora_r{r}_adafactor",
+                steps.build_lm_momentum_step(
+                    cfg, "flora", r, BETA, adafactor, BATCH
+                ),
+                m,
+            )
+        # ablation of Algorithm 2's subspace transfer (one rank suffices)
+        r_ab = ranks[len(ranks) // 2]
+        cat.add(
+            f"{m}/mom_step_flora_notransfer_r{r_ab}_adafactor",
+            steps.build_lm_momentum_step(
+                cfg, "flora_notransfer", r_ab, BETA, adafactor, BATCH
+            ),
+            m,
+        )
+    # -- Table 4: linear-memory base optimizer (unfactored Adafactor) --
+    if nofactor:
+        nof = optimizers.make_optimizer("adafactor_nofactor")
+        cat.add(
+            f"{m}/update_naive_adafactor_nofactor",
+            steps.build_lm_update(cfg, "naive", 0, nof),
+            m,
+        )
+        cat.add(
+            f"{m}/plain_step_adafactor_nofactor",
+            steps.build_lm_plain_step(cfg, nof, BATCH),
+            m,
+        )
+        for r in ranks:
+            cat.add(
+                f"{m}/update_flora_r{r}_adafactor_nofactor",
+                steps.build_lm_update(cfg, "flora", r, nof),
+                m,
+            )
+    # -- LoRA baseline --
+    if lora:
+        for r in ranks:
+            cat.add(f"{m}/lora_r{r}_init", steps.build_lora_init(cfg, r), m)
+            cat.add(
+                f"{m}/lora_r{r}_micro", steps.build_lora_micro(cfg, r, BATCH), m
+            )
+            cat.add(
+                f"{m}/lora_r{r}_update_adafactor",
+                steps.build_lora_update(cfg, r, adafactor),
+                m,
+            )
+            cat.add(
+                f"{m}/lora_r{r}_eval", steps.build_lora_eval(cfg, r, BATCH), m
+            )
+            cat.add(
+                f"{m}/lora_r{r}_greedy",
+                steps.build_lora_greedy(cfg, r, BATCH),
+                m,
+            )
+            if momentum:
+                cat.add(
+                    f"{m}/lora_r{r}_mom_step_adafactor",
+                    steps.build_lora_momentum_step(
+                        cfg, r, BETA, adafactor, BATCH
+                    ),
+                    m,
+                )
+            if nofactor:
+                nof = optimizers.make_optimizer("adafactor_nofactor")
+                cat.add(
+                    f"{m}/lora_r{r}_update_adafactor_nofactor",
+                    steps.build_lora_update(cfg, r, nof),
+                    m,
+                )
+    # -- GaLore comparison (Table 6) --
+    if galore:
+        galore_rank = ranks[-2] if len(ranks) >= 2 else ranks[-1]
+        for r in (galore_rank,):  # single rank, as in the paper's per-size rows
+            cat.add(
+                f"{m}/galore_step_r{r}", steps.build_galore_step(cfg, r, BATCH), m
+            )
+
+
+def _add_vit_bundle(cat, cfg, rank: int):
+    m = cfg.name
+    adam = optimizers.make_optimizer("adam")
+    adafactor = optimizers.make_optimizer("adafactor")
+    cat.add_model(cfg)
+    cat.add(f"{m}/init", steps.build_vit_init(cfg), m)
+    cat.add(f"{m}/eval", steps.build_vit_eval(cfg, BATCH), m)
+    cat.add(
+        f"{m}/step_adam",
+        steps.build_vit_step(cfg, "none", 0, BETA, adam, BATCH),
+        m,
+    )
+    cat.add(
+        f"{m}/step_flora_r{rank}_adafactor",
+        steps.build_vit_step(cfg, "flora", rank, BETA, adafactor, BATCH),
+        m,
+    )
+
+
+def build_catalog(out_dir: str) -> Catalog:
+    cat = Catalog(out_dir)
+    lms = model_registry.lm_configs()
+    vits = model_registry.vit_configs()
+    # tiny: rust integration tests + pytest numerics; full method family at r=4
+    _add_lm_bundle(
+        cat, lms["lm-tiny"], ranks=[4], lora=True, momentum=True,
+        galore=True, nofactor=True,
+    )
+    # bench model behind Tables 1-4 and 6
+    _add_lm_bundle(
+        cat, lms["lm-small"], ranks=BENCH_RANKS, lora=True, momentum=True,
+        galore=True, nofactor=True,
+    )
+    # end-to-end example model (examples/train_lm.rs): flora-only bundle
+    _add_lm_bundle(
+        cat, lms["lm-base"], ranks=[16], lora=False, momentum=True,
+        galore=False, nofactor=False,
+    )
+    _add_vit_bundle(cat, vits["vit-tiny"], rank=4)
+    _add_vit_bundle(cat, vits["vit-cifar"], rank=16)
+    return cat
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower only names with prefix")
+    ap.add_argument("--list", action="store_true", help="list catalog and exit")
+    args = ap.parse_args()
+    cat = build_catalog(args.out_dir)
+    cat.emit(only=args.only, list_only=args.list)
+
+
+if __name__ == "__main__":
+    main()

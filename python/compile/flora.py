@@ -1,0 +1,269 @@
+"""L2 — the FLORA method layer (paper Algorithms 1 and 2) plus the Naive
+full-state baselines, expressed as pure functions over flat state dicts.
+
+Two state machines:
+
+  Accumulation (Algorithm 1) — driven by the rust coordinator's τ-cycle:
+      micro:  C_W ← C_W + G_W A_W^T      (A_W regenerated from the cycle seed)
+      update: Ĝ_W = C_W A_W / τ  → base-optimizer step; coordinator then
+              zeroes C and resamples the seed.
+
+  Momentum (Algorithm 2) — driven by the coordinator's κ-interval:
+      every step: M ← β·T(M) + (1−β)·G A'^T, yield M A' to the base
+      optimizer; T is the subspace transfer M A_old A_new^T when the
+      coordinator raises the resample flag, identity otherwise.
+
+"Naive" variants keep the *full-size* accumulator / momentum — these are the
+paper's upper-quality, linear-memory baselines and share all surrounding
+code so any quality gap is attributable to the compression alone.
+
+Projection matrices never exist in state: only u32 seeds cross the AOT
+boundary (see kernels.rp.project_normal).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .kernels import rp
+
+Params = dict
+State = dict
+
+
+def projectable_names(params_or_shapes: dict) -> list:
+    """Sorted names of parameters that get the compression treatment."""
+    out = []
+    for name, v in sorted(params_or_shapes.items()):
+        shape = v if isinstance(v, tuple) else tuple(v.shape)
+        if layers.is_projectable(name, len(shape)):
+            out.append(name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-parameter seed derivation.
+#
+# The coordinator hands over ONE u32 seed per cycle / interval; each weight
+# matrix must get an *independent* projection (Algorithm 1 line 3: "an
+# independent random seed"). We derive per-parameter seeds by hashing the
+# parameter index into the seed — stable across micro/update executables
+# because both iterate the same sorted name list.
+# ---------------------------------------------------------------------------
+
+
+def derive_seed(base_seed, index: int):
+    """Cheap integer hash mixing (Knuth multiplicative); runs inside XLA."""
+    s = jnp.asarray(base_seed, jnp.uint32)
+    return s * jnp.uint32(2654435761) + jnp.uint32(index * 40503 + 1)
+
+
+def _proj(base_seed, index: int, r: int, m: int) -> jax.Array:
+    return rp.project_normal(derive_seed(base_seed, index), r, m)
+
+
+# ---------------------------------------------------------------------------
+# Accumulation methods (Algorithm 1 + naive baseline)
+# ---------------------------------------------------------------------------
+
+
+class NaiveAccumulation:
+    """Full-size gradient accumulator: C has the shape of W for every W."""
+
+    name = "naive"
+
+    def __init__(self, param_shapes: dict):
+        self.param_shapes = dict(sorted(param_shapes.items()))
+
+    def state_shapes(self) -> dict:
+        return {f"acc/{k}": tuple(s) for k, s in self.param_shapes.items()}
+
+    def init_state(self) -> State:
+        return {
+            k: jnp.zeros(s, jnp.float32) for k, s in self.state_shapes().items()
+        }
+
+    def accumulate(self, state: State, grads: Params, seed) -> State:
+        return {f"acc/{k}": state[f"acc/{k}"] + grads[k] for k in grads}
+
+    def mean_grads(self, state: State, seed, tau) -> Params:
+        inv = 1.0 / jnp.asarray(tau, jnp.float32)
+        return {k: state[f"acc/{k}"] * inv for k in self.param_shapes}
+
+
+class FloraAccumulation:
+    """Algorithm 1: compressed accumulator C_W ∈ R^{n×r} for projectable
+    weights, full-size for the rest (embeddings, norms — paper §3.1)."""
+
+    name = "flora"
+
+    def __init__(self, param_shapes: dict, rank: int):
+        self.param_shapes = dict(sorted(param_shapes.items()))
+        self.rank = rank
+        self.projected = set(projectable_names(self.param_shapes))
+        # stable per-parameter indices for seed derivation
+        self.index = {k: i for i, k in enumerate(sorted(self.param_shapes))}
+
+    def state_shapes(self) -> dict:
+        out = {}
+        for k, s in self.param_shapes.items():
+            if k in self.projected:
+                out[f"acc/{k}"] = (s[0], self.rank)
+            else:
+                out[f"acc/{k}"] = tuple(s)
+        return out
+
+    def init_state(self) -> State:
+        return {
+            k: jnp.zeros(s, jnp.float32) for k, s in self.state_shapes().items()
+        }
+
+    def accumulate(self, state: State, grads: Params, seed) -> State:
+        """C ← C + G A^T (fused Pallas kernel) for projectable weights."""
+        new = {}
+        for k, g in grads.items():
+            c = state[f"acc/{k}"]
+            if k in self.projected:
+                a = _proj(seed, self.index[k], self.rank, g.shape[1])
+                new[f"acc/{k}"] = rp.compress_accumulate(c, g, a)
+            else:
+                new[f"acc/{k}"] = c + g
+        return new
+
+    def mean_grads(self, state: State, seed, tau) -> Params:
+        """Ĝ = C A / τ — decompression with the SAME seed the cycle used."""
+        inv = 1.0 / jnp.asarray(tau, jnp.float32)
+        out = {}
+        for k, s in self.param_shapes.items():
+            c = state[f"acc/{k}"]
+            if k in self.projected:
+                a = _proj(seed, self.index[k], self.rank, s[1])
+                out[k] = rp.decompress(c, a) * inv
+            else:
+                out[k] = c * inv
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Momentum methods (Algorithm 2 + naive EMA baseline)
+# ---------------------------------------------------------------------------
+
+
+class NaiveMomentum:
+    """Full-size EMA of gradients; the quality upper bound for Table 2."""
+
+    name = "naive"
+
+    def __init__(self, param_shapes: dict, beta: float = 0.9):
+        self.param_shapes = dict(sorted(param_shapes.items()))
+        self.beta = beta
+
+    def state_shapes(self) -> dict:
+        return {f"mom/{k}": tuple(s) for k, s in self.param_shapes.items()}
+
+    def init_state(self) -> State:
+        return {
+            k: jnp.zeros(s, jnp.float32) for k, s in self.state_shapes().items()
+        }
+
+    def step(self, state, grads, seed_cur, seed_next, resample):
+        """Returns (effective_grads, new_state); seeds/flag unused here but
+        kept for ABI parity with FloraMomentum."""
+        new, eff = {}, {}
+        for k, g in grads.items():
+            m = self.beta * state[f"mom/{k}"] + (1 - self.beta) * g
+            new[f"mom/{k}"] = m
+            eff[k] = m
+        return eff, new
+
+
+class FloraMomentum:
+    """Algorithm 2: compressed momentum M ∈ R^{n×r} with κ-interval subspace
+    transfer. The resample decision/κ counting lives in the RUST coordinator;
+    this function just obeys the ``resample`` flag (0.0 or 1.0 scalar).
+
+    ``transfer=False`` is the ablation of the paper's second remedy (§2.4):
+    on resample the old momentum is kept VERBATIM in the new subspace
+    coordinates (i.e. silently reinterpreted), so the historical EMA is
+    distorted instead of moved — benches/ablation_transfer.rs measures how
+    much the transfer actually buys.
+    """
+
+    name = "flora"
+
+    def __init__(self, param_shapes: dict, rank: int, beta: float = 0.9,
+                 transfer: bool = True):
+        self.transfer = transfer
+        self.param_shapes = dict(sorted(param_shapes.items()))
+        self.rank = rank
+        self.beta = beta
+        self.projected = set(projectable_names(self.param_shapes))
+        self.index = {k: i for i, k in enumerate(sorted(self.param_shapes))}
+        if not transfer:
+            self.name = "flora_notransfer"
+
+    def state_shapes(self) -> dict:
+        out = {}
+        for k, s in self.param_shapes.items():
+            if k in self.projected:
+                out[f"mom/{k}"] = (s[0], self.rank)
+            else:
+                out[f"mom/{k}"] = tuple(s)
+        return out
+
+    def init_state(self) -> State:
+        return {
+            k: jnp.zeros(s, jnp.float32) for k, s in self.state_shapes().items()
+        }
+
+    def step(self, state, grads, seed_cur, seed_next, resample):
+        """One Algorithm-2 step.
+
+        resample: f32 scalar ∈ {0.0, 1.0}. When 1.0, the active projection
+        becomes A(seed_next) and M is transferred M A_cur A_next^T first
+        (lines 11–13); when 0.0, A(seed_cur) stays active (lines 15–17).
+        Both branches lower into the graph and are blended by `select` —
+        branch-free HLO, negligible at these state sizes.
+        """
+        new, eff = {}, {}
+        for k, g in grads.items():
+            m = state[f"mom/{k}"]
+            if k in self.projected:
+                mdim = g.shape[1]
+                a_cur = _proj(seed_cur, self.index[k], self.rank, mdim)
+                a_next = _proj(seed_next, self.index[k], self.rank, mdim)
+                if self.transfer:
+                    m_moved = rp.transfer(m, a_cur, a_next)
+                else:
+                    m_moved = m  # ablation: keep raw coordinates
+                m_prev = resample * m_moved + (1.0 - resample) * m
+                a_active_c = resample * a_next + (1.0 - resample) * a_cur
+                m_new = self.beta * m_prev + (1 - self.beta) * rp.compress(
+                    g, a_active_c
+                )
+                eff[k] = rp.decompress(m_new, a_active_c)
+            else:
+                m_new = self.beta * m + (1 - self.beta) * g
+                eff[k] = m_new
+            new[f"mom/{k}"] = m_new
+        return eff, new
+
+
+def make_accumulation(method: str, param_shapes: dict, rank: int):
+    if method == "naive":
+        return NaiveAccumulation(param_shapes)
+    if method == "flora":
+        return FloraAccumulation(param_shapes, rank)
+    raise ValueError(f"unknown accumulation method {method!r}")
+
+
+def make_momentum(method: str, param_shapes: dict, rank: int, beta: float):
+    if method == "naive":
+        return NaiveMomentum(param_shapes, beta)
+    if method == "flora":
+        return FloraMomentum(param_shapes, rank, beta)
+    if method == "flora_notransfer":
+        return FloraMomentum(param_shapes, rank, beta, transfer=False)
+    raise ValueError(f"unknown momentum method {method!r}")

@@ -1,0 +1,285 @@
+"""L1 — Pallas kernels for FLORA's random-projection hot path.
+
+FLORA's compute hot-spot is three GEMM-shaped operations applied to every
+2-D weight gradient on every micro-step (paper §2.4, Algorithms 1–2):
+
+  compress   : C += G @ A^T          (G: [n, m], A: [r, m]  -> C: [n, r])
+  decompress : Ghat = (1/r) C @ A    (C: [n, r], A: [r, m]  -> Ghat: [n, m])
+  transfer   : M' = (1/r) M @ A_old @ A_new^T   (subspace hand-off, Alg. 2 l.13)
+
+These are written as Pallas kernels tiled for TPU VMEM (BlockSpec expresses
+the HBM<->VMEM schedule; the reduction axis is the innermost sequential grid
+dimension so the output block stays resident while input slabs stream).
+On this image they MUST run with ``interpret=True`` — real TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation for the TPU mapping / MXU+VMEM estimates).
+
+Every kernel is wrapped in ``jax.custom_vjp`` so it can sit under
+``jax.grad`` inside the L2 training step (pallas_call itself has no
+reverse-mode rule). The VJPs of these linear maps are again rp ops, so the
+backward pass reuses the same kernels.
+
+Correctness oracle: ``kernels/ref.py`` (pure jnp), enforced by
+``python/tests/test_kernels.py`` including hypothesis shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "compress",
+    "compress_accumulate",
+    "decompress",
+    "transfer",
+    "project_normal",
+    "matmul_nt",
+    "matmul_nn",
+]
+
+# Interpret mode is mandatory on CPU PJRT (see module docstring). Kept as a
+# module switch so a real-TPU build can flip it off in one place.
+INTERPRET = True
+
+# Default VMEM tile sizes. On TPU these would be multiples of the (8, 128)
+# register tile / 128x128 MXU; under interpret mode they only shape the grid.
+# Small problems (n, m below one block) collapse to a single grid step, which
+# lowers to a single fused dot — no interpret-mode loop overhead.
+BLOCK_N = 256
+BLOCK_M = 512
+BLOCK_R = 512  # r is never tiled: n*r output block stays VMEM-resident
+
+
+def _grid_dim(size: int, block: int) -> tuple[int, int]:
+    """Return (num_blocks, block) clamping block to size (single-step grid
+    when the problem fits in one tile)."""
+    if size <= block:
+        return 1, size
+    # pallas requires even division under our BlockSpecs; fall back to a
+    # single block when the tile does not divide the axis. All shapes used
+    # by the AOT path are powers of two, so this is the rare path.
+    if size % block != 0:
+        return 1, size
+    return size // block, block
+
+
+# ---------------------------------------------------------------------------
+# matmul_nt: out[n, r] = x[n, m] @ y[r, m]^T  (the "compress" GEMM shape)
+# ---------------------------------------------------------------------------
+
+
+def _mm_nt_kernel(x_ref, y_ref, o_ref):
+    """One grid step: o[bn, r] += x[bn, bm] @ y[r, bm]^T.
+
+    Grid = (n / bn, m / bm); the m axis (index 1) is the reduction and runs
+    innermost/sequential, so o_ref stays resident in VMEM across the sweep —
+    this is the threadblock-accumulator idiom mapped to BlockSpec.
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _matmul_nt_impl(x: jax.Array, y: jax.Array) -> jax.Array:
+    n, m = x.shape
+    r, m2 = y.shape
+    assert m == m2, f"contraction mismatch: {x.shape} vs {y.shape}"
+    gn, bn = _grid_dim(n, BLOCK_N)
+    gm, bm = _grid_dim(m, BLOCK_M)
+    return pl.pallas_call(
+        _mm_nt_kernel,
+        grid=(gn, gm),
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((r, bm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), x.dtype),
+        interpret=INTERPRET,
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul_nt(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``x @ y.T`` as a Pallas kernel with a custom VJP."""
+    return _matmul_nt_impl(x, y)
+
+
+def _matmul_nt_fwd(x, y):
+    return _matmul_nt_impl(x, y), (x, y)
+
+
+def _matmul_nt_bwd(res, g):
+    x, y = res
+    # d/dx (x y^T) . g = g @ y ; d/dy = g^T @ x
+    return _matmul_nn_impl(g, y), _matmul_nn_impl(g.T, x)
+
+
+matmul_nt.defvjp(_matmul_nt_fwd, _matmul_nt_bwd)
+
+
+# ---------------------------------------------------------------------------
+# matmul_nn: out[n, m] = x[n, r] @ y[r, m]  (the "decompress" GEMM shape)
+# ---------------------------------------------------------------------------
+
+
+def _mm_nn_kernel(x_ref, y_ref, o_ref):
+    """One grid step: o[bn, bm] = x[bn, r] @ y[r, bm]. r is not tiled, so
+    there is no reduction sweep — each output block is produced in one shot
+    (r <= BLOCK_R always holds for FLORA ranks)."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_nn_impl(x: jax.Array, y: jax.Array) -> jax.Array:
+    n, r = x.shape
+    r2, m = y.shape
+    assert r == r2, f"contraction mismatch: {x.shape} vs {y.shape}"
+    gn, bn = _grid_dim(n, BLOCK_N)
+    gm, bm = _grid_dim(m, BLOCK_M)
+    return pl.pallas_call(
+        _mm_nn_kernel,
+        grid=(gn, gm),
+        in_specs=[
+            pl.BlockSpec((bn, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, bm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=INTERPRET,
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul_nn(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``x @ y`` as a Pallas kernel with a custom VJP."""
+    return _matmul_nn_impl(x, y)
+
+
+def _matmul_nn_fwd(x, y):
+    return _matmul_nn_impl(x, y), (x, y)
+
+
+def _matmul_nn_bwd(res, g):
+    x, y = res
+    # d/dx (x y) . g = g @ y^T ; d/dy = x^T @ g
+    return _matmul_nt_impl(g, y), _matmul_nn_impl(x.T, g)
+
+
+matmul_nn.defvjp(_matmul_nn_fwd, _matmul_nn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused compress-accumulate: C' = C + G @ A^T  (Algorithm 1, line 9)
+# ---------------------------------------------------------------------------
+
+
+def _compress_acc_kernel(c_ref, g_ref, a_ref, o_ref):
+    """o[bn, r] = c[bn, r] (on the first reduction step) + g[bn, bm] @ a[r, bm]^T
+    accumulated across the m sweep. Fusing the += saves one full pass over C
+    per micro-step versus compress-then-add."""
+    @pl.when(pl.program_id(1) == 0)
+    def _seed():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jax.lax.dot_general(
+        g_ref[...],
+        a_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _compress_accumulate_impl(c, g, a):
+    n, m = g.shape
+    r = a.shape[0]
+    gn, bn = _grid_dim(n, BLOCK_N)
+    gm, bm = _grid_dim(m, BLOCK_M)
+    return pl.pallas_call(
+        _compress_acc_kernel,
+        grid=(gn, gm),
+        in_specs=[
+            pl.BlockSpec((bn, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((r, bm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), g.dtype),
+        interpret=INTERPRET,
+    )(c, g, a)
+
+
+@jax.custom_vjp
+def compress_accumulate(c: jax.Array, g: jax.Array, a: jax.Array) -> jax.Array:
+    """Fused ``c + g @ a.T`` (Algorithm 1 line 9). Shapes: c [n,r], g [n,m],
+    a [r,m] -> [n,r]."""
+    return _compress_accumulate_impl(c, g, a)
+
+
+def _ca_fwd(c, g, a):
+    return _compress_accumulate_impl(c, g, a), (g, a)
+
+
+def _ca_bwd(res, t):
+    g, a = res
+    return t, _matmul_nn_impl(t, a), _matmul_nn_impl(t.T, g)
+
+
+compress_accumulate.defvjp(_ca_fwd, _ca_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public FLORA ops
+# ---------------------------------------------------------------------------
+
+
+def compress(g: jax.Array, a: jax.Array) -> jax.Array:
+    """Down-project a gradient: ``g @ a.T`` ([n,m] x [r,m] -> [n,r])."""
+    return matmul_nt(g, a)
+
+
+def decompress(c: jax.Array, a: jax.Array) -> jax.Array:
+    """Up-project a compressed state: ``c @ a`` ([n,r] x [r,m] -> [n,m]).
+
+    Note: the 1/r normalization of Theorem 2.4 is folded into the sampling
+    scale of :func:`project_normal` (A ~ N(0, 1/r)), matching Algorithms 1–2,
+    so no extra scaling happens here.
+    """
+    return matmul_nn(c, a)
+
+
+def transfer(m_c: jax.Array, a_old: jax.Array, a_new: jax.Array) -> jax.Array:
+    """Move compressed momentum between subspaces: ``m_c @ a_old @ a_new.T``
+    (Algorithm 2 line 13). Shapes: [n,r] x [r,m] x [r,m] -> [n,r].
+
+    Composed as decompress-then-compress; the intermediate [n,m] exists only
+    inside the step's live range (XLA frees it immediately), preserving the
+    O(nr) *state* bound — the paper makes the same trade (its Alg. 2 line 13
+    materializes M A_old A'^T the same way).
+    """
+    return matmul_nt(matmul_nn(m_c, a_old), a_new)
+
+
+def project_normal(seed, r: int, m: int, dtype=jnp.float32) -> jax.Array:
+    """Regenerate the projection matrix A ~ N(0, 1/r)^{r x m} from a u32 seed.
+
+    This is the paper's memory trick (§2.4 "we may store the random seed"):
+    A is never part of the optimizer state — only the seed crosses the
+    rust<->XLA boundary, and threefry lowers to plain HLO.
+    """
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    return jax.random.normal(key, (r, m), dtype=dtype) / jnp.sqrt(
+        jnp.asarray(r, dtype)
+    )

@@ -1,0 +1,222 @@
+"""L2 — transformer building blocks, written directly in jnp.
+
+Parameters are plain ``dict[str, jax.Array]`` with ``/``-separated names.
+The AOT boundary flattens them in sorted-name order (see ``aot.py``), which
+is what the rust runtime's manifest records — so naming is part of the ABI.
+
+The 2-D weights of attention and feed-forward blocks are the ones FLORA /
+LoRA / GaLore act on (paper §3.1: "we apply the projections to attention and
+feed-forward layers only, while following the naive procedure for other
+layers"); :func:`is_projectable` encodes that rule in one place.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = dict  # name -> jax.Array
+
+# Substrings marking the weights the paper compresses. ln/bias/embedding are
+# handled "naively" (full-size state) by every method.
+_PROJECTABLE_MARKERS = ("attn/", "ffn/")
+
+
+def is_projectable(name: str, arr_ndim: int) -> bool:
+    """True if this parameter gets the random-projection treatment."""
+    return arr_ndim == 2 and any(m in name for m in _PROJECTABLE_MARKERS)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (used inside the AOT ``init`` executable, seeded)
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, n_in: int, n_out: int) -> jax.Array:
+    """LeCun-normal, the T5/ViT default for kernel matrices."""
+    scale = 1.0 / math.sqrt(n_in)
+    return jax.random.normal(key, (n_in, n_out), jnp.float32) * scale
+
+
+def _embed_init(key, vocab: int, dim: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Transformer decoder stack (pre-norm, learned positions, tied LM head)
+# ---------------------------------------------------------------------------
+
+
+class LMConfig:
+    """Decoder-only prefix-LM configuration.
+
+    The paper's T5/GPT-2 workloads are both mapped onto this architecture
+    (GPT-2 *is* this; T5's seq2seq task is expressed as a prefix LM — see
+    DESIGN.md §4). ``param_count`` is used by the memory accountant and must
+    agree with the actual init (asserted in tests).
+    """
+
+    def __init__(
+        self,
+        vocab: int = 256,
+        d_model: int = 64,
+        n_layers: int = 2,
+        n_heads: int = 4,
+        d_ff: int = 256,
+        seq_len: int = 64,
+        name: str = "lm",
+    ):
+        assert d_model % n_heads == 0
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.d_ff = d_ff
+        self.seq_len = seq_len
+        self.name = name
+
+    def param_shapes(self) -> dict:
+        """name -> shape, in the exact set produced by :func:`init_lm`."""
+        d, f = self.d_model, self.d_ff
+        shapes = {
+            "embed/tok": (self.vocab, d),
+            "embed/pos": (self.seq_len, d),
+            "final_ln/scale": (d,),
+        }
+        for l in range(self.n_layers):
+            p = f"layer{l}"
+            shapes[f"{p}/attn/wq"] = (d, d)
+            shapes[f"{p}/attn/wk"] = (d, d)
+            shapes[f"{p}/attn/wv"] = (d, d)
+            shapes[f"{p}/attn/wo"] = (d, d)
+            shapes[f"{p}/ffn/w1"] = (d, f)
+            shapes[f"{p}/ffn/w2"] = (f, d)
+            shapes[f"{p}/ln1/scale"] = (d,)
+            shapes[f"{p}/ln2/scale"] = (d,)
+        return shapes
+
+    def param_count(self) -> int:
+        return sum(
+            int(jnp.prod(jnp.asarray(s))) for s in self.param_shapes().values()
+        )
+
+    def to_json_dict(self) -> dict:
+        return {
+            "kind": "lm",
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "d_ff": self.d_ff,
+            "seq_len": self.seq_len,
+            "name": self.name,
+        }
+
+
+def init_lm(cfg: LMConfig, seed) -> Params:
+    """Initialize all LM parameters from a scalar u32 seed (runs inside the
+    AOT ``init`` executable — rust never constructs weights)."""
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    shapes = cfg.param_shapes()
+    keys = jax.random.split(key, len(shapes))
+    params: Params = {}
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if name.endswith("/scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed/tok" or name == "embed/pos":
+            params[name] = _embed_init(k, shape[0], shape[1])
+        else:
+            params[name] = _dense_init(k, shape[0], shape[1])
+    return params
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def causal_attention(
+    params: Params, prefix: str, x: jax.Array, cfg: LMConfig
+) -> jax.Array:
+    """Multi-head causal self-attention. x: [B, S, d]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+
+    def split(name):
+        w = params[f"{prefix}/attn/{name}"]
+        return (x @ w).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split("wq"), split("wk"), split("wv")
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(causal[None, None] > 0, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ params[f"{prefix}/attn/wo"]
+
+
+def ffn(params: Params, prefix: str, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params[f"{prefix}/ffn/w1"])
+    return h @ params[f"{prefix}/ffn/w2"]
+
+
+def lm_forward(params: Params, tokens: jax.Array, cfg: LMConfig) -> jax.Array:
+    """tokens [B, S] i32 -> logits [B, S, V]. Pre-norm blocks, tied head."""
+    b, s = tokens.shape
+    x = params["embed/tok"][tokens] + params["embed/pos"][None, :s]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}"
+        x = x + causal_attention(
+            params, p, rms_norm(x, params[f"{p}/ln1/scale"]), cfg
+        )
+        x = x + ffn(params, p, rms_norm(x, params[f"{p}/ln2/scale"]))
+    x = rms_norm(x, params["final_ln/scale"])
+    return x @ params["embed/tok"].T
+
+
+def lm_loss(
+    params: Params, tokens: jax.Array, mask: jax.Array, cfg: LMConfig
+) -> jax.Array:
+    """Masked next-token cross-entropy.
+
+    tokens: [B, S] i32; mask: [B, S] f32, 1.0 on positions whose *prediction*
+    counts (prefix-LM: the target segment). Loss at position i predicts
+    token i+1, so logits/mask are shifted accordingly.
+    """
+    logits = lm_forward(params, tokens, cfg)  # [B, S, V]
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    m = mask[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.sum(nll * m) / denom
+
+
+def lm_greedy_decode(
+    params: Params, tokens: jax.Array, prompt_len: jax.Array, cfg: LMConfig
+) -> jax.Array:
+    """Greedy autoregressive decode, entirely inside XLA.
+
+    tokens: [B, S] i32, positions >= prompt_len are ignored/overwritten.
+    prompt_len: scalar i32 (same prompt length across the batch — the rust
+    batcher pads prompts to a common length per batch).
+    Recomputes the full forward per position (no KV cache); S is small in
+    every artifact config, and this keeps the executable stateless.
+    """
+    s = tokens.shape[1]
+
+    def body(i, toks):
+        logits = lm_forward(params, toks, cfg)  # [B, S, V]
+        nxt = jnp.argmax(logits[:, i - 1], axis=-1).astype(toks.dtype)
+        keep = i < prompt_len  # don't overwrite prompt positions
+        cur = toks[:, i]
+        val = jnp.where(keep, cur, nxt)
+        return toks.at[:, i].set(val)
+
+    return jax.lax.fori_loop(1, s, body, tokens)

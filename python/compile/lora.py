@@ -1,0 +1,95 @@
+"""L2 — LoRA baseline (Hu et al., 2022), as the paper runs it in §3.
+
+For every projectable weight W ∈ R^{n×m} we add trainable B ∈ R^{n×r}
+(zero-init) and A ∈ R^{r×m} (Gaussian-init); the forward uses W + BA and
+only {A, B} (plus the naively-handled vectors/embeddings) receive gradients
+and optimizer state. W itself is frozen — exactly the setting Tables 1–4
+compare against.
+
+The gradient of the patched forward w.r.t. A and B is taken by autodiff on
+the materialized W + BA (the paper's Eq. 3–4 note the same Jacobian path —
+and this is precisely why LoRA does *not* save back-prop memory, §2.4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+Params = dict
+
+
+class LoraAdapter:
+    """Bookkeeping for the LoRA parameterization of a base model."""
+
+    def __init__(self, param_shapes: dict, rank: int, alpha: float | None = None):
+        self.param_shapes = dict(sorted(param_shapes.items()))
+        self.rank = rank
+        # Standard LoRA scaling alpha/r; alpha defaults to r (scale 1), which
+        # is what the paper's dynamics analysis (Thm 2.1) assumes.
+        self.alpha = float(alpha if alpha is not None else rank)
+        self.projected = [
+            k
+            for k in self.param_shapes
+            if layers.is_projectable(k, len(self.param_shapes[k]))
+        ]
+        # Vectors / embeddings stay trainable ("naive procedure", §3.1).
+        self.passthrough = [
+            k for k in self.param_shapes if k not in self.projected
+        ]
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+    def trainable_shapes(self) -> dict:
+        """Shapes of the LoRA-trainable parameter set."""
+        out = {}
+        for k in self.projected:
+            n, m = self.param_shapes[k]
+            out[f"lora_B/{k}"] = (n, self.rank)
+            out[f"lora_A/{k}"] = (self.rank, m)
+        for k in self.passthrough:
+            out[k] = tuple(self.param_shapes[k])
+        return out
+
+    def init_trainable(self, base_params: Params, seed) -> Params:
+        """B = 0, A ~ N(0, 1/r); passthrough params start at the base value
+        (they continue training from the checkpoint)."""
+        key = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+        out: Params = {}
+        keys = jax.random.split(key, max(len(self.projected), 1))
+        for k, kk in zip(self.projected, keys):
+            n, m = self.param_shapes[k]
+            out[f"lora_B/{k}"] = jnp.zeros((n, self.rank), jnp.float32)
+            out[f"lora_A/{k}"] = jax.random.normal(
+                kk, (self.rank, m), jnp.float32
+            ) / jnp.sqrt(jnp.asarray(self.rank, jnp.float32))
+        for k in self.passthrough:
+            out[k] = base_params[k]
+        return out
+
+    def merge(self, base_params: Params, trainable: Params) -> Params:
+        """Effective full parameter set: W + (alpha/r) B A on projected
+        weights, trainable values on passthrough ones."""
+        eff = {}
+        for k in self.param_shapes:
+            if k in self.projected:
+                b = trainable[f"lora_B/{k}"]
+                a = trainable[f"lora_A/{k}"]
+                eff[k] = base_params[k] + self.scale * (b @ a)
+            else:
+                eff[k] = trainable[k]
+        return eff
+
+    def extra_param_count(self) -> int:
+        """Number of additional scalars LoRA introduces (the memory
+        accountant's Δ for LoRA: patches + their optimizer state live on
+        top of the frozen model)."""
+        total = 0
+        for k in self.projected:
+            n, m = self.param_shapes[k]
+            total += self.rank * (n + m)
+        return total

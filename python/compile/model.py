@@ -1,0 +1,57 @@
+"""L2 — model-config registry shared by aot.py and the tests.
+
+Every artifact bundle is built against one of these named configurations;
+the names are part of the rust-side ABI (manifest `model` field, bench
+configs in rust/src/config). Sizes are chosen so the full bench suite runs
+on the 1-core CPU PJRT backend in minutes; the paper's 60M/110M/1.5B/3B
+rows are mapped onto these via the analytic memory accountant (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from .layers import LMConfig
+from .vit import ViTConfig
+
+
+def lm_configs() -> dict:
+    return {
+        # test-size config: exercised by pytest and rust integration tests
+        "lm-tiny": LMConfig(
+            vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64,
+            seq_len=32, name="lm-tiny",
+        ),
+        # shared bench model: "T5-small-sim" / "GPT-2-sim" / "C4-sim".
+        # The sum/mt/c4 tasks differ only in DATA (rust data/ substrate);
+        # one weight/executable bundle serves Tables 1-4 and 6.
+        "lm-small": LMConfig(
+            vocab=256, d_model=64, n_layers=2, n_heads=4, d_ff=256,
+            seq_len=64, name="lm-small",
+        ),
+        # end-to-end example model (examples/train_lm.rs): ~0.9M params
+        "lm-base": LMConfig(
+            vocab=512, d_model=128, n_layers=4, n_heads=4, d_ff=512,
+            seq_len=128, name="lm-base",
+        ),
+    }
+
+
+def vit_configs() -> dict:
+    return {
+        "vit-tiny": ViTConfig(
+            image_size=16, patch_size=4, d_model=32, n_layers=2, n_heads=2,
+            d_ff=64, n_classes=10, name="vit-tiny",
+        ),
+        # Table-5 "ViT-sim": synthetic CIFAR-like 16x16x3, 20 classes
+        "vit-cifar": ViTConfig(
+            image_size=16, patch_size=4, d_model=64, n_layers=2, n_heads=4,
+            d_ff=256, n_classes=20, name="vit-cifar",
+        ),
+    }
+
+
+def get_lm(name: str) -> LMConfig:
+    return lm_configs()[name]
+
+
+def get_vit(name: str) -> ViTConfig:
+    return vit_configs()[name]

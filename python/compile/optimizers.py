@@ -1,0 +1,183 @@
+"""L2 — optimizers, implemented from scratch (optax is not available in this
+image, and the reproduction mandate is to build substrates ourselves).
+
+All optimizers share one calling convention so the method layer (flora.py /
+lora.py / galore.py / steps.py) can compose them:
+
+    state  = opt.init(params)                     # dict[str, jax.Array]
+    params, state = opt.update(params, grads, state, lr, step)
+
+``state`` keys are ``{param_name}/{slot}`` — flat, sorted-key-deterministic,
+which is exactly how the AOT boundary serializes them into the manifest.
+
+Implemented:
+  * ``Sgd``                — plain SGD (pilot cross-checks).
+  * ``Adam``               — Kingma & Ba 2015, bias-corrected.
+  * ``Adafactor``          — Shazeer & Stern 2018, factored second moment
+                             (the paper's base optimizer, §3.1). Sublinear
+                             state: O(n+m) per matrix.
+  * ``Adafactor(factored=False)`` — the paper's Table-4 "linear-memory
+                             optimizer" ablation: full second moment.
+
+Momentum is deliberately NOT part of these classes: the paper treats
+momentum/accumulation as *separate state that FLORA compresses* (Algorithms
+1–2); the composition lives in flora.py / steps.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+State = dict
+
+
+def _rms(x: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.mean(jnp.square(x)))
+
+
+class Sgd:
+    """Plain SGD. Stateless."""
+
+    name = "sgd"
+
+    def init(self, params: Params) -> State:
+        return {}
+
+    def update(self, params, grads, state, lr, step):
+        new = {k: params[k] - lr * grads[k] for k in params}
+        return new, state
+
+    def state_slots(self, pname: str, shape) -> list:
+        return []
+
+
+class Adam:
+    """Adam with bias correction. State: m, v full-size (2x model memory —
+    the paper's motivating example of linear-memory optimizer state)."""
+
+    name = "adam"
+
+    def __init__(self, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+        self.b1, self.b2, self.eps = b1, b2, eps
+
+    def init(self, params: Params) -> State:
+        s: State = {}
+        for k, v in params.items():
+            s[f"{k}/m"] = jnp.zeros_like(v)
+            s[f"{k}/v"] = jnp.zeros_like(v)
+        return s
+
+    def update(self, params, grads, state, lr, step):
+        new_p, new_s = {}, {}
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        for k in params:
+            g = grads[k]
+            m = self.b1 * state[f"{k}/m"] + (1 - self.b1) * g
+            v = self.b2 * state[f"{k}/v"] + (1 - self.b2) * jnp.square(g)
+            mhat = m / (1 - self.b1**t)
+            vhat = v / (1 - self.b2**t)
+            new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + self.eps)
+            new_s[f"{k}/m"] = m
+            new_s[f"{k}/v"] = v
+        return new_p, new_s
+
+    def state_slots(self, pname: str, shape) -> list:
+        return [(f"{pname}/m", shape), (f"{pname}/v", shape)]
+
+
+class Adafactor:
+    """Adafactor (Shazeer & Stern 2018) with external learning rate
+    (``relative_step=False``), update clipping d=1.0, and no built-in
+    momentum — matching how the paper drives it.
+
+    ``factored=True``: matrices keep row/col second-moment vectors
+    (O(n+m)); vectors keep a full second moment.
+    ``factored=False``: every parameter keeps a full second moment — the
+    Table-4 "optimizer with linear memory" variant.
+    """
+
+    name = "adafactor"
+
+    def __init__(
+        self,
+        factored: bool = True,
+        eps1: float = 1e-30,
+        eps2: float = 1e-3,
+        clip_threshold: float = 1.0,
+        decay_exponent: float = 0.8,
+    ):
+        self.factored = factored
+        self.eps1 = eps1
+        self.eps2 = eps2
+        self.clip = clip_threshold
+        self.decay_exponent = decay_exponent
+        if not factored:
+            self.name = "adafactor_nofactor"
+
+    def _beta2(self, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        return 1.0 - jnp.power(t, -self.decay_exponent)
+
+    def _is_factored(self, shape) -> bool:
+        return self.factored and len(shape) == 2
+
+    def init(self, params: Params) -> State:
+        s: State = {}
+        for k, v in params.items():
+            if self._is_factored(v.shape):
+                s[f"{k}/vr"] = jnp.zeros((v.shape[0],), jnp.float32)
+                s[f"{k}/vc"] = jnp.zeros((v.shape[1],), jnp.float32)
+            else:
+                s[f"{k}/v"] = jnp.zeros_like(v)
+        return s
+
+    def update(self, params, grads, state, lr, step):
+        new_p, new_s = {}, {}
+        b2 = self._beta2(step)
+        for k in params:
+            g = grads[k]
+            g2 = jnp.square(g) + self.eps1
+            if self._is_factored(g.shape):
+                vr = b2 * state[f"{k}/vr"] + (1 - b2) * jnp.mean(g2, axis=1)
+                vc = b2 * state[f"{k}/vc"] + (1 - b2) * jnp.mean(g2, axis=0)
+                # reconstruct \hat v = vr vc^T / mean(vr)
+                denom = jnp.maximum(jnp.mean(vr), self.eps1)
+                u = g / (
+                    jnp.sqrt(vr / denom)[:, None] * jnp.sqrt(vc)[None, :]
+                )
+                new_s[f"{k}/vr"] = vr
+                new_s[f"{k}/vc"] = vc
+            else:
+                v = b2 * state[f"{k}/v"] + (1 - b2) * g2
+                u = g / jnp.sqrt(v)
+                new_s[f"{k}/v"] = v
+            # update clipping: u /= max(1, RMS(u)/d)
+            u = u / jnp.maximum(1.0, _rms(u) / self.clip)
+            # parameter-scale-relative step (eps2 floor), as in the paper's
+            # official implementation with external lr.
+            scale = jnp.maximum(self.eps2, _rms(params[k]))
+            new_p[k] = params[k] - lr * scale * u
+        return new_p, new_s
+
+    def state_slots(self, pname: str, shape) -> list:
+        if self._is_factored(shape):
+            return [
+                (f"{pname}/vr", (shape[0],)),
+                (f"{pname}/vc", (shape[1],)),
+            ]
+        return [(f"{pname}/v", tuple(shape))]
+
+
+def make_optimizer(name: str):
+    """Registry used by aot.py config strings."""
+    if name == "sgd":
+        return Sgd()
+    if name == "adam":
+        return Adam()
+    if name == "adafactor":
+        return Adafactor(factored=True)
+    if name == "adafactor_nofactor":
+        return Adafactor(factored=False)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,578 @@
+"""L2 — builders for the AOT-lowered step functions.
+
+Each builder returns ``(fn, in_specs, out_names)`` where ``fn`` takes/returns
+*flat tuples of arrays* in sorted-name order — the exact ABI the rust
+runtime reconstructs from artifacts/manifest.json. All composition of
+model × method × optimizer happens here; aot.py only lowers what these
+builders hand it.
+
+Flat ABI convention (mirrored by rust/src/runtime/manifest.rs):
+    inputs  = [*params(sorted), *opt_state(sorted), *method_state(sorted),
+               *batch, *scalars]
+    outputs = tuple in the order given by ``out_names``
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import flora, galore as galore_mod, layers, lora as lora_mod, vit as vit_mod
+from .layers import LMConfig
+from .vit import ViTConfig
+
+# ---------------------------------------------------------------------------
+# Flat <-> dict packing
+# ---------------------------------------------------------------------------
+
+
+class Packer:
+    """Bidirectional flat-tuple <-> name-dict mapping for one tensor group."""
+
+    def __init__(self, shapes: dict, group: str):
+        self.group = group
+        self.names = sorted(shapes)
+        self.shapes = {k: tuple(shapes[k]) for k in self.names}
+
+    def unpack(self, flat) -> dict:
+        assert len(flat) == len(self.names), (
+            f"{self.group}: got {len(flat)} arrays, want {len(self.names)}"
+        )
+        return dict(zip(self.names, flat))
+
+    def pack(self, d: dict) -> tuple:
+        return tuple(d[k] for k in self.names)
+
+    def specs(self, dtype=jnp.float32) -> list:
+        """[(qualified_name, shape, dtype_str)] for the manifest. A group of
+        "" means the keys are already fully qualified (method-state dicts
+        carry their own acc// mom/ prefixes)."""
+        prefix = f"{self.group}/" if self.group else ""
+        return [
+            (f"{prefix}{k}", self.shapes[k], str(jnp.dtype(dtype)))
+            for k in self.names
+        ]
+
+
+def _scalar_spec(name: str, dtype) -> tuple:
+    return (name, (), str(jnp.dtype(dtype)))
+
+
+def _lm_batch_specs(cfg: LMConfig, batch: int) -> list:
+    return [
+        ("batch/tokens", (batch, cfg.seq_len), "int32"),
+        ("batch/mask", (batch, cfg.seq_len), "float32"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# LM: init / eval / greedy
+# ---------------------------------------------------------------------------
+
+
+def build_lm_init(cfg: LMConfig):
+    pk = Packer(cfg.param_shapes(), "params")
+
+    def fn(seed):
+        return pk.pack(layers.init_lm(cfg, seed))
+
+    in_specs = [_scalar_spec("seed", jnp.uint32)]
+    return fn, in_specs, [n for (n, _, _) in pk.specs()]
+
+
+def build_lm_eval(cfg: LMConfig, batch: int):
+    pk = Packer(cfg.param_shapes(), "params")
+
+    def fn(*args):
+        params = pk.unpack(args[: len(pk.names)])
+        tokens, mask = args[len(pk.names) :]
+        return (layers.lm_loss(params, tokens, mask, cfg),)
+
+    in_specs = pk.specs() + _lm_batch_specs(cfg, batch)
+    return fn, in_specs, ["loss"]
+
+
+def build_lm_greedy(cfg: LMConfig, batch: int):
+    pk = Packer(cfg.param_shapes(), "params")
+
+    def fn(*args):
+        params = pk.unpack(args[: len(pk.names)])
+        tokens, prompt_len = args[len(pk.names) :]
+        return (layers.lm_greedy_decode(params, tokens, prompt_len, cfg),)
+
+    in_specs = (
+        pk.specs()
+        + [("batch/tokens", (batch, cfg.seq_len), "int32")]
+        + [_scalar_spec("prompt_len", jnp.int32)]
+    )
+    return fn, in_specs, ["tokens"]
+
+
+# ---------------------------------------------------------------------------
+# LM: accumulation micro / update (Algorithm 1), plain step (method "none")
+# ---------------------------------------------------------------------------
+
+
+def build_lm_micro(cfg: LMConfig, method: str, rank: int, batch: int):
+    """micro: grads of one microbatch, folded into the accumulator."""
+    pk = Packer(cfg.param_shapes(), "params")
+    acc = flora.make_accumulation(method, cfg.param_shapes(), rank)
+    ak = Packer(acc.state_shapes(), "")
+
+    def fn(*args):
+        i = 0
+        params = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        state = ak.unpack(args[i : i + len(ak.names)]); i += len(ak.names)
+        tokens, mask, seed = args[i], args[i + 1], args[i + 2]
+        loss, grads = jax.value_and_grad(layers.lm_loss)(
+            params, tokens, mask, cfg
+        )
+        new_state = acc.accumulate(state, grads, seed)
+        return (loss, *ak.pack(new_state))
+
+    in_specs = (
+        pk.specs()
+        + ak.specs()
+        + _lm_batch_specs(cfg, batch)
+        + [_scalar_spec("seed", jnp.uint32)]
+    )
+    out_names = ["loss"] + [n for (n, _, _) in ak.specs()]
+    return fn, in_specs, out_names
+
+
+def build_lm_update(cfg: LMConfig, method: str, rank: int, optimizer):
+    """update: decompress the accumulator mean and apply the base optimizer."""
+    pk = Packer(cfg.param_shapes(), "params")
+    acc = flora.make_accumulation(method, cfg.param_shapes(), rank)
+    ak = Packer(acc.state_shapes(), "")
+    shapes_params = {
+        k: jnp.zeros(s, jnp.float32) for k, s in cfg.param_shapes().items()
+    }
+    ok = Packer(
+        {k: v.shape for k, v in optimizer.init(shapes_params).items()}, "opt"
+    )
+
+    def fn(*args):
+        i = 0
+        params = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        opt_state = ok.unpack(args[i : i + len(ok.names)]); i += len(ok.names)
+        state = ak.unpack(args[i : i + len(ak.names)]); i += len(ak.names)
+        seed, tau, lr, step = args[i : i + 4]
+        grads = acc.mean_grads(state, seed, tau)
+        new_params, new_opt = optimizer.update(params, grads, opt_state, lr, step)
+        return (*pk.pack(new_params), *ok.pack(new_opt))
+
+    in_specs = (
+        pk.specs()
+        + ok.specs()
+        + ak.specs()
+        + [
+            _scalar_spec("seed", jnp.uint32),
+            _scalar_spec("tau", jnp.float32),
+            _scalar_spec("lr", jnp.float32),
+            _scalar_spec("step", jnp.float32),
+        ]
+    )
+    out_names = [n for (n, _, _) in pk.specs()] + [n for (n, _, _) in ok.specs()]
+    return fn, in_specs, out_names
+
+
+def build_lm_plain_step(cfg: LMConfig, optimizer, batch: int):
+    """method "none": no accumulation/momentum — grad + optimizer, fused."""
+    pk = Packer(cfg.param_shapes(), "params")
+    shapes_params = {
+        k: jnp.zeros(s, jnp.float32) for k, s in cfg.param_shapes().items()
+    }
+    ok = Packer(
+        {k: v.shape for k, v in optimizer.init(shapes_params).items()}, "opt"
+    )
+
+    def fn(*args):
+        i = 0
+        params = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        opt_state = ok.unpack(args[i : i + len(ok.names)]); i += len(ok.names)
+        tokens, mask, lr, step = args[i : i + 4]
+        loss, grads = jax.value_and_grad(layers.lm_loss)(
+            params, tokens, mask, cfg
+        )
+        new_params, new_opt = optimizer.update(params, grads, opt_state, lr, step)
+        return (loss, *pk.pack(new_params), *ok.pack(new_opt))
+
+    in_specs = (
+        pk.specs()
+        + ok.specs()
+        + _lm_batch_specs(cfg, batch)
+        + [_scalar_spec("lr", jnp.float32), _scalar_spec("step", jnp.float32)]
+    )
+    out_names = (
+        ["loss"]
+        + [n for (n, _, _) in pk.specs()]
+        + [n for (n, _, _) in ok.specs()]
+    )
+    return fn, in_specs, out_names
+
+
+# ---------------------------------------------------------------------------
+# LM: fused momentum step (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def build_lm_momentum_step(
+    cfg: LMConfig, method: str, rank: int, beta: float, optimizer, batch: int
+):
+    pk = Packer(cfg.param_shapes(), "params")
+    mom = flora.make_momentum(method, cfg.param_shapes(), rank, beta)
+    mk = Packer(mom.state_shapes(), "")
+    shapes_params = {
+        k: jnp.zeros(s, jnp.float32) for k, s in cfg.param_shapes().items()
+    }
+    ok = Packer(
+        {k: v.shape for k, v in optimizer.init(shapes_params).items()}, "opt"
+    )
+
+    def fn(*args):
+        i = 0
+        params = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        opt_state = ok.unpack(args[i : i + len(ok.names)]); i += len(ok.names)
+        mstate = mk.unpack(args[i : i + len(mk.names)]); i += len(mk.names)
+        tokens, mask, seed_cur, seed_next, resample, lr, step = args[i : i + 7]
+        loss, grads = jax.value_and_grad(layers.lm_loss)(
+            params, tokens, mask, cfg
+        )
+        eff, new_m = mom.step(mstate, grads, seed_cur, seed_next, resample)
+        new_params, new_opt = optimizer.update(params, eff, opt_state, lr, step)
+        return (loss, *pk.pack(new_params), *ok.pack(new_opt), *mk.pack(new_m))
+
+    in_specs = (
+        pk.specs()
+        + ok.specs()
+        + mk.specs()
+        + _lm_batch_specs(cfg, batch)
+        + [
+            _scalar_spec("seed_cur", jnp.uint32),
+            _scalar_spec("seed_next", jnp.uint32),
+            _scalar_spec("resample", jnp.float32),
+            _scalar_spec("lr", jnp.float32),
+            _scalar_spec("step", jnp.float32),
+        ]
+    )
+    out_names = (
+        ["loss"]
+        + [n for (n, _, _) in pk.specs()]
+        + [n for (n, _, _) in ok.specs()]
+        + [n for (n, _, _) in mk.specs()]
+    )
+    return fn, in_specs, out_names
+
+
+# ---------------------------------------------------------------------------
+# LM: LoRA (frozen base + trainable patches)
+# ---------------------------------------------------------------------------
+
+
+def build_lora_init(cfg: LMConfig, rank: int):
+    pk = Packer(cfg.param_shapes(), "base")
+    adapter = lora_mod.LoraAdapter(cfg.param_shapes(), rank)
+    tk = Packer(adapter.trainable_shapes(), "train")
+
+    def fn(*args):
+        base = pk.unpack(args[: len(pk.names)])
+        seed = args[len(pk.names)]
+        return tk.pack(adapter.init_trainable(base, seed))
+
+    in_specs = pk.specs() + [_scalar_spec("seed", jnp.uint32)]
+    return fn, in_specs, [n for (n, _, _) in tk.specs()]
+
+
+def _lora_loss(adapter, cfg):
+    def loss_fn(trainable, base, tokens, mask):
+        eff = adapter.merge(base, trainable)
+        return layers.lm_loss(eff, tokens, mask, cfg)
+
+    return loss_fn
+
+
+def build_lora_micro(cfg: LMConfig, rank: int, batch: int):
+    """LoRA with naive (full) accumulation over its small trainable set."""
+    pk = Packer(cfg.param_shapes(), "base")
+    adapter = lora_mod.LoraAdapter(cfg.param_shapes(), rank)
+    tk = Packer(adapter.trainable_shapes(), "train")
+    acc = flora.NaiveAccumulation(adapter.trainable_shapes())
+    ak = Packer(acc.state_shapes(), "")
+    loss_fn = _lora_loss(adapter, cfg)
+
+    def fn(*args):
+        i = 0
+        base = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        train = tk.unpack(args[i : i + len(tk.names)]); i += len(tk.names)
+        state = ak.unpack(args[i : i + len(ak.names)]); i += len(ak.names)
+        tokens, mask = args[i], args[i + 1]
+        loss, grads = jax.value_and_grad(loss_fn)(train, base, tokens, mask)
+        new_state = acc.accumulate(state, grads, jnp.uint32(0))
+        return (loss, *ak.pack(new_state))
+
+    in_specs = pk.specs() + tk.specs() + ak.specs() + _lm_batch_specs(cfg, batch)
+    out_names = ["loss"] + [n for (n, _, _) in ak.specs()]
+    return fn, in_specs, out_names
+
+
+def build_lora_update(cfg: LMConfig, rank: int, optimizer):
+    adapter = lora_mod.LoraAdapter(cfg.param_shapes(), rank)
+    tk = Packer(adapter.trainable_shapes(), "train")
+    acc = flora.NaiveAccumulation(adapter.trainable_shapes())
+    ak = Packer(acc.state_shapes(), "")
+    zeros = {
+        k: jnp.zeros(s, jnp.float32)
+        for k, s in adapter.trainable_shapes().items()
+    }
+    ok = Packer({k: v.shape for k, v in optimizer.init(zeros).items()}, "opt")
+
+    def fn(*args):
+        i = 0
+        train = tk.unpack(args[i : i + len(tk.names)]); i += len(tk.names)
+        opt_state = ok.unpack(args[i : i + len(ok.names)]); i += len(ok.names)
+        state = ak.unpack(args[i : i + len(ak.names)]); i += len(ak.names)
+        tau, lr, step = args[i : i + 3]
+        grads = acc.mean_grads(state, jnp.uint32(0), tau)
+        new_train, new_opt = optimizer.update(train, grads, opt_state, lr, step)
+        return (*tk.pack(new_train), *ok.pack(new_opt))
+
+    in_specs = (
+        tk.specs()
+        + ok.specs()
+        + ak.specs()
+        + [
+            _scalar_spec("tau", jnp.float32),
+            _scalar_spec("lr", jnp.float32),
+            _scalar_spec("step", jnp.float32),
+        ]
+    )
+    out_names = [n for (n, _, _) in tk.specs()] + [n for (n, _, _) in ok.specs()]
+    return fn, in_specs, out_names
+
+
+def build_lora_momentum_step(
+    cfg: LMConfig, rank: int, beta: float, optimizer, batch: int
+):
+    """LoRA trained from scratch with (naive, small) momentum — Table 2 rows."""
+    pk = Packer(cfg.param_shapes(), "base")
+    adapter = lora_mod.LoraAdapter(cfg.param_shapes(), rank)
+    tk = Packer(adapter.trainable_shapes(), "train")
+    mom = flora.NaiveMomentum(adapter.trainable_shapes(), beta)
+    mk = Packer(mom.state_shapes(), "")
+    zeros = {
+        k: jnp.zeros(s, jnp.float32)
+        for k, s in adapter.trainable_shapes().items()
+    }
+    ok = Packer({k: v.shape for k, v in optimizer.init(zeros).items()}, "opt")
+    loss_fn = _lora_loss(adapter, cfg)
+
+    def fn(*args):
+        i = 0
+        base = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        train = tk.unpack(args[i : i + len(tk.names)]); i += len(tk.names)
+        opt_state = ok.unpack(args[i : i + len(ok.names)]); i += len(ok.names)
+        mstate = mk.unpack(args[i : i + len(mk.names)]); i += len(mk.names)
+        tokens, mask, lr, step = args[i : i + 4]
+        loss, grads = jax.value_and_grad(loss_fn)(train, base, tokens, mask)
+        eff, new_m = mom.step(mstate, grads, jnp.uint32(0), jnp.uint32(0), 0.0)
+        new_train, new_opt = optimizer.update(train, eff, opt_state, lr, step)
+        return (loss, *tk.pack(new_train), *ok.pack(new_opt), *mk.pack(new_m))
+
+    in_specs = (
+        pk.specs()
+        + tk.specs()
+        + ok.specs()
+        + mk.specs()
+        + _lm_batch_specs(cfg, batch)
+        + [_scalar_spec("lr", jnp.float32), _scalar_spec("step", jnp.float32)]
+    )
+    out_names = (
+        ["loss"]
+        + [n for (n, _, _) in tk.specs()]
+        + [n for (n, _, _) in ok.specs()]
+        + [n for (n, _, _) in mk.specs()]
+    )
+    return fn, in_specs, out_names
+
+
+def build_lora_eval(cfg: LMConfig, rank: int, batch: int):
+    pk = Packer(cfg.param_shapes(), "base")
+    adapter = lora_mod.LoraAdapter(cfg.param_shapes(), rank)
+    tk = Packer(adapter.trainable_shapes(), "train")
+
+    def fn(*args):
+        i = 0
+        base = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        train = tk.unpack(args[i : i + len(tk.names)]); i += len(tk.names)
+        tokens, mask = args[i], args[i + 1]
+        eff = adapter.merge(base, train)
+        return (layers.lm_loss(eff, tokens, mask, cfg),)
+
+    in_specs = pk.specs() + tk.specs() + _lm_batch_specs(cfg, batch)
+    return fn, in_specs, ["loss"]
+
+
+def build_lora_greedy(cfg: LMConfig, rank: int, batch: int):
+    pk = Packer(cfg.param_shapes(), "base")
+    adapter = lora_mod.LoraAdapter(cfg.param_shapes(), rank)
+    tk = Packer(adapter.trainable_shapes(), "train")
+
+    def fn(*args):
+        i = 0
+        base = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        train = tk.unpack(args[i : i + len(tk.names)]); i += len(tk.names)
+        tokens, prompt_len = args[i], args[i + 1]
+        eff = adapter.merge(base, train)
+        return (layers.lm_greedy_decode(eff, tokens, prompt_len, cfg),)
+
+    in_specs = (
+        pk.specs()
+        + tk.specs()
+        + [("batch/tokens", (batch, cfg.seq_len), "int32")]
+        + [_scalar_spec("prompt_len", jnp.int32)]
+    )
+    return fn, in_specs, ["tokens"]
+
+
+# ---------------------------------------------------------------------------
+# ViT (Table 5)
+# ---------------------------------------------------------------------------
+
+
+def _vit_batch_specs(cfg: ViTConfig, batch: int) -> list:
+    return [
+        (
+            "batch/images",
+            (batch, cfg.image_size, cfg.image_size, cfg.channels),
+            "float32",
+        ),
+        ("batch/labels", (batch,), "int32"),
+    ]
+
+
+def build_vit_init(cfg: ViTConfig):
+    pk = Packer(cfg.param_shapes(), "params")
+
+    def fn(seed):
+        return pk.pack(vit_mod.init_vit(cfg, seed))
+
+    return fn, [_scalar_spec("seed", jnp.uint32)], [n for (n, _, _) in pk.specs()]
+
+
+def build_vit_eval(cfg: ViTConfig, batch: int):
+    pk = Packer(cfg.param_shapes(), "params")
+
+    def fn(*args):
+        params = pk.unpack(args[: len(pk.names)])
+        images, labels = args[len(pk.names) :]
+        loss = vit_mod.vit_loss(params, images, labels, cfg)
+        preds = vit_mod.vit_predict(params, images, cfg)
+        return (loss, preds)
+
+    in_specs = pk.specs() + _vit_batch_specs(cfg, batch)
+    return fn, in_specs, ["loss", "preds"]
+
+
+def build_vit_step(cfg: ViTConfig, method: str, rank: int, beta: float,
+                   optimizer, batch: int):
+    """ViT training step: method "none" = plain optimizer (Adam row of
+    Table 5); "flora" = Algorithm-2 compressed momentum + the optimizer."""
+    pk = Packer(cfg.param_shapes(), "params")
+    zeros = {k: jnp.zeros(s, jnp.float32) for k, s in cfg.param_shapes().items()}
+    ok = Packer({k: v.shape for k, v in optimizer.init(zeros).items()}, "opt")
+    use_mom = method == "flora"
+    mom = (
+        flora.make_momentum("flora", cfg.param_shapes(), rank, beta)
+        if use_mom
+        else None
+    )
+    mk = Packer(mom.state_shapes(), "") if use_mom else None
+
+    def fn(*args):
+        i = 0
+        params = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        opt_state = ok.unpack(args[i : i + len(ok.names)]); i += len(ok.names)
+        mstate = None
+        if use_mom:
+            mstate = mk.unpack(args[i : i + len(mk.names)]); i += len(mk.names)
+        images, labels = args[i], args[i + 1]; i += 2
+        if use_mom:
+            seed_cur, seed_next, resample, lr, step = args[i : i + 5]
+        else:
+            lr, step = args[i : i + 2]
+        loss, grads = jax.value_and_grad(vit_mod.vit_loss)(
+            params, images, labels, cfg
+        )
+        if use_mom:
+            eff, new_m = mom.step(mstate, grads, seed_cur, seed_next, resample)
+        else:
+            eff, new_m = grads, None
+        new_params, new_opt = optimizer.update(params, eff, opt_state, lr, step)
+        out = (loss, *pk.pack(new_params), *ok.pack(new_opt))
+        if use_mom:
+            out = out + tuple(mk.pack(new_m))
+        return out
+
+    in_specs = pk.specs() + ok.specs()
+    if use_mom:
+        in_specs += mk.specs()
+    in_specs += _vit_batch_specs(cfg, batch)
+    if use_mom:
+        in_specs += [
+            _scalar_spec("seed_cur", jnp.uint32),
+            _scalar_spec("seed_next", jnp.uint32),
+            _scalar_spec("resample", jnp.float32),
+        ]
+    in_specs += [_scalar_spec("lr", jnp.float32), _scalar_spec("step", jnp.float32)]
+    out_names = (
+        ["loss"]
+        + [n for (n, _, _) in pk.specs()]
+        + [n for (n, _, _) in ok.specs()]
+        + ([n for (n, _, _) in mk.specs()] if use_mom else [])
+    )
+    return fn, in_specs, out_names
+
+
+# ---------------------------------------------------------------------------
+# GaLore (Table 6)
+# ---------------------------------------------------------------------------
+
+
+def build_galore_step(cfg: LMConfig, rank: int, batch: int):
+    pk = Packer(cfg.param_shapes(), "params")
+    gl = galore_mod.GaLore(cfg.param_shapes(), rank)
+    gk = Packer(gl.state_shapes(), "")
+
+    def fn(*args):
+        i = 0
+        params = pk.unpack(args[i : i + len(pk.names)]); i += len(pk.names)
+        state = gk.unpack(args[i : i + len(gk.names)]); i += len(gk.names)
+        tokens, mask, seed, refresh, lr, step = args[i : i + 6]
+        loss, grads = jax.value_and_grad(layers.lm_loss)(
+            params, tokens, mask, cfg
+        )
+        new_params, new_state = gl.step(
+            params, grads, state, lr, step, seed, refresh
+        )
+        return (loss, *pk.pack(new_params), *gk.pack(new_state))
+
+    in_specs = (
+        pk.specs()
+        + gk.specs()
+        + _lm_batch_specs(cfg, batch)
+        + [
+            _scalar_spec("seed", jnp.uint32),
+            _scalar_spec("refresh", jnp.float32),
+            _scalar_spec("lr", jnp.float32),
+            _scalar_spec("step", jnp.float32),
+        ]
+    )
+    out_names = (
+        ["loss"]
+        + [n for (n, _, _) in pk.specs()]
+        + [n for (n, _, _) in gk.specs()]
+    )
+    return fn, in_specs, out_names

@@ -1,0 +1,167 @@
+"""L2 — Vision Transformer for the Table-5 (Appendix C.1) image experiment.
+
+A compact ViT (Dosovitskiy et al., 2020): patchify → linear embed → [CLS] +
+learned positions → pre-norm encoder blocks (bidirectional attention) →
+classification head. Reuses the parameter-naming convention of layers.py so
+``is_projectable`` (attn/ffn matrices) applies unchanged and FLORA/Adam can
+be composed by the same steps.py builders.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+Params = dict
+
+
+class ViTConfig:
+    def __init__(
+        self,
+        image_size: int = 16,
+        patch_size: int = 4,
+        channels: int = 3,
+        d_model: int = 64,
+        n_layers: int = 2,
+        n_heads: int = 4,
+        d_ff: int = 256,
+        n_classes: int = 20,
+        name: str = "vit",
+    ):
+        assert image_size % patch_size == 0
+        assert d_model % n_heads == 0
+        self.image_size = image_size
+        self.patch_size = patch_size
+        self.channels = channels
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.d_ff = d_ff
+        self.n_classes = n_classes
+        self.name = name
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.channels * self.patch_size**2
+
+    def param_shapes(self) -> dict:
+        d, f = self.d_model, self.d_ff
+        shapes = {
+            "embed/patch": (self.patch_dim, d),
+            "embed/pos": (self.n_patches + 1, d),
+            "embed/cls": (1, d),
+            "head/w": (d, self.n_classes),
+            "final_ln/scale": (d,),
+        }
+        for l in range(self.n_layers):
+            p = f"layer{l}"
+            shapes[f"{p}/attn/wq"] = (d, d)
+            shapes[f"{p}/attn/wk"] = (d, d)
+            shapes[f"{p}/attn/wv"] = (d, d)
+            shapes[f"{p}/attn/wo"] = (d, d)
+            shapes[f"{p}/ffn/w1"] = (d, f)
+            shapes[f"{p}/ffn/w2"] = (f, d)
+            shapes[f"{p}/ln1/scale"] = (d,)
+            shapes[f"{p}/ln2/scale"] = (d,)
+        return shapes
+
+    def param_count(self) -> int:
+        return sum(
+            int(jnp.prod(jnp.asarray(s))) for s in self.param_shapes().values()
+        )
+
+    def to_json_dict(self) -> dict:
+        return {
+            "kind": "vit",
+            "image_size": self.image_size,
+            "patch_size": self.patch_size,
+            "channels": self.channels,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "d_ff": self.d_ff,
+            "n_classes": self.n_classes,
+            "name": self.name,
+        }
+
+
+def init_vit(cfg: ViTConfig, seed) -> Params:
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    shapes = cfg.param_shapes()
+    keys = jax.random.split(key, len(shapes))
+    params: Params = {}
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if name.endswith("/scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name in ("embed/pos", "embed/cls"):
+            params[name] = jax.random.normal(k, shape, jnp.float32) * 0.02
+        else:
+            params[name] = jax.random.normal(k, shape, jnp.float32) / math.sqrt(
+                shape[0]
+            )
+    return params
+
+
+def _patchify(images: jax.Array, cfg: ViTConfig) -> jax.Array:
+    """images [B, H, W, C] -> [B, n_patches, patch_dim]."""
+    b, h, w, c = images.shape
+    p = cfg.patch_size
+    x = images.reshape(b, h // p, p, w // p, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, cfg.n_patches, cfg.patch_dim)
+
+
+def _encoder_attention(params, prefix, x, cfg):
+    """Bidirectional multi-head attention (no causal mask)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+
+    def split(name):
+        w = params[f"{prefix}/attn/{name}"]
+        return (x @ w).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split("wq"), split("wk"), split("wv")
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ params[f"{prefix}/attn/wo"]
+
+
+def vit_forward(params: Params, images: jax.Array, cfg: ViTConfig) -> jax.Array:
+    """images [B, H, W, C] f32 -> logits [B, n_classes]."""
+    x = _patchify(images, cfg) @ params["embed/patch"]
+    b = x.shape[0]
+    cls = jnp.broadcast_to(params["embed/cls"], (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1) + params["embed/pos"][None]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}"
+        x = x + _encoder_attention(
+            params, p, layers.rms_norm(x, params[f"{p}/ln1/scale"]), cfg
+        )
+        x = x + layers.ffn(params, p, layers.rms_norm(x, params[f"{p}/ln2/scale"]))
+    x = layers.rms_norm(x, params["final_ln/scale"])
+    return x[:, 0] @ params["head/w"]
+
+
+def vit_loss(
+    params: Params, images: jax.Array, labels: jax.Array, cfg: ViTConfig
+) -> jax.Array:
+    """Cross-entropy over classes. labels [B] i32."""
+    logits = vit_forward(params, images, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def vit_predict(params: Params, images: jax.Array, cfg: ViTConfig) -> jax.Array:
+    return jnp.argmax(vit_forward(params, images, cfg), axis=-1).astype(jnp.int32)

@@ -1,0 +1,74 @@
+"""The AOT catalog as a whole: every entry must abstract-eval against its
+declared specs (this is what guarantees `make artifacts` cannot emit a
+manifest that the rust runtime rejects), and lowering must preserve arity
+(the keep_unused contract — regression test for the 78-vs-75-buffers bug)."""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model, optimizers, steps
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return aot.build_catalog("/tmp/unused-aot-out")
+
+
+def test_catalog_is_large_and_named_consistently(catalog):
+    names = set(catalog.entries)
+    assert len(names) > 80
+    # every executable's model prefix is a registered model
+    for n in names:
+        model_name = n.split("/")[0]
+        assert model_name in catalog.models, n
+
+
+def test_every_entry_abstract_evals(catalog):
+    for name, (fn, in_specs, out_names, _) in sorted(catalog.entries.items()):
+        args = [
+            jax.ShapeDtypeStruct(tuple(s), jnp.dtype(d))
+            for (_, s, d) in in_specs
+        ]
+        outs = jax.eval_shape(fn, *args)
+        assert len(outs) == len(out_names), name
+
+
+def test_input_names_unique_per_entry(catalog):
+    for name, (_, in_specs, out_names, _) in catalog.entries.items():
+        in_names = [n for (n, _, _) in in_specs]
+        assert len(in_names) == len(set(in_names)), name
+        assert len(out_names) == len(set(out_names)), name
+
+
+def test_lowering_preserves_arity_keep_unused():
+    """The naive momentum step ignores its seed trio; the lowered HLO must
+    STILL declare them as parameters (rust supplies every manifest input)."""
+    cfg = model.get_lm("lm-tiny")
+    opt = optimizers.make_optimizer("adafactor")
+    fn, in_specs, _ = steps.build_lm_momentum_step(cfg, "naive", 0, 0.9, opt, 4)
+    args = [
+        jax.ShapeDtypeStruct(tuple(s), jnp.dtype(d)) for (_, s, d) in in_specs
+    ]
+    text = aot.to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+    # ENTRY computation signature: count parameter(...) declarations
+    entry = text.split("ENTRY")[1]
+    n_params = len(re.findall(r"parameter\(\d+\)", entry))
+    assert n_params == len(in_specs), (n_params, len(in_specs))
+
+
+def test_flora_momentum_declares_seed_trio(catalog):
+    _, in_specs, _, _ = catalog.entries["lm-tiny/mom_step_flora_r4_adafactor"]
+    names = [n for (n, _, _) in in_specs]
+    for s in ("seed_cur", "seed_next", "resample", "lr", "step"):
+        assert s in names
+
+
+def test_galore_entry_has_projection_state(catalog):
+    _, in_specs, _, _ = catalog.entries["lm-tiny/galore_step_r4"]
+    names = [n for (n, _, _) in in_specs]
+    assert any(n.startswith("proj/") for n in names)
+    assert any(n.startswith("m/") for n in names)
+    assert "refresh" in names

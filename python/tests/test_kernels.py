@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas rp kernels vs the pure-jnp oracle (ref.py).
+
+Includes a hypothesis sweep over shapes (including non-power-of-two and
+single-block-collapse cases) and VJP checks against jax.grad of the oracle.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, rp
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+class TestMatmulKernels:
+    @pytest.mark.parametrize(
+        "n,m,r",
+        [(8, 16, 4), (64, 64, 8), (256, 512, 32), (100, 96, 8), (1, 7, 3)],
+    )
+    def test_matmul_nt_matches_ref(self, n, m, r):
+        x, y = _rand(0, n, m), _rand(1, r, m)
+        np.testing.assert_allclose(
+            rp.matmul_nt(x, y), ref.matmul_nt(x, y), **TOL
+        )
+
+    @pytest.mark.parametrize(
+        "n,m,r",
+        [(8, 16, 4), (64, 64, 8), (256, 512, 32), (100, 96, 8), (1, 7, 3)],
+    )
+    def test_matmul_nn_matches_ref(self, n, m, r):
+        x, y = _rand(2, n, r), _rand(3, r, m)
+        np.testing.assert_allclose(
+            rp.matmul_nn(x, y), ref.matmul_nn(x, y), **TOL
+        )
+
+    @hypothesis.given(
+        n=st.integers(1, 96), m=st.integers(1, 96), r=st.integers(1, 16),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matmul_nt_hypothesis(self, n, m, r, seed):
+        x, y = _rand(seed, n, m), _rand(seed + 1, r, m)
+        np.testing.assert_allclose(
+            rp.matmul_nt(x, y), ref.matmul_nt(x, y), **TOL
+        )
+
+    @hypothesis.given(
+        n=st.integers(1, 96), m=st.integers(1, 96), r=st.integers(1, 16),
+        seed=st.integers(0, 2**16),
+    )
+    def test_compress_accumulate_hypothesis(self, n, m, r, seed):
+        c = _rand(seed, n, r)
+        g = _rand(seed + 1, n, m)
+        a = _rand(seed + 2, r, m)
+        np.testing.assert_allclose(
+            rp.compress_accumulate(c, g, a),
+            ref.compress_accumulate(c, g, a),
+            **TOL,
+        )
+
+    def test_blocked_path_exercised(self):
+        """Shapes larger than one block so the grid actually iterates.
+        Looser tolerance: the m-axis sweep reassociates the reduction."""
+        n, m, r = 512, 1024, 16  # grid = (2, 2) with default blocks
+        g, a = _rand(7, n, m), _rand(8, r, m)
+        blk = dict(rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(rp.compress(g, a), ref.compress(g, a), **blk)
+        c = _rand(9, n, r)
+        np.testing.assert_allclose(
+            rp.decompress(c, a), ref.decompress(c, a), **blk
+        )
+
+
+class TestVjps:
+    def test_matmul_nt_vjp(self):
+        x, y = _rand(0, 16, 24), _rand(1, 4, 24)
+
+        def f_k(x, y):
+            return jnp.sum(jnp.sin(rp.matmul_nt(x, y)))
+
+        def f_r(x, y):
+            return jnp.sum(jnp.sin(ref.matmul_nt(x, y)))
+
+        gk = jax.grad(f_k, argnums=(0, 1))(x, y)
+        gr = jax.grad(f_r, argnums=(0, 1))(x, y)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, **TOL)
+
+    def test_matmul_nn_vjp(self):
+        x, y = _rand(2, 16, 4), _rand(3, 4, 24)
+
+        def f_k(x, y):
+            return jnp.sum(jnp.tanh(rp.matmul_nn(x, y)))
+
+        def f_r(x, y):
+            return jnp.sum(jnp.tanh(ref.matmul_nn(x, y)))
+
+        gk = jax.grad(f_k, argnums=(0, 1))(x, y)
+        gr = jax.grad(f_r, argnums=(0, 1))(x, y)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, **TOL)
+
+    def test_compress_accumulate_vjp(self):
+        c, g, a = _rand(4, 8, 4), _rand(5, 8, 12), _rand(6, 4, 12)
+
+        def f_k(c, g, a):
+            return jnp.sum(rp.compress_accumulate(c, g, a) ** 2)
+
+        def f_r(c, g, a):
+            return jnp.sum(ref.compress_accumulate(c, g, a) ** 2)
+
+        gk = jax.grad(f_k, argnums=(0, 1, 2))(c, g, a)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(c, g, a)
+        for x, y in zip(gk, gr):
+            np.testing.assert_allclose(x, y, **TOL)
+
+
+class TestFloraOps:
+    def test_transfer_matches_ref(self):
+        m_c, a_old, a_new = _rand(0, 32, 8), _rand(1, 8, 48), _rand(2, 8, 48)
+        np.testing.assert_allclose(
+            rp.transfer(m_c, a_old, a_new),
+            ref.transfer(m_c, a_old, a_new),
+            **TOL,
+        )
+
+    def test_project_normal_deterministic(self):
+        a1 = rp.project_normal(jnp.uint32(42), 8, 64)
+        a2 = rp.project_normal(jnp.uint32(42), 8, 64)
+        np.testing.assert_array_equal(a1, a2)
+        a3 = rp.project_normal(jnp.uint32(43), 8, 64)
+        assert not np.allclose(a1, a3)
+
+    def test_project_normal_scale(self):
+        """A ~ N(0, 1/r): E[A^T A] = I (Theorem 2.4 normalization)."""
+        r, m = 512, 16
+        a = rp.project_normal(jnp.uint32(0), r, m)
+        ata = np.asarray(a.T @ a)
+        np.testing.assert_allclose(ata, np.eye(m), atol=0.2)
+
+    def test_jl_norm_preservation(self):
+        """Lemma 2.3: projection approximately preserves row norms."""
+        n, m, r = 64, 256, 128
+        g = np.asarray(_rand(0, n, m))
+        a = np.asarray(rp.project_normal(jnp.uint32(1), r, m))
+        c = g @ a.T
+        ratio = np.linalg.norm(c, axis=1) / np.linalg.norm(g, axis=1)
+        assert np.all(ratio > 0.7) and np.all(ratio < 1.3)
+
+    def test_compress_decompress_unbiased(self):
+        """E_A[G A^T A] = G — averaged over many seeds the reconstruction
+        converges to the original gradient (§2.3 Decompression)."""
+        n, m, r = 8, 16, 64
+        g = np.asarray(_rand(0, n, m))
+        acc = np.zeros_like(g)
+        trials = 200
+        for s in range(trials):
+            a = np.asarray(rp.project_normal(jnp.uint32(s), r, m))
+            acc += np.asarray(ref.decompress(ref.compress(g, a), a))
+        err = np.abs(acc / trials - g).max()
+        assert err < 0.15, err

@@ -1,0 +1,137 @@
+"""From-scratch optimizer correctness: closed-form single steps, state
+shapes, descent behaviour, and the factored/unfactored Adafactor relation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optimizers
+
+
+def _params():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (8, 12)),
+        "b": jax.random.normal(k2, (12,)),
+    }
+
+
+def _grads():
+    key = jax.random.PRNGKey(1)
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (8, 12)),
+        "b": jax.random.normal(k2, (12,)),
+    }
+
+
+class TestSgd:
+    def test_exact_update(self):
+        opt = optimizers.Sgd()
+        p, g = _params(), _grads()
+        s = opt.init(p)
+        p2, _ = opt.update(p, g, s, 0.1, 0)
+        for k in p:
+            np.testing.assert_allclose(p2[k], p[k] - 0.1 * g[k], rtol=1e-6)
+
+
+class TestAdam:
+    def test_first_step_closed_form(self):
+        """After one step from zero state, Adam moves by ~lr*sign(g)."""
+        opt = optimizers.Adam()
+        p, g = _params(), _grads()
+        s = opt.init(p)
+        p2, s2 = opt.update(p, g, s, 1e-3, 0)
+        for k in p:
+            # mhat = g, vhat = g^2  =>  update = lr * g/(|g|+eps) ≈ lr*sign(g)
+            want = p[k] - 1e-3 * g[k] / (jnp.abs(g[k]) + 1e-8)
+            np.testing.assert_allclose(p2[k], want, rtol=1e-4, atol=1e-7)
+
+    def test_state_slots(self):
+        opt = optimizers.Adam()
+        p = _params()
+        s = opt.init(p)
+        assert set(s) == {"w/m", "w/v", "b/m", "b/v"}
+        assert s["w/m"].shape == (8, 12)
+
+    def test_moments_track_gradient(self):
+        opt = optimizers.Adam(b1=0.9, b2=0.999)
+        p, g = _params(), _grads()
+        s = opt.init(p)
+        _, s2 = opt.update(p, g, s, 1e-3, 0)
+        np.testing.assert_allclose(s2["w/m"], 0.1 * g["w"], rtol=1e-5)
+        np.testing.assert_allclose(s2["w/v"], 0.001 * g["w"] ** 2, rtol=1e-4)
+
+
+class TestAdafactor:
+    def test_factored_state_is_sublinear(self):
+        opt = optimizers.Adafactor(factored=True)
+        p = _params()
+        s = opt.init(p)
+        assert s["w/vr"].shape == (8,)
+        assert s["w/vc"].shape == (12,)
+        assert s["b/v"].shape == (12,)  # vectors keep full second moment
+
+    def test_unfactored_state_is_linear(self):
+        opt = optimizers.Adafactor(factored=False)
+        p = _params()
+        s = opt.init(p)
+        assert s["w/v"].shape == (8, 12)
+
+    def test_descends_quadratic(self):
+        """Adafactor minimizes ||W - W*||^2 steadily."""
+        opt = optimizers.Adafactor(factored=True)
+        target = jax.random.normal(jax.random.PRNGKey(3), (8, 12))
+        # start away from zero: Adafactor's parameter-scale-relative step
+        # (max(eps2, RMS(w))) is intentionally tiny at w == 0.
+        p = {"w": 0.5 * jnp.ones((8, 12))}
+        s = opt.init(p)
+        losses = []
+        for t in range(200):
+            g = {"w": 2 * (p["w"] - target)}
+            losses.append(float(jnp.sum((p["w"] - target) ** 2)))
+            p, s = opt.update(p, g, s, 0.1, t)
+        assert losses[-1] < 0.2 * losses[0]
+
+    def test_factored_approximates_unfactored_rank1(self):
+        """For a rank-1 |g| the factored second moment is exact, so both
+        variants produce the same first update."""
+        u = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (8, 1))) + 0.5
+        v = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (1, 12))) + 0.5
+        g = {"w": u * v}
+        p = {"w": jnp.ones((8, 12))}
+        f = optimizers.Adafactor(factored=True)
+        n = optimizers.Adafactor(factored=False)
+        pf, _ = f.update(p, g, f.init(p), 0.01, 0)
+        pn, _ = n.update(p, g, n.init(p), 0.01, 0)
+        np.testing.assert_allclose(pf["w"], pn["w"], rtol=1e-3)
+
+    def test_update_clipping_bounds_step(self):
+        """RMS of the (pre-scale) update never exceeds clip threshold."""
+        opt = optimizers.Adafactor(factored=True, clip_threshold=1.0)
+        g = {"w": 1000.0 * jnp.ones((8, 12))}
+        p = {"w": jnp.ones((8, 12))}
+        p2, _ = opt.update(p, g, opt.init(p), 1.0, 0)
+        step = jnp.abs(p2["w"] - p["w"])
+        # lr * scale * clipped_u, scale = rms(p)=1 => |step| <= lr * ~1
+        assert float(step.max()) <= 1.5
+
+    def test_beta2_schedule(self):
+        opt = optimizers.Adafactor()
+        assert float(opt._beta2(0)) == 0.0
+        assert 0.8 < float(opt._beta2(100)) < 1.0
+
+
+class TestRegistry:
+    @pytest.mark.parametrize(
+        "name", ["sgd", "adam", "adafactor", "adafactor_nofactor"]
+    )
+    def test_make(self, name):
+        opt = optimizers.make_optimizer(name)
+        assert opt.name == name
+
+    def test_unknown_raises(self):
+        with pytest.raises(ValueError):
+            optimizers.make_optimizer("adamw")

@@ -1,0 +1,204 @@
+"""The AOT ABI: flat step functions must be consistent with their declared
+specs, train end-to-end (loss decreases through the micro/update cycle), and
+the emitted manifest must describe every artifact on disk."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, optimizers, steps
+
+CFG = model.get_lm("lm-tiny")
+BATCH = 4
+
+
+def _make_args(in_specs, seed=0):
+    key = jax.random.PRNGKey(seed)
+    args = []
+    for name, shape, dtype in in_specs:
+        key, sub = jax.random.split(key)
+        if dtype == "int32":
+            args.append(
+                jax.random.randint(sub, tuple(shape), 0, CFG.vocab).astype(
+                    jnp.int32
+                )
+            )
+        elif dtype == "uint32":
+            args.append(jnp.zeros(tuple(shape), jnp.uint32))
+        else:
+            args.append(jnp.zeros(tuple(shape), jnp.float32))
+    return args
+
+
+class TestSpecConsistency:
+    @pytest.mark.parametrize(
+        "builder,kwargs",
+        [
+            (steps.build_lm_init, {}),
+            (steps.build_lm_eval, {"batch": BATCH}),
+            (steps.build_lm_greedy, {"batch": BATCH}),
+            (steps.build_lm_micro, {"method": "flora", "rank": 4, "batch": BATCH}),
+            (steps.build_lm_micro, {"method": "naive", "rank": 0, "batch": BATCH}),
+        ],
+    )
+    def test_eval_shape_matches_specs(self, builder, kwargs):
+        fn, in_specs, out_names = builder(CFG, **kwargs)
+        arg_structs = [
+            jax.ShapeDtypeStruct(tuple(s), jnp.dtype(d))
+            for (_, s, d) in in_specs
+        ]
+        outs = jax.eval_shape(fn, *arg_structs)
+        assert len(outs) == len(out_names)
+
+    def test_update_specs(self):
+        opt = optimizers.make_optimizer("adafactor")
+        fn, in_specs, out_names = steps.build_lm_update(CFG, "flora", 4, opt)
+        arg_structs = [
+            jax.ShapeDtypeStruct(tuple(s), jnp.dtype(d))
+            for (_, s, d) in in_specs
+        ]
+        outs = jax.eval_shape(fn, *arg_structs)
+        assert len(outs) == len(out_names)
+        # params out match params in
+        n_params = len(CFG.param_shapes())
+        for i in range(n_params):
+            assert tuple(outs[i].shape) == tuple(in_specs[i][1])
+
+
+class TestEndToEndTraining:
+    """Run the full Algorithm-1 cycle in-process (jit, no PJRT round trip)
+    and check the loss actually decreases on a learnable toy task."""
+
+    def _toy_batch(self, key):
+        # learnable structure: token i+1 = (token i + 1) % 16
+        start = jax.random.randint(key, (BATCH, 1), 0, 16)
+        seq = (start + jnp.arange(CFG.seq_len)[None, :]) % 16
+        mask = jnp.ones((BATCH, CFG.seq_len), jnp.float32)
+        return seq.astype(jnp.int32), mask
+
+    @pytest.mark.parametrize("method,rank", [("naive", 0), ("flora", 8)])
+    def test_accumulation_cycle_learns(self, method, rank):
+        opt = optimizers.make_optimizer("adafactor")
+        init_fn, _, _ = steps.build_lm_init(CFG)
+        micro_fn, micro_specs, _ = steps.build_lm_micro(CFG, method, rank, BATCH)
+        upd_fn, upd_specs, _ = steps.build_lm_update(CFG, method, rank, opt)
+        eval_fn, _, _ = steps.build_lm_eval(CFG, BATCH)
+        micro_j, upd_j, eval_j = jax.jit(micro_fn), jax.jit(upd_fn), jax.jit(eval_fn)
+
+        params = list(init_fn(jnp.uint32(0)))
+        n_p = len(params)
+        acc_shapes = [s for (n, s, _) in micro_specs if n.startswith("acc/")]
+        opt_shapes = [s for (n, s, _) in upd_specs if n.startswith("opt/")]
+        acc = [jnp.zeros(s, jnp.float32) for s in acc_shapes]
+        opt_state = [jnp.zeros(s, jnp.float32) for s in opt_shapes]
+
+        key = jax.random.PRNGKey(0)
+        tau = 4
+        key, sub = jax.random.split(key)
+        toks0, mask0 = self._toy_batch(sub)
+        loss0 = float(eval_j(*params, toks0, mask0)[0])
+
+        step = 0
+        for cycle in range(6):
+            seed = jnp.uint32(1000 + cycle)
+            for _ in range(tau):
+                key, sub = jax.random.split(key)
+                toks, mask = self._toy_batch(sub)
+                out = micro_j(*params, *acc, toks, mask, seed)
+                acc = list(out[1:])
+            out = upd_j(
+                *params, *opt_state, *acc,
+                seed, jnp.float32(tau), jnp.float32(0.05), jnp.float32(step),
+            )
+            params = list(out[:n_p])
+            opt_state = list(out[n_p:])
+            acc = [jnp.zeros_like(a) for a in acc]  # coordinator zeroes acc
+            step += 1
+
+        loss1 = float(eval_j(*params, toks0, mask0)[0])
+        assert loss1 < loss0 - 0.1, (loss0, loss1)
+
+    def test_momentum_step_learns(self):
+        opt = optimizers.make_optimizer("adafactor")
+        init_fn, _, _ = steps.build_lm_init(CFG)
+        mom_fn, mom_specs, _ = steps.build_lm_momentum_step(
+            CFG, "flora", 8, 0.9, opt, BATCH
+        )
+        eval_fn, _, _ = steps.build_lm_eval(CFG, BATCH)
+        mom_j, eval_j = jax.jit(mom_fn), jax.jit(eval_fn)
+
+        params = list(init_fn(jnp.uint32(0)))
+        n_p = len(params)
+        opt_shapes = [s for (n, s, _) in mom_specs if n.startswith("opt/")]
+        mom_shapes = [s for (n, s, _) in mom_specs if n.startswith("mom/")]
+        opt_state = [jnp.zeros(s, jnp.float32) for s in opt_shapes]
+        mom_state = [jnp.zeros(s, jnp.float32) for s in mom_shapes]
+
+        key = jax.random.PRNGKey(1)
+        key, sub = jax.random.split(key)
+        toks0, mask0 = self._toy_batch(sub)
+        loss0 = float(eval_j(*params, toks0, mask0)[0])
+
+        kappa, seed_cur, seed_next = 10, 0, 1
+        for t in range(30):
+            key, sub = jax.random.split(key)
+            toks, mask = self._toy_batch(sub)
+            resample = 1.0 if (t > 0 and t % kappa == 0) else 0.0
+            out = mom_j(
+                *params, *opt_state, *mom_state, toks, mask,
+                jnp.uint32(seed_cur), jnp.uint32(seed_next),
+                jnp.float32(resample), jnp.float32(0.05), jnp.float32(t),
+            )
+            params = list(out[1 : 1 + n_p])
+            opt_state = list(out[1 + n_p : 1 + n_p + len(opt_state)])
+            mom_state = list(out[1 + n_p + len(opt_state) :])
+            if resample == 1.0:
+                seed_cur, seed_next = seed_next, seed_next + 1
+        loss1 = float(eval_j(*params, toks0, mask0)[0])
+        assert loss1 < loss0 - 0.1, (loss0, loss1)
+
+
+class TestManifest:
+    MANIFEST = os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+    )
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        if not os.path.exists(self.MANIFEST):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(self.MANIFEST) as f:
+            return json.load(f)
+
+    def test_every_executable_file_exists(self, manifest):
+        d = os.path.dirname(self.MANIFEST)
+        for name, e in manifest["executables"].items():
+            assert os.path.exists(os.path.join(d, e["file"])), name
+
+    def test_models_registered(self, manifest):
+        for m in ("lm-tiny", "lm-small", "lm-base", "vit-cifar"):
+            assert m in manifest["models"]
+
+    def test_params_consistent_between_init_and_step(self, manifest):
+        ex = manifest["executables"]
+        init_outs = [o["name"] for o in ex["lm-tiny/init"]["outputs"]]
+        micro_ins = [
+            i["name"]
+            for i in ex["lm-tiny/micro_flora_r4"]["inputs"]
+            if i["name"].startswith("params/")
+        ]
+        assert init_outs == micro_ins
+
+    def test_flora_acc_is_compressed_in_manifest(self, manifest):
+        ex = manifest["executables"]["lm-small/micro_flora_r8"]
+        accs = {
+            i["name"]: i["shape"]
+            for i in ex["inputs"]
+            if i["name"].startswith("acc/")
+        }
+        assert accs["acc/layer0/attn/wq"] == [64, 8]
+        assert accs["acc/embed/tok"] == [256, 64]  # naive for embeddings

@@ -1,0 +1,153 @@
+//! Bench kit: a small criterion-style harness (criterion is not in the
+//! offline vendor set) plus table rendering shared by the per-table bench
+//! binaries in benches/.
+
+pub mod paper;
+
+use crate::util::human;
+use crate::util::timing::Samples;
+use std::time::Instant;
+
+/// Time a closure: `warmup` unmeasured runs, then `iters` measured ones.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Print a criterion-like summary line.
+pub fn report(name: &str, s: &Samples) {
+    println!(
+        "{name:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  (n={})",
+        human::duration(s.mean()),
+        human::duration(s.percentile(50.0)),
+        human::duration(s.percentile(99.0)),
+        s.len()
+    );
+}
+
+/// Plain-text table renderer for the paper-table benches.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths.iter()) {
+                line.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let sep: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        out.push_str(&format!("{}\n", "-".repeat(sep)));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// ASCII sparkline of a loss curve for figure benches.
+pub fn sparkline(values: &[f32], width: usize) -> String {
+    if values.is_empty() {
+        return String::new();
+    }
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = values.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-9);
+    // bucket the series down to `width` points
+    let stride = (values.len() as f64 / width as f64).max(1.0);
+    (0..width.min(values.len()))
+        .map(|i| {
+            let idx = ((i as f64) * stride) as usize;
+            let v = values[idx.min(values.len() - 1)];
+            let g = (((v - lo) / span) * 7.0).round() as usize;
+            GLYPHS[g.min(7)]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_collects_samples() {
+        let s = time_it(1, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.len(), 5);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "Mem"]);
+        t.row(vec!["FLORA(8)".into(), "0.75".into()]);
+        t.row(vec!["Naive".into(), "0.87".into()]);
+        let r = t.render();
+        assert!(r.contains("== Demo =="));
+        assert!(r.contains("FLORA(8)"));
+        // all data lines have the same width
+        let lines: Vec<&str> =
+            r.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn sparkline_monotone_series() {
+        let v: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let s = sparkline(&v, 8);
+        assert_eq!(s.chars().count(), 8);
+        let first = s.chars().next().unwrap();
+        let last = s.chars().last().unwrap();
+        assert!(first < last);
+    }
+}

@@ -1,0 +1,290 @@
+//! Shared harness for the paper-table benches (benches/table*.rs).
+//!
+//! Each bench binary declares a method grid; this module trains every cell
+//! on the real artifacts, pulls the measured metric, pairs it with the
+//! analytic paper-scale memory numbers (memory::breakdown at the paper's
+//! model sizes — DESIGN.md §4 explains why byte-accounting scales exactly),
+//! and renders rows shaped like the paper's tables.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::bench::Table;
+use crate::config::{TaskKind, TrainConfig};
+use crate::coordinator::{MethodSpec, RunReport, Trainer};
+use crate::memory::{self, Dims, OptKind, StateRole};
+use crate::runtime::Runtime;
+use crate::util::human;
+
+/// One bench cell: a method at paper rank + the scaled local rank.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub method: MethodSpec,
+    /// rank in the PAPER's scale (e.g. 256 on d=512) for the memory column
+    pub paper_rank: u64,
+}
+
+/// The paper↔local rank mapping: the paper sweeps r ∈ {8..256} on d=512
+/// (ratio 1/64..1/2); lm-small has d=64, so local ranks {4..32} cover
+/// ratios 1/16..1/2 (we skip the degenerate r<4).
+pub fn rank_pairs() -> [(usize, u64); 4] {
+    [(4, 8), (8, 32), (16, 128), (32, 256)]
+}
+
+/// Standard method grid of Tables 1/2/4: None, Naive, LoRA(r)×4, FLORA(r)×4.
+pub fn table_grid() -> Vec<Cell> {
+    let mut cells = vec![
+        Cell { method: MethodSpec::None, paper_rank: 0 },
+        Cell { method: MethodSpec::Naive, paper_rank: 0 },
+    ];
+    for (local, paper) in rank_pairs() {
+        cells.push(Cell { method: MethodSpec::Lora { rank: local }, paper_rank: paper });
+    }
+    for (local, paper) in rank_pairs() {
+        cells.push(Cell { method: MethodSpec::Flora { rank: local }, paper_rank: paper });
+    }
+    cells
+}
+
+/// Train one cell and return its report. Failures become Err strings so a
+/// bench can report and continue.
+pub fn run_cell(
+    base: &TrainConfig,
+    cell: &Cell,
+    rt: &Rc<RefCell<Runtime>>,
+) -> Result<RunReport, String> {
+    let mut cfg = base.clone();
+    cfg.method = cell.method;
+    // LoRA gets its own (higher) LR, as the paper tunes it separately
+    if cell.method.is_lora() {
+        cfg.lr = (cfg.lr * 4.0).min(0.2);
+    }
+    // Every row gets the same number of OPTIMIZER STEPS. The paper instead
+    // equalizes epochs (its "None" updates per physical batch at batch=1,
+    // where accumulation's variance reduction decides None < Naive); our
+    // artifacts train at batch=4 where that noise effect is not binding,
+    // so equal-steps keeps the rows comparable and the table's point — the
+    // FLORA-vs-LoRA-vs-Naive compression comparison — intact (see
+    // EXPERIMENTS.md §Table 1 for the discussion).
+    let mut tr = Trainer::with_runtime(cfg, rt.clone())?;
+    tr.run()
+}
+
+/// One shared runtime for a whole bench grid (PJRT client + compile cache).
+pub fn shared_runtime(artifacts: &str) -> Result<Rc<RefCell<Runtime>>, String> {
+    Ok(Rc::new(RefCell::new(Runtime::new(artifacts)?)))
+}
+
+/// The paper-scale memory method mirroring a cell (paper ranks).
+fn paper_method(cell: &Cell) -> memory::Method {
+    match cell.method {
+        MethodSpec::None => memory::Method::None,
+        MethodSpec::Naive => memory::Method::Naive,
+        MethodSpec::Lora { .. } => memory::Method::Lora(cell.paper_rank),
+        MethodSpec::Flora { .. } | MethodSpec::FloraNoTransfer { .. } => {
+            memory::Method::Flora(cell.paper_rank)
+        }
+        MethodSpec::Galore { .. } => memory::Method::Galore(cell.paper_rank),
+    }
+}
+
+/// Label like the paper: method name with the PAPER-scale rank.
+pub fn paper_label(cell: &Cell) -> String {
+    match cell.method {
+        MethodSpec::Lora { .. } => format!("LoRA({})", cell.paper_rank),
+        MethodSpec::Flora { .. } => format!("FLORA({})", cell.paper_rank),
+        MethodSpec::FloraNoTransfer { .. } => {
+            format!("FLORA-noT({})", cell.paper_rank)
+        }
+        MethodSpec::Galore { .. } => format!("GaLore({})", cell.paper_rank),
+        m => m.label(),
+    }
+}
+
+/// Render one paper-style table: analytic Mem/ΔM at `paper_dims` + measured
+/// quality/state from the local runs.
+#[allow(clippy::too_many_arguments)]
+pub fn render_table(
+    title: &str,
+    size_label: &str,
+    paper_dims: &Dims,
+    opt: OptKind,
+    role: StateRole,
+    cells: &[Cell],
+    reports: &[Result<RunReport, String>],
+    metric_header: &str,
+) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "Size", "Method", "Mem(GiB)", "ΔM(GiB)", metric_header,
+            "loss", "state(local)", "steps/s",
+        ],
+    );
+    let none_total =
+        memory::breakdown(paper_dims, memory::Method::None, opt, role, 1, false)
+            .total();
+    for (cell, rep) in cells.iter().zip(reports.iter()) {
+        let b = memory::breakdown(paper_dims, paper_method(cell), opt, role, 1, false);
+        let dm = b.total() as i64 - none_total as i64;
+        let (metric, loss, state, sps) = match rep {
+            Ok(r) => (
+                r.metric.map(|m| m.render()).unwrap_or_else(|| "-".into()),
+                format!("{:.3}", r.final_train_loss()),
+                human::bytes(r.total_state_bytes()),
+                format!("{:.2}", r.steps_per_sec),
+            ),
+            Err(e) => (format!("ERR {e}"), "-".into(), "-".into(), "-".into()),
+        };
+        t.row(vec![
+            size_label.to_string(),
+            paper_label(cell),
+            format!("{:.2}", human::gib(b.total())),
+            if cell.method == MethodSpec::None {
+                "-".into()
+            } else {
+                format!("{:.2}", human::gib(dm.max(0) as u64))
+            },
+            metric,
+            loss,
+            state,
+            sps,
+        ]);
+    }
+    t
+}
+
+/// Also render the large-model analytic rows the paper reports but which we
+/// cannot train locally (T5-3B, GPT-2-XL): memory columns only.
+pub fn render_analytic_only(
+    title: &str,
+    size_label: &str,
+    paper_dims: &Dims,
+    opt: OptKind,
+    role: StateRole,
+    cells: &[Cell],
+) -> Table {
+    let mut t = Table::new(title, &["Size", "Method", "Mem(GiB)", "ΔM(GiB)"]);
+    let none_total =
+        memory::breakdown(paper_dims, memory::Method::None, opt, role, 1, false)
+            .total();
+    for cell in cells {
+        let b = memory::breakdown(paper_dims, paper_method(cell), opt, role, 1, false);
+        let dm = b.total() as i64 - none_total as i64;
+        t.row(vec![
+            size_label.to_string(),
+            paper_label(cell),
+            format!("{:.2}", human::gib(b.total())),
+            if cell.method == MethodSpec::None {
+                "-".into()
+            } else {
+                format!("{:.2}", human::gib(dm.max(0) as u64))
+            },
+        ]);
+    }
+    t
+}
+
+/// Bench-binary arg parsing: `--quick` (fewer steps), `--steps N`,
+/// `--artifacts DIR`. cargo bench passes `--bench`; ignore unknown flags.
+pub struct BenchArgs {
+    pub quick: bool,
+    pub steps: Option<usize>,
+    pub artifacts: String,
+}
+
+impl BenchArgs {
+    pub fn parse() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut out = Self { quick: false, steps: None, artifacts: "artifacts".into() };
+        let mut i = 0;
+        while i < argv.len() {
+            match argv[i].as_str() {
+                "--quick" => out.quick = true,
+                "--steps" if i + 1 < argv.len() => {
+                    out.steps = argv[i + 1].parse().ok();
+                    i += 1;
+                }
+                "--artifacts" if i + 1 < argv.len() => {
+                    out.artifacts = argv[i + 1].clone();
+                    i += 1;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn require_artifacts(&self) -> bool {
+        let ok = std::path::Path::new(&self.artifacts)
+            .join("manifest.json")
+            .exists();
+        if !ok {
+            println!(
+                "artifacts/manifest.json not found — run `make artifacts` first; \
+                 printing analytic-only tables."
+            );
+        }
+        ok
+    }
+}
+
+/// Base config shared by the table benches.
+pub fn base_config(task: TaskKind, steps: usize, tau: usize) -> TrainConfig {
+    TrainConfig {
+        model: "lm-small".into(),
+        task,
+        method: MethodSpec::Naive,
+        optimizer: "adafactor".into(),
+        lr: 0.05,
+        steps,
+        tau,
+        kappa: 50,
+        batch: 4,
+        seed: 0,
+        eval_every: 0,
+        eval_samples: 32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_has_ten_methods() {
+        let g = table_grid();
+        assert_eq!(g.len(), 10);
+        assert_eq!(g[0].method, MethodSpec::None);
+        assert_eq!(g[1].method, MethodSpec::Naive);
+    }
+
+    #[test]
+    fn rank_mapping_monotone() {
+        let pairs = rank_pairs();
+        for w in pairs.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 < w[1].1);
+        }
+    }
+
+    #[test]
+    fn paper_labels_use_paper_ranks() {
+        let c = Cell { method: MethodSpec::Flora { rank: 16 }, paper_rank: 128 };
+        assert_eq!(paper_label(&c), "FLORA(128)");
+    }
+
+    #[test]
+    fn analytic_table_renders_flora_below_naive() {
+        let dims = Dims::t5_small_sim();
+        let cells = table_grid();
+        let t = render_analytic_only(
+            "x", "60M", &dims, OptKind::Adafactor, StateRole::Accumulation, &cells,
+        );
+        assert_eq!(t.rows.len(), 10);
+        // FLORA(256) ΔM < Naive ΔM
+        let naive_dm: f64 = t.rows[1][3].parse().unwrap();
+        let flora256_dm: f64 = t.rows[9][3].parse().unwrap();
+        assert!(flora256_dm < naive_dm);
+    }
+}

@@ -1,0 +1,165 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set).
+//!
+//! Grammar: `flora <command> [--flag value]... [--switch]...`
+//! Commands are dispatched in main.rs; this module provides the parser and
+//! help rendering.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-flag token is the command.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty flag name".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                return Err(format!("unexpected positional argument {tok:?}"));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn f32_flag(&self, name: &str, default: f32) -> Result<f32, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+pub const USAGE: &str = "\
+flora — FLORA (ICML 2024) reproduction: rust coordinator over AOT JAX/Pallas
+
+USAGE:
+    flora <COMMAND> [OPTIONS]
+
+COMMANDS:
+    train       train a model with a chosen method
+                  --model lm-small --task sum|mt|lm|vit --method none|naive|flora|lora|galore
+                  --rank N --optimizer adafactor --lr F --steps N --tau N
+                  --kappa N --batch N --seed N --config file.toml
+    eval        evaluate a fresh init (loss + generation metric)
+                  --model lm-small --task sum --samples N
+    pilot       run the Figure-1 pilot study in pure rust
+                  --steps N --rank N --lr F
+    memory      print the analytic memory table for paper-scale models
+                  --model t5-small|t5-3b|gpt2-base|gpt2-xl --optimizer ...
+    inspect     list manifest executables and their ABI
+                  --artifacts DIR [--exe NAME]
+    help        show this message
+
+Benches reproducing each paper table/figure: `cargo bench --bench <name>`
+(figure1_pilot, table1_accumulation, table2_momentum, table3_kappa,
+ table4_linear_memory, table5_vit, table6_galore, figure2_profile, micro_rp).
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse("train --model lm-small --steps 100 --verbose");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("model"), Some("lm-small"));
+        assert_eq!(a.usize_flag("steps", 1).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("train --lr=0.05 --method=flora");
+        assert_eq!(a.f32_flag("lr", 0.0).unwrap(), 0.05);
+        assert_eq!(a.flag("method"), Some("flora"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("eval");
+        assert_eq!(a.usize_flag("steps", 7).unwrap(), 7);
+        assert_eq!(a.flag_or("model", "lm-small"), "lm-small");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("train --steps abc");
+        assert!(a.usize_flag("steps", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_switch_not_eaten_as_value() {
+        let a = parse("train --verbose --steps 5");
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize_flag("steps", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn positional_after_command_rejected() {
+        assert!(Args::parse(
+            ["train", "extra"].iter().map(|s| s.to_string())
+        )
+        .is_err());
+    }
+}

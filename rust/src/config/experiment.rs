@@ -1,0 +1,227 @@
+//! Typed experiment configuration: what the launcher (`flora train ...`),
+//! the examples and the bench harnesses all consume. Buildable from a TOML
+//! file (`--config`), from CLI overrides, or programmatically (benches).
+
+use std::collections::BTreeMap;
+
+use super::toml::{parse_toml, TomlValue};
+use crate::coordinator::method::MethodSpec;
+
+/// Which synthetic workload drives training (DESIGN.md §4 mappings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// XSum-sim summarization (ROUGE)
+    Sum,
+    /// IWSLT-sim translation (BLEU)
+    Mt,
+    /// C4-sim language modelling (perplexity)
+    Lm,
+    /// CIFAR-sim image classification (accuracy)
+    Vit,
+}
+
+impl TaskKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "sum" => Ok(TaskKind::Sum),
+            "mt" => Ok(TaskKind::Mt),
+            "lm" => Ok(TaskKind::Lm),
+            "vit" => Ok(TaskKind::Vit),
+            _ => Err(format!("unknown task {s:?} (want sum|mt|lm|vit)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Sum => "sum",
+            TaskKind::Mt => "mt",
+            TaskKind::Lm => "lm",
+            TaskKind::Vit => "vit",
+        }
+    }
+}
+
+/// Core training hyper-parameters (shared by every experiment).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub task: TaskKind,
+    pub method: MethodSpec,
+    pub optimizer: String,
+    pub lr: f32,
+    pub steps: usize,
+    /// gradient-accumulation length τ (Algorithm 1); 1 disables
+    pub tau: usize,
+    /// momentum resample interval κ (Algorithm 2)
+    pub kappa: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_samples: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "lm-small".into(),
+            task: TaskKind::Sum,
+            method: MethodSpec::Flora { rank: 16 },
+            optimizer: "adafactor".into(),
+            lr: 0.05,
+            steps: 200,
+            tau: 1,
+            kappa: 1000,
+            batch: 4,
+            seed: 0,
+            eval_every: 50,
+            eval_samples: 16,
+        }
+    }
+}
+
+/// A full experiment: training config + where artifacts live.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub train: TrainConfig,
+    pub artifacts_dir: String,
+    pub name: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            train: TrainConfig::default(),
+            artifacts_dir: "artifacts".into(),
+            name: "experiment".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file; unknown keys are an error (typo defence).
+    pub fn from_toml_str(doc: &str) -> Result<Self, String> {
+        let map = parse_toml(doc).map_err(|e| e.to_string())?;
+        Self::from_map(&map)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let doc = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_toml_str(&doc)
+    }
+
+    fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Self, String> {
+        let mut cfg = ExperimentConfig::default();
+        let mut method_name: Option<String> = None;
+        let mut rank: Option<u64> = None;
+        for (k, v) in map {
+            match k.as_str() {
+                "name" => cfg.name = req_str(k, v)?,
+                "artifacts_dir" => cfg.artifacts_dir = req_str(k, v)?,
+                "train.model" => cfg.train.model = req_str(k, v)?,
+                "train.task" => cfg.train.task = TaskKind::parse(&req_str(k, v)?)?,
+                "train.method" => method_name = Some(req_str(k, v)?),
+                "train.rank" => rank = Some(req_int(k, v)? as u64),
+                "train.optimizer" => cfg.train.optimizer = req_str(k, v)?,
+                "train.lr" => cfg.train.lr = req_f64(k, v)? as f32,
+                "train.steps" => cfg.train.steps = req_int(k, v)? as usize,
+                "train.tau" => cfg.train.tau = req_int(k, v)? as usize,
+                "train.kappa" => cfg.train.kappa = req_int(k, v)? as usize,
+                "train.batch" => cfg.train.batch = req_int(k, v)? as usize,
+                "train.seed" => cfg.train.seed = req_int(k, v)? as u64,
+                "train.eval_every" => cfg.train.eval_every = req_int(k, v)? as usize,
+                "train.eval_samples" => cfg.train.eval_samples = req_int(k, v)? as usize,
+                _ => return Err(format!("unknown config key {k:?}")),
+            }
+        }
+        if let Some(name) = method_name {
+            cfg.train.method = MethodSpec::parse(&name, rank.unwrap_or(16) as usize)?;
+        }
+        if cfg.train.tau == 0 || cfg.train.batch == 0 {
+            return Err("tau and batch must be >= 1".into());
+        }
+        Ok(cfg)
+    }
+}
+
+fn req_str(k: &str, v: &TomlValue) -> Result<String, String> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("{k}: expected string"))
+}
+
+fn req_int(k: &str, v: &TomlValue) -> Result<i64, String> {
+    v.as_i64().ok_or_else(|| format!("{k}: expected integer"))
+}
+
+fn req_f64(k: &str, v: &TomlValue) -> Result<f64, String> {
+    v.as_f64().ok_or_else(|| format!("{k}: expected number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.train.model, "lm-small");
+        assert!(c.train.tau >= 1);
+    }
+
+    #[test]
+    fn full_roundtrip_from_toml() {
+        let doc = r#"
+            name = "table1-flora8"
+            artifacts_dir = "artifacts"
+            [train]
+            model = "lm-small"
+            task = "mt"
+            method = "flora"
+            rank = 8
+            optimizer = "adafactor"
+            lr = 0.03
+            steps = 300
+            tau = 16
+            kappa = 500
+            batch = 4
+            seed = 7
+        "#;
+        let c = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(c.name, "table1-flora8");
+        assert_eq!(c.train.task, TaskKind::Mt);
+        assert_eq!(c.train.method, MethodSpec::Flora { rank: 8 });
+        assert_eq!(c.train.tau, 16);
+        assert_eq!(c.train.lr, 0.03);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let e = ExperimentConfig::from_toml_str("train.stepz = 5").unwrap_err();
+        assert!(e.contains("unknown config key"));
+    }
+
+    #[test]
+    fn bad_task_rejected() {
+        let e = ExperimentConfig::from_toml_str(r#"train.task = "xsum""#).unwrap_err();
+        assert!(e.contains("unknown task"));
+    }
+
+    #[test]
+    fn zero_tau_rejected() {
+        assert!(ExperimentConfig::from_toml_str("train.tau = 0").is_err());
+    }
+
+    #[test]
+    fn task_kind_parse_all() {
+        for (s, k) in [
+            ("sum", TaskKind::Sum),
+            ("mt", TaskKind::Mt),
+            ("lm", TaskKind::Lm),
+            ("vit", TaskKind::Vit),
+        ] {
+            assert_eq!(TaskKind::parse(s).unwrap(), k);
+            assert_eq!(k.name(), s);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration system: a TOML-subset parser (no serde/toml crates in the
+//! offline vendor set) plus the typed experiment configs the launcher and
+//! benches consume.
+
+pub mod experiment;
+pub mod toml;
+
+pub use experiment::{ExperimentConfig, TaskKind, TrainConfig};
+pub use toml::{parse_toml, TomlValue};

@@ -1,0 +1,261 @@
+//! TOML-subset parser: tables `[a.b]`, key/value pairs with string, integer,
+//! float, boolean and flat-array values, comments, and dotted keys inside
+//! values' tables flattened to `a.b.key` paths. Enough for experiment
+//! configs; errors carry line numbers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse into a flat `section.key -> value` map.
+pub fn parse_toml(input: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated table header"))?;
+            if name.is_empty() {
+                return Err(err("empty table name"));
+            }
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|m| err(&m))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if out.insert(full.clone(), value).is_some() {
+            return Err(err(&format!("duplicate key {full:?}")));
+        }
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_top_level(inner)?;
+        return Ok(TomlValue::Array(
+            items
+                .iter()
+                .map(|it| parse_value(it.trim()))
+                .collect::<Result<_, _>>()?,
+        ));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or("unbalanced brackets")?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = r#"
+            # experiment config
+            name = "table1"
+            [train]
+            steps = 200
+            lr = 5e-2
+            flora = true
+            ranks = [4, 8, 16, 32]
+        "#;
+        let m = parse_toml(doc).unwrap();
+        assert_eq!(m["name"].as_str(), Some("table1"));
+        assert_eq!(m["train.steps"].as_i64(), Some(200));
+        assert_eq!(m["train.lr"].as_f64(), Some(0.05));
+        assert_eq!(m["train.flora"].as_bool(), Some(true));
+        assert_eq!(m["train.ranks"].as_array().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let m = parse_toml(r##"s = "a#b" # trailing"##).unwrap();
+        assert_eq!(m["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn int_with_underscores_and_negative() {
+        let m = parse_toml("a = 1_000_000\nb = -42").unwrap();
+        assert_eq!(m["a"].as_i64(), Some(1_000_000));
+        assert_eq!(m["b"].as_i64(), Some(-42));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let m = parse_toml("a = [[1, 2], [3]]").unwrap();
+        let outer = m["a"].as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap()[1].as_i64(), Some(2));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_toml("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_toml("[unclosed").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse_toml("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let m = parse_toml(r#"s = "say \"hi\"""#).unwrap();
+        assert_eq!(m["s"].as_str(), Some(r#"say "hi""#));
+    }
+}

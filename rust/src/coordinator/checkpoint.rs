@@ -1,0 +1,240 @@
+//! Checkpointing: serialize/restore a full training state (params, opt,
+//! method state, step counters, seed schedules) to a single file in an own
+//! binary format (serde isn't available offline; the format is versioned
+//! and self-describing enough to fail loudly on mismatch).
+//!
+//! Layout (little-endian):
+//!   magic "FLORAckp" | u32 version | u64 step | u64 cursor
+//!   u32 n_groups × [ name | u32 n_tensors × [ name | u32 ndim × u64 dims
+//!                                             | u64 nbytes | f32 data ] ]
+//! Strings are u32-length-prefixed UTF-8.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::{literal_f32, TensorSpec};
+
+const MAGIC: &[u8; 8] = b"FLORAckp";
+const VERSION: u32 = 1;
+
+/// A host-side snapshot of one state group.
+pub struct GroupSnapshot {
+    pub name: String,
+    pub tensors: Vec<(TensorSpec, Vec<f32>)>,
+}
+
+/// Everything needed to resume a run.
+pub struct Checkpoint {
+    pub step: u64,
+    pub cursor: u64,
+    pub groups: Vec<GroupSnapshot>,
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> std::io::Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String, String> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).map_err(|e| e.to_string())?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > 1 << 20 {
+        return Err(format!("implausible string length {len}"));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).map_err(|e| e.to_string())?;
+    String::from_utf8(buf).map_err(|e| e.to_string())
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let f = std::fs::File::create(path.as_ref())
+            .map_err(|e| format!("create checkpoint: {e}"))?;
+        let mut w = std::io::BufWriter::new(f);
+        let io = |e: std::io::Error| format!("write checkpoint: {e}");
+        w.write_all(MAGIC).map_err(io)?;
+        w.write_all(&VERSION.to_le_bytes()).map_err(io)?;
+        w.write_all(&self.step.to_le_bytes()).map_err(io)?;
+        w.write_all(&self.cursor.to_le_bytes()).map_err(io)?;
+        w.write_all(&(self.groups.len() as u32).to_le_bytes()).map_err(io)?;
+        for g in &self.groups {
+            write_str(&mut w, &g.name).map_err(io)?;
+            w.write_all(&(g.tensors.len() as u32).to_le_bytes()).map_err(io)?;
+            for (spec, data) in &g.tensors {
+                write_str(&mut w, &spec.name).map_err(io)?;
+                w.write_all(&(spec.shape.len() as u32).to_le_bytes()).map_err(io)?;
+                for &d in &spec.shape {
+                    w.write_all(&(d as u64).to_le_bytes()).map_err(io)?;
+                }
+                w.write_all(&((data.len() * 4) as u64).to_le_bytes()).map_err(io)?;
+                for &x in data {
+                    w.write_all(&x.to_le_bytes()).map_err(io)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint, String> {
+        let f = std::fs::File::open(path.as_ref())
+            .map_err(|e| format!("open checkpoint: {e}"))?;
+        let mut r = std::io::BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).map_err(|e| e.to_string())?;
+        if &magic != MAGIC {
+            return Err("not a flora checkpoint (bad magic)".into());
+        }
+        let mut u32b = [0u8; 4];
+        let mut u64b = [0u8; 8];
+        r.read_exact(&mut u32b).map_err(|e| e.to_string())?;
+        let version = u32::from_le_bytes(u32b);
+        if version != VERSION {
+            return Err(format!("checkpoint version {version}, want {VERSION}"));
+        }
+        r.read_exact(&mut u64b).map_err(|e| e.to_string())?;
+        let step = u64::from_le_bytes(u64b);
+        r.read_exact(&mut u64b).map_err(|e| e.to_string())?;
+        let cursor = u64::from_le_bytes(u64b);
+        r.read_exact(&mut u32b).map_err(|e| e.to_string())?;
+        let n_groups = u32::from_le_bytes(u32b);
+        let mut groups = Vec::with_capacity(n_groups as usize);
+        for _ in 0..n_groups {
+            let gname = read_str(&mut r)?;
+            r.read_exact(&mut u32b).map_err(|e| e.to_string())?;
+            let n_tensors = u32::from_le_bytes(u32b);
+            let mut tensors = Vec::with_capacity(n_tensors as usize);
+            for _ in 0..n_tensors {
+                let tname = read_str(&mut r)?;
+                r.read_exact(&mut u32b).map_err(|e| e.to_string())?;
+                let ndim = u32::from_le_bytes(u32b) as usize;
+                if ndim > 8 {
+                    return Err(format!("{tname}: implausible ndim {ndim}"));
+                }
+                let mut shape = Vec::with_capacity(ndim);
+                for _ in 0..ndim {
+                    r.read_exact(&mut u64b).map_err(|e| e.to_string())?;
+                    shape.push(u64::from_le_bytes(u64b) as usize);
+                }
+                r.read_exact(&mut u64b).map_err(|e| e.to_string())?;
+                let nbytes = u64::from_le_bytes(u64b) as usize;
+                let numel: usize = shape.iter().product::<usize>().max(1);
+                if nbytes != numel * 4 {
+                    return Err(format!(
+                        "{tname}: byte count {nbytes} != 4*numel({numel})"
+                    ));
+                }
+                let mut raw = vec![0u8; nbytes];
+                r.read_exact(&mut raw).map_err(|e| e.to_string())?;
+                let data: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                tensors.push((
+                    TensorSpec { name: tname, shape, dtype: "float32".into() },
+                    data,
+                ));
+            }
+            groups.push(GroupSnapshot { name: gname, tensors });
+        }
+        Ok(Checkpoint { step, cursor, groups })
+    }
+
+    /// Rebuild literal groups for a StateStore.
+    pub fn to_literals(
+        &self,
+    ) -> Result<Vec<(String, Vec<TensorSpec>, Vec<xla::Literal>)>, String> {
+        self.groups
+            .iter()
+            .map(|g| {
+                let mut specs = Vec::new();
+                let mut lits = Vec::new();
+                for (spec, data) in &g.tensors {
+                    lits.push(literal_f32(&spec.shape, data)?);
+                    specs.push(spec.clone());
+                }
+                Ok((g.name.clone(), specs, lits))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 42,
+            cursor: 1337,
+            groups: vec![
+                GroupSnapshot {
+                    name: "params".into(),
+                    tensors: vec![
+                        (
+                            TensorSpec {
+                                name: "params/w".into(),
+                                shape: vec![2, 3],
+                                dtype: "float32".into(),
+                            },
+                            vec![1.0, -2.0, 3.5, 0.0, 1e-9, 7.0],
+                        ),
+                        (
+                            TensorSpec {
+                                name: "params/b".into(),
+                                shape: vec![],
+                                dtype: "float32".into(),
+                            },
+                            vec![0.25],
+                        ),
+                    ],
+                },
+                GroupSnapshot { name: "opt".into(), tensors: vec![] },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = std::env::temp_dir().join("flora_ckpt_test.bin");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.cursor, 1337);
+        assert_eq!(back.groups.len(), 2);
+        assert_eq!(back.groups[0].tensors[0].1, ck.groups[0].tensors[0].1);
+        assert_eq!(back.groups[0].tensors[1].0.shape, Vec::<usize>::new());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("flora_ckpt_bad.bin");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        match Checkpoint::load(&path) {
+            Err(e) => assert!(e.contains("magic"), "{e}"),
+            Ok(_) => panic!("bad magic accepted"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let path = std::env::temp_dir().join("flora_ckpt_trunc.bin");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn to_literals_shapes() {
+        let ck = sample();
+        let groups = ck.to_literals().unwrap();
+        assert_eq!(groups[0].2[0].element_count(), 6);
+        assert_eq!(groups[0].2[1].element_count(), 1);
+    }
+}

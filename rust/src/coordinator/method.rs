@@ -1,0 +1,235 @@
+//! Method specification + the manifest-name scheme binding the coordinator
+//! to the AOT catalog (python/compile/aot.py is the other half of this
+//! contract; test_steps_abi.py and rust/tests/integration.rs check both).
+
+/// The optimizer-state compression method under test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodSpec {
+    /// no accumulation/momentum buffer at all
+    None,
+    /// full-size buffer
+    Naive,
+    /// FLORA compressed buffer of rank r (Algorithms 1–2)
+    Flora { rank: usize },
+    /// FLORA momentum WITHOUT the κ-resample subspace transfer (ablation
+    /// of the paper's §2.4 remedy #2; see benches/ablation_transfer.rs)
+    FloraNoTransfer { rank: usize },
+    /// LoRA patches of rank r
+    Lora { rank: usize },
+    /// GaLore with projection rank r
+    Galore { rank: usize },
+}
+
+impl MethodSpec {
+    pub fn parse(name: &str, rank: usize) -> Result<Self, String> {
+        match name {
+            "none" => Ok(MethodSpec::None),
+            "naive" => Ok(MethodSpec::Naive),
+            "flora" => Ok(MethodSpec::Flora { rank }),
+            "flora_notransfer" => Ok(MethodSpec::FloraNoTransfer { rank }),
+            "lora" => Ok(MethodSpec::Lora { rank }),
+            "galore" => Ok(MethodSpec::Galore { rank }),
+            _ => Err(format!(
+                "unknown method {name:?} (want none|naive|flora|lora|galore)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            MethodSpec::None => "None".into(),
+            MethodSpec::Naive => "Naive".into(),
+            MethodSpec::Flora { rank } => format!("FLORA({rank})"),
+            MethodSpec::FloraNoTransfer { rank } => {
+                format!("FLORA-noT({rank})")
+            }
+            MethodSpec::Lora { rank } => format!("LoRA({rank})"),
+            MethodSpec::Galore { rank } => format!("GaLore({rank})"),
+        }
+    }
+
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            MethodSpec::Flora { rank }
+            | MethodSpec::FloraNoTransfer { rank }
+            | MethodSpec::Lora { rank }
+            | MethodSpec::Galore { rank } => Some(*rank),
+            _ => None,
+        }
+    }
+
+    pub fn is_lora(&self) -> bool {
+        matches!(self, MethodSpec::Lora { .. })
+    }
+
+    /// memory-accountant mirror of this spec
+    pub fn to_memory_method(&self) -> crate::memory::Method {
+        match self {
+            MethodSpec::None => crate::memory::Method::None,
+            MethodSpec::Naive => crate::memory::Method::Naive,
+            MethodSpec::Flora { rank }
+            | MethodSpec::FloraNoTransfer { rank } => {
+                crate::memory::Method::Flora(*rank as u64)
+            }
+            MethodSpec::Lora { rank } => crate::memory::Method::Lora(*rank as u64),
+            MethodSpec::Galore { rank } => crate::memory::Method::Galore(*rank as u64),
+        }
+    }
+
+    // ----- manifest executable names (the ABI contract with aot.py) -----
+
+    pub fn init_exe(&self, model: &str) -> String {
+        format!("{model}/init")
+    }
+
+    pub fn lora_init_exe(&self, model: &str) -> Option<String> {
+        self.rank()
+            .filter(|_| self.is_lora())
+            .map(|r| format!("{model}/lora_r{r}_init"))
+    }
+
+    /// Algorithm-1 micro step (None has no accumulation).
+    pub fn micro_exe(&self, model: &str) -> Option<String> {
+        match self {
+            MethodSpec::None | MethodSpec::Galore { .. } => None,
+            MethodSpec::FloraNoTransfer { .. } => None,
+            MethodSpec::Naive => Some(format!("{model}/micro_naive")),
+            MethodSpec::Flora { rank } => {
+                Some(format!("{model}/micro_flora_r{rank}"))
+            }
+            MethodSpec::Lora { rank } => {
+                Some(format!("{model}/lora_r{rank}_micro"))
+            }
+        }
+    }
+
+    /// Algorithm-1 cycle-end update.
+    pub fn update_exe(&self, model: &str, optimizer: &str) -> Option<String> {
+        match self {
+            MethodSpec::None | MethodSpec::Galore { .. } => None,
+            MethodSpec::FloraNoTransfer { .. } => None,
+            MethodSpec::Naive => {
+                Some(format!("{model}/update_naive_{optimizer}"))
+            }
+            MethodSpec::Flora { rank } => {
+                Some(format!("{model}/update_flora_r{rank}_{optimizer}"))
+            }
+            MethodSpec::Lora { rank } => {
+                Some(format!("{model}/lora_r{rank}_update_{optimizer}"))
+            }
+        }
+    }
+
+    /// Fused plain step (method None / the "no accumulation" baseline).
+    pub fn plain_step_exe(model: &str, optimizer: &str) -> String {
+        format!("{model}/plain_step_{optimizer}")
+    }
+
+    /// Algorithm-2 fused momentum step.
+    pub fn momentum_exe(&self, model: &str, optimizer: &str) -> Option<String> {
+        match self {
+            MethodSpec::None | MethodSpec::Galore { .. } => None,
+            MethodSpec::FloraNoTransfer { rank } => Some(format!(
+                "{model}/mom_step_flora_notransfer_r{rank}_{optimizer}"
+            )),
+            MethodSpec::Naive => {
+                Some(format!("{model}/mom_step_naive_{optimizer}"))
+            }
+            MethodSpec::Flora { rank } => {
+                Some(format!("{model}/mom_step_flora_r{rank}_{optimizer}"))
+            }
+            MethodSpec::Lora { rank } => {
+                Some(format!("{model}/lora_r{rank}_mom_step_{optimizer}"))
+            }
+        }
+    }
+
+    pub fn galore_exe(&self, model: &str) -> Option<String> {
+        match self {
+            MethodSpec::Galore { rank } => {
+                Some(format!("{model}/galore_step_r{rank}"))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn eval_exe(&self, model: &str) -> String {
+        match self {
+            MethodSpec::Lora { rank } => format!("{model}/lora_r{rank}_eval"),
+            _ => format!("{model}/eval"),
+        }
+    }
+
+    pub fn greedy_exe(&self, model: &str) -> String {
+        match self {
+            MethodSpec::Lora { rank } => format!("{model}/lora_r{rank}_greedy"),
+            _ => format!("{model}/greedy"),
+        }
+    }
+
+    /// ViT training-step name (Table 5 uses "none"+adam and flora+adafactor).
+    pub fn vit_step_exe(&self, model: &str, optimizer: &str) -> String {
+        match self {
+            MethodSpec::Flora { rank } => {
+                format!("{model}/step_flora_r{rank}_{optimizer}")
+            }
+            _ => format!("{model}/step_{optimizer}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        assert_eq!(MethodSpec::parse("flora", 8).unwrap().label(), "FLORA(8)");
+        assert_eq!(MethodSpec::parse("none", 0).unwrap(), MethodSpec::None);
+        assert!(MethodSpec::parse("relora", 8).is_err());
+    }
+
+    #[test]
+    fn exe_names_match_aot_catalog() {
+        let flora = MethodSpec::Flora { rank: 8 };
+        assert_eq!(flora.micro_exe("lm-small").unwrap(), "lm-small/micro_flora_r8");
+        assert_eq!(
+            flora.update_exe("lm-small", "adafactor").unwrap(),
+            "lm-small/update_flora_r8_adafactor"
+        );
+        assert_eq!(
+            flora.momentum_exe("lm-small", "adafactor").unwrap(),
+            "lm-small/mom_step_flora_r8_adafactor"
+        );
+        let lora = MethodSpec::Lora { rank: 32 };
+        assert_eq!(lora.micro_exe("lm-small").unwrap(), "lm-small/lora_r32_micro");
+        assert_eq!(lora.eval_exe("lm-small"), "lm-small/lora_r32_eval");
+        assert_eq!(
+            MethodSpec::plain_step_exe("lm-small", "adafactor"),
+            "lm-small/plain_step_adafactor"
+        );
+        let ga = MethodSpec::Galore { rank: 16 };
+        assert_eq!(ga.galore_exe("lm-small").unwrap(), "lm-small/galore_step_r16");
+        assert!(ga.micro_exe("lm-small").is_none());
+    }
+
+    #[test]
+    fn none_has_no_micro_or_update() {
+        let none = MethodSpec::None;
+        assert!(none.micro_exe("m").is_none());
+        assert!(none.update_exe("m", "adafactor").is_none());
+        assert!(none.momentum_exe("m", "adafactor").is_none());
+    }
+
+    #[test]
+    fn vit_step_names() {
+        assert_eq!(
+            MethodSpec::None.vit_step_exe("vit-cifar", "adam"),
+            "vit-cifar/step_adam"
+        );
+        assert_eq!(
+            MethodSpec::Flora { rank: 16 }.vit_step_exe("vit-cifar", "adafactor"),
+            "vit-cifar/step_flora_r16_adafactor"
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 coordinator — the training orchestrator.
+//!
+//! FLORA's system-level state lives HERE, not in the XLA graphs: the
+//! τ-cycle of Algorithm 1 (when to decompress + update + zero the
+//! accumulator + resample the seed), the κ-interval of Algorithm 2 (when to
+//! raise the resample flag and rotate seeds), the GaLore refresh schedule,
+//! LR schedule, evaluation cadence and generation-metric evaluation. The
+//! XLA executables are pure functions; this module is the state machine
+//! that drives them.
+
+pub mod checkpoint;
+pub mod method;
+pub mod registry;
+pub mod report;
+pub mod schedule;
+pub mod seeds;
+pub mod task;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use method::MethodSpec;
+pub use schedule::Schedule;
+pub use report::{MetricValue, RunReport};
+pub use seeds::{AccumSeeds, MomentumSeeds};
+pub use task::Task;
+pub use trainer::Trainer;

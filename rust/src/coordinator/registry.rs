@@ -1,0 +1,159 @@
+//! Run registry: persists every RunReport as JSON under `runs/` so bench
+//! outputs are machine-readable (plots, regression diffs) and the CLI can
+//! list past runs. Writing uses a small hand-rolled JSON emitter (matching
+//! util::json's parser — round-trip tested).
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::report::{MetricValue, RunReport};
+use crate::util::json::{self, Json};
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Serialize a report to JSON text.
+pub fn report_to_json(r: &RunReport, name: &str) -> String {
+    let mut out = String::from("{");
+    let _ = write!(out, "\"name\": \"{}\",", esc(name));
+    let _ = write!(out, "\"label\": \"{}\",", esc(&r.label));
+    let _ = write!(out, "\"final_train_loss\": {},", f(r.final_train_loss()));
+    let _ = write!(out, "\"wallclock_secs\": {},", f64s(r.wallclock_secs));
+    let _ = write!(out, "\"steps_per_sec\": {},", f64s(r.steps_per_sec));
+    let _ = write!(out, "\"peak_state_bytes\": {},", r.peak_state_bytes);
+    match &r.metric {
+        Some(MetricValue::Rouge(s)) => {
+            let _ = write!(
+                out,
+                "\"metric\": {{\"kind\": \"rouge\", \"r1\": {}, \"r2\": {}, \"rl\": {}}},",
+                f64s(s.rouge1), f64s(s.rouge2), f64s(s.rouge_l)
+            );
+        }
+        Some(MetricValue::Bleu(b)) => {
+            let _ = write!(out, "\"metric\": {{\"kind\": \"bleu\", \"score\": {}}},", f64s(*b));
+        }
+        Some(MetricValue::Perplexity(p)) => {
+            let _ = write!(out, "\"metric\": {{\"kind\": \"ppl\", \"score\": {}}},", f64s(*p));
+        }
+        Some(MetricValue::Accuracy(a)) => {
+            let _ = write!(out, "\"metric\": {{\"kind\": \"acc\", \"score\": {}}},", f64s(*a));
+        }
+        None => {
+            let _ = write!(out, "\"metric\": null,");
+        }
+    }
+    let _ = write!(out, "\"state_bytes\": {{");
+    let mut first = true;
+    for (g, b) in &r.state_bytes {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "\"{}\": {}", esc(g), b);
+    }
+    out.push_str("},");
+    let _ = write!(out, "\"train_losses\": [");
+    for (i, l) in r.train_losses.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{}", f(*l));
+    }
+    out.push_str("],");
+    let _ = write!(out, "\"eval_losses\": [");
+    for (i, (s, l)) in r.eval_losses.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "[{}, {}]", s, f(*l));
+    }
+    out.push_str("]}");
+    out
+}
+
+fn f(x: f32) -> String {
+    if x.is_finite() { format!("{x}") } else { "null".into() }
+}
+
+fn f64s(x: f64) -> String {
+    if x.is_finite() { format!("{x}") } else { "null".into() }
+}
+
+/// Append a run to the registry directory; returns the file path.
+pub fn record(dir: impl AsRef<Path>, name: &str, r: &RunReport) -> Result<PathBuf, String> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {dir:?}: {e}"))?;
+    // timestamped-unique filename without a clock dependency: count entries
+    let n = std::fs::read_dir(dir).map_err(|e| e.to_string())?.count();
+    let path = dir.join(format!("{n:05}-{}.json", name.replace('/', "_")));
+    std::fs::write(&path, report_to_json(r, name)).map_err(|e| e.to_string())?;
+    Ok(path)
+}
+
+/// Load a recorded run back (used by tooling/tests).
+pub fn load(path: impl AsRef<Path>) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path.as_ref()).map_err(|e| e.to_string())?;
+    json::parse(&text).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RougeScores;
+
+    fn sample() -> RunReport {
+        RunReport {
+            label: "FLORA(8)".into(),
+            train_losses: vec![4.0, 3.5, 3.0],
+            eval_losses: vec![(1, 3.8), (2, 3.2)],
+            metric: Some(MetricValue::Rouge(RougeScores {
+                rouge1: 30.0,
+                rouge2: 10.5,
+                rouge_l: 25.0,
+            })),
+            state_bytes: vec![("params".into(), 1000), ("method".into(), 64)],
+            peak_state_bytes: 1100,
+            wallclock_secs: 1.25,
+            steps_per_sec: 2.4,
+        }
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let text = report_to_json(&sample(), "test-run");
+        let v = json::parse(&text).expect("emitted JSON must parse");
+        assert_eq!(v.get("name").unwrap().as_str(), Some("test-run"));
+        assert_eq!(v.get("label").unwrap().as_str(), Some("FLORA(8)"));
+        let m = v.get("metric").unwrap();
+        assert_eq!(m.get("kind").unwrap().as_str(), Some("rouge"));
+        assert_eq!(m.get("r1").unwrap().as_f64(), Some(30.0));
+        let losses = v.get("train_losses").unwrap().as_arr().unwrap();
+        assert_eq!(losses.len(), 3);
+        assert_eq!(
+            v.get("state_bytes").unwrap().get("method").unwrap().as_f64(),
+            Some(64.0)
+        );
+    }
+
+    #[test]
+    fn record_and_load() {
+        let dir = std::env::temp_dir().join("flora_runs_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let p1 = record(&dir, "a/b", &sample()).unwrap();
+        let p2 = record(&dir, "c", &sample()).unwrap();
+        assert_ne!(p1, p2);
+        let v = load(&p1).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("a/b"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        let mut r = sample();
+        r.train_losses = vec![f32::NAN];
+        let text = report_to_json(&r, "x");
+        assert!(json::parse(&text).is_ok());
+        assert!(text.contains("null"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Run reports: everything a bench needs to print one table row.
+
+use crate::metrics::RougeScores;
+
+/// The task-appropriate final quality metric.
+#[derive(Clone, Copy, Debug)]
+pub enum MetricValue {
+    Rouge(RougeScores),
+    Bleu(f64),
+    Perplexity(f64),
+    Accuracy(f64),
+}
+
+impl MetricValue {
+    /// Render like the paper's tables (R1/R2/RL, BLEU, PPL, %).
+    pub fn render(&self) -> String {
+        match self {
+            MetricValue::Rouge(r) => {
+                format!("{:.1}/{:.2}/{:.1}", r.rouge1, r.rouge2, r.rouge_l)
+            }
+            MetricValue::Bleu(b) => format!("{b:.1}"),
+            MetricValue::Perplexity(p) => format!("{p:.2}"),
+            MetricValue::Accuracy(a) => format!("{:.2}", 100.0 * a),
+        }
+    }
+
+    /// A scalar for "higher is better" comparisons in tests/benches.
+    pub fn quality(&self) -> f64 {
+        match self {
+            MetricValue::Rouge(r) => r.rouge1 + r.rouge2 + r.rouge_l,
+            MetricValue::Bleu(b) => *b,
+            MetricValue::Perplexity(p) => -p,
+            MetricValue::Accuracy(a) => *a,
+        }
+    }
+}
+
+/// Outcome of one training run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub label: String,
+    /// per-step training loss
+    pub train_losses: Vec<f32>,
+    /// (step, val loss) at each eval point
+    pub eval_losses: Vec<(usize, f32)>,
+    pub metric: Option<MetricValue>,
+    /// live state bytes by group at the end of the run
+    pub state_bytes: Vec<(String, u64)>,
+    /// peak tracked state bytes
+    pub peak_state_bytes: u64,
+    pub wallclock_secs: f64,
+    pub steps_per_sec: f64,
+}
+
+impl RunReport {
+    pub fn final_train_loss(&self) -> f32 {
+        let tail = self.train_losses.len().saturating_sub(10);
+        let window = &self.train_losses[tail..];
+        if window.is_empty() {
+            f32::NAN
+        } else {
+            window.iter().sum::<f32>() / window.len() as f32
+        }
+    }
+
+    pub fn best_eval_loss(&self) -> f32 {
+        self.eval_losses
+            .iter()
+            .map(|&(_, l)| l)
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn total_state_bytes(&self) -> u64 {
+        self.state_bytes.iter().map(|(_, b)| b).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_rendering() {
+        let m = MetricValue::Rouge(RougeScores {
+            rouge1: 33.4,
+            rouge2: 11.42,
+            rouge_l: 26.4,
+        });
+        assert_eq!(m.render(), "33.4/11.42/26.4");
+        assert_eq!(MetricValue::Bleu(17.94).render(), "17.9");
+        assert_eq!(MetricValue::Perplexity(34.641).render(), "34.64");
+        assert_eq!(MetricValue::Accuracy(0.9215).render(), "92.15");
+    }
+
+    #[test]
+    fn quality_ordering() {
+        assert!(
+            MetricValue::Perplexity(20.0).quality()
+                > MetricValue::Perplexity(30.0).quality()
+        );
+        assert!(MetricValue::Bleu(25.0).quality() > MetricValue::Bleu(10.0).quality());
+    }
+
+    #[test]
+    fn report_summaries() {
+        let r = RunReport {
+            label: "x".into(),
+            train_losses: (0..20).map(|i| 5.0 - 0.1 * i as f32).collect(),
+            eval_losses: vec![(0, 4.0), (10, 3.0), (20, 3.5)],
+            metric: None,
+            state_bytes: vec![("params".into(), 100), ("opt".into(), 50)],
+            peak_state_bytes: 160,
+            wallclock_secs: 1.0,
+            steps_per_sec: 20.0,
+        };
+        assert_eq!(r.best_eval_loss(), 3.0);
+        assert_eq!(r.total_state_bytes(), 150);
+        assert!(r.final_train_loss() < 4.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Learning-rate schedules.
+//!
+//! The paper deliberately trains with a constant LR ("we do not apply
+//! learning rate schedules ... to rule out the influence of these
+//! techniques", §3.1) — `Constant` is therefore what every bench uses.
+//! Warmup/cosine/step are provided as first-class options for downstream
+//! users (and exercised by unit tests), selectable via `Schedule::parse`.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Constant { lr: f32 },
+    /// linear warmup to `lr` over `warmup` steps, then constant
+    Warmup { lr: f32, warmup: usize },
+    /// linear warmup then cosine decay to `min_lr` at `total` steps
+    WarmupCosine { lr: f32, min_lr: f32, warmup: usize, total: usize },
+    /// multiply by `gamma` every `every` steps
+    StepDecay { lr: f32, gamma: f32, every: usize },
+}
+
+impl Schedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::Warmup { lr, warmup } => {
+                if warmup == 0 || step >= warmup {
+                    lr
+                } else {
+                    lr * (step + 1) as f32 / warmup as f32
+                }
+            }
+            Schedule::WarmupCosine { lr, min_lr, warmup, total } => {
+                if step < warmup {
+                    return lr * (step + 1) as f32 / warmup.max(1) as f32;
+                }
+                let t = (step - warmup) as f32
+                    / (total.saturating_sub(warmup)).max(1) as f32;
+                let t = t.clamp(0.0, 1.0);
+                min_lr
+                    + 0.5 * (lr - min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+            Schedule::StepDecay { lr, gamma, every } => {
+                lr * gamma.powi((step / every.max(1)) as i32)
+            }
+        }
+    }
+
+    /// "constant", "warmup:100", "cosine:100:10000", "step:0.5:1000"
+    pub fn parse(spec: &str, lr: f32) -> Result<Schedule, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        match parts[0] {
+            "constant" => Ok(Schedule::Constant { lr }),
+            "warmup" => {
+                let w = parts
+                    .get(1)
+                    .and_then(|s| s.parse().ok())
+                    .ok_or("warmup:N")?;
+                Ok(Schedule::Warmup { lr, warmup: w })
+            }
+            "cosine" => {
+                let w = parts.get(1).and_then(|s| s.parse().ok()).ok_or("cosine:W:T")?;
+                let t = parts.get(2).and_then(|s| s.parse().ok()).ok_or("cosine:W:T")?;
+                Ok(Schedule::WarmupCosine { lr, min_lr: lr * 0.01, warmup: w, total: t })
+            }
+            "step" => {
+                let g = parts.get(1).and_then(|s| s.parse().ok()).ok_or("step:G:N")?;
+                let n = parts.get(2).and_then(|s| s.parse().ok()).ok_or("step:G:N")?;
+                Ok(Schedule::StepDecay { lr, gamma: g, every: n })
+            }
+            other => Err(format!("unknown schedule {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 0.05 };
+        assert_eq!(s.at(0), 0.05);
+        assert_eq!(s.at(10_000), 0.05);
+    }
+
+    #[test]
+    fn warmup_ramps_then_flat() {
+        let s = Schedule::Warmup { lr: 1.0, warmup: 10 };
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert_eq!(s.at(10), 1.0);
+        assert_eq!(s.at(99), 1.0);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = Schedule::WarmupCosine { lr: 1.0, min_lr: 0.0, warmup: 0, total: 100 };
+        assert!((s.at(0) - 1.0).abs() < 1e-3);
+        assert!((s.at(50) - 0.5).abs() < 0.02);
+        assert!(s.at(100) < 0.01);
+        assert!(s.at(500) < 0.01); // clamped past total
+    }
+
+    #[test]
+    fn cosine_monotone_after_warmup() {
+        let s = Schedule::WarmupCosine { lr: 1.0, min_lr: 0.0, warmup: 5, total: 50 };
+        let mut last = f32::INFINITY;
+        for t in 5..50 {
+            let v = s.at(t);
+            assert!(v <= last + 1e-6);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn step_decay_halves() {
+        let s = Schedule::StepDecay { lr: 0.8, gamma: 0.5, every: 100 };
+        assert_eq!(s.at(99), 0.8);
+        assert_eq!(s.at(100), 0.4);
+        assert_eq!(s.at(250), 0.2);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(
+            Schedule::parse("constant", 0.1).unwrap(),
+            Schedule::Constant { lr: 0.1 }
+        );
+        assert!(matches!(
+            Schedule::parse("warmup:50", 0.1).unwrap(),
+            Schedule::Warmup { warmup: 50, .. }
+        ));
+        assert!(matches!(
+            Schedule::parse("cosine:10:100", 0.1).unwrap(),
+            Schedule::WarmupCosine { warmup: 10, total: 100, .. }
+        ));
+        assert!(Schedule::parse("exponential", 0.1).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Seed lifecycles — the coordinator-side half of FLORA's "store the seed,
+//! not the matrix" design.
+//!
+//! * `AccumSeeds` (Algorithm 1): one seed per accumulation cycle; all τ
+//!   micro-steps AND the decompression share it; a new cycle resamples.
+//! * `MomentumSeeds` (Algorithm 2): a current/next seed pair; every κ steps
+//!   the resample flag is raised, the XLA step transfers the momentum into
+//!   the next subspace, and the pair rotates.
+//!
+//! Pure logic — no XLA — so it's exhaustively testable.
+
+use crate::util::rng::derive_seed;
+
+/// Algorithm-1 seed schedule.
+#[derive(Clone, Debug)]
+pub struct AccumSeeds {
+    base: u64,
+    cycle: u64,
+}
+
+impl AccumSeeds {
+    pub fn new(base: u64) -> Self {
+        Self { base, cycle: 0 }
+    }
+
+    /// Seed for the current cycle (u32, the ABI's scalar width).
+    pub fn current(&self) -> u32 {
+        derive_seed(self.base, self.cycle) as u32
+    }
+
+    /// End the cycle: the caller has decompressed + updated + zeroed the
+    /// accumulator; the next cycle gets a fresh projection.
+    pub fn advance(&mut self) {
+        self.cycle += 1;
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+}
+
+/// Algorithm-2 seed schedule.
+#[derive(Clone, Debug)]
+pub struct MomentumSeeds {
+    base: u64,
+    kappa: usize,
+    interval: u64,
+    step: usize,
+}
+
+/// What the fused momentum step must be told this step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MomentumTick {
+    pub seed_cur: u32,
+    pub seed_next: u32,
+    /// 1.0 exactly on resample steps (the XLA graph blends by this flag)
+    pub resample: f32,
+}
+
+impl MomentumSeeds {
+    pub fn new(base: u64, kappa: usize) -> Self {
+        assert!(kappa >= 1, "kappa must be >= 1");
+        Self { base, kappa, interval: 0, step: 0 }
+    }
+
+    fn seed_of(&self, interval: u64) -> u32 {
+        derive_seed(self.base.wrapping_add(0xA02), interval) as u32
+    }
+
+    /// Produce this step's seeds/flag and advance the schedule.
+    pub fn tick(&mut self) -> MomentumTick {
+        // resample at the START of each interval after the first
+        let resample = self.step > 0 && self.step % self.kappa == 0;
+        if resample {
+            self.interval += 1;
+        }
+        let t = MomentumTick {
+            // on a resample step, seed_cur is the OLD subspace (needed for
+            // the transfer) and seed_next the new active one
+            seed_cur: self.seed_of(if resample { self.interval - 1 } else { self.interval }),
+            seed_next: self.seed_of(if resample { self.interval } else { self.interval + 1 }),
+            resample: if resample { 1.0 } else { 0.0 },
+        };
+        self.step += 1;
+        t
+    }
+
+    pub fn step(&self) -> usize {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accum_seed_constant_within_cycle_changes_across() {
+        let mut s = AccumSeeds::new(42);
+        let a = s.current();
+        let b = s.current();
+        assert_eq!(a, b);
+        s.advance();
+        assert_ne!(s.current(), a);
+        assert_eq!(s.cycle(), 1);
+    }
+
+    #[test]
+    fn accum_seeds_deterministic() {
+        let mut x = AccumSeeds::new(7);
+        let mut y = AccumSeeds::new(7);
+        for _ in 0..5 {
+            assert_eq!(x.current(), y.current());
+            x.advance();
+            y.advance();
+        }
+    }
+
+    #[test]
+    fn momentum_resamples_exactly_every_kappa() {
+        let mut s = MomentumSeeds::new(0, 3);
+        let flags: Vec<f32> = (0..10).map(|_| s.tick().resample).collect();
+        assert_eq!(flags, vec![0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn momentum_seed_continuity_across_resample() {
+        // the seed that was `next` before a resample must be `cur` after:
+        // that's what makes the transfer target the right subspace.
+        let mut s = MomentumSeeds::new(5, 2);
+        let t0 = s.tick(); // step 0, no resample
+        let t1 = s.tick(); // step 1, no resample
+        assert_eq!(t0.seed_cur, t1.seed_cur);
+        let t2 = s.tick(); // step 2: resample
+        assert_eq!(t2.resample, 1.0);
+        assert_eq!(t2.seed_cur, t1.seed_cur, "transfer FROM the old subspace");
+        assert_eq!(t2.seed_next, t1.seed_next, "transfer INTO the announced next");
+        let t3 = s.tick();
+        assert_eq!(t3.resample, 0.0);
+        assert_eq!(t3.seed_cur, t2.seed_next, "new interval's active seed");
+    }
+
+    #[test]
+    fn kappa_one_resamples_every_step_after_first() {
+        let mut s = MomentumSeeds::new(1, 1);
+        assert_eq!(s.tick().resample, 0.0);
+        for _ in 0..5 {
+            assert_eq!(s.tick().resample, 1.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn kappa_zero_panics() {
+        MomentumSeeds::new(0, 0);
+    }
+}

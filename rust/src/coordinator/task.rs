@@ -1,0 +1,135 @@
+//! Task wrapper: binds a synthetic workload (data/) to the batch tensors an
+//! executable expects, and knows which generation metric scores it.
+
+use std::collections::BTreeMap;
+
+use xla::Literal;
+
+use crate::config::TaskKind;
+use crate::data::images::ImageTask;
+use crate::data::{corpus::LmTask, seq2seq::{MtTask, SumTask}, GenExample, LmBatch};
+use crate::runtime::{literal_f32, literal_i32, ModelInfo};
+
+pub enum Task {
+    Sum(SumTask),
+    Mt(MtTask),
+    Lm(LmTask),
+    Vit { task: ImageTask, side: usize, channels: usize, seed: u64 },
+}
+
+/// Split ids for deterministic data streams.
+pub const TRAIN: u64 = 0;
+pub const VAL: u64 = 1;
+pub const TEST: u64 = 2;
+
+impl Task {
+    /// Build the right task for (kind, model) from manifest model info.
+    pub fn new(kind: TaskKind, model: &ModelInfo, seed: u64) -> Result<Self, String> {
+        match kind {
+            TaskKind::Sum | TaskKind::Mt | TaskKind::Lm => {
+                let vocab = model.get("vocab").ok_or("model missing vocab")?;
+                let seq = model.get("seq_len").ok_or("model missing seq_len")?;
+                Ok(match kind {
+                    TaskKind::Sum => Task::Sum(SumTask::new(vocab, seq, seed)),
+                    TaskKind::Mt => Task::Mt(MtTask::new(vocab, seq, seed)),
+                    _ => Task::Lm(LmTask::new(vocab, seq, seed)),
+                })
+            }
+            TaskKind::Vit => {
+                let side = model.get("image_size").ok_or("model missing image_size")?;
+                let channels = model.get("channels").unwrap_or(3);
+                let classes = model.get("n_classes").ok_or("model missing n_classes")?;
+                Ok(Task::Vit {
+                    task: ImageTask::cifar_like(classes, side, channels, 0.25, seed),
+                    side,
+                    channels,
+                    seed,
+                })
+            }
+        }
+    }
+
+    /// Next training batch as named literals keyed by manifest input names.
+    pub fn next_batch(
+        &self,
+        batch: usize,
+        split: u64,
+        cursor: &mut u64,
+    ) -> Result<BTreeMap<String, Literal>, String> {
+        let mut out = BTreeMap::new();
+        match self {
+            Task::Sum(t) => {
+                let mut b = LmBatch::zeros(batch, t.seq_len);
+                t.fill_batch(&mut b, split, cursor);
+                insert_lm(&mut out, &b)?;
+            }
+            Task::Mt(t) => {
+                let mut b = LmBatch::zeros(batch, t.seq_len);
+                t.fill_batch(&mut b, split, cursor);
+                insert_lm(&mut out, &b)?;
+            }
+            Task::Lm(t) => {
+                let mut b = LmBatch::zeros(batch, t.seq_len);
+                t.fill_batch(&mut b, split, cursor);
+                insert_lm(&mut out, &b)?;
+            }
+            Task::Vit { task, side, channels, seed } => {
+                let (images, labels) = task.fill_flat(batch, split, cursor, *seed);
+                out.insert(
+                    "batch/images".into(),
+                    literal_f32(&[batch, *side, *side, *channels], &images)?,
+                );
+                out.insert("batch/labels".into(), literal_i32(&[batch], &labels)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Generation-eval examples (sequence tasks only).
+    pub fn gen_examples(&self, split: u64, n: usize) -> Vec<GenExample> {
+        match self {
+            Task::Sum(t) => t.gen_examples(split, n),
+            Task::Mt(t) => t.gen_examples(split, n),
+            _ => Vec::new(),
+        }
+    }
+
+    /// (prompt_len, target_len) for greedy decoding.
+    pub fn gen_lens(&self) -> Option<(usize, usize)> {
+        match self {
+            Task::Sum(t) => Some((t.prompt_len(), t.target_len())),
+            Task::Mt(t) => Some((t.prompt_len(), t.target_len())),
+            _ => None,
+        }
+    }
+
+    pub fn seq_len(&self) -> Option<usize> {
+        match self {
+            Task::Sum(t) => Some(t.seq_len),
+            Task::Mt(t) => Some(t.seq_len),
+            Task::Lm(t) => Some(t.seq_len),
+            Task::Vit { .. } => None,
+        }
+    }
+
+    pub fn kind(&self) -> TaskKind {
+        match self {
+            Task::Sum(_) => TaskKind::Sum,
+            Task::Mt(_) => TaskKind::Mt,
+            Task::Lm(_) => TaskKind::Lm,
+            Task::Vit { .. } => TaskKind::Vit,
+        }
+    }
+}
+
+fn insert_lm(out: &mut BTreeMap<String, Literal>, b: &LmBatch) -> Result<(), String> {
+    out.insert(
+        "batch/tokens".into(),
+        literal_i32(&[b.batch, b.seq_len], &b.tokens)?,
+    );
+    out.insert(
+        "batch/mask".into(),
+        literal_f32(&[b.batch, b.seq_len], &b.mask)?,
+    );
+    Ok(())
+}

@@ -1,0 +1,645 @@
+//! The training orchestrator: drives the AOT executables through the
+//! paper's state machines.
+//!
+//! Modes (derived from config — see `Mode::of`):
+//!   * `Plain`        — method None: fused grad+optimizer step per batch.
+//!   * `Accumulation` — Algorithm 1: τ micro-steps share one projection
+//!     seed, then decompress + base-optimizer update, zero the accumulator,
+//!     resample (AccumSeeds).
+//!   * `Momentum`     — Algorithm 2: fused step each batch; the κ-interval
+//!     seed rotation + transfer flag comes from MomentumSeeds.
+//!   * `Galore`       — GaLore baseline: fused Adam-in-subspace step with a
+//!     κ-interval projection refresh.
+//!   * `VitStep`      — Table-5 image runs (plain or flora-momentum).
+//!
+//! The trainer never interprets tensor *contents* — it moves named literal
+//! groups between executables according to the manifest ABI.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use xla::Literal;
+
+use super::method::MethodSpec;
+use super::report::{MetricValue, RunReport};
+use super::seeds::{AccumSeeds, MomentumSeeds};
+use super::task::{Task, TEST, TRAIN, VAL};
+use crate::config::{TaskKind, TrainConfig};
+use crate::metrics;
+use crate::runtime::{
+    literal_i32, scalar_f32, scalar_i32, scalar_u32, Executable, Runtime,
+    StateStore, TensorSpec,
+};
+use crate::util::rng::derive_seed;
+use crate::util::timing::Timer;
+use crate::{debug, info};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    Plain,
+    Accumulation,
+    Momentum,
+    Galore,
+    VitStep,
+}
+
+impl Mode {
+    fn of(cfg: &TrainConfig) -> Mode {
+        if cfg.task == TaskKind::Vit {
+            return Mode::VitStep;
+        }
+        match cfg.method {
+            MethodSpec::Galore { .. } => Mode::Galore,
+            MethodSpec::None => Mode::Plain,
+            _ => {
+                if cfg.tau > 1 {
+                    Mode::Accumulation
+                } else {
+                    Mode::Momentum
+                }
+            }
+        }
+    }
+}
+
+/// Which state group an ABI tensor name belongs to.
+fn group_of(name: &str) -> &'static str {
+    if name == "loss" || name == "tokens" || name == "preds" {
+        "out"
+    } else if name.starts_with("params/") || name.starts_with("base/") {
+        "params"
+    } else if name.starts_with("train/") {
+        "train"
+    } else if name.starts_with("opt/") {
+        "opt"
+    } else if name.starts_with("batch/") {
+        "batch"
+    } else if name.contains('/') {
+        "method" // acc/, mom/, proj/, m/, v/ — method-owned state
+    } else {
+        "scalar" // seed, lr, step, tau, resample, refresh, prompt_len, ...
+    }
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    /// shared so a bench harness can reuse one PJRT client + compile cache
+    /// across its whole run grid (EXPERIMENTS.md §Perf: ~15s saved per run)
+    pub rt: Rc<RefCell<Runtime>>,
+    pub task: Task,
+    state: StateStore,
+    mode: Mode,
+    cursor: u64,
+    step: usize,
+    last_loss: f32,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self, String> {
+        let rt = Rc::new(RefCell::new(Runtime::new(artifacts_dir)?));
+        Self::with_runtime(cfg, rt)
+    }
+
+    /// Build a trainer over an existing runtime, sharing its PJRT client
+    /// and executable cache (the bench harness runs 10+ cells per table;
+    /// recompiling per cell would dominate wallclock).
+    pub fn with_runtime(
+        cfg: TrainConfig,
+        rt: Rc<RefCell<Runtime>>,
+    ) -> Result<Self, String> {
+        let (model, ledger) = {
+            let rt = rt.borrow();
+            (rt.manifest.model(&cfg.model)?.clone(), rt.ledger.clone())
+        };
+        let task = Task::new(cfg.task, &model, derive_seed(cfg.seed, 0xDA7A))?;
+        let mode = Mode::of(&cfg);
+        // fail fast if the catalog lacks this combination
+        let _ = Self::main_exe_name(&cfg, mode)?;
+        Ok(Self {
+            cfg,
+            rt,
+            task,
+            state: StateStore::new(Some(ledger)),
+            mode,
+            cursor: 0,
+            step: 0,
+            last_loss: f32::NAN,
+        })
+    }
+
+    fn main_exe_name(cfg: &TrainConfig, mode: Mode) -> Result<String, String> {
+        let m = &cfg.model;
+        let opt = &cfg.optimizer;
+        let missing = |what: &str| {
+            format!("method {:?} has no {what} executable", cfg.method)
+        };
+        Ok(match mode {
+            Mode::Plain => MethodSpec::plain_step_exe(m, opt),
+            Mode::Accumulation => {
+                cfg.method.micro_exe(m).ok_or_else(|| missing("micro"))?
+            }
+            Mode::Momentum => cfg
+                .method
+                .momentum_exe(m, opt)
+                .ok_or_else(|| missing("momentum"))?,
+            Mode::Galore => {
+                cfg.method.galore_exe(m).ok_or_else(|| missing("galore"))?
+            }
+            Mode::VitStep => cfg.method.vit_step_exe(m, opt),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // initialization
+    // ------------------------------------------------------------------
+
+    /// Initialize params + all state groups declared by the mode's execs.
+    pub fn init(&mut self) -> Result<(), String> {
+        // params from the seeded init executable
+        let init = self.rt.borrow_mut().load(&self.cfg.method.init_exe(&self.cfg.model))?;
+        let outs = init.run(&[scalar_u32(self.cfg.seed as u32)])?;
+        self.state.put("params", init.info.outputs.clone(), outs);
+
+        if let Some(name) = self.cfg.method.lora_init_exe(&self.cfg.model) {
+            let lora_init = self.rt.borrow_mut().load(&name)?;
+            let mut inputs = self.state.collect(&["params"])?;
+            inputs.push(scalar_u32(derive_seed(self.cfg.seed, 1) as u32));
+            let outs = lora_init.run(&inputs)?;
+            self.state.put("train", lora_init.info.outputs.clone(), outs);
+        }
+
+        // opt + method-state zeros, shapes from the mode's executables
+        let mut opt_specs: Vec<TensorSpec> = Vec::new();
+        let mut method_specs: Vec<TensorSpec> = Vec::new();
+        let mut exes = vec![Self::main_exe_name(&self.cfg, self.mode)?];
+        if self.mode == Mode::Accumulation {
+            if let Some(u) = self
+                .cfg
+                .method
+                .update_exe(&self.cfg.model, &self.cfg.optimizer)
+            {
+                exes.push(u);
+            }
+        }
+        for name in exes {
+            let e = self.rt.borrow_mut().load(&name)?;
+            for t in &e.info.inputs {
+                match group_of(&t.name) {
+                    "opt" if !opt_specs.iter().any(|s| s.name == t.name) => {
+                        opt_specs.push(t.clone())
+                    }
+                    "method"
+                        if !method_specs.iter().any(|s| s.name == t.name) =>
+                    {
+                        method_specs.push(t.clone())
+                    }
+                    _ => {}
+                }
+            }
+        }
+        if !opt_specs.is_empty() {
+            self.state.put_zeros("opt", opt_specs)?;
+        }
+        if !method_specs.is_empty() {
+            self.state.put_zeros("method", method_specs)?;
+        }
+        debug!(
+            "state initialized: {} bytes total",
+            self.state.total_bytes()
+        );
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // ABI plumbing
+    // ------------------------------------------------------------------
+
+    /// Assemble the input literal list for an executable from state groups,
+    /// a batch map and a scalar map, in manifest order.
+    fn assemble(
+        &self,
+        exe: &Executable,
+        batch: &BTreeMap<String, Literal>,
+        scalars: &BTreeMap<&'static str, Literal>,
+    ) -> Result<Vec<Literal>, String> {
+        let mut idx: BTreeMap<&str, usize> = BTreeMap::new();
+        let mut out = Vec::with_capacity(exe.info.inputs.len());
+        for t in &exe.info.inputs {
+            let g = group_of(&t.name);
+            let lit = match g {
+                "params" | "train" | "opt" | "method" => {
+                    let group = self.state.get(g)?;
+                    let i = idx.entry(g).or_insert(0);
+                    let l = group.values.get(*i).ok_or_else(|| {
+                        format!("{}: group {g} exhausted at {}", exe.info.name, t.name)
+                    })?;
+                    *i += 1;
+                    // cross-check the ABI ordering by tail name
+                    let tail = t.name.splitn(2, '/').nth(1).unwrap_or("");
+                    let spec_tail = group.specs[*i - 1]
+                        .name
+                        .splitn(2, '/')
+                        .nth(1)
+                        .unwrap_or("");
+                    if g != "method" && tail != spec_tail {
+                        return Err(format!(
+                            "{}: ABI order mismatch in group {g}: exec wants \
+                             {tail:?}, state has {spec_tail:?}",
+                            exe.info.name
+                        ));
+                    }
+                    l.clone()
+                }
+                "batch" => batch
+                    .get(&t.name)
+                    .ok_or_else(|| {
+                        format!("{}: batch missing {}", exe.info.name, t.name)
+                    })?
+                    .clone(),
+                "scalar" => scalars
+                    .get(t.name.as_str())
+                    .ok_or_else(|| {
+                        format!("{}: scalar {} not provided", exe.info.name, t.name)
+                    })?
+                    .clone(),
+                other => {
+                    return Err(format!(
+                        "{}: unroutable input {} (group {other})",
+                        exe.info.name, t.name
+                    ))
+                }
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// Run an executable and route outputs back into state groups.
+    /// Returns the loss if the executable produces one.
+    fn run_and_absorb(
+        &mut self,
+        exe: &Executable,
+        inputs: &[Literal],
+    ) -> Result<Option<f32>, String> {
+        let outs = exe.run(inputs)?;
+        let mut loss = None;
+        let mut groups: BTreeMap<&'static str, Vec<Literal>> = BTreeMap::new();
+        for (t, lit) in exe.info.outputs.iter().zip(outs.into_iter()) {
+            match (group_of(&t.name), t.name.as_str()) {
+                ("out", "loss") => {
+                    loss = Some(
+                        lit.get_first_element::<f32>()
+                            .map_err(|e| format!("loss read: {e:?}"))?,
+                    );
+                }
+                ("out", _) => {} // tokens/preds handled by dedicated paths
+                (g, _) => groups.entry(g).or_default().push(lit),
+            }
+        }
+        for (g, values) in groups {
+            self.state.replace_values(g, values)?;
+        }
+        Ok(loss)
+    }
+
+    fn base_scalars(&self, lr: f32, step: usize) -> BTreeMap<&'static str, Literal> {
+        let mut m = BTreeMap::new();
+        m.insert("lr", scalar_f32(lr));
+        m.insert("step", scalar_f32(step as f32));
+        m
+    }
+
+    // ------------------------------------------------------------------
+    // training
+    // ------------------------------------------------------------------
+
+    /// Run one optimizer step (which is τ micro-batches in accumulation
+    /// mode). Returns the training loss of the last batch consumed.
+    pub fn train_step(
+        &mut self,
+        accum_seeds: &mut AccumSeeds,
+        mom_seeds: &mut MomentumSeeds,
+    ) -> Result<f32, String> {
+        let lr = self.cfg.lr;
+        let step = self.step;
+        let mut loss = f32::NAN;
+        match self.mode {
+            Mode::Plain => {
+                let exe =
+                    self.rt.borrow_mut().load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
+                let batch = self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
+                let scalars = self.base_scalars(lr, step);
+                let inputs = self.assemble(&exe, &batch, &scalars)?;
+                loss = self
+                    .run_and_absorb(&exe, &inputs)?
+                    .ok_or("plain step produced no loss")?;
+            }
+            Mode::Accumulation => {
+                let micro =
+                    self.rt.borrow_mut().load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
+                let seed = accum_seeds.current();
+                for _ in 0..self.cfg.tau {
+                    let batch =
+                        self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
+                    let mut scalars = BTreeMap::new();
+                    scalars.insert("seed", scalar_u32(seed));
+                    let inputs = self.assemble(&micro, &batch, &scalars)?;
+                    loss = self
+                        .run_and_absorb(&micro, &inputs)?
+                        .ok_or("micro step produced no loss")?;
+                }
+                let update_name = self
+                    .cfg
+                    .method
+                    .update_exe(&self.cfg.model, &self.cfg.optimizer)
+                    .ok_or("accumulation mode without update exe")?;
+                let update = self.rt.borrow_mut().load(&update_name)?;
+                let mut scalars = self.base_scalars(lr, step);
+                scalars.insert("seed", scalar_u32(seed));
+                scalars.insert("tau", scalar_f32(self.cfg.tau as f32));
+                let inputs = self.assemble(&update, &BTreeMap::new(), &scalars)?;
+                self.run_and_absorb(&update, &inputs)?;
+                // end of cycle: zero the accumulator, resample (Alg. 1)
+                self.state.zero("method")?;
+                accum_seeds.advance();
+            }
+            Mode::Momentum | Mode::VitStep => {
+                let exe =
+                    self.rt.borrow_mut().load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
+                let batch = self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
+                let mut scalars = self.base_scalars(lr, step);
+                // flora/naive momentum steps consume the seed trio; plain
+                // vit-adam steps don't — provide only what the ABI wants
+                let needs_seeds = exe
+                    .info
+                    .inputs
+                    .iter()
+                    .any(|t| t.name == "seed_cur");
+                if needs_seeds {
+                    let tick = mom_seeds.tick();
+                    scalars.insert("seed_cur", scalar_u32(tick.seed_cur));
+                    scalars.insert("seed_next", scalar_u32(tick.seed_next));
+                    scalars.insert("resample", scalar_f32(tick.resample));
+                }
+                let inputs = self.assemble(&exe, &batch, &scalars)?;
+                loss = self
+                    .run_and_absorb(&exe, &inputs)?
+                    .ok_or("momentum step produced no loss")?;
+            }
+            Mode::Galore => {
+                let exe =
+                    self.rt.borrow_mut().load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
+                let batch = self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
+                let refresh = step % self.cfg.kappa == 0;
+                let interval = (step / self.cfg.kappa) as u64;
+                let mut scalars = self.base_scalars(lr, step);
+                scalars.insert(
+                    "seed",
+                    scalar_u32(derive_seed(self.cfg.seed, interval) as u32),
+                );
+                scalars.insert("refresh", scalar_f32(if refresh { 1.0 } else { 0.0 }));
+                let inputs = self.assemble(&exe, &batch, &scalars)?;
+                loss = self
+                    .run_and_absorb(&exe, &inputs)?
+                    .ok_or("galore step produced no loss")?;
+            }
+        }
+        self.step += 1;
+        self.last_loss = loss;
+        Ok(loss)
+    }
+
+    // ------------------------------------------------------------------
+    // evaluation
+    // ------------------------------------------------------------------
+
+    /// Mean eval loss over `n_batches` from a data split.
+    pub fn eval_loss(&mut self, split: u64, n_batches: usize) -> Result<f32, String> {
+        let exe = self.rt.borrow_mut().load(&self.cfg.method.eval_exe(&self.cfg.model))?;
+        let mut cursor = 0u64;
+        let mut total = 0.0f32;
+        for _ in 0..n_batches {
+            let batch = self.task.next_batch(self.cfg.batch, split, &mut cursor)?;
+            let inputs = self.assemble(&exe, &batch, &BTreeMap::new())?;
+            let outs = exe.run(&inputs)?;
+            total += outs[0]
+                .get_first_element::<f32>()
+                .map_err(|e| format!("eval loss: {e:?}"))?;
+        }
+        Ok(total / n_batches as f32)
+    }
+
+    /// Greedy-decode generation metric on the test split (ROUGE or BLEU for
+    /// the sequence tasks, accuracy for ViT, perplexity for LM).
+    pub fn eval_metric(&mut self, n_samples: usize) -> Result<MetricValue, String> {
+        match self.task.kind() {
+            TaskKind::Lm => {
+                let loss = self.eval_loss(TEST, (n_samples / self.cfg.batch).max(1))?;
+                Ok(MetricValue::Perplexity(metrics::perplexity(loss as f64)))
+            }
+            TaskKind::Vit => self.eval_vit_accuracy(n_samples),
+            TaskKind::Sum | TaskKind::Mt => self.eval_generation(n_samples),
+        }
+    }
+
+    fn eval_vit_accuracy(&mut self, n_samples: usize) -> Result<MetricValue, String> {
+        let exe = self.rt.borrow_mut().load(&self.cfg.method.eval_exe(&self.cfg.model))?;
+        let mut cursor = 0u64;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for _ in 0..(n_samples / self.cfg.batch).max(1) {
+            let batch = self.task.next_batch(self.cfg.batch, TEST, &mut cursor)?;
+            let labels = batch
+                .get("batch/labels")
+                .unwrap()
+                .to_vec::<i32>()
+                .map_err(|e| format!("labels: {e:?}"))?;
+            let inputs = self.assemble(&exe, &batch, &BTreeMap::new())?;
+            let outs = exe.run(&inputs)?;
+            let preds = outs[1]
+                .to_vec::<i32>()
+                .map_err(|e| format!("preds: {e:?}"))?;
+            hits += preds
+                .iter()
+                .zip(labels.iter())
+                .filter(|(p, l)| p == l)
+                .count();
+            total += labels.len();
+        }
+        Ok(MetricValue::Accuracy(hits as f64 / total.max(1) as f64))
+    }
+
+    fn eval_generation(&mut self, n_samples: usize) -> Result<MetricValue, String> {
+        let exe = self.rt.borrow_mut().load(&self.cfg.method.greedy_exe(&self.cfg.model))?;
+        let (prompt_len, target_len) = self
+            .task
+            .gen_lens()
+            .ok_or("task has no generation evaluation")?;
+        let seq_len = self.task.seq_len().ok_or("task has no seq_len")?;
+        // batch size is baked into the greedy executable's token shape
+        let bdim = exe
+            .info
+            .inputs
+            .iter()
+            .find(|t| t.name == "batch/tokens")
+            .ok_or("greedy exe missing batch/tokens")?
+            .shape[0];
+        let examples = self.task.gen_examples(TEST, n_samples);
+        let mut pairs: Vec<(Vec<i32>, Vec<i32>)> = Vec::new();
+        for chunk in examples.chunks(bdim) {
+            let mut toks = vec![0i32; bdim * seq_len];
+            for (b, ex) in chunk.iter().enumerate() {
+                for (i, &t) in ex.prompt.iter().enumerate() {
+                    toks[b * seq_len + i] = t;
+                }
+            }
+            let mut scalars: BTreeMap<&'static str, Literal> = BTreeMap::new();
+            scalars.insert("prompt_len", scalar_i32(prompt_len as i32));
+            let mut batch = BTreeMap::new();
+            batch.insert(
+                "batch/tokens".to_string(),
+                literal_i32(&[bdim, seq_len], &toks)?,
+            );
+            let inputs = self.assemble(&exe, &batch, &scalars)?;
+            let outs = exe.run(&inputs)?;
+            let decoded = outs[0]
+                .to_vec::<i32>()
+                .map_err(|e| format!("greedy tokens: {e:?}"))?;
+            for (b, ex) in chunk.iter().enumerate() {
+                let row = &decoded[b * seq_len..(b + 1) * seq_len];
+                let hyp: Vec<i32> = row
+                    [prompt_len..(prompt_len + target_len).min(seq_len)]
+                    .to_vec();
+                pairs.push((hyp, ex.reference.clone()));
+            }
+        }
+        Ok(match self.task.kind() {
+            TaskKind::Sum => MetricValue::Rouge(metrics::rouge_corpus(&pairs)),
+            TaskKind::Mt => MetricValue::Bleu(metrics::bleu_corpus(&pairs).score),
+            _ => unreachable!(),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // full run
+    // ------------------------------------------------------------------
+
+    /// Initialize, train for cfg.steps optimizer steps with periodic eval,
+    /// score the final metric, and report.
+    pub fn run(&mut self) -> Result<RunReport, String> {
+        let timer = Timer::start();
+        self.init()?;
+        let mut accum = AccumSeeds::new(derive_seed(self.cfg.seed, 0xACC));
+        let mut mom = MomentumSeeds::new(derive_seed(self.cfg.seed, 0xE3A), self.cfg.kappa);
+        let mut train_losses = Vec::with_capacity(self.cfg.steps);
+        let mut eval_losses = Vec::new();
+        for s in 0..self.cfg.steps {
+            let loss = self.train_step(&mut accum, &mut mom)?;
+            train_losses.push(loss);
+            if self.cfg.eval_every > 0
+                && (s + 1) % self.cfg.eval_every == 0
+            {
+                let el = self.eval_loss(VAL, 4)?;
+                eval_losses.push((s + 1, el));
+                info!(
+                    "[{}] step {}/{} train_loss={loss:.4} val_loss={el:.4}",
+                    self.cfg.method.label(),
+                    s + 1,
+                    self.cfg.steps
+                );
+            }
+        }
+        let metric = Some(self.eval_metric(self.cfg.eval_samples)?);
+        let wallclock = timer.elapsed_secs();
+        Ok(RunReport {
+            label: self.cfg.method.label(),
+            steps_per_sec: self.cfg.steps as f64 / wallclock.max(1e-9),
+            train_losses,
+            eval_losses,
+            metric,
+            state_bytes: ["params", "train", "opt", "method"]
+                .iter()
+                .map(|g| (g.to_string(), self.state.group_bytes(g)))
+                .collect(),
+            peak_state_bytes: self.rt.borrow().ledger.peak(),
+            wallclock_secs: wallclock,
+        })
+    }
+
+    /// Persist the full training state (params/opt/method groups + step and
+    /// data-cursor counters) to `path` in the checkpoint format.
+    pub fn save_checkpoint(&self, path: &str) -> Result<(), String> {
+        let groups = self
+            .state
+            .snapshot()?
+            .into_iter()
+            .map(|(name, tensors)| super::checkpoint::GroupSnapshot { name, tensors })
+            .collect();
+        super::checkpoint::Checkpoint {
+            step: self.step as u64,
+            cursor: self.cursor,
+            groups,
+        }
+        .save(path)
+    }
+
+    /// Restore training state saved by `save_checkpoint`. Must be called
+    /// instead of (not after) `init`.
+    pub fn resume_from(&mut self, path: &str) -> Result<(), String> {
+        let ck = super::checkpoint::Checkpoint::load(path)?;
+        for (name, specs, lits) in ck.to_literals()? {
+            self.state.put(&name, specs, lits);
+        }
+        self.step = ck.step as usize;
+        self.cursor = ck.cursor;
+        Ok(())
+    }
+
+    pub fn state(&self) -> &StateStore {
+        &self.state
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_routing() {
+        assert_eq!(group_of("params/layer0/attn/wq"), "params");
+        assert_eq!(group_of("base/embed/tok"), "params");
+        assert_eq!(group_of("train/lora_A/layer0/attn/wq"), "train");
+        assert_eq!(group_of("opt/embed/tok/vr"), "opt");
+        assert_eq!(group_of("acc/layer0/ffn/w1"), "method");
+        assert_eq!(group_of("mom/layer0/ffn/w1"), "method");
+        assert_eq!(group_of("proj/layer0/attn/wq"), "method");
+        assert_eq!(group_of("batch/tokens"), "batch");
+        assert_eq!(group_of("seed_cur"), "scalar");
+        assert_eq!(group_of("lr"), "scalar");
+        assert_eq!(group_of("loss"), "out");
+        assert_eq!(group_of("tokens"), "out");
+    }
+
+    #[test]
+    fn mode_derivation() {
+        let mut cfg = TrainConfig::default();
+        cfg.task = TaskKind::Sum;
+        cfg.method = MethodSpec::Flora { rank: 8 };
+        cfg.tau = 16;
+        assert_eq!(Mode::of(&cfg), Mode::Accumulation);
+        cfg.tau = 1;
+        assert_eq!(Mode::of(&cfg), Mode::Momentum);
+        cfg.method = MethodSpec::None;
+        assert_eq!(Mode::of(&cfg), Mode::Plain);
+        cfg.method = MethodSpec::Galore { rank: 8 };
+        assert_eq!(Mode::of(&cfg), Mode::Galore);
+        cfg.task = TaskKind::Vit;
+        cfg.method = MethodSpec::Flora { rank: 8 };
+        assert_eq!(Mode::of(&cfg), Mode::VitStep);
+    }
+}

@@ -1,0 +1,134 @@
+//! C4-sim: an order-1 Markov language corpus with Zipf-shaped marginals.
+//!
+//! Used by the Table-6 (FLORA vs GaLore) pre-training comparison, where the
+//! metric is token perplexity. The chain has real learnable structure (each
+//! token strongly predicts a small successor set), so a trained LM's PPL
+//! drops well below the unigram entropy — enough signal to separate
+//! optimizers, which is all Table 6 needs.
+
+use super::special::*;
+use super::zipf::Zipf;
+use super::LmBatch;
+use crate::util::rng::{derive_seed, Rng};
+
+#[derive(Clone)]
+pub struct LmTask {
+    pub vocab: usize,
+    pub seq_len: usize,
+    /// successors per token (branching factor of the chain)
+    pub branch: usize,
+    /// successor table: token -> [branch] next-token candidates
+    table: Vec<Vec<i32>>,
+    zipf: Zipf,
+    seed: u64,
+}
+
+impl LmTask {
+    pub fn new(vocab: usize, seq_len: usize, seed: u64) -> Self {
+        let branch = 6;
+        let content = vocab as i32 - CONTENT0;
+        let mut rng = Rng::new(derive_seed(seed, 0xC4));
+        let table = (0..content)
+            .map(|_| {
+                (0..branch)
+                    .map(|_| CONTENT0 + rng.next_below(content as usize) as i32)
+                    .collect()
+            })
+            .collect();
+        Self { vocab, seq_len, branch, table, zipf: Zipf::new(branch, 1.2), seed }
+    }
+
+    /// Deterministic document `idx` of split `split`.
+    fn document(&self, split: u64, idx: u64) -> Vec<i32> {
+        let mut rng = Rng::new(derive_seed(derive_seed(self.seed, split + 7), idx));
+        let content = self.vocab as i32 - CONTENT0;
+        let mut cur = CONTENT0 + rng.next_below(content as usize) as i32;
+        let mut out = Vec::with_capacity(self.seq_len);
+        out.push(BOS);
+        for _ in 0..self.seq_len - 1 {
+            out.push(cur);
+            let succ = &self.table[(cur - CONTENT0) as usize];
+            cur = succ[self.zipf.sample(&mut rng)];
+        }
+        out
+    }
+
+    pub fn fill_batch(&self, out: &mut LmBatch, split: u64, cursor: &mut u64) {
+        for b in 0..out.batch {
+            let doc = self.document(split, *cursor);
+            let off = b * out.seq_len;
+            out.tokens[off..off + out.seq_len].copy_from_slice(&doc);
+            for (i, m) in out.mask[off..off + out.seq_len].iter_mut().enumerate() {
+                // all next-token predictions count except the BOS position
+                *m = if i == 0 { 0.0 } else { 1.0 };
+            }
+            *cursor += 1;
+        }
+    }
+
+    /// Entropy rate of the chain in nats — a floor for achievable loss,
+    /// reported alongside PPL in the Table-6 bench.
+    pub fn entropy_rate(&self) -> f64 {
+        // H(next | cur) is identical for every cur: the successor draw is
+        // Zipf(branch) (up to collisions in the table, which raise nothing)
+        -(0..self.branch)
+            .map(|k| {
+                let p = self.zipf.pmf(k);
+                p * p.ln()
+            })
+            .sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documents_deterministic() {
+        let t = LmTask::new(256, 64, 0);
+        assert_eq!(t.document(0, 5), t.document(0, 5));
+        assert_ne!(t.document(0, 5), t.document(0, 6));
+        assert_ne!(t.document(0, 5), t.document(1, 5));
+    }
+
+    #[test]
+    fn batch_layout() {
+        let t = LmTask::new(256, 64, 1);
+        let mut b = LmBatch::zeros(4, 64);
+        let mut cur = 0;
+        t.fill_batch(&mut b, 0, &mut cur);
+        for r in 0..4 {
+            assert_eq!(b.row_tokens(r)[0], BOS);
+            assert_eq!(b.mask[r * 64], 0.0);
+            assert!(b.mask[r * 64 + 1..(r + 1) * 64].iter().all(|&m| m == 1.0));
+        }
+    }
+
+    #[test]
+    fn chain_is_predictive() {
+        // successors of a token are confined to its table row
+        let t = LmTask::new(256, 64, 2);
+        let doc = t.document(0, 0);
+        for w in doc[1..].windows(2) {
+            let succ = &t.table[(w[0] - CONTENT0) as usize];
+            assert!(succ.contains(&w[1]));
+        }
+    }
+
+    #[test]
+    fn entropy_rate_below_uniform() {
+        let t = LmTask::new(256, 64, 3);
+        let h = t.entropy_rate();
+        assert!(h > 0.0 && h < (t.branch as f64).ln() + 1e-9);
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let t = LmTask::new(64, 32, 4);
+        let mut b = LmBatch::zeros(2, 32);
+        let mut cur = 0;
+        t.fill_batch(&mut b, 0, &mut cur);
+        assert!(b.tokens.iter().all(|&x| x >= 0 && x < 64));
+    }
+}

@@ -1,0 +1,168 @@
+//! Synthetic image classification: class templates + Gaussian noise.
+//!
+//! Stands in for Fashion-MNIST (the Figure-1 pilot, flat 784-dim vectors)
+//! and CIFAR-100 (the Table-5 ViT run, H×W×C tensors). Each class has a
+//! fixed smooth template; a sample is template + noise, so the Bayes error
+//! is controlled by the noise scale and every optimizer sees the same
+//! separable-but-nontrivial problem.
+
+use crate::tensor::Matrix;
+use crate::util::rng::{derive_seed, Rng};
+
+#[derive(Clone)]
+pub struct ImageTask {
+    pub classes: usize,
+    pub dim: usize,
+    pub noise: f32,
+    /// [classes][dim] templates
+    templates: Vec<Vec<f32>>,
+}
+
+impl ImageTask {
+    /// Flat-vector variant (pilot MLP): `dim`-dimensional inputs.
+    pub fn fashion_like(classes: usize, dim: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(derive_seed(seed, 0xF00D));
+        let templates = (0..classes)
+            .map(|_| {
+                // smooth template: random walk, unit-normalized — images
+                // have local correlation, this mimics it
+                let mut t = vec![0.0f32; dim];
+                let mut v = 0.0f32;
+                for x in t.iter_mut() {
+                    v = 0.9 * v + 0.45 * rng.next_gaussian_f32();
+                    *x = v;
+                }
+                let norm = t.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                for x in t.iter_mut() {
+                    *x = *x / norm * (dim as f32).sqrt() * 0.5;
+                }
+                t
+            })
+            .collect();
+        Self { classes, dim, noise, templates }
+    }
+
+    /// CIFAR-like variant for the ViT: side×side×channels flattened in
+    /// HWC order (the layout `vit._patchify` expects).
+    pub fn cifar_like(
+        classes: usize,
+        side: usize,
+        channels: usize,
+        noise: f32,
+        seed: u64,
+    ) -> Self {
+        Self::fashion_like(classes, side * side * channels, noise, seed)
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Fill a [batch × dim] matrix + labels (pilot MLP interface).
+    pub fn fill_batch(&self, xs: &mut Matrix, ys: &mut [usize], rng: &mut Rng) {
+        assert_eq!(xs.cols, self.dim);
+        assert_eq!(xs.rows, ys.len());
+        for b in 0..xs.rows {
+            let y = rng.next_below(self.classes);
+            ys[b] = y;
+            let t = &self.templates[y];
+            let row = &mut xs.data[b * self.dim..(b + 1) * self.dim];
+            for (o, &tv) in row.iter_mut().zip(t.iter()) {
+                *o = tv + self.noise * rng.next_gaussian_f32();
+            }
+        }
+    }
+
+    /// Flat f32 image batch + i32 labels (ViT runtime-literal interface).
+    /// Deterministic per (split, cursor) like the sequence tasks.
+    pub fn fill_flat(
+        &self,
+        batch: usize,
+        split: u64,
+        cursor: &mut u64,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let mut images = Vec::with_capacity(batch * self.dim);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let mut rng = Rng::new(derive_seed(derive_seed(seed, split + 50), *cursor));
+            let y = rng.next_below(self.classes);
+            labels.push(y as i32);
+            let t = &self.templates[y];
+            for &tv in t.iter() {
+                images.push(tv + self.noise * rng.next_gaussian_f32());
+            }
+            *cursor += 1;
+        }
+        (images, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn templates_are_distinct() {
+        let t = ImageTask::fashion_like(10, 128, 0.1, 0);
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let d: f32 = t.templates[i]
+                    .iter()
+                    .zip(t.templates[j].iter())
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>()
+                    .sqrt();
+                assert!(d > 1.0, "templates {i},{j} too close: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_labels_cover_classes() {
+        let t = ImageTask::fashion_like(4, 32, 0.2, 1);
+        let mut rng = Rng::new(2);
+        let mut xs = Matrix::zeros(64, 32);
+        let mut ys = vec![0usize; 64];
+        t.fill_batch(&mut xs, &mut ys, &mut rng);
+        let mut seen = [false; 4];
+        for &y in &ys {
+            seen[y] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn samples_cluster_around_template() {
+        let t = ImageTask::fashion_like(2, 64, 0.05, 3);
+        let mut rng = Rng::new(4);
+        let mut xs = Matrix::zeros(8, 64);
+        let mut ys = vec![0usize; 8];
+        t.fill_batch(&mut xs, &mut ys, &mut rng);
+        for b in 0..8 {
+            let tmpl = &t.templates[ys[b]];
+            let d: f32 = xs.row(b)
+                .iter()
+                .zip(tmpl.iter())
+                .map(|(a, c)| (a - c) * (a - c))
+                .sum::<f32>()
+                / 64.0;
+            assert!(d < 0.01, "sample {b} too far from its template: {d}");
+        }
+    }
+
+    #[test]
+    fn fill_flat_deterministic() {
+        let t = ImageTask::cifar_like(20, 16, 3, 0.25, 5);
+        assert_eq!(t.input_dim(), 16 * 16 * 3);
+        let (mut c1, mut c2) = (0, 0);
+        let (i1, l1) = t.fill_flat(4, 0, &mut c1, 5);
+        let (i2, l2) = t.fill_flat(4, 0, &mut c2, 5);
+        assert_eq!(i1, i2);
+        assert_eq!(l1, l2);
+        assert_eq!(i1.len(), 4 * 768);
+        // next cursor position gives different data
+        let (i3, _) = t.fill_flat(4, 0, &mut c1, 5);
+        assert_ne!(i1, i3);
+    }
+}

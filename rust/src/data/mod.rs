@@ -1,0 +1,68 @@
+//! Synthetic workload substrate.
+//!
+//! The paper evaluates on XSum (summarization), IWSLT17 De-En (translation),
+//! C4 (LM pre-training), Fashion-MNIST and CIFAR-100. None of those corpora
+//! ship with this image, so each is replaced by a *generator* that preserves
+//! the property the experiment actually measures (DESIGN.md §4 documents
+//! each substitution):
+//!
+//!   * `seq2seq::SumTask` — article = topic-conditioned Zipf stream,
+//!     summary = deterministic salient-token extraction → ROUGE measures
+//!     how well the trained model learned the extraction rule;
+//!   * `seq2seq::MtTask` — deterministic token bijection + local reorder →
+//!     BLEU measures mapping fidelity;
+//!   * `corpus::LmTask` — order-1 Markov chain with Zipf marginals → PPL;
+//!   * `images::ImageTask` — class templates + Gaussian noise (pilot MLP
+//!     and the ViT Table-5 run).
+//!
+//! Everything is deterministic given a seed, with disjoint train/val/test
+//! streams derived from it.
+
+pub mod corpus;
+pub mod images;
+pub mod seq2seq;
+pub mod zipf;
+
+/// A tokenized LM batch, ready to become PJRT literals.
+#[derive(Clone, Debug)]
+pub struct LmBatch {
+    pub batch: usize,
+    pub seq_len: usize,
+    /// [batch * seq_len] row-major token ids
+    pub tokens: Vec<i32>,
+    /// [batch * seq_len] 1.0 where the loss counts
+    pub mask: Vec<f32>,
+}
+
+impl LmBatch {
+    pub fn zeros(batch: usize, seq_len: usize) -> Self {
+        Self {
+            batch,
+            seq_len,
+            tokens: vec![0; batch * seq_len],
+            mask: vec![0.0; batch * seq_len],
+        }
+    }
+
+    pub fn row_tokens(&self, b: usize) -> &[i32] {
+        &self.tokens[b * self.seq_len..(b + 1) * self.seq_len]
+    }
+}
+
+/// One evaluation example for generation metrics: the prompt to condition
+/// on and the reference continuation to score against.
+#[derive(Clone, Debug)]
+pub struct GenExample {
+    pub prompt: Vec<i32>,
+    pub reference: Vec<i32>,
+}
+
+/// Special token ids shared by all sequence tasks.
+pub mod special {
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const SEP: i32 = 2;
+    pub const EOS: i32 = 3;
+    /// first content token id
+    pub const CONTENT0: i32 = 4;
+}

@@ -1,0 +1,376 @@
+//! Synthetic conditional-generation tasks standing in for XSum (sum) and
+//! IWSLT17 De-En (mt). Both are prefix-LM encodings:
+//!
+//!   [BOS, source..., SEP, target..., EOS, PAD...]
+//!
+//! with loss mask = 1 exactly on the target..EOS span (the positions whose
+//! prediction is scored), matching `layers.lm_loss` on the python side.
+
+use super::special::*;
+use super::zipf::Zipf;
+use super::{GenExample, LmBatch};
+use crate::util::rng::{derive_seed, Rng};
+
+/// Summarization-like task. An "article" is a stream of tokens from one of
+/// `topics` topic vocabularies (Zipf within topic); its "summary" is the
+/// first `summary_len` *salient* tokens — the lexically smallest tokens
+/// that appear at least twice — a rule a prefix-LM can learn, so ROUGE
+/// tracks optimization quality exactly like it does on XSum.
+#[derive(Clone)]
+pub struct SumTask {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub topics: usize,
+    pub article_len: usize,
+    pub summary_len: usize,
+    zipf: Zipf,
+    seed: u64,
+}
+
+impl SumTask {
+    pub fn new(vocab: usize, seq_len: usize, seed: u64) -> Self {
+        assert!(vocab >= 32, "need room for specials + content");
+        // layout: article | SEP | summary | EOS, under seq_len with BOS
+        let article_len = (seq_len - 4) * 2 / 3;
+        let summary_len = (seq_len - 4) - article_len;
+        Self {
+            vocab,
+            seq_len,
+            topics: 4,
+            article_len,
+            summary_len,
+            zipf: Zipf::new(24, 1.05),
+            seed,
+        }
+    }
+
+    fn content_range(&self) -> i32 {
+        self.vocab as i32 - CONTENT0
+    }
+
+    /// Deterministic article for example index `idx` of split `split`.
+    fn article(&self, split: u64, idx: u64) -> Vec<i32> {
+        let mut rng = Rng::new(derive_seed(derive_seed(self.seed, split), idx));
+        let topic = rng.next_below(self.topics) as i32;
+        let span = self.content_range() / self.topics as i32;
+        let base = CONTENT0 + topic * span;
+        (0..self.article_len)
+            .map(|_| {
+                let r = self.zipf.sample(&mut rng) as i32 % span;
+                base + r
+            })
+            .collect()
+    }
+
+    /// The task's ground-truth extraction rule.
+    pub fn summarize(&self, article: &[i32]) -> Vec<i32> {
+        let mut counts = std::collections::BTreeMap::new();
+        for &t in article {
+            *counts.entry(t).or_insert(0usize) += 1;
+        }
+        let mut salient: Vec<i32> = counts
+            .into_iter()
+            .filter(|&(_, c)| c >= 2)
+            .map(|(t, _)| t)
+            .collect();
+        salient.truncate(self.summary_len);
+        // pad the rule's output to a fixed length with the most common token
+        while salient.len() < self.summary_len {
+            salient.push(*article.first().unwrap_or(&CONTENT0));
+        }
+        salient
+    }
+
+    fn encode(&self, article: &[i32], summary: &[i32]) -> (Vec<i32>, Vec<f32>) {
+        let mut toks = Vec::with_capacity(self.seq_len);
+        let mut mask = Vec::with_capacity(self.seq_len);
+        toks.push(BOS);
+        mask.push(0.0);
+        for &t in article {
+            toks.push(t);
+            mask.push(0.0);
+        }
+        toks.push(SEP);
+        mask.push(0.0);
+        for &t in summary {
+            toks.push(t);
+            mask.push(1.0);
+        }
+        toks.push(EOS);
+        mask.push(1.0);
+        while toks.len() < self.seq_len {
+            toks.push(PAD);
+            mask.push(0.0);
+        }
+        toks.truncate(self.seq_len);
+        mask.truncate(self.seq_len);
+        (toks, mask)
+    }
+
+    /// Fill a training batch from split `split` (0=train, 1=val, 2=test).
+    pub fn fill_batch(&self, out: &mut LmBatch, split: u64, cursor: &mut u64) {
+        for b in 0..out.batch {
+            let art = self.article(split, *cursor);
+            let sum = self.summarize(&art);
+            let (t, m) = self.encode(&art, &sum);
+            let off = b * out.seq_len;
+            out.tokens[off..off + out.seq_len].copy_from_slice(&t);
+            out.mask[off..off + out.seq_len].copy_from_slice(&m);
+            *cursor += 1;
+        }
+    }
+
+    /// Generation-eval examples: prompt = [BOS, article, SEP], reference =
+    /// the rule's summary.
+    pub fn gen_examples(&self, split: u64, n: usize) -> Vec<GenExample> {
+        (0..n as u64)
+            .map(|i| {
+                let art = self.article(split, i);
+                let mut prompt = vec![BOS];
+                prompt.extend_from_slice(&art);
+                prompt.push(SEP);
+                GenExample { prompt, reference: self.summarize(&art) }
+            })
+            .collect()
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.article_len + 2
+    }
+
+    pub fn target_len(&self) -> usize {
+        self.summary_len
+    }
+}
+
+/// Translation-like task: target = deterministic bijection of the source
+/// tokens with adjacent-pair reordering (a "grammar"). BLEU then measures
+/// how faithfully the model learned the mapping — the IWSLT analogue.
+#[derive(Clone)]
+pub struct MtTask {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub src_len: usize,
+    zipf: Zipf,
+    seed: u64,
+}
+
+impl MtTask {
+    pub fn new(vocab: usize, seq_len: usize, seed: u64) -> Self {
+        assert!(vocab >= 32);
+        let src_len = (seq_len - 4) / 2;
+        Self { vocab, seq_len, src_len, zipf: Zipf::new(32, 1.05), seed }
+    }
+
+    fn half(&self) -> i32 {
+        (self.vocab as i32 - CONTENT0) / 2
+    }
+
+    fn source(&self, split: u64, idx: u64) -> Vec<i32> {
+        let mut rng = Rng::new(derive_seed(derive_seed(self.seed, split + 100), idx));
+        let h = self.half();
+        (0..self.src_len)
+            .map(|_| CONTENT0 + (self.zipf.sample(&mut rng) as i32 % h))
+            .collect()
+    }
+
+    /// Multiplier for the affine token map — picked coprime with `h` so the
+    /// map is a bijection for any vocab size.
+    fn multiplier(&self) -> i32 {
+        let h = self.half();
+        for a in [5i32, 7, 11, 13, 17, 19, 23] {
+            if gcd(a, h) == 1 {
+                return a;
+            }
+        }
+        1
+    }
+
+    /// The deterministic "translation": map into the upper half of the
+    /// vocab via an affine bijection, then swap adjacent pairs (word-order
+    /// divergence, the interesting part of translation).
+    pub fn translate(&self, src: &[i32]) -> Vec<i32> {
+        let h = self.half();
+        let a = self.multiplier();
+        let mut tgt: Vec<i32> = src
+            .iter()
+            .map(|&t| {
+                let x = t - CONTENT0;
+                let mapped = (x * a + 3).rem_euclid(h);
+                CONTENT0 + h + mapped
+            })
+            .collect();
+        for pair in tgt.chunks_mut(2) {
+            if pair.len() == 2 {
+                pair.swap(0, 1);
+            }
+        }
+        tgt
+    }
+
+    fn encode(&self, src: &[i32], tgt: &[i32]) -> (Vec<i32>, Vec<f32>) {
+        let mut toks = Vec::with_capacity(self.seq_len);
+        let mut mask = Vec::with_capacity(self.seq_len);
+        toks.push(BOS);
+        mask.push(0.0);
+        for &t in src {
+            toks.push(t);
+            mask.push(0.0);
+        }
+        toks.push(SEP);
+        mask.push(0.0);
+        for &t in tgt {
+            toks.push(t);
+            mask.push(1.0);
+        }
+        toks.push(EOS);
+        mask.push(1.0);
+        while toks.len() < self.seq_len {
+            toks.push(PAD);
+            mask.push(0.0);
+        }
+        toks.truncate(self.seq_len);
+        mask.truncate(self.seq_len);
+        (toks, mask)
+    }
+
+    pub fn fill_batch(&self, out: &mut LmBatch, split: u64, cursor: &mut u64) {
+        for b in 0..out.batch {
+            let src = self.source(split, *cursor);
+            let tgt = self.translate(&src);
+            let (t, m) = self.encode(&src, &tgt);
+            let off = b * out.seq_len;
+            out.tokens[off..off + out.seq_len].copy_from_slice(&t);
+            out.mask[off..off + out.seq_len].copy_from_slice(&m);
+            *cursor += 1;
+        }
+    }
+
+    pub fn gen_examples(&self, split: u64, n: usize) -> Vec<GenExample> {
+        (0..n as u64)
+            .map(|i| {
+                let src = self.source(split, i);
+                let mut prompt = vec![BOS];
+                prompt.extend_from_slice(&src);
+                prompt.push(SEP);
+                GenExample { prompt, reference: self.translate(&src) }
+            })
+            .collect()
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.src_len + 2
+    }
+
+    pub fn target_len(&self) -> usize {
+        self.src_len
+    }
+}
+
+fn gcd(a: i32, b: i32) -> i32 {
+    if b == 0 { a.abs() } else { gcd(b, a % b) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_batch_shape_and_mask() {
+        let t = SumTask::new(256, 64, 0);
+        let mut b = LmBatch::zeros(4, 64);
+        let mut cur = 0;
+        t.fill_batch(&mut b, 0, &mut cur);
+        assert_eq!(cur, 4);
+        assert_eq!(b.tokens.len(), 256);
+        // every row starts with BOS, has exactly one SEP, mask covers
+        // summary + EOS only
+        for r in 0..4 {
+            let toks = b.row_tokens(r);
+            assert_eq!(toks[0], BOS);
+            let seps = toks.iter().filter(|&&t| t == SEP).count();
+            assert_eq!(seps, 1);
+            let mask = &b.mask[r * 64..(r + 1) * 64];
+            let n_masked = mask.iter().filter(|&&m| m > 0.0).count();
+            assert_eq!(n_masked, t.summary_len + 1); // + EOS
+        }
+    }
+
+    #[test]
+    fn sum_deterministic_per_split_index() {
+        let t = SumTask::new(256, 64, 5);
+        let mut b1 = LmBatch::zeros(2, 64);
+        let mut b2 = LmBatch::zeros(2, 64);
+        let (mut c1, mut c2) = (0, 0);
+        t.fill_batch(&mut b1, 0, &mut c1);
+        t.fill_batch(&mut b2, 0, &mut c2);
+        assert_eq!(b1.tokens, b2.tokens);
+        // different split → different data
+        let mut b3 = LmBatch::zeros(2, 64);
+        let mut c3 = 0;
+        t.fill_batch(&mut b3, 1, &mut c3);
+        assert_ne!(b1.tokens, b3.tokens);
+    }
+
+    #[test]
+    fn summary_rule_is_learnable_signal() {
+        // the summary is a pure function of the article
+        let t = SumTask::new(256, 64, 1);
+        let art = t.article(0, 42);
+        assert_eq!(t.summarize(&art), t.summarize(&art));
+        assert_eq!(t.summarize(&art).len(), t.summary_len);
+    }
+
+    #[test]
+    fn mt_translation_bijective_on_tokens() {
+        let t = MtTask::new(256, 64, 2);
+        let h = t.half();
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..h {
+            let tgt = t.translate(&[CONTENT0 + x]);
+            assert!(tgt[0] >= CONTENT0 + h && tgt[0] < CONTENT0 + 2 * h);
+            seen.insert(tgt[0]);
+        }
+        assert_eq!(seen.len() as i32, h, "affine map must be a bijection");
+    }
+
+    #[test]
+    fn mt_pair_swap() {
+        let t = MtTask::new(256, 64, 3);
+        let src = vec![CONTENT0, CONTENT0 + 1, CONTENT0 + 2, CONTENT0 + 3];
+        let tgt = t.translate(&src);
+        let a = t.multiplier();
+        let unswapped: Vec<i32> = src
+            .iter()
+            .map(|&s| {
+                let x = s - CONTENT0;
+                CONTENT0 + t.half() + (x * a + 3).rem_euclid(t.half())
+            })
+            .collect();
+        assert_eq!(tgt[0], unswapped[1]);
+        assert_eq!(tgt[1], unswapped[0]);
+    }
+
+    #[test]
+    fn gen_examples_match_training_distribution() {
+        let t = MtTask::new(256, 64, 4);
+        let ex = t.gen_examples(2, 8);
+        assert_eq!(ex.len(), 8);
+        for e in &ex {
+            assert_eq!(e.prompt.len(), t.prompt_len());
+            assert_eq!(e.prompt[0], BOS);
+            assert_eq!(*e.prompt.last().unwrap(), SEP);
+            assert_eq!(e.reference.len(), t.target_len());
+        }
+    }
+
+    #[test]
+    fn fits_in_seq_len() {
+        for seq in [32usize, 64, 128] {
+            let t = SumTask::new(256, seq, 0);
+            assert!(1 + t.article_len + 1 + t.summary_len + 1 <= seq);
+            let t = MtTask::new(256, seq, 0);
+            assert!(1 + t.src_len + 1 + t.src_len + 1 <= seq);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Zipf-distributed token sampling — natural-language-like marginals for
+//! the synthetic corpora (rank-frequency f(k) ∝ 1/k^s).
+
+use crate::util::rng::Rng;
+
+/// Precomputed Zipf sampler over `n` items with exponent `s`.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    /// cumulative distribution, cdf[i] = P(X <= i)
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for k in 1..=n {
+            total += 1.0 / (k as f64).powf(s);
+            cdf.push(total);
+        }
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Sample a rank in [0, n) — binary search over the CDF.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Probability of rank k.
+    pub fn pmf(&self, k: usize) -> f64 {
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let z = Zipf::new(100, 1.1);
+        let total: f64 = (0..100).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_frequency_shape() {
+        let z = Zipf::new(50, 1.0);
+        // f(0)/f(9) should be ~10 for s=1
+        let ratio = z.pmf(0) / z.pmf(9);
+        assert!((ratio - 10.0).abs() < 0.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn sampling_matches_pmf() {
+        let z = Zipf::new(20, 1.2);
+        let mut rng = Rng::new(0);
+        let n = 100_000;
+        let mut counts = vec![0usize; 20];
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for k in 0..5 {
+            let emp = counts[k] as f64 / n as f64;
+            let want = z.pmf(k);
+            assert!(
+                (emp - want).abs() < 0.01,
+                "rank {k}: emp={emp:.4} want={want:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let z = Zipf::new(30, 1.0);
+        let a: Vec<usize> = {
+            let mut r = Rng::new(7);
+            (0..50).map(|_| z.sample(&mut r)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut r = Rng::new(7);
+            (0..50).map(|_| z.sample(&mut r)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

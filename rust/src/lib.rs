@@ -1,0 +1,33 @@
+//! # flora — FLORA: Low-Rank Adapters Are Secretly Gradient Compressors
+//!
+//! Full-system reproduction of Hao, Cao & Mou (ICML 2024) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: Algorithm-1 τ-cycle
+//!   accumulation scheduling, Algorithm-2 κ-interval momentum resampling,
+//!   seed lifecycles, training/eval loops, metrics, the analytic memory
+//!   accountant behind every Mem/ΔM column, and the pure-rust pilot study.
+//! * **L2** — JAX models + optimizers + methods (python/compile/*),
+//!   AOT-lowered once to HLO text.
+//! * **L1** — Pallas kernels for the compress/decompress/transfer hot path
+//!   (python/compile/kernels/rp.py).
+//!
+//! Python never runs at inference/training time: `runtime::Runtime` loads
+//! the artifacts via PJRT and the binary is self-contained.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod metrics;
+pub mod pilot;
+pub mod rp;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,227 @@
+//! `flora` — the leader binary: CLI dispatch over the coordinator.
+
+use flora::cli::{Args, USAGE};
+use flora::config::{ExperimentConfig, TaskKind};
+use flora::coordinator::{MethodSpec, Trainer};
+use flora::data::images::ImageTask;
+use flora::memory::{self, Dims, OptKind, StateRole};
+use flora::pilot;
+use flora::runtime::Manifest;
+use flora::util::human;
+use flora::util::log;
+
+fn main() {
+    log::level_from_env();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "pilot" => cmd_pilot(&args),
+        "memory" => cmd_memory(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(m) = args.flag("model") {
+        cfg.train.model = m.to_string();
+    }
+    if let Some(t) = args.flag("task") {
+        cfg.train.task = TaskKind::parse(t)?;
+    }
+    if let Some(m) = args.flag("method") {
+        let rank = args.usize_flag("rank", cfg.train.method.rank().unwrap_or(16))?;
+        cfg.train.method = MethodSpec::parse(m, rank)?;
+    }
+    if let Some(o) = args.flag("optimizer") {
+        cfg.train.optimizer = o.to_string();
+    }
+    cfg.train.lr = args.f32_flag("lr", cfg.train.lr)?;
+    cfg.train.steps = args.usize_flag("steps", cfg.train.steps)?;
+    cfg.train.tau = args.usize_flag("tau", cfg.train.tau)?;
+    cfg.train.kappa = args.usize_flag("kappa", cfg.train.kappa)?;
+    cfg.train.batch = args.usize_flag("batch", cfg.train.batch)?;
+    cfg.train.seed = args.u64_flag("seed", cfg.train.seed)?;
+    cfg.train.eval_every = args.usize_flag("eval-every", cfg.train.eval_every)?;
+    cfg.train.eval_samples = args.usize_flag("eval-samples", cfg.train.eval_samples)?;
+    cfg.artifacts_dir = args.flag_or("artifacts", &cfg.artifacts_dir);
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let cfg = experiment_from_args(args)?;
+    println!(
+        "training {} on task={} method={} optimizer={} steps={} tau={} kappa={}",
+        cfg.train.model,
+        cfg.train.task.name(),
+        cfg.train.method.label(),
+        cfg.train.optimizer,
+        cfg.train.steps,
+        cfg.train.tau,
+        cfg.train.kappa,
+    );
+    let mut tr = Trainer::new(cfg.train.clone(), &cfg.artifacts_dir)?;
+    let report = tr.run()?;
+    if let Some(path) = args.flag("save-checkpoint") {
+        tr.save_checkpoint(path)?;
+        println!("checkpoint written to {path}");
+    }
+    if let Some(dir) = args.flag("record") {
+        let p = flora::coordinator::registry::record(dir, &cfg.name, &report)?;
+        println!("run recorded at {}", p.display());
+    }
+    println!(
+        "done: final_train_loss={:.4} best_val_loss={:.4} metric={} \
+         state={} peak_state={} ({:.1} steps/s)",
+        report.final_train_loss(),
+        report.best_eval_loss(),
+        report
+            .metric
+            .map(|m| m.render())
+            .unwrap_or_else(|| "-".into()),
+        human::bytes(report.total_state_bytes()),
+        human::bytes(report.peak_state_bytes),
+        report.steps_per_sec,
+    );
+    for (g, b) in &report.state_bytes {
+        if *b > 0 {
+            println!("  state[{g}] = {}", human::bytes(*b));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<(), String> {
+    let mut cfg = experiment_from_args(args)?;
+    cfg.train.steps = 0;
+    cfg.train.eval_every = 0;
+    let mut tr = Trainer::new(cfg.train.clone(), &cfg.artifacts_dir)?;
+    tr.init()?;
+    let loss = tr.eval_loss(1, 4)?;
+    let metric = tr.eval_metric(cfg.train.eval_samples)?;
+    println!(
+        "eval at init: val_loss={loss:.4} metric={}",
+        metric.render()
+    );
+    Ok(())
+}
+
+fn cmd_pilot(args: &Args) -> Result<(), String> {
+    let steps = args.usize_flag("steps", 400)?;
+    let rank = args.usize_flag("rank", 8)?;
+    let lr = args.f32_flag("lr", 0.01)?;
+    let seed = args.u64_flag("seed", 0)?;
+    println!("Figure-1 pilot: MLP 784->256->(256x256 patched)->10, r={rank}, lr={lr}");
+    let task = ImageTask::fashion_like(10, 784, 0.3, seed);
+    let curves = pilot::run_pilot(&task, steps, 32, rank, lr, seed, false, false);
+    for c in &curves {
+        let tail = &c.losses[c.losses.len().saturating_sub(20)..];
+        let final_loss: f32 = tail.iter().sum::<f32>() / tail.len() as f32;
+        println!(
+            "{:<8} final_loss={final_loss:.4} acc={:.2} {}",
+            c.updater.name(),
+            c.final_train_acc,
+            flora::bench::sparkline(&c.losses, 40)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<(), String> {
+    let model = args.flag_or("model", "t5-small");
+    let dims = match model.as_str() {
+        "t5-small" => Dims::t5_small_sim(),
+        "t5-3b" => Dims::t5_3b_sim(),
+        "gpt2-base" => Dims::gpt2_base_sim(),
+        "gpt2-xl" => Dims::gpt2_xl_sim(),
+        "lm-small" => Dims::lm_small(),
+        other => return Err(format!("unknown model {other:?}")),
+    };
+    let opt = match args.flag_or("optimizer", "adafactor").as_str() {
+        "adam" => OptKind::Adam,
+        "adafactor" => OptKind::Adafactor,
+        "adafactor_nofactor" => OptKind::AdafactorNoFactor,
+        other => return Err(format!("unknown optimizer {other:?}")),
+    };
+    println!(
+        "model {} ({} params), optimizer {:?}",
+        model,
+        human::params(dims.param_count()),
+        opt
+    );
+    let mut table = flora::bench::Table::new(
+        "analytic memory (accumulation role)",
+        &["Method", "Params", "Grads", "OptState", "MethodState", "Extra", "ΔM"],
+    );
+    let methods = [
+        memory::Method::None,
+        memory::Method::Naive,
+        memory::Method::Lora(256),
+        memory::Method::Flora(256),
+        memory::Method::Galore(256),
+    ];
+    for m in methods {
+        let b = memory::breakdown(&dims, m, opt, StateRole::Accumulation, 1, false);
+        let dm = memory::delta_m(&dims, m, opt, StateRole::Accumulation, 1);
+        table.row(vec![
+            m.label(),
+            human::bytes(b.params),
+            human::bytes(b.grads),
+            human::bytes(b.opt_state),
+            human::bytes(b.method_state),
+            human::bytes(b.extra_params),
+            format!("{:+.2} GiB", dm as f64 / (1u64 << 30) as f64),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<(), String> {
+    let dir = args.flag_or("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    match args.flag("exe") {
+        Some(name) => {
+            let e = manifest.executable(name)?;
+            println!("{name} (model {})", e.model);
+            println!(" inputs:");
+            for t in &e.inputs {
+                println!("   {:<42} {:?} {}", t.name, t.shape, t.dtype);
+            }
+            println!(" outputs:");
+            for t in &e.outputs {
+                println!("   {:<42} {:?} {}", t.name, t.shape, t.dtype);
+            }
+        }
+        None => {
+            println!("{} executables in {dir}:", manifest.executables.len());
+            for (name, e) in &manifest.executables {
+                println!(
+                    "  {name:<48} {:>3} in / {:>3} out",
+                    e.inputs.len(),
+                    e.outputs.len()
+                );
+            }
+        }
+    }
+    Ok(())
+}

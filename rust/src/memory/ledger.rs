@@ -1,0 +1,89 @@
+//! Live memory ledger: tracks the actual bytes held in PJRT device buffers
+//! by the runtime's state store, plus a /proc RSS probe. Used to validate
+//! the analytic accountant on the small configs (rust/tests/) and to report
+//! real peaks in EXPERIMENTS.md.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Thread-safe running ledger of allocated buffer bytes with a peak tracker.
+#[derive(Clone, Default)]
+pub struct BufferLedger {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl BufferLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&self, bytes: u64) {
+        let cur = self.inner.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.inner.peak.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    pub fn free(&self, bytes: u64) {
+        self.inner.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.inner.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_peak(&self) {
+        self.inner
+            .peak
+            .store(self.current(), Ordering::Relaxed);
+    }
+}
+
+/// Resident set size of this process in bytes (linux /proc/self/statm).
+pub fn rss_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let resident_pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(resident_pages * 4096)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_tracks_current_and_peak() {
+        let l = BufferLedger::new();
+        l.alloc(100);
+        l.alloc(50);
+        assert_eq!(l.current(), 150);
+        l.free(120);
+        assert_eq!(l.current(), 30);
+        assert_eq!(l.peak(), 150);
+        l.alloc(40);
+        assert_eq!(l.peak(), 150); // 70 < 150
+        l.reset_peak();
+        assert_eq!(l.peak(), 70);
+    }
+
+    #[test]
+    fn ledger_clones_share_state() {
+        let a = BufferLedger::new();
+        let b = a.clone();
+        a.alloc(10);
+        assert_eq!(b.current(), 10);
+    }
+
+    #[test]
+    fn rss_readable_on_linux() {
+        let rss = rss_bytes().expect("statm readable");
+        assert!(rss > 1024 * 1024, "rss={rss}");
+    }
+}

@@ -1,0 +1,468 @@
+//! Analytic memory accountant.
+//!
+//! The paper's Mem/ΔM columns measure *peak device memory*, dominated by
+//! (a) parameters, (b) gradients, (c) optimizer state, (d) the method's
+//! accumulation/momentum state, (e) activations. (a), (b), (e) are identical
+//! across methods (§2.4: "neither LoRA nor FLORA saves the memory for
+//! back-propagation"), so the method ranking is decided by (c)+(d) — which
+//! this module computes *exactly*, per parameter tensor, for any model size.
+//! That's how the 3B/1.5B rows of Tables 1–2 are reproduced on a small
+//! machine: byte accounting is exact at any scale (validated against the
+//! live PJRT buffer ledger on the small configs in rust/tests/).
+
+pub mod ledger;
+pub mod timeline;
+
+pub use ledger::BufferLedger;
+pub use timeline::{figure2_timeline, Phase, TimelineEvent};
+
+pub const F32: u64 = 4;
+
+/// One weight tensor of the model, as the accountant sees it.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub rows: u64,
+    /// 0 for vectors
+    pub cols: u64,
+    /// gets the projection treatment (attention/ffn matrices, §3.1)
+    pub projectable: bool,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> u64 {
+        if self.cols == 0 {
+            self.rows
+        } else {
+            self.rows * self.cols
+        }
+    }
+}
+
+/// Decoder-only transformer dimensions (mirrors python LMConfig shapes).
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    pub vocab: u64,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub d_ff: u64,
+    pub seq_len: u64,
+    pub n_heads: u64,
+}
+
+impl Dims {
+    /// The exact parameter inventory of `layers.py::LMConfig.param_shapes`.
+    pub fn params(&self) -> Vec<ParamEntry> {
+        let mut out = vec![
+            ParamEntry {
+                name: "embed/tok".into(),
+                rows: self.vocab,
+                cols: self.d_model,
+                projectable: false,
+            },
+            ParamEntry {
+                name: "embed/pos".into(),
+                rows: self.seq_len,
+                cols: self.d_model,
+                projectable: false,
+            },
+            ParamEntry {
+                name: "final_ln/scale".into(),
+                rows: self.d_model,
+                cols: 0,
+                projectable: false,
+            },
+        ];
+        for l in 0..self.n_layers {
+            let d = self.d_model;
+            let f = self.d_ff;
+            for (suffix, r, c, proj) in [
+                ("attn/wq", d, d, true),
+                ("attn/wk", d, d, true),
+                ("attn/wv", d, d, true),
+                ("attn/wo", d, d, true),
+                ("ffn/w1", d, f, true),
+                ("ffn/w2", f, d, true),
+                ("ln1/scale", d, 0, false),
+                ("ln2/scale", d, 0, false),
+            ] {
+                out.push(ParamEntry {
+                    name: format!("layer{l}/{suffix}"),
+                    rows: r,
+                    cols: c,
+                    projectable: proj,
+                });
+            }
+        }
+        out
+    }
+
+    pub fn param_count(&self) -> u64 {
+        self.params().iter().map(|p| p.numel()).sum()
+    }
+
+    // -- paper-scale presets (sized so param_count lands on the paper's
+    //    Size column under THIS architecture; documented substitution) --
+
+    /// "T5-small" row: ~60M params.
+    pub fn t5_small_sim() -> Dims {
+        Dims { vocab: 32128, d_model: 512, n_layers: 14, d_ff: 2048, seq_len: 512, n_heads: 8 }
+    }
+
+    /// "T5-3B" row: ~3B params.
+    pub fn t5_3b_sim() -> Dims {
+        Dims { vocab: 32128, d_model: 1024, n_layers: 78, d_ff: 16384, seq_len: 512, n_heads: 32 }
+    }
+
+    /// "GPT-2 base" row: ~110M params.
+    pub fn gpt2_base_sim() -> Dims {
+        Dims { vocab: 50257, d_model: 768, n_layers: 12, d_ff: 3072, seq_len: 1024, n_heads: 12 }
+    }
+
+    /// "GPT-2-XL" row: ~1.5B params.
+    pub fn gpt2_xl_sim() -> Dims {
+        Dims { vocab: 50257, d_model: 1600, n_layers: 48, d_ff: 6400, seq_len: 1024, n_heads: 25 }
+    }
+
+    /// The small bench model actually trained on this machine (lm-small).
+    pub fn lm_small() -> Dims {
+        Dims { vocab: 256, d_model: 64, n_layers: 2, d_ff: 256, seq_len: 64, n_heads: 4 }
+    }
+
+    /// lm-tiny test model.
+    pub fn lm_tiny() -> Dims {
+        Dims { vocab: 64, d_model: 32, n_layers: 2, d_ff: 64, seq_len: 32, n_heads: 2 }
+    }
+}
+
+/// The compression method applied to optimizer-adjacent state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// no accumulation / momentum at all
+    None,
+    /// full-size accumulator / momentum
+    Naive,
+    /// LoRA patches of rank r (trainable A, B; frozen base)
+    Lora(u64),
+    /// FLORA compressed state of rank r
+    Flora(u64),
+    /// GaLore: stored projection + projected Adam moments
+    Galore(u64),
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::None => "None".into(),
+            Method::Naive => "Naive".into(),
+            Method::Lora(r) => format!("LoRA({r})"),
+            Method::Flora(r) => format!("FLORA({r})"),
+            Method::Galore(r) => format!("GaLore({r})"),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Adam,
+    Adafactor,
+    AdafactorNoFactor,
+}
+
+/// Whether the method state is a gradient accumulator (Algorithm 1, one
+/// buffer) or a momentum (Algorithm 2, one buffer) — same byte shape, named
+/// for clarity in reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateRole {
+    Accumulation,
+    Momentum,
+}
+
+/// Full byte breakdown for one (model, method, optimizer) cell.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    pub params: u64,
+    pub grads: u64,
+    pub opt_state: u64,
+    pub method_state: u64,
+    /// LoRA only: the patch parameters themselves + their gradients
+    pub extra_params: u64,
+    pub activations: u64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> u64 {
+        self.params
+            + self.grads
+            + self.opt_state
+            + self.method_state
+            + self.extra_params
+            + self.activations
+    }
+}
+
+/// Optimizer state bytes for one tensor under `opt`.
+fn opt_bytes_for(entry_rows: u64, entry_cols: u64, opt: OptKind) -> u64 {
+    let numel = if entry_cols == 0 { entry_rows } else { entry_rows * entry_cols };
+    match opt {
+        OptKind::Adam => 2 * numel * F32,
+        OptKind::AdafactorNoFactor => numel * F32,
+        OptKind::Adafactor => {
+            if entry_cols == 0 {
+                entry_rows * F32
+            } else {
+                (entry_rows + entry_cols) * F32
+            }
+        }
+    }
+}
+
+/// Activation bytes for one training step (batch × transformer), the
+/// method-independent component. Counts the standard retained set:
+/// per layer: block input, normed input, qkv, attn probs (b·h·s·s),
+/// context, ffn hidden; plus logits.
+pub fn activation_bytes(d: &Dims, batch: u64, checkpointing: bool) -> u64 {
+    let b = batch;
+    let s = d.seq_len;
+    let dm = d.d_model;
+    let per_layer = b * s * dm * 6 + b * d.n_heads * s * s + b * s * d.d_ff;
+    let logits = b * s * d.vocab;
+    if checkpointing {
+        // AC retains one residual per layer, recomputes the rest
+        (d.n_layers * b * s * dm + logits) * F32
+    } else {
+        (d.n_layers * per_layer + logits) * F32
+    }
+}
+
+/// The central accounting function: byte breakdown for one table cell.
+pub fn breakdown(
+    dims: &Dims,
+    method: Method,
+    opt: OptKind,
+    role: StateRole,
+    batch: u64,
+    checkpointing: bool,
+) -> Breakdown {
+    let entries = dims.params();
+    let n_params: u64 = entries.iter().map(|p| p.numel()).sum();
+    let mut out = Breakdown {
+        params: n_params * F32,
+        grads: n_params * F32, // §2.4: full gradient exists under every method
+        activations: activation_bytes(dims, batch, checkpointing),
+        ..Default::default()
+    };
+    let _ = role;
+
+    match method {
+        Method::None | Method::Naive | Method::Flora(_) => {
+            // base optimizer state covers ALL model params
+            for e in &entries {
+                out.opt_state += opt_bytes_for(e.rows, e.cols, opt);
+            }
+            match method {
+                Method::None => {}
+                Method::Naive => {
+                    out.method_state = n_params * F32;
+                }
+                Method::Flora(r) => {
+                    for e in &entries {
+                        out.method_state += if e.projectable {
+                            e.rows * r * F32
+                        } else {
+                            e.numel() * F32
+                        };
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        Method::Lora(r) => {
+            // trainable set = A,B patches + non-projectable params; the
+            // base matrices are frozen (no grads/opt state) but the FULL
+            // gradient still materializes on the Jacobian path (§3.2) —
+            // kept in out.grads above.
+            for e in &entries {
+                if e.projectable {
+                    let patch = r * (e.rows + e.cols);
+                    out.extra_params += patch * F32; // A and B values
+                    out.extra_params += patch * F32; // their gradients
+                    // opt state on A [r, cols] and B [rows, r]
+                    out.opt_state += opt_bytes_for(r, e.cols, opt);
+                    out.opt_state += opt_bytes_for(e.rows, r, opt);
+                    // accumulation/momentum state on A and B (naive, small)
+                    out.method_state += patch * F32;
+                } else {
+                    out.opt_state += opt_bytes_for(e.rows, e.cols, opt);
+                    out.method_state += e.numel() * F32;
+                }
+            }
+        }
+        Method::Galore(r) => {
+            for e in &entries {
+                if e.projectable {
+                    // stored projection P [rows, r] + Adam moments [r, cols]
+                    out.method_state += e.rows * r * F32;
+                    out.opt_state += 2 * r * e.cols * F32;
+                } else {
+                    out.opt_state += opt_bytes_for(e.rows, e.cols, OptKind::Adam);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The ΔM column: total minus the method-"None" total of the same row.
+pub fn delta_m(dims: &Dims, method: Method, opt: OptKind, role: StateRole, batch: u64) -> i64 {
+    let with = breakdown(dims, method, opt, role, batch, false).total() as i64;
+    let none = breakdown(dims, Method::None, opt, role, batch, false).total() as i64;
+    with - none
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_sizes_match_paper_rows() {
+        // within 15% of the paper's Size column
+        let checks = [
+            (Dims::t5_small_sim().param_count(), 60_000_000u64),
+            (Dims::t5_3b_sim().param_count(), 3_000_000_000),
+            (Dims::gpt2_base_sim().param_count(), 110_000_000),
+            (Dims::gpt2_xl_sim().param_count(), 1_500_000_000),
+        ];
+        for (got, want) in checks {
+            let rel = (got as f64 - want as f64).abs() / want as f64;
+            assert!(rel < 0.15, "got {got}, want ~{want} (rel {rel:.2})");
+        }
+    }
+
+    #[test]
+    fn flora_state_sublinear_naive_linear() {
+        let d = Dims::t5_small_sim();
+        let naive = breakdown(&d, Method::Naive, OptKind::Adafactor, StateRole::Accumulation, 1, false);
+        // T5-small's embedding (handled naively, §3.1) is ~27% of params,
+        // so the clear sublinear win shows at moderate ranks
+        let flora = breakdown(&d, Method::Flora(64), OptKind::Adafactor, StateRole::Accumulation, 1, false);
+        assert_eq!(naive.method_state, d.param_count() * F32);
+        assert!(flora.method_state < naive.method_state / 2);
+    }
+
+    #[test]
+    fn flora_cheaper_than_lora_at_same_rank() {
+        // the paper's "same asymptotic rate but smaller constant" claim:
+        // LoRA stores A+B+their grads+opt+accum state; FLORA stores C only.
+        let d = Dims::t5_small_sim();
+        for r in [8, 32, 128, 256] {
+            let lora = breakdown(&d, Method::Lora(r), OptKind::Adafactor, StateRole::Accumulation, 1, false);
+            let flora = breakdown(&d, Method::Flora(r), OptKind::Adafactor, StateRole::Accumulation, 1, false);
+            let lora_delta = lora.method_state + lora.extra_params;
+            // compare the *method-induced* extra state on projectable params
+            let flora_proj: u64 = d
+                .params()
+                .iter()
+                .filter(|e| e.projectable)
+                .map(|e| e.rows * r * F32)
+                .sum();
+            assert!(flora_proj < lora_delta, "r={r}");
+            let _ = flora;
+        }
+    }
+
+    #[test]
+    fn adafactor_is_sublinear_adam_linear() {
+        let d = Dims::gpt2_base_sim();
+        let af = breakdown(&d, Method::None, OptKind::Adafactor, StateRole::Momentum, 1, false);
+        let adam = breakdown(&d, Method::None, OptKind::Adam, StateRole::Momentum, 1, false);
+        assert_eq!(adam.opt_state, 2 * d.param_count() * F32);
+        assert!(af.opt_state < adam.opt_state / 10);
+    }
+
+    #[test]
+    fn delta_m_none_is_zero() {
+        let d = Dims::lm_small();
+        assert_eq!(delta_m(&d, Method::None, OptKind::Adafactor, StateRole::Accumulation, 1), 0);
+    }
+
+    #[test]
+    fn delta_m_ordering_matches_table1() {
+        // Table 1: ΔM(Flora(r)) < ΔM(LoRA(r)) < ... < ΔM(Naive) for large
+        // models at the paper's ranks.
+        let d = Dims::t5_3b_sim();
+        let role = StateRole::Accumulation;
+        let naive = delta_m(&d, Method::Naive, OptKind::Adafactor, role, 1);
+        let lora = delta_m(&d, Method::Lora(256), OptKind::Adafactor, role, 1);
+        let flora = delta_m(&d, Method::Flora(256), OptKind::Adafactor, role, 1);
+        assert!(flora < lora, "flora={flora} lora={lora}");
+        assert!(flora < naive, "flora={flora} naive={naive}");
+        // paper: FLORA(256) overhead ≈ 30% of naive on 3B
+        let frac = flora as f64 / naive as f64;
+        assert!(frac < 0.5, "frac={frac}");
+    }
+
+    #[test]
+    fn lora_can_beat_flora_under_linear_optimizer_small_rank() {
+        // Table 4's observation: with an unfactored (linear-memory) base
+        // optimizer, LoRA's tiny trainable set wins at small r ...
+        let d = Dims::t5_small_sim();
+        let role = StateRole::Accumulation;
+        let lora8 = breakdown(&d, Method::Lora(8), OptKind::AdafactorNoFactor, role, 1, false);
+        let flora8 = breakdown(&d, Method::Flora(8), OptKind::AdafactorNoFactor, role, 1, false);
+        let lora_state = lora8.opt_state + lora8.method_state + lora8.extra_params;
+        let flora_state = flora8.opt_state + flora8.method_state;
+        assert!(lora_state < flora_state);
+        // ... and FLORA wins at r=256 (the crossover the paper reports)
+        let lora256 = breakdown(&d, Method::Lora(256), OptKind::AdafactorNoFactor, role, 1, false);
+        let flora256 = breakdown(&d, Method::Flora(256), OptKind::AdafactorNoFactor, role, 1, false);
+        let l = lora256.opt_state + lora256.method_state + lora256.extra_params;
+        let f = flora256.opt_state + flora256.method_state;
+        assert!(f < l, "flora={f} lora={l}");
+    }
+
+    #[test]
+    fn galore_stores_more_than_flora() {
+        // Table 6: GaLore keeps P on device; FLORA only a seed
+        let d = Dims::t5_small_sim();
+        let ga = breakdown(&d, Method::Galore(128), OptKind::Adam, StateRole::Momentum, 16, false);
+        let fl = breakdown(&d, Method::Flora(128), OptKind::Adafactor, StateRole::Momentum, 16, false);
+        assert!(
+            fl.opt_state + fl.method_state < ga.opt_state + ga.method_state
+        );
+    }
+
+    #[test]
+    fn checkpointing_reduces_activations() {
+        let d = Dims::gpt2_base_sim();
+        let full = activation_bytes(&d, 4, false);
+        let ac = activation_bytes(&d, 4, true);
+        // logits (b·s·vocab) are retained in both modes and dominate the AC
+        // residuals; the win is still >4x on this config
+        assert!(ac < full / 4);
+    }
+
+    #[test]
+    fn gpt3_future_work_estimate() {
+        // paper §5: "for GPT-3 we estimate the compressed optimization
+        // state of r=256 is only 2.08% of its original memory"
+        let gpt3 = Dims {
+            vocab: 50257,
+            d_model: 12288,
+            n_layers: 96,
+            d_ff: 49152,
+            seq_len: 2048,
+            n_heads: 96,
+        };
+        let entries = gpt3.params();
+        let full: u64 = entries.iter().map(|e| e.numel() * F32).sum();
+        let compressed: u64 = entries
+            .iter()
+            .map(|e| {
+                if e.projectable { e.rows * 256 * F32 } else { e.numel() * F32 }
+            })
+            .sum();
+        let pct = 100.0 * compressed as f64 / full as f64;
+        assert!(pct < 6.0, "compressed state {pct:.2}% of full");
+    }
+}

@@ -1,0 +1,140 @@
+//! Corpus BLEU-4 (Papineni et al.) in the SacreBLEU style the paper cites:
+//! clipped modified n-gram precision up to 4-grams, geometric mean, brevity
+//! penalty, with add-1 smoothing on the higher orders (smoothing method
+//! "add-k", k=1 — sacreBLEU's `smooth_method=exp` differs slightly; the
+//! ranking behaviour, which Tables 1b/2 rely on, is identical).
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Bleu {
+    /// corpus score scaled to 0-100
+    pub score: f64,
+    pub precisions: [f64; 4],
+    pub brevity_penalty: f64,
+    pub hyp_len: usize,
+    pub ref_len: usize,
+}
+
+fn ngrams(xs: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m = HashMap::new();
+    if xs.len() >= n {
+        for w in xs.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus-level BLEU over (hypothesis, reference) pairs.
+pub fn bleu_corpus(pairs: &[(Vec<i32>, Vec<i32>)]) -> Bleu {
+    let mut matches = [0usize; 4];
+    let mut totals = [0usize; 4];
+    let (mut hyp_len, mut ref_len) = (0usize, 0usize);
+
+    for (hyp, rf) in pairs {
+        hyp_len += hyp.len();
+        ref_len += rf.len();
+        for n in 1..=4 {
+            let h = ngrams(hyp, n);
+            let r = ngrams(rf, n);
+            totals[n - 1] += h.values().sum::<usize>();
+            matches[n - 1] += h
+                .iter()
+                .map(|(g, &hc)| hc.min(r.get(g).copied().unwrap_or(0)))
+                .sum::<usize>();
+        }
+    }
+
+    let mut precisions = [0.0f64; 4];
+    let mut log_sum = 0.0f64;
+    for n in 0..4 {
+        // add-1 smoothing above unigrams (standard for short corpora)
+        let (m, t) = if n == 0 {
+            (matches[0] as f64, totals[0] as f64)
+        } else {
+            (matches[n] as f64 + 1.0, totals[n] as f64 + 1.0)
+        };
+        let p = if t > 0.0 { m / t } else { 0.0 };
+        precisions[n] = p;
+        log_sum += if p > 0.0 { p.ln() } else { f64::NEG_INFINITY };
+    }
+
+    let bp = if hyp_len == 0 {
+        0.0
+    } else if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+
+    let score = if log_sum.is_finite() {
+        100.0 * bp * (log_sum / 4.0).exp()
+    } else {
+        0.0
+    };
+    Bleu { score, precisions, brevity_penalty: bp, hyp_len, ref_len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_scores_100() {
+        let pairs = vec![(vec![1, 2, 3, 4, 5, 6], vec![1, 2, 3, 4, 5, 6])];
+        let b = bleu_corpus(&pairs);
+        assert!(b.score > 90.0, "score={}", b.score); // smoothing shaves a bit
+        assert_eq!(b.brevity_penalty, 1.0);
+        assert_eq!(b.precisions[0], 1.0);
+    }
+
+    #[test]
+    fn disjoint_scores_zero() {
+        let pairs = vec![(vec![1, 1, 1, 1], vec![2, 2, 2, 2])];
+        let b = bleu_corpus(&pairs);
+        assert_eq!(b.score, 0.0); // unigram precision 0 (unsmoothed) → 0
+    }
+
+    #[test]
+    fn brevity_penalty_applies() {
+        // hypothesis shorter than reference
+        let pairs = vec![(vec![1, 2, 3], vec![1, 2, 3, 4, 5, 6])];
+        let b = bleu_corpus(&pairs);
+        assert!(b.brevity_penalty < 1.0);
+        let want = (1.0f64 - 6.0 / 3.0).exp();
+        assert!((b.brevity_penalty - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipping_prevents_ngram_stuffing() {
+        // hyp repeats a matching token; clipped count caps the precision
+        let pairs = vec![(vec![7, 7, 7, 7], vec![7, 8, 9, 10])];
+        let b = bleu_corpus(&pairs);
+        assert!((b.precisions[0] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_overlap_between_zero_and_hundred() {
+        let pairs = vec![(vec![1, 2, 3, 9, 5, 6], vec![1, 2, 3, 4, 5, 6])];
+        let b = bleu_corpus(&pairs);
+        assert!(b.score > 5.0 && b.score < 90.0, "score={}", b.score);
+    }
+
+    #[test]
+    fn corpus_pools_statistics() {
+        // corpus BLEU is not the mean of sentence BLEUs: check pooling
+        let pairs = vec![
+            (vec![1, 2, 3, 4], vec![1, 2, 3, 4]),
+            (vec![5, 6, 7, 8], vec![9, 10, 11, 12]),
+        ];
+        let b = bleu_corpus(&pairs);
+        assert!((b.precisions[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_corpus_safe() {
+        let b = bleu_corpus(&[]);
+        assert_eq!(b.score, 0.0);
+    }
+}

@@ -1,0 +1,48 @@
+//! Evaluation metrics, implemented from scratch over token-id sequences:
+//! ROUGE-1/2/L (F1, as the paper's R1/R2/RL columns), BLEU-4 with brevity
+//! penalty and add-1 smoothing (sacreBLEU's default smoothing for short
+//! segments), token accuracy and perplexity.
+
+mod bleu;
+mod rouge;
+
+pub use bleu::{bleu_corpus, Bleu};
+pub use rouge::{rouge_corpus, RougeScores};
+
+/// Perplexity from a mean token NLL in nats.
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+/// Exact-match token accuracy between two equal-role sequences (truncates
+/// to the shorter length; empty pairs count as 0).
+pub fn token_accuracy(hyp: &[i32], reference: &[i32]) -> f64 {
+    let n = hyp.len().min(reference.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let hits = hyp
+        .iter()
+        .zip(reference.iter())
+        .filter(|(a, b)| a == b)
+        .count();
+    hits as f64 / reference.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let v = 256.0f64;
+        assert!((perplexity(v.ln()) - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn token_accuracy_basics() {
+        assert_eq!(token_accuracy(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(token_accuracy(&[1, 0, 3], &[1, 2, 3]), 2.0 / 3.0);
+        assert_eq!(token_accuracy(&[], &[1]), 0.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! ROUGE-N and ROUGE-L (Lin, 2004) over token ids, reported as F1 — the
+//! convention behind the paper's R1/R2/RL columns.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RougeScores {
+    pub rouge1: f64,
+    pub rouge2: f64,
+    pub rouge_l: f64,
+}
+
+fn ngram_counts(xs: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m = HashMap::new();
+    if xs.len() >= n {
+        for w in xs.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// F1 of clipped n-gram overlap.
+fn rouge_n(hyp: &[i32], reference: &[i32], n: usize) -> f64 {
+    let h = ngram_counts(hyp, n);
+    let r = ngram_counts(reference, n);
+    let h_total: usize = h.values().sum();
+    let r_total: usize = r.values().sum();
+    if h_total == 0 || r_total == 0 {
+        return 0.0;
+    }
+    let overlap: usize = r
+        .iter()
+        .map(|(g, &rc)| rc.min(h.get(g).copied().unwrap_or(0)))
+        .sum();
+    let p = overlap as f64 / h_total as f64;
+    let rec = overlap as f64 / r_total as f64;
+    if p + rec == 0.0 {
+        0.0
+    } else {
+        2.0 * p * rec / (p + rec)
+    }
+}
+
+/// Longest common subsequence length (O(|a|·|b|) DP, rolling row).
+fn lcs_len(a: &[i32], b: &[i32]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y {
+                prev[j] + 1
+            } else {
+                prev[j + 1].max(cur[j])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+fn rouge_l(hyp: &[i32], reference: &[i32]) -> f64 {
+    if hyp.is_empty() || reference.is_empty() {
+        return 0.0;
+    }
+    let l = lcs_len(hyp, reference) as f64;
+    let p = l / hyp.len() as f64;
+    let r = l / reference.len() as f64;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// Sentence-level scores.
+pub fn rouge_sentence(hyp: &[i32], reference: &[i32]) -> RougeScores {
+    RougeScores {
+        rouge1: rouge_n(hyp, reference, 1),
+        rouge2: rouge_n(hyp, reference, 2),
+        rouge_l: rouge_l(hyp, reference),
+    }
+}
+
+/// Corpus scores: macro-average of sentence F1s (the common reporting for
+/// summarization; scaled to 0-100 like the paper's tables).
+pub fn rouge_corpus(pairs: &[(Vec<i32>, Vec<i32>)]) -> RougeScores {
+    if pairs.is_empty() {
+        return RougeScores::default();
+    }
+    let mut acc = RougeScores::default();
+    for (h, r) in pairs {
+        let s = rouge_sentence(h, r);
+        acc.rouge1 += s.rouge1;
+        acc.rouge2 += s.rouge2;
+        acc.rouge_l += s.rouge_l;
+    }
+    let n = pairs.len() as f64;
+    RougeScores {
+        rouge1: 100.0 * acc.rouge1 / n,
+        rouge2: 100.0 * acc.rouge2 / n,
+        rouge_l: 100.0 * acc.rouge_l / n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_sequences_score_one() {
+        let s = rouge_sentence(&[1, 2, 3, 4], &[1, 2, 3, 4]);
+        assert_eq!(s.rouge1, 1.0);
+        assert_eq!(s.rouge2, 1.0);
+        assert_eq!(s.rouge_l, 1.0);
+    }
+
+    #[test]
+    fn disjoint_sequences_score_zero() {
+        let s = rouge_sentence(&[1, 2, 3], &[4, 5, 6]);
+        assert_eq!(s, RougeScores { rouge1: 0.0, rouge2: 0.0, rouge_l: 0.0 });
+    }
+
+    #[test]
+    fn rouge1_hand_computed() {
+        // hyp {1,2,2,3}, ref {2,3,4}: overlap = min counts: 2→1? ref has one
+        // 2, hyp has two → clipped 1; 3 → 1. overlap=2, P=2/4, R=2/3
+        let h = [1, 2, 2, 3];
+        let r = [2, 3, 4];
+        let p: f64 = 2.0 / 4.0;
+        let rec: f64 = 2.0 / 3.0;
+        let want = 2.0 * p * rec / (p + rec);
+        assert!((rouge_n(&h, &r, 1) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge2_counts_bigrams() {
+        let h = [1, 2, 3];
+        let r = [1, 2, 4];
+        // bigrams hyp: (1,2),(2,3); ref: (1,2),(2,4); overlap 1
+        let p: f64 = 0.5;
+        let rec: f64 = 0.5;
+        assert!((rouge_n(&h, &r, 2) - 2.0 * p * rec / (p + rec)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lcs_classic() {
+        assert_eq!(lcs_len(&[1, 3, 2, 4], &[1, 2, 3, 4]), 3); // 1,3,4 or 1,2,4
+        assert_eq!(lcs_len(&[1, 2], &[3, 4]), 0);
+        assert_eq!(lcs_len(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn rouge_l_respects_order() {
+        // same unigrams, scrambled order: R1 stays 1, RL drops
+        let r = [1, 2, 3, 4, 5];
+        let h = [5, 4, 3, 2, 1];
+        let s = rouge_sentence(&h, &r);
+        assert_eq!(s.rouge1, 1.0);
+        assert!(s.rouge_l < 0.5);
+    }
+
+    #[test]
+    fn corpus_scales_to_100() {
+        let pairs = vec![(vec![1, 2], vec![1, 2]), (vec![3], vec![4])];
+        let s = rouge_corpus(&pairs);
+        assert!((s.rouge1 - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(rouge_sentence(&[], &[1, 2]).rouge1, 0.0);
+        assert_eq!(rouge_corpus(&[]).rouge_l, 0.0);
+    }
+}

@@ -1,0 +1,391 @@
+//! Figure-1 pilot study, entirely in rust.
+//!
+//! Reproduces the paper's §2.3 experiment: a feed-forward classifier whose
+//! middle (square) layer is updated by one of five rules —
+//!
+//!   * `Sgd`    — full-matrix SGD (upper bound);
+//!   * `Lora`   — the original LoRA patch, both A and B trained (Eq. 5–6);
+//!   * `LoraB`  — LoRA(B): A frozen at init, only B trained (Obs. 2.2);
+//!   * `Rp`     — random projection with a FIXED matrix, Eq. (20);
+//!   * `Rrp`    — resampled random projection (FLORA's key move, §2.4).
+//!
+//! The paper's claim, which `benches/figure1_pilot.rs` regenerates:
+//! LoRA ≈ LoRA(B) ≈ RP ≪ RRP ≈ SGD in training loss.
+//!
+//! Gradients are hand-derived (2-hidden-layer MLP, ReLU, softmax CE) — no
+//! autodiff substrate needed, and the math doubles as a check on the update
+//! rules' algebra.
+
+use crate::data::images::ImageTask;
+use crate::rp;
+use crate::tensor::{relu, softmax_rows, Matrix};
+use crate::util::rng::Rng;
+
+/// Which rule updates the patched middle layer W1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Updater {
+    Sgd,
+    Lora,
+    LoraB,
+    Rp,
+    Rrp,
+}
+
+impl Updater {
+    pub fn name(self) -> &'static str {
+        match self {
+            Updater::Sgd => "SGD",
+            Updater::Lora => "LoRA",
+            Updater::LoraB => "LoRA(B)",
+            Updater::Rp => "RP",
+            Updater::Rrp => "RRP",
+        }
+    }
+
+    pub fn all() -> [Updater; 5] {
+        [Updater::Sgd, Updater::Lora, Updater::LoraB, Updater::Rp, Updater::Rrp]
+    }
+}
+
+/// Pilot MLP: input → W0 → relu → (W1 + patch) → relu → W2 → softmax.
+/// W0/W2 always train with plain SGD; W1 is the experiment's subject,
+/// matching the paper ("we apply the LoRA patch to the first layer of the
+/// network with a shape of 768×768" — here `hidden×hidden`).
+pub struct PilotNet {
+    pub w0: Matrix,        // [in, hidden]
+    pub w1: Matrix,        // [hidden, hidden] — patched layer
+    pub w2: Matrix,        // [hidden, classes]
+    pub lora_a: Matrix,    // [rank, hidden]
+    pub lora_b: Matrix,    // [hidden, rank]
+    pub updater: Updater,
+    pub rank: usize,
+    pub lr: f32,
+    /// When false, W0 is a frozen random-feature extractor. The paper's
+    /// MLP is wide enough (768²) that its patched layer dominates capacity;
+    /// at bench scale the surrounding layers would otherwise solve the task
+    /// on their own and mask the rank effect, so the Figure-1 bench freezes
+    /// W0 to keep the patched layer the bottleneck (DESIGN.md §4).
+    pub train_w0: bool,
+    /// When false, W2 is frozen too: the task must then be solved entirely
+    /// through the patched layer, so the rank of its total update is the
+    /// binding constraint — this is what makes Figure 1's separation appear
+    /// at bench scale (the paper gets it from 768-dim width + 1 epoch).
+    pub train_w2: bool,
+    rp_seed: u64,
+    step: u64,
+}
+
+impl PilotNet {
+    pub fn new(
+        input: usize,
+        hidden: usize,
+        classes: usize,
+        rank: usize,
+        updater: Updater,
+        lr: f32,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let s0 = (1.0 / input as f32).sqrt();
+        let s1 = (1.0 / hidden as f32).sqrt();
+        Self {
+            w0: Matrix::gaussian(input, hidden, s0, &mut rng),
+            w1: Matrix::gaussian(hidden, hidden, s1, &mut rng),
+            w2: Matrix::gaussian(hidden, classes, s1, &mut rng),
+            // LoRA init: B = 0, A ~ N(0, 1/r) (paper §2.1)
+            lora_a: Matrix::gaussian(rank, hidden, (1.0 / rank as f32).sqrt(), &mut rng),
+            lora_b: Matrix::zeros(hidden, rank),
+            updater,
+            rank,
+            lr,
+            train_w0: true,
+            train_w2: true,
+            rp_seed: seed.wrapping_add(0x5EED),
+            step: 0,
+        }
+    }
+
+    /// Effective middle weight: W1 (+ BA for the LoRA variants).
+    fn w1_eff(&self) -> Matrix {
+        match self.updater {
+            Updater::Lora | Updater::LoraB => {
+                &self.w1 + &self.lora_b.matmul(&self.lora_a)
+            }
+            _ => self.w1.clone(),
+        }
+    }
+
+    /// Forward pass returning (h0, h1, probs) for backprop reuse.
+    fn forward(&self, x: &Matrix) -> (Matrix, Matrix, Matrix) {
+        let h0 = relu(&x.matmul(&self.w0));
+        let h1 = relu(&h0.matmul(&self.w1_eff()));
+        let probs = softmax_rows(&h1.matmul(&self.w2));
+        (h0, h1, probs)
+    }
+
+    /// Mean cross-entropy of a batch.
+    pub fn loss(&self, x: &Matrix, labels: &[usize]) -> f32 {
+        let (_, _, probs) = self.forward(x);
+        let mut total = 0.0;
+        for (i, &y) in labels.iter().enumerate() {
+            total -= (probs.at(i, y).max(1e-12)).ln();
+        }
+        total / labels.len() as f32
+    }
+
+    pub fn accuracy(&self, x: &Matrix, labels: &[usize]) -> f32 {
+        let (_, _, probs) = self.forward(x);
+        let mut hit = 0usize;
+        for (i, &y) in labels.iter().enumerate() {
+            let row = probs.row(i);
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == y {
+                hit += 1;
+            }
+        }
+        hit as f32 / labels.len() as f32
+    }
+
+    /// One SGD step on a batch; returns the batch loss (pre-update).
+    pub fn train_step(&mut self, x: &Matrix, labels: &[usize]) -> f32 {
+        let n = labels.len() as f32;
+        let (h0, h1, probs) = self.forward(x);
+
+        // dL/dlogits = (probs - onehot)/n
+        let mut dz = probs.clone();
+        for (i, &y) in labels.iter().enumerate() {
+            *dz.at_mut(i, y) -= 1.0;
+        }
+        let dz = dz.scale(1.0 / n);
+
+        // loss before the step (reuse probs)
+        let mut loss = 0.0;
+        for (i, &y) in labels.iter().enumerate() {
+            loss -= probs.at(i, y).max(1e-12).ln();
+        }
+        loss /= n;
+
+        // backprop
+        let g_w2 = h1.matmul_tn(&dz); // [hidden, classes]
+        let dh1 = dz.matmul_nt(&self.w2); // [B, hidden]
+        // relu'(h1): h1 > 0
+        let dh1 = dh1.hadamard(&h1.map(|v| if v > 0.0 { 1.0 } else { 0.0 }));
+        let g_w1 = h0.matmul_tn(&dh1); // [hidden, hidden] — ∇_W L of the patch
+        let w1e = self.w1_eff();
+        let dh0 = dh1.matmul_nt(&w1e);
+        let dh0 = dh0.hadamard(&h0.map(|v| if v > 0.0 { 1.0 } else { 0.0 }));
+        let g_w0 = x.matmul_tn(&dh0);
+
+        // always-SGD layers (W0 optionally frozen; see field docs)
+        if self.train_w0 {
+            self.w0.add_scaled_inplace(&g_w0, -self.lr);
+        }
+        if self.train_w2 {
+            self.w2.add_scaled_inplace(&g_w2, -self.lr);
+        }
+
+        // the patched layer
+        match self.updater {
+            Updater::Sgd => {
+                self.w1.add_scaled_inplace(&g_w1, -self.lr);
+            }
+            Updater::Lora => {
+                // Eq. (5)-(6): dA = Bᵀ G, dB = G Aᵀ — simultaneous update
+                let g_a = self.lora_b.matmul_tn(&g_w1); // [r, hidden]
+                let g_b = g_w1.matmul_nt(&self.lora_a); // [hidden, r]
+                self.lora_a.add_scaled_inplace(&g_a, -self.lr);
+                self.lora_b.add_scaled_inplace(&g_b, -self.lr);
+            }
+            Updater::LoraB => {
+                let g_b = g_w1.matmul_nt(&self.lora_a);
+                self.lora_b.add_scaled_inplace(&g_b, -self.lr);
+            }
+            Updater::Rp => {
+                // Eq. (20) with the FIXED A₀
+                let a = rp::projection(self.rp_seed, self.rank, g_w1.cols);
+                let upd = rp::decompress(&rp::compress(&g_w1, &a), &a);
+                self.w1.add_scaled_inplace(&upd, -self.lr);
+            }
+            Updater::Rrp => {
+                // FLORA: fresh projection every step
+                let seed = rp::param_seed(self.rp_seed, self.step as usize + 1);
+                let a = rp::projection(seed, self.rank, g_w1.cols);
+                let upd = rp::decompress(&rp::compress(&g_w1, &a), &a);
+                self.w1.add_scaled_inplace(&upd, -self.lr);
+            }
+        }
+        self.step += 1;
+        loss
+    }
+}
+
+/// A recorded training curve for one updater.
+pub struct PilotCurve {
+    pub updater: Updater,
+    pub losses: Vec<f32>,
+    pub final_train_acc: f32,
+}
+
+/// Run the full pilot: every updater on the same data stream/seed.
+pub fn run_pilot(
+    task: &ImageTask,
+    steps: usize,
+    batch: usize,
+    rank: usize,
+    lr: f32,
+    seed: u64,
+    train_w0: bool,
+    train_w2: bool,
+) -> Vec<PilotCurve> {
+    Updater::all()
+        .iter()
+        .map(|&u| {
+            let mut net = PilotNet::new(
+                task.input_dim(),
+                256,
+                task.classes,
+                rank,
+                u,
+                lr,
+                seed,
+            );
+            net.train_w0 = train_w0;
+            net.train_w2 = train_w2;
+            let mut data_rng = Rng::new(seed.wrapping_add(1));
+            let mut losses = Vec::with_capacity(steps);
+            let mut xs = Matrix::zeros(batch, task.input_dim());
+            let mut ys = vec![0usize; batch];
+            for _ in 0..steps {
+                task.fill_batch(&mut xs, &mut ys, &mut data_rng);
+                losses.push(net.train_step(&xs, &ys));
+            }
+            task.fill_batch(&mut xs, &mut ys, &mut data_rng);
+            let final_train_acc = net.accuracy(&xs, &ys);
+            PilotCurve { updater: u, losses, final_train_acc }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images::ImageTask;
+
+    fn task() -> ImageTask {
+        ImageTask::fashion_like(10, 64, 0.3, 7)
+    }
+
+    fn final_loss(u: Updater, steps: usize) -> f32 {
+        let t = task();
+        let mut net = PilotNet::new(t.input_dim(), 64, t.classes, 8, u, 0.05, 3);
+        let mut rng = Rng::new(4);
+        let mut xs = Matrix::zeros(16, t.input_dim());
+        let mut ys = vec![0usize; 16];
+        let mut last = 0.0;
+        for _ in 0..steps {
+            t.fill_batch(&mut xs, &mut ys, &mut rng);
+            last = net.train_step(&xs, &ys);
+        }
+        last
+    }
+
+    #[test]
+    fn every_updater_decreases_loss() {
+        for u in Updater::all() {
+            let early = final_loss(u, 5);
+            let late = final_loss(u, 120);
+            assert!(
+                late < early,
+                "{}: early={early} late={late}",
+                u.name()
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_gradients_are_correct_fd_check() {
+        // finite-difference check of the hand-derived W1 gradient
+        let t = task();
+        let mut rng = Rng::new(5);
+        let mut xs = Matrix::zeros(4, t.input_dim());
+        let mut ys = vec![0usize; 4];
+        t.fill_batch(&mut xs, &mut ys, &mut rng);
+        let net = PilotNet::new(t.input_dim(), 32, t.classes, 4, Updater::Sgd, 0.0, 6);
+
+        // analytic gradient via a zero-lr train step on a clone
+        let mut probe = PilotNet::new(t.input_dim(), 32, t.classes, 4, Updater::Sgd, 1.0, 6);
+        let w1_before = probe.w1.clone();
+        probe.train_step(&xs, &ys);
+        let g_analytic = &w1_before - &probe.w1; // lr=1 ⇒ g = -ΔW
+
+        let eps = 1e-3;
+        for &(i, j) in &[(0usize, 0usize), (3, 7), (13, 21)] {
+            let mut plus = PilotNet::new(t.input_dim(), 32, t.classes, 4, Updater::Sgd, 0.0, 6);
+            *plus.w1.at_mut(i, j) += eps;
+            let mut minus = PilotNet::new(t.input_dim(), 32, t.classes, 4, Updater::Sgd, 0.0, 6);
+            *minus.w1.at_mut(i, j) -= eps;
+            let fd = (plus.loss(&xs, &ys) - minus.loss(&xs, &ys)) / (2.0 * eps);
+            let an = g_analytic.at(i, j);
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                "({i},{j}): fd={fd} analytic={an}"
+            );
+        }
+        let _ = net;
+    }
+
+    #[test]
+    fn lora_b_stays_zero_for_a_frozen_variant() {
+        // LoRA(B): A must never move
+        let t = task();
+        let mut net =
+            PilotNet::new(t.input_dim(), 32, t.classes, 4, Updater::LoraB, 0.05, 8);
+        let a0 = net.lora_a.clone();
+        let mut rng = Rng::new(9);
+        let mut xs = Matrix::zeros(8, t.input_dim());
+        let mut ys = vec![0usize; 8];
+        for _ in 0..10 {
+            t.fill_batch(&mut xs, &mut ys, &mut rng);
+            net.train_step(&xs, &ys);
+        }
+        assert!(net.lora_a.allclose(&a0, 0.0));
+        assert!(net.lora_b.frobenius_norm() > 0.0);
+    }
+
+    #[test]
+    fn rp_uses_fixed_projection_rrp_resamples() {
+        // With zero LR on W0/W2... simpler: check W1 update direction
+        // differs between two RRP steps but repeats for RP given the same
+        // gradient — proxy: total W1 change after identical batches.
+        let t = task();
+        let mut rng = Rng::new(10);
+        let mut xs = Matrix::zeros(8, t.input_dim());
+        let mut ys = vec![0usize; 8];
+        t.fill_batch(&mut xs, &mut ys, &mut rng);
+
+        let mut rp1 = PilotNet::new(t.input_dim(), 32, t.classes, 4, Updater::Rp, 0.01, 11);
+        let mut rp2 = PilotNet::new(t.input_dim(), 32, t.classes, 4, Updater::Rp, 0.01, 11);
+        rp1.train_step(&xs, &ys);
+        rp2.train_step(&xs, &ys);
+        assert!(rp1.w1.allclose(&rp2.w1, 0.0), "RP is deterministic per step");
+
+        let mut rrp = PilotNet::new(t.input_dim(), 32, t.classes, 4, Updater::Rrp, 0.01, 11);
+        let w_afters: Vec<Matrix> = (0..2)
+            .map(|_| {
+                rrp.train_step(&xs, &ys);
+                rrp.w1.clone()
+            })
+            .collect();
+        let d1 = (&w_afters[0] - &rp1.w1).frobenius_norm();
+        // second RRP step uses a different projection than the first
+        let step2 = &w_afters[1] - &w_afters[0];
+        let step1 = &w_afters[0] - &rp2.w1;
+        let diff = (&step2 - &step1).frobenius_norm();
+        assert!(diff > 1e-6 || d1 > 0.0);
+    }
+}

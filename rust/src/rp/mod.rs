@@ -1,0 +1,158 @@
+//! Rust reference implementation of FLORA's random-projection operations.
+//!
+//! Mirrors `python/compile/kernels/rp.py` (compress / decompress / transfer /
+//! seeded projection) so the *algorithm* can be validated and benchmarked
+//! without the XLA runtime, and powers the Figure-1 pilot's RP/RRP updaters.
+//! Distributional — not bitwise — parity with the JAX side: the projection
+//! entries come from this crate's RNG, N(0, 1/r), exactly the Algorithm-1/2
+//! sampling law.
+
+use crate::tensor::Matrix;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Generate the projection matrix A ∈ R^{r×m}, entries N(0, 1/r), from a
+/// seed — the paper's "store the seed, regenerate the matrix" trick.
+pub fn projection(seed: u64, r: usize, m: usize) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::gaussian(r, m, (1.0 / r as f32).sqrt(), &mut rng)
+}
+
+/// Per-parameter independent seed (same role as flora.derive_seed).
+pub fn param_seed(base: u64, index: usize) -> u64 {
+    derive_seed(base, index as u64)
+}
+
+/// Down-project a gradient: C = G Aᵀ ([n,m] → [n,r]).
+pub fn compress(g: &Matrix, a: &Matrix) -> Matrix {
+    g.matmul_nt(a)
+}
+
+/// Fused accumulate: C += G Aᵀ (Algorithm 1 line 9).
+pub fn compress_accumulate(c: &mut Matrix, g: &Matrix, a: &Matrix) {
+    let delta = g.matmul_nt(a);
+    c.add_scaled_inplace(&delta, 1.0);
+}
+
+/// Up-project: Ĝ = C A ([n,r] → [n,m]).
+pub fn decompress(c: &Matrix, a: &Matrix) -> Matrix {
+    c.matmul(a)
+}
+
+/// Subspace hand-off for EMA state: M' = M A_old A_newᵀ (Algorithm 2 l.13).
+pub fn transfer(m: &Matrix, a_old: &Matrix, a_new: &Matrix) -> Matrix {
+    compress(&decompress(m, a_old), a_new)
+}
+
+/// One full compress→decompress round trip with a fresh seed: the RP update
+/// of Eq. (20), used by the pilot study.
+pub fn project_gradient(g: &Matrix, seed: u64, r: usize) -> Matrix {
+    let a = projection(seed, r, g.cols);
+    decompress(&compress(g, &a), &a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randn(seed: u64, n: usize, m: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(n, m, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn projection_deterministic() {
+        let a = projection(42, 8, 32);
+        let b = projection(42, 8, 32);
+        assert!(a.allclose(&b, 0.0));
+        let c = projection(43, 8, 32);
+        assert!(!a.allclose(&c, 1e-3));
+    }
+
+    #[test]
+    fn projection_scale_theorem_2_4() {
+        // E[AᵀA] = I with elementwise deviation shrinking in r
+        let m = 12;
+        let mut devs = Vec::new();
+        for r in [32usize, 512] {
+            let a = projection(7, r, m);
+            let ata = a.matmul_tn(&a);
+            let mut dev = 0.0f32;
+            for i in 0..m {
+                for j in 0..m {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    dev = dev.max((ata.at(i, j) - want).abs());
+                }
+            }
+            devs.push(dev);
+        }
+        assert!(devs[1] < devs[0], "{devs:?}");
+        assert!(devs[1] < 0.2, "{devs:?}");
+    }
+
+    #[test]
+    fn jl_norm_preservation() {
+        // Lemma 2.3: row norms approximately preserved by compression
+        let g = randn(0, 32, 128);
+        let a = projection(1, 64, 128);
+        let c = compress(&g, &a);
+        for i in 0..g.rows {
+            let ng: f32 = g.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nc: f32 = c.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            let ratio = nc / ng;
+            assert!(ratio > 0.55 && ratio < 1.45, "row {i}: {ratio}");
+        }
+    }
+
+    #[test]
+    fn compress_accumulate_matches_separate_ops() {
+        let g1 = randn(2, 8, 24);
+        let g2 = randn(3, 8, 24);
+        let a = projection(4, 4, 24);
+        let mut c = Matrix::zeros(8, 4);
+        compress_accumulate(&mut c, &g1, &a);
+        compress_accumulate(&mut c, &g2, &a);
+        let want = &compress(&g1, &a) + &compress(&g2, &a);
+        assert!(c.allclose(&want, 1e-5));
+    }
+
+    #[test]
+    fn decompression_unbiased_over_seeds() {
+        // E_A[G AᵀA] = G: average reconstruction over many seeds converges
+        let g = randn(5, 6, 10);
+        let mut acc = Matrix::zeros(6, 10);
+        let trials = 300;
+        for s in 0..trials {
+            let rec = project_gradient(&g, 1000 + s, 64);
+            acc.add_scaled_inplace(&rec, 1.0 / trials as f32);
+        }
+        let err = (&acc - &g).max_abs();
+        assert!(err < 0.25, "err={err}");
+    }
+
+    #[test]
+    fn transfer_preserves_energy_roughly() {
+        let m_state = randn(6, 64, 64); // n=64 x r=64 compressed state
+        let a_old = projection(8, 64, 64);
+        let a_new = projection(9, 64, 64);
+        let moved = transfer(&m_state, &a_old, &a_new);
+        let ratio = moved.frobenius_norm() / m_state.frobenius_norm();
+        assert!(ratio > 0.5 && ratio < 2.2, "ratio={ratio}");
+    }
+
+    #[test]
+    fn param_seeds_distinct() {
+        let mut set = std::collections::HashSet::new();
+        for i in 0..256 {
+            set.insert(param_seed(99, i));
+        }
+        assert_eq!(set.len(), 256);
+    }
+
+    #[test]
+    fn rank_controls_reconstruction_error() {
+        let g = randn(10, 16, 64);
+        let e_small = (&project_gradient(&g, 11, 4) - &g).frobenius_norm();
+        let e_large = (&project_gradient(&g, 11, 256) - &g).frobenius_norm();
+        assert!(e_large < e_small, "{e_small} vs {e_large}");
+    }
+}

@@ -1,0 +1,113 @@
+//! PJRT client wrapper: HLO-text loading, compile caching, execution with
+//! ABI validation, and ledger-tracked output sizes.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ExecutableInfo, Manifest};
+use crate::memory::BufferLedger;
+use crate::{debug, info};
+
+/// A compiled executable plus its manifest metadata.
+pub struct Executable {
+    pub info: ExecutableInfo,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with ABI validation. Inputs must match `info.inputs` in
+    /// count; outputs are the decomposed result tuple in `info.outputs`
+    /// order (aot.py lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>, String> {
+        if inputs.len() != self.info.inputs.len() {
+            return Err(format!(
+                "{}: got {} inputs, manifest wants {} (first expected: {:?})",
+                self.info.name,
+                inputs.len(),
+                self.info.inputs.len(),
+                self.info.inputs.first().map(|t| &t.name),
+            ));
+        }
+        let bufs = self
+            .exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| format!("{}: execute: {e:?}", self.info.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("{}: to_literal: {e:?}", self.info.name))?;
+        let outputs = result
+            .to_tuple()
+            .map_err(|e| format!("{}: untuple: {e:?}", self.info.name))?;
+        if outputs.len() != self.info.outputs.len() {
+            return Err(format!(
+                "{}: got {} outputs, manifest wants {}",
+                self.info.name,
+                outputs.len(),
+                self.info.outputs.len()
+            ));
+        }
+        Ok(outputs)
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compile cache over the manifest.
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub ledger: BufferLedger,
+    client: PjRtClient,
+    cache: HashMap<String, Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &str) -> Result<Self, String> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
+        info!(
+            "runtime up: platform={} artifacts={} ({} executables)",
+            client.platform_name(),
+            artifacts_dir,
+            manifest.executables.len()
+        );
+        Ok(Self { manifest, client, cache: HashMap::new(), ledger: BufferLedger::new() })
+    }
+
+    /// Load + compile (cached) an executable by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<Rc<Executable>, String> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.executable(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file
+                .to_str()
+                .ok_or_else(|| format!("{name}: non-utf8 path"))?,
+        )
+        .map_err(|e| format!("{name}: parse HLO text: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("{name}: compile: {e:?}"))?;
+        debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let e = Rc::new(Executable { info, exe });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Total state bytes a set of manifest groups would occupy — used by
+    /// integration tests to validate the analytic accountant.
+    pub fn group_bytes(&self, exe: &str, group: &str) -> Result<u64, String> {
+        let info = self.manifest.executable(exe)?;
+        Ok(info
+            .inputs_in_group(group)
+            .iter()
+            .map(|t| t.byte_size() as u64)
+            .sum())
+    }
+}

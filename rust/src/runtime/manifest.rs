@@ -1,0 +1,266 @@
+//! artifacts/manifest.json — the ABI contract emitted by python/compile/aot.py.
+//!
+//! For every executable it records the ordered input and output tensors
+//! (name, shape, dtype). The coordinator assembles input literal lists in
+//! exactly this order and maps outputs back into named state groups.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.numel() * 4 // f32/i32/u32 only in this ABI
+    }
+
+    /// group prefix, e.g. "params" for "params/layer0/attn/wq"
+    pub fn group(&self) -> &str {
+        self.name.split('/').next().unwrap_or("")
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecutableInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub model: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ExecutableInfo {
+    /// Input specs whose name starts with `prefix/`.
+    pub fn inputs_in_group(&self, prefix: &str) -> Vec<&TensorSpec> {
+        self.inputs
+            .iter()
+            .filter(|t| t.group() == prefix)
+            .collect()
+    }
+
+    pub fn outputs_in_group(&self, prefix: &str) -> Vec<&TensorSpec> {
+        self.outputs
+            .iter()
+            .filter(|t| t.group() == prefix)
+            .collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: String,
+    pub fields: BTreeMap<String, f64>,
+}
+
+impl ModelInfo {
+    pub fn get(&self, key: &str) -> Option<usize> {
+        self.fields.get(key).map(|v| *v as usize)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub executables: BTreeMap<String, ExecutableInfo>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    fn parse(text: &str, dir: PathBuf) -> Result<Self, String> {
+        let root = json::parse(text).map_err(|e| e.to_string())?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or("manifest missing version")?;
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing models")?
+        {
+            let kind = m
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("lm")
+                .to_string();
+            let mut fields = BTreeMap::new();
+            if let Some(obj) = m.as_obj() {
+                for (k, v) in obj {
+                    if let Some(f) = v.as_f64() {
+                        fields.insert(k.clone(), f);
+                    }
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelInfo { name: name.clone(), kind, fields },
+            );
+        }
+
+        let mut executables = BTreeMap::new();
+        for (name, e) in root
+            .get("executables")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing executables")?
+        {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{name}: missing file"))?;
+            let model = e
+                .get("model")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            let inputs = parse_specs(e.get("inputs"), name)?;
+            let outputs = parse_specs(e.get("outputs"), name)?;
+            executables.insert(
+                name.clone(),
+                ExecutableInfo {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    model,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Self { dir, executables, models })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableInfo, String> {
+        self.executables.get(name).ok_or_else(|| {
+            format!(
+                "executable {name:?} not in manifest (have: {} entries; \
+                 rebuild artifacts?)",
+                self.executables.len()
+            )
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo, String> {
+        self.models
+            .get(name)
+            .ok_or_else(|| format!("model {name:?} not in manifest"))
+    }
+}
+
+fn parse_specs(j: Option<&Json>, ctx: &str) -> Result<Vec<TensorSpec>, String> {
+    let arr = j
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{ctx}: missing tensor specs"))?;
+    arr.iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{ctx}: spec missing name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("{ctx}/{name}: missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| format!("{ctx}: bad dim")))
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("float32")
+                .to_string();
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "version": 1,
+      "models": {
+        "lm-tiny": {"kind": "lm", "vocab": 64, "d_model": 32, "seq_len": 32,
+                    "n_layers": 2, "n_heads": 2, "d_ff": 64, "name": "lm-tiny"}
+      },
+      "executables": {
+        "lm-tiny/init": {
+          "file": "lm-tiny__init.hlo.txt",
+          "model": "lm-tiny",
+          "inputs": [{"name": "seed", "shape": [], "dtype": "uint32"}],
+          "outputs": [
+            {"name": "params/embed/tok", "shape": [64, 32], "dtype": "float32"},
+            {"name": "params/final_ln/scale", "shape": [32], "dtype": "float32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest_document() {
+        let m = Manifest::parse(DOC, PathBuf::from("/tmp/a")).unwrap();
+        let e = m.executable("lm-tiny/init").unwrap();
+        assert_eq!(e.inputs.len(), 1);
+        assert_eq!(e.outputs[0].shape, vec![64, 32]);
+        assert_eq!(e.outputs[0].numel(), 2048);
+        assert_eq!(e.outputs[0].group(), "params");
+        assert_eq!(e.file, PathBuf::from("/tmp/a/lm-tiny__init.hlo.txt"));
+        assert_eq!(m.model("lm-tiny").unwrap().get("vocab"), Some(64));
+    }
+
+    #[test]
+    fn scalar_spec_numel_is_one() {
+        let t = TensorSpec { name: "seed".into(), shape: vec![], dtype: "uint32".into() };
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.byte_size(), 4);
+    }
+
+    #[test]
+    fn missing_executable_is_helpful() {
+        let m = Manifest::parse(DOC, PathBuf::from("/tmp")).unwrap();
+        let err = m.executable("nope").unwrap_err();
+        assert!(err.contains("not in manifest"));
+    }
+
+    #[test]
+    fn group_filters() {
+        let m = Manifest::parse(DOC, PathBuf::from("/tmp")).unwrap();
+        let e = m.executable("lm-tiny/init").unwrap();
+        assert_eq!(e.outputs_in_group("params").len(), 2);
+        assert_eq!(e.outputs_in_group("opt").len(), 0);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let doc = DOC.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&doc, PathBuf::from("/tmp")).is_err());
+    }
+}

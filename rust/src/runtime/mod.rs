@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) and executes them on the CPU PJRT client via the `xla`
+//! crate. This is the only module that touches XLA; everything above it
+//! works with `Literal` groups described by the manifest.
+//!
+//! Interchange is HLO **text** — xla_extension 0.5.1 rejects jax≥0.5
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids (see /opt/xla-example/README.md and DESIGN.md §8).
+
+pub mod client;
+pub mod manifest;
+pub mod state;
+pub mod values;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{Manifest, ModelInfo, TensorSpec};
+pub use state::StateStore;
+pub use values::{
+    literal_f32, literal_i32, literal_to_f32, scalar_f32, scalar_i32,
+    scalar_u32,
+};

@@ -1,0 +1,198 @@
+//! Named literal groups: the training state the coordinator threads through
+//! executables. Each group ("params", "opt", "acc", "mom", ...) is an
+//! ordered list of literals matching the manifest's sorted-name order; the
+//! ledger tracks their byte footprint so integration tests can reconcile
+//! the live numbers with the analytic accountant.
+
+use std::collections::BTreeMap;
+
+use xla::Literal;
+
+use super::manifest::TensorSpec;
+use super::values::zeros_for;
+use crate::memory::BufferLedger;
+
+/// One named group of state tensors.
+pub struct Group {
+    pub specs: Vec<TensorSpec>,
+    pub values: Vec<Literal>,
+}
+
+impl Group {
+    pub fn byte_size(&self) -> u64 {
+        self.specs.iter().map(|s| s.byte_size() as u64).sum()
+    }
+}
+
+/// All state for one training run.
+#[derive(Default)]
+pub struct StateStore {
+    groups: BTreeMap<String, Group>,
+    ledger: Option<BufferLedger>,
+}
+
+impl StateStore {
+    pub fn new(ledger: Option<BufferLedger>) -> Self {
+        Self { groups: BTreeMap::new(), ledger }
+    }
+
+    /// Install a group from executed outputs (consumes the literals).
+    pub fn put(&mut self, name: &str, specs: Vec<TensorSpec>, values: Vec<Literal>) {
+        assert_eq!(specs.len(), values.len(), "group {name}: spec/value mismatch");
+        let g = Group { specs, values };
+        if let Some(l) = &self.ledger {
+            l.alloc(g.byte_size());
+            if let Some(old) = self.groups.get(name) {
+                l.free(old.byte_size());
+            }
+        }
+        self.groups.insert(name.to_string(), g);
+    }
+
+    /// Allocate a zero-filled group matching manifest specs (accumulators,
+    /// momenta, optimizer state start at zero in this ABI).
+    pub fn put_zeros(&mut self, name: &str, specs: Vec<TensorSpec>) -> Result<(), String> {
+        let values = specs
+            .iter()
+            .map(zeros_for)
+            .collect::<Result<Vec<_>, _>>()?;
+        self.put(name, specs, values);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Group, String> {
+        self.groups
+            .get(name)
+            .ok_or_else(|| format!("state group {name:?} not initialized"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.groups.contains_key(name)
+    }
+
+    /// Replace a group's values (shapes unchanged — e.g. post-step params).
+    pub fn replace_values(&mut self, name: &str, values: Vec<Literal>) -> Result<(), String> {
+        let g = self
+            .groups
+            .get_mut(name)
+            .ok_or_else(|| format!("state group {name:?} not initialized"))?;
+        if values.len() != g.values.len() {
+            return Err(format!(
+                "group {name}: replacing {} values with {}",
+                g.values.len(),
+                values.len()
+            ));
+        }
+        g.values = values;
+        Ok(())
+    }
+
+    /// Zero a group in place (end of an accumulation cycle, Algorithm 1).
+    pub fn zero(&mut self, name: &str) -> Result<(), String> {
+        let g = self
+            .groups
+            .get_mut(name)
+            .ok_or_else(|| format!("state group {name:?} not initialized"))?;
+        g.values = g
+            .specs
+            .iter()
+            .map(zeros_for)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(())
+    }
+
+    /// Assemble an input literal list by cloning groups in order.
+    pub fn collect(&self, group_names: &[&str]) -> Result<Vec<Literal>, String> {
+        let mut out = Vec::new();
+        for name in group_names {
+            let g = self.get(name)?;
+            out.extend(g.values.iter().cloned());
+        }
+        Ok(out)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.groups.values().map(|g| g.byte_size()).sum()
+    }
+
+    pub fn group_bytes(&self, name: &str) -> u64 {
+        self.groups.get(name).map(|g| g.byte_size()).unwrap_or(0)
+    }
+
+    /// Host snapshot of every group (f32 state only — the full ABI), for
+    /// checkpointing.
+    pub fn snapshot(&self) -> Result<Vec<(String, Vec<(TensorSpec, Vec<f32>)>)>, String> {
+        self.groups
+            .iter()
+            .map(|(name, g)| {
+                let tensors = g
+                    .specs
+                    .iter()
+                    .zip(g.values.iter())
+                    .map(|(spec, lit)| {
+                        let data = lit
+                            .to_vec::<f32>()
+                            .map_err(|e| format!("{}: {e:?}", spec.name))?;
+                        Ok((spec.clone(), data))
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                Ok((name.clone(), tensors))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: "float32".into() }
+    }
+
+    #[test]
+    fn zeros_group_and_bytes() {
+        let mut s = StateStore::new(Some(BufferLedger::new()));
+        s.put_zeros("acc", vec![spec("acc/a", &[4, 8]), spec("acc/b", &[16])])
+            .unwrap();
+        assert_eq!(s.group_bytes("acc"), (32 + 16) * 4);
+        assert_eq!(s.total_bytes(), 192);
+        assert!(s.contains("acc"));
+    }
+
+    #[test]
+    fn collect_orders_groups() {
+        let mut s = StateStore::new(None);
+        s.put_zeros("a", vec![spec("a/x", &[2])]).unwrap();
+        s.put_zeros("b", vec![spec("b/y", &[3])]).unwrap();
+        let lits = s.collect(&["b", "a"]).unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(lits[0].element_count(), 3);
+        assert_eq!(lits[1].element_count(), 2);
+    }
+
+    #[test]
+    fn missing_group_errors() {
+        let s = StateStore::new(None);
+        assert!(s.get("nope").is_err());
+        assert!(s.collect(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn replace_value_count_checked() {
+        let mut s = StateStore::new(None);
+        s.put_zeros("g", vec![spec("g/x", &[2]), spec("g/y", &[2])]).unwrap();
+        assert!(s.replace_values("g", vec![]).is_err());
+    }
+
+    #[test]
+    fn ledger_sees_allocations() {
+        let ledger = BufferLedger::new();
+        let mut s = StateStore::new(Some(ledger.clone()));
+        s.put_zeros("p", vec![spec("p/w", &[100])]).unwrap();
+        assert_eq!(ledger.current(), 400);
+        // re-putting the same group frees the old bytes
+        s.put_zeros("p", vec![spec("p/w", &[100])]).unwrap();
+        assert_eq!(ledger.current(), 400);
+    }
+}

@@ -1,0 +1,112 @@
+//! Literal construction/extraction helpers — the host side of the flat ABI.
+
+use xla::Literal;
+
+use super::manifest::TensorSpec;
+
+/// f32 tensor literal with the given shape.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal, String> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != numel {
+        return Err(format!(
+            "literal_f32: shape {shape:?} wants {numel} elements, got {}",
+            data.len()
+        ));
+    }
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| format!("reshape: {e:?}"))
+}
+
+/// i32 tensor literal with the given shape.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal, String> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != numel {
+        return Err(format!(
+            "literal_i32: shape {shape:?} wants {numel} elements, got {}",
+            data.len()
+        ));
+    }
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| format!("reshape: {e:?}"))
+}
+
+pub fn scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn scalar_u32(v: u32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Read a literal back as f32s.
+pub fn literal_to_f32(l: &Literal) -> Result<Vec<f32>, String> {
+    l.to_vec::<f32>().map_err(|e| format!("to_vec f32: {e:?}"))
+}
+
+/// Read a literal back as i32s.
+pub fn literal_to_i32(l: &Literal) -> Result<Vec<i32>, String> {
+    l.to_vec::<i32>().map_err(|e| format!("to_vec i32: {e:?}"))
+}
+
+/// Zero-filled literal matching a manifest tensor spec (f32 state groups).
+pub fn zeros_for(spec: &TensorSpec) -> Result<Literal, String> {
+    literal_f32(&spec.shape, &vec![0.0; spec.numel()])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(literal_to_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let l = literal_i32(&[4], &[9, 8, 7, 6]).unwrap();
+        assert_eq!(literal_to_i32(&l).unwrap(), vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        let l = scalar_u32(42);
+        assert_eq!(l.element_count(), 1);
+        let l = literal_f32(&[], &[1.5]).unwrap();
+        assert_eq!(l.element_count(), 1);
+    }
+
+    #[test]
+    fn wrong_element_count_rejected() {
+        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+        assert!(literal_i32(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn zeros_for_spec() {
+        let spec = TensorSpec {
+            name: "acc/x".into(),
+            shape: vec![3, 5],
+            dtype: "float32".into(),
+        };
+        let l = zeros_for(&spec).unwrap();
+        assert_eq!(l.element_count(), 15);
+        assert!(literal_to_f32(&l).unwrap().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,315 @@
+//! Row-major f32 matrix with the small op set the pilot and rp modules need.
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::ops::{Add, Mul, Sub};
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix[{}x{}]", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// N(0, sigma^2) entries from the given RNG.
+    pub fn gaussian(rows: usize, cols: usize, sigma: f32, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_gaussian(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// C = A @ B. Cache-friendly ikj loop with an accumulator row.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul {:?} x {:?}", self, b);
+        let mut out = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+                for (o, &bkj) in orow.iter_mut().zip(brow.iter()) {
+                    *o += aik * bkj;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A @ B^T (the rp "compress" GEMM shape; dot-product inner loop).
+    pub fn matmul_nt(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_nt {:?} x {:?}", self, b);
+        let mut out = Matrix::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..b.rows {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow.iter()) {
+                    acc += x * y;
+                }
+                *out.at_mut(i, j) = acc;
+            }
+        }
+        out
+    }
+
+    /// C = A^T @ B.
+    pub fn matmul_tn(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows, "matmul_tn {:?} x {:?}", self, b);
+        let mut out = Matrix::zeros(self.cols, b.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+                for (o, &bkj) in orow.iter_mut().zip(brow.iter()) {
+                    *o += aki * bkj;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    /// self += other * s (fused update used by the pilot's SGD rules).
+    pub fn add_scaled_inplace(&mut self, other: &Matrix, s: f32) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b * s;
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a * b)
+                .collect(),
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Approximate equality for tests.
+    pub fn allclose(&self, other: &Matrix, atol: f32) -> bool {
+        self.shape() == other.shape()
+            && self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .all(|(a, b)| (a - b).abs() <= atol)
+    }
+}
+
+impl Add for &Matrix {
+    type Output = Matrix;
+
+    fn add(self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+}
+
+impl Sub for &Matrix {
+    type Output = Matrix;
+
+    fn sub(self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+}
+
+impl Mul<f32> for &Matrix {
+    type Output = Matrix;
+
+    fn mul(self, s: f32) -> Matrix {
+        self.scale(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> Matrix {
+        Matrix::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = m(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_nt_equals_matmul_with_transpose() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::gaussian(5, 7, 1.0, &mut rng);
+        let b = Matrix::gaussian(3, 7, 1.0, &mut rng);
+        let c1 = a.matmul_nt(&b);
+        let c2 = a.matmul(&b.transpose());
+        assert!(c1.allclose(&c2, 1e-5));
+    }
+
+    #[test]
+    fn matmul_tn_equals_transpose_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::gaussian(6, 4, 1.0, &mut rng);
+        let b = Matrix::gaussian(6, 5, 1.0, &mut rng);
+        let c1 = a.matmul_tn(&b);
+        let c2 = a.transpose().matmul(&b);
+        assert!(c1.allclose(&c2, 1e-5));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::gaussian(4, 9, 1.0, &mut rng);
+        assert!(a.transpose().transpose().allclose(&a, 0.0));
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = m(1, 3, &[1., 2., 3.]);
+        let b = m(1, 3, &[4., 5., 6.]);
+        assert_eq!((&a + &b).data, vec![5., 7., 9.]);
+        assert_eq!((&b - &a).data, vec![3., 3., 3.]);
+        assert_eq!((&a * 2.0).data, vec![2., 4., 6.]);
+    }
+
+    #[test]
+    fn add_scaled_inplace_matches_ops() {
+        let mut rng = Rng::new(3);
+        let mut a = Matrix::gaussian(3, 3, 1.0, &mut rng);
+        let b = Matrix::gaussian(3, 3, 1.0, &mut rng);
+        let want = &a + &(&b * -0.5);
+        a.add_scaled_inplace(&b, -0.5);
+        assert!(a.allclose(&want, 1e-6));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::gaussian(100, 100, 2.0, &mut rng);
+        let mean: f32 = a.data.iter().sum::<f32>() / 10_000.0;
+        let var: f32 =
+            a.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 10_000.0;
+        assert!(mean.abs() < 0.1);
+        assert!((var - 4.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn frobenius() {
+        let a = m(2, 2, &[3., 0., 0., 4.]);
+        assert!((a.frobenius_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

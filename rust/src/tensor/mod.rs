@@ -1,0 +1,14 @@
+//! Pure-rust f32 matrix substrate.
+//!
+//! Used by the Figure-1 pilot study (MLP + LoRA/RP/RRP updaters with
+//! hand-derived gradients), by the rust-side random-projection reference
+//! (`rp`), and by the metrics/memory machinery. This is NOT on the training
+//! hot path of the big experiments — those run inside AOT-compiled XLA — so
+//! clarity beats vectorization tricks here; the micro_rp bench still tracks
+//! its GEMM against the XLA kernel for the §Perf log.
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{gelu, relu, softmax_rows};

@@ -1,0 +1,74 @@
+//! Elementwise nonlinearities and row-softmax for the pilot MLP.
+
+use super::Matrix;
+
+pub fn relu(x: &Matrix) -> Matrix {
+    x.map(|v| v.max(0.0))
+}
+
+/// tanh-approximation GELU (matches jax.nn.gelu's default).
+pub fn gelu(x: &Matrix) -> Matrix {
+    x.map(|v| {
+        let c = (2.0f32 / std::f32::consts::PI).sqrt();
+        0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh())
+    })
+}
+
+/// Numerically-stable softmax over each row.
+pub fn softmax_rows(x: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut denom = 0.0f32;
+        for (j, &v) in row.iter().enumerate() {
+            let e = (v - mx).exp();
+            *out.at_mut(i, j) = e;
+            denom += e;
+        }
+        for j in 0..x.cols {
+            *out.at_mut(i, j) /= denom;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps() {
+        let x = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 0.5, 2.0]);
+        assert_eq!(relu(&x).data, vec![0.0, 0.0, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Matrix::from_vec(2, 3, vec![1., 2., 3., -1., 0., 1.]);
+        let s = softmax_rows(&x);
+        for i in 0..2 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        // monotone in logits
+        assert!(s.at(0, 2) > s.at(0, 1) && s.at(0, 1) > s.at(0, 0));
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let x = Matrix::from_vec(1, 2, vec![1000.0, 1001.0]);
+        let s = softmax_rows(&x);
+        assert!(s.data.iter().all(|v| v.is_finite()));
+        assert!((s.at(0, 1) - 0.731).abs() < 0.01);
+    }
+
+    #[test]
+    fn gelu_known_points() {
+        let x = Matrix::from_vec(1, 3, vec![-10.0, 0.0, 10.0]);
+        let g = gelu(&x);
+        assert!(g.at(0, 0).abs() < 1e-3);
+        assert_eq!(g.at(0, 1), 0.0);
+        assert!((g.at(0, 2) - 10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,146 @@
+//! Synthetic-vocabulary tokenizer.
+//!
+//! The data substrate works in token ids; this module gives those ids a
+//! human-readable surface form (CV-syllable pseudo-words) so the examples
+//! can print model inputs/outputs, and provides encode/decode round-trips
+//! used by the CLI's inspection commands. It deliberately mirrors a real
+//! tokenizer's API (encode / decode / vocab_size / specials).
+
+use crate::data::special;
+
+#[derive(Clone)]
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    lookup: std::collections::HashMap<String, i32>,
+}
+
+const ONSETS: [&str; 14] =
+    ["k", "s", "t", "n", "h", "m", "r", "g", "z", "d", "b", "p", "v", "l"];
+const NUCLEI: [&str; 5] = ["a", "e", "i", "o", "u"];
+
+impl Tokenizer {
+    /// Deterministic vocabulary of `size` entries: ids 0..4 are the shared
+    /// specials, the rest are distinct pseudo-words ("ka", "kela", ...).
+    pub fn new(size: usize) -> Self {
+        assert!(size > special::CONTENT0 as usize);
+        let mut vocab = vec![
+            "<pad>".to_string(),
+            "<bos>".to_string(),
+            "<sep>".to_string(),
+            "<eos>".to_string(),
+        ];
+        let mut n = 0usize;
+        'outer: loop {
+            // 1-syllable words first, then 2-syllable, then 3
+            let syllables = n / (ONSETS.len() * NUCLEI.len()) + 1;
+            let mut idx = n;
+            let mut w = String::new();
+            for _ in 0..syllables {
+                w.push_str(ONSETS[idx % ONSETS.len()]);
+                idx /= ONSETS.len();
+                w.push_str(NUCLEI[idx % NUCLEI.len()]);
+                idx /= NUCLEI.len();
+            }
+            if !vocab.contains(&w) {
+                vocab.push(w);
+                if vocab.len() == size {
+                    break 'outer;
+                }
+            }
+            n += 1;
+        }
+        let lookup = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Self { vocab, lookup }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Token id -> surface form.
+    pub fn word(&self, id: i32) -> &str {
+        self.vocab
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Render a token sequence, eliding padding.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&id| id != special::PAD)
+            .map(|&id| self.word(id))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Whitespace-split encode; unknown words error.
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>, String> {
+        text.split_whitespace()
+            .map(|w| {
+                self.lookup
+                    .get(w)
+                    .copied()
+                    .ok_or_else(|| format!("unknown word {w:?}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_is_exactly_requested_size_and_unique() {
+        for size in [16usize, 64, 256, 512] {
+            let t = Tokenizer::new(size);
+            assert_eq!(t.vocab_size(), size);
+            let set: std::collections::HashSet<_> = t.vocab.iter().collect();
+            assert_eq!(set.len(), size, "duplicates at size {size}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = Tokenizer::new(256);
+        let ids = vec![1, 10, 42, 200, 3];
+        let text = t.decode(&ids);
+        let back = t.encode(&text).unwrap();
+        assert_eq!(ids, back);
+    }
+
+    #[test]
+    fn decode_elides_padding() {
+        let t = Tokenizer::new(64);
+        let s = t.decode(&[1, 5, 0, 0, 0]);
+        assert!(!s.contains("<pad>"));
+        assert!(s.starts_with("<bos>"));
+    }
+
+    #[test]
+    fn specials_fixed() {
+        let t = Tokenizer::new(64);
+        assert_eq!(t.word(special::PAD), "<pad>");
+        assert_eq!(t.word(special::BOS), "<bos>");
+        assert_eq!(t.word(special::SEP), "<sep>");
+        assert_eq!(t.word(special::EOS), "<eos>");
+    }
+
+    #[test]
+    fn unknown_word_errors() {
+        let t = Tokenizer::new(64);
+        assert!(t.encode("definitely_not_a_word").is_err());
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Tokenizer::new(128);
+        let b = Tokenizer::new(128);
+        assert_eq!(a.vocab, b.vocab);
+    }
+}

@@ -1,0 +1,86 @@
+//! Human-readable formatting for the bench tables (GiB memory columns,
+//! parameter counts, durations) — the output format mirrors the paper's.
+
+/// Bytes -> "X.XX GiB" / "X.X MiB" / "X KiB", paper-style (1024^3 GiB).
+pub fn bytes(n: u64) -> String {
+    const K: f64 = 1024.0;
+    let x = n as f64;
+    if x >= K * K * K {
+        format!("{:.2} GiB", x / (K * K * K))
+    } else if x >= K * K {
+        format!("{:.1} MiB", x / (K * K))
+    } else if x >= K {
+        format!("{:.0} KiB", x / K)
+    } else {
+        format!("{n} B")
+    }
+}
+
+/// Bytes as a fractional GiB number (the unit used in Tables 1-4).
+pub fn gib(n: u64) -> f64 {
+    n as f64 / (1024.0 * 1024.0 * 1024.0)
+}
+
+/// Parameter counts: "60M", "1.5B", matching the paper's Size column.
+pub fn params(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        let b = n as f64 / 1e9;
+        if b.fract() < 0.05 {
+            format!("{:.0}B", b)
+        } else {
+            format!("{:.1}B", b)
+        }
+    } else if n >= 1_000_000 {
+        format!("{:.0}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.0}K", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+pub fn duration(secs: f64) -> String {
+    if secs >= 60.0 {
+        format!("{:.0}m{:02.0}s", (secs / 60.0).floor(), secs % 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.1}us", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.0 MiB");
+        assert_eq!(bytes(5_368_709_120), "5.00 GiB");
+    }
+
+    #[test]
+    fn param_units() {
+        assert_eq!(params(60_000_000), "60M");
+        assert_eq!(params(1_500_000_000), "1.5B");
+        assert_eq!(params(3_000_000_000), "3B");
+        assert_eq!(params(900), "900");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration(0.0005), "500.0us");
+        assert_eq!(duration(0.25), "250.00ms");
+        assert_eq!(duration(2.5), "2.50s");
+        assert_eq!(duration(90.0), "1m30s");
+    }
+
+    #[test]
+    fn gib_roundtrip() {
+        assert!((gib(1_073_741_824) - 1.0).abs() < 1e-9);
+    }
+}

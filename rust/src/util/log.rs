@@ -1,0 +1,65 @@
+//! Tiny leveled logger writing to stderr. The `log` crate facade is in the
+//! vendor set, but a zero-dep built-in keeps initialization trivial and the
+//! output format uniform across bins/benches/examples.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+#[derive(Clone, Copy, Debug, PartialEq, PartialOrd)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_env() {
+    match std::env::var("FLORA_LOG").as_deref() {
+        Ok("debug") => set_level(Level::Debug),
+        Ok("warn") => set_level(Level::Warn),
+        Ok("error") => set_level(Level::Error),
+        _ => set_level(Level::Info),
+    }
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if (level as u8) < LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    let t0 = START.get_or_init(Instant::now);
+    let secs = t0.elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{secs:8.3} {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($t)*)) };
+}

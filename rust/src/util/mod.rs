@@ -1,0 +1,9 @@
+//! Shared utilities: seeded RNG, a minimal JSON parser (serde is not
+//! available in the offline vendor set), logging, humanized formatting and
+//! wall-clock timing.
+
+pub mod human;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod timing;

@@ -1,0 +1,208 @@
+//! Deterministic, seedable RNG for the pure-rust substrate (pilot study,
+//! synthetic data, rust-side random projections).
+//!
+//! xorshift64* core + Box–Muller Gaussians. This is intentionally an
+//! *independent* generator from JAX's threefry: the rust side validates the
+//! FLORA *algorithm* (distributional properties), not bitwise parity with
+//! the XLA graphs — seeds that cross the AOT boundary are consumed by
+//! threefry inside the graph.
+
+/// xorshift64* (Vigna 2016). Passes BigCrush for our purposes; tiny state.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    /// cached second Gaussian from Box–Muller
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zero fixed point; splitmix the seed once so small
+        // consecutive seeds produce uncorrelated streams.
+        let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        Self { state: z.max(1), spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // take the top 53 bits for a dyadic uniform
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // multiply-shift; bias is negligible for n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard Gaussian via Box–Muller (polar-free form).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        // u in (0,1] to avoid ln(0)
+        let u = 1.0 - self.next_f64();
+        let v = self.next_f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    #[inline]
+    pub fn next_gaussian_f32(&mut self) -> f32 {
+        self.next_gaussian() as f32
+    }
+
+    /// Fill a slice with N(0, sigma^2) samples.
+    pub fn fill_gaussian(&mut self, out: &mut [f32], sigma: f32) {
+        for x in out.iter_mut() {
+            *x = self.next_gaussian_f32() * sigma;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn sample_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut t = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Derive a sub-seed: same role as flora.derive_seed on the python side
+/// (independent streams per (base, index)), different constants are fine.
+pub fn derive_seed(base: u64, index: u64) -> u64 {
+    base.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(index.wrapping_mul(0xD1B5_4A32_D192_ED03))
+        .wrapping_add(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_gaussian();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = r.next_below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+
+    #[test]
+    fn derive_seed_distinct() {
+        let mut set = std::collections::HashSet::new();
+        for i in 0..1000 {
+            set.insert(derive_seed(42, i));
+        }
+        assert_eq!(set.len(), 1000);
+    }
+
+    #[test]
+    fn weighted_sampling_distribution() {
+        let mut r = Rng::new(9);
+        let w = [1.0, 3.0];
+        let mut c = [0usize; 2];
+        for _ in 0..40_000 {
+            c[r.sample_weighted(&w)] += 1;
+        }
+        let frac = c[1] as f64 / 40_000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac={frac}");
+    }
+}

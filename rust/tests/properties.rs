@@ -1,0 +1,194 @@
+//! Property-style tests over the pure-rust substrates (hand-rolled
+//! generators — proptest isn't in the offline vendor set; util::rng::Rng
+//! drives randomized cases with fixed seeds so failures are reproducible).
+
+use flora::data::seq2seq::{MtTask, SumTask};
+use flora::metrics::{bleu_corpus, rouge_corpus, token_accuracy};
+use flora::rp;
+use flora::tensor::Matrix;
+use flora::util::json;
+use flora::util::rng::Rng;
+
+fn rand_seq(rng: &mut Rng, max_len: usize, vocab: i32) -> Vec<i32> {
+    let len = 1 + rng.next_below(max_len);
+    (0..len).map(|_| rng.next_below(vocab as usize) as i32).collect()
+}
+
+// ---------------------------------------------------------------------
+// metrics invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_rouge_bounded_and_symmetric_identity() {
+    let mut rng = Rng::new(1);
+    for _ in 0..200 {
+        let a = rand_seq(&mut rng, 24, 50);
+        let b = rand_seq(&mut rng, 24, 50);
+        let s = rouge_corpus(&[(a.clone(), b.clone())]);
+        for v in [s.rouge1, s.rouge2, s.rouge_l] {
+            assert!((0.0..=100.0).contains(&v));
+        }
+        // identity scores 100 on R1/RL
+        let id = rouge_corpus(&[(a.clone(), a.clone())]);
+        assert!((id.rouge1 - 100.0).abs() < 1e-9);
+        assert!((id.rouge_l - 100.0).abs() < 1e-9);
+        // F1 is symmetric in (hyp, ref) for R1 (same clipped overlap)
+        let fwd = rouge_corpus(&[(a.clone(), b.clone())]).rouge1;
+        let rev = rouge_corpus(&[(b, a)]).rouge1;
+        assert!((fwd - rev).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_bleu_bounded_and_maximal_on_identity() {
+    let mut rng = Rng::new(2);
+    for _ in 0..200 {
+        let a = rand_seq(&mut rng, 24, 50);
+        let b = rand_seq(&mut rng, 24, 50);
+        let s = bleu_corpus(&[(a.clone(), b.clone())]).score;
+        assert!((0.0..=100.0).contains(&s));
+        let id = bleu_corpus(&[(a.clone(), a.clone())]).score;
+        assert!(id >= s - 1e-9, "identity must not score below a mismatch");
+    }
+}
+
+#[test]
+fn prop_token_accuracy_bounds() {
+    let mut rng = Rng::new(3);
+    for _ in 0..200 {
+        let a = rand_seq(&mut rng, 16, 8);
+        let b = rand_seq(&mut rng, 16, 8);
+        let acc = token_accuracy(&a, &b);
+        assert!((0.0..=1.0).contains(&acc));
+        assert_eq!(token_accuracy(&a, &a), 1.0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// rp invariants (linearity, unbiasedness scaling)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_compress_is_linear() {
+    let mut rng = Rng::new(4);
+    for trial in 0..20 {
+        let (n, m, r) = (
+            2 + rng.next_below(16),
+            2 + rng.next_below(32),
+            1 + rng.next_below(8),
+        );
+        let g1 = Matrix::gaussian(n, m, 1.0, &mut rng);
+        let g2 = Matrix::gaussian(n, m, 1.0, &mut rng);
+        let a = rp::projection(trial as u64, r, m);
+        let lhs = rp::compress(&(&g1 + &g2), &a);
+        let rhs = &rp::compress(&g1, &a) + &rp::compress(&g2, &a);
+        assert!(lhs.allclose(&rhs, 1e-4), "shape ({n},{m},{r})");
+    }
+}
+
+#[test]
+fn prop_compress_decompress_scales_with_rank() {
+    // mean reconstruction error must be non-increasing as r doubles
+    let mut rng = Rng::new(5);
+    let g = Matrix::gaussian(12, 48, 1.0, &mut rng);
+    let mut last = f32::INFINITY;
+    for r in [2usize, 8, 32, 128, 512] {
+        // average over seeds to beat sampling noise
+        let mut err = 0.0f32;
+        for s in 0..8 {
+            let rec = rp::project_gradient(&g, 100 + s, r);
+            err += (&rec - &g).frobenius_norm();
+        }
+        err /= 8.0;
+        assert!(err <= last * 1.15, "r={r}: err {err} after {last}");
+        last = err;
+    }
+}
+
+#[test]
+fn prop_projection_rows_near_unit_norm_scaled() {
+    // A ~ N(0, 1/r): each row has expected squared norm m/r
+    let mut rng = Rng::new(6);
+    for _ in 0..10 {
+        let r = 4 + rng.next_below(32);
+        let m = 16 + rng.next_below(128);
+        let a = rp::projection(rng.next_u64(), r, m);
+        let want = (m as f32 / r as f32).sqrt();
+        for i in 0..r {
+            let norm: f32 = a.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(
+                norm > 0.3 * want && norm < 2.5 * want,
+                "row {i}: norm={norm} want~{want}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// data-task invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_sum_task_masks_align_with_sep() {
+    let t = SumTask::new(256, 64, 9);
+    let mut b = flora::data::LmBatch::zeros(8, 64);
+    let mut cur = 0;
+    for split in 0..3u64 {
+        t.fill_batch(&mut b, split, &mut cur);
+        for row in 0..8 {
+            let toks = b.row_tokens(row);
+            let mask = &b.mask[row * 64..(row + 1) * 64];
+            let sep = toks.iter().position(|&x| x == 2).unwrap();
+            // nothing before/at SEP is masked-in
+            assert!(mask[..=sep].iter().all(|&m| m == 0.0));
+            // the masked-in span is contiguous right after SEP
+            let first = mask.iter().position(|&m| m > 0.0).unwrap();
+            assert_eq!(first, sep + 1);
+        }
+    }
+}
+
+#[test]
+fn prop_mt_translate_deterministic_and_length_preserving() {
+    let t = MtTask::new(256, 64, 10);
+    let mut rng = Rng::new(11);
+    for _ in 0..100 {
+        let src: Vec<i32> =
+            (0..1 + rng.next_below(20)).map(|_| 4 + rng.next_below(100) as i32).collect();
+        let t1 = t.translate(&src);
+        let t2 = t.translate(&src);
+        assert_eq!(t1, t2);
+        assert_eq!(t1.len(), src.len());
+    }
+}
+
+// ---------------------------------------------------------------------
+// json parser round-trip-ish fuzz
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_json_never_panics_on_ascii_noise() {
+    let mut rng = Rng::new(12);
+    for _ in 0..500 {
+        let len = rng.next_below(40);
+        let doc: String = (0..len)
+            .map(|_| {
+                let chars = b"{}[]\",:0123456789.eE+-truefalsnl \t";
+                chars[rng.next_below(chars.len())] as char
+            })
+            .collect();
+        let _ = json::parse(&doc); // must return, never panic
+    }
+}
+
+#[test]
+fn prop_json_roundtrips_generated_numbers() {
+    let mut rng = Rng::new(13);
+    for _ in 0..200 {
+        let x = (rng.next_f64() - 0.5) * 1e6;
+        let doc = format!("{{\"v\": {x}}}");
+        let v = json::parse(&doc).unwrap();
+        let got = v.get("v").unwrap().as_f64().unwrap();
+        assert!((got - x).abs() < 1e-6 * x.abs().max(1.0));
+    }
+}
