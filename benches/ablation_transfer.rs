@@ -18,7 +18,7 @@ fn main() {
     if !args.require_artifacts() {
         return;
     }
-    let rt = shared_runtime(&args.artifacts).expect("runtime");
+    let rt = shared_runtime(args.spec()).expect("runtime");
     let steps = args.steps.unwrap_or(if args.quick { 20 } else { 80 });
     let mut table = Table::new(
         &format!("Ablation — Algorithm 2 subspace transfer (mt task, kappa=5, {steps} steps)"),
@@ -34,6 +34,7 @@ fn main() {
         let mut cfg = base_config(TaskKind::Mt, steps, 1);
         cfg.method = method;
         cfg.kappa = 5;
+        args.adjust(&mut cfg);
         match Trainer::with_runtime(cfg, rt.clone()).and_then(|mut t| t.run()) {
             Ok(r) => {
                 let q = r.metric.map(|m| m.quality()).unwrap_or(f64::MIN);

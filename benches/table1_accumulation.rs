@@ -19,7 +19,7 @@ fn main() {
     let cells = table_grid();
     // one runtime for the whole bench: sum+mt share the lm-small executables
     let rt = if args.require_artifacts() {
-        Some(shared_runtime(&args.artifacts).expect("runtime"))
+        Some(shared_runtime(args.spec()).expect("runtime"))
     } else {
         None
     };
@@ -37,7 +37,8 @@ fn main() {
             steps
         );
         if let Some(rt) = &rt {
-            let base = base_config(task, steps, tau);
+            let mut base = base_config(task, steps, tau);
+            args.adjust(&mut base);
             let reports: Vec<_> = cells
                 .iter()
                 .map(|c| {

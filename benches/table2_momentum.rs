@@ -17,7 +17,7 @@ fn main() {
     let cells = table_grid();
     // one runtime for the whole bench: sum+mt share the lm-small executables
     let rt = if args.require_artifacts() {
-        Some(shared_runtime(&args.artifacts).expect("runtime"))
+        Some(shared_runtime(args.spec()).expect("runtime"))
     } else {
         None
     };
@@ -32,6 +32,7 @@ fn main() {
         if let Some(rt) = &rt {
             let mut base = base_config(task, steps, 1); // tau=1 ⇒ momentum mode
             base.kappa = 50;
+            args.adjust(&mut base);
             let reports: Vec<_> = cells
                 .iter()
                 .map(|c| {

@@ -17,7 +17,7 @@ fn main() {
     if !args.require_artifacts() {
         return;
     }
-    let rt = shared_runtime(&args.artifacts).expect("runtime");
+    let rt = shared_runtime(args.spec()).expect("runtime");
     let steps = args.steps.unwrap_or(if args.quick { 20 } else { 80 });
     // paper: kappa in {1,10,100,1000,10000} over ~1 epoch; keep the same
     // log-spaced sweep relative to the run length
@@ -32,6 +32,7 @@ fn main() {
         let mut cfg = base_config(TaskKind::Sum, steps, 1);
         cfg.method = MethodSpec::Flora { rank: 16 };
         cfg.kappa = kappa;
+        args.adjust(&mut cfg);
         let report = flora::coordinator::Trainer::with_runtime(cfg, rt.clone())
             .and_then(|mut t| t.run());
         match report {

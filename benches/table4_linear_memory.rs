@@ -22,9 +22,10 @@ fn main() {
         "Table 4 — linear-memory optimizer (unfactored Adafactor, sum task, tau={tau}, {steps} steps)"
     );
     if args.require_artifacts() {
-        let rt = shared_runtime(&args.artifacts).expect("runtime");
+        let rt = shared_runtime(args.spec()).expect("runtime");
         let mut base = base_config(TaskKind::Sum, steps, tau);
         base.optimizer = "adafactor_nofactor".into();
+        args.adjust(&mut base);
         let reports: Vec<_> = cells
             .iter()
             .map(|c| {

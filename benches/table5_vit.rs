@@ -30,8 +30,13 @@ fn main() {
         ("Base", MethodSpec::None, "adam", 0.003f32),
         ("Base", MethodSpec::Flora { rank: 16 }, "adafactor", 0.01),
     ];
-    if args.require_artifacts() {
-        let rt = shared_runtime(&args.artifacts).expect("runtime");
+    if args.backend == "native" {
+        println!(
+            "table5 measures ViT runs, which need the AOT artifacts — the \
+             native catalog has no vit models; printing analytic rows only."
+        );
+    } else if args.require_artifacts() {
+        let rt = shared_runtime(args.spec()).expect("runtime");
         for (scale, method, opt, lr) in cases {
             eprintln!("[table5] {} {}", scale, method.label());
             let cfg = TrainConfig {

@@ -29,7 +29,7 @@ fn main() {
     ];
     let mut quality = Vec::new();
     if args.require_artifacts() {
-        let rt = shared_runtime(&args.artifacts).expect("runtime");
+        let rt = shared_runtime(args.spec()).expect("runtime");
         for (method, lr) in cases {
             eprintln!("[table6] {}", method.label());
             let mut cfg = TrainConfig {
@@ -49,6 +49,7 @@ fn main() {
             if matches!(method, MethodSpec::Galore { .. }) {
                 cfg.optimizer = "adam".into(); // GaLore runs Adam-in-subspace
             }
+            args.adjust(&mut cfg);
             let report = Trainer::with_runtime(cfg, rt.clone()).and_then(|mut t| t.run());
             let dims = Dims::t5_small_sim();
             let (m, o) = match method {

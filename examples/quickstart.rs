@@ -1,10 +1,14 @@
-//! Quickstart: the smallest end-to-end FLORA workflow.
+//! Quickstart: the smallest end-to-end FLORA workflow — XLA-free.
 //!
-//! Loads the AOT artifacts, trains lm-tiny with FLORA gradient-accumulation
-//! compression (Algorithm 1) for a handful of cycles, prints the loss curve
-//! and the compressed-state memory ledger.
+//! Runs entirely on the NATIVE backend (the pure-rust executor over the
+//! generated bigram-LM catalog): trains lm-tiny with FLORA
+//! gradient-accumulation compression (Algorithm 1) for a handful of
+//! cycles, prints the loss curve and the compressed-state memory ledger.
+//! No artifacts, no PJRT, no network — `cargo run --example quickstart`
+//! works on a bare machine.
 //!
-//! Run: make artifacts && cargo run --release --example quickstart
+//! For the transformer/AOT path, build with `--features xla`, run
+//! `make artifacts`, and pass `--backend xla` to the `flora train` CLI.
 
 use flora::config::{TaskKind, TrainConfig};
 use flora::coordinator::{MethodSpec, Trainer};
@@ -15,8 +19,8 @@ fn main() -> Result<(), String> {
         model: "lm-tiny".into(),
         task: TaskKind::Sum,
         method: MethodSpec::Flora { rank: 4 },
-        optimizer: "adafactor".into(),
-        lr: 0.05,
+        optimizer: "sgd".into(), // the native catalog's base optimizer
+        lr: 0.5,
         steps: 12,   // 12 optimizer steps = 12 x tau microbatches
         tau: 4,      // Algorithm 1 accumulation length
         kappa: 1000,
@@ -25,8 +29,8 @@ fn main() -> Result<(), String> {
         eval_every: 4,
         eval_samples: 16,
     };
-    println!("quickstart: FLORA(4) gradient accumulation on lm-tiny/sum");
-    let mut trainer = Trainer::new(cfg, "artifacts")?;
+    println!("quickstart: FLORA(4) gradient accumulation on lm-tiny/sum (native backend)");
+    let mut trainer = Trainer::native(cfg)?;
     let report = trainer.run()?;
 
     println!("\nloss curve: {}", flora::bench::sparkline(&report.train_losses, 48));

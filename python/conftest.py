@@ -1,4 +1,28 @@
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+# Auto-skip test modules whose optional heavy deps are missing: CI runs the
+# python mirror without jax (and possibly without hypothesis), and the
+# jax-dependent parity suites must not rot the collection step there. The
+# pure-python tests (test_env.py) always run, so pytest never exits with
+# "no tests collected".
+collect_ignore = []
+
+_JAX_TESTS = [
+    "tests/test_aot_catalog.py",
+    "tests/test_flora.py",
+    "tests/test_galore.py",
+    "tests/test_kernels.py",
+    "tests/test_models.py",
+    "tests/test_optimizers.py",
+    "tests/test_steps_abi.py",
+]
+
+if importlib.util.find_spec("jax") is None:
+    collect_ignore += _JAX_TESTS
+elif importlib.util.find_spec("hypothesis") is None:
+    # test_kernels additionally needs hypothesis for its shape sweep
+    collect_ignore += ["tests/test_kernels.py"]

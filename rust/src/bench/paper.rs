@@ -70,9 +70,10 @@ pub fn run_cell(
     tr.run()
 }
 
-/// One shared runtime for a whole bench grid (PJRT client + compile cache).
-pub fn shared_runtime(artifacts: &str) -> Result<Rc<RefCell<Runtime>>, String> {
-    Ok(Rc::new(RefCell::new(Runtime::new(artifacts)?)))
+/// One shared runtime for a whole bench grid (one backend + prepare cache).
+/// `spec` is `"native"` or an artifacts directory (see `BenchArgs::spec`).
+pub fn shared_runtime(spec: &str) -> Result<Rc<RefCell<Runtime>>, String> {
+    Ok(Rc::new(RefCell::new(Runtime::from_spec(spec)?)))
 }
 
 /// The paper-scale memory method mirroring a cell (paper ranks).
@@ -186,17 +187,25 @@ pub fn render_analytic_only(
 }
 
 /// Bench-binary arg parsing: `--quick` (fewer steps), `--steps N`,
-/// `--artifacts DIR`. cargo bench passes `--bench`; ignore unknown flags.
+/// `--artifacts DIR`, `--backend native|xla`. cargo bench passes
+/// `--bench`; ignore unknown flags.
 pub struct BenchArgs {
     pub quick: bool,
     pub steps: Option<usize>,
     pub artifacts: String,
+    /// `"xla"` (artifacts via PJRT) or `"native"` (pure-rust executor).
+    pub backend: String,
 }
 
 impl BenchArgs {
     pub fn parse() -> Self {
         let argv: Vec<String> = std::env::args().skip(1).collect();
-        let mut out = Self { quick: false, steps: None, artifacts: "artifacts".into() };
+        let mut out = Self {
+            quick: false,
+            steps: None,
+            artifacts: "artifacts".into(),
+            backend: "xla".into(),
+        };
         let mut i = 0;
         while i < argv.len() {
             match argv[i].as_str() {
@@ -209,6 +218,17 @@ impl BenchArgs {
                     out.artifacts = argv[i + 1].clone();
                     i += 1;
                 }
+                "--backend" if i + 1 < argv.len() => {
+                    out.backend = argv[i + 1].clone();
+                    i += 1;
+                    if out.backend != "native" && out.backend != "xla" {
+                        eprintln!(
+                            "--backend: expected native|xla, got {:?}",
+                            out.backend
+                        );
+                        std::process::exit(2);
+                    }
+                }
                 _ => {}
             }
             i += 1;
@@ -216,14 +236,37 @@ impl BenchArgs {
         out
     }
 
+    /// The `Runtime::from_spec` argument for this invocation.
+    pub fn spec(&self) -> &str {
+        if self.backend == "native" {
+            "native"
+        } else {
+            &self.artifacts
+        }
+    }
+
+    /// Per-backend config tweaks: the native catalog implements the SGD
+    /// base optimizer (GaLore keeps its own Adam-in-subspace).
+    pub fn adjust(&self, cfg: &mut TrainConfig) {
+        if self.backend == "native" {
+            cfg.optimizer = "sgd".into();
+        }
+    }
+
+    /// True when the selected backend can run the measured cells: always
+    /// for the native backend, artifacts-present for the PJRT one.
     pub fn require_artifacts(&self) -> bool {
+        if self.backend == "native" {
+            return true;
+        }
         let ok = std::path::Path::new(&self.artifacts)
             .join("manifest.json")
             .exists();
         if !ok {
             println!(
-                "artifacts/manifest.json not found — run `make artifacts` first; \
-                 printing analytic-only tables."
+                "artifacts/manifest.json not found — run `make artifacts` \
+                 first or pass `--backend native`; printing analytic-only \
+                 tables."
             );
         }
         ok
@@ -272,6 +315,21 @@ mod tests {
     fn paper_labels_use_paper_ranks() {
         let c = Cell { method: MethodSpec::Flora { rank: 16 }, paper_rank: 128 };
         assert_eq!(paper_label(&c), "FLORA(128)");
+    }
+
+    #[test]
+    fn bench_args_native_backend() {
+        let args = BenchArgs {
+            quick: false,
+            steps: None,
+            artifacts: "artifacts".into(),
+            backend: "native".into(),
+        };
+        assert_eq!(args.spec(), "native");
+        assert!(args.require_artifacts(), "native never needs artifacts");
+        let mut cfg = base_config(TaskKind::Sum, 1, 1);
+        args.adjust(&mut cfg);
+        assert_eq!(cfg.optimizer, "sgd");
     }
 
     #[test]

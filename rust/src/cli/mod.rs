@@ -95,19 +95,25 @@ COMMANDS:
                   --model lm-small --task sum|mt|lm|vit --method none|naive|flora|lora|galore
                   --rank N --optimizer adafactor --lr F --steps N --tau N
                   --kappa N --batch N --seed N --config file.toml
+                  --backend native|xla (native = pure rust, no artifacts)
     eval        evaluate a fresh init (loss + generation metric)
-                  --model lm-small --task sum --samples N
+                  --model lm-small --task sum --samples N --backend native|xla
     pilot       run the Figure-1 pilot study in pure rust
                   --steps N --rank N --lr F
     memory      print the analytic memory table for paper-scale models
                   --model t5-small|t5-3b|gpt2-base|gpt2-xl --optimizer ...
     inspect     list manifest executables and their ABI
-                  --artifacts DIR [--exe NAME]
+                  --artifacts DIR [--exe NAME] [--backend native]
     help        show this message
+
+Backends: `--backend native` runs the generated pure-rust catalog (bigram
+LM, sgd/galore steps — no artifacts or XLA needed); the default `xla`
+backend loads AOT artifacts via PJRT and needs a build with `--features xla`.
 
 Benches reproducing each paper table/figure: `cargo bench --bench <name>`
 (figure1_pilot, table1_accumulation, table2_momentum, table3_kappa,
- table4_linear_memory, table5_vit, table6_galore, figure2_profile, micro_rp).
+ table4_linear_memory, table5_vit, table6_galore, figure2_profile, micro_rp);
+the table benches accept `-- --backend native` too.
 ";
 
 #[cfg(test)]

@@ -12,7 +12,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use crate::runtime::{literal_f32, TensorSpec};
+use crate::runtime::{tensor_f32, Tensor, TensorSpec};
 
 const MAGIC: &[u8; 8] = b"FLORAckp";
 const VERSION: u32 = 1;
@@ -140,20 +140,20 @@ impl Checkpoint {
         Ok(Checkpoint { step, cursor, groups })
     }
 
-    /// Rebuild literal groups for a StateStore.
-    pub fn to_literals(
+    /// Rebuild tensor groups for a StateStore.
+    pub fn to_tensors(
         &self,
-    ) -> Result<Vec<(String, Vec<TensorSpec>, Vec<xla::Literal>)>, String> {
+    ) -> Result<Vec<(String, Vec<TensorSpec>, Vec<Tensor>)>, String> {
         self.groups
             .iter()
             .map(|g| {
                 let mut specs = Vec::new();
-                let mut lits = Vec::new();
+                let mut vals = Vec::new();
                 for (spec, data) in &g.tensors {
-                    lits.push(literal_f32(&spec.shape, data)?);
+                    vals.push(tensor_f32(&spec.shape, data)?);
                     specs.push(spec.clone());
                 }
-                Ok((g.name.clone(), specs, lits))
+                Ok((g.name.clone(), specs, vals))
             })
             .collect()
     }
@@ -231,9 +231,9 @@ mod tests {
     }
 
     #[test]
-    fn to_literals_shapes() {
+    fn to_tensors_shapes() {
         let ck = sample();
-        let groups = ck.to_literals().unwrap();
+        let groups = ck.to_tensors().unwrap();
         assert_eq!(groups[0].2[0].element_count(), 6);
         assert_eq!(groups[0].2[1].element_count(), 1);
     }

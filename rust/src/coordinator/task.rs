@@ -3,12 +3,10 @@
 
 use std::collections::BTreeMap;
 
-use xla::Literal;
-
 use crate::config::TaskKind;
 use crate::data::images::ImageTask;
 use crate::data::{corpus::LmTask, seq2seq::{MtTask, SumTask}, GenExample, LmBatch};
-use crate::runtime::{literal_f32, literal_i32, ModelInfo};
+use crate::runtime::{tensor_f32, tensor_i32, ModelInfo, Tensor};
 
 pub enum Task {
     Sum(SumTask),
@@ -49,13 +47,13 @@ impl Task {
         }
     }
 
-    /// Next training batch as named literals keyed by manifest input names.
+    /// Next training batch as named tensors keyed by manifest input names.
     pub fn next_batch(
         &self,
         batch: usize,
         split: u64,
         cursor: &mut u64,
-    ) -> Result<BTreeMap<String, Literal>, String> {
+    ) -> Result<BTreeMap<String, Tensor>, String> {
         let mut out = BTreeMap::new();
         match self {
             Task::Sum(t) => {
@@ -77,9 +75,9 @@ impl Task {
                 let (images, labels) = task.fill_flat(batch, split, cursor, *seed);
                 out.insert(
                     "batch/images".into(),
-                    literal_f32(&[batch, *side, *side, *channels], &images)?,
+                    tensor_f32(&[batch, *side, *side, *channels], &images)?,
                 );
-                out.insert("batch/labels".into(), literal_i32(&[batch], &labels)?);
+                out.insert("batch/labels".into(), tensor_i32(&[batch], &labels)?);
             }
         }
         Ok(out)
@@ -122,14 +120,14 @@ impl Task {
     }
 }
 
-fn insert_lm(out: &mut BTreeMap<String, Literal>, b: &LmBatch) -> Result<(), String> {
+fn insert_lm(out: &mut BTreeMap<String, Tensor>, b: &LmBatch) -> Result<(), String> {
     out.insert(
         "batch/tokens".into(),
-        literal_i32(&[b.batch, b.seq_len], &b.tokens)?,
+        tensor_i32(&[b.batch, b.seq_len], &b.tokens)?,
     );
     out.insert(
         "batch/mask".into(),
-        literal_f32(&[b.batch, b.seq_len], &b.mask)?,
+        tensor_f32(&[b.batch, b.seq_len], &b.mask)?,
     );
     Ok(())
 }

@@ -12,14 +12,14 @@
 //!     κ-interval projection refresh.
 //!   * `VitStep`      — Table-5 image runs (plain or flora-momentum).
 //!
-//! The trainer never interprets tensor *contents* — it moves named literal
-//! groups between executables according to the manifest ABI.
+//! The trainer never interprets tensor *contents* — it moves named tensor
+//! groups between executables according to the manifest ABI, so it is
+//! backend-agnostic: the same state machines drive the native pure-rust
+//! executor and the PJRT/XLA artifacts.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
-
-use xla::Literal;
 
 use super::method::MethodSpec;
 use super::report::{MetricValue, RunReport};
@@ -28,8 +28,8 @@ use super::task::{Task, TEST, TRAIN, VAL};
 use crate::config::{TaskKind, TrainConfig};
 use crate::metrics;
 use crate::runtime::{
-    literal_i32, scalar_f32, scalar_i32, scalar_u32, Executable, Runtime,
-    StateStore, TensorSpec,
+    scalar_f32, scalar_i32, scalar_u32, tensor_i32, Executable, Runtime,
+    StateStore, Tensor, TensorSpec,
 };
 use crate::util::rng::derive_seed;
 use crate::util::timing::Timer;
@@ -96,9 +96,17 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self, String> {
-        let rt = Rc::new(RefCell::new(Runtime::new(artifacts_dir)?));
+    /// Build a trainer over a backend spec: `"native"` selects the
+    /// pure-rust executor; anything else is an artifacts directory for the
+    /// PJRT backend (`xla` feature).
+    pub fn new(cfg: TrainConfig, backend_spec: &str) -> Result<Self, String> {
+        let rt = Rc::new(RefCell::new(Runtime::from_spec(backend_spec)?));
         Self::with_runtime(cfg, rt)
+    }
+
+    /// Trainer over the native backend: no artifacts, no XLA.
+    pub fn native(cfg: TrainConfig) -> Result<Self, String> {
+        Self::new(cfg, "native")
     }
 
     /// Build a trainer over an existing runtime, sharing its PJRT client
@@ -215,19 +223,19 @@ impl Trainer {
     // ABI plumbing
     // ------------------------------------------------------------------
 
-    /// Assemble the input literal list for an executable from state groups,
+    /// Assemble the input tensor list for an executable from state groups,
     /// a batch map and a scalar map, in manifest order.
     fn assemble(
         &self,
         exe: &Executable,
-        batch: &BTreeMap<String, Literal>,
-        scalars: &BTreeMap<&'static str, Literal>,
-    ) -> Result<Vec<Literal>, String> {
+        batch: &BTreeMap<String, Tensor>,
+        scalars: &BTreeMap<&'static str, Tensor>,
+    ) -> Result<Vec<Tensor>, String> {
         let mut idx: BTreeMap<&str, usize> = BTreeMap::new();
         let mut out = Vec::with_capacity(exe.info.inputs.len());
         for t in &exe.info.inputs {
             let g = group_of(&t.name);
-            let lit = match g {
+            let val = match g {
                 "params" | "train" | "opt" | "method" => {
                     let group = self.state.get(g)?;
                     let i = idx.entry(g).or_insert(0);
@@ -270,7 +278,7 @@ impl Trainer {
                     ))
                 }
             };
-            out.push(lit);
+            out.push(val);
         }
         Ok(out)
     }
@@ -280,21 +288,21 @@ impl Trainer {
     fn run_and_absorb(
         &mut self,
         exe: &Executable,
-        inputs: &[Literal],
+        inputs: &[Tensor],
     ) -> Result<Option<f32>, String> {
         let outs = exe.run(inputs)?;
         let mut loss = None;
-        let mut groups: BTreeMap<&'static str, Vec<Literal>> = BTreeMap::new();
-        for (t, lit) in exe.info.outputs.iter().zip(outs.into_iter()) {
+        let mut groups: BTreeMap<&'static str, Vec<Tensor>> = BTreeMap::new();
+        for (t, val) in exe.info.outputs.iter().zip(outs.into_iter()) {
             match (group_of(&t.name), t.name.as_str()) {
                 ("out", "loss") => {
                     loss = Some(
-                        lit.get_first_element::<f32>()
-                            .map_err(|e| format!("loss read: {e:?}"))?,
+                        val.first_f32()
+                            .map_err(|e| format!("loss read: {e}"))?,
                     );
                 }
                 ("out", _) => {} // tokens/preds handled by dedicated paths
-                (g, _) => groups.entry(g).or_default().push(lit),
+                (g, _) => groups.entry(g).or_default().push(val),
             }
         }
         for (g, values) in groups {
@@ -303,7 +311,7 @@ impl Trainer {
         Ok(loss)
     }
 
-    fn base_scalars(&self, lr: f32, step: usize) -> BTreeMap<&'static str, Literal> {
+    fn base_scalars(&self, lr: f32, step: usize) -> BTreeMap<&'static str, Tensor> {
         let mut m = BTreeMap::new();
         m.insert("lr", scalar_f32(lr));
         m.insert("step", scalar_f32(step as f32));
@@ -424,8 +432,8 @@ impl Trainer {
             let inputs = self.assemble(&exe, &batch, &BTreeMap::new())?;
             let outs = exe.run(&inputs)?;
             total += outs[0]
-                .get_first_element::<f32>()
-                .map_err(|e| format!("eval loss: {e:?}"))?;
+                .first_f32()
+                .map_err(|e| format!("eval loss: {e}"))?;
         }
         Ok(total / n_batches as f32)
     }
@@ -453,13 +461,13 @@ impl Trainer {
             let labels = batch
                 .get("batch/labels")
                 .unwrap()
-                .to_vec::<i32>()
-                .map_err(|e| format!("labels: {e:?}"))?;
+                .to_i32_vec()
+                .map_err(|e| format!("labels: {e}"))?;
             let inputs = self.assemble(&exe, &batch, &BTreeMap::new())?;
             let outs = exe.run(&inputs)?;
             let preds = outs[1]
-                .to_vec::<i32>()
-                .map_err(|e| format!("preds: {e:?}"))?;
+                .to_i32_vec()
+                .map_err(|e| format!("preds: {e}"))?;
             hits += preds
                 .iter()
                 .zip(labels.iter())
@@ -494,18 +502,18 @@ impl Trainer {
                     toks[b * seq_len + i] = t;
                 }
             }
-            let mut scalars: BTreeMap<&'static str, Literal> = BTreeMap::new();
+            let mut scalars: BTreeMap<&'static str, Tensor> = BTreeMap::new();
             scalars.insert("prompt_len", scalar_i32(prompt_len as i32));
             let mut batch = BTreeMap::new();
             batch.insert(
                 "batch/tokens".to_string(),
-                literal_i32(&[bdim, seq_len], &toks)?,
+                tensor_i32(&[bdim, seq_len], &toks)?,
             );
             let inputs = self.assemble(&exe, &batch, &scalars)?;
             let outs = exe.run(&inputs)?;
             let decoded = outs[0]
-                .to_vec::<i32>()
-                .map_err(|e| format!("greedy tokens: {e:?}"))?;
+                .to_i32_vec()
+                .map_err(|e| format!("greedy tokens: {e}"))?;
             for (b, ex) in chunk.iter().enumerate() {
                 let row = &decoded[b * seq_len..(b + 1) * seq_len];
                 let hyp: Vec<i32> = row
@@ -588,8 +596,8 @@ impl Trainer {
     /// instead of (not after) `init`.
     pub fn resume_from(&mut self, path: &str) -> Result<(), String> {
         let ck = super::checkpoint::Checkpoint::load(path)?;
-        for (name, specs, lits) in ck.to_literals()? {
-            self.state.put(&name, specs, lits);
+        for (name, specs, vals) in ck.to_tensors()? {
+            self.state.put(&name, specs, vals);
         }
         self.step = ck.step as usize;
         self.cursor = ck.cursor;

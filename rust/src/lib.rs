@@ -12,11 +12,15 @@
 //! * **L1** — Pallas kernels for the compress/decompress/transfer hot path
 //!   (python/compile/kernels/rp.py).
 //!
-//! Python never runs at inference/training time: `runtime::Runtime` loads
-//! the artifacts via PJRT and the binary is self-contained.
+//! Python never runs at inference/training time. The coordinator drives
+//! executables through the `runtime::Backend` boundary over
+//! backend-neutral tensors: the default build ships the pure-rust
+//! **native** backend (generated bigram-LM catalog — builds and tests on
+//! a bare machine, zero dependencies), and the original PJRT path that
+//! loads the AOT artifacts lives behind the `xla` cargo feature.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! See README.md for the backend matrix, DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for the paper-vs-measured record.
 
 pub mod bench;
 pub mod cli;

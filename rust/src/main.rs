@@ -64,6 +64,22 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.train.eval_every = args.usize_flag("eval-every", cfg.train.eval_every)?;
     cfg.train.eval_samples = args.usize_flag("eval-samples", cfg.train.eval_samples)?;
     cfg.artifacts_dir = args.flag_or("artifacts", &cfg.artifacts_dir);
+    // the backend spec rides in artifacts_dir ("native" is reserved —
+    // Runtime::from_spec dispatches on it)
+    match args.flag_or("backend", "xla").as_str() {
+        "native" => {
+            cfg.artifacts_dir = "native".into();
+            // the native catalog implements the sgd base optimizer; honor
+            // an explicit --optimizer but remap the artifacts-path default
+            if args.flag("optimizer").is_none() {
+                cfg.train.optimizer = "sgd".into();
+            }
+        }
+        "xla" => {}
+        other => {
+            return Err(format!("--backend: expected native|xla, got {other:?}"))
+        }
+    }
     Ok(cfg)
 }
 
@@ -197,8 +213,13 @@ fn cmd_memory(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_inspect(args: &Args) -> Result<(), String> {
-    let dir = args.flag_or("artifacts", "artifacts");
-    let manifest = Manifest::load(&dir)?;
+    let mut dir = args.flag_or("artifacts", "artifacts");
+    let manifest = if args.flag("backend") == Some("native") {
+        dir = "native catalog".into();
+        flora::runtime::native_manifest()
+    } else {
+        Manifest::load(&dir)?
+    };
     match args.flag("exe") {
         Some(name) => {
             let e = manifest.executable(name)?;

@@ -1,0 +1,36 @@
+//! The execution-backend boundary.
+//!
+//! Everything above this trait pair (state store, trainer, benches, CLI)
+//! works with backend-neutral `Tensor`s and manifest metadata; everything
+//! below owns compilation, device buffers and the actual math. Two
+//! implementations exist:
+//!
+//!   * `runtime::native::NativeBackend` — pure rust, default, no external
+//!     libraries (the generated catalog implements the fused steps on
+//!     `tensor::Matrix` + `rp`);
+//!   * `runtime::pjrt::PjrtBackend` — the original PJRT/XLA path over AOT
+//!     HLO-text artifacts, behind the `xla` cargo feature.
+
+use std::rc::Rc;
+
+use super::manifest::ExecutableInfo;
+use super::values::Tensor;
+
+/// A compiled/prepared executable: a pure function from the manifest's
+/// ordered inputs to its ordered outputs. State is threaded through the
+/// ABI, never held behind this trait.
+pub trait BackendExec {
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String>;
+}
+
+/// An execution engine that can materialize manifest executables.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Compile (or fetch from an internal cache) the executable described
+    /// by a manifest entry.
+    fn compile(
+        &mut self,
+        info: &ExecutableInfo,
+    ) -> Result<Rc<dyn BackendExec>, String>;
+}

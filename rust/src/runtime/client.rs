@@ -1,27 +1,26 @@
-//! PJRT client wrapper: HLO-text loading, compile caching, execution with
-//! ABI validation, and ledger-tracked output sizes.
+//! Backend-neutral runtime: resolves manifest executables through an
+//! execution `Backend` and caches the prepared executables by name. The
+//! default build carries only the pure-rust native backend; the PJRT/XLA
+//! path over AOT artifacts lives behind the `xla` cargo feature.
 
 use std::collections::HashMap;
 use std::rc::Rc;
-use std::time::Instant;
 
-use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
-
-use super::manifest::{ExecutableInfo, Manifest};
+use super::backend::{Backend, BackendExec};
+use super::manifest::Manifest;
+use super::values::Tensor;
 use crate::memory::BufferLedger;
-use crate::{debug, info};
 
-/// A compiled executable plus its manifest metadata.
+/// A prepared executable plus its manifest metadata.
 pub struct Executable {
-    pub info: ExecutableInfo,
-    exe: PjRtLoadedExecutable,
+    pub info: super::manifest::ExecutableInfo,
+    exe: Rc<dyn BackendExec>,
 }
 
 impl Executable {
     /// Execute with ABI validation. Inputs must match `info.inputs` in
-    /// count; outputs are the decomposed result tuple in `info.outputs`
-    /// order (aot.py lowers with return_tuple=True).
-    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>, String> {
+    /// count; outputs are the result tuple in `info.outputs` order.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
         if inputs.len() != self.info.inputs.len() {
             return Err(format!(
                 "{}: got {} inputs, manifest wants {} (first expected: {:?})",
@@ -31,16 +30,7 @@ impl Executable {
                 self.info.inputs.first().map(|t| &t.name),
             ));
         }
-        let bufs = self
-            .exe
-            .execute::<Literal>(inputs)
-            .map_err(|e| format!("{}: execute: {e:?}", self.info.name))?;
-        let result = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| format!("{}: to_literal: {e:?}", self.info.name))?;
-        let outputs = result
-            .to_tuple()
-            .map_err(|e| format!("{}: untuple: {e:?}", self.info.name))?;
+        let outputs = self.exe.run(inputs)?;
         if outputs.len() != self.info.outputs.len() {
             return Err(format!(
                 "{}: got {} outputs, manifest wants {}",
@@ -53,51 +43,85 @@ impl Executable {
     }
 }
 
-/// The runtime: one PJRT CPU client + a compile cache over the manifest.
+/// The runtime: one backend + a prepare cache over the manifest.
 pub struct Runtime {
     pub manifest: Manifest,
     pub ledger: BufferLedger,
-    client: PjRtClient,
+    backend: Box<dyn Backend>,
     cache: HashMap<String, Rc<Executable>>,
 }
 
 impl Runtime {
-    /// Create a CPU runtime over an artifacts directory.
+    /// Pure-rust runtime over the generated native catalog: no artifacts,
+    /// no XLA, works on a bare machine.
+    pub fn native() -> Result<Self, String> {
+        let (manifest, backend) = super::native::catalog();
+        crate::info!(
+            "runtime up: backend=native ({} executables)",
+            manifest.executables.len()
+        );
+        Ok(Self {
+            manifest,
+            ledger: BufferLedger::new(),
+            backend: Box::new(backend),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Select a backend by spec: `"native"` for the pure-rust executor,
+    /// anything else is an artifacts directory for the PJRT backend.
+    pub fn from_spec(spec: &str) -> Result<Self, String> {
+        if spec == "native" {
+            Self::native()
+        } else {
+            Self::new(spec)
+        }
+    }
+
+    /// PJRT runtime over an AOT artifacts directory (`xla` feature).
+    #[cfg(feature = "xla")]
     pub fn new(artifacts_dir: &str) -> Result<Self, String> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client =
-            PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
-        info!(
-            "runtime up: platform={} artifacts={} ({} executables)",
-            client.platform_name(),
+        let backend = super::pjrt::PjrtBackend::new()?;
+        crate::info!(
+            "runtime up: backend=pjrt artifacts={} ({} executables)",
             artifacts_dir,
             manifest.executables.len()
         );
-        Ok(Self { manifest, client, cache: HashMap::new(), ledger: BufferLedger::new() })
+        Ok(Self {
+            manifest,
+            ledger: BufferLedger::new(),
+            backend: Box::new(backend),
+            cache: HashMap::new(),
+        })
     }
 
-    /// Load + compile (cached) an executable by manifest name.
+    /// Without the `xla` feature the PJRT path is compiled out.
+    #[cfg(not(feature = "xla"))]
+    pub fn new(artifacts_dir: &str) -> Result<Self, String> {
+        Err(format!(
+            "artifacts runtime for {artifacts_dir:?} needs the PJRT backend, \
+             which is compiled out of this build (enable with `--features \
+             xla` plus the vendored xla crate); the native backend runs \
+             everywhere: --backend native / Runtime::native()"
+        ))
+    }
+
+    /// Prepare (cached) an executable by manifest name.
     pub fn load(&mut self, name: &str) -> Result<Rc<Executable>, String> {
         if let Some(e) = self.cache.get(name) {
             return Ok(e.clone());
         }
         let info = self.manifest.executable(name)?.clone();
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            info.file
-                .to_str()
-                .ok_or_else(|| format!("{name}: non-utf8 path"))?,
-        )
-        .map_err(|e| format!("{name}: parse HLO text: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| format!("{name}: compile: {e:?}"))?;
-        debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exe = self.backend.compile(&info)?;
         let e = Rc::new(Executable { info, exe });
         self.cache.insert(name.to_string(), e.clone());
         Ok(e)
+    }
+
+    /// Which engine executes this runtime's manifest.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Total state bytes a set of manifest groups would occupy — used by
@@ -109,5 +133,40 @@ impl Runtime {
             .iter()
             .map(|t| t.byte_size() as u64)
             .sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_loads_and_caches() {
+        let mut rt = Runtime::native().unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        let a = rt.load("lm-tiny/init").unwrap();
+        let b = rt.load("lm-tiny/init").unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "second load must hit the cache");
+        assert!(rt.load("lm-tiny/does_not_exist").is_err());
+    }
+
+    #[test]
+    fn from_spec_dispatches() {
+        assert!(Runtime::from_spec("native").is_ok());
+        // an artifacts path without the xla feature (or without artifacts)
+        // must fail with a helpful error, not panic
+        let err = match Runtime::from_spec("/definitely/not/artifacts") {
+            Err(e) => e,
+            Ok(_) => return, // xla build with artifacts present: fine too
+        };
+        assert!(!err.is_empty());
+    }
+
+    #[test]
+    fn run_validates_input_arity() {
+        let mut rt = Runtime::native().unwrap();
+        let init = rt.load("lm-tiny/init").unwrap();
+        let err = init.run(&[]).unwrap_err();
+        assert!(err.contains("manifest wants"), "{err}");
     }
 }

@@ -1,21 +1,35 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
-//! `manifest.json`) and executes them on the CPU PJRT client via the `xla`
-//! crate. This is the only module that touches XLA; everything above it
-//! works with `Literal` groups described by the manifest.
+//! Execution runtime: backend-neutral `Tensor` values, the `Backend`
+//! boundary, and a `Runtime` that resolves manifest executables through a
+//! selected engine.
 //!
-//! Interchange is HLO **text** — xla_extension 0.5.1 rejects jax≥0.5
-//! serialized protos (64-bit instruction ids); the text parser reassigns
-//! ids (see /opt/xla-example/README.md and DESIGN.md §8).
+//! Two backends implement the same manifest ABI:
+//!
+//!   * **native** (default, pure rust) — a generated catalog whose fused
+//!     steps (plain, Algorithm-1 accumulation, Algorithm-2 momentum,
+//!     GaLore refresh) run directly on `tensor::Matrix` + `rp`. No
+//!     artifacts, no external libraries.
+//!   * **pjrt** (`--features xla`) — loads the AOT artifacts
+//!     (`artifacts/*.hlo.txt` + `manifest.json`) and executes them on the
+//!     CPU PJRT client via the vendored `xla` crate. Interchange is HLO
+//!     **text** — xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//!     (64-bit instruction ids); the text parser reassigns ids (DESIGN.md
+//!     §8).
 
+pub mod backend;
 pub mod client;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 pub mod state;
 pub mod values;
 
+pub use backend::{Backend, BackendExec};
 pub use client::{Executable, Runtime};
 pub use manifest::{Manifest, ModelInfo, TensorSpec};
+pub use native::{native_manifest, NativeBackend};
 pub use state::StateStore;
 pub use values::{
-    literal_f32, literal_i32, literal_to_f32, scalar_f32, scalar_i32,
-    scalar_u32,
+    scalar_f32, scalar_i32, scalar_u32, tensor_f32, tensor_i32, zeros_for,
+    Tensor,
 };

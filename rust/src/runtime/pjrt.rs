@@ -1,0 +1,154 @@
+//! PJRT execution backend (the original XLA path), behind the `xla` cargo
+//! feature: loads AOT artifacts (`artifacts/*.hlo.txt` + `manifest.json`)
+//! and executes them on the CPU PJRT client via the vendored `xla` crate.
+//! This is the only module that touches XLA; everything above works with
+//! backend-neutral `Tensor` groups described by the manifest.
+//!
+//! Interchange is HLO **text** — xla_extension 0.5.1 rejects jax≥0.5
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids (see /opt/xla-example/README.md and DESIGN.md §8).
+//!
+//! NOTE: the `xla` crate is not on crates.io. Building with `--features
+//! xla` requires the offline-vendored crate to be supplied via a `[patch]`
+//! entry or vendor directory (see README "Backends").
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::backend::{Backend, BackendExec};
+use super::manifest::{ExecutableInfo, TensorSpec};
+use super::values::Tensor;
+use crate::debug;
+
+/// The PJRT engine: one CPU client shared by all compiled executables.
+pub struct PjrtBackend {
+    client: PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self, String> {
+        let client =
+            PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
+        debug!("pjrt client up: platform={}", client.platform_name());
+        Ok(Self { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(
+        &mut self,
+        info: &ExecutableInfo,
+    ) -> Result<Rc<dyn BackendExec>, String> {
+        let name = &info.name;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file
+                .to_str()
+                .ok_or_else(|| format!("{name}: non-utf8 path"))?,
+        )
+        .map_err(|e| format!("{name}: parse HLO text: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("{name}: compile: {e:?}"))?;
+        debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        Ok(Rc::new(PjrtExec {
+            name: name.clone(),
+            outputs: info.outputs.clone(),
+            exe,
+        }) as Rc<dyn BackendExec>)
+    }
+}
+
+/// A compiled PJRT executable; converts `Tensor` ↔ `Literal` at the edge.
+struct PjrtExec {
+    name: String,
+    outputs: Vec<TensorSpec>,
+    exe: PjRtLoadedExecutable,
+}
+
+impl BackendExec for PjrtExec {
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+        let lits = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>, _>>()?;
+        let bufs = self
+            .exe
+            .execute::<Literal>(&lits)
+            .map_err(|e| format!("{}: execute: {e:?}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("{}: to_literal: {e:?}", self.name))?;
+        let outputs = result
+            .to_tuple()
+            .map_err(|e| format!("{}: untuple: {e:?}", self.name))?;
+        if outputs.len() != self.outputs.len() {
+            return Err(format!(
+                "{}: got {} outputs, manifest wants {}",
+                self.name,
+                outputs.len(),
+                self.outputs.len()
+            ));
+        }
+        outputs
+            .iter()
+            .zip(self.outputs.iter())
+            .map(|(l, s)| from_literal(l, s))
+            .collect()
+    }
+}
+
+fn shaped<T: xla::ArrayElement + xla::NativeType>(
+    data: &[T],
+    shape: &[usize],
+) -> Result<Literal, String> {
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| format!("reshape: {e:?}"))
+}
+
+/// Host tensor → PJRT literal.
+fn to_literal(t: &Tensor) -> Result<Literal, String> {
+    match t {
+        Tensor::F32 { shape, data } => shaped(data, shape),
+        Tensor::I32 { shape, data } => shaped(data, shape),
+        Tensor::U32 { shape, data } => shaped(data, shape),
+    }
+}
+
+/// PJRT literal → host tensor, typed by the manifest output spec.
+fn from_literal(l: &Literal, spec: &TensorSpec) -> Result<Tensor, String> {
+    let ctx = &spec.name;
+    match spec.dtype.as_str() {
+        "int32" => Ok(Tensor::I32 {
+            shape: spec.shape.clone(),
+            data: l
+                .to_vec::<i32>()
+                .map_err(|e| format!("{ctx}: to_vec i32: {e:?}"))?,
+        }),
+        "uint32" => Ok(Tensor::U32 {
+            shape: spec.shape.clone(),
+            data: l
+                .to_vec::<u32>()
+                .map_err(|e| format!("{ctx}: to_vec u32: {e:?}"))?,
+        }),
+        _ => Ok(Tensor::F32 {
+            shape: spec.shape.clone(),
+            data: l
+                .to_vec::<f32>()
+                .map_err(|e| format!("{ctx}: to_vec f32: {e:?}"))?,
+        }),
+    }
+}

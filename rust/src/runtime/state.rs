@@ -1,21 +1,19 @@
-//! Named literal groups: the training state the coordinator threads through
+//! Named tensor groups: the training state the coordinator threads through
 //! executables. Each group ("params", "opt", "acc", "mom", ...) is an
-//! ordered list of literals matching the manifest's sorted-name order; the
-//! ledger tracks their byte footprint so integration tests can reconcile
-//! the live numbers with the analytic accountant.
+//! ordered list of backend-neutral tensors matching the manifest's
+//! sorted-name order; the ledger tracks their byte footprint so integration
+//! tests can reconcile the live numbers with the analytic accountant.
 
 use std::collections::BTreeMap;
 
-use xla::Literal;
-
 use super::manifest::TensorSpec;
-use super::values::zeros_for;
+use super::values::{zeros_for, Tensor};
 use crate::memory::BufferLedger;
 
 /// One named group of state tensors.
 pub struct Group {
     pub specs: Vec<TensorSpec>,
-    pub values: Vec<Literal>,
+    pub values: Vec<Tensor>,
 }
 
 impl Group {
@@ -36,8 +34,8 @@ impl StateStore {
         Self { groups: BTreeMap::new(), ledger }
     }
 
-    /// Install a group from executed outputs (consumes the literals).
-    pub fn put(&mut self, name: &str, specs: Vec<TensorSpec>, values: Vec<Literal>) {
+    /// Install a group from executed outputs (consumes the tensors).
+    pub fn put(&mut self, name: &str, specs: Vec<TensorSpec>, values: Vec<Tensor>) {
         assert_eq!(specs.len(), values.len(), "group {name}: spec/value mismatch");
         let g = Group { specs, values };
         if let Some(l) = &self.ledger {
@@ -71,7 +69,7 @@ impl StateStore {
     }
 
     /// Replace a group's values (shapes unchanged — e.g. post-step params).
-    pub fn replace_values(&mut self, name: &str, values: Vec<Literal>) -> Result<(), String> {
+    pub fn replace_values(&mut self, name: &str, values: Vec<Tensor>) -> Result<(), String> {
         let g = self
             .groups
             .get_mut(name)
@@ -101,8 +99,8 @@ impl StateStore {
         Ok(())
     }
 
-    /// Assemble an input literal list by cloning groups in order.
-    pub fn collect(&self, group_names: &[&str]) -> Result<Vec<Literal>, String> {
+    /// Assemble an input tensor list by cloning groups in order.
+    pub fn collect(&self, group_names: &[&str]) -> Result<Vec<Tensor>, String> {
         let mut out = Vec::new();
         for name in group_names {
             let g = self.get(name)?;
@@ -129,10 +127,10 @@ impl StateStore {
                     .specs
                     .iter()
                     .zip(g.values.iter())
-                    .map(|(spec, lit)| {
-                        let data = lit
-                            .to_vec::<f32>()
-                            .map_err(|e| format!("{}: {e:?}", spec.name))?;
+                    .map(|(spec, val)| {
+                        let data = val
+                            .to_f32_vec()
+                            .map_err(|e| format!("{}: {e}", spec.name))?;
                         Ok((spec.clone(), data))
                     })
                     .collect::<Result<Vec<_>, String>>()?;
@@ -165,10 +163,10 @@ mod tests {
         let mut s = StateStore::new(None);
         s.put_zeros("a", vec![spec("a/x", &[2])]).unwrap();
         s.put_zeros("b", vec![spec("b/y", &[3])]).unwrap();
-        let lits = s.collect(&["b", "a"]).unwrap();
-        assert_eq!(lits.len(), 2);
-        assert_eq!(lits[0].element_count(), 3);
-        assert_eq!(lits[1].element_count(), 2);
+        let vals = s.collect(&["b", "a"]).unwrap();
+        assert_eq!(vals.len(), 2);
+        assert_eq!(vals[0].element_count(), 3);
+        assert_eq!(vals[1].element_count(), 2);
     }
 
     #[test]

@@ -1,70 +1,156 @@
-//! Literal construction/extraction helpers — the host side of the flat ABI.
-
-use xla::Literal;
+//! Backend-neutral tensor values — the host side of the flat ABI.
+//!
+//! `Tensor` replaces `xla::Literal` everywhere above the backend boundary:
+//! the coordinator moves named `Tensor` groups between executables and
+//! never touches backend-specific buffers. Backends convert at their edge
+//! (the PJRT backend to `Literal`s, the native backend to `tensor::Matrix`).
 
 use super::manifest::TensorSpec;
 
-/// f32 tensor literal with the given shape.
-pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal, String> {
+/// A host tensor in one of the three dtypes the manifest ABI uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. }
+            | Tensor::I32 { shape, .. }
+            | Tensor::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+            Tensor::U32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "float32",
+            Tensor::I32 { .. } => "int32",
+            Tensor::U32 { .. } => "uint32",
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.element_count() * 4
+    }
+
+    /// Borrow the f32 payload.
+    pub fn as_f32(&self) -> Result<&[f32], String> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            other => {
+                Err(format!("expected float32 tensor, got {}", other.dtype()))
+            }
+        }
+    }
+
+    /// Borrow the i32 payload.
+    pub fn as_i32(&self) -> Result<&[i32], String> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            other => {
+                Err(format!("expected int32 tensor, got {}", other.dtype()))
+            }
+        }
+    }
+
+    /// Read the tensor back as owned f32s.
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>, String> {
+        self.as_f32().map(|d| d.to_vec())
+    }
+
+    /// Read the tensor back as owned i32s.
+    pub fn to_i32_vec(&self) -> Result<Vec<i32>, String> {
+        self.as_i32().map(|d| d.to_vec())
+    }
+
+    /// First element as f32 (scalar reads: losses, flags).
+    pub fn first_f32(&self) -> Result<f32, String> {
+        match self {
+            Tensor::F32 { data, .. } => data
+                .first()
+                .copied()
+                .ok_or_else(|| "empty float32 tensor".to_string()),
+            other => {
+                Err(format!("expected float32 scalar, got {}", other.dtype()))
+            }
+        }
+    }
+
+    /// First element as i32 (scalar reads: prompt_len).
+    pub fn first_i32(&self) -> Result<i32, String> {
+        match self {
+            Tensor::I32 { data, .. } => data
+                .first()
+                .copied()
+                .ok_or_else(|| "empty int32 tensor".to_string()),
+            other => {
+                Err(format!("expected int32 scalar, got {}", other.dtype()))
+            }
+        }
+    }
+
+    /// First element as u32 (scalar reads: seeds).
+    pub fn first_u32(&self) -> Result<u32, String> {
+        match self {
+            Tensor::U32 { data, .. } => data
+                .first()
+                .copied()
+                .ok_or_else(|| "empty uint32 tensor".to_string()),
+            other => {
+                Err(format!("expected uint32 scalar, got {}", other.dtype()))
+            }
+        }
+    }
+}
+
+fn check_numel(ctx: &str, shape: &[usize], got: usize) -> Result<(), String> {
     let numel: usize = shape.iter().product::<usize>().max(1);
-    if data.len() != numel {
+    if got != numel {
         return Err(format!(
-            "literal_f32: shape {shape:?} wants {numel} elements, got {}",
-            data.len()
+            "{ctx}: shape {shape:?} wants {numel} elements, got {got}"
         ));
     }
-    if shape.is_empty() {
-        return Ok(Literal::scalar(data[0]));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| format!("reshape: {e:?}"))
+    Ok(())
 }
 
-/// i32 tensor literal with the given shape.
-pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal, String> {
-    let numel: usize = shape.iter().product::<usize>().max(1);
-    if data.len() != numel {
-        return Err(format!(
-            "literal_i32: shape {shape:?} wants {numel} elements, got {}",
-            data.len()
-        ));
-    }
-    if shape.is_empty() {
-        return Ok(Literal::scalar(data[0]));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| format!("reshape: {e:?}"))
+/// f32 tensor with the given shape.
+pub fn tensor_f32(shape: &[usize], data: &[f32]) -> Result<Tensor, String> {
+    check_numel("tensor_f32", shape, data.len())?;
+    Ok(Tensor::F32 { shape: shape.to_vec(), data: data.to_vec() })
 }
 
-pub fn scalar_f32(v: f32) -> Literal {
-    Literal::scalar(v)
+/// i32 tensor with the given shape.
+pub fn tensor_i32(shape: &[usize], data: &[i32]) -> Result<Tensor, String> {
+    check_numel("tensor_i32", shape, data.len())?;
+    Ok(Tensor::I32 { shape: shape.to_vec(), data: data.to_vec() })
 }
 
-pub fn scalar_i32(v: i32) -> Literal {
-    Literal::scalar(v)
+pub fn scalar_f32(v: f32) -> Tensor {
+    Tensor::F32 { shape: Vec::new(), data: vec![v] }
 }
 
-pub fn scalar_u32(v: u32) -> Literal {
-    Literal::scalar(v)
+pub fn scalar_i32(v: i32) -> Tensor {
+    Tensor::I32 { shape: Vec::new(), data: vec![v] }
 }
 
-/// Read a literal back as f32s.
-pub fn literal_to_f32(l: &Literal) -> Result<Vec<f32>, String> {
-    l.to_vec::<f32>().map_err(|e| format!("to_vec f32: {e:?}"))
+pub fn scalar_u32(v: u32) -> Tensor {
+    Tensor::U32 { shape: Vec::new(), data: vec![v] }
 }
 
-/// Read a literal back as i32s.
-pub fn literal_to_i32(l: &Literal) -> Result<Vec<i32>, String> {
-    l.to_vec::<i32>().map_err(|e| format!("to_vec i32: {e:?}"))
-}
-
-/// Zero-filled literal matching a manifest tensor spec (f32 state groups).
-pub fn zeros_for(spec: &TensorSpec) -> Result<Literal, String> {
-    literal_f32(&spec.shape, &vec![0.0; spec.numel()])
+/// Zero-filled tensor matching a manifest tensor spec (f32 state groups).
+pub fn zeros_for(spec: &TensorSpec) -> Result<Tensor, String> {
+    tensor_f32(&spec.shape, &vec![0.0; spec.numel()])
 }
 
 #[cfg(test)]
@@ -73,29 +159,42 @@ mod tests {
 
     #[test]
     fn f32_roundtrip() {
-        let l = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
-        assert_eq!(l.element_count(), 6);
-        assert_eq!(literal_to_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        let t = tensor_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.element_count(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.to_f32_vec().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
     }
 
     #[test]
     fn i32_roundtrip() {
-        let l = literal_i32(&[4], &[9, 8, 7, 6]).unwrap();
-        assert_eq!(literal_to_i32(&l).unwrap(), vec![9, 8, 7, 6]);
+        let t = tensor_i32(&[4], &[9, 8, 7, 6]).unwrap();
+        assert_eq!(t.to_i32_vec().unwrap(), vec![9, 8, 7, 6]);
     }
 
     #[test]
     fn scalar_shapes() {
-        let l = scalar_u32(42);
-        assert_eq!(l.element_count(), 1);
-        let l = literal_f32(&[], &[1.5]).unwrap();
-        assert_eq!(l.element_count(), 1);
+        let t = scalar_u32(42);
+        assert_eq!(t.element_count(), 1);
+        assert_eq!(t.first_u32().unwrap(), 42);
+        let t = tensor_f32(&[], &[1.5]).unwrap();
+        assert_eq!(t.element_count(), 1);
+        assert_eq!(t.first_f32().unwrap(), 1.5);
+        assert_eq!(scalar_i32(-3).first_i32().unwrap(), -3);
     }
 
     #[test]
     fn wrong_element_count_rejected() {
-        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
-        assert!(literal_i32(&[3], &[1, 2]).is_err());
+        assert!(tensor_f32(&[2, 2], &[1.0]).is_err());
+        assert!(tensor_i32(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let t = scalar_f32(1.0);
+        assert!(t.first_i32().is_err());
+        assert!(t.first_u32().is_err());
+        assert!(t.to_i32_vec().is_err());
+        assert!(scalar_i32(1).first_f32().is_err());
     }
 
     #[test]
@@ -105,8 +204,9 @@ mod tests {
             shape: vec![3, 5],
             dtype: "float32".into(),
         };
-        let l = zeros_for(&spec).unwrap();
-        assert_eq!(l.element_count(), 15);
-        assert!(literal_to_f32(&l).unwrap().iter().all(|&x| x == 0.0));
+        let t = zeros_for(&spec).unwrap();
+        assert_eq!(t.element_count(), 15);
+        assert_eq!(t.byte_size(), 60);
+        assert!(t.to_f32_vec().unwrap().iter().all(|&x| x == 0.0));
     }
 }

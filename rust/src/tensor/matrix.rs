@@ -63,6 +63,10 @@ impl Matrix {
     }
 
     /// C = A @ B. Cache-friendly ikj loop with an accumulator row.
+    ///
+    /// No zero-skip on `aik`: skipping would drop IEEE NaN/Inf propagation
+    /// (0.0 * NaN is NaN) and silently launder non-finite gradients — see
+    /// the `matmul_propagates_nan` regression test.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.rows, "matmul {:?} x {:?}", self, b);
         let mut out = Matrix::zeros(self.rows, b.cols);
@@ -70,9 +74,6 @@ impl Matrix {
             let arow = self.row(i);
             let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
             for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
                 let brow = &b.data[k * b.cols..(k + 1) * b.cols];
                 for (o, &bkj) in orow.iter_mut().zip(brow.iter()) {
                     *o += aik * bkj;
@@ -100,7 +101,7 @@ impl Matrix {
         out
     }
 
-    /// C = A^T @ B.
+    /// C = A^T @ B. Like `matmul`, no zero-skip: NaN/Inf must propagate.
     pub fn matmul_tn(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.rows, b.rows, "matmul_tn {:?} x {:?}", self, b);
         let mut out = Matrix::zeros(self.cols, b.cols);
@@ -108,9 +109,6 @@ impl Matrix {
             let arow = self.row(k);
             let brow = b.row(k);
             for (i, &aki) in arow.iter().enumerate() {
-                if aki == 0.0 {
-                    continue;
-                }
                 let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
                 for (o, &bkj) in orow.iter_mut().zip(brow.iter()) {
                     *o += aki * bkj;
@@ -311,5 +309,30 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn matmul_propagates_nan() {
+        // regression: the old `aik == 0.0` skip dropped the 0*NaN product,
+        // so a NaN gradient row vanished whenever the left factor had a
+        // structural zero (e.g. a LoRA B at init). IEEE says 0*NaN = NaN.
+        let a = m(1, 2, &[0.0, 1.0]);
+        let b = m(2, 2, &[f32::NAN, f32::NAN, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert!(c.data.iter().all(|x| x.is_nan()), "{:?}", c.data);
+
+        let at = m(2, 1, &[0.0, 1.0]); // same contraction through A^T
+        let ct = at.matmul_tn(&b);
+        assert!(ct.data.iter().all(|x| x.is_nan()), "{:?}", ct.data);
+    }
+
+    #[test]
+    fn matmul_propagates_inf() {
+        let a = m(1, 2, &[0.0, 1.0]);
+        let b = m(2, 2, &[f32::INFINITY, 2.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        // 0*inf = NaN in column 0; column 1 stays finite (0*2 + 1*1)
+        assert!(c.at(0, 0).is_nan(), "{:?}", c.data);
+        assert_eq!(c.at(0, 1), 1.0);
     }
 }

@@ -1,9 +1,13 @@
-//! Integration tests: the rust coordinator against the REAL artifacts
-//! (requires `make artifacts`; every test skips cleanly if they're absent).
+//! Integration tests, in two tiers:
 //!
-//! These exercise the full L3→L2→L1 stack: PJRT compile, the manifest ABI,
-//! Algorithm-1 cycles, Algorithm-2 resampling, LoRA/GaLore baselines,
-//! generation metrics, and the accountant-vs-ledger reconciliation.
+//!   * **native** (`native_*`, always run) — the coordinator end-to-end
+//!     through the pure-rust `NativeBackend`: Plain and Algorithm-1
+//!     accumulation modes, plus momentum resampling, GaLore, generation
+//!     metrics, determinism and checkpoint resume. No artifacts, no XLA.
+//!   * **artifacts** (require the `xla` feature AND `make artifacts`;
+//!     skip cleanly otherwise) — the full L3→L2→L1 stack: PJRT compile,
+//!     the manifest ABI, LoRA/ViT paths, and the accountant-vs-ledger
+//!     reconciliation.
 
 use flora::config::{TaskKind, TrainConfig};
 use flora::coordinator::{MethodSpec, Trainer};
@@ -13,17 +17,209 @@ use flora::runtime::Manifest;
 const ARTIFACTS: &str = "artifacts";
 
 fn have_artifacts() -> bool {
-    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
+    cfg!(feature = "xla")
+        && std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
 }
 
 macro_rules! require_artifacts {
     () => {
         if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
+            eprintln!(
+                "skipping: needs a --features xla build plus `make artifacts`"
+            );
             return;
         }
     };
 }
+
+// ---------------------------------------------------------------------
+// native backend — always runs
+// ---------------------------------------------------------------------
+
+/// lm-tiny on the native catalog: bigram LM, vocab 64, SGD base optimizer.
+fn native_cfg(
+    method: MethodSpec,
+    task: TaskKind,
+    tau: usize,
+    steps: usize,
+) -> TrainConfig {
+    TrainConfig {
+        model: "lm-tiny".into(),
+        task,
+        method,
+        optimizer: "sgd".into(),
+        lr: 0.5,
+        steps,
+        tau,
+        kappa: 4,
+        batch: 4,
+        seed: 0,
+        eval_every: 0,
+        eval_samples: 8,
+    }
+}
+
+#[test]
+fn native_plain_mode_trains_end_to_end() {
+    let mut tr =
+        Trainer::native(native_cfg(MethodSpec::None, TaskKind::Sum, 1, 40))
+            .unwrap();
+    let report = tr.run().unwrap();
+    let early = report.train_losses[0];
+    let late = report.final_train_loss();
+    assert!(early.is_finite() && late.is_finite());
+    // init is near-uniform over vocab 64
+    assert!((early - (64f32).ln()).abs() < 0.5, "init loss {early}");
+    assert!(late < early, "plain/native did not descend: {early} -> {late}");
+    assert!(report.metric.is_some());
+}
+
+#[test]
+fn native_accumulation_cycle_trains_and_sizes_state() {
+    let mut tr = Trainer::native(native_cfg(
+        MethodSpec::Flora { rank: 8 },
+        TaskKind::Sum,
+        4,
+        10,
+    ))
+    .unwrap();
+    let report = tr.run().unwrap();
+    assert!(
+        report.final_train_loss() < report.train_losses[0],
+        "accumulation/native did not descend"
+    );
+    // the whole point: the accumulator is [vocab, r] f32, not [vocab, vocab]
+    let method_b = report
+        .state_bytes
+        .iter()
+        .find(|(g, _)| g == "method")
+        .map(|(_, b)| *b)
+        .unwrap();
+    assert_eq!(method_b, 64 * 8 * 4);
+    let params_b = report
+        .state_bytes
+        .iter()
+        .find(|(g, _)| g == "params")
+        .map(|(_, b)| *b)
+        .unwrap();
+    assert!(method_b < params_b / 4);
+}
+
+#[test]
+fn native_momentum_resampling_runs() {
+    let mut c = native_cfg(MethodSpec::Flora { rank: 8 }, TaskKind::Mt, 1, 12);
+    c.kappa = 3; // several resample + transfer events over the run
+    c.lr = 0.3;
+    let mut tr = Trainer::native(c).unwrap();
+    let report = tr.run().unwrap();
+    assert!(report.final_train_loss().is_finite());
+    assert!(report.final_train_loss() < report.train_losses[0] + 0.1);
+}
+
+#[test]
+fn native_naive_and_flora_land_in_same_regime() {
+    let run = |method: MethodSpec| {
+        let mut tr =
+            Trainer::native(native_cfg(method, TaskKind::Sum, 4, 8)).unwrap();
+        tr.run().unwrap().final_train_loss()
+    };
+    let naive = run(MethodSpec::Naive);
+    let flora = run(MethodSpec::Flora { rank: 32 });
+    let init_loss = (64f32).ln();
+    assert!(naive < init_loss, "naive stuck at {naive}");
+    assert!(flora < init_loss, "flora stuck at {flora}");
+    assert!((naive - flora).abs() < 1.0, "naive={naive} flora={flora}");
+}
+
+#[test]
+fn native_galore_descends() {
+    let mut c = native_cfg(MethodSpec::Galore { rank: 8 }, TaskKind::Lm, 1, 12);
+    c.lr = 0.05; // Adam-in-subspace steps are ~unit-scale
+    c.kappa = 4;
+    let mut tr = Trainer::native(c).unwrap();
+    let report = tr.run().unwrap();
+    assert!(report.final_train_loss().is_finite());
+    assert!(report.final_train_loss() < report.train_losses[0] + 0.1);
+}
+
+#[test]
+fn native_generation_metric_in_range() {
+    let mut tr =
+        Trainer::native(native_cfg(MethodSpec::None, TaskKind::Sum, 1, 2))
+            .unwrap();
+    tr.init().unwrap();
+    let m = tr.eval_metric(8).unwrap();
+    let q = m.quality();
+    assert!((0.0..=300.0).contains(&q), "rouge sum out of range: {q}");
+}
+
+#[test]
+fn native_deterministic_given_seed() {
+    fn run(seed: u64) -> Vec<f32> {
+        let mut c = native_cfg(MethodSpec::Flora { rank: 4 }, TaskKind::Sum, 2, 6);
+        c.seed = seed;
+        let mut tr = Trainer::native(c).unwrap();
+        tr.run().unwrap().train_losses
+    }
+    assert_eq!(run(7), run(7));
+    assert_ne!(run(7), run(8));
+}
+
+#[test]
+fn native_checkpoint_roundtrip_resumes_identically() {
+    // train 3 steps, checkpoint, train 2 more; vs resume-from-checkpoint
+    // and train the same 2 — losses must match exactly (plain mode uses
+    // neither seed schedule, so the schedules need no re-advancing).
+    let base = native_cfg(MethodSpec::None, TaskKind::Sum, 1, 3);
+    let path = std::env::temp_dir().join("flora_native_ckpt.bin");
+    let path_s = path.to_str().unwrap();
+
+    let mut t1 = Trainer::native(base.clone()).unwrap();
+    t1.run().unwrap();
+    t1.save_checkpoint(path_s).unwrap();
+    let mut accum = flora::coordinator::AccumSeeds::new(0);
+    let mut mom = flora::coordinator::MomentumSeeds::new(0, base.kappa);
+    let cont: Vec<f32> = (0..2)
+        .map(|_| t1.train_step(&mut accum, &mut mom).unwrap())
+        .collect();
+
+    let mut t2 = Trainer::native(base).unwrap();
+    t2.resume_from(path_s).unwrap();
+    let mut accum2 = flora::coordinator::AccumSeeds::new(0);
+    let mut mom2 = flora::coordinator::MomentumSeeds::new(0, 4);
+    let resumed: Vec<f32> = (0..2)
+        .map(|_| t2.train_step(&mut accum2, &mut mom2).unwrap())
+        .collect();
+    assert_eq!(cont, resumed);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn native_manifest_covers_lm_models() {
+    let m = flora::runtime::native_manifest();
+    for model in ["lm-tiny", "lm-small", "lm-base"] {
+        assert!(m.models.contains_key(model), "missing model {model}");
+        for exe in [
+            "init",
+            "eval",
+            "greedy",
+            "plain_step_sgd",
+            "micro_flora_r8",
+            "update_flora_r8_sgd",
+            "mom_step_flora_r8_sgd",
+            "mom_step_flora_notransfer_r8_sgd",
+            "galore_step_r8",
+            "micro_naive",
+            "update_naive_sgd",
+        ] {
+            m.executable(&format!("{model}/{exe}")).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// artifacts (PJRT) tier — skips without `--features xla` + artifacts
+// ---------------------------------------------------------------------
 
 fn cfg(method: MethodSpec, task: TaskKind, tau: usize, steps: usize) -> TrainConfig {
     TrainConfig {
