@@ -45,7 +45,12 @@ fn main() {
                     r.total_state_bytes().to_string(),
                 ]);
             }
-            Err(e) => table.row(vec![kappa.to_string(), format!("ERR {e}"), "-".into(), "-".into()]),
+            Err(e) => table.row(vec![
+                kappa.to_string(),
+                format!("ERR {e}"),
+                "-".into(),
+                "-".into(),
+            ]),
         }
     }
     table.print();
@@ -54,7 +59,8 @@ fn main() {
         rows.iter().map(|r| r.1).max_by(|a, b| a.partial_cmp(b).unwrap()),
     ) {
         println!(
-            "\ncheck (paper Table 3): intermediate kappa beats kappa=1: {} ({best:.1} vs {first:.1})",
+            "\ncheck (paper Table 3): intermediate kappa beats kappa=1: \
+             {} ({best:.1} vs {first:.1})",
             if best > first { "OK" } else { "MISS" }
         );
     }

@@ -11,6 +11,7 @@
 use flora::bench::paper::*;
 use flora::config::TaskKind;
 use flora::memory::{Dims, OptKind, StateRole};
+use flora::opt::OptimizerKind;
 
 fn main() {
     let args = BenchArgs::parse();
@@ -19,12 +20,13 @@ fn main() {
     let cells = table_grid();
     let dims = Dims::t5_small_sim();
     let title = format!(
-        "Table 4 — linear-memory optimizer (unfactored Adafactor, sum task, tau={tau}, {steps} steps)"
+        "Table 4 — linear-memory optimizer (unfactored Adafactor, sum \
+         task, tau={tau}, {steps} steps)"
     );
     if args.require_artifacts() {
         let rt = shared_runtime(args.spec()).expect("runtime");
         let mut base = base_config(TaskKind::Sum, steps, tau);
-        base.optimizer = "adafactor_nofactor".into();
+        base.optimizer = OptimizerKind::AdafactorNoFactor;
         args.adjust(&mut base);
         let reports: Vec<_> = cells
             .iter()

@@ -12,6 +12,7 @@ use flora::bench::Table;
 use flora::config::{TaskKind, TrainConfig};
 use flora::coordinator::{MethodSpec, Trainer};
 use flora::memory::{breakdown, Dims, Method, OptKind, StateRole};
+use flora::opt::OptimizerKind;
 use flora::util::human;
 
 fn vit_dims(d: u64, layers: u64, ff: u64) -> Dims {
@@ -27,8 +28,8 @@ fn main() {
         &["Model", "Optimizer", "Accuracy", "Mem (analytic)", "local state"],
     );
     let cases = [
-        ("Base", MethodSpec::None, "adam", 0.003f32),
-        ("Base", MethodSpec::Flora { rank: 16 }, "adafactor", 0.01),
+        ("Base", MethodSpec::None, OptimizerKind::Adam, 0.003f32),
+        ("Base", MethodSpec::Flora { rank: 16 }, OptimizerKind::Adafactor, 0.01),
     ];
     if args.backend == "native" {
         println!(
@@ -43,7 +44,7 @@ fn main() {
                 model: "vit-cifar".into(),
                 task: TaskKind::Vit,
                 method,
-                optimizer: opt.into(),
+                optimizer: opt,
                 lr,
                 steps,
                 tau: 1,
@@ -64,25 +65,45 @@ fn main() {
             match report {
                 Ok(r) => table.row(vec![
                     scale.into(),
-                    if method == MethodSpec::None { "Adam".into() } else { "FLORA".into() },
+                    if method == MethodSpec::None {
+                        "Adam".into()
+                    } else {
+                        "FLORA".into()
+                    },
                     r.metric.map(|mv| mv.render()).unwrap_or_default(),
                     format!("{:.2} GiB", human::gib(b.total())),
                     human::bytes(r.total_state_bytes()),
                 ]),
-                Err(e) => table.row(vec![scale.into(), method.label(), format!("ERR {e}"), "-".into(), "-".into()]),
+                Err(e) => table.row(vec![
+                    scale.into(),
+                    method.label(),
+                    format!("ERR {e}"),
+                    "-".into(),
+                    "-".into(),
+                ]),
             }
         }
     }
     // ViT-Base and ViT-Large analytic rows (the paper's 23.8% / 32.4% savings)
-    for (label, d, l, ff) in [("Base(86M)", 768u64, 12u64, 3072u64), ("Large(307M)", 1024, 24, 4096)] {
+    for (label, d, l, ff) in
+        [("Base(86M)", 768u64, 12u64, 3072u64), ("Large(307M)", 1024, 24, 4096)]
+    {
         let dims = vit_dims(d, l, ff);
-        let adam = breakdown(&dims, Method::None, OptKind::Adam, StateRole::Momentum, 32, false);
-        let flora = breakdown(&dims, Method::Flora(256), OptKind::Adafactor, StateRole::Momentum, 32, false);
+        let adam =
+            breakdown(&dims, Method::None, OptKind::Adam, StateRole::Momentum, 32, false);
+        let flora = breakdown(
+            &dims, Method::Flora(256), OptKind::Adafactor, StateRole::Momentum, 32, false,
+        );
         let saving = 100.0 * (1.0 - flora.total() as f64 / adam.total() as f64);
         table.row(vec![
-            label.into(), "Adam→FLORA".into(),
+            label.into(),
+            "Adam→FLORA".into(),
             format!("saving {saving:.1}%"),
-            format!("{:.2} → {:.2} GiB", human::gib(adam.total()), human::gib(flora.total())),
+            format!(
+                "{:.2} → {:.2} GiB",
+                human::gib(adam.total()),
+                human::gib(flora.total())
+            ),
             "-".into(),
         ]);
     }

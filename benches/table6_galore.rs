@@ -12,6 +12,7 @@ use flora::bench::Table;
 use flora::config::{TaskKind, TrainConfig};
 use flora::coordinator::{MethodSpec, Trainer};
 use flora::memory::{breakdown, Dims, Method, OptKind, StateRole};
+use flora::opt::OptimizerKind;
 use flora::util::human;
 
 fn main() {
@@ -36,7 +37,7 @@ fn main() {
                 model: "lm-small".into(),
                 task: TaskKind::Lm,
                 method,
-                optimizer: "adafactor".into(),
+                optimizer: OptimizerKind::Adafactor,
                 lr,
                 steps,
                 tau: 1,
@@ -47,7 +48,7 @@ fn main() {
                 eval_samples: 64,
             };
             if matches!(method, MethodSpec::Galore { .. }) {
-                cfg.optimizer = "adam".into(); // GaLore runs Adam-in-subspace
+                cfg.optimizer = OptimizerKind::Adam; // GaLore = Adam-in-subspace
             }
             args.adjust(&mut cfg);
             let report = Trainer::with_runtime(cfg, rt.clone()).and_then(|mut t| t.run());
@@ -60,7 +61,9 @@ fn main() {
             let mem = b.opt_state + b.method_state;
             match report {
                 Ok(r) => {
-                    quality.push((method.label(), r.metric.map(|mv| mv.quality()).unwrap_or(f64::MIN)));
+                    let q =
+                        r.metric.map(|mv| mv.quality()).unwrap_or(f64::MIN);
+                    quality.push((method.label(), q));
                     table.row(vec![
                         "60M".into(),
                         method.label(),
@@ -71,18 +74,46 @@ fn main() {
                     ]);
                 }
                 Err(e) => table.row(vec![
-                    "60M".into(), method.label(), format!("ERR {e}"), "-".into(), "-".into(), "-".into(),
+                    "60M".into(),
+                    method.label(),
+                    format!("ERR {e}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
                 ]),
             }
         }
     }
     // analytic 350M/7B rows (paper's larger sizes)
     for (label, dims) in [
-        ("350M", Dims { vocab: 32128, d_model: 1024, n_layers: 24, d_ff: 4096, seq_len: 512, n_heads: 16 }),
-        ("7B", Dims { vocab: 32000, d_model: 4096, n_layers: 32, d_ff: 11008, seq_len: 2048, n_heads: 32 }),
+        (
+            "350M",
+            Dims {
+                vocab: 32128,
+                d_model: 1024,
+                n_layers: 24,
+                d_ff: 4096,
+                seq_len: 512,
+                n_heads: 16,
+            },
+        ),
+        (
+            "7B",
+            Dims {
+                vocab: 32000,
+                d_model: 4096,
+                n_layers: 32,
+                d_ff: 11008,
+                seq_len: 2048,
+                n_heads: 32,
+            },
+        ),
     ] {
-        let ga = breakdown(&dims, Method::Galore(256), OptKind::Adam, StateRole::Momentum, 16, false);
-        let fl = breakdown(&dims, Method::Flora(256), OptKind::Adafactor, StateRole::Momentum, 16, false);
+        let ga =
+            breakdown(&dims, Method::Galore(256), OptKind::Adam, StateRole::Momentum, 16, false);
+        let fl = breakdown(
+            &dims, Method::Flora(256), OptKind::Adafactor, StateRole::Momentum, 16, false,
+        );
         table.row(vec![
             label.into(),
             "GaLore vs FLORA".into(),

@@ -12,6 +12,7 @@
 
 use flora::config::{TaskKind, TrainConfig};
 use flora::coordinator::{MethodSpec, Trainer};
+use flora::opt::OptimizerKind;
 use flora::util::human;
 
 fn main() -> Result<(), String> {
@@ -19,7 +20,9 @@ fn main() -> Result<(), String> {
         model: "lm-tiny".into(),
         task: TaskKind::Sum,
         method: MethodSpec::Flora { rank: 4 },
-        optimizer: "sgd".into(), // the native catalog's base optimizer
+        // the paper's base optimizer; the native catalog also executes
+        // sgd, adam and adafactor_nofactor (--optimizer on the CLI)
+        optimizer: OptimizerKind::Adafactor,
         lr: 0.5,
         steps: 12,   // 12 optimizer steps = 12 x tau microbatches
         tau: 4,      // Algorithm 1 accumulation length
@@ -29,7 +32,10 @@ fn main() -> Result<(), String> {
         eval_every: 4,
         eval_samples: 16,
     };
-    println!("quickstart: FLORA(4) gradient accumulation on lm-tiny/sum (native backend)");
+    println!(
+        "quickstart: FLORA(4) + Adafactor gradient accumulation on \
+         lm-tiny/sum (native backend)"
+    );
     let mut trainer = Trainer::native(cfg)?;
     let report = trainer.run()?;
 

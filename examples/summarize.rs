@@ -5,6 +5,7 @@
 
 use flora::config::{TaskKind, TrainConfig};
 use flora::coordinator::{MethodSpec, Trainer};
+use flora::opt::OptimizerKind;
 use flora::util::human;
 
 fn run(method: MethodSpec, lr: f32) -> Result<(), String> {
@@ -12,7 +13,7 @@ fn run(method: MethodSpec, lr: f32) -> Result<(), String> {
         model: "lm-small".into(),
         task: TaskKind::Sum,
         method,
-        optimizer: "adafactor".into(),
+        optimizer: OptimizerKind::Adafactor,
         lr,
         steps: 30,
         tau: 4,

@@ -8,6 +8,7 @@
 use flora::config::{TaskKind, TrainConfig};
 use flora::coordinator::{MethodSpec, Trainer};
 use flora::metrics;
+use flora::opt::OptimizerKind;
 use flora::util::human;
 
 fn main() -> Result<(), String> {
@@ -19,7 +20,7 @@ fn main() -> Result<(), String> {
         model: "lm-base".into(),
         task: TaskKind::Lm,
         method: MethodSpec::Flora { rank: 16 },
-        optimizer: "adafactor".into(),
+        optimizer: OptimizerKind::Adafactor,
         lr: 0.03,
         steps,
         tau: 1, // momentum mode

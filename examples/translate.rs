@@ -8,6 +8,7 @@
 
 use flora::config::{TaskKind, TrainConfig};
 use flora::coordinator::{MethodSpec, Trainer};
+use flora::opt::OptimizerKind;
 use flora::tokenizer::Tokenizer;
 
 fn main() -> Result<(), String> {
@@ -15,7 +16,7 @@ fn main() -> Result<(), String> {
         model: "lm-small".into(),
         task: TaskKind::Mt,
         method: MethodSpec::Flora { rank: 16 },
-        optimizer: "adafactor".into(),
+        optimizer: OptimizerKind::Adafactor,
         lr: 0.05,
         steps: 40,
         tau: 4,

@@ -13,6 +13,7 @@ use crate::bench::Table;
 use crate::config::{TaskKind, TrainConfig};
 use crate::coordinator::{MethodSpec, RunReport, Trainer};
 use crate::memory::{self, Dims, OptKind, StateRole};
+use crate::opt::OptimizerKind;
 use crate::runtime::Runtime;
 use crate::util::human;
 
@@ -187,14 +188,18 @@ pub fn render_analytic_only(
 }
 
 /// Bench-binary arg parsing: `--quick` (fewer steps), `--steps N`,
-/// `--artifacts DIR`, `--backend native|xla`. cargo bench passes
-/// `--bench`; ignore unknown flags.
+/// `--artifacts DIR`, `--backend native|xla`,
+/// `--optimizer sgd|adam|adafactor|adafactor_nofactor`. cargo bench
+/// passes `--bench`; ignore unknown flags.
 pub struct BenchArgs {
     pub quick: bool,
     pub steps: Option<usize>,
     pub artifacts: String,
     /// `"xla"` (artifacts via PJRT) or `"native"` (pure-rust executor).
     pub backend: String,
+    /// Base-optimizer override for every measured cell (tables default to
+    /// the paper's Adafactor; both backends execute all of them).
+    pub optimizer: Option<OptimizerKind>,
 }
 
 impl BenchArgs {
@@ -205,6 +210,7 @@ impl BenchArgs {
             steps: None,
             artifacts: "artifacts".into(),
             backend: "xla".into(),
+            optimizer: None,
         };
         let mut i = 0;
         while i < argv.len() {
@@ -216,6 +222,16 @@ impl BenchArgs {
                 }
                 "--artifacts" if i + 1 < argv.len() => {
                     out.artifacts = argv[i + 1].clone();
+                    i += 1;
+                }
+                "--optimizer" if i + 1 < argv.len() => {
+                    match OptimizerKind::parse(&argv[i + 1]) {
+                        Ok(o) => out.optimizer = Some(o),
+                        Err(e) => {
+                            eprintln!("--optimizer: {e}");
+                            std::process::exit(2);
+                        }
+                    }
                     i += 1;
                 }
                 "--backend" if i + 1 < argv.len() => {
@@ -245,11 +261,12 @@ impl BenchArgs {
         }
     }
 
-    /// Per-backend config tweaks: the native catalog implements the SGD
-    /// base optimizer (GaLore keeps its own Adam-in-subspace).
+    /// Apply the CLI overrides a bench honors per cell (currently the
+    /// `--optimizer` selector; the native backend executes every base
+    /// optimizer, so no per-backend remap is needed anymore).
     pub fn adjust(&self, cfg: &mut TrainConfig) {
-        if self.backend == "native" {
-            cfg.optimizer = "sgd".into();
+        if let Some(opt) = self.optimizer {
+            cfg.optimizer = opt;
         }
     }
 
@@ -279,7 +296,7 @@ pub fn base_config(task: TaskKind, steps: usize, tau: usize) -> TrainConfig {
         model: "lm-small".into(),
         task,
         method: MethodSpec::Naive,
-        optimizer: "adafactor".into(),
+        optimizer: OptimizerKind::Adafactor,
         lr: 0.05,
         steps,
         tau,
@@ -324,12 +341,18 @@ mod tests {
             steps: None,
             artifacts: "artifacts".into(),
             backend: "native".into(),
+            optimizer: None,
         };
         assert_eq!(args.spec(), "native");
         assert!(args.require_artifacts(), "native never needs artifacts");
+        // no override: the paper's Adafactor base runs natively as-is
         let mut cfg = base_config(TaskKind::Sum, 1, 1);
         args.adjust(&mut cfg);
-        assert_eq!(cfg.optimizer, "sgd");
+        assert_eq!(cfg.optimizer, OptimizerKind::Adafactor);
+        // an explicit --optimizer flows into every cell
+        let args = BenchArgs { optimizer: Some(OptimizerKind::Adam), ..args };
+        args.adjust(&mut cfg);
+        assert_eq!(cfg.optimizer, OptimizerKind::Adam);
     }
 
     #[test]

@@ -93,7 +93,8 @@ USAGE:
 COMMANDS:
     train       train a model with a chosen method
                   --model lm-small --task sum|mt|lm|vit --method none|naive|flora|lora|galore
-                  --rank N --optimizer adafactor --lr F --steps N --tau N
+                  --rank N --optimizer sgd|adam|adafactor|adafactor_nofactor
+                  --lr F --steps N --tau N
                   --kappa N --batch N --seed N --config file.toml
                   --backend native|xla (native = pure rust, no artifacts)
     eval        evaluate a fresh init (loss + generation metric)
@@ -107,8 +108,9 @@ COMMANDS:
     help        show this message
 
 Backends: `--backend native` runs the generated pure-rust catalog (bigram
-LM, sgd/galore steps — no artifacts or XLA needed); the default `xla`
-backend loads AOT artifacts via PJRT and needs a build with `--features xla`.
+LM; every base optimizer in plain/accumulation/momentum modes plus the
+GaLore baseline — no artifacts or XLA needed); the default `xla` backend
+loads AOT artifacts via PJRT and needs a build with `--features xla`.
 
 Benches reproducing each paper table/figure: `cargo bench --bench <name>`
 (figure1_pilot, table1_accumulation, table2_momentum, table3_kappa,

@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 
 use super::toml::{parse_toml, TomlValue};
 use crate::coordinator::method::MethodSpec;
+use crate::opt::OptimizerKind;
 
 /// Which synthetic workload drives training (DESIGN.md §4 mappings).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,7 +48,7 @@ pub struct TrainConfig {
     pub model: String,
     pub task: TaskKind,
     pub method: MethodSpec,
-    pub optimizer: String,
+    pub optimizer: OptimizerKind,
     pub lr: f32,
     pub steps: usize,
     /// gradient-accumulation length τ (Algorithm 1); 1 disables
@@ -66,7 +67,7 @@ impl Default for TrainConfig {
             model: "lm-small".into(),
             task: TaskKind::Sum,
             method: MethodSpec::Flora { rank: 16 },
-            optimizer: "adafactor".into(),
+            optimizer: OptimizerKind::Adafactor,
             lr: 0.05,
             steps: 200,
             tau: 1,
@@ -122,7 +123,9 @@ impl ExperimentConfig {
                 "train.task" => cfg.train.task = TaskKind::parse(&req_str(k, v)?)?,
                 "train.method" => method_name = Some(req_str(k, v)?),
                 "train.rank" => rank = Some(req_int(k, v)? as u64),
-                "train.optimizer" => cfg.train.optimizer = req_str(k, v)?,
+                "train.optimizer" => {
+                    cfg.train.optimizer = OptimizerKind::parse(&req_str(k, v)?)?
+                }
                 "train.lr" => cfg.train.lr = req_f64(k, v)? as f32,
                 "train.steps" => cfg.train.steps = req_int(k, v)? as usize,
                 "train.tau" => cfg.train.tau = req_int(k, v)? as usize,
@@ -191,8 +194,16 @@ mod tests {
         assert_eq!(c.name, "table1-flora8");
         assert_eq!(c.train.task, TaskKind::Mt);
         assert_eq!(c.train.method, MethodSpec::Flora { rank: 8 });
+        assert_eq!(c.train.optimizer, OptimizerKind::Adafactor);
         assert_eq!(c.train.tau, 16);
         assert_eq!(c.train.lr, 0.03);
+    }
+
+    #[test]
+    fn bad_optimizer_rejected() {
+        let e = ExperimentConfig::from_toml_str(r#"train.optimizer = "adamw""#)
+            .unwrap_err();
+        assert!(e.contains("unknown optimizer"), "{e}");
     }
 
     #[test]

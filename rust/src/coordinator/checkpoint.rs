@@ -23,6 +23,9 @@ pub struct GroupSnapshot {
     pub tensors: Vec<(TensorSpec, Vec<f32>)>,
 }
 
+/// One restored group: name + manifest specs + tensors, in ABI order.
+pub type GroupTensors = (String, Vec<TensorSpec>, Vec<Tensor>);
+
 /// Everything needed to resume a run.
 pub struct Checkpoint {
     pub step: u64,
@@ -141,9 +144,7 @@ impl Checkpoint {
     }
 
     /// Rebuild tensor groups for a StateStore.
-    pub fn to_tensors(
-        &self,
-    ) -> Result<Vec<(String, Vec<TensorSpec>, Vec<Tensor>)>, String> {
+    pub fn to_tensors(&self) -> Result<Vec<GroupTensors>, String> {
         self.groups
             .iter()
             .map(|g| {

@@ -1,6 +1,10 @@
 //! Method specification + the manifest-name scheme binding the coordinator
 //! to the AOT catalog (python/compile/aot.py is the other half of this
 //! contract; test_steps_abi.py and rust/tests/integration.rs check both).
+//! Optimizer-suffixed names take the typed [`OptimizerKind`], so a config
+//! can only ever ask for executables a base optimizer actually exists for.
+
+use crate::opt::OptimizerKind;
 
 /// The optimizer-state compression method under test.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,7 +108,7 @@ impl MethodSpec {
     }
 
     /// Algorithm-1 cycle-end update.
-    pub fn update_exe(&self, model: &str, optimizer: &str) -> Option<String> {
+    pub fn update_exe(&self, model: &str, optimizer: OptimizerKind) -> Option<String> {
         match self {
             MethodSpec::None | MethodSpec::Galore { .. } => None,
             MethodSpec::FloraNoTransfer { .. } => None,
@@ -121,12 +125,12 @@ impl MethodSpec {
     }
 
     /// Fused plain step (method None / the "no accumulation" baseline).
-    pub fn plain_step_exe(model: &str, optimizer: &str) -> String {
+    pub fn plain_step_exe(model: &str, optimizer: OptimizerKind) -> String {
         format!("{model}/plain_step_{optimizer}")
     }
 
     /// Algorithm-2 fused momentum step.
-    pub fn momentum_exe(&self, model: &str, optimizer: &str) -> Option<String> {
+    pub fn momentum_exe(&self, model: &str, optimizer: OptimizerKind) -> Option<String> {
         match self {
             MethodSpec::None | MethodSpec::Galore { .. } => None,
             MethodSpec::FloraNoTransfer { rank } => Some(format!(
@@ -168,7 +172,7 @@ impl MethodSpec {
     }
 
     /// ViT training-step name (Table 5 uses "none"+adam and flora+adafactor).
-    pub fn vit_step_exe(&self, model: &str, optimizer: &str) -> String {
+    pub fn vit_step_exe(&self, model: &str, optimizer: OptimizerKind) -> String {
         match self {
             MethodSpec::Flora { rank } => {
                 format!("{model}/step_flora_r{rank}_{optimizer}")
@@ -191,22 +195,31 @@ mod tests {
 
     #[test]
     fn exe_names_match_aot_catalog() {
+        let af = OptimizerKind::Adafactor;
         let flora = MethodSpec::Flora { rank: 8 };
         assert_eq!(flora.micro_exe("lm-small").unwrap(), "lm-small/micro_flora_r8");
         assert_eq!(
-            flora.update_exe("lm-small", "adafactor").unwrap(),
+            flora.update_exe("lm-small", af).unwrap(),
             "lm-small/update_flora_r8_adafactor"
         );
         assert_eq!(
-            flora.momentum_exe("lm-small", "adafactor").unwrap(),
+            flora.momentum_exe("lm-small", af).unwrap(),
             "lm-small/mom_step_flora_r8_adafactor"
+        );
+        assert_eq!(
+            flora.momentum_exe("lm-small", OptimizerKind::Sgd).unwrap(),
+            "lm-small/mom_step_flora_r8_sgd"
         );
         let lora = MethodSpec::Lora { rank: 32 };
         assert_eq!(lora.micro_exe("lm-small").unwrap(), "lm-small/lora_r32_micro");
         assert_eq!(lora.eval_exe("lm-small"), "lm-small/lora_r32_eval");
         assert_eq!(
-            MethodSpec::plain_step_exe("lm-small", "adafactor"),
+            MethodSpec::plain_step_exe("lm-small", af),
             "lm-small/plain_step_adafactor"
+        );
+        assert_eq!(
+            MethodSpec::plain_step_exe("lm-small", OptimizerKind::AdafactorNoFactor),
+            "lm-small/plain_step_adafactor_nofactor"
         );
         let ga = MethodSpec::Galore { rank: 16 };
         assert_eq!(ga.galore_exe("lm-small").unwrap(), "lm-small/galore_step_r16");
@@ -217,18 +230,19 @@ mod tests {
     fn none_has_no_micro_or_update() {
         let none = MethodSpec::None;
         assert!(none.micro_exe("m").is_none());
-        assert!(none.update_exe("m", "adafactor").is_none());
-        assert!(none.momentum_exe("m", "adafactor").is_none());
+        assert!(none.update_exe("m", OptimizerKind::Adafactor).is_none());
+        assert!(none.momentum_exe("m", OptimizerKind::Adafactor).is_none());
     }
 
     #[test]
     fn vit_step_names() {
         assert_eq!(
-            MethodSpec::None.vit_step_exe("vit-cifar", "adam"),
+            MethodSpec::None.vit_step_exe("vit-cifar", OptimizerKind::Adam),
             "vit-cifar/step_adam"
         );
         assert_eq!(
-            MethodSpec::Flora { rank: 16 }.vit_step_exe("vit-cifar", "adafactor"),
+            MethodSpec::Flora { rank: 16 }
+                .vit_step_exe("vit-cifar", OptimizerKind::Adafactor),
             "vit-cifar/step_flora_r16_adafactor"
         );
     }

@@ -12,9 +12,11 @@
 //!     κ-interval projection refresh.
 //!   * `VitStep`      — Table-5 image runs (plain or flora-momentum).
 //!
-//! The trainer never interprets tensor *contents* — it moves named tensor
-//! groups between executables according to the manifest ABI, so it is
-//! backend-agnostic: the same state machines drive the native pure-rust
+//! The trainer never interprets tensor *contents* — it moves typed state
+//! groups between executables per the manifest ABI, with every input and
+//! output routed BY NAME through `runtime::{Route, StepIo, StepOutputs}`
+//! (no positional `outs[i]` indexing, no stringly-typed group tags), so it
+//! is backend-agnostic: the same state machines drive the native pure-rust
 //! executor and the PJRT/XLA artifacts.
 
 use std::cell::RefCell;
@@ -28,8 +30,9 @@ use super::task::{Task, TEST, TRAIN, VAL};
 use crate::config::{TaskKind, TrainConfig};
 use crate::metrics;
 use crate::runtime::{
-    scalar_f32, scalar_i32, scalar_u32, tensor_i32, Executable, Runtime,
-    StateStore, Tensor, TensorSpec,
+    scalar_f32, scalar_i32, scalar_u32, tensor_i32, Executable, Route,
+    Runtime, ScalarKey, StateGroup, StateStore, StepIo, StepOutputs,
+    TensorSpec,
 };
 use crate::util::rng::derive_seed;
 use crate::util::timing::Timer;
@@ -60,25 +63,6 @@ impl Mode {
                 }
             }
         }
-    }
-}
-
-/// Which state group an ABI tensor name belongs to.
-fn group_of(name: &str) -> &'static str {
-    if name == "loss" || name == "tokens" || name == "preds" {
-        "out"
-    } else if name.starts_with("params/") || name.starts_with("base/") {
-        "params"
-    } else if name.starts_with("train/") {
-        "train"
-    } else if name.starts_with("opt/") {
-        "opt"
-    } else if name.starts_with("batch/") {
-        "batch"
-    } else if name.contains('/') {
-        "method" // acc/, mom/, proj/, m/, v/ — method-owned state
-    } else {
-        "scalar" // seed, lr, step, tau, resample, refresh, prompt_len, ...
     }
 }
 
@@ -138,7 +122,7 @@ impl Trainer {
 
     fn main_exe_name(cfg: &TrainConfig, mode: Mode) -> Result<String, String> {
         let m = &cfg.model;
-        let opt = &cfg.optimizer;
+        let opt = cfg.optimizer;
         let missing = |what: &str| {
             format!("method {:?} has no {what} executable", cfg.method)
         };
@@ -165,16 +149,20 @@ impl Trainer {
     /// Initialize params + all state groups declared by the mode's execs.
     pub fn init(&mut self) -> Result<(), String> {
         // params from the seeded init executable
-        let init = self.rt.borrow_mut().load(&self.cfg.method.init_exe(&self.cfg.model))?;
+        let init = self
+            .rt
+            .borrow_mut()
+            .load(&self.cfg.method.init_exe(&self.cfg.model))?;
         let outs = init.run(&[scalar_u32(self.cfg.seed as u32)])?;
-        self.state.put("params", init.info.outputs.clone(), outs);
+        self.state.put(StateGroup::Params, init.info.outputs.clone(), outs);
 
         if let Some(name) = self.cfg.method.lora_init_exe(&self.cfg.model) {
             let lora_init = self.rt.borrow_mut().load(&name)?;
-            let mut inputs = self.state.collect(&["params"])?;
+            let mut inputs = self.state.collect(&[StateGroup::Params])?;
             inputs.push(scalar_u32(derive_seed(self.cfg.seed, 1) as u32));
             let outs = lora_init.run(&inputs)?;
-            self.state.put("train", lora_init.info.outputs.clone(), outs);
+            self.state
+                .put(StateGroup::Train, lora_init.info.outputs.clone(), outs);
         }
 
         // opt + method-state zeros, shapes from the mode's executables
@@ -185,7 +173,7 @@ impl Trainer {
             if let Some(u) = self
                 .cfg
                 .method
-                .update_exe(&self.cfg.model, &self.cfg.optimizer)
+                .update_exe(&self.cfg.model, self.cfg.optimizer)
             {
                 exes.push(u);
             }
@@ -193,11 +181,15 @@ impl Trainer {
         for name in exes {
             let e = self.rt.borrow_mut().load(&name)?;
             for t in &e.info.inputs {
-                match group_of(&t.name) {
-                    "opt" if !opt_specs.iter().any(|s| s.name == t.name) => {
+                let route = Route::of(&t.name)
+                    .map_err(|err| format!("{name}: {err}"))?;
+                match route {
+                    Route::State(StateGroup::Opt)
+                        if !opt_specs.iter().any(|s| s.name == t.name) =>
+                    {
                         opt_specs.push(t.clone())
                     }
-                    "method"
+                    Route::State(StateGroup::Method)
                         if !method_specs.iter().any(|s| s.name == t.name) =>
                     {
                         method_specs.push(t.clone())
@@ -207,10 +199,10 @@ impl Trainer {
             }
         }
         if !opt_specs.is_empty() {
-            self.state.put_zeros("opt", opt_specs)?;
+            self.state.put_zeros(StateGroup::Opt, opt_specs)?;
         }
         if !method_specs.is_empty() {
-            self.state.put_zeros("method", method_specs)?;
+            self.state.put_zeros(StateGroup::Method, method_specs)?;
         }
         debug!(
             "state initialized: {} bytes total",
@@ -223,99 +215,18 @@ impl Trainer {
     // ABI plumbing
     // ------------------------------------------------------------------
 
-    /// Assemble the input tensor list for an executable from state groups,
-    /// a batch map and a scalar map, in manifest order.
-    fn assemble(
-        &self,
-        exe: &Executable,
-        batch: &BTreeMap<String, Tensor>,
-        scalars: &BTreeMap<&'static str, Tensor>,
-    ) -> Result<Vec<Tensor>, String> {
-        let mut idx: BTreeMap<&str, usize> = BTreeMap::new();
-        let mut out = Vec::with_capacity(exe.info.inputs.len());
-        for t in &exe.info.inputs {
-            let g = group_of(&t.name);
-            let val = match g {
-                "params" | "train" | "opt" | "method" => {
-                    let group = self.state.get(g)?;
-                    let i = idx.entry(g).or_insert(0);
-                    let l = group.values.get(*i).ok_or_else(|| {
-                        format!("{}: group {g} exhausted at {}", exe.info.name, t.name)
-                    })?;
-                    *i += 1;
-                    // cross-check the ABI ordering by tail name
-                    let tail = t.name.splitn(2, '/').nth(1).unwrap_or("");
-                    let spec_tail = group.specs[*i - 1]
-                        .name
-                        .splitn(2, '/')
-                        .nth(1)
-                        .unwrap_or("");
-                    if g != "method" && tail != spec_tail {
-                        return Err(format!(
-                            "{}: ABI order mismatch in group {g}: exec wants \
-                             {tail:?}, state has {spec_tail:?}",
-                            exe.info.name
-                        ));
-                    }
-                    l.clone()
-                }
-                "batch" => batch
-                    .get(&t.name)
-                    .ok_or_else(|| {
-                        format!("{}: batch missing {}", exe.info.name, t.name)
-                    })?
-                    .clone(),
-                "scalar" => scalars
-                    .get(t.name.as_str())
-                    .ok_or_else(|| {
-                        format!("{}: scalar {} not provided", exe.info.name, t.name)
-                    })?
-                    .clone(),
-                other => {
-                    return Err(format!(
-                        "{}: unroutable input {} (group {other})",
-                        exe.info.name, t.name
-                    ))
-                }
-            };
-            out.push(val);
-        }
-        Ok(out)
-    }
-
-    /// Run an executable and route outputs back into state groups.
-    /// Returns the loss if the executable produces one.
-    fn run_and_absorb(
+    /// Run an executable on a `StepIo` and route outputs back into state
+    /// groups by name. Returns the loss if the executable produces one.
+    fn run_step(
         &mut self,
         exe: &Executable,
-        inputs: &[Tensor],
+        io: &StepIo,
     ) -> Result<Option<f32>, String> {
-        let outs = exe.run(inputs)?;
-        let mut loss = None;
-        let mut groups: BTreeMap<&'static str, Vec<Tensor>> = BTreeMap::new();
-        for (t, val) in exe.info.outputs.iter().zip(outs.into_iter()) {
-            match (group_of(&t.name), t.name.as_str()) {
-                ("out", "loss") => {
-                    loss = Some(
-                        val.first_f32()
-                            .map_err(|e| format!("loss read: {e}"))?,
-                    );
-                }
-                ("out", _) => {} // tokens/preds handled by dedicated paths
-                (g, _) => groups.entry(g).or_default().push(val),
-            }
-        }
-        for (g, values) in groups {
-            self.state.replace_values(g, values)?;
-        }
+        let inputs = io.inputs_for(&exe.info, &self.state)?;
+        let outs = StepOutputs::of(&exe.info, exe.run(&inputs)?)?;
+        let loss = outs.loss()?;
+        outs.absorb_into(&mut self.state)?;
         Ok(loss)
-    }
-
-    fn base_scalars(&self, lr: f32, step: usize) -> BTreeMap<&'static str, Tensor> {
-        let mut m = BTreeMap::new();
-        m.insert("lr", scalar_f32(lr));
-        m.insert("step", scalar_f32(step as f32));
-        m
     }
 
     // ------------------------------------------------------------------
@@ -334,82 +245,89 @@ impl Trainer {
         let mut loss = f32::NAN;
         match self.mode {
             Mode::Plain => {
-                let exe =
-                    self.rt.borrow_mut().load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
-                let batch = self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
-                let scalars = self.base_scalars(lr, step);
-                let inputs = self.assemble(&exe, &batch, &scalars)?;
+                let exe = self
+                    .rt
+                    .borrow_mut()
+                    .load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
+                let batch =
+                    self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
+                let io = StepIo::new().lr_step(lr, step).batch(batch);
                 loss = self
-                    .run_and_absorb(&exe, &inputs)?
+                    .run_step(&exe, &io)?
                     .ok_or("plain step produced no loss")?;
             }
             Mode::Accumulation => {
-                let micro =
-                    self.rt.borrow_mut().load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
+                let micro = self
+                    .rt
+                    .borrow_mut()
+                    .load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
                 let seed = accum_seeds.current();
                 for _ in 0..self.cfg.tau {
-                    let batch =
-                        self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
-                    let mut scalars = BTreeMap::new();
-                    scalars.insert("seed", scalar_u32(seed));
-                    let inputs = self.assemble(&micro, &batch, &scalars)?;
+                    let batch = self.task.next_batch(
+                        self.cfg.batch,
+                        TRAIN,
+                        &mut self.cursor,
+                    )?;
+                    let io = StepIo::new().seed(seed).batch(batch);
                     loss = self
-                        .run_and_absorb(&micro, &inputs)?
+                        .run_step(&micro, &io)?
                         .ok_or("micro step produced no loss")?;
                 }
                 let update_name = self
                     .cfg
                     .method
-                    .update_exe(&self.cfg.model, &self.cfg.optimizer)
+                    .update_exe(&self.cfg.model, self.cfg.optimizer)
                     .ok_or("accumulation mode without update exe")?;
                 let update = self.rt.borrow_mut().load(&update_name)?;
-                let mut scalars = self.base_scalars(lr, step);
-                scalars.insert("seed", scalar_u32(seed));
-                scalars.insert("tau", scalar_f32(self.cfg.tau as f32));
-                let inputs = self.assemble(&update, &BTreeMap::new(), &scalars)?;
-                self.run_and_absorb(&update, &inputs)?;
+                let io = StepIo::new()
+                    .lr_step(lr, step)
+                    .seed(seed)
+                    .scalar(ScalarKey::Tau, scalar_f32(self.cfg.tau as f32));
+                self.run_step(&update, &io)?;
                 // end of cycle: zero the accumulator, resample (Alg. 1)
-                self.state.zero("method")?;
+                self.state.zero(StateGroup::Method)?;
                 accum_seeds.advance();
             }
             Mode::Momentum | Mode::VitStep => {
-                let exe =
-                    self.rt.borrow_mut().load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
-                let batch = self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
-                let mut scalars = self.base_scalars(lr, step);
+                let exe = self
+                    .rt
+                    .borrow_mut()
+                    .load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
+                let batch =
+                    self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
+                let mut io = StepIo::new().lr_step(lr, step).batch(batch);
                 // flora/naive momentum steps consume the seed trio; plain
                 // vit-adam steps don't — provide only what the ABI wants
-                let needs_seeds = exe
-                    .info
-                    .inputs
-                    .iter()
-                    .any(|t| t.name == "seed_cur");
-                if needs_seeds {
+                if StepIo::wants(&exe.info, ScalarKey::SeedCur) {
                     let tick = mom_seeds.tick();
-                    scalars.insert("seed_cur", scalar_u32(tick.seed_cur));
-                    scalars.insert("seed_next", scalar_u32(tick.seed_next));
-                    scalars.insert("resample", scalar_f32(tick.resample));
+                    io = io
+                        .scalar(ScalarKey::SeedCur, scalar_u32(tick.seed_cur))
+                        .scalar(ScalarKey::SeedNext, scalar_u32(tick.seed_next))
+                        .scalar(ScalarKey::Resample, scalar_f32(tick.resample));
                 }
-                let inputs = self.assemble(&exe, &batch, &scalars)?;
                 loss = self
-                    .run_and_absorb(&exe, &inputs)?
+                    .run_step(&exe, &io)?
                     .ok_or("momentum step produced no loss")?;
             }
             Mode::Galore => {
-                let exe =
-                    self.rt.borrow_mut().load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
-                let batch = self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
+                let exe = self
+                    .rt
+                    .borrow_mut()
+                    .load(&Self::main_exe_name(&self.cfg, self.mode)?)?;
+                let batch =
+                    self.task.next_batch(self.cfg.batch, TRAIN, &mut self.cursor)?;
                 let refresh = step % self.cfg.kappa == 0;
                 let interval = (step / self.cfg.kappa) as u64;
-                let mut scalars = self.base_scalars(lr, step);
-                scalars.insert(
-                    "seed",
-                    scalar_u32(derive_seed(self.cfg.seed, interval) as u32),
-                );
-                scalars.insert("refresh", scalar_f32(if refresh { 1.0 } else { 0.0 }));
-                let inputs = self.assemble(&exe, &batch, &scalars)?;
+                let io = StepIo::new()
+                    .lr_step(lr, step)
+                    .seed(derive_seed(self.cfg.seed, interval) as u32)
+                    .scalar(
+                        ScalarKey::Refresh,
+                        scalar_f32(if refresh { 1.0 } else { 0.0 }),
+                    )
+                    .batch(batch);
                 loss = self
-                    .run_and_absorb(&exe, &inputs)?
+                    .run_step(&exe, &io)?
                     .ok_or("galore step produced no loss")?;
             }
         }
@@ -424,14 +342,19 @@ impl Trainer {
 
     /// Mean eval loss over `n_batches` from a data split.
     pub fn eval_loss(&mut self, split: u64, n_batches: usize) -> Result<f32, String> {
-        let exe = self.rt.borrow_mut().load(&self.cfg.method.eval_exe(&self.cfg.model))?;
+        let exe = self
+            .rt
+            .borrow_mut()
+            .load(&self.cfg.method.eval_exe(&self.cfg.model))?;
         let mut cursor = 0u64;
         let mut total = 0.0f32;
         for _ in 0..n_batches {
             let batch = self.task.next_batch(self.cfg.batch, split, &mut cursor)?;
-            let inputs = self.assemble(&exe, &batch, &BTreeMap::new())?;
-            let outs = exe.run(&inputs)?;
-            total += outs[0]
+            let io = StepIo::new().batch(batch);
+            let inputs = io.inputs_for(&exe.info, &self.state)?;
+            let outs = StepOutputs::of(&exe.info, exe.run(&inputs)?)?;
+            total += outs
+                .named("loss")?
                 .first_f32()
                 .map_err(|e| format!("eval loss: {e}"))?;
         }
@@ -443,7 +366,8 @@ impl Trainer {
     pub fn eval_metric(&mut self, n_samples: usize) -> Result<MetricValue, String> {
         match self.task.kind() {
             TaskKind::Lm => {
-                let loss = self.eval_loss(TEST, (n_samples / self.cfg.batch).max(1))?;
+                let loss =
+                    self.eval_loss(TEST, (n_samples / self.cfg.batch).max(1))?;
                 Ok(MetricValue::Perplexity(metrics::perplexity(loss as f64)))
             }
             TaskKind::Vit => self.eval_vit_accuracy(n_samples),
@@ -452,7 +376,10 @@ impl Trainer {
     }
 
     fn eval_vit_accuracy(&mut self, n_samples: usize) -> Result<MetricValue, String> {
-        let exe = self.rt.borrow_mut().load(&self.cfg.method.eval_exe(&self.cfg.model))?;
+        let exe = self
+            .rt
+            .borrow_mut()
+            .load(&self.cfg.method.eval_exe(&self.cfg.model))?;
         let mut cursor = 0u64;
         let mut hits = 0usize;
         let mut total = 0usize;
@@ -460,12 +387,14 @@ impl Trainer {
             let batch = self.task.next_batch(self.cfg.batch, TEST, &mut cursor)?;
             let labels = batch
                 .get("batch/labels")
-                .unwrap()
+                .ok_or("vit eval batch missing batch/labels")?
                 .to_i32_vec()
                 .map_err(|e| format!("labels: {e}"))?;
-            let inputs = self.assemble(&exe, &batch, &BTreeMap::new())?;
-            let outs = exe.run(&inputs)?;
-            let preds = outs[1]
+            let io = StepIo::new().batch(batch);
+            let inputs = io.inputs_for(&exe.info, &self.state)?;
+            let outs = StepOutputs::of(&exe.info, exe.run(&inputs)?)?;
+            let preds = outs
+                .named("preds")?
                 .to_i32_vec()
                 .map_err(|e| format!("preds: {e}"))?;
             hits += preds
@@ -479,7 +408,10 @@ impl Trainer {
     }
 
     fn eval_generation(&mut self, n_samples: usize) -> Result<MetricValue, String> {
-        let exe = self.rt.borrow_mut().load(&self.cfg.method.greedy_exe(&self.cfg.model))?;
+        let exe = self
+            .rt
+            .borrow_mut()
+            .load(&self.cfg.method.greedy_exe(&self.cfg.model))?;
         let (prompt_len, target_len) = self
             .task
             .gen_lens()
@@ -502,16 +434,18 @@ impl Trainer {
                     toks[b * seq_len + i] = t;
                 }
             }
-            let mut scalars: BTreeMap<&'static str, Tensor> = BTreeMap::new();
-            scalars.insert("prompt_len", scalar_i32(prompt_len as i32));
             let mut batch = BTreeMap::new();
             batch.insert(
                 "batch/tokens".to_string(),
                 tensor_i32(&[bdim, seq_len], &toks)?,
             );
-            let inputs = self.assemble(&exe, &batch, &scalars)?;
-            let outs = exe.run(&inputs)?;
-            let decoded = outs[0]
+            let io = StepIo::new()
+                .scalar(ScalarKey::PromptLen, scalar_i32(prompt_len as i32))
+                .batch(batch);
+            let inputs = io.inputs_for(&exe.info, &self.state)?;
+            let outs = StepOutputs::of(&exe.info, exe.run(&inputs)?)?;
+            let decoded = outs
+                .named("tokens")?
                 .to_i32_vec()
                 .map_err(|e| format!("greedy tokens: {e}"))?;
             for (b, ex) in chunk.iter().enumerate() {
@@ -539,15 +473,14 @@ impl Trainer {
         let timer = Timer::start();
         self.init()?;
         let mut accum = AccumSeeds::new(derive_seed(self.cfg.seed, 0xACC));
-        let mut mom = MomentumSeeds::new(derive_seed(self.cfg.seed, 0xE3A), self.cfg.kappa);
+        let mut mom =
+            MomentumSeeds::new(derive_seed(self.cfg.seed, 0xE3A), self.cfg.kappa);
         let mut train_losses = Vec::with_capacity(self.cfg.steps);
         let mut eval_losses = Vec::new();
         for s in 0..self.cfg.steps {
             let loss = self.train_step(&mut accum, &mut mom)?;
             train_losses.push(loss);
-            if self.cfg.eval_every > 0
-                && (s + 1) % self.cfg.eval_every == 0
-            {
+            if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
                 let el = self.eval_loss(VAL, 4)?;
                 eval_losses.push((s + 1, el));
                 info!(
@@ -566,9 +499,9 @@ impl Trainer {
             train_losses,
             eval_losses,
             metric,
-            state_bytes: ["params", "train", "opt", "method"]
+            state_bytes: StateGroup::ALL
                 .iter()
-                .map(|g| (g.to_string(), self.state.group_bytes(g)))
+                .map(|g| (g.name().to_string(), self.state.group_bytes(*g)))
                 .collect(),
             peak_state_bytes: self.rt.borrow().ledger.peak(),
             wallclock_secs: wallclock,
@@ -582,7 +515,10 @@ impl Trainer {
             .state
             .snapshot()?
             .into_iter()
-            .map(|(name, tensors)| super::checkpoint::GroupSnapshot { name, tensors })
+            .map(|(name, tensors)| super::checkpoint::GroupSnapshot {
+                name,
+                tensors,
+            })
             .collect();
         super::checkpoint::Checkpoint {
             step: self.step as u64,
@@ -597,7 +533,9 @@ impl Trainer {
     pub fn resume_from(&mut self, path: &str) -> Result<(), String> {
         let ck = super::checkpoint::Checkpoint::load(path)?;
         for (name, specs, vals) in ck.to_tensors()? {
-            self.state.put(&name, specs, vals);
+            let group = StateGroup::parse(&name)
+                .map_err(|e| format!("checkpoint {path}: {e}"))?;
+            self.state.put(group, specs, vals);
         }
         self.step = ck.step as usize;
         self.cursor = ck.cursor;
@@ -611,6 +549,11 @@ impl Trainer {
     pub fn steps_done(&self) -> usize {
         self.step
     }
+
+    /// Training loss of the most recent step (NaN before the first one).
+    pub fn last_loss(&self) -> f32 {
+        self.last_loss
+    }
 }
 
 #[cfg(test)]
@@ -618,27 +561,13 @@ mod tests {
     use super::*;
 
     #[test]
-    fn group_routing() {
-        assert_eq!(group_of("params/layer0/attn/wq"), "params");
-        assert_eq!(group_of("base/embed/tok"), "params");
-        assert_eq!(group_of("train/lora_A/layer0/attn/wq"), "train");
-        assert_eq!(group_of("opt/embed/tok/vr"), "opt");
-        assert_eq!(group_of("acc/layer0/ffn/w1"), "method");
-        assert_eq!(group_of("mom/layer0/ffn/w1"), "method");
-        assert_eq!(group_of("proj/layer0/attn/wq"), "method");
-        assert_eq!(group_of("batch/tokens"), "batch");
-        assert_eq!(group_of("seed_cur"), "scalar");
-        assert_eq!(group_of("lr"), "scalar");
-        assert_eq!(group_of("loss"), "out");
-        assert_eq!(group_of("tokens"), "out");
-    }
-
-    #[test]
     fn mode_derivation() {
-        let mut cfg = TrainConfig::default();
-        cfg.task = TaskKind::Sum;
-        cfg.method = MethodSpec::Flora { rank: 8 };
-        cfg.tau = 16;
+        let mut cfg = TrainConfig {
+            task: TaskKind::Sum,
+            method: MethodSpec::Flora { rank: 8 },
+            tau: 16,
+            ..TrainConfig::default()
+        };
         assert_eq!(Mode::of(&cfg), Mode::Accumulation);
         cfg.tau = 1;
         assert_eq!(Mode::of(&cfg), Mode::Momentum);
@@ -649,5 +578,25 @@ mod tests {
         cfg.task = TaskKind::Vit;
         cfg.method = MethodSpec::Flora { rank: 8 };
         assert_eq!(Mode::of(&cfg), Mode::VitStep);
+    }
+
+    #[test]
+    fn main_exe_names_carry_the_optimizer() {
+        let mut cfg = TrainConfig {
+            model: "lm-tiny".into(),
+            method: MethodSpec::None,
+            optimizer: crate::opt::OptimizerKind::Adam,
+            ..TrainConfig::default()
+        };
+        assert_eq!(
+            Trainer::main_exe_name(&cfg, Mode::Plain).unwrap(),
+            "lm-tiny/plain_step_adam"
+        );
+        cfg.method = MethodSpec::Flora { rank: 8 };
+        cfg.optimizer = crate::opt::OptimizerKind::Adafactor;
+        assert_eq!(
+            Trainer::main_exe_name(&cfg, Mode::Momentum).unwrap(),
+            "lm-tiny/mom_step_flora_r8_adafactor"
+        );
     }
 }

@@ -7,6 +7,10 @@
 //!   accumulation scheduling, Algorithm-2 κ-interval momentum resampling,
 //!   seed lifecycles, training/eval loops, metrics, the analytic memory
 //!   accountant behind every Mem/ΔM column, and the pure-rust pilot study.
+//!   The optimizer math itself lives in [`opt`]: a [`opt::BaseOptimizer`]
+//!   trait with SGD/Adam/Adafactor implementations plus the
+//!   [`opt::FloraCompressor`] that composes any of them with the seeded
+//!   random-projection algebra in [`rp`].
 //! * **L2** — JAX models + optimizers + methods (python/compile/*),
 //!   AOT-lowered once to HLO text.
 //! * **L1** — Pallas kernels for the compress/decompress/transfer hot path
@@ -29,6 +33,7 @@ pub mod coordinator;
 pub mod data;
 pub mod memory;
 pub mod metrics;
+pub mod opt;
 pub mod pilot;
 pub mod rp;
 pub mod runtime;

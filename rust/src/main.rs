@@ -5,6 +5,7 @@ use flora::config::{ExperimentConfig, TaskKind};
 use flora::coordinator::{MethodSpec, Trainer};
 use flora::data::images::ImageTask;
 use flora::memory::{self, Dims, OptKind, StateRole};
+use flora::opt::OptimizerKind;
 use flora::pilot;
 use flora::runtime::Manifest;
 use flora::util::human;
@@ -53,7 +54,7 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
         cfg.train.method = MethodSpec::parse(m, rank)?;
     }
     if let Some(o) = args.flag("optimizer") {
-        cfg.train.optimizer = o.to_string();
+        cfg.train.optimizer = OptimizerKind::parse(o)?;
     }
     cfg.train.lr = args.f32_flag("lr", cfg.train.lr)?;
     cfg.train.steps = args.usize_flag("steps", cfg.train.steps)?;
@@ -65,16 +66,10 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.train.eval_samples = args.usize_flag("eval-samples", cfg.train.eval_samples)?;
     cfg.artifacts_dir = args.flag_or("artifacts", &cfg.artifacts_dir);
     // the backend spec rides in artifacts_dir ("native" is reserved —
-    // Runtime::from_spec dispatches on it)
+    // Runtime::from_spec dispatches on it); the native catalog executes
+    // every base optimizer, so --optimizer passes through unchanged
     match args.flag_or("backend", "xla").as_str() {
-        "native" => {
-            cfg.artifacts_dir = "native".into();
-            // the native catalog implements the sgd base optimizer; honor
-            // an explicit --optimizer but remap the artifacts-path default
-            if args.flag("optimizer").is_none() {
-                cfg.train.optimizer = "sgd".into();
-            }
-        }
+        "native" => cfg.artifacts_dir = "native".into(),
         "xla" => {}
         other => {
             return Err(format!("--backend: expected native|xla, got {other:?}"))

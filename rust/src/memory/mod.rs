@@ -342,10 +342,12 @@ mod tests {
     #[test]
     fn flora_state_sublinear_naive_linear() {
         let d = Dims::t5_small_sim();
-        let naive = breakdown(&d, Method::Naive, OptKind::Adafactor, StateRole::Accumulation, 1, false);
+        let naive =
+            breakdown(&d, Method::Naive, OptKind::Adafactor, StateRole::Accumulation, 1, false);
         // T5-small's embedding (handled naively, §3.1) is ~27% of params,
         // so the clear sublinear win shows at moderate ranks
-        let flora = breakdown(&d, Method::Flora(64), OptKind::Adafactor, StateRole::Accumulation, 1, false);
+        let flora =
+            breakdown(&d, Method::Flora(64), OptKind::Adafactor, StateRole::Accumulation, 1, false);
         assert_eq!(naive.method_state, d.param_count() * F32);
         assert!(flora.method_state < naive.method_state / 2);
     }
@@ -356,8 +358,12 @@ mod tests {
         // LoRA stores A+B+their grads+opt+accum state; FLORA stores C only.
         let d = Dims::t5_small_sim();
         for r in [8, 32, 128, 256] {
-            let lora = breakdown(&d, Method::Lora(r), OptKind::Adafactor, StateRole::Accumulation, 1, false);
-            let flora = breakdown(&d, Method::Flora(r), OptKind::Adafactor, StateRole::Accumulation, 1, false);
+            let lora = breakdown(
+                &d, Method::Lora(r), OptKind::Adafactor, StateRole::Accumulation, 1, false,
+            );
+            let flora = breakdown(
+                &d, Method::Flora(r), OptKind::Adafactor, StateRole::Accumulation, 1, false,
+            );
             let lora_delta = lora.method_state + lora.extra_params;
             // compare the *method-induced* extra state on projectable params
             let flora_proj: u64 = d
@@ -414,8 +420,10 @@ mod tests {
         let flora_state = flora8.opt_state + flora8.method_state;
         assert!(lora_state < flora_state);
         // ... and FLORA wins at r=256 (the crossover the paper reports)
-        let lora256 = breakdown(&d, Method::Lora(256), OptKind::AdafactorNoFactor, role, 1, false);
-        let flora256 = breakdown(&d, Method::Flora(256), OptKind::AdafactorNoFactor, role, 1, false);
+        let lora256 =
+            breakdown(&d, Method::Lora(256), OptKind::AdafactorNoFactor, role, 1, false);
+        let flora256 =
+            breakdown(&d, Method::Flora(256), OptKind::AdafactorNoFactor, role, 1, false);
         let l = lora256.opt_state + lora256.method_state + lora256.extra_params;
         let f = flora256.opt_state + flora256.method_state;
         assert!(f < l, "flora={f} lora={l}");
@@ -425,8 +433,11 @@ mod tests {
     fn galore_stores_more_than_flora() {
         // Table 6: GaLore keeps P on device; FLORA only a seed
         let d = Dims::t5_small_sim();
-        let ga = breakdown(&d, Method::Galore(128), OptKind::Adam, StateRole::Momentum, 16, false);
-        let fl = breakdown(&d, Method::Flora(128), OptKind::Adafactor, StateRole::Momentum, 16, false);
+        let ga =
+            breakdown(&d, Method::Galore(128), OptKind::Adam, StateRole::Momentum, 16, false);
+        let fl = breakdown(
+            &d, Method::Flora(128), OptKind::Adafactor, StateRole::Momentum, 16, false,
+        );
         assert!(
             fl.opt_state + fl.method_state < ga.opt_state + ga.method_state
         );

@@ -131,8 +131,11 @@ mod tests {
     fn flora_and_lora_shrink_state_not_peak_under_adam_activations() {
         // Figure 2a: with full activations, peak is activation-dominated,
         // so Adam vs FLORA peaks are close while the state categories differ
-        let adam = figure2_timeline(&dims(), Method::None, OptKind::Adam, 4, 2, false, false);
-        let flora = figure2_timeline(&dims(), Method::Flora(128), OptKind::Adafactor, 4, 2, false, false);
+        let adam =
+            figure2_timeline(&dims(), Method::None, OptKind::Adam, 4, 2, false, false);
+        let flora = figure2_timeline(
+            &dims(), Method::Flora(128), OptKind::Adafactor, 4, 2, false, false,
+        );
         let p_adam = timeline_peak(&adam);
         let p_flora = timeline_peak(&flora);
         assert!(p_flora < p_adam);
@@ -143,8 +146,12 @@ mod tests {
     #[test]
     fn ac_plus_lomo_cuts_peak() {
         // Figure 2b: AC+LOMO removes the activation/grad bulk
-        let plain = figure2_timeline(&dims(), Method::Flora(128), OptKind::Adafactor, 4, 2, false, false);
-        let lean = figure2_timeline(&dims(), Method::Flora(128), OptKind::Adafactor, 4, 2, true, true);
+        let plain = figure2_timeline(
+            &dims(), Method::Flora(128), OptKind::Adafactor, 4, 2, false, false,
+        );
+        let lean = figure2_timeline(
+            &dims(), Method::Flora(128), OptKind::Adafactor, 4, 2, true, true,
+        );
         assert!(timeline_peak(&lean) < timeline_peak(&plain) / 3);
     }
 }

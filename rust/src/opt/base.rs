@@ -1,0 +1,480 @@
+//! The `BaseOptimizer` trait and its three backend-free implementations.
+//!
+//! These mirror `python/compile/optimizers.py` (the L2 half of the
+//! contract) so the native backend's fused steps compute the same updates
+//! the AOT graphs do:
+//!
+//!   * `Sgd`       — plain SGD, stateless.
+//!   * `Adam`      — Kingma & Ba 2015 with bias correction; state is the
+//!     full-size `m`/`v` pair (the paper's motivating example of
+//!     linear-memory optimizer state).
+//!   * `Adafactor` — Shazeer & Stern 2018 with an external learning rate
+//!     (`relative_step=False`), factored row/col second moments, update
+//!     clipping d=1.0 and a parameter-scale-relative step. The paper's
+//!     Table-1/2 base optimizer. `Adafactor::unfactored()` is the Table-4
+//!     "linear-memory optimizer" ablation keeping a full second moment.
+//!
+//! All state tensors are 2-D `tensor::Matrix` values so they serialize
+//! straight into the manifest ABI's f32 state groups (row moments are
+//! `[n, 1]`, column moments `[1, m]`).
+
+use crate::tensor::Matrix;
+
+/// A base optimizer over 2-D parameters: owns the per-parameter state
+/// layout and the update rule. Implementations must be deterministic pure
+/// functions of `(param, grad, state, lr, step)` — the fused executables
+/// re-run them bit-identically on checkpoint resume.
+pub trait BaseOptimizer {
+    /// ABI name ("sgd" / "adam" / "adafactor" / "adafactor_nofactor").
+    fn name(&self) -> &'static str;
+
+    /// `(slot suffix, [rows, cols])` of each state tensor kept for one
+    /// `[n, m]` parameter, in update order. Slot suffixes match the L2
+    /// state dict keys (`{param}/m`, `{param}/vr`, ...).
+    fn state_shapes(&self, n: usize, m: usize) -> Vec<(&'static str, [usize; 2])>;
+
+    /// Zero-initialized state for one `[n, m]` parameter.
+    fn init_state(&self, n: usize, m: usize) -> Vec<Matrix> {
+        self.state_shapes(n, m)
+            .iter()
+            .map(|(_, s)| Matrix::zeros(s[0], s[1]))
+            .collect()
+    }
+
+    /// Apply one update in place. `step` is the number of updates already
+    /// taken (bias corrections use t = step + 1). `state` must have the
+    /// layout produced by [`BaseOptimizer::init_state`].
+    fn update(
+        &self,
+        param: &mut Matrix,
+        grad: &Matrix,
+        state: &mut [Matrix],
+        lr: f32,
+        step: f32,
+    ) -> Result<(), String>;
+}
+
+/// Boxed optimizers compose like concrete ones (the native catalog builds
+/// them from [`crate::opt::OptimizerKind`] at execution time).
+impl BaseOptimizer for Box<dyn BaseOptimizer> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn state_shapes(&self, n: usize, m: usize) -> Vec<(&'static str, [usize; 2])> {
+        (**self).state_shapes(n, m)
+    }
+
+    fn init_state(&self, n: usize, m: usize) -> Vec<Matrix> {
+        (**self).init_state(n, m)
+    }
+
+    fn update(
+        &self,
+        param: &mut Matrix,
+        grad: &Matrix,
+        state: &mut [Matrix],
+        lr: f32,
+        step: f32,
+    ) -> Result<(), String> {
+        (**self).update(param, grad, state, lr, step)
+    }
+}
+
+fn check_state(
+    who: &str,
+    param: &Matrix,
+    grad: &Matrix,
+    state: &[Matrix],
+    want: usize,
+) -> Result<(), String> {
+    if param.shape() != grad.shape() {
+        return Err(format!(
+            "{who}: param {:?} vs grad {:?} shape mismatch",
+            param.shape(),
+            grad.shape()
+        ));
+    }
+    if state.len() != want {
+        return Err(format!(
+            "{who}: expected {want} state tensors, got {}",
+            state.len()
+        ));
+    }
+    Ok(())
+}
+
+fn rms(data: &[f32]) -> f32 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    let ss: f64 = data.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    (ss / data.len() as f64).sqrt() as f32
+}
+
+// ---------------------------------------------------------------------
+// SGD
+// ---------------------------------------------------------------------
+
+/// Plain SGD: `w -= lr * g`. Stateless.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sgd;
+
+impl BaseOptimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn state_shapes(&self, _n: usize, _m: usize) -> Vec<(&'static str, [usize; 2])> {
+        Vec::new()
+    }
+
+    fn update(
+        &self,
+        param: &mut Matrix,
+        grad: &Matrix,
+        state: &mut [Matrix],
+        lr: f32,
+        _step: f32,
+    ) -> Result<(), String> {
+        check_state("sgd", param, grad, state, 0)?;
+        param.add_scaled_inplace(grad, -lr);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Adam
+// ---------------------------------------------------------------------
+
+/// Adam with bias correction. State: full-size `m` and `v`.
+#[derive(Clone, Copy, Debug)]
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for Adam {
+    fn default() -> Self {
+        Self { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+impl Adam {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One Adam moment update + bias-corrected direction, shared between
+    /// [`BaseOptimizer::update`] and the GaLore Adam-in-subspace step
+    /// (which applies the same rule to COMPRESSED moments before
+    /// decompressing the direction).
+    pub fn direction(&self, m: &mut Matrix, v: &mut Matrix, g: &Matrix, step: f32) -> Matrix {
+        assert_eq!(m.shape(), g.shape(), "adam m/grad shape mismatch");
+        assert_eq!(v.shape(), g.shape(), "adam v/grad shape mismatch");
+        let t = step + 1.0;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let mut dir = Matrix::zeros(g.rows, g.cols);
+        for i in 0..g.data.len() {
+            let gi = g.data[i];
+            let mi = self.beta1 * m.data[i] + (1.0 - self.beta1) * gi;
+            let vi = self.beta2 * v.data[i] + (1.0 - self.beta2) * gi * gi;
+            m.data[i] = mi;
+            v.data[i] = vi;
+            dir.data[i] = (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + self.eps);
+        }
+        dir
+    }
+}
+
+impl BaseOptimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn state_shapes(&self, n: usize, m: usize) -> Vec<(&'static str, [usize; 2])> {
+        vec![("m", [n, m]), ("v", [n, m])]
+    }
+
+    fn update(
+        &self,
+        param: &mut Matrix,
+        grad: &Matrix,
+        state: &mut [Matrix],
+        lr: f32,
+        step: f32,
+    ) -> Result<(), String> {
+        check_state("adam", param, grad, state, 2)?;
+        let (ms, vs) = state.split_at_mut(1);
+        if ms[0].shape() != param.shape() || vs[0].shape() != param.shape() {
+            return Err(format!(
+                "adam: state shapes {:?}/{:?} do not match param {:?}",
+                ms[0].shape(),
+                vs[0].shape(),
+                param.shape()
+            ));
+        }
+        let dir = self.direction(&mut ms[0], &mut vs[0], grad, step);
+        param.add_scaled_inplace(&dir, -lr);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Adafactor
+// ---------------------------------------------------------------------
+
+/// Adafactor with external learning rate, mirroring the L2 implementation:
+/// t-scheduled decay β₂(t) = 1 − t^(−0.8), factored row/col second moments
+/// (or a full second moment when `factored` is off), update clipping
+/// `u /= max(1, RMS(u)/d)` with d = 1, and a parameter-scale-relative step
+/// `w -= lr · max(eps2, RMS(w)) · u`.
+#[derive(Clone, Copy, Debug)]
+pub struct Adafactor {
+    pub factored: bool,
+    pub eps1: f32,
+    pub eps2: f32,
+    pub clip_threshold: f32,
+    pub decay_exponent: f32,
+}
+
+impl Default for Adafactor {
+    fn default() -> Self {
+        Self {
+            factored: true,
+            eps1: 1e-30,
+            eps2: 1e-3,
+            clip_threshold: 1.0,
+            decay_exponent: 0.8,
+        }
+    }
+}
+
+impl Adafactor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The Table-4 "linear-memory optimizer" ablation: full second moment.
+    pub fn unfactored() -> Self {
+        Self { factored: false, ..Self::default() }
+    }
+
+    fn beta2(&self, step: f32) -> f32 {
+        let t = step + 1.0;
+        1.0 - t.powf(-self.decay_exponent)
+    }
+
+    /// The EMA'd second-moment estimate `v̂` the update divides by —
+    /// reconstructed from the factored state (`v̂ = vr vcᵀ / mean(vr)`)
+    /// or read directly from the full state. Exposed for diagnostics and
+    /// the factored-vs-full property tests.
+    pub fn second_moment(&self, state: &[Matrix]) -> Result<Matrix, String> {
+        if self.factored {
+            if state.len() != 2 {
+                return Err(format!(
+                    "adafactor: expected [vr, vc] state, got {} tensors",
+                    state.len()
+                ));
+            }
+            let (vr, vc) = (&state[0], &state[1]);
+            let n = vr.rows;
+            let m = vc.cols;
+            let mean_vr =
+                (vr.data.iter().map(|&x| x as f64).sum::<f64>() / n.max(1) as f64) as f32;
+            let denom = mean_vr.max(self.eps1);
+            Ok(Matrix::from_fn(n, m, |i, j| vr.at(i, 0) * vc.at(0, j) / denom))
+        } else {
+            if state.len() != 1 {
+                return Err(format!(
+                    "adafactor_nofactor: expected [v] state, got {} tensors",
+                    state.len()
+                ));
+            }
+            Ok(state[0].clone())
+        }
+    }
+}
+
+impl BaseOptimizer for Adafactor {
+    fn name(&self) -> &'static str {
+        if self.factored {
+            "adafactor"
+        } else {
+            "adafactor_nofactor"
+        }
+    }
+
+    fn state_shapes(&self, n: usize, m: usize) -> Vec<(&'static str, [usize; 2])> {
+        if self.factored {
+            vec![("vr", [n, 1]), ("vc", [1, m])]
+        } else {
+            vec![("v", [n, m])]
+        }
+    }
+
+    fn update(
+        &self,
+        param: &mut Matrix,
+        grad: &Matrix,
+        state: &mut [Matrix],
+        lr: f32,
+        step: f32,
+    ) -> Result<(), String> {
+        let (n, m) = grad.shape();
+        let b2 = self.beta2(step);
+        let mut u = Matrix::zeros(n, m);
+        if self.factored {
+            check_state("adafactor", param, grad, state, 2)?;
+            let (vrs, vcs) = state.split_at_mut(1);
+            let vr = &mut vrs[0];
+            let vc = &mut vcs[0];
+            if vr.shape() != (n, 1) || vc.shape() != (1, m) {
+                return Err(format!(
+                    "adafactor: state shapes {:?}/{:?} do not match param {:?}",
+                    vr.shape(),
+                    vc.shape(),
+                    param.shape()
+                ));
+            }
+            // EMA the row/col means of g^2 + eps1 (mirrors jnp.mean axes)
+            for i in 0..n {
+                let row = grad.row(i);
+                let mean: f32 = row.iter().map(|&g| g * g + self.eps1).sum::<f32>() / m as f32;
+                let x = vr.at_mut(i, 0);
+                *x = b2 * *x + (1.0 - b2) * mean;
+            }
+            for j in 0..m {
+                let mut sum = 0.0f32;
+                for i in 0..n {
+                    let g = grad.at(i, j);
+                    sum += g * g + self.eps1;
+                }
+                let x = vc.at_mut(0, j);
+                *x = b2 * *x + (1.0 - b2) * sum / n as f32;
+            }
+            // u = g / (sqrt(vr/mean(vr)) ⊗ sqrt(vc))
+            let mean_vr =
+                (vr.data.iter().map(|&x| x as f64).sum::<f64>() / n as f64) as f32;
+            let denom = mean_vr.max(self.eps1);
+            for i in 0..n {
+                let ri = (vr.at(i, 0) / denom).sqrt();
+                for j in 0..m {
+                    *u.at_mut(i, j) = grad.at(i, j) / (ri * vc.at(0, j).sqrt());
+                }
+            }
+        } else {
+            check_state("adafactor_nofactor", param, grad, state, 1)?;
+            let v = &mut state[0];
+            if v.shape() != (n, m) {
+                return Err(format!(
+                    "adafactor_nofactor: state shape {:?} does not match param {:?}",
+                    v.shape(),
+                    param.shape()
+                ));
+            }
+            for i in 0..v.data.len() {
+                let g = grad.data[i];
+                v.data[i] = b2 * v.data[i] + (1.0 - b2) * (g * g + self.eps1);
+                u.data[i] = g / v.data[i].sqrt();
+            }
+        }
+        // update clipping: u /= max(1, RMS(u)/d)
+        let clip = (rms(&u.data) / self.clip_threshold).max(1.0);
+        // parameter-scale-relative step with the eps2 floor
+        let scale = rms(&param.data).max(self.eps2);
+        param.add_scaled_inplace(&u, -lr * scale / clip);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(seed: u64, n: usize, m: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(n, m, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn sgd_matches_manual_step() {
+        let mut w = randn(0, 4, 5);
+        let want = {
+            let mut w2 = w.clone();
+            let g = randn(1, 4, 5);
+            w2.add_scaled_inplace(&g, -0.1);
+            w2
+        };
+        let g = randn(1, 4, 5);
+        let mut state = Sgd.init_state(4, 5);
+        Sgd.update(&mut w, &g, &mut state, 0.1, 0.0).unwrap();
+        assert!(w.allclose(&want, 0.0));
+        assert!(state.is_empty());
+    }
+
+    #[test]
+    fn adam_state_layout_and_descent() {
+        let adam = Adam::new();
+        assert_eq!(
+            adam.state_shapes(3, 7),
+            vec![("m", [3usize, 7usize]), ("v", [3, 7])]
+        );
+        let mut w = Matrix::zeros(3, 7);
+        let g = randn(2, 3, 7);
+        let mut st = adam.init_state(3, 7);
+        adam.update(&mut w, &g, &mut st, 0.01, 0.0).unwrap();
+        // every coordinate moved against the gradient sign
+        for (x, gg) in w.data.iter().zip(g.data.iter()) {
+            assert!(x * gg <= 0.0, "moved with the gradient: {x} vs {gg}");
+        }
+    }
+
+    #[test]
+    fn adam_rejects_wrong_state_arity() {
+        let adam = Adam::new();
+        let mut w = Matrix::zeros(2, 2);
+        let g = Matrix::zeros(2, 2);
+        let mut st = vec![Matrix::zeros(2, 2)];
+        assert!(adam.update(&mut w, &g, &mut st, 0.1, 0.0).is_err());
+    }
+
+    #[test]
+    fn adafactor_state_is_sublinear() {
+        let af = Adafactor::new();
+        let shapes = af.state_shapes(100, 200);
+        assert_eq!(shapes, vec![("vr", [100usize, 1usize]), ("vc", [1, 200])]);
+        let full = Adafactor::unfactored();
+        assert_eq!(full.state_shapes(100, 200), vec![("v", [100usize, 200usize])]);
+        assert_eq!(full.name(), "adafactor_nofactor");
+    }
+
+    #[test]
+    fn adafactor_update_clipped_and_scaled() {
+        // a huge gradient must not blow past lr * RMS(w) * clip_threshold
+        let af = Adafactor::new();
+        let mut w = randn(3, 8, 8);
+        let before = w.clone();
+        let g = randn(4, 8, 8).scale(1e4);
+        let mut st = af.init_state(8, 8);
+        af.update(&mut w, &g, &mut st, 0.1, 0.0).unwrap();
+        let delta = (&w - &before).frobenius_norm();
+        let bound = 0.1 * rms(&before.data) * (8.0 * 8.0f32).sqrt() * 1.5;
+        assert!(delta <= bound, "delta {delta} vs bound {bound}");
+    }
+
+    #[test]
+    fn boxed_optimizer_forwards() {
+        let boxed: Box<dyn BaseOptimizer> = Box::new(Adam::new());
+        assert_eq!(boxed.name(), "adam");
+        assert_eq!(boxed.state_shapes(2, 3).len(), 2);
+        let mut w = Matrix::zeros(2, 3);
+        let g = randn(5, 2, 3);
+        let mut st = boxed.init_state(2, 3);
+        boxed.update(&mut w, &g, &mut st, 0.01, 0.0).unwrap();
+        assert!(w.frobenius_norm() > 0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! `FloraCompressor` — the paper's Algorithms 1 and 2 as a reusable
+//! composition of seeded random projections (`rp`) with any
+//! [`BaseOptimizer`].
+//!
+//! The compressor owns the projection-side state conventions: the
+//! per-parameter seed derivation (Algorithm 1 line 3: every weight matrix
+//! gets an *independent* projection from one cycle seed), the compressed
+//! accumulator `C = Σ G Aᵀ`, the momentum EMA kept **in the subspace**,
+//! and the κ-resample subspace transfer `M ← M A_old A_newᵀ`. The base
+//! optimizer only ever sees full-size (decompressed) gradients, so any
+//! `BaseOptimizer` composes without knowing FLORA exists — mirroring how
+//! `python/compile/flora.py` hands `optimizer.update` the decompressed
+//! effective gradient.
+
+use super::base::BaseOptimizer;
+use crate::rp;
+use crate::tensor::Matrix;
+
+/// Default EMA decay of the Algorithm-2 momentum.
+pub const MOMENTUM_BETA: f32 = 0.9;
+
+/// What the κ-interval seed schedule tells one momentum step (the
+/// coordinator's `MomentumSeeds::tick` maps 1:1 onto this).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SubspaceTick {
+    /// Seed of the subspace the momentum currently lives in.
+    pub seed_cur: u64,
+    /// Seed of the next subspace (only read on resample steps).
+    pub seed_next: u64,
+    /// True exactly on κ-interval boundaries.
+    pub resample: bool,
+    /// Whether resampling moves the EMA via the subspace transfer
+    /// (false = the paper's §2.4 remedy-#2 ablation: the old coordinates
+    /// are silently reinterpreted in the new subspace).
+    pub transfer: bool,
+}
+
+/// Algorithm-1/-2 state machine over one parameter matrix, composing a
+/// [`BaseOptimizer`] with the `rp` projection algebra.
+#[derive(Clone, Debug)]
+pub struct FloraCompressor<O> {
+    base: O,
+    rank: usize,
+    beta: f32,
+}
+
+impl<O: BaseOptimizer> FloraCompressor<O> {
+    pub fn new(base: O, rank: usize) -> Self {
+        Self { base, rank, beta: MOMENTUM_BETA }
+    }
+
+    /// Override the momentum EMA decay (Algorithm 2's β).
+    pub fn with_beta(mut self, beta: f32) -> Self {
+        self.beta = beta;
+        self
+    }
+
+    pub fn base(&self) -> &O {
+        &self.base
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+
+    /// The independent per-parameter seed for a cycle: parameter `index`
+    /// under the coordinator-issued `cycle_seed` (Algorithm 1 line 3).
+    pub fn param_seed(&self, cycle_seed: u64, index: usize) -> u64 {
+        rp::param_seed(cycle_seed, index)
+    }
+
+    /// Regenerate this parameter's projection A ∈ R^{r×m} from its seed.
+    pub fn projection(&self, seed: u64, m: usize) -> Matrix {
+        rp::projection(seed, self.rank, m)
+    }
+
+    /// Algorithm 1 line 9 (micro step): `acc += G Aᵀ`, with A regenerated
+    /// from the cycle seed shared by all τ micro-steps.
+    pub fn accumulate(&self, acc: &mut Matrix, grad: &Matrix, seed: u64) {
+        let a = self.projection(seed, grad.cols);
+        rp::compress_accumulate(acc, grad, &a);
+    }
+
+    /// Algorithm 1 cycle end: decompress the mean gradient with the SAME
+    /// seed the micros used and hand it to the base optimizer. The caller
+    /// zeroes the accumulator and resamples afterwards.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_accumulated(
+        &self,
+        param: &mut Matrix,
+        acc: &Matrix,
+        opt_state: &mut [Matrix],
+        seed: u64,
+        tau: f32,
+        lr: f32,
+        step: f32,
+    ) -> Result<(), String> {
+        let a = self.projection(seed, param.cols);
+        let ghat = rp::decompress(acc, &a).scale(1.0 / tau.max(1.0));
+        self.base.update(param, &ghat, opt_state, lr, step)
+    }
+
+    /// One Algorithm-2 step: on resample (optionally) transfer the EMA
+    /// into the next subspace, EMA the compressed gradient, then feed the
+    /// decompressed momentum to the base optimizer as the effective
+    /// gradient (momentum-in-subspace, second moments full-size).
+    #[allow(clippy::too_many_arguments)]
+    pub fn momentum_step(
+        &self,
+        param: &mut Matrix,
+        mom: &mut Matrix,
+        opt_state: &mut [Matrix],
+        grad: &Matrix,
+        tick: SubspaceTick,
+        lr: f32,
+        step: f32,
+    ) -> Result<(), String> {
+        let m_dim = grad.cols;
+        // Algorithm 2 line 13: seed_cur is the OLD subspace on resample
+        // steps; the transfer moves the EMA before the new compression
+        // (and the freshly built A(seed_next) stays the active projection).
+        let a = if tick.resample {
+            let a_new = self.projection(tick.seed_next, m_dim);
+            if tick.transfer {
+                let a_old = self.projection(tick.seed_cur, m_dim);
+                *mom = rp::transfer(mom, &a_old, &a_new);
+            }
+            a_new
+        } else {
+            self.projection(tick.seed_cur, m_dim)
+        };
+        let c = rp::compress(grad, &a);
+        let mut next = mom.scale(self.beta);
+        next.add_scaled_inplace(&c, 1.0 - self.beta);
+        *mom = next;
+        let eff = rp::decompress(mom, &a);
+        self.base.update(param, &eff, opt_state, lr, step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::base::Sgd;
+    use crate::util::rng::Rng;
+
+    fn randn(seed: u64, n: usize, m: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(n, m, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn accumulate_delegates_to_rp() {
+        let comp = FloraCompressor::new(Sgd, 4);
+        let g = randn(0, 8, 24);
+        let mut acc = Matrix::zeros(8, 4);
+        comp.accumulate(&mut acc, &g, 99);
+        let a = rp::projection(99, 4, 24);
+        assert!(acc.allclose(&rp::compress(&g, &a), 1e-6));
+    }
+
+    #[test]
+    fn apply_accumulated_with_sgd_matches_manual_decompress() {
+        let comp = FloraCompressor::new(Sgd, 4);
+        let g = randn(1, 8, 24);
+        let mut acc = Matrix::zeros(8, 4);
+        for _ in 0..3 {
+            comp.accumulate(&mut acc, &g, 7);
+        }
+        let mut w = randn(2, 8, 24);
+        let mut want = w.clone();
+        let mut st = Vec::new();
+        comp.apply_accumulated(&mut w, &acc, &mut st, 7, 3.0, 0.5, 0.0)
+            .unwrap();
+        let a = rp::projection(7, 4, 24);
+        let ghat = rp::decompress(&acc, &a).scale(1.0 / 3.0);
+        want.add_scaled_inplace(&ghat, -0.5);
+        assert!(w.allclose(&want, 1e-6));
+    }
+
+    #[test]
+    fn momentum_transfer_only_on_resample() {
+        let comp = FloraCompressor::new(Sgd, 4);
+        let g = randn(3, 8, 24);
+        let run = |resample: bool, transfer: bool| {
+            let mut w = randn(4, 8, 24);
+            let mut mom = randn(5, 8, 4).scale(0.1);
+            let mut st = Vec::new();
+            comp.momentum_step(
+                &mut w,
+                &mut mom,
+                &mut st,
+                &g,
+                SubspaceTick { seed_cur: 10, seed_next: 11, resample, transfer },
+                0.1,
+                0.0,
+            )
+            .unwrap();
+            mom
+        };
+        let quiet = run(false, true);
+        let transferred = run(true, true);
+        let reinterpreted = run(true, false);
+        // the transfer rotates the EMA; the ablation keeps coordinates
+        assert!(!quiet.allclose(&transferred, 1e-5));
+        assert!(!transferred.allclose(&reinterpreted, 1e-5));
+    }
+
+    #[test]
+    fn param_seeds_are_independent_per_index() {
+        let comp = FloraCompressor::new(Sgd, 4);
+        let s0 = comp.param_seed(42, 0);
+        let s1 = comp.param_seed(42, 1);
+        assert_ne!(s0, s1);
+        assert_eq!(s0, comp.param_seed(42, 0));
+    }
+}

@@ -1,0 +1,149 @@
+//! First-class optimizer API: pluggable base optimizers + the FLORA
+//! gradient compressor.
+//!
+//! FLORA's core claim is that LoRA-style updates are secretly *gradient
+//! compression* — which means FLORA should compose with any base
+//! optimizer, not live hard-coded inside fused training steps. This module
+//! is that composition surface:
+//!
+//! * [`BaseOptimizer`] — the update-rule trait (`init_state` /
+//!   `state_shapes` / `update`), with three backend-free implementations
+//!   over [`crate::tensor::Matrix`]: [`Sgd`], [`Adam`] (bias-corrected
+//!   m/v) and [`Adafactor`] (factored row/col second moments — the
+//!   paper's Table-1/2 base optimizer; `Adafactor::unfactored()` is the
+//!   Table-4 linear-memory ablation).
+//! * [`FloraCompressor`] — Algorithms 1 and 2 over any `BaseOptimizer`:
+//!   per-parameter seed lifecycle, compressed accumulation
+//!   (`C += G Aᵀ`), cycle-end decompress-and-update, and
+//!   momentum-in-subspace with κ-resample transfer.
+//! * [`OptimizerKind`] — the typed config/CLI surface
+//!   (`--optimizer sgd|adam|adafactor|adafactor_nofactor`) that the
+//!   native catalog and the AOT manifest names both key on.
+//!
+//! The semantics mirror `python/compile/optimizers.py` and
+//! `python/compile/flora.py` (the L2 half of the ABI contract), so the
+//! native backend's fused steps and the AOT graphs compute the same
+//! updates.
+//!
+//! # Example: a full Algorithm-1 cycle on a rank-4 compressor
+//!
+//! ```
+//! use flora::opt::{Adafactor, BaseOptimizer, FloraCompressor};
+//! use flora::tensor::Matrix;
+//!
+//! let flora = FloraCompressor::new(Adafactor::new(), 4);
+//! let mut w = Matrix::zeros(8, 8);
+//! let mut opt_state = flora.base().init_state(8, 8);
+//! let mut acc = Matrix::zeros(8, 4); // compressed accumulator [n, r]
+//!
+//! let g = Matrix::from_fn(8, 8, |i, j| ((i * 8 + j) % 5) as f32 * 0.01);
+//! let seed = flora.param_seed(42, 0); // cycle seed 42, parameter 0
+//! for _ in 0..4 {
+//!     flora.accumulate(&mut acc, &g, seed); // C += G Aᵀ (Alg. 1 line 9)
+//! }
+//! // cycle end: decompress the mean gradient, base-optimizer step
+//! flora
+//!     .apply_accumulated(&mut w, &acc, &mut opt_state, seed, 4.0, 0.1, 0.0)
+//!     .unwrap();
+//! assert!(w.frobenius_norm() > 0.0);
+//! ```
+
+pub mod base;
+pub mod flora;
+
+pub use self::base::{Adafactor, Adam, BaseOptimizer, Sgd};
+pub use self::flora::{FloraCompressor, SubspaceTick, MOMENTUM_BETA};
+
+/// The optimizer selector wired through config, the CLI and the catalog
+/// naming scheme (`{model}/plain_step_{optimizer}`, ...).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptimizerKind {
+    Sgd,
+    Adam,
+    Adafactor,
+    /// Adafactor with a full (unfactored) second moment — the paper's
+    /// Table-4 "optimizer with linear memory" ablation.
+    AdafactorNoFactor,
+}
+
+impl OptimizerKind {
+    pub const ALL: [OptimizerKind; 4] = [
+        OptimizerKind::Sgd,
+        OptimizerKind::Adam,
+        OptimizerKind::Adafactor,
+        OptimizerKind::AdafactorNoFactor,
+    ];
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "sgd" => Ok(OptimizerKind::Sgd),
+            "adam" => Ok(OptimizerKind::Adam),
+            "adafactor" => Ok(OptimizerKind::Adafactor),
+            "adafactor_nofactor" => Ok(OptimizerKind::AdafactorNoFactor),
+            _ => Err(format!(
+                "unknown optimizer {s:?} (want \
+                 sgd|adam|adafactor|adafactor_nofactor)"
+            )),
+        }
+    }
+
+    /// The ABI name used in manifest executable names.
+    pub fn name(self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Adam => "adam",
+            OptimizerKind::Adafactor => "adafactor",
+            OptimizerKind::AdafactorNoFactor => "adafactor_nofactor",
+        }
+    }
+
+    /// Instantiate the optimizer with its paper-default hyperparameters.
+    pub fn build(self) -> Box<dyn BaseOptimizer> {
+        match self {
+            OptimizerKind::Sgd => Box::new(Sgd),
+            OptimizerKind::Adam => Box::new(Adam::new()),
+            OptimizerKind::Adafactor => Box::new(Adafactor::new()),
+            OptimizerKind::AdafactorNoFactor => Box::new(Adafactor::unfactored()),
+        }
+    }
+}
+
+impl std::fmt::Display for OptimizerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_roundtrip() {
+        for kind in OptimizerKind::ALL {
+            assert_eq!(OptimizerKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.build().name(), kind.name());
+        }
+        assert!(OptimizerKind::parse("adamw").is_err());
+    }
+
+    #[test]
+    fn display_matches_abi_name() {
+        assert_eq!(OptimizerKind::Adafactor.to_string(), "adafactor");
+        assert_eq!(
+            OptimizerKind::AdafactorNoFactor.to_string(),
+            "adafactor_nofactor"
+        );
+    }
+
+    #[test]
+    fn built_optimizers_have_expected_state_arity() {
+        assert_eq!(OptimizerKind::Sgd.build().state_shapes(4, 4).len(), 0);
+        assert_eq!(OptimizerKind::Adam.build().state_shapes(4, 4).len(), 2);
+        assert_eq!(OptimizerKind::Adafactor.build().state_shapes(4, 4).len(), 2);
+        assert_eq!(
+            OptimizerKind::AdafactorNoFactor.build().state_shapes(4, 4).len(),
+            1
+        );
+    }
+}

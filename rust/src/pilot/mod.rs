@@ -232,6 +232,7 @@ pub struct PilotCurve {
 }
 
 /// Run the full pilot: every updater on the same data stream/seed.
+#[allow(clippy::too_many_arguments)]
 pub fn run_pilot(
     task: &ImageTask,
     steps: usize,

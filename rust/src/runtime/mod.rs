@@ -6,8 +6,9 @@
 //!
 //!   * **native** (default, pure rust) — a generated catalog whose fused
 //!     steps (plain, Algorithm-1 accumulation, Algorithm-2 momentum,
-//!     GaLore refresh) run directly on `tensor::Matrix` + `rp`. No
-//!     artifacts, no external libraries.
+//!     GaLore refresh — each over every `crate::opt` base optimizer) run
+//!     directly on `tensor::Matrix` + `crate::opt` + `rp`. No artifacts,
+//!     no external libraries.
 //!   * **pjrt** (`--features xla`) — loads the AOT artifacts
 //!     (`artifacts/*.hlo.txt` + `manifest.json`) and executes them on the
 //!     CPU PJRT client via the vendored `xla` crate. Interchange is HLO
@@ -31,5 +32,5 @@ pub use native::{native_manifest, NativeBackend};
 pub use state::StateStore;
 pub use values::{
     scalar_f32, scalar_i32, scalar_u32, tensor_f32, tensor_i32, zeros_for,
-    Tensor,
+    OutKind, Route, ScalarKey, StateGroup, StepIo, StepOutputs, Tensor,
 };

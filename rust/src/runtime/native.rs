@@ -1,9 +1,12 @@
 //! Native execution backend: a pure-rust executor for a generated catalog
-//! of executables implementing the manifest ABI's fused steps — plain SGD,
-//! Algorithm-1 accumulation (micro + cycle-end update), Algorithm-2
+//! of executables implementing the manifest ABI's fused steps — plain
+//! steps, Algorithm-1 accumulation (micro + cycle-end update), Algorithm-2
 //! momentum with κ-interval subspace transfer, and the GaLore
-//! refresh-projection baseline — directly on `tensor::Matrix` +
-//! `rp::{projection, compress, compress_accumulate, decompress, transfer}`.
+//! refresh-projection baseline — directly on `tensor::Matrix` with ALL
+//! optimizer math delegated to the shared [`crate::opt`] layer
+//! ([`BaseOptimizer`] + [`FloraCompressor`]). Adding a base optimizer is
+//! one trait impl plus one [`OptimizerKind`] variant; the catalog then
+//! grows its `*_{optimizer}` step names automatically.
 //!
 //! The native model is a seeded BIGRAM language model: the parameters are a
 //! single `[vocab, vocab]` next-token logit table trained with masked
@@ -15,8 +18,6 @@
 //! manifest groups, scalars and executable names.
 //!
 //! Deviations from the AOT catalog, by design:
-//!   * base optimizer: plain SGD (`*_sgd` executable names); the GaLore
-//!     step keeps Adam-in-subspace as in the paper's baseline.
 //!   * the GaLore refresh regenerates the STORED projection from the seed
 //!     (a JL subspace) instead of an SVD of the gradient; the memory and
 //!     scheduling semantics the coordinator exercises (P lives in state,
@@ -30,16 +31,11 @@ use std::rc::Rc;
 use super::backend::{Backend, BackendExec};
 use super::manifest::{ExecutableInfo, Manifest, ModelInfo, TensorSpec};
 use super::values::{scalar_f32, Tensor};
+use crate::opt::{Adam, BaseOptimizer, FloraCompressor, OptimizerKind, SubspaceTick, MOMENTUM_BETA};
 use crate::rp;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
-/// EMA decay of the Algorithm-2 momentum step.
-const BETA: f32 = 0.9;
-/// Adam constants of the GaLore step.
-const BETA1: f32 = 0.9;
-const BETA2: f32 = 0.999;
-const EPS: f32 = 1e-8;
 /// Init scale of the logit table (small ⇒ near-uniform initial loss ln v).
 const INIT_SIGMA: f32 = 0.05;
 /// Ranks the generated catalog covers — a dense-enough grid for the bench
@@ -54,27 +50,31 @@ const SPEC_BATCH: usize = 4;
 const MODELS: [(&str, usize, usize); 3] =
     [("lm-tiny", 64, 32), ("lm-small", 256, 64), ("lm-base", 512, 64)];
 
-/// Which fused step a native executable performs.
+/// Which fused step a native executable performs. Update-bearing steps
+/// carry the [`OptimizerKind`] whose [`crate::opt::BaseOptimizer`] does
+/// the actual math.
 #[derive(Clone, Copy, Debug)]
 enum Step {
     Init,
     Eval,
     Greedy,
-    PlainSgd,
+    Plain { opt: OptimizerKind },
     MicroFlora { rank: usize },
     MicroNaive,
-    UpdateFloraSgd { rank: usize },
-    UpdateNaiveSgd,
-    MomFloraSgd { rank: usize, transfer: bool },
-    MomNaiveSgd,
+    UpdateFlora { rank: usize, opt: OptimizerKind },
+    UpdateNaive { opt: OptimizerKind },
+    MomFlora { rank: usize, transfer: bool, opt: OptimizerKind },
+    MomNaive { opt: OptimizerKind },
     GaloreStep { rank: usize },
 }
 
-/// One natively-executable catalog entry.
+/// One natively-executable catalog entry. Keeps its input specs so the
+/// executor can route inputs by ABI name, mirroring the coordinator side.
 struct NativeExec {
     name: String,
     vocab: usize,
     step: Step,
+    inputs: Vec<TensorSpec>,
 }
 
 /// The native engine: executables are prepared at catalog build time, so
@@ -95,7 +95,7 @@ impl Backend for NativeBackend {
         let e = self.execs.get(&info.name).ok_or_else(|| {
             format!(
                 "{}: not a native executable (the native catalog covers lm \
-                 models with sgd/galore steps at ranks {RANKS:?})",
+                 models with sgd/adam/adafactor steps at ranks {RANKS:?})",
                 info.name
             )
         })?;
@@ -137,6 +137,8 @@ pub fn catalog() -> (Manifest, NativeBackend) {
         let lr = f32s("lr", &[]);
         let step_s = f32s("step", &[]);
         let seed = spec("seed", &[], "uint32");
+        let acc_full = f32s("acc/w", &[v, v]);
+        let mom_full = f32s("mom/w", &[v, v]);
 
         register(
             &mut executables,
@@ -172,24 +174,9 @@ pub fn catalog() -> (Manifest, NativeBackend) {
             ],
             vec![spec("tokens", &[b, s], "int32")],
         );
-        register(
-            &mut executables,
-            &mut execs,
-            model,
-            v,
-            format!("{model}/plain_step_sgd"),
-            Step::PlainSgd,
-            vec![
-                params.clone(),
-                tokens.clone(),
-                mask.clone(),
-                lr.clone(),
-                step_s.clone(),
-            ],
-            vec![loss.clone(), params.clone()],
-        );
 
-        let acc_full = f32s("acc/w", &[v, v]);
+        // Algorithm-1 micro steps accumulate only — no optimizer involved,
+        // so one entry each regardless of the base optimizer.
         register(
             &mut executables,
             &mut execs,
@@ -206,48 +193,11 @@ pub fn catalog() -> (Manifest, NativeBackend) {
             ],
             vec![loss.clone(), acc_full.clone()],
         );
-        register(
-            &mut executables,
-            &mut execs,
-            model,
-            v,
-            format!("{model}/update_naive_sgd"),
-            Step::UpdateNaiveSgd,
-            vec![
-                params.clone(),
-                acc_full.clone(),
-                lr.clone(),
-                step_s.clone(),
-                seed.clone(),
-                f32s("tau", &[]),
-            ],
-            vec![params.clone()],
-        );
-        let mom_full = f32s("mom/w", &[v, v]);
-        register(
-            &mut executables,
-            &mut execs,
-            model,
-            v,
-            format!("{model}/mom_step_naive_sgd"),
-            Step::MomNaiveSgd,
-            vec![
-                params.clone(),
-                mom_full.clone(),
-                tokens.clone(),
-                mask.clone(),
-                lr.clone(),
-                step_s.clone(),
-            ],
-            vec![loss.clone(), params.clone(), mom_full.clone()],
-        );
-
         for r in RANKS {
             if r > v {
                 continue;
             }
             let acc = f32s("acc/w", &[v, r]);
-            let mom = f32s("mom/w", &[v, r]);
             register(
                 &mut executables,
                 &mut execs,
@@ -262,58 +212,140 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                     mask.clone(),
                     seed.clone(),
                 ],
-                vec![loss.clone(), acc.clone()],
+                vec![loss.clone(), acc],
+            );
+        }
+
+        // Update-bearing steps: one set per base optimizer, with that
+        // optimizer's state tensors spliced into the ABI as `opt/{slot}/w`.
+        for opt in OptimizerKind::ALL {
+            let opt_specs: Vec<TensorSpec> = opt
+                .build()
+                .state_shapes(v, v)
+                .iter()
+                .map(|(slot, sh)| f32s(&format!("opt/{slot}/w"), &sh[..]))
+                .collect();
+            let o = opt.name();
+
+            register(
+                &mut executables,
+                &mut execs,
+                model,
+                v,
+                format!("{model}/plain_step_{o}"),
+                Step::Plain { opt },
+                splice(
+                    vec![params.clone()],
+                    &opt_specs,
+                    vec![tokens.clone(), mask.clone(), lr.clone(), step_s.clone()],
+                ),
+                splice(vec![loss.clone(), params.clone()], &opt_specs, vec![]),
             );
             register(
                 &mut executables,
                 &mut execs,
                 model,
                 v,
-                format!("{model}/update_flora_r{r}_sgd"),
-                Step::UpdateFloraSgd { rank: r },
-                vec![
-                    params.clone(),
-                    acc.clone(),
-                    lr.clone(),
-                    step_s.clone(),
-                    seed.clone(),
-                    f32s("tau", &[]),
-                ],
-                vec![params.clone()],
-            );
-            let mom_inputs = vec![
-                params.clone(),
-                mom.clone(),
-                tokens.clone(),
-                mask.clone(),
-                lr.clone(),
-                step_s.clone(),
-                spec("seed_cur", &[], "uint32"),
-                spec("seed_next", &[], "uint32"),
-                f32s("resample", &[]),
-            ];
-            let mom_outputs =
-                vec![loss.clone(), params.clone(), mom.clone()];
-            register(
-                &mut executables,
-                &mut execs,
-                model,
-                v,
-                format!("{model}/mom_step_flora_r{r}_sgd"),
-                Step::MomFloraSgd { rank: r, transfer: true },
-                mom_inputs.clone(),
-                mom_outputs.clone(),
+                format!("{model}/update_naive_{o}"),
+                Step::UpdateNaive { opt },
+                splice(
+                    vec![params.clone(), acc_full.clone()],
+                    &opt_specs,
+                    vec![lr.clone(), step_s.clone(), seed.clone(), f32s("tau", &[])],
+                ),
+                splice(vec![params.clone()], &opt_specs, vec![]),
             );
             register(
                 &mut executables,
                 &mut execs,
                 model,
                 v,
-                format!("{model}/mom_step_flora_notransfer_r{r}_sgd"),
-                Step::MomFloraSgd { rank: r, transfer: false },
-                mom_inputs,
-                mom_outputs,
+                format!("{model}/mom_step_naive_{o}"),
+                Step::MomNaive { opt },
+                splice(
+                    vec![params.clone(), mom_full.clone()],
+                    &opt_specs,
+                    vec![tokens.clone(), mask.clone(), lr.clone(), step_s.clone()],
+                ),
+                splice(
+                    vec![loss.clone(), params.clone(), mom_full.clone()],
+                    &opt_specs,
+                    vec![],
+                ),
             );
+
+            for r in RANKS {
+                if r > v {
+                    continue;
+                }
+                let acc = f32s("acc/w", &[v, r]);
+                let mom = f32s("mom/w", &[v, r]);
+                register(
+                    &mut executables,
+                    &mut execs,
+                    model,
+                    v,
+                    format!("{model}/update_flora_r{r}_{o}"),
+                    Step::UpdateFlora { rank: r, opt },
+                    splice(
+                        vec![params.clone(), acc],
+                        &opt_specs,
+                        vec![
+                            lr.clone(),
+                            step_s.clone(),
+                            seed.clone(),
+                            f32s("tau", &[]),
+                        ],
+                    ),
+                    splice(vec![params.clone()], &opt_specs, vec![]),
+                );
+                let mom_inputs = splice(
+                    vec![params.clone(), mom.clone()],
+                    &opt_specs,
+                    vec![
+                        tokens.clone(),
+                        mask.clone(),
+                        lr.clone(),
+                        step_s.clone(),
+                        spec("seed_cur", &[], "uint32"),
+                        spec("seed_next", &[], "uint32"),
+                        f32s("resample", &[]),
+                    ],
+                );
+                let mom_outputs = splice(
+                    vec![loss.clone(), params.clone(), mom.clone()],
+                    &opt_specs,
+                    vec![],
+                );
+                register(
+                    &mut executables,
+                    &mut execs,
+                    model,
+                    v,
+                    format!("{model}/mom_step_flora_r{r}_{o}"),
+                    Step::MomFlora { rank: r, transfer: true, opt },
+                    mom_inputs.clone(),
+                    mom_outputs.clone(),
+                );
+                register(
+                    &mut executables,
+                    &mut execs,
+                    model,
+                    v,
+                    format!("{model}/mom_step_flora_notransfer_r{r}_{o}"),
+                    Step::MomFlora { rank: r, transfer: false, opt },
+                    mom_inputs,
+                    mom_outputs,
+                );
+            }
+        }
+
+        // GaLore baseline: Adam-in-subspace with a stored projection and
+        // κ-interval refresh; its moments are method state, not opt state.
+        for r in RANKS {
+            if r > v {
+                continue;
+            }
             register(
                 &mut executables,
                 &mut execs,
@@ -361,6 +393,17 @@ fn f32s(name: &str, shape: &[usize]) -> TensorSpec {
     spec(name, shape, "float32")
 }
 
+/// `head ++ mid ++ tail` — splices optimizer state specs into an ABI list.
+fn splice(
+    mut head: Vec<TensorSpec>,
+    mid: &[TensorSpec],
+    tail: Vec<TensorSpec>,
+) -> Vec<TensorSpec> {
+    head.extend(mid.iter().cloned());
+    head.extend(tail);
+    head
+}
+
 #[allow(clippy::too_many_arguments)]
 fn register(
     executables: &mut BTreeMap<String, ExecutableInfo>,
@@ -378,11 +421,11 @@ fn register(
             name: name.clone(),
             file: PathBuf::from("native"),
             model: model.to_string(),
-            inputs,
+            inputs: inputs.clone(),
             outputs,
         },
     );
-    execs.insert(name.clone(), Rc::new(NativeExec { name, vocab, step }));
+    execs.insert(name.clone(), Rc::new(NativeExec { name, vocab, step, inputs }));
 }
 
 // ---------------------------------------------------------------------
@@ -435,14 +478,56 @@ fn tensor_of(m: Matrix) -> Tensor {
     Tensor::F32 { shape: vec![m.rows, m.cols], data: m.data }
 }
 
-fn f32_in(t: &Tensor, what: &str, ctx: &str) -> Result<f32, String> {
-    t.first_f32().map_err(|e| format!("{ctx}: {what}: {e}"))
+/// Name-routed view of one invocation's inputs — the executor-side mirror
+/// of the coordinator's `StepIo`, so neither side depends on positions.
+struct Inputs<'a> {
+    specs: &'a [TensorSpec],
+    vals: &'a [Tensor],
+    ctx: &'a str,
 }
 
-fn seed_in(t: &Tensor, what: &str, ctx: &str) -> Result<u64, String> {
-    t.first_u32()
-        .map(|v| v as u64)
-        .map_err(|e| format!("{ctx}: {what}: {e}"))
+impl<'a> Inputs<'a> {
+    fn get(&self, name: &str) -> Result<&'a Tensor, String> {
+        self.specs
+            .iter()
+            .position(|s| s.name == name)
+            .and_then(|i| self.vals.get(i))
+            .ok_or_else(|| format!("{}: missing input {name:?}", self.ctx))
+    }
+
+    fn matrix(&self, name: &str) -> Result<Matrix, String> {
+        matrix_of(self.get(name)?, self.ctx)
+    }
+
+    fn num(&self, name: &str) -> Result<f32, String> {
+        self.get(name)?
+            .first_f32()
+            .map_err(|e| format!("{}: {name}: {e}", self.ctx))
+    }
+
+    fn useed(&self, name: &str) -> Result<u64, String> {
+        self.get(name)?
+            .first_u32()
+            .map(|v| v as u64)
+            .map_err(|e| format!("{}: {name}: {e}", self.ctx))
+    }
+
+    fn batch(&self) -> Result<BatchRef<'a>, String> {
+        batch_of(self.get("batch/tokens")?, self.get("batch/mask")?, self.ctx)
+    }
+
+    /// All `opt/...` state tensors in declared (state_shapes) order.
+    fn opt_state(&self) -> Result<Vec<Matrix>, String> {
+        self.specs
+            .iter()
+            .zip(self.vals.iter())
+            .filter(|(s, _)| s.name.starts_with("opt/"))
+            .map(|(s, v)| {
+                matrix_of(v, self.ctx)
+                    .map_err(|e| format!("{} ({}): {e}", self.ctx, s.name))
+            })
+            .collect()
+    }
 }
 
 /// Masked next-token cross-entropy of the bigram logit table, plus
@@ -513,12 +598,21 @@ fn loss_and_grad(
     Ok(((total_loss / total_w) as f32, grad))
 }
 
+/// `[head..., opt_state...]` — the standard output layout of an
+/// update-bearing step.
+fn outputs_with_state(head: Vec<Tensor>, state: Vec<Matrix>) -> Vec<Tensor> {
+    let mut out = head;
+    out.extend(state.into_iter().map(tensor_of));
+    out
+}
+
 impl BackendExec for NativeExec {
     fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
         let ctx = self.name.as_str();
+        let ins = Inputs { specs: &self.inputs, vals: inputs, ctx };
         match self.step {
             Step::Init => {
-                let seed = seed_in(&inputs[0], "seed", ctx)?;
+                let seed = ins.useed("seed")?;
                 let mut rng = Rng::new(seed);
                 let w = Matrix::gaussian(
                     self.vocab,
@@ -529,14 +623,14 @@ impl BackendExec for NativeExec {
                 Ok(vec![tensor_of(w)])
             }
             Step::Eval => {
-                let w = matrix_of(&inputs[0], ctx)?;
-                let batch = batch_of(&inputs[1], &inputs[2], ctx)?;
+                let w = ins.matrix("params/w")?;
+                let batch = ins.batch()?;
                 let (loss, _) = loss_and_grad(&w, &batch, false, ctx)?;
                 Ok(vec![scalar_f32(loss)])
             }
             Step::Greedy => {
-                let w = matrix_of(&inputs[0], ctx)?;
-                let (rows, s, mut out) = match &inputs[1] {
+                let w = ins.matrix("params/w")?;
+                let (rows, s, mut out) = match ins.get("batch/tokens")? {
                     Tensor::I32 { shape, data } if shape.len() == 2 => {
                         (shape[0], shape[1], data.clone())
                     }
@@ -546,7 +640,8 @@ impl BackendExec for NativeExec {
                         ))
                     }
                 };
-                let plen = inputs[2]
+                let plen = ins
+                    .get("prompt_len")?
                     .first_i32()
                     .map_err(|e| format!("{ctx}: prompt_len: {e}"))?
                     .max(1) as usize;
@@ -570,104 +665,118 @@ impl BackendExec for NativeExec {
                 }
                 Ok(vec![Tensor::I32 { shape: vec![rows, s], data: out }])
             }
-            Step::PlainSgd => {
-                let mut w = matrix_of(&inputs[0], ctx)?;
-                let batch = batch_of(&inputs[1], &inputs[2], ctx)?;
-                let lr = f32_in(&inputs[3], "lr", ctx)?;
+            Step::Plain { opt } => {
+                let mut w = ins.matrix("params/w")?;
+                let mut st = ins.opt_state()?;
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
                 let (loss, g) = loss_and_grad(&w, &batch, true, ctx)?;
-                w.add_scaled_inplace(&g, -lr);
-                Ok(vec![scalar_f32(loss), tensor_of(w)])
+                opt.build()
+                    .update(&mut w, &g, &mut st, lr, step)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(outputs_with_state(vec![scalar_f32(loss), tensor_of(w)], st))
             }
             Step::MicroFlora { rank } => {
-                let w = matrix_of(&inputs[0], ctx)?;
-                let mut acc = matrix_of(&inputs[1], ctx)?;
-                let batch = batch_of(&inputs[2], &inputs[3], ctx)?;
-                let seed = seed_in(&inputs[4], "seed", ctx)?;
+                let w = ins.matrix("params/w")?;
+                let mut acc = ins.matrix("acc/w")?;
+                let batch = ins.batch()?;
+                let seed = ins.useed("seed")?;
                 let (loss, g) = loss_and_grad(&w, &batch, true, ctx)?;
-                // Algorithm 1 line 9: C += G Aᵀ with the cycle's shared A
-                let a = rp::projection(seed, rank, w.cols);
-                rp::compress_accumulate(&mut acc, &g, &a);
+                // Algorithm 1 line 9: C += G Aᵀ with the cycle's shared
+                // seed (accumulation is base-optimizer-free).
+                let comp = FloraCompressor::new(crate::opt::Sgd, rank);
+                comp.accumulate(&mut acc, &g, seed);
                 Ok(vec![scalar_f32(loss), tensor_of(acc)])
             }
             Step::MicroNaive => {
-                let w = matrix_of(&inputs[0], ctx)?;
-                let mut acc = matrix_of(&inputs[1], ctx)?;
-                let batch = batch_of(&inputs[2], &inputs[3], ctx)?;
+                let w = ins.matrix("params/w")?;
+                let mut acc = ins.matrix("acc/w")?;
+                let batch = ins.batch()?;
                 let (loss, g) = loss_and_grad(&w, &batch, true, ctx)?;
                 acc.add_scaled_inplace(&g, 1.0);
                 Ok(vec![scalar_f32(loss), tensor_of(acc)])
             }
-            Step::UpdateFloraSgd { rank } => {
-                let mut w = matrix_of(&inputs[0], ctx)?;
-                let acc = matrix_of(&inputs[1], ctx)?;
-                let lr = f32_in(&inputs[2], "lr", ctx)?;
-                let seed = seed_in(&inputs[4], "seed", ctx)?;
-                let tau = f32_in(&inputs[5], "tau", ctx)?.max(1.0);
+            Step::UpdateFlora { rank, opt } => {
+                let mut w = ins.matrix("params/w")?;
+                let acc = ins.matrix("acc/w")?;
+                let mut st = ins.opt_state()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let seed = ins.useed("seed")?;
+                let tau = ins.num("tau")?;
                 // Algorithm 1 cycle end: decompress the mean gradient with
-                // the SAME seed the micros used, then base-optimizer step
-                let a = rp::projection(seed, rank, w.cols);
-                let ghat = rp::decompress(&acc, &a);
-                w.add_scaled_inplace(&ghat, -lr / tau);
-                Ok(vec![tensor_of(w)])
+                // the SAME seed the micros used, then base-optimizer step.
+                let comp = FloraCompressor::new(opt.build(), rank);
+                comp.apply_accumulated(&mut w, &acc, &mut st, seed, tau, lr, step)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(outputs_with_state(vec![tensor_of(w)], st))
             }
-            Step::UpdateNaiveSgd => {
-                let mut w = matrix_of(&inputs[0], ctx)?;
-                let acc = matrix_of(&inputs[1], ctx)?;
-                let lr = f32_in(&inputs[2], "lr", ctx)?;
-                let tau = f32_in(&inputs[5], "tau", ctx)?.max(1.0);
-                w.add_scaled_inplace(&acc, -lr / tau);
-                Ok(vec![tensor_of(w)])
+            Step::UpdateNaive { opt } => {
+                let mut w = ins.matrix("params/w")?;
+                let acc = ins.matrix("acc/w")?;
+                let mut st = ins.opt_state()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let tau = ins.num("tau")?.max(1.0);
+                let ghat = acc.scale(1.0 / tau);
+                opt.build()
+                    .update(&mut w, &ghat, &mut st, lr, step)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(outputs_with_state(vec![tensor_of(w)], st))
             }
-            Step::MomFloraSgd { rank, transfer } => {
-                let mut w = matrix_of(&inputs[0], ctx)?;
-                let mut mom = matrix_of(&inputs[1], ctx)?;
-                let batch = batch_of(&inputs[2], &inputs[3], ctx)?;
-                let lr = f32_in(&inputs[4], "lr", ctx)?;
-                let seed_cur = seed_in(&inputs[6], "seed_cur", ctx)?;
-                let seed_next = seed_in(&inputs[7], "seed_next", ctx)?;
-                let resample =
-                    f32_in(&inputs[8], "resample", ctx)? >= 0.5;
-                let m_cols = w.cols;
-                // Algorithm 2 line 13: on resample, move the EMA into the
-                // next subspace (seed_cur is the OLD seed on those steps)
-                let active = if resample { seed_next } else { seed_cur };
-                if resample && transfer {
-                    let a_old = rp::projection(seed_cur, rank, m_cols);
-                    let a_new = rp::projection(seed_next, rank, m_cols);
-                    mom = rp::transfer(&mom, &a_old, &a_new);
-                }
-                let a = rp::projection(active, rank, m_cols);
+            Step::MomFlora { rank, transfer, opt } => {
+                let mut w = ins.matrix("params/w")?;
+                let mut mom = ins.matrix("mom/w")?;
+                let mut st = ins.opt_state()?;
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let tick = SubspaceTick {
+                    seed_cur: ins.useed("seed_cur")?,
+                    seed_next: ins.useed("seed_next")?,
+                    resample: ins.num("resample")? >= 0.5,
+                    transfer,
+                };
                 let (loss, g) = loss_and_grad(&w, &batch, true, ctx)?;
-                let c = rp::compress(&g, &a);
-                let mut new_mom = mom.scale(BETA);
-                new_mom.add_scaled_inplace(&c, 1.0 - BETA);
-                let upd = rp::decompress(&new_mom, &a);
-                w.add_scaled_inplace(&upd, -lr);
-                Ok(vec![scalar_f32(loss), tensor_of(w), tensor_of(new_mom)])
+                let comp = FloraCompressor::new(opt.build(), rank);
+                comp.momentum_step(&mut w, &mut mom, &mut st, &g, tick, lr, step)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(outputs_with_state(
+                    vec![scalar_f32(loss), tensor_of(w), tensor_of(mom)],
+                    st,
+                ))
             }
-            Step::MomNaiveSgd => {
-                let mut w = matrix_of(&inputs[0], ctx)?;
-                let mom = matrix_of(&inputs[1], ctx)?;
-                let batch = batch_of(&inputs[2], &inputs[3], ctx)?;
-                let lr = f32_in(&inputs[4], "lr", ctx)?;
+            Step::MomNaive { opt } => {
+                let mut w = ins.matrix("params/w")?;
+                let mom = ins.matrix("mom/w")?;
+                let mut st = ins.opt_state()?;
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
                 let (loss, g) = loss_and_grad(&w, &batch, true, ctx)?;
-                let mut new_mom = mom.scale(BETA);
-                new_mom.add_scaled_inplace(&g, 1.0 - BETA);
-                w.add_scaled_inplace(&new_mom, -lr);
-                Ok(vec![scalar_f32(loss), tensor_of(w), tensor_of(new_mom)])
+                let mut new_mom = mom.scale(MOMENTUM_BETA);
+                new_mom.add_scaled_inplace(&g, 1.0 - MOMENTUM_BETA);
+                opt.build()
+                    .update(&mut w, &new_mom, &mut st, lr, step)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(outputs_with_state(
+                    vec![scalar_f32(loss), tensor_of(w), tensor_of(new_mom)],
+                    st,
+                ))
             }
             Step::GaloreStep { rank } => {
-                let mut w = matrix_of(&inputs[0], ctx)?;
-                let m_in = matrix_of(&inputs[1], ctx)?;
-                let p_in = matrix_of(&inputs[2], ctx)?;
-                let v_in = matrix_of(&inputs[3], ctx)?;
-                let batch = batch_of(&inputs[4], &inputs[5], ctx)?;
-                let lr = f32_in(&inputs[6], "lr", ctx)?;
-                let step = f32_in(&inputs[7], "step", ctx)?;
-                let seed = seed_in(&inputs[8], "seed", ctx)?;
-                let refresh = f32_in(&inputs[9], "refresh", ctx)? >= 0.5;
+                let mut w = ins.matrix("params/w")?;
+                let mut m = ins.matrix("m/w")?;
+                let p_in = ins.matrix("proj/w")?;
+                let mut vv = ins.matrix("v/w")?;
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let seed = ins.useed("seed")?;
+                let refresh = ins.num("refresh")? >= 0.5;
                 // GaLore stores P (that's its memory cost); refresh swaps
-                // it for a fresh seeded subspace every κ steps
+                // it for a fresh seeded subspace every κ steps.
                 let p = if refresh {
                     rp::projection(seed, rank, w.cols)
                 } else {
@@ -675,19 +784,9 @@ impl BackendExec for NativeExec {
                 };
                 let (loss, g) = loss_and_grad(&w, &batch, true, ctx)?;
                 let c = rp::compress(&g, &p);
-                let mut m = m_in.scale(BETA1);
-                m.add_scaled_inplace(&c, 1.0 - BETA1);
-                let c2 = c.hadamard(&c);
-                let mut vv = v_in.scale(BETA2);
-                vv.add_scaled_inplace(&c2, 1.0 - BETA2);
-                // Adam-in-subspace with bias correction at t = step + 1
-                let t = step + 1.0;
-                let bc1 = 1.0 - BETA1.powf(t);
-                let bc2 = 1.0 - BETA2.powf(t);
-                let dir = Matrix::from_fn(m.rows, m.cols, |i, j| {
-                    (m.at(i, j) / bc1)
-                        / ((vv.at(i, j) / bc2).max(0.0).sqrt() + EPS)
-                });
+                // Adam-in-subspace: same moment/bias-correction rule as the
+                // full Adam, applied to the compressed moments.
+                let dir = Adam::new().direction(&mut m, &mut vv, &c, step);
                 let upd = rp::decompress(&dir, &p);
                 w.add_scaled_inplace(&upd, -lr);
                 Ok(vec![
@@ -707,10 +806,7 @@ mod tests {
     use super::*;
     use crate::runtime::values::{scalar_f32, scalar_u32, tensor_f32};
 
-    fn exec<'a>(
-        backend: &'a NativeBackend,
-        name: &str,
-    ) -> &'a Rc<NativeExec> {
+    fn exec<'a>(backend: &'a NativeBackend, name: &str) -> &'a Rc<NativeExec> {
         backend.execs.get(name).unwrap()
     }
 
@@ -740,13 +836,54 @@ mod tests {
         for name in manifest.executables.keys() {
             assert!(backend.execs.contains_key(name), "missing exec {name}");
         }
-        // ABI arity spot checks
+        // ABI arity spot checks: the sgd names keep their PR-1 shape...
         let e = manifest.executable("lm-tiny/plain_step_sgd").unwrap();
         assert_eq!(e.inputs.len(), 5);
         assert_eq!(e.outputs.len(), 2);
         let e = manifest.executable("lm-tiny/galore_step_r8").unwrap();
         assert_eq!(e.inputs.len(), 10);
         assert_eq!(e.outputs.len(), 5);
+        // ...and the adam/adafactor variants splice their opt state in.
+        let e = manifest.executable("lm-tiny/plain_step_adam").unwrap();
+        assert_eq!(e.inputs.len(), 7);
+        assert_eq!(e.outputs.len(), 4);
+        assert_eq!(e.inputs[1].name, "opt/m/w");
+        assert_eq!(e.inputs[2].name, "opt/v/w");
+        let e = manifest
+            .executable("lm-tiny/update_flora_r8_adafactor")
+            .unwrap();
+        assert_eq!(e.inputs.len(), 8);
+        assert_eq!(e.outputs.len(), 3);
+        assert_eq!(e.inputs[2].name, "opt/vr/w");
+        assert_eq!(e.inputs[2].shape, vec![64, 1]);
+        assert_eq!(e.inputs[3].name, "opt/vc/w");
+        assert_eq!(e.inputs[3].shape, vec![1, 64]);
+        let e = manifest
+            .executable("lm-tiny/mom_step_flora_r8_adam")
+            .unwrap();
+        assert_eq!(e.inputs.len(), 11);
+        assert_eq!(e.outputs.len(), 5);
+    }
+
+    #[test]
+    fn catalog_covers_every_optimizer() {
+        let (manifest, _) = catalog();
+        for opt in OptimizerKind::ALL {
+            let o = opt.name();
+            for exe in [
+                format!("lm-tiny/plain_step_{o}"),
+                format!("lm-tiny/update_naive_{o}"),
+                format!("lm-tiny/update_flora_r8_{o}"),
+                format!("lm-tiny/mom_step_naive_{o}"),
+                format!("lm-tiny/mom_step_flora_r8_{o}"),
+                format!("lm-tiny/mom_step_flora_notransfer_r8_{o}"),
+            ] {
+                assert!(
+                    manifest.executables.contains_key(&exe),
+                    "missing {exe}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -791,8 +928,44 @@ mod tests {
     }
 
     #[test]
-    fn plain_gradient_matches_finite_differences() {
+    fn plain_step_adam_descends_and_threads_opt_state() {
         let (_, backend) = catalog();
+        let init = exec(&backend, "lm-tiny/init");
+        let step = exec(&backend, "lm-tiny/plain_step_adam");
+        let (toks, mask) = toy_batch(64, 32);
+        let mut params = init.run(&[scalar_u32(0)]).unwrap().remove(0);
+        let zeros = tensor_f32(&[64, 64], &[0.0; 64 * 64]).unwrap();
+        let (mut m, mut v) = (zeros.clone(), zeros);
+        let mut losses = Vec::new();
+        for s in 0..30 {
+            let outs = step
+                .run(&[
+                    params.clone(),
+                    m.clone(),
+                    v.clone(),
+                    toks.clone(),
+                    mask.clone(),
+                    scalar_f32(0.05),
+                    scalar_f32(s as f32),
+                ])
+                .unwrap();
+            losses.push(outs[0].first_f32().unwrap());
+            let mut it = outs.into_iter();
+            it.next(); // loss
+            params = it.next().unwrap();
+            m = it.next().unwrap();
+            v = it.next().unwrap();
+        }
+        // the second moment must be strictly positive after 30 steps
+        assert!(v.to_f32_vec().unwrap().iter().any(|&x| x > 0.0));
+        let first = losses[0];
+        let last = *losses.last().unwrap();
+        assert!((first - (64f32).ln()).abs() < 0.5, "first={first}");
+        assert!(last < first - 0.5, "no adam descent: {first} -> {last}");
+    }
+
+    #[test]
+    fn plain_gradient_matches_finite_differences() {
         let (toks, mask) = toy_batch(64, 32);
         let batch = batch_of(&toks, &mask, "t").unwrap();
         let mut rng = Rng::new(3);
@@ -822,7 +995,7 @@ mod tests {
         let micro = exec(&backend, "lm-tiny/micro_flora_r4");
         let (toks, mask) = toy_batch(64, 32);
         let params = init.run(&[scalar_u32(1)]).unwrap().remove(0);
-        let zero_acc = tensor_f32(&[64, 4], &vec![0.0; 64 * 4]).unwrap();
+        let zero_acc = tensor_f32(&[64, 4], &[0.0; 64 * 4]).unwrap();
         let outs = micro
             .run(&[
                 params.clone(),
@@ -852,7 +1025,7 @@ mod tests {
         let step = exec(&backend, "lm-tiny/mom_step_flora_r4_sgd");
         let (toks, mask) = toy_batch(64, 32);
         let params = init.run(&[scalar_u32(2)]).unwrap().remove(0);
-        let mom = tensor_f32(&[64, 4], &vec![0.1; 64 * 4]).unwrap();
+        let mom = tensor_f32(&[64, 4], &[0.1; 64 * 4]).unwrap();
         let base = vec![
             params,
             mom,
@@ -871,5 +1044,34 @@ mod tests {
         // the transfer rotates the momentum into a new subspace, so the
         // resulting EMA state must differ from the quiet step's
         assert_ne!(quiet[2], resampled[2]);
+    }
+
+    #[test]
+    fn update_flora_adafactor_keeps_factored_state_shapes() {
+        let (_, backend) = catalog();
+        let update = exec(&backend, "lm-tiny/update_flora_r4_adafactor");
+        let params = tensor_f32(&[64, 64], &[0.05; 64 * 64]).unwrap();
+        let acc = tensor_f32(&[64, 4], &[0.5; 64 * 4]).unwrap();
+        let vr = tensor_f32(&[64, 1], &[0.0; 64]).unwrap();
+        let vc = tensor_f32(&[1, 64], &[0.0; 64]).unwrap();
+        let outs = update
+            .run(&[
+                params.clone(),
+                acc,
+                vr,
+                vc,
+                scalar_f32(0.1),
+                scalar_f32(0.0),
+                scalar_u32(3),
+                scalar_f32(4.0),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_ne!(outs[0], params, "params did not move");
+        assert_eq!(outs[1].shape(), &[64, 1]);
+        assert_eq!(outs[2].shape(), &[1, 64]);
+        // the factored moments absorbed the gradient energy
+        assert!(outs[1].to_f32_vec().unwrap().iter().all(|&x| x >= 0.0));
+        assert!(outs[1].to_f32_vec().unwrap().iter().any(|&x| x > 0.0));
     }
 }

@@ -1,16 +1,22 @@
-//! Named tensor groups: the training state the coordinator threads through
-//! executables. Each group ("params", "opt", "acc", "mom", ...) is an
-//! ordered list of backend-neutral tensors matching the manifest's
-//! sorted-name order; the ledger tracks their byte footprint so integration
-//! tests can reconcile the live numbers with the analytic accountant.
+//! Typed state groups: the training state the coordinator threads through
+//! executables. Each [`StateGroup`] (params, train, opt, method) is an
+//! ordered list of backend-neutral tensors whose specs carry the ABI
+//! names; lookups and replacements are by NAME, so executable output
+//! order can never silently mis-route a tensor. The ledger tracks byte
+//! footprints so integration tests can reconcile the live numbers with
+//! the analytic accountant.
 
 use std::collections::BTreeMap;
 
 use super::manifest::TensorSpec;
-use super::values::{zeros_for, Tensor};
+use super::values::{zeros_for, StateGroup, Tensor};
 use crate::memory::BufferLedger;
 
-/// One named group of state tensors.
+/// One checkpointable group snapshot: group name + (spec, host f32 data)
+/// pairs, in ABI order.
+pub type GroupHostSnapshot = (String, Vec<(TensorSpec, Vec<f32>)>);
+
+/// One group of state tensors.
 pub struct Group {
     pub specs: Vec<TensorSpec>,
     pub values: Vec<Tensor>,
@@ -25,7 +31,7 @@ impl Group {
 /// All state for one training run.
 #[derive(Default)]
 pub struct StateStore {
-    groups: BTreeMap<String, Group>,
+    groups: BTreeMap<StateGroup, Group>,
     ledger: Option<BufferLedger>,
 }
 
@@ -35,62 +41,93 @@ impl StateStore {
     }
 
     /// Install a group from executed outputs (consumes the tensors).
-    pub fn put(&mut self, name: &str, specs: Vec<TensorSpec>, values: Vec<Tensor>) {
-        assert_eq!(specs.len(), values.len(), "group {name}: spec/value mismatch");
+    pub fn put(&mut self, group: StateGroup, specs: Vec<TensorSpec>, values: Vec<Tensor>) {
+        assert_eq!(
+            specs.len(),
+            values.len(),
+            "group {}: spec/value mismatch",
+            group.name()
+        );
         let g = Group { specs, values };
         if let Some(l) = &self.ledger {
             l.alloc(g.byte_size());
-            if let Some(old) = self.groups.get(name) {
+            if let Some(old) = self.groups.get(&group) {
                 l.free(old.byte_size());
             }
         }
-        self.groups.insert(name.to_string(), g);
+        self.groups.insert(group, g);
     }
 
     /// Allocate a zero-filled group matching manifest specs (accumulators,
     /// momenta, optimizer state start at zero in this ABI).
-    pub fn put_zeros(&mut self, name: &str, specs: Vec<TensorSpec>) -> Result<(), String> {
+    pub fn put_zeros(
+        &mut self,
+        group: StateGroup,
+        specs: Vec<TensorSpec>,
+    ) -> Result<(), String> {
         let values = specs
             .iter()
             .map(zeros_for)
             .collect::<Result<Vec<_>, _>>()?;
-        self.put(name, specs, values);
+        self.put(group, specs, values);
         Ok(())
     }
 
-    pub fn get(&self, name: &str) -> Result<&Group, String> {
-        self.groups
-            .get(name)
-            .ok_or_else(|| format!("state group {name:?} not initialized"))
+    pub fn get(&self, group: StateGroup) -> Result<&Group, String> {
+        self.groups.get(&group).ok_or_else(|| {
+            format!("state group {:?} not initialized", group.name())
+        })
     }
 
-    pub fn contains(&self, name: &str) -> bool {
-        self.groups.contains_key(name)
+    pub fn contains(&self, group: StateGroup) -> bool {
+        self.groups.contains_key(&group)
     }
 
-    /// Replace a group's values (shapes unchanged — e.g. post-step params).
-    pub fn replace_values(&mut self, name: &str, values: Vec<Tensor>) -> Result<(), String> {
-        let g = self
-            .groups
-            .get_mut(name)
-            .ok_or_else(|| format!("state group {name:?} not initialized"))?;
-        if values.len() != g.values.len() {
-            return Err(format!(
-                "group {name}: replacing {} values with {}",
-                g.values.len(),
-                values.len()
-            ));
-        }
-        g.values = values;
+    /// The tensor named `name` within a group.
+    pub fn named(&self, group: StateGroup, name: &str) -> Result<&Tensor, String> {
+        let g = self.get(group)?;
+        g.specs
+            .iter()
+            .position(|s| s.name == name)
+            .and_then(|i| g.values.get(i))
+            .ok_or_else(|| {
+                let have: Vec<&str> =
+                    g.specs.iter().map(|s| s.name.as_str()).collect();
+                format!(
+                    "group {} has no tensor named {name:?} (have: {have:?})",
+                    group.name()
+                )
+            })
+    }
+
+    /// Replace one named tensor (post-step state routing). The shape is
+    /// fixed by the group's spec; only the value moves.
+    pub fn set_named(
+        &mut self,
+        group: StateGroup,
+        name: &str,
+        value: Tensor,
+    ) -> Result<(), String> {
+        let g = self.groups.get_mut(&group).ok_or_else(|| {
+            format!("state group {:?} not initialized", group.name())
+        })?;
+        let idx = g.specs.iter().position(|s| s.name == name).ok_or_else(|| {
+            let have: Vec<&str> =
+                g.specs.iter().map(|s| s.name.as_str()).collect();
+            format!(
+                "group {} has no tensor named {name:?} (have: {have:?})",
+                group.name()
+            )
+        })?;
+        g.values[idx] = value;
         Ok(())
     }
 
     /// Zero a group in place (end of an accumulation cycle, Algorithm 1).
-    pub fn zero(&mut self, name: &str) -> Result<(), String> {
-        let g = self
-            .groups
-            .get_mut(name)
-            .ok_or_else(|| format!("state group {name:?} not initialized"))?;
+    pub fn zero(&mut self, group: StateGroup) -> Result<(), String> {
+        let g = self.groups.get_mut(&group).ok_or_else(|| {
+            format!("state group {:?} not initialized", group.name())
+        })?;
         g.values = g
             .specs
             .iter()
@@ -100,10 +137,10 @@ impl StateStore {
     }
 
     /// Assemble an input tensor list by cloning groups in order.
-    pub fn collect(&self, group_names: &[&str]) -> Result<Vec<Tensor>, String> {
+    pub fn collect(&self, groups: &[StateGroup]) -> Result<Vec<Tensor>, String> {
         let mut out = Vec::new();
-        for name in group_names {
-            let g = self.get(name)?;
+        for group in groups {
+            let g = self.get(*group)?;
             out.extend(g.values.iter().cloned());
         }
         Ok(out)
@@ -113,16 +150,17 @@ impl StateStore {
         self.groups.values().map(|g| g.byte_size()).sum()
     }
 
-    pub fn group_bytes(&self, name: &str) -> u64 {
-        self.groups.get(name).map(|g| g.byte_size()).unwrap_or(0)
+    pub fn group_bytes(&self, group: StateGroup) -> u64 {
+        self.groups.get(&group).map(|g| g.byte_size()).unwrap_or(0)
     }
 
     /// Host snapshot of every group (f32 state only — the full ABI), for
-    /// checkpointing.
-    pub fn snapshot(&self) -> Result<Vec<(String, Vec<(TensorSpec, Vec<f32>)>)>, String> {
+    /// checkpointing. Group names are [`StateGroup::name`] strings so the
+    /// checkpoint format stays self-describing.
+    pub fn snapshot(&self) -> Result<Vec<GroupHostSnapshot>, String> {
         self.groups
             .iter()
-            .map(|(name, g)| {
+            .map(|(group, g)| {
                 let tensors = g
                     .specs
                     .iter()
@@ -134,7 +172,7 @@ impl StateStore {
                         Ok((spec.clone(), data))
                     })
                     .collect::<Result<Vec<_>, String>>()?;
-                Ok((name.clone(), tensors))
+                Ok((group.name().to_string(), tensors))
             })
             .collect()
     }
@@ -151,19 +189,24 @@ mod tests {
     #[test]
     fn zeros_group_and_bytes() {
         let mut s = StateStore::new(Some(BufferLedger::new()));
-        s.put_zeros("acc", vec![spec("acc/a", &[4, 8]), spec("acc/b", &[16])])
-            .unwrap();
-        assert_eq!(s.group_bytes("acc"), (32 + 16) * 4);
+        s.put_zeros(
+            StateGroup::Method,
+            vec![spec("acc/a", &[4, 8]), spec("acc/b", &[16])],
+        )
+        .unwrap();
+        assert_eq!(s.group_bytes(StateGroup::Method), (32 + 16) * 4);
         assert_eq!(s.total_bytes(), 192);
-        assert!(s.contains("acc"));
+        assert!(s.contains(StateGroup::Method));
+        assert!(!s.contains(StateGroup::Opt));
     }
 
     #[test]
     fn collect_orders_groups() {
         let mut s = StateStore::new(None);
-        s.put_zeros("a", vec![spec("a/x", &[2])]).unwrap();
-        s.put_zeros("b", vec![spec("b/y", &[3])]).unwrap();
-        let vals = s.collect(&["b", "a"]).unwrap();
+        s.put_zeros(StateGroup::Params, vec![spec("params/x", &[2])])
+            .unwrap();
+        s.put_zeros(StateGroup::Opt, vec![spec("opt/y", &[3])]).unwrap();
+        let vals = s.collect(&[StateGroup::Opt, StateGroup::Params]).unwrap();
         assert_eq!(vals.len(), 2);
         assert_eq!(vals[0].element_count(), 3);
         assert_eq!(vals[1].element_count(), 2);
@@ -172,25 +215,68 @@ mod tests {
     #[test]
     fn missing_group_errors() {
         let s = StateStore::new(None);
-        assert!(s.get("nope").is_err());
-        assert!(s.collect(&["nope"]).is_err());
+        assert!(s.get(StateGroup::Method).is_err());
+        assert!(s.collect(&[StateGroup::Method]).is_err());
+        assert!(s.named(StateGroup::Method, "acc/w").is_err());
     }
 
     #[test]
-    fn replace_value_count_checked() {
+    fn named_lookup_and_replace() {
         let mut s = StateStore::new(None);
-        s.put_zeros("g", vec![spec("g/x", &[2]), spec("g/y", &[2])]).unwrap();
-        assert!(s.replace_values("g", vec![]).is_err());
+        s.put_zeros(
+            StateGroup::Opt,
+            vec![spec("opt/m/w", &[2]), spec("opt/v/w", &[2])],
+        )
+        .unwrap();
+        let v = crate::runtime::tensor_f32(&[2], &[1.5, 2.5]).unwrap();
+        s.set_named(StateGroup::Opt, "opt/v/w", v).unwrap();
+        assert_eq!(
+            s.named(StateGroup::Opt, "opt/v/w").unwrap().to_f32_vec().unwrap(),
+            vec![1.5, 2.5]
+        );
+        // the sibling is untouched
+        assert_eq!(
+            s.named(StateGroup::Opt, "opt/m/w").unwrap().to_f32_vec().unwrap(),
+            vec![0.0, 0.0]
+        );
+        // unknown names are loud and name what exists
+        let err = s.set_named(StateGroup::Opt, "opt/zz", crate::runtime::scalar_f32(0.0));
+        assert!(err.unwrap_err().contains("opt/m/w"));
+    }
+
+    #[test]
+    fn zero_resets_values() {
+        let mut s = StateStore::new(None);
+        s.put_zeros(StateGroup::Method, vec![spec("acc/w", &[2])]).unwrap();
+        let v = crate::runtime::tensor_f32(&[2], &[3.0, 4.0]).unwrap();
+        s.set_named(StateGroup::Method, "acc/w", v).unwrap();
+        s.zero(StateGroup::Method).unwrap();
+        assert_eq!(
+            s.named(StateGroup::Method, "acc/w").unwrap().to_f32_vec().unwrap(),
+            vec![0.0, 0.0]
+        );
     }
 
     #[test]
     fn ledger_sees_allocations() {
         let ledger = BufferLedger::new();
         let mut s = StateStore::new(Some(ledger.clone()));
-        s.put_zeros("p", vec![spec("p/w", &[100])]).unwrap();
+        s.put_zeros(StateGroup::Params, vec![spec("params/w", &[100])])
+            .unwrap();
         assert_eq!(ledger.current(), 400);
         // re-putting the same group frees the old bytes
-        s.put_zeros("p", vec![spec("p/w", &[100])]).unwrap();
+        s.put_zeros(StateGroup::Params, vec![spec("params/w", &[100])])
+            .unwrap();
         assert_eq!(ledger.current(), 400);
+    }
+
+    #[test]
+    fn snapshot_uses_group_names() {
+        let mut s = StateStore::new(None);
+        s.put_zeros(StateGroup::Opt, vec![spec("opt/m/w", &[2])]).unwrap();
+        let snap = s.snapshot().unwrap();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].0, "opt");
+        assert_eq!(snap[0].1[0].0.name, "opt/m/w");
     }
 }

@@ -1,11 +1,21 @@
-//! Backend-neutral tensor values — the host side of the flat ABI.
+//! Backend-neutral tensor values + the typed ABI routing layer.
 //!
 //! `Tensor` replaces `xla::Literal` everywhere above the backend boundary:
 //! the coordinator moves named `Tensor` groups between executables and
 //! never touches backend-specific buffers. Backends convert at their edge
 //! (the PJRT backend to `Literal`s, the native backend to `tensor::Matrix`).
+//!
+//! Every ABI tensor name classifies into exactly one [`Route`]: a state
+//! group ([`StateGroup`]), a batch input, a typed scalar ([`ScalarKey`]),
+//! or a step output ([`OutKind`]). [`StepIo`] assembles an executable's
+//! input list from those routes, and [`StepOutputs`] routes the result
+//! tuple back — by NAME, never by tuple position, so a catalog that
+//! reorders or grows its state groups cannot silently mis-wire a step.
 
-use super::manifest::TensorSpec;
+use std::collections::BTreeMap;
+
+use super::manifest::{ExecutableInfo, TensorSpec};
+use super::state::StateStore;
 
 /// A host tensor in one of the three dtypes the manifest ABI uses.
 #[derive(Clone, Debug, PartialEq)]
@@ -153,6 +163,323 @@ pub fn zeros_for(spec: &TensorSpec) -> Result<Tensor, String> {
     tensor_f32(&spec.shape, &vec![0.0; spec.numel()])
 }
 
+// ---------------------------------------------------------------------
+// typed ABI routing
+// ---------------------------------------------------------------------
+
+/// The four persistent state groups the trainer threads through
+/// executables. Checkpoints key their group snapshots on
+/// [`StateGroup::name`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StateGroup {
+    /// Model parameters (`params/...` and the frozen `base/...` weights).
+    Params,
+    /// Trainable adapter patches (`train/...`, LoRA).
+    Train,
+    /// Base-optimizer state (`opt/...`: Adam m/v, Adafactor vr/vc).
+    Opt,
+    /// Method-owned state (`acc/`, `mom/`, GaLore's `m/`, `proj/`, `v/`).
+    Method,
+}
+
+impl StateGroup {
+    pub const ALL: [StateGroup; 4] = [
+        StateGroup::Params,
+        StateGroup::Train,
+        StateGroup::Opt,
+        StateGroup::Method,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StateGroup::Params => "params",
+            StateGroup::Train => "train",
+            StateGroup::Opt => "opt",
+            StateGroup::Method => "method",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "params" => Ok(StateGroup::Params),
+            "train" => Ok(StateGroup::Train),
+            "opt" => Ok(StateGroup::Opt),
+            "method" => Ok(StateGroup::Method),
+            _ => Err(format!(
+                "unknown state group {s:?} (want params|train|opt|method)"
+            )),
+        }
+    }
+}
+
+/// Every scalar the manifest ABI passes into a step, typed. Adding a new
+/// scalar to the ABI means adding a variant here — unknown names fail at
+/// routing time with the executable that asked for them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ScalarKey {
+    Lr,
+    Step,
+    /// Algorithm-1 cycle seed (also the GaLore refresh seed).
+    Seed,
+    /// Algorithm-2 current-subspace seed.
+    SeedCur,
+    /// Algorithm-2 next-subspace seed.
+    SeedNext,
+    /// Algorithm-2 resample flag (1.0 on κ-interval boundaries).
+    Resample,
+    /// Accumulation length τ.
+    Tau,
+    /// GaLore projection-refresh flag.
+    Refresh,
+    /// Greedy-decode prompt length.
+    PromptLen,
+}
+
+impl ScalarKey {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScalarKey::Lr => "lr",
+            ScalarKey::Step => "step",
+            ScalarKey::Seed => "seed",
+            ScalarKey::SeedCur => "seed_cur",
+            ScalarKey::SeedNext => "seed_next",
+            ScalarKey::Resample => "resample",
+            ScalarKey::Tau => "tau",
+            ScalarKey::Refresh => "refresh",
+            ScalarKey::PromptLen => "prompt_len",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScalarKey> {
+        match s {
+            "lr" => Some(ScalarKey::Lr),
+            "step" => Some(ScalarKey::Step),
+            "seed" => Some(ScalarKey::Seed),
+            "seed_cur" => Some(ScalarKey::SeedCur),
+            "seed_next" => Some(ScalarKey::SeedNext),
+            "resample" => Some(ScalarKey::Resample),
+            "tau" => Some(ScalarKey::Tau),
+            "refresh" => Some(ScalarKey::Refresh),
+            "prompt_len" => Some(ScalarKey::PromptLen),
+            _ => None,
+        }
+    }
+}
+
+/// Result tensors a step yields besides state updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutKind {
+    Loss,
+    /// Greedy-decoded token grid.
+    Tokens,
+    /// ViT class predictions.
+    Preds,
+}
+
+/// Where one ABI tensor name routes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    State(StateGroup),
+    Batch,
+    Scalar(ScalarKey),
+    Out(OutKind),
+}
+
+impl Route {
+    /// Classify an ABI tensor name. Every name the catalogs emit resolves;
+    /// anything else is a loud error naming the offender.
+    pub fn of(name: &str) -> Result<Route, String> {
+        match name {
+            "loss" => return Ok(Route::Out(OutKind::Loss)),
+            "tokens" => return Ok(Route::Out(OutKind::Tokens)),
+            "preds" => return Ok(Route::Out(OutKind::Preds)),
+            _ => {}
+        }
+        // method-owned state prefixes used by both catalogs (flora.py /
+        // galore.py state_shapes): accumulator, momentum, GaLore moments +
+        // stored projection. Unknown slash-names are an ERROR, not Method —
+        // a typo'd group must fail at routing time, never train as a
+        // silently zero-initialized tensor.
+        const METHOD_PREFIXES: [&str; 5] = ["acc/", "mom/", "m/", "v/", "proj/"];
+        if name.starts_with("params/") || name.starts_with("base/") {
+            Ok(Route::State(StateGroup::Params))
+        } else if name.starts_with("train/") {
+            Ok(Route::State(StateGroup::Train))
+        } else if name.starts_with("opt/") {
+            Ok(Route::State(StateGroup::Opt))
+        } else if name.starts_with("batch/") {
+            Ok(Route::Batch)
+        } else if METHOD_PREFIXES.iter().any(|p| name.starts_with(p)) {
+            Ok(Route::State(StateGroup::Method))
+        } else if name.contains('/') {
+            Err(format!(
+                "unroutable ABI tensor name {name:?}: unknown state-group \
+                 prefix (known: params/, base/, train/, opt/, batch/, \
+                 {METHOD_PREFIXES:?})"
+            ))
+        } else {
+            ScalarKey::parse(name).map(Route::Scalar).ok_or_else(|| {
+                format!(
+                    "unroutable ABI tensor name {name:?}: not a state \
+                     group, batch input, output, or known scalar key"
+                )
+            })
+        }
+    }
+}
+
+/// Builder for one executable invocation: typed scalars + the batch map.
+/// State inputs are pulled from the [`StateStore`] by name at assembly
+/// time, in the executable's declared input order.
+#[derive(Default)]
+pub struct StepIo {
+    scalars: BTreeMap<ScalarKey, Tensor>,
+    batch: BTreeMap<String, Tensor>,
+}
+
+impl StepIo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn scalar(mut self, key: ScalarKey, value: Tensor) -> Self {
+        self.scalars.insert(key, value);
+        self
+    }
+
+    /// The (lr, step) pair every update-bearing step consumes.
+    pub fn lr_step(self, lr: f32, step: usize) -> Self {
+        self.scalar(ScalarKey::Lr, scalar_f32(lr))
+            .scalar(ScalarKey::Step, scalar_f32(step as f32))
+    }
+
+    pub fn seed(self, seed: u32) -> Self {
+        self.scalar(ScalarKey::Seed, scalar_u32(seed))
+    }
+
+    pub fn batch(mut self, batch: BTreeMap<String, Tensor>) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// True when the executable's ABI asks for this scalar.
+    pub fn wants(info: &ExecutableInfo, key: ScalarKey) -> bool {
+        info.inputs.iter().any(|t| t.name == key.name())
+    }
+
+    /// Assemble the input tensor list in manifest order, routing each
+    /// declared input by name: state groups from `state`, batch tensors
+    /// and scalars from this builder.
+    pub fn inputs_for(
+        &self,
+        info: &ExecutableInfo,
+        state: &StateStore,
+    ) -> Result<Vec<Tensor>, String> {
+        let ctx = &info.name;
+        let mut out = Vec::with_capacity(info.inputs.len());
+        for t in &info.inputs {
+            let route = Route::of(&t.name).map_err(|e| format!("{ctx}: {e}"))?;
+            let val = match route {
+                Route::State(g) => state
+                    .named(g, &t.name)
+                    .map_err(|e| format!("{ctx}: {e}"))?
+                    .clone(),
+                Route::Batch => self
+                    .batch
+                    .get(&t.name)
+                    .ok_or_else(|| format!("{ctx}: batch missing {}", t.name))?
+                    .clone(),
+                Route::Scalar(k) => self
+                    .scalars
+                    .get(&k)
+                    .ok_or_else(|| {
+                        format!("{ctx}: scalar {:?} not provided", k.name())
+                    })?
+                    .clone(),
+                Route::Out(_) => {
+                    return Err(format!(
+                        "{ctx}: output-only name {} declared as input",
+                        t.name
+                    ))
+                }
+            };
+            out.push(val);
+        }
+        Ok(out)
+    }
+}
+
+/// An executed step's outputs, addressable by ABI name.
+pub struct StepOutputs {
+    exe: String,
+    pairs: Vec<(TensorSpec, Tensor)>,
+}
+
+impl StepOutputs {
+    pub fn of(info: &ExecutableInfo, outs: Vec<Tensor>) -> Result<Self, String> {
+        if outs.len() != info.outputs.len() {
+            return Err(format!(
+                "{}: got {} outputs, manifest declares {}",
+                info.name,
+                outs.len(),
+                info.outputs.len()
+            ));
+        }
+        Ok(Self {
+            exe: info.name.clone(),
+            pairs: info.outputs.iter().cloned().zip(outs).collect(),
+        })
+    }
+
+    /// The output named `name`, or an error listing what IS available.
+    pub fn named(&self, name: &str) -> Result<&Tensor, String> {
+        self.pairs
+            .iter()
+            .find(|(spec, _)| spec.name == name)
+            .map(|(_, val)| val)
+            .ok_or_else(|| {
+                let have: Vec<&str> =
+                    self.pairs.iter().map(|(s, _)| s.name.as_str()).collect();
+                format!(
+                    "{}: no output named {name:?} (outputs: {have:?})",
+                    self.exe
+                )
+            })
+    }
+
+    /// The loss scalar, if this step produces one.
+    pub fn loss(&self) -> Result<Option<f32>, String> {
+        match self.pairs.iter().find(|(s, _)| s.name == "loss") {
+            Some((_, val)) => val
+                .first_f32()
+                .map(Some)
+                .map_err(|e| format!("{}: loss read: {e}", self.exe)),
+            None => Ok(None),
+        }
+    }
+
+    /// Route every state-group output back into the store by name.
+    /// Consumes the outputs so state tensors are MOVED, not cloned —
+    /// read `loss()`/`named()` before absorbing.
+    pub fn absorb_into(self, state: &mut StateStore) -> Result<(), String> {
+        for (spec, val) in self.pairs {
+            match Route::of(&spec.name).map_err(|e| format!("{}: {e}", self.exe))? {
+                Route::State(g) => state
+                    .set_named(g, &spec.name, val)
+                    .map_err(|e| format!("{}: {e}", self.exe))?,
+                Route::Out(_) => {} // read via named()/loss()
+                Route::Batch | Route::Scalar(_) => {
+                    return Err(format!(
+                        "{}: {} cannot appear in step outputs",
+                        self.exe, spec.name
+                    ))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,5 +535,180 @@ mod tests {
         assert_eq!(t.element_count(), 15);
         assert_eq!(t.byte_size(), 60);
         assert!(t.to_f32_vec().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn route_classifies_every_abi_name() {
+        assert_eq!(
+            Route::of("params/layer0/attn/wq").unwrap(),
+            Route::State(StateGroup::Params)
+        );
+        assert_eq!(
+            Route::of("base/embed/tok").unwrap(),
+            Route::State(StateGroup::Params)
+        );
+        assert_eq!(
+            Route::of("train/lora_A/l0").unwrap(),
+            Route::State(StateGroup::Train)
+        );
+        assert_eq!(
+            Route::of("opt/embed/tok/vr").unwrap(),
+            Route::State(StateGroup::Opt)
+        );
+        for method_name in ["acc/w", "mom/w", "proj/w", "m/w", "v/w"] {
+            assert_eq!(
+                Route::of(method_name).unwrap(),
+                Route::State(StateGroup::Method),
+                "{method_name}"
+            );
+        }
+        assert_eq!(Route::of("batch/tokens").unwrap(), Route::Batch);
+        assert_eq!(
+            Route::of("seed_cur").unwrap(),
+            Route::Scalar(ScalarKey::SeedCur)
+        );
+        assert_eq!(Route::of("lr").unwrap(), Route::Scalar(ScalarKey::Lr));
+        assert_eq!(Route::of("loss").unwrap(), Route::Out(OutKind::Loss));
+        assert_eq!(Route::of("tokens").unwrap(), Route::Out(OutKind::Tokens));
+        assert_eq!(Route::of("preds").unwrap(), Route::Out(OutKind::Preds));
+        let err = Route::of("warmup_frac").unwrap_err();
+        assert!(err.contains("warmup_frac"), "{err}");
+        // unknown slash-prefixes must fail loudly, never land in Method
+        let err = Route::of("grads/w").unwrap_err();
+        assert!(err.contains("grads/w"), "{err}");
+        assert!(Route::of("opts/m/w").is_err(), "typo'd prefix accepted");
+    }
+
+    #[test]
+    fn scalar_key_name_parse_roundtrip() {
+        for key in [
+            ScalarKey::Lr,
+            ScalarKey::Step,
+            ScalarKey::Seed,
+            ScalarKey::SeedCur,
+            ScalarKey::SeedNext,
+            ScalarKey::Resample,
+            ScalarKey::Tau,
+            ScalarKey::Refresh,
+            ScalarKey::PromptLen,
+        ] {
+            assert_eq!(ScalarKey::parse(key.name()), Some(key));
+        }
+        assert_eq!(ScalarKey::parse("nope"), None);
+    }
+
+    #[test]
+    fn state_group_name_parse_roundtrip() {
+        for g in StateGroup::ALL {
+            assert_eq!(StateGroup::parse(g.name()).unwrap(), g);
+        }
+        assert!(StateGroup::parse("grads").is_err());
+    }
+
+    fn exe_info(inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>) -> ExecutableInfo {
+        ExecutableInfo {
+            name: "test/exe".into(),
+            file: std::path::PathBuf::from("x"),
+            model: "test".into(),
+            inputs,
+            outputs,
+        }
+    }
+
+    fn fspec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: "float32".into(),
+        }
+    }
+
+    #[test]
+    fn step_io_assembles_in_manifest_order() {
+        let mut state = StateStore::new(None);
+        state
+            .put_zeros(StateGroup::Params, vec![fspec("params/w", &[2, 2])])
+            .unwrap();
+        state
+            .put_zeros(StateGroup::Opt, vec![fspec("opt/m/w", &[2, 2])])
+            .unwrap();
+        let info = exe_info(
+            vec![
+                fspec("params/w", &[2, 2]),
+                fspec("opt/m/w", &[2, 2]),
+                fspec("batch/tokens", &[1, 2]),
+                fspec("lr", &[]),
+                fspec("step", &[]),
+            ],
+            vec![],
+        );
+        let mut batch = BTreeMap::new();
+        batch.insert("batch/tokens".to_string(), scalar_f32(7.0));
+        let io = StepIo::new().lr_step(0.5, 3).batch(batch);
+        let inputs = io.inputs_for(&info, &state).unwrap();
+        assert_eq!(inputs.len(), 5);
+        assert_eq!(inputs[3].first_f32().unwrap(), 0.5);
+        assert_eq!(inputs[4].first_f32().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn step_io_missing_scalar_is_loud() {
+        let state = StateStore::new(None);
+        let info = exe_info(vec![fspec("lr", &[])], vec![]);
+        let err = StepIo::new().inputs_for(&info, &state).unwrap_err();
+        assert!(err.contains("lr"), "{err}");
+        assert!(err.contains("test/exe"), "{err}");
+    }
+
+    #[test]
+    fn step_io_wants_detects_scalars() {
+        let info = exe_info(vec![fspec("seed_cur", &[])], vec![]);
+        assert!(StepIo::wants(&info, ScalarKey::SeedCur));
+        assert!(!StepIo::wants(&info, ScalarKey::Refresh));
+    }
+
+    #[test]
+    fn step_outputs_route_by_name_not_position() {
+        let info = exe_info(
+            vec![],
+            vec![
+                fspec("loss", &[]),
+                fspec("params/w", &[2, 2]),
+                fspec("opt/m/w", &[2, 2]),
+            ],
+        );
+        let outs = StepOutputs::of(
+            &info,
+            vec![
+                scalar_f32(1.25),
+                tensor_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap(),
+                tensor_f32(&[2, 2], &[5.0, 6.0, 7.0, 8.0]).unwrap(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(outs.loss().unwrap(), Some(1.25));
+        assert_eq!(
+            outs.named("opt/m/w").unwrap().to_f32_vec().unwrap(),
+            vec![5.0, 6.0, 7.0, 8.0]
+        );
+        let err = outs.named("preds").unwrap_err();
+        assert!(err.contains("preds") && err.contains("params/w"), "{err}");
+
+        let mut state = StateStore::new(None);
+        state
+            .put_zeros(StateGroup::Params, vec![fspec("params/w", &[2, 2])])
+            .unwrap();
+        state
+            .put_zeros(StateGroup::Opt, vec![fspec("opt/m/w", &[2, 2])])
+            .unwrap();
+        outs.absorb_into(&mut state).unwrap();
+        let w = state.named(StateGroup::Params, "params/w").unwrap();
+        assert_eq!(w.to_f32_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn step_outputs_arity_mismatch_rejected() {
+        let info = exe_info(vec![], vec![fspec("loss", &[])]);
+        assert!(StepOutputs::of(&info, vec![]).is_err());
     }
 }

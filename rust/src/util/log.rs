@@ -49,17 +49,25 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
 
 #[macro_export]
 macro_rules! debug {
-    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*))
+    };
 }
 #[macro_export]
 macro_rules! info {
-    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*))
+    };
 }
 #[macro_export]
 macro_rules! warn {
-    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*))
+    };
 }
 #[macro_export]
 macro_rules! error {
-    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, format_args!($($t)*))
+    };
 }

@@ -192,3 +192,166 @@ fn prop_json_roundtrips_generated_numbers() {
         assert!((got - x).abs() < 1e-6 * x.abs().max(1.0));
     }
 }
+
+// ---------------------------------------------------------------------
+// optimizer math (flora::opt) invariants
+// ---------------------------------------------------------------------
+
+use flora::opt::{Adafactor, Adam, BaseOptimizer, FloraCompressor, Sgd};
+
+fn randn_mat(seed: u64, n: usize, m: usize) -> Matrix {
+    let mut rng = Rng::new(seed);
+    Matrix::gaussian(n, m, 1.0, &mut rng)
+}
+
+#[test]
+fn prop_adam_bias_correction_makes_first_step_scale_invariant() {
+    // t=1: m̂ = g and v̂ = g², so Δw = -lr·g/(|g|+eps) ≈ -lr·sign(g)
+    // whatever the raw gradient magnitude — the signature of a correct
+    // bias correction (without it the first step would be ~√(1-β2)·lr).
+    let adam = Adam::new();
+    for &scale in &[1e-3f32, 1.0, 1e3] {
+        let mut w = Matrix::zeros(4, 6);
+        let g = Matrix::from_fn(4, 6, |i, j| {
+            scale * if (i + j) % 2 == 0 { 1.0 } else { -1.0 }
+        });
+        let mut st = adam.init_state(4, 6);
+        adam.update(&mut w, &g, &mut st, 0.01, 0.0).unwrap();
+        for (x, gg) in w.data.iter().zip(g.data.iter()) {
+            assert!(
+                (x.abs() - 0.01).abs() < 1e-4,
+                "scale {scale}: |Δ| = {} != lr", x.abs()
+            );
+            assert!(x * gg < 0.0, "scale {scale}: moved with the gradient");
+        }
+    }
+}
+
+#[test]
+fn prop_adam_constant_gradient_limit_is_sign_sgd() {
+    // with a constant gradient, m̂ → g and v̂ → g² as t grows, so the
+    // per-step displacement converges to exactly lr·sign(g)
+    let adam = Adam::new();
+    let g = Matrix::from_fn(3, 5, |i, j| if (i * 5 + j) % 3 == 0 { 0.25 } else { -2.0 });
+    let mut w = Matrix::zeros(3, 5);
+    let mut st = adam.init_state(3, 5);
+    for s in 0..99 {
+        adam.update(&mut w, &g, &mut st, 0.01, s as f32).unwrap();
+    }
+    let prev = w.clone();
+    adam.update(&mut w, &g, &mut st, 0.01, 99.0).unwrap();
+    for ((x, p), gg) in w.data.iter().zip(prev.data.iter()).zip(g.data.iter()) {
+        let delta = x - p;
+        assert!(
+            (delta.abs() - 0.01).abs() < 1e-4,
+            "late-step |Δ| = {} != lr", delta.abs()
+        );
+        assert!(delta * gg < 0.0);
+    }
+}
+
+#[test]
+fn prop_adafactor_factored_matches_full_on_rank1_gradients() {
+    // G = u vᵀ ⇒ G² factors exactly, so the factored second moment
+    // vr·vcᵀ/mean(vr) equals the full one and both variants take the
+    // SAME step (paper §3.1: Adafactor loses nothing on rank-1 updates).
+    let factored = Adafactor::new();
+    let full = Adafactor::unfactored();
+    for trial in 0..20u64 {
+        let (n, m) = (12, 9);
+        let u = randn_mat(100 + trial, n, 1);
+        let v = randn_mat(200 + trial, 1, m);
+        let g = Matrix::from_fn(n, m, |i, j| u.at(i, 0) * v.at(0, j));
+        let w0 = randn_mat(300 + trial, n, m);
+
+        let mut wf = w0.clone();
+        let mut sf = factored.init_state(n, m);
+        factored.update(&mut wf, &g, &mut sf, 0.1, 0.0).unwrap();
+
+        let mut wu = w0.clone();
+        let mut su = full.init_state(n, m);
+        full.update(&mut wu, &g, &mut su, 0.1, 0.0).unwrap();
+
+        assert!(
+            wf.allclose(&wu, 1e-4),
+            "trial {trial}: factored and full steps diverge"
+        );
+        // the reconstructed v̂ agrees with the full second moment too
+        let vhat = factored.second_moment(&sf).unwrap();
+        let vfull = full.second_moment(&su).unwrap();
+        assert!(vhat.allclose(&vfull, 1e-4), "trial {trial}: v̂ mismatch");
+    }
+}
+
+#[test]
+fn prop_adafactor_factored_only_approximates_higher_rank() {
+    // sanity check on the previous test's power: for a generic (full
+    // rank) gradient the factored estimate is NOT exact
+    let factored = Adafactor::new();
+    let full = Adafactor::unfactored();
+    let g = randn_mat(7, 12, 9);
+    let mut sf = factored.init_state(12, 9);
+    let mut su = full.init_state(12, 9);
+    let mut wf = Matrix::zeros(12, 9);
+    let mut wu = Matrix::zeros(12, 9);
+    factored.update(&mut wf, &g, &mut sf, 0.1, 0.0).unwrap();
+    full.update(&mut wu, &g, &mut su, 0.1, 0.0).unwrap();
+    let vhat = factored.second_moment(&sf).unwrap();
+    let vfull = full.second_moment(&su).unwrap();
+    assert!(!vhat.allclose(&vfull, 1e-4), "rank-1 approx exact on full-rank g?");
+}
+
+#[test]
+fn prop_flora_compressor_accumulation_is_sum_of_compressions() {
+    // Algorithm 1's τ-cycle: the compressor's running accumulator must be
+    // EXACTLY the sum of the per-micro compressions (linearity is what
+    // makes the shared-seed cycle equal one big-batch compression)
+    let comp = FloraCompressor::new(Sgd, 8);
+    let seed = 4242u64;
+    let (n, m) = (16, 48);
+    let mut acc = Matrix::zeros(n, 8);
+    let mut want = Matrix::zeros(n, 8);
+    let a = rp::projection(seed, 8, m);
+    for k in 0..6u64 {
+        let g = randn_mat(500 + k, n, m);
+        comp.accumulate(&mut acc, &g, seed);
+        want.add_scaled_inplace(&rp::compress(&g, &a), 1.0);
+    }
+    assert!(acc.allclose(&want, 1e-4));
+
+    // and the cycle-end update with an SGD base equals the manual
+    // decompress-mean-step
+    let mut w = randn_mat(9, n, m);
+    let mut manual = w.clone();
+    comp.apply_accumulated(&mut w, &acc, &mut Vec::new(), seed, 6.0, 0.2, 0.0)
+        .unwrap();
+    manual.add_scaled_inplace(&rp::decompress(&acc, &a).scale(1.0 / 6.0), -0.2);
+    assert!(w.allclose(&manual, 1e-5));
+}
+
+#[test]
+fn prop_flora_compressor_momentum_composes_with_any_base() {
+    // the same tick applied over different base optimizers must keep the
+    // SAME momentum state (the EMA lives upstream of the base optimizer)
+    let g = randn_mat(21, 16, 48);
+    let tick = flora::opt::SubspaceTick {
+        seed_cur: 5,
+        seed_next: 6,
+        resample: false,
+        transfer: true,
+    };
+    let run = |base: Box<dyn BaseOptimizer>| {
+        let comp = FloraCompressor::new(base, 8);
+        let mut w = randn_mat(22, 16, 48);
+        let mut mom = Matrix::zeros(16, 8);
+        let mut st = comp.base().init_state(16, 48);
+        comp.momentum_step(&mut w, &mut mom, &mut st, &g, tick, 0.1, 0.0)
+            .unwrap();
+        (w, mom)
+    };
+    let (w_sgd, mom_sgd) = run(Box::new(Sgd));
+    let (w_adam, mom_adam) = run(Box::new(Adam::new()));
+    assert!(mom_sgd.allclose(&mom_adam, 0.0), "EMA depends on the base?");
+    // but the parameter step differs (sgd scales with |g|, adam is ~lr)
+    assert!(!w_sgd.allclose(&w_adam, 1e-5));
+}
