@@ -5,7 +5,12 @@
 //! space with κ-interval subspace transfer. κ defaults to 50 locally
 //! (scaled from the paper's 1000 by the step-count ratio; Table 3 sweeps it).
 //!
-//! Run: cargo bench --bench table2_momentum [-- --quick | --steps N]
+//! `-- --backend native --model lora-tiny` runs the WHOLE grid — LoRA
+//! rows included — on the native transformer catalog, no XLA needed (the
+//! bigram lm-small default has no LoRA entries, so those rows report ERR
+//! under `--backend native` without the model override).
+//!
+//! Run: cargo bench --bench table2_momentum -- --backend native --model lora-tiny
 
 use flora::bench::paper::*;
 use flora::config::TaskKind;

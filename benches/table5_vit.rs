@@ -2,10 +2,12 @@
 //!
 //! Adam (full state) vs FLORA (compressed momentum + factored second
 //! moment): the paper reports matched accuracy with 24–32% less training
-//! memory. Accuracy is measured end-to-end on the vit-cifar artifacts; the
-//! memory column is the accountant at ViT-Base/Large scale.
+//! memory. Accuracy is measured end-to-end — on the native `vit-tiny`
+//! transformer (pure rust, no artifacts) with `-- --backend native`, or
+//! on the vit-cifar AOT artifacts otherwise; the memory column is the
+//! accountant at ViT-Base/Large scale either way.
 //!
-//! Run: cargo bench --bench table5_vit [-- --quick | --steps N]
+//! Run: cargo bench --bench table5_vit -- --backend native [--quick]
 
 use flora::bench::paper::{shared_runtime, BenchArgs};
 use flora::bench::Table;
@@ -31,17 +33,14 @@ fn main() {
         ("Base", MethodSpec::None, OptimizerKind::Adam, 0.003f32),
         ("Base", MethodSpec::Flora { rank: 16 }, OptimizerKind::Adafactor, 0.01),
     ];
-    if args.backend == "native" {
-        println!(
-            "table5 measures ViT runs, which need the AOT artifacts — the \
-             native catalog has no vit models; printing analytic rows only."
-        );
-    } else if args.require_artifacts() {
+    // measured rows: the native vit-tiny transformer needs no artifacts
+    let model = if args.backend == "native" { "vit-tiny" } else { "vit-cifar" };
+    if args.require_artifacts() {
         let rt = shared_runtime(args.spec()).expect("runtime");
         for (scale, method, opt, lr) in cases {
-            eprintln!("[table5] {} {}", scale, method.label());
+            eprintln!("[table5] {} {} on {}", scale, method.label(), model);
             let cfg = TrainConfig {
-                model: "vit-cifar".into(),
+                model: model.into(),
                 task: TaskKind::Vit,
                 method,
                 optimizer: opt,

@@ -189,8 +189,10 @@ pub fn render_analytic_only(
 
 /// Bench-binary arg parsing: `--quick` (fewer steps), `--steps N`,
 /// `--artifacts DIR`, `--backend native|xla`,
-/// `--optimizer sgd|adam|adafactor|adafactor_nofactor`. cargo bench
-/// passes `--bench`; ignore unknown flags.
+/// `--optimizer sgd|adam|adafactor|adafactor_nofactor`,
+/// `--model NAME` (e.g. `lora-tiny` to run a table on the native
+/// transformer instead of the bigram lm-small). cargo bench passes
+/// `--bench`; ignore unknown flags.
 pub struct BenchArgs {
     pub quick: bool,
     pub steps: Option<usize>,
@@ -200,6 +202,9 @@ pub struct BenchArgs {
     /// Base-optimizer override for every measured cell (tables default to
     /// the paper's Adafactor; both backends execute all of them).
     pub optimizer: Option<OptimizerKind>,
+    /// Model override for every measured cell (tables default to
+    /// lm-small; `lora-tiny` runs the native transformer catalog).
+    pub model: Option<String>,
 }
 
 impl BenchArgs {
@@ -211,6 +216,7 @@ impl BenchArgs {
             artifacts: "artifacts".into(),
             backend: "xla".into(),
             optimizer: None,
+            model: None,
         };
         let mut i = 0;
         while i < argv.len() {
@@ -222,6 +228,10 @@ impl BenchArgs {
                 }
                 "--artifacts" if i + 1 < argv.len() => {
                     out.artifacts = argv[i + 1].clone();
+                    i += 1;
+                }
+                "--model" if i + 1 < argv.len() => {
+                    out.model = Some(argv[i + 1].clone());
                     i += 1;
                 }
                 "--optimizer" if i + 1 < argv.len() => {
@@ -261,12 +271,15 @@ impl BenchArgs {
         }
     }
 
-    /// Apply the CLI overrides a bench honors per cell (currently the
-    /// `--optimizer` selector; the native backend executes every base
-    /// optimizer, so no per-backend remap is needed anymore).
+    /// Apply the CLI overrides a bench honors per cell: the `--optimizer`
+    /// selector and the `--model` override (the native backend executes
+    /// every base optimizer, so no per-backend remap is needed anymore).
     pub fn adjust(&self, cfg: &mut TrainConfig) {
         if let Some(opt) = self.optimizer {
             cfg.optimizer = opt;
+        }
+        if let Some(model) = &self.model {
+            cfg.model = model.clone();
         }
     }
 
@@ -342,6 +355,7 @@ mod tests {
             artifacts: "artifacts".into(),
             backend: "native".into(),
             optimizer: None,
+            model: None,
         };
         assert_eq!(args.spec(), "native");
         assert!(args.require_artifacts(), "native never needs artifacts");
@@ -349,10 +363,15 @@ mod tests {
         let mut cfg = base_config(TaskKind::Sum, 1, 1);
         args.adjust(&mut cfg);
         assert_eq!(cfg.optimizer, OptimizerKind::Adafactor);
-        // an explicit --optimizer flows into every cell
-        let args = BenchArgs { optimizer: Some(OptimizerKind::Adam), ..args };
+        // explicit --optimizer / --model flow into every cell
+        let args = BenchArgs {
+            optimizer: Some(OptimizerKind::Adam),
+            model: Some("lora-tiny".into()),
+            ..args
+        };
         args.adjust(&mut cfg);
         assert_eq!(cfg.optimizer, OptimizerKind::Adam);
+        assert_eq!(cfg.model, "lora-tiny");
     }
 
     #[test]

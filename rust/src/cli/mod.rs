@@ -107,10 +107,16 @@ COMMANDS:
                   --artifacts DIR [--exe NAME] [--backend native]
     help        show this message
 
-Backends: `--backend native` runs the generated pure-rust catalog (bigram
-LM; every base optimizer in plain/accumulation/momentum modes plus the
-GaLore baseline — no artifacts or XLA needed); the default `xla` backend
-loads AOT artifacts via PJRT and needs a build with `--features xla`.
+Switches: `--list-catalog` (with any command) prints the full native
+catalog inventory grouped by model family.
+
+Backends: `--backend native` runs the generated pure-rust catalog — the
+bigram LMs (lm-tiny/lm-small/lm-base) PLUS the native transformers:
+`lora-tiny` (causal LM; full-tune, LoRA-adapter and GaLore entries) and
+`vit-tiny` (ViT; `--model vit-tiny` implies `--task vit`) — every base
+optimizer in plain/accumulation/momentum modes, no artifacts or XLA
+needed. The default `xla` backend loads AOT artifacts via PJRT and needs
+a build with `--features xla`.
 
 Benches reproducing each paper table/figure: `cargo bench --bench <name>`
 (figure1_pilot, table1_accumulation, table2_momentum, table3_kappa,

@@ -40,6 +40,17 @@ impl TaskKind {
             TaskKind::Vit => "vit",
         }
     }
+
+    /// The task a model name implies when the user gives none: `vit-*`
+    /// models only ever train on the image task (the launcher applies
+    /// this so `--model vit-tiny` works without an explicit `--task vit`).
+    pub fn implied_by_model(model: &str) -> Option<TaskKind> {
+        if model.starts_with("vit") {
+            Some(TaskKind::Vit)
+        } else {
+            None
+        }
+    }
 }
 
 /// Core training hyper-parameters (shared by every experiment).
@@ -221,6 +232,14 @@ mod tests {
     #[test]
     fn zero_tau_rejected() {
         assert!(ExperimentConfig::from_toml_str("train.tau = 0").is_err());
+    }
+
+    #[test]
+    fn vit_models_imply_the_vit_task() {
+        assert_eq!(TaskKind::implied_by_model("vit-tiny"), Some(TaskKind::Vit));
+        assert_eq!(TaskKind::implied_by_model("vit-cifar"), Some(TaskKind::Vit));
+        assert_eq!(TaskKind::implied_by_model("lora-tiny"), None);
+        assert_eq!(TaskKind::implied_by_model("lm-small"), None);
     }
 
     #[test]

@@ -98,6 +98,56 @@ impl ImageTask {
     }
 }
 
+/// Patchify a flat HWC image batch for the ViT: `[b, side, side, c]`
+/// (row-major, channel fastest — the layout [`ImageTask::fill_flat`]
+/// produces and `vit._patchify` expects) into a `[b * n_patches,
+/// patch_size² · c]` matrix whose row `b·n_patches + p` is patch `p` of
+/// image `b`, scanning patches row-major and pixels within a patch
+/// row-major with channels interleaved.
+pub fn patchify_hwc(
+    images: &[f32],
+    batch: usize,
+    side: usize,
+    patch: usize,
+    channels: usize,
+) -> Result<Matrix, String> {
+    if patch == 0 || side % patch != 0 {
+        return Err(format!("patch size {patch} does not divide image side {side}"));
+    }
+    if images.len() != batch * side * side * channels {
+        return Err(format!(
+            "image batch length {} != {batch}x{side}x{side}x{channels}",
+            images.len()
+        ));
+    }
+    let per_side = side / patch;
+    let n_patches = per_side * per_side;
+    let patch_dim = patch * patch * channels;
+    let mut out = Matrix::zeros(batch * n_patches, patch_dim);
+    for b in 0..batch {
+        let img = &images[b * side * side * channels..(b + 1) * side * side * channels];
+        for pi in 0..per_side {
+            for pj in 0..per_side {
+                let row = b * n_patches + pi * per_side + pj;
+                let orow = &mut out.data[row * patch_dim..(row + 1) * patch_dim];
+                let mut o = 0usize;
+                for ii in 0..patch {
+                    for jj in 0..patch {
+                        let y = pi * patch + ii;
+                        let x = pj * patch + jj;
+                        let src = (y * side + x) * channels;
+                        for c in 0..channels {
+                            orow[o] = img[src + c];
+                            o += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +199,25 @@ mod tests {
                 / 64.0;
             assert!(d < 0.01, "sample {b} too far from its template: {d}");
         }
+    }
+
+    #[test]
+    fn patchify_roundtrips_pixels() {
+        // 4x4 image, 2x2 patches, 1 channel: values = linear index
+        let side = 4usize;
+        let images: Vec<f32> = (0..side * side).map(|i| i as f32).collect();
+        let m = patchify_hwc(&images, 1, side, 2, 1).unwrap();
+        assert_eq!(m.shape(), (4, 4));
+        // patch (0,0) = pixels (0,0),(0,1),(1,0),(1,1) = 0,1,4,5
+        assert_eq!(m.row(0).to_vec(), vec![0.0, 1.0, 4.0, 5.0]);
+        // patch (1,1) = pixels (2,2),(2,3),(3,2),(3,3) = 10,11,14,15
+        assert_eq!(m.row(3).to_vec(), vec![10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn patchify_validates_shapes() {
+        assert!(patchify_hwc(&[0.0; 16], 1, 4, 3, 1).is_err());
+        assert!(patchify_hwc(&[0.0; 15], 1, 4, 2, 1).is_err());
     }
 
     #[test]

@@ -19,9 +19,11 @@
 //! Python never runs at inference/training time. The coordinator drives
 //! executables through the `runtime::Backend` boundary over
 //! backend-neutral tensors: the default build ships the pure-rust
-//! **native** backend (generated bigram-LM catalog — builds and tests on
-//! a bare machine, zero dependencies), and the original PJRT path that
-//! loads the AOT artifacts lives behind the `xla` cargo feature.
+//! **native** backend (generated catalog covering the bigram LMs AND the
+//! [`model`] transformers — a causal LM with LoRA adapters plus a ViT,
+//! both with manual backward passes — so it builds and tests on a bare
+//! machine, zero dependencies), and the original PJRT path that loads the
+//! AOT artifacts lives behind the `xla` cargo feature.
 //!
 //! See README.md for the backend matrix, DESIGN.md for the system
 //! inventory and EXPERIMENTS.md for the paper-vs-measured record.
@@ -33,6 +35,7 @@ pub mod coordinator;
 pub mod data;
 pub mod memory;
 pub mod metrics;
+pub mod model;
 pub mod opt;
 pub mod pilot;
 pub mod rp;

@@ -20,17 +20,21 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let result = match args.command.as_str() {
-        "train" => cmd_train(&args),
-        "eval" => cmd_eval(&args),
-        "pilot" => cmd_pilot(&args),
-        "memory" => cmd_memory(&args),
-        "inspect" => cmd_inspect(&args),
-        "help" | "" => {
-            println!("{USAGE}");
-            Ok(())
+    let result = if args.has("list-catalog") {
+        cmd_list_catalog()
+    } else {
+        match args.command.as_str() {
+            "train" => cmd_train(&args),
+            "eval" => cmd_eval(&args),
+            "pilot" => cmd_pilot(&args),
+            "memory" => cmd_memory(&args),
+            "inspect" => cmd_inspect(&args),
+            "help" | "" => {
+                println!("{USAGE}");
+                Ok(())
+            }
+            other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
         }
-        other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
     };
     if let Err(e) = result {
         eprintln!("error: {e}");
@@ -48,6 +52,9 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     }
     if let Some(t) = args.flag("task") {
         cfg.train.task = TaskKind::parse(t)?;
+    } else if let Some(t) = TaskKind::implied_by_model(&cfg.train.model) {
+        // `--model vit-tiny` without an explicit task trains on images
+        cfg.train.task = t;
     }
     if let Some(m) = args.flag("method") {
         let rank = args.usize_flag("rank", cfg.train.method.rank().unwrap_or(16))?;
@@ -204,6 +211,31 @@ fn cmd_memory(args: &Args) -> Result<(), String> {
         ]);
     }
     table.print();
+    Ok(())
+}
+
+/// `flora --list-catalog` (with any or no command): the full native
+/// catalog inventory, grouped by model family.
+fn cmd_list_catalog() -> Result<(), String> {
+    let manifest = flora::runtime::native_manifest();
+    println!(
+        "native catalog: {} models, {} executables",
+        manifest.models.len(),
+        manifest.executables.len()
+    );
+    for (model, info) in &manifest.models {
+        // group on the manifest's model field, not the name prefix
+        let entries: Vec<&String> = manifest
+            .executables
+            .values()
+            .filter(|e| &e.model == model)
+            .map(|e| &e.name)
+            .collect();
+        println!("\n{model} (kind {}, {} entries):", info.kind, entries.len());
+        for e in entries {
+            println!("  {e}");
+        }
+    }
     Ok(())
 }
 

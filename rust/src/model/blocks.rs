@@ -1,0 +1,394 @@
+//! The shared pre-norm encoder stack: multi-head attention + GELU MLP
+//! blocks with hand-derived backward passes.
+//!
+//! Both model families drive this engine — the LM with a causal mask, the
+//! ViT bidirectionally — on activations laid out as `[batch*seq, d_model]`
+//! row-major matrices (row `b*s + i` is position `i` of batch element
+//! `b`). One block computes, exactly like `layers.py`:
+//!
+//! ```text
+//! x = x + Wo·attn(rms_norm(x, ln1) · {Wq,Wk,Wv})     (pre-norm attention)
+//! x = x + gelu(rms_norm(x, ln2) · W1) · W2           (pre-norm GELU MLP)
+//! ```
+//!
+//! The backward pass replays the chain in reverse from cached forward
+//! intermediates; the elementwise/softmax/norm VJPs come from
+//! `tensor::ops` where each is finite-difference-checked, and the whole
+//! stack is FD-checked again end-to-end in `model::transformer` tests.
+
+use super::{add_grad, pget, ParamSet};
+use crate::tensor::{
+    gelu, gelu_grad, rms_norm_rows, rms_norm_rows_vjp, softmax_rows,
+    softmax_rows_vjp, Matrix,
+};
+
+/// Score assigned to causally-masked attention targets before the
+/// softmax; exp(-1e30 - max) underflows to exactly 0 probability.
+const MASKED: f32 = -1e30;
+
+/// Dimensions of the encoder stack shared by the LM and ViT configs.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockDims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl BlockDims {
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// (name, shape) of one block's parameters, `layer{l}/...`-prefixed.
+    pub fn layer_shapes(&self, l: usize) -> Vec<(String, [usize; 2])> {
+        let d = self.d_model;
+        let f = self.d_ff;
+        [
+            ("attn/wq", [d, d]),
+            ("attn/wk", [d, d]),
+            ("attn/wv", [d, d]),
+            ("attn/wo", [d, d]),
+            ("ffn/w1", [d, f]),
+            ("ffn/w2", [f, d]),
+            ("ln1/scale", [1, d]),
+            ("ln2/scale", [1, d]),
+        ]
+        .into_iter()
+        .map(|(suffix, sh)| (format!("layer{l}/{suffix}"), sh))
+        .collect()
+    }
+}
+
+/// Forward intermediates of one block, kept for the backward pass.
+pub(crate) struct LayerCache {
+    x_in: Matrix,
+    n1: Matrix,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    /// attention probabilities per (batch, head), each `[s, s]`
+    probs: Vec<Matrix>,
+    ctx: Matrix,
+    x_mid: Matrix,
+    n2: Matrix,
+    h1: Matrix,
+}
+
+/// Run the whole block stack. Returns the output activations (input to
+/// the caller's final norm) and the per-layer caches for
+/// [`stack_backward`].
+pub(crate) fn stack_forward(
+    params: &ParamSet,
+    dims: BlockDims,
+    x0: Matrix,
+    b: usize,
+    s: usize,
+    causal: bool,
+) -> (Matrix, Vec<LayerCache>) {
+    debug_assert_eq!(x0.shape(), (b * s, dims.d_model));
+    let mut x = x0;
+    let mut caches = Vec::with_capacity(dims.n_layers);
+    for l in 0..dims.n_layers {
+        let p = |suffix: &str| format!("layer{l}/{suffix}");
+        let n1 = rms_norm_rows(&x, pget(params, &p("ln1/scale")));
+        let q = n1.matmul(pget(params, &p("attn/wq")));
+        let k = n1.matmul(pget(params, &p("attn/wk")));
+        let v = n1.matmul(pget(params, &p("attn/wv")));
+        let (ctx, probs) = attention_forward(&q, &k, &v, dims, b, s, causal);
+        let attn_out = ctx.matmul(pget(params, &p("attn/wo")));
+        let x_mid = &x + &attn_out;
+        let n2 = rms_norm_rows(&x_mid, pget(params, &p("ln2/scale")));
+        let h1 = n2.matmul(pget(params, &p("ffn/w1")));
+        let ff = gelu(&h1).matmul(pget(params, &p("ffn/w2")));
+        let x_out = &x_mid + &ff;
+        caches.push(LayerCache { x_in: x, n1, q, k, v, probs, ctx, x_mid, n2, h1 });
+        x = x_out;
+    }
+    (x, caches)
+}
+
+/// Backpropagate `dx` (cotangent of the stack output) through every
+/// block, accumulating parameter gradients into `grads` and returning the
+/// cotangent of the stack input `x0`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stack_backward(
+    params: &ParamSet,
+    dims: BlockDims,
+    caches: Vec<LayerCache>,
+    mut dx: Matrix,
+    b: usize,
+    s: usize,
+    // the mask needs no replay: it lives in the cached probabilities
+    _causal: bool,
+    grads: &mut ParamSet,
+) -> Matrix {
+    for (l, cache) in caches.into_iter().enumerate().rev() {
+        let p = |suffix: &str| format!("layer{l}/{suffix}");
+        // MLP branch: x_out = x_mid + gelu(n2 W1) W2, dff = dx
+        let a = gelu(&cache.h1);
+        add_grad(grads, &p("ffn/w2"), a.matmul_tn(&dx));
+        let da = dx.matmul_nt(pget(params, &p("ffn/w2")));
+        let dh1 = da.hadamard(&gelu_grad(&cache.h1));
+        add_grad(grads, &p("ffn/w1"), cache.n2.matmul_tn(&dh1));
+        let dn2 = dh1.matmul_nt(pget(params, &p("ffn/w1")));
+        let (dx_mid_norm, dln2) =
+            rms_norm_rows_vjp(&cache.x_mid, pget(params, &p("ln2/scale")), &dn2);
+        add_grad(grads, &p("ln2/scale"), dln2);
+        // x_mid feeds both the residual and the norm path
+        let mut dx_mid = &dx + &dx_mid_norm;
+
+        // attention branch: d attn_out = dx_mid (residual of x_mid)
+        add_grad(grads, &p("attn/wo"), cache.ctx.matmul_tn(&dx_mid));
+        let dctx = dx_mid.matmul_nt(pget(params, &p("attn/wo")));
+        let (dq, dk, dv) = attention_backward(&cache, &dctx, dims, b, s);
+        add_grad(grads, &p("attn/wq"), cache.n1.matmul_tn(&dq));
+        add_grad(grads, &p("attn/wk"), cache.n1.matmul_tn(&dk));
+        add_grad(grads, &p("attn/wv"), cache.n1.matmul_tn(&dv));
+        let mut dn1 = dq.matmul_nt(pget(params, &p("attn/wq")));
+        dn1.add_scaled_inplace(&dk.matmul_nt(pget(params, &p("attn/wk"))), 1.0);
+        dn1.add_scaled_inplace(&dv.matmul_nt(pget(params, &p("attn/wv"))), 1.0);
+        let (dx_in_norm, dln1) =
+            rms_norm_rows_vjp(&cache.x_in, pget(params, &p("ln1/scale")), &dn1);
+        add_grad(grads, &p("ln1/scale"), dln1);
+        dx_mid.add_scaled_inplace(&dx_in_norm, 1.0);
+        dx = dx_mid;
+    }
+    dx
+}
+
+/// Multi-head scaled-dot-product attention on `[b*s, d]` activations.
+/// Returns the context (pre-`Wo`) and the per-(batch, head) probability
+/// matrices the backward pass needs.
+fn attention_forward(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    dims: BlockDims,
+    b: usize,
+    s: usize,
+    causal: bool,
+) -> (Matrix, Vec<Matrix>) {
+    let d = dims.d_model;
+    let h = dims.n_heads;
+    let dh = dims.head_dim();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = Matrix::zeros(b * s, d);
+    let mut probs_all = Vec::with_capacity(b * h);
+    for bi in 0..b {
+        for hi in 0..h {
+            let off = hi * dh;
+            let mut scores = Matrix::zeros(s, s);
+            for i in 0..s {
+                let qrow = q.row(bi * s + i);
+                for j in 0..s {
+                    if causal && j > i {
+                        *scores.at_mut(i, j) = MASKED;
+                        continue;
+                    }
+                    let krow = k.row(bi * s + j);
+                    let mut acc = 0.0f32;
+                    for t in 0..dh {
+                        acc += qrow[off + t] * krow[off + t];
+                    }
+                    *scores.at_mut(i, j) = acc * scale;
+                }
+            }
+            let probs = softmax_rows(&scores);
+            for i in 0..s {
+                let prow = probs.row(i);
+                for j in 0..s {
+                    let pij = prow[j];
+                    let vrow = v.row(bi * s + j);
+                    for t in 0..dh {
+                        *ctx.at_mut(bi * s + i, off + t) += pij * vrow[off + t];
+                    }
+                }
+            }
+            probs_all.push(probs);
+        }
+    }
+    (ctx, probs_all)
+}
+
+/// Backward of [`attention_forward`]: cotangents of q, k, v given the
+/// context cotangent. Masked targets carry zero probability, so their
+/// score gradients vanish without special-casing.
+fn attention_backward(
+    cache: &LayerCache,
+    dctx: &Matrix,
+    dims: BlockDims,
+    b: usize,
+    s: usize,
+) -> (Matrix, Matrix, Matrix) {
+    let d = dims.d_model;
+    let h = dims.n_heads;
+    let dh = dims.head_dim();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = Matrix::zeros(b * s, d);
+    let mut dk = Matrix::zeros(b * s, d);
+    let mut dv = Matrix::zeros(b * s, d);
+    for bi in 0..b {
+        for hi in 0..h {
+            let off = hi * dh;
+            let probs = &cache.probs[bi * h + hi];
+            // dprobs[i][j] = <dctx[(b,i)], v[(b,j)]> over this head's slice
+            let mut dprobs = Matrix::zeros(s, s);
+            for i in 0..s {
+                let dcrow = dctx.row(bi * s + i);
+                let prow = probs.row(i);
+                for j in 0..s {
+                    let vrow = cache.v.row(bi * s + j);
+                    let mut acc = 0.0f32;
+                    for t in 0..dh {
+                        acc += dcrow[off + t] * vrow[off + t];
+                    }
+                    *dprobs.at_mut(i, j) = acc;
+                }
+                // dv[(b,j)] += probs[i][j] * dctx[(b,i)]
+                for j in 0..s {
+                    let pij = prow[j];
+                    for t in 0..dh {
+                        *dv.at_mut(bi * s + j, off + t) += pij * dcrow[off + t];
+                    }
+                }
+            }
+            let dscores = softmax_rows_vjp(probs, &dprobs);
+            for i in 0..s {
+                let dsrow = dscores.row(i);
+                for j in 0..s {
+                    let g = dsrow[j] * scale;
+                    let krow = cache.k.row(bi * s + j);
+                    let qrow = cache.q.row(bi * s + i);
+                    for t in 0..dh {
+                        *dq.at_mut(bi * s + i, off + t) += g * krow[off + t];
+                        *dk.at_mut(bi * s + j, off + t) += g * qrow[off + t];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dims() -> BlockDims {
+        BlockDims { d_model: 8, n_layers: 2, n_heads: 2, d_ff: 16 }
+    }
+
+    fn toy_params(dims: BlockDims, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed);
+        let mut params = ParamSet::new();
+        for l in 0..dims.n_layers {
+            for (name, sh) in dims.layer_shapes(l) {
+                let m = if name.ends_with("/scale") {
+                    Matrix::from_fn(sh[0], sh[1], |_, _| 1.0)
+                } else {
+                    Matrix::gaussian(sh[0], sh[1], 1.0 / (sh[0] as f32).sqrt(), &mut rng)
+                };
+                params.insert(name, m);
+            }
+        }
+        params
+    }
+
+    #[test]
+    fn causal_mask_blocks_future_positions() {
+        // token t's output must not depend on tokens after t
+        let dims = dims();
+        let params = toy_params(dims, 0);
+        let (b, s) = (1usize, 4usize);
+        let mut rng = Rng::new(1);
+        let x0 = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        let (y, _) = stack_forward(&params, dims, x0.clone(), b, s, true);
+        let mut x2 = x0.clone();
+        for j in 0..dims.d_model {
+            *x2.at_mut(s - 1, j) += 1.0; // perturb the LAST position only
+        }
+        let (y2, _) = stack_forward(&params, dims, x2, b, s, true);
+        for i in 0..s - 1 {
+            for j in 0..dims.d_model {
+                assert_eq!(y.at(i, j), y2.at(i, j), "position {i} leaked");
+            }
+        }
+        // ...while bidirectional attention propagates it everywhere
+        let mut x3 = x0.clone();
+        for j in 0..dims.d_model {
+            *x3.at_mut(s - 1, j) += 1.0;
+        }
+        let (yb, _) = stack_forward(&params, dims, x0, b, s, false);
+        let (yb2, _) = stack_forward(&params, dims, x3, b, s, false);
+        assert!(!yb.allclose(&yb2, 1e-6));
+    }
+
+    #[test]
+    fn stack_backward_matches_directional_finite_difference() {
+        // f(params, x0) = <stack(x0), c>; check d/deps f(theta + eps*u)
+        // against <grads, u> for a random direction u over ALL parameters
+        // and the input.
+        let dims = dims();
+        let params = toy_params(dims, 2);
+        let (b, s) = (2usize, 3usize);
+        let mut rng = Rng::new(3);
+        let x0 = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        let c = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        let f = |params: &ParamSet, x0: &Matrix| -> f32 {
+            let (y, _) = stack_forward(params, dims, x0.clone(), b, s, true);
+            y.data.iter().zip(c.data.iter()).map(|(a, b)| a * b).sum()
+        };
+        let (_, caches) = stack_forward(&params, dims, x0.clone(), b, s, true);
+        let mut grads = ParamSet::new();
+        let dx0 =
+            stack_backward(&params, dims, caches, c.clone(), b, s, true, &mut grads);
+
+        // random direction over every parameter + the input
+        let mut dir_rng = Rng::new(4);
+        let u: ParamSet = params
+            .iter()
+            .map(|(k, m)| {
+                (k.clone(), Matrix::gaussian(m.rows, m.cols, 1.0, &mut dir_rng))
+            })
+            .collect();
+        let ux = Matrix::gaussian(x0.rows, x0.cols, 1.0, &mut dir_rng);
+        let eps = 1e-3f32;
+        let shift = |sign: f32| -> (ParamSet, Matrix) {
+            let p2: ParamSet = params
+                .iter()
+                .map(|(k, m)| {
+                    let mut m2 = m.clone();
+                    m2.add_scaled_inplace(&u[k], sign * eps);
+                    (k.clone(), m2)
+                })
+                .collect();
+            let mut x2 = x0.clone();
+            x2.add_scaled_inplace(&ux, sign * eps);
+            (p2, x2)
+        };
+        let (pp, xp) = shift(1.0);
+        let (pm, xm) = shift(-1.0);
+        let fd = (f(&pp, &xp) - f(&pm, &xm)) / (2.0 * eps);
+        let mut analytic: f32 = dx0
+            .data
+            .iter()
+            .zip(ux.data.iter())
+            .map(|(a, b)| a * b)
+            .sum();
+        for (k, g) in &grads {
+            analytic += g
+                .data
+                .iter()
+                .zip(u[k].data.iter())
+                .map(|(a, b)| a * b)
+                .sum::<f32>();
+        }
+        assert!(
+            (fd - analytic).abs() < 2e-2 * (1.0 + fd.abs().max(analytic.abs())),
+            "fd={fd} analytic={analytic}"
+        );
+    }
+}

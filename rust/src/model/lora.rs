@@ -1,0 +1,206 @@
+//! LoRA parameterization of a base model (Hu et al., 2022), as the paper
+//! runs it in §3: every projectable weight `W ∈ R^{n×m}` gets trainable
+//! `B ∈ R^{n×r}` (zero-init) and `A ∈ R^{r×m}` (Gaussian-init); the
+//! forward uses `W + (α/r)·B·A` and only {A, B} plus the naively-handled
+//! vectors/embeddings receive gradients and optimizer state. Mirrors
+//! `python/compile/lora.py` (α defaults to r, so the scale is 1 — the
+//! setting the paper's Theorem 2.1 dynamics analysis assumes).
+
+use super::{is_projectable, pget, ParamSet};
+use crate::tensor::Matrix;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Bookkeeping for the LoRA parameterization of one base parameter set.
+pub struct LoraAdapter {
+    base_shapes: Vec<(String, [usize; 2])>,
+    pub rank: usize,
+}
+
+impl LoraAdapter {
+    pub fn new(base_shapes: Vec<(String, [usize; 2])>, rank: usize) -> Self {
+        assert!(rank > 0, "lora rank must be >= 1");
+        Self { base_shapes, rank }
+    }
+
+    fn projected(&self) -> impl Iterator<Item = &(String, [usize; 2])> {
+        self.base_shapes.iter().filter(|(n, _)| is_projectable(n))
+    }
+
+    /// Shapes of the trainable parameter set, sorted by name (the ABI
+    /// order of the `train/` state group).
+    pub fn trainable_shapes(&self) -> Vec<(String, [usize; 2])> {
+        let mut out = Vec::new();
+        for (name, sh) in &self.base_shapes {
+            if is_projectable(name) {
+                out.push((format!("lora_A/{name}"), [self.rank, sh[1]]));
+                out.push((format!("lora_B/{name}"), [sh[0], self.rank]));
+            } else {
+                out.push((name.clone(), *sh));
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Number of additional scalars LoRA introduces (patches on top of
+    /// the frozen model) — the accountant's Δ for LoRA.
+    pub fn extra_param_count(&self) -> usize {
+        self.projected()
+            .map(|(_, sh)| self.rank * (sh[0] + sh[1]))
+            .sum()
+    }
+
+    /// `B = 0`, `A ~ N(0, 1/r)`; passthrough parameters start at the base
+    /// value (they continue training from the checkpoint).
+    pub fn init_trainable(&self, base: &ParamSet, seed: u64) -> ParamSet {
+        let mut out = ParamSet::new();
+        let mut idx = 0u64;
+        for (name, sh) in &self.base_shapes {
+            if is_projectable(name) {
+                let mut rng = Rng::new(derive_seed(seed, idx));
+                idx += 1;
+                out.insert(
+                    format!("lora_B/{name}"),
+                    Matrix::zeros(sh[0], self.rank),
+                );
+                out.insert(
+                    format!("lora_A/{name}"),
+                    Matrix::gaussian(
+                        self.rank,
+                        sh[1],
+                        (1.0 / self.rank as f32).sqrt(),
+                        &mut rng,
+                    ),
+                );
+            } else {
+                out.insert(name.clone(), pget(base, name).clone());
+            }
+        }
+        out
+    }
+
+    /// Effective full parameter set: `W + B·A` on projected weights
+    /// (α = r ⇒ scale 1), trainable values on passthrough ones.
+    pub fn merge(&self, base: &ParamSet, train: &ParamSet) -> ParamSet {
+        let mut out = ParamSet::new();
+        for (name, _) in &self.base_shapes {
+            if is_projectable(name) {
+                let b = pget(train, &format!("lora_B/{name}"));
+                let a = pget(train, &format!("lora_A/{name}"));
+                let mut w = pget(base, name).clone();
+                w.add_scaled_inplace(&b.matmul(a), 1.0);
+                out.insert(name.clone(), w);
+            } else {
+                out.insert(name.clone(), pget(train, name).clone());
+            }
+        }
+        out
+    }
+
+    /// Map the merged-model gradients to trainable gradients:
+    /// `dB = dW·Aᵀ`, `dA = Bᵀ·dW`, passthrough gradients verbatim.
+    pub fn train_grads(&self, train: &ParamSet, dmerged: &ParamSet) -> ParamSet {
+        let mut out = ParamSet::new();
+        for (name, _) in &self.base_shapes {
+            let dw = pget(dmerged, name);
+            if is_projectable(name) {
+                let a = pget(train, &format!("lora_A/{name}"));
+                let b = pget(train, &format!("lora_B/{name}"));
+                out.insert(format!("lora_B/{name}"), dw.matmul_nt(a));
+                out.insert(format!("lora_A/{name}"), b.matmul_tn(dw));
+            } else {
+                out.insert(name.clone(), dw.clone());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TransformerConfig;
+
+    fn adapter(rank: usize) -> (TransformerConfig, LoraAdapter) {
+        let cfg = TransformerConfig::tiny();
+        let ad = LoraAdapter::new(cfg.param_shapes(), rank);
+        (cfg, ad)
+    }
+
+    #[test]
+    fn trainable_set_splits_projected_and_passthrough() {
+        let (cfg, ad) = adapter(4);
+        let shapes = ad.trainable_shapes();
+        // 1 layer: 6 projectable matrices -> 12 lora halves; 5 passthrough
+        let lora_n = shapes.iter().filter(|(n, _)| n.starts_with("lora_")).count();
+        assert_eq!(lora_n, 12);
+        assert_eq!(shapes.len(), 12 + 5);
+        let a = shapes
+            .iter()
+            .find(|(n, _)| n == "lora_A/layer0/ffn/w1")
+            .unwrap();
+        assert_eq!(a.1, [4, cfg.dims.d_ff]);
+        let b = shapes
+            .iter()
+            .find(|(n, _)| n == "lora_B/layer0/ffn/w1")
+            .unwrap();
+        assert_eq!(b.1, [cfg.dims.d_model, 4]);
+        // sorted
+        for w in shapes.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn init_merge_is_identity_at_b_zero() {
+        // B = 0 at init, so the merged model equals the base exactly
+        let (cfg, ad) = adapter(4);
+        let base = cfg.init(0);
+        let train = ad.init_trainable(&base, 1);
+        let merged = ad.merge(&base, &train);
+        for (name, w) in &base {
+            assert!(merged[name].allclose(w, 0.0), "{name}");
+        }
+    }
+
+    #[test]
+    fn train_grads_match_chain_rule() {
+        let (cfg, ad) = adapter(2);
+        let base = cfg.init(2);
+        let mut train = ad.init_trainable(&base, 3);
+        // make B nonzero so dA has signal
+        let bname = "lora_B/layer0/attn/wq";
+        let b0 = train[bname].clone();
+        train.insert(
+            bname.to_string(),
+            Matrix::from_fn(b0.rows, b0.cols, |i, j| 0.1 * (i + j) as f32),
+        );
+        // fake merged gradient: ones on wq only
+        let mut dmerged = ParamSet::new();
+        for (name, sh) in cfg.param_shapes() {
+            let g = if name == "layer0/attn/wq" {
+                Matrix::from_fn(sh[0], sh[1], |_, _| 1.0)
+            } else {
+                Matrix::zeros(sh[0], sh[1])
+            };
+            dmerged.insert(name, g);
+        }
+        let tg = ad.train_grads(&train, &dmerged);
+        let a = &train["lora_A/layer0/attn/wq"];
+        let b = &train[bname];
+        let dw = &dmerged["layer0/attn/wq"];
+        assert!(tg[bname].allclose(&dw.matmul_nt(a), 1e-6));
+        assert!(tg["lora_A/layer0/attn/wq"].allclose(&b.matmul_tn(dw), 1e-6));
+        // passthrough gradients flow verbatim
+        assert!(tg["embed/tok"].allclose(&dmerged["embed/tok"], 0.0));
+    }
+
+    #[test]
+    fn extra_params_scale_with_rank() {
+        let (_, ad4) = adapter(4);
+        let (_, ad8) = adapter(8);
+        assert_eq!(ad8.extra_param_count(), 2 * ad4.extra_param_count());
+        // 1 layer, d=32, f=64: 4x(32+32) + (32+64) + (64+32) = 448 per rank
+        assert_eq!(ad4.extra_param_count(), 4 * 448);
+    }
+}

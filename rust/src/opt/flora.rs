@@ -37,6 +37,27 @@ pub struct SubspaceTick {
 
 /// Algorithm-1/-2 state machine over one parameter matrix, composing a
 /// [`BaseOptimizer`] with the `rp` projection algebra.
+///
+/// # Example: one accumulate→apply cycle (Algorithm 1)
+///
+/// ```
+/// use flora::opt::{BaseOptimizer, FloraCompressor, Sgd};
+/// use flora::tensor::Matrix;
+///
+/// let comp = FloraCompressor::new(Sgd, 4);
+/// let mut w = Matrix::zeros(8, 16);
+/// let mut acc = Matrix::zeros(8, 4); // compressed accumulator [n, r]
+/// let mut opt_state = comp.base().init_state(8, 16);
+/// let g = Matrix::from_fn(8, 16, |i, j| ((i + j) % 3) as f32 * 0.1);
+///
+/// let seed = comp.param_seed(7, 0); // cycle seed 7, parameter index 0
+/// comp.accumulate(&mut acc, &g, seed); // micro step: C += G Aᵀ
+/// comp.accumulate(&mut acc, &g, seed); // same cycle seed for every micro
+/// // cycle end: decompress the mean of τ=2 micros, base-optimizer step
+/// comp.apply_accumulated(&mut w, &acc, &mut opt_state, seed, 2.0, 0.1, 0.0)
+///     .unwrap();
+/// assert!(w.frobenius_norm() > 0.0);
+/// ```
 #[derive(Clone, Debug)]
 pub struct FloraCompressor<O> {
     base: O,

@@ -8,21 +8,30 @@
 //! one trait impl plus one [`OptimizerKind`] variant; the catalog then
 //! grows its `*_{optimizer}` step names automatically.
 //!
-//! The native model is a seeded BIGRAM language model: the parameters are a
-//! single `[vocab, vocab]` next-token logit table trained with masked
-//! softmax cross-entropy. Deliberately the smallest model with a 2-D
-//! gradient, because FLORA's subject is the *gradient pipeline*: G ∈
-//! R^{v×v} flows through exactly the same compress/accumulate/decompress/
-//! transfer algebra as the transformer gradients on the AOT path, and the
-//! coordinator above cannot tell the difference — it sees the same
-//! manifest groups, scalars and executable names.
+//! The native catalog carries TWO model families:
+//!
+//!   * the seeded BIGRAM language models (`lm-tiny`/`lm-small`/`lm-base`):
+//!     a single `[vocab, vocab]` next-token logit table trained with
+//!     masked softmax cross-entropy — deliberately the smallest model with
+//!     a 2-D gradient, because FLORA's subject is the *gradient pipeline*;
+//!   * the pure-rust TRANSFORMERS from [`crate::model`]: the `lora-tiny`
+//!     causal LM (full-tune, LoRA-adapter and GaLore entries) and the
+//!     `vit-tiny` ViT (Table-5 workload), both with manual backward
+//!     passes, so the paper's LoRA and ViT experiments run XLA-free. On
+//!     multi-matrix parameter sets every projectable (attention/MLP)
+//!     matrix gets an independent per-parameter projection seed; the
+//!     embeddings/norms/heads follow the paper's "naive procedure".
+//!
+//! The coordinator above cannot tell the families apart — it sees the
+//! same manifest groups, scalars and executable names either way.
 //!
 //! Deviations from the AOT catalog, by design:
 //!   * the GaLore refresh regenerates the STORED projection from the seed
 //!     (a JL subspace) instead of an SVD of the gradient; the memory and
 //!     scheduling semantics the coordinator exercises (P lives in state,
 //!     moments live in the subspace, refresh every κ steps) are identical.
-//!   * no LoRA or ViT entries — those need the transformer/AOT path.
+//!   * one transformer/ViT size each (the AOT path carries a size grid);
+//!     the per-model rank grids differ (`RANKS` vs `TF_RANKS`).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -31,6 +40,9 @@ use std::rc::Rc;
 use super::backend::{Backend, BackendExec};
 use super::manifest::{ExecutableInfo, Manifest, ModelInfo, TensorSpec};
 use super::values::{scalar_f32, Tensor};
+use crate::model::{
+    is_projectable, LoraAdapter, ParamSet, TransformerConfig, VitConfig,
+};
 use crate::opt::{Adam, BaseOptimizer, FloraCompressor, OptimizerKind, SubspaceTick, MOMENTUM_BETA};
 use crate::rp;
 use crate::tensor::Matrix;
@@ -50,9 +62,14 @@ const SPEC_BATCH: usize = 4;
 const MODELS: [(&str, usize, usize); 3] =
     [("lm-tiny", 64, 32), ("lm-small", 256, 64), ("lm-base", 512, 64)];
 
+/// Ranks of the transformer-family entries (`lora-tiny`, `vit-tiny`;
+/// d_model 32, so 32 is the full-rank end of the sweep).
+const TF_RANKS: [usize; 4] = [4, 8, 16, 32];
+
 /// Which fused step a native executable performs. Update-bearing steps
 /// carry the [`OptimizerKind`] whose [`crate::opt::BaseOptimizer`] does
-/// the actual math.
+/// the actual math. `Tf*`/`Lora*`/`Vit*` are the transformer-family
+/// mirrors of the bigram steps, operating on multi-matrix parameter sets.
 #[derive(Clone, Copy, Debug)]
 enum Step {
     Init,
@@ -66,21 +83,78 @@ enum Step {
     MomFlora { rank: usize, transfer: bool, opt: OptimizerKind },
     MomNaive { opt: OptimizerKind },
     GaloreStep { rank: usize },
+    // transformer LM (lora-tiny) — full-tune paths
+    TfInit,
+    TfEval,
+    TfGreedy,
+    TfPlain { opt: OptimizerKind },
+    TfMicroFlora { rank: usize },
+    TfMicroNaive,
+    TfUpdateFlora { rank: usize, opt: OptimizerKind },
+    TfUpdateNaive { opt: OptimizerKind },
+    TfMomFlora { rank: usize, transfer: bool, opt: OptimizerKind },
+    TfMomNaive { opt: OptimizerKind },
+    TfGalore { rank: usize },
+    // transformer LM — LoRA adapter baseline (frozen base + patches)
+    LoraInit { rank: usize },
+    LoraMicro { rank: usize },
+    LoraUpdate { rank: usize, opt: OptimizerKind },
+    LoraMom { rank: usize, opt: OptimizerKind },
+    LoraEval { rank: usize },
+    LoraGreedy { rank: usize },
+    // ViT (vit-tiny) — Table-5 steps
+    VitInit,
+    VitEval,
+    VitPlain { opt: OptimizerKind },
+    VitMomFlora { rank: usize, opt: OptimizerKind },
+}
+
+/// Which model family an executable belongs to (and its configuration).
+#[derive(Clone, Debug)]
+enum Family {
+    Bigram { vocab: usize },
+    Lm(TransformerConfig),
+    Vit(VitConfig),
 }
 
 /// One natively-executable catalog entry. Keeps its input specs so the
 /// executor can route inputs by ABI name, mirroring the coordinator side.
 struct NativeExec {
     name: String,
-    vocab: usize,
+    family: Family,
     step: Step,
     inputs: Vec<TensorSpec>,
+}
+
+impl NativeExec {
+    fn bigram_vocab(&self) -> Result<usize, String> {
+        match &self.family {
+            Family::Bigram { vocab } => Ok(*vocab),
+            _ => Err(format!("{}: not a bigram executable", self.name)),
+        }
+    }
+
+    fn lm_cfg(&self) -> Result<TransformerConfig, String> {
+        match &self.family {
+            Family::Lm(cfg) => Ok(*cfg),
+            _ => Err(format!("{}: not a transformer-lm executable", self.name)),
+        }
+    }
+
+    fn vit_cfg(&self) -> Result<VitConfig, String> {
+        match &self.family {
+            Family::Vit(cfg) => Ok(*cfg),
+            _ => Err(format!("{}: not a vit executable", self.name)),
+        }
+    }
 }
 
 /// The native engine: executables are prepared at catalog build time, so
 /// "compiling" is a map lookup.
 pub struct NativeBackend {
     execs: BTreeMap<String, Rc<NativeExec>>,
+    /// distinct model names, for the compile error message
+    families: Vec<String>,
 }
 
 impl Backend for NativeBackend {
@@ -94,9 +168,12 @@ impl Backend for NativeBackend {
     ) -> Result<Rc<dyn BackendExec>, String> {
         let e = self.execs.get(&info.name).ok_or_else(|| {
             format!(
-                "{}: not a native executable (the native catalog covers lm \
-                 models with sgd/adam/adafactor steps at ranks {RANKS:?})",
-                info.name
+                "{}: not a native executable (catalog models: {}; every \
+                 base optimizer sgd|adam|adafactor|adafactor_nofactor, lm \
+                 ranks {RANKS:?}, transformer ranks {TF_RANKS:?} — run \
+                 `flora --list-catalog` for the full inventory)",
+                info.name,
+                self.families.join(", "),
             )
         })?;
         Ok(e.clone() as Rc<dyn BackendExec>)
@@ -127,6 +204,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
             ModelInfo { name: model.to_string(), kind: "lm".into(), fields },
         );
 
+        let fam = Family::Bigram { vocab };
         let v = vocab;
         let s = seq_len;
         let b = SPEC_BATCH;
@@ -144,7 +222,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
             &mut executables,
             &mut execs,
             model,
-            v,
+            &fam,
             format!("{model}/init"),
             Step::Init,
             vec![seed.clone()],
@@ -154,7 +232,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
             &mut executables,
             &mut execs,
             model,
-            v,
+            &fam,
             format!("{model}/eval"),
             Step::Eval,
             vec![params.clone(), tokens.clone(), mask.clone()],
@@ -164,7 +242,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
             &mut executables,
             &mut execs,
             model,
-            v,
+            &fam,
             format!("{model}/greedy"),
             Step::Greedy,
             vec![
@@ -181,7 +259,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
             &mut executables,
             &mut execs,
             model,
-            v,
+            &fam,
             format!("{model}/micro_naive"),
             Step::MicroNaive,
             vec![
@@ -202,7 +280,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 &mut executables,
                 &mut execs,
                 model,
-                v,
+                &fam,
                 format!("{model}/micro_flora_r{r}"),
                 Step::MicroFlora { rank: r },
                 vec![
@@ -231,7 +309,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 &mut executables,
                 &mut execs,
                 model,
-                v,
+                &fam,
                 format!("{model}/plain_step_{o}"),
                 Step::Plain { opt },
                 splice(
@@ -245,7 +323,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 &mut executables,
                 &mut execs,
                 model,
-                v,
+                &fam,
                 format!("{model}/update_naive_{o}"),
                 Step::UpdateNaive { opt },
                 splice(
@@ -259,7 +337,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 &mut executables,
                 &mut execs,
                 model,
-                v,
+                &fam,
                 format!("{model}/mom_step_naive_{o}"),
                 Step::MomNaive { opt },
                 splice(
@@ -284,7 +362,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                     &mut executables,
                     &mut execs,
                     model,
-                    v,
+                    &fam,
                     format!("{model}/update_flora_r{r}_{o}"),
                     Step::UpdateFlora { rank: r, opt },
                     splice(
@@ -321,7 +399,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                     &mut executables,
                     &mut execs,
                     model,
-                    v,
+                    &fam,
                     format!("{model}/mom_step_flora_r{r}_{o}"),
                     Step::MomFlora { rank: r, transfer: true, opt },
                     mom_inputs.clone(),
@@ -331,7 +409,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                     &mut executables,
                     &mut execs,
                     model,
-                    v,
+                    &fam,
                     format!("{model}/mom_step_flora_notransfer_r{r}_{o}"),
                     Step::MomFlora { rank: r, transfer: false, opt },
                     mom_inputs,
@@ -350,7 +428,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 &mut executables,
                 &mut execs,
                 model,
-                v,
+                &fam,
                 format!("{model}/galore_step_r{r}"),
                 Step::GaloreStep { rank: r },
                 vec![
@@ -376,9 +454,13 @@ pub fn catalog() -> (Manifest, NativeBackend) {
         }
     }
 
+    register_transformer(&mut models, &mut executables, &mut execs);
+    register_vit(&mut models, &mut executables, &mut execs);
+
+    let families: Vec<String> = models.keys().cloned().collect();
     let manifest =
         Manifest { dir: PathBuf::from("native"), executables, models };
-    (manifest, NativeBackend { execs })
+    (manifest, NativeBackend { execs, families })
 }
 
 fn spec(name: &str, shape: &[usize], dtype: &str) -> TensorSpec {
@@ -409,7 +491,7 @@ fn register(
     executables: &mut BTreeMap<String, ExecutableInfo>,
     execs: &mut BTreeMap<String, Rc<NativeExec>>,
     model: &str,
-    vocab: usize,
+    family: &Family,
     name: String,
     step: Step,
     inputs: Vec<TensorSpec>,
@@ -425,7 +507,515 @@ fn register(
             outputs,
         },
     );
-    execs.insert(name.clone(), Rc::new(NativeExec { name, vocab, step, inputs }));
+    execs.insert(
+        name.clone(),
+        Rc::new(NativeExec { name, family: family.clone(), step, inputs }),
+    );
+}
+
+// ---------------------------------------------------------------------
+// transformer-family catalog generation
+// ---------------------------------------------------------------------
+
+type Shapes = [(String, [usize; 2])];
+
+/// `{prefix}/{name}` specs for a whole parameter set, in ABI order.
+fn set_specs(prefix: &str, shapes: &Shapes) -> Vec<TensorSpec> {
+    shapes
+        .iter()
+        .map(|(n, s)| f32s(&format!("{prefix}/{n}"), &s[..]))
+        .collect()
+}
+
+/// `opt/{param}/{slot}` specs for every parameter, grouped per parameter
+/// in ABI order — the multi-matrix generalization of the bigram's
+/// `opt/{slot}/w`.
+fn opt_specs(shapes: &Shapes, opt: OptimizerKind) -> Vec<TensorSpec> {
+    let o = opt.build();
+    let mut out = Vec::new();
+    for (name, sh) in shapes {
+        for (slot, ss) in o.state_shapes(sh[0], sh[1]) {
+            out.push(f32s(&format!("opt/{name}/{slot}"), &ss[..]));
+        }
+    }
+    out
+}
+
+/// `{prefix}/{param}` method-state specs: compressed `[n, r]` for
+/// projectable parameters when a rank is given (the FLORA treatment),
+/// full-size otherwise (the paper's naive procedure / naive baselines).
+fn method_specs(prefix: &str, shapes: &Shapes, rank: Option<usize>) -> Vec<TensorSpec> {
+    shapes
+        .iter()
+        .map(|(name, sh)| {
+            let shape = match rank {
+                Some(r) if is_projectable(name) => [sh[0], r],
+                _ => *sh,
+            };
+            f32s(&format!("{prefix}/{name}"), &shape[..])
+        })
+        .collect()
+}
+
+/// GaLore state specs, per parameter: subspace moments `m`/`v` plus the
+/// STORED projection `proj` on projectable parameters, full-space Adam
+/// moments on the rest.
+fn galore_specs(shapes: &Shapes, rank: usize) -> Vec<TensorSpec> {
+    let mut out = Vec::new();
+    for (name, sh) in shapes {
+        if is_projectable(name) {
+            out.push(f32s(&format!("m/{name}"), &[sh[0], rank]));
+            out.push(f32s(&format!("proj/{name}"), &[rank, sh[1]]));
+            out.push(f32s(&format!("v/{name}"), &[sh[0], rank]));
+        } else {
+            out.push(f32s(&format!("m/{name}"), &[sh[0], sh[1]]));
+            out.push(f32s(&format!("v/{name}"), &[sh[0], sh[1]]));
+        }
+    }
+    out
+}
+
+/// The `lora-tiny` transformer catalog: init/eval/greedy, plain steps,
+/// Algorithm-1 micro/update, Algorithm-2 momentum (± transfer), the LoRA
+/// adapter baseline and GaLore — each update-bearing step over every base
+/// optimizer, exactly the surface the bigram models expose.
+fn register_transformer(
+    models: &mut BTreeMap<String, ModelInfo>,
+    executables: &mut BTreeMap<String, ExecutableInfo>,
+    execs: &mut BTreeMap<String, Rc<NativeExec>>,
+) {
+    let cfg = TransformerConfig::tiny();
+    let model = "lora-tiny";
+    let mut fields = BTreeMap::new();
+    fields.insert("vocab".to_string(), cfg.vocab as f64);
+    fields.insert("seq_len".to_string(), cfg.seq_len as f64);
+    fields.insert("d_model".to_string(), cfg.dims.d_model as f64);
+    fields.insert("n_layers".to_string(), cfg.dims.n_layers as f64);
+    fields.insert("n_heads".to_string(), cfg.dims.n_heads as f64);
+    fields.insert("d_ff".to_string(), cfg.dims.d_ff as f64);
+    models.insert(
+        model.to_string(),
+        ModelInfo { name: model.to_string(), kind: "lm".into(), fields },
+    );
+
+    let fam = Family::Lm(cfg);
+    let shapes = cfg.param_shapes();
+    let pspecs = set_specs("params", &shapes);
+    let b = SPEC_BATCH;
+    let s = cfg.seq_len;
+    let tokens = spec("batch/tokens", &[b, s], "int32");
+    let mask = f32s("batch/mask", &[b, s]);
+    let loss = f32s("loss", &[]);
+    let lr = f32s("lr", &[]);
+    let step_s = f32s("step", &[]);
+    let seed = spec("seed", &[], "uint32");
+    let tau = f32s("tau", &[]);
+    let acc_naive = method_specs("acc", &shapes, None);
+    let mom_naive = method_specs("mom", &shapes, None);
+
+    register(
+        executables,
+        execs,
+        model,
+        &fam,
+        format!("{model}/init"),
+        Step::TfInit,
+        vec![seed.clone()],
+        pspecs.clone(),
+    );
+    register(
+        executables,
+        execs,
+        model,
+        &fam,
+        format!("{model}/eval"),
+        Step::TfEval,
+        splice(pspecs.clone(), &[], vec![tokens.clone(), mask.clone()]),
+        vec![loss.clone()],
+    );
+    register(
+        executables,
+        execs,
+        model,
+        &fam,
+        format!("{model}/greedy"),
+        Step::TfGreedy,
+        splice(
+            pspecs.clone(),
+            &[],
+            vec![tokens.clone(), spec("prompt_len", &[], "int32")],
+        ),
+        vec![spec("tokens", &[b, s], "int32")],
+    );
+    register(
+        executables,
+        execs,
+        model,
+        &fam,
+        format!("{model}/micro_naive"),
+        Step::TfMicroNaive,
+        splice(pspecs.clone(), &acc_naive, vec![tokens.clone(), mask.clone()]),
+        splice(vec![loss.clone()], &acc_naive, vec![]),
+    );
+    for r in TF_RANKS {
+        let acc = method_specs("acc", &shapes, Some(r));
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/micro_flora_r{r}"),
+            Step::TfMicroFlora { rank: r },
+            splice(
+                splice(pspecs.clone(), &acc, vec![]),
+                &[],
+                vec![tokens.clone(), mask.clone(), seed.clone()],
+            ),
+            splice(vec![loss.clone()], &acc, vec![]),
+        );
+    }
+
+    for opt in OptimizerKind::ALL {
+        let ospecs = opt_specs(&shapes, opt);
+        let o = opt.name();
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/plain_step_{o}"),
+            Step::TfPlain { opt },
+            splice(
+                splice(pspecs.clone(), &ospecs, vec![]),
+                &[],
+                vec![tokens.clone(), mask.clone(), lr.clone(), step_s.clone()],
+            ),
+            splice(splice(vec![loss.clone()], &pspecs, vec![]), &ospecs, vec![]),
+        );
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/update_naive_{o}"),
+            Step::TfUpdateNaive { opt },
+            splice(
+                splice(pspecs.clone(), &ospecs, vec![]),
+                &acc_naive,
+                vec![lr.clone(), step_s.clone(), tau.clone()],
+            ),
+            splice(pspecs.clone(), &ospecs, vec![]),
+        );
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/mom_step_naive_{o}"),
+            Step::TfMomNaive { opt },
+            splice(
+                splice(pspecs.clone(), &ospecs, vec![]),
+                &mom_naive,
+                vec![tokens.clone(), mask.clone(), lr.clone(), step_s.clone()],
+            ),
+            splice(
+                splice(splice(vec![loss.clone()], &pspecs, vec![]), &ospecs, vec![]),
+                &mom_naive,
+                vec![],
+            ),
+        );
+        for r in TF_RANKS {
+            let acc = method_specs("acc", &shapes, Some(r));
+            register(
+                executables,
+                execs,
+                model,
+                &fam,
+                format!("{model}/update_flora_r{r}_{o}"),
+                Step::TfUpdateFlora { rank: r, opt },
+                splice(
+                    splice(pspecs.clone(), &ospecs, vec![]),
+                    &acc,
+                    vec![lr.clone(), step_s.clone(), seed.clone(), tau.clone()],
+                ),
+                splice(pspecs.clone(), &ospecs, vec![]),
+            );
+            let mom = method_specs("mom", &shapes, Some(r));
+            let mom_in = splice(
+                splice(pspecs.clone(), &ospecs, vec![]),
+                &mom,
+                vec![
+                    tokens.clone(),
+                    mask.clone(),
+                    lr.clone(),
+                    step_s.clone(),
+                    spec("seed_cur", &[], "uint32"),
+                    spec("seed_next", &[], "uint32"),
+                    f32s("resample", &[]),
+                ],
+            );
+            let mom_out = splice(
+                splice(splice(vec![loss.clone()], &pspecs, vec![]), &ospecs, vec![]),
+                &mom,
+                vec![],
+            );
+            register(
+                executables,
+                execs,
+                model,
+                &fam,
+                format!("{model}/mom_step_flora_r{r}_{o}"),
+                Step::TfMomFlora { rank: r, transfer: true, opt },
+                mom_in.clone(),
+                mom_out.clone(),
+            );
+            register(
+                executables,
+                execs,
+                model,
+                &fam,
+                format!("{model}/mom_step_flora_notransfer_r{r}_{o}"),
+                Step::TfMomFlora { rank: r, transfer: false, opt },
+                mom_in,
+                mom_out,
+            );
+        }
+    }
+
+    // LoRA adapter baseline + GaLore, per rank
+    for r in TF_RANKS {
+        let adapter = LoraAdapter::new(shapes.clone(), r);
+        let tshapes = adapter.trainable_shapes();
+        let tspecs = set_specs("train", &tshapes);
+        let acc_t = method_specs("acc", &tshapes, None);
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/lora_r{r}_init"),
+            Step::LoraInit { rank: r },
+            splice(pspecs.clone(), &[], vec![seed.clone()]),
+            tspecs.clone(),
+        );
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/lora_r{r}_eval"),
+            Step::LoraEval { rank: r },
+            splice(
+                splice(pspecs.clone(), &tspecs, vec![]),
+                &[],
+                vec![tokens.clone(), mask.clone()],
+            ),
+            vec![loss.clone()],
+        );
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/lora_r{r}_greedy"),
+            Step::LoraGreedy { rank: r },
+            splice(
+                splice(pspecs.clone(), &tspecs, vec![]),
+                &[],
+                vec![tokens.clone(), spec("prompt_len", &[], "int32")],
+            ),
+            vec![spec("tokens", &[b, s], "int32")],
+        );
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/lora_r{r}_micro"),
+            Step::LoraMicro { rank: r },
+            splice(
+                splice(pspecs.clone(), &tspecs, vec![]),
+                &acc_t,
+                vec![tokens.clone(), mask.clone()],
+            ),
+            splice(vec![loss.clone()], &acc_t, vec![]),
+        );
+        for opt in OptimizerKind::ALL {
+            let o = opt.name();
+            let ospecs_t = opt_specs(&tshapes, opt);
+            register(
+                executables,
+                execs,
+                model,
+                &fam,
+                format!("{model}/lora_r{r}_update_{o}"),
+                Step::LoraUpdate { rank: r, opt },
+                splice(
+                    splice(tspecs.clone(), &ospecs_t, vec![]),
+                    &acc_t,
+                    vec![lr.clone(), step_s.clone(), tau.clone()],
+                ),
+                splice(tspecs.clone(), &ospecs_t, vec![]),
+            );
+            let mom_t = method_specs("mom", &tshapes, None);
+            register(
+                executables,
+                execs,
+                model,
+                &fam,
+                format!("{model}/lora_r{r}_mom_step_{o}"),
+                Step::LoraMom { rank: r, opt },
+                splice(
+                    splice(
+                        splice(pspecs.clone(), &tspecs, vec![]),
+                        &ospecs_t,
+                        vec![],
+                    ),
+                    &mom_t,
+                    vec![tokens.clone(), mask.clone(), lr.clone(), step_s.clone()],
+                ),
+                splice(
+                    splice(
+                        splice(vec![loss.clone()], &tspecs, vec![]),
+                        &ospecs_t,
+                        vec![],
+                    ),
+                    &mom_t,
+                    vec![],
+                ),
+            );
+        }
+        let gspecs = galore_specs(&shapes, r);
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/galore_step_r{r}"),
+            Step::TfGalore { rank: r },
+            splice(
+                splice(pspecs.clone(), &gspecs, vec![]),
+                &[],
+                vec![
+                    tokens.clone(),
+                    mask.clone(),
+                    lr.clone(),
+                    step_s.clone(),
+                    seed.clone(),
+                    f32s("refresh", &[]),
+                ],
+            ),
+            splice(splice(vec![loss.clone()], &pspecs, vec![]), &gspecs, vec![]),
+        );
+    }
+}
+
+/// The `vit-tiny` catalog: Table-5 training steps (plain per optimizer
+/// and FLORA Algorithm-2 momentum per rank × optimizer), plus init and a
+/// loss+preds eval.
+fn register_vit(
+    models: &mut BTreeMap<String, ModelInfo>,
+    executables: &mut BTreeMap<String, ExecutableInfo>,
+    execs: &mut BTreeMap<String, Rc<NativeExec>>,
+) {
+    let cfg = VitConfig::tiny();
+    let model = "vit-tiny";
+    let mut fields = BTreeMap::new();
+    fields.insert("image_size".to_string(), cfg.image_size as f64);
+    fields.insert("patch_size".to_string(), cfg.patch_size as f64);
+    fields.insert("channels".to_string(), cfg.channels as f64);
+    fields.insert("n_classes".to_string(), cfg.n_classes as f64);
+    fields.insert("d_model".to_string(), cfg.dims.d_model as f64);
+    fields.insert("n_layers".to_string(), cfg.dims.n_layers as f64);
+    fields.insert("n_heads".to_string(), cfg.dims.n_heads as f64);
+    fields.insert("d_ff".to_string(), cfg.dims.d_ff as f64);
+    models.insert(
+        model.to_string(),
+        ModelInfo { name: model.to_string(), kind: "vit".into(), fields },
+    );
+
+    let fam = Family::Vit(cfg);
+    let shapes = cfg.param_shapes();
+    let pspecs = set_specs("params", &shapes);
+    let b = SPEC_BATCH;
+    let side = cfg.image_size;
+    let images = f32s("batch/images", &[b, side, side, cfg.channels]);
+    let labels = spec("batch/labels", &[b], "int32");
+    let loss = f32s("loss", &[]);
+    let lr = f32s("lr", &[]);
+    let step_s = f32s("step", &[]);
+
+    register(
+        executables,
+        execs,
+        model,
+        &fam,
+        format!("{model}/init"),
+        Step::VitInit,
+        vec![spec("seed", &[], "uint32")],
+        pspecs.clone(),
+    );
+    register(
+        executables,
+        execs,
+        model,
+        &fam,
+        format!("{model}/eval"),
+        Step::VitEval,
+        splice(pspecs.clone(), &[], vec![images.clone(), labels.clone()]),
+        vec![loss.clone(), spec("preds", &[b], "int32")],
+    );
+    for opt in OptimizerKind::ALL {
+        let o = opt.name();
+        let ospecs = opt_specs(&shapes, opt);
+        register(
+            executables,
+            execs,
+            model,
+            &fam,
+            format!("{model}/step_{o}"),
+            Step::VitPlain { opt },
+            splice(
+                splice(pspecs.clone(), &ospecs, vec![]),
+                &[],
+                vec![images.clone(), labels.clone(), lr.clone(), step_s.clone()],
+            ),
+            splice(splice(vec![loss.clone()], &pspecs, vec![]), &ospecs, vec![]),
+        );
+        for r in TF_RANKS {
+            let mom = method_specs("mom", &shapes, Some(r));
+            register(
+                executables,
+                execs,
+                model,
+                &fam,
+                format!("{model}/step_flora_r{r}_{o}"),
+                Step::VitMomFlora { rank: r, opt },
+                splice(
+                    splice(splice(pspecs.clone(), &ospecs, vec![]), &mom, vec![]),
+                    &[],
+                    vec![
+                        images.clone(),
+                        labels.clone(),
+                        spec("seed_cur", &[], "uint32"),
+                        spec("seed_next", &[], "uint32"),
+                        f32s("resample", &[]),
+                        lr.clone(),
+                        step_s.clone(),
+                    ],
+                ),
+                splice(
+                    splice(
+                        splice(vec![loss.clone()], &pspecs, vec![]),
+                        &ospecs,
+                        vec![],
+                    ),
+                    &mom,
+                    vec![],
+                ),
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -606,20 +1196,289 @@ fn outputs_with_state(head: Vec<Tensor>, state: Vec<Matrix>) -> Vec<Tensor> {
     out
 }
 
+// ---------------------------------------------------------------------
+// transformer-family execution helpers
+// ---------------------------------------------------------------------
+
+/// Read a whole named parameter set (`{prefix}/{name}`) from step inputs.
+fn read_set(
+    ins: &Inputs<'_>,
+    shapes: &Shapes,
+    prefix: &str,
+) -> Result<ParamSet, String> {
+    let mut out = ParamSet::new();
+    for (name, _) in shapes {
+        out.insert(name.clone(), ins.matrix(&format!("{prefix}/{name}"))?);
+    }
+    Ok(out)
+}
+
+/// Emit a parameter set as output tensors in ABI (sorted-name) order.
+fn set_tensors(params: ParamSet) -> Vec<Tensor> {
+    params.into_values().map(tensor_of).collect()
+}
+
+/// Greedy-decode inputs shared by every model family: the 2-D int32
+/// token grid (cloned for in-place decoding) plus the prompt length,
+/// clamped to >= 1 ONCE here at the ABI boundary (position 0 has no
+/// predecessor to condition on; the model's `greedy` clamps again only
+/// for its own direct callers). Returns `(rows, seq, tokens, plen)`.
+fn greedy_tokens(
+    ins: &Inputs<'_>,
+    ctx: &str,
+) -> Result<(usize, usize, Vec<i32>, usize), String> {
+    let (rows, s, toks) = match ins.get("batch/tokens")? {
+        Tensor::I32 { shape, data } if shape.len() == 2 => {
+            (shape[0], shape[1], data.clone())
+        }
+        _ => return Err(format!("{ctx}: batch/tokens must be 2-D int32")),
+    };
+    let plen = ins
+        .get("prompt_len")?
+        .first_i32()
+        .map_err(|e| format!("{ctx}: prompt_len: {e}"))?
+        .max(1) as usize;
+    Ok((rows, s, toks, plen))
+}
+
+/// ViT image/label batch view: dtype extraction only — shape validation
+/// is owned by `VitConfig::check_batch`, which every loss/preds entry
+/// point runs.
+fn vit_batch<'a>(
+    ins: &Inputs<'a>,
+    ctx: &str,
+) -> Result<(&'a [f32], &'a [i32]), String> {
+    let images = ins
+        .get("batch/images")?
+        .as_f32()
+        .map_err(|e| format!("{ctx}: batch/images: {e}"))?;
+    let labels = ins
+        .get("batch/labels")?
+        .as_i32()
+        .map_err(|e| format!("{ctx}: batch/labels: {e}"))?;
+    Ok((images, labels))
+}
+
+/// Per-parameter base-optimizer update over a whole set: reads each
+/// parameter's `opt/{name}/{slot}` state, applies the update with that
+/// parameter's effective gradient, and returns the new state tensors in
+/// catalog spec order.
+fn opt_update_set(
+    opt: OptimizerKind,
+    params: &mut ParamSet,
+    eff: &ParamSet,
+    ins: &Inputs<'_>,
+    lr: f32,
+    step: f32,
+) -> Result<Vec<Tensor>, String> {
+    let o = opt.build();
+    let names: Vec<String> = params.keys().cloned().collect();
+    let mut out = Vec::new();
+    for name in names {
+        let w = params.get_mut(&name).expect("name from keys");
+        let g = eff
+            .get(&name)
+            .ok_or_else(|| format!("missing gradient for {name}"))?;
+        let mut st: Vec<Matrix> = o
+            .state_shapes(w.rows, w.cols)
+            .iter()
+            .map(|(slot, _)| ins.matrix(&format!("opt/{name}/{slot}")))
+            .collect::<Result<_, _>>()?;
+        o.update(w, g, &mut st, lr, step)?;
+        out.extend(st.into_iter().map(tensor_of));
+    }
+    Ok(out)
+}
+
+/// Algorithm-1 micro accumulation over a whole gradient set: compressed
+/// `C += G Aᵀ` with per-parameter seeds on projectable parameters (rank
+/// Some), plain `acc += G` otherwise. Returns the new accumulators in
+/// spec order.
+fn accumulate_set(
+    rank: Option<usize>,
+    grads: &ParamSet,
+    ins: &Inputs<'_>,
+    seed: u64,
+) -> Result<Vec<Tensor>, String> {
+    let comp = rank.map(|r| FloraCompressor::new(crate::opt::Sgd, r));
+    let mut out = Vec::new();
+    for (idx, (name, g)) in grads.iter().enumerate() {
+        let mut acc = ins.matrix(&format!("acc/{name}"))?;
+        match &comp {
+            Some(comp) if is_projectable(name) => {
+                comp.accumulate(&mut acc, g, rp::param_seed(seed, idx));
+            }
+            _ => acc.add_scaled_inplace(g, 1.0),
+        }
+        out.push(tensor_of(acc));
+    }
+    Ok(out)
+}
+
+/// Algorithm-1 cycle end over a whole set: decompress each projectable
+/// accumulator with ITS parameter's seed (rank Some) or take the naive
+/// mean, then run the base optimizer. Returns the new opt-state tensors.
+#[allow(clippy::too_many_arguments)]
+fn apply_accumulated_set(
+    opt: OptimizerKind,
+    rank: Option<usize>,
+    params: &mut ParamSet,
+    ins: &Inputs<'_>,
+    seed: u64,
+    tau: f32,
+    lr: f32,
+    step: f32,
+) -> Result<Vec<Tensor>, String> {
+    let o = opt.build();
+    let comp = rank.map(|r| FloraCompressor::new(opt.build(), r));
+    let names: Vec<String> = params.keys().cloned().collect();
+    let mut out = Vec::new();
+    for (idx, name) in names.iter().enumerate() {
+        let w = params.get_mut(name).expect("name from keys");
+        let acc = ins.matrix(&format!("acc/{name}"))?;
+        let mut st: Vec<Matrix> = o
+            .state_shapes(w.rows, w.cols)
+            .iter()
+            .map(|(slot, _)| ins.matrix(&format!("opt/{name}/{slot}")))
+            .collect::<Result<_, _>>()?;
+        match &comp {
+            Some(comp) if is_projectable(name) => {
+                comp.apply_accumulated(
+                    w,
+                    &acc,
+                    &mut st,
+                    rp::param_seed(seed, idx),
+                    tau,
+                    lr,
+                    step,
+                )?;
+            }
+            _ => {
+                let ghat = acc.scale(1.0 / tau.max(1.0));
+                o.update(w, &ghat, &mut st, lr, step)?;
+            }
+        }
+        out.extend(st.into_iter().map(tensor_of));
+    }
+    Ok(out)
+}
+
+/// One Algorithm-2 (or naive-EMA) momentum step over a whole parameter
+/// set. With a rank, projectable parameters keep their EMA in the
+/// compressed subspace, deriving per-parameter seeds from the tick's
+/// cycle seeds; everything else (and rank None) is a full-space EMA fed
+/// to the base optimizer. Returns (opt-state, momentum) output tensors.
+#[allow(clippy::too_many_arguments)]
+fn momentum_step_set(
+    opt: OptimizerKind,
+    rank: Option<usize>,
+    transfer: bool,
+    params: &mut ParamSet,
+    grads: &ParamSet,
+    ins: &Inputs<'_>,
+    tick: Option<(u64, u64, bool)>,
+    lr: f32,
+    step: f32,
+) -> Result<(Vec<Tensor>, Vec<Tensor>), String> {
+    let o = opt.build();
+    let comp = rank.map(|r| FloraCompressor::new(opt.build(), r));
+    let names: Vec<String> = params.keys().cloned().collect();
+    let mut opt_out = Vec::new();
+    let mut mom_out = Vec::new();
+    for (idx, name) in names.iter().enumerate() {
+        let w = params.get_mut(name).expect("name from keys");
+        let g = grads
+            .get(name)
+            .ok_or_else(|| format!("missing gradient for {name}"))?;
+        let mut mom = ins.matrix(&format!("mom/{name}"))?;
+        let mut st: Vec<Matrix> = o
+            .state_shapes(w.rows, w.cols)
+            .iter()
+            .map(|(slot, _)| ins.matrix(&format!("opt/{name}/{slot}")))
+            .collect::<Result<_, _>>()?;
+        match &comp {
+            Some(comp) if is_projectable(name) => {
+                let (seed_cur, seed_next, resample) =
+                    tick.ok_or("flora momentum step without subspace seeds")?;
+                let t = SubspaceTick {
+                    seed_cur: rp::param_seed(seed_cur, idx),
+                    seed_next: rp::param_seed(seed_next, idx),
+                    resample,
+                    transfer,
+                };
+                comp.momentum_step(w, &mut mom, &mut st, g, t, lr, step)?;
+            }
+            _ => {
+                let mut next = mom.scale(MOMENTUM_BETA);
+                next.add_scaled_inplace(g, 1.0 - MOMENTUM_BETA);
+                o.update(w, &next, &mut st, lr, step)?;
+                mom = next;
+            }
+        }
+        opt_out.extend(st.into_iter().map(tensor_of));
+        mom_out.push(tensor_of(mom));
+    }
+    Ok((opt_out, mom_out))
+}
+
+/// GaLore over a whole set: Adam-in-subspace with a stored projection on
+/// projectable parameters (refresh regenerates it from the per-parameter
+/// seed), full-space Adam on the rest. Returns the state tensors in spec
+/// order (per parameter: m, [proj], v).
+#[allow(clippy::too_many_arguments)]
+fn galore_step_set(
+    rank: usize,
+    params: &mut ParamSet,
+    grads: &ParamSet,
+    ins: &Inputs<'_>,
+    seed: u64,
+    refresh: bool,
+    lr: f32,
+    step: f32,
+) -> Result<Vec<Tensor>, String> {
+    let adam = Adam::new();
+    let names: Vec<String> = params.keys().cloned().collect();
+    let mut out = Vec::new();
+    for (idx, name) in names.iter().enumerate() {
+        let w = params.get_mut(name).expect("name from keys");
+        let g = grads
+            .get(name)
+            .ok_or_else(|| format!("missing gradient for {name}"))?;
+        let mut m = ins.matrix(&format!("m/{name}"))?;
+        let mut vv = ins.matrix(&format!("v/{name}"))?;
+        if is_projectable(name) {
+            let p = if refresh {
+                rp::projection(rp::param_seed(seed, idx), rank, w.cols)
+            } else {
+                ins.matrix(&format!("proj/{name}"))?
+            };
+            let c = rp::compress(g, &p);
+            let dir = adam.direction(&mut m, &mut vv, &c, step);
+            let upd = rp::decompress(&dir, &p);
+            w.add_scaled_inplace(&upd, -lr);
+            out.push(tensor_of(m));
+            out.push(tensor_of(p));
+            out.push(tensor_of(vv));
+        } else {
+            let dir = adam.direction(&mut m, &mut vv, g, step);
+            w.add_scaled_inplace(&dir, -lr);
+            out.push(tensor_of(m));
+            out.push(tensor_of(vv));
+        }
+    }
+    Ok(out)
+}
+
 impl BackendExec for NativeExec {
     fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
         let ctx = self.name.as_str();
         let ins = Inputs { specs: &self.inputs, vals: inputs, ctx };
         match self.step {
             Step::Init => {
+                let vocab = self.bigram_vocab()?;
                 let seed = ins.useed("seed")?;
                 let mut rng = Rng::new(seed);
-                let w = Matrix::gaussian(
-                    self.vocab,
-                    self.vocab,
-                    INIT_SIGMA,
-                    &mut rng,
-                );
+                let w = Matrix::gaussian(vocab, vocab, INIT_SIGMA, &mut rng);
                 Ok(vec![tensor_of(w)])
             }
             Step::Eval => {
@@ -629,26 +1488,13 @@ impl BackendExec for NativeExec {
                 Ok(vec![scalar_f32(loss)])
             }
             Step::Greedy => {
+                let vocab = self.bigram_vocab()?;
                 let w = ins.matrix("params/w")?;
-                let (rows, s, mut out) = match ins.get("batch/tokens")? {
-                    Tensor::I32 { shape, data } if shape.len() == 2 => {
-                        (shape[0], shape[1], data.clone())
-                    }
-                    _ => {
-                        return Err(format!(
-                            "{ctx}: batch/tokens must be 2-D int32"
-                        ))
-                    }
-                };
-                let plen = ins
-                    .get("prompt_len")?
-                    .first_i32()
-                    .map_err(|e| format!("{ctx}: prompt_len: {e}"))?
-                    .max(1) as usize;
+                let (rows, s, mut out, plen) = greedy_tokens(&ins, ctx)?;
                 for b in 0..rows {
                     for i in plen..s {
                         let prev = out[b * s + i - 1];
-                        if prev < 0 || prev as usize >= self.vocab {
+                        if prev < 0 || prev as usize >= vocab {
                             return Err(format!(
                                 "{ctx}: prompt token {prev} out of range"
                             ));
@@ -797,6 +1643,352 @@ impl BackendExec for NativeExec {
                     tensor_of(vv),
                 ])
             }
+
+            // ----------------------------------------------------------
+            // transformer LM (lora-tiny)
+            // ----------------------------------------------------------
+            Step::TfInit => {
+                let cfg = self.lm_cfg()?;
+                Ok(set_tensors(cfg.init(ins.useed("seed")?)))
+            }
+            Step::TfEval => {
+                let cfg = self.lm_cfg()?;
+                let params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let batch = ins.batch()?;
+                let (loss, _) = cfg
+                    .loss_and_grad(
+                        &params, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, false,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(vec![scalar_f32(loss)])
+            }
+            Step::TfGreedy => {
+                let cfg = self.lm_cfg()?;
+                let params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let (rows, s, mut toks, plen) = greedy_tokens(&ins, ctx)?;
+                cfg.greedy(&params, &mut toks, rows, s, plen)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(vec![Tensor::I32 { shape: vec![rows, s], data: toks }])
+            }
+            Step::TfPlain { opt } => {
+                let cfg = self.lm_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &params, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let opt_out =
+                    opt_update_set(opt, &mut params, &grads, &ins, lr, step)
+                        .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(params));
+                out.extend(opt_out);
+                Ok(out)
+            }
+            Step::TfMicroFlora { rank } => {
+                let cfg = self.lm_cfg()?;
+                let params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let batch = ins.batch()?;
+                let seed = ins.useed("seed")?;
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &params, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let accs = accumulate_set(Some(rank), &grads, &ins, seed)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(accs);
+                Ok(out)
+            }
+            Step::TfMicroNaive => {
+                let cfg = self.lm_cfg()?;
+                let params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let batch = ins.batch()?;
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &params, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let accs = accumulate_set(None, &grads, &ins, 0)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(accs);
+                Ok(out)
+            }
+            Step::TfUpdateFlora { rank, opt } => {
+                let cfg = self.lm_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let seed = ins.useed("seed")?;
+                let tau = ins.num("tau")?;
+                let opt_out = apply_accumulated_set(
+                    opt, Some(rank), &mut params, &ins, seed, tau, lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = set_tensors(params);
+                out.extend(opt_out);
+                Ok(out)
+            }
+            Step::TfUpdateNaive { opt } => {
+                let cfg = self.lm_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let tau = ins.num("tau")?;
+                let opt_out = apply_accumulated_set(
+                    opt, None, &mut params, &ins, 0, tau, lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = set_tensors(params);
+                out.extend(opt_out);
+                Ok(out)
+            }
+            Step::TfMomFlora { rank, transfer, opt } => {
+                let cfg = self.lm_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let tick = (
+                    ins.useed("seed_cur")?,
+                    ins.useed("seed_next")?,
+                    ins.num("resample")? >= 0.5,
+                );
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &params, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let (opt_out, mom_out) = momentum_step_set(
+                    opt, Some(rank), transfer, &mut params, &grads, &ins,
+                    Some(tick), lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(params));
+                out.extend(opt_out);
+                out.extend(mom_out);
+                Ok(out)
+            }
+            Step::TfMomNaive { opt } => {
+                let cfg = self.lm_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &params, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let (opt_out, mom_out) = momentum_step_set(
+                    opt, None, false, &mut params, &grads, &ins, None, lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(params));
+                out.extend(opt_out);
+                out.extend(mom_out);
+                Ok(out)
+            }
+            Step::TfGalore { rank } => {
+                let cfg = self.lm_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let seed = ins.useed("seed")?;
+                let refresh = ins.num("refresh")? >= 0.5;
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &params, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let state = galore_step_set(
+                    rank, &mut params, &grads, &ins, seed, refresh, lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(params));
+                out.extend(state);
+                Ok(out)
+            }
+
+            // ----------------------------------------------------------
+            // LoRA adapter baseline (frozen base + trainable patches)
+            // ----------------------------------------------------------
+            Step::LoraInit { rank } => {
+                let cfg = self.lm_cfg()?;
+                let base = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let adapter = LoraAdapter::new(cfg.param_shapes(), rank);
+                Ok(set_tensors(
+                    adapter.init_trainable(&base, ins.useed("seed")?),
+                ))
+            }
+            Step::LoraEval { rank } => {
+                let cfg = self.lm_cfg()?;
+                let adapter = LoraAdapter::new(cfg.param_shapes(), rank);
+                let base = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let train = read_set(&ins, &adapter.trainable_shapes(), "train")?;
+                let merged = adapter.merge(&base, &train);
+                let batch = ins.batch()?;
+                let (loss, _) = cfg
+                    .loss_and_grad(
+                        &merged, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, false,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(vec![scalar_f32(loss)])
+            }
+            Step::LoraGreedy { rank } => {
+                let cfg = self.lm_cfg()?;
+                let adapter = LoraAdapter::new(cfg.param_shapes(), rank);
+                let base = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let train = read_set(&ins, &adapter.trainable_shapes(), "train")?;
+                let merged = adapter.merge(&base, &train);
+                let (rows, s, mut toks, plen) = greedy_tokens(&ins, ctx)?;
+                cfg.greedy(&merged, &mut toks, rows, s, plen)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(vec![Tensor::I32 { shape: vec![rows, s], data: toks }])
+            }
+            Step::LoraMicro { rank } => {
+                let cfg = self.lm_cfg()?;
+                let adapter = LoraAdapter::new(cfg.param_shapes(), rank);
+                let base = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let train = read_set(&ins, &adapter.trainable_shapes(), "train")?;
+                let merged = adapter.merge(&base, &train);
+                let batch = ins.batch()?;
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &merged, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let tgrads = adapter.train_grads(&train, &grads);
+                let accs = accumulate_set(None, &tgrads, &ins, 0)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(accs);
+                Ok(out)
+            }
+            Step::LoraUpdate { rank, opt } => {
+                let cfg = self.lm_cfg()?;
+                let adapter = LoraAdapter::new(cfg.param_shapes(), rank);
+                let mut train =
+                    read_set(&ins, &adapter.trainable_shapes(), "train")?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let tau = ins.num("tau")?;
+                let opt_out = apply_accumulated_set(
+                    opt, None, &mut train, &ins, 0, tau, lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = set_tensors(train);
+                out.extend(opt_out);
+                Ok(out)
+            }
+            Step::LoraMom { rank, opt } => {
+                let cfg = self.lm_cfg()?;
+                let adapter = LoraAdapter::new(cfg.param_shapes(), rank);
+                let base = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let mut train =
+                    read_set(&ins, &adapter.trainable_shapes(), "train")?;
+                let merged = adapter.merge(&base, &train);
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &merged, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let tgrads = adapter.train_grads(&train, &grads);
+                let (opt_out, mom_out) = momentum_step_set(
+                    opt, None, false, &mut train, &tgrads, &ins, None, lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(train));
+                out.extend(opt_out);
+                out.extend(mom_out);
+                Ok(out)
+            }
+
+            // ----------------------------------------------------------
+            // ViT (vit-tiny)
+            // ----------------------------------------------------------
+            Step::VitInit => {
+                let cfg = self.vit_cfg()?;
+                Ok(set_tensors(cfg.init(ins.useed("seed")?)))
+            }
+            Step::VitEval => {
+                let cfg = self.vit_cfg()?;
+                let params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let (images, labels) = vit_batch(&ins, ctx)?;
+                let (loss, preds, _) = cfg
+                    .loss_preds_grad(&params, images, labels, false)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                Ok(vec![
+                    scalar_f32(loss),
+                    Tensor::I32 { shape: vec![labels.len()], data: preds },
+                ])
+            }
+            Step::VitPlain { opt } => {
+                let cfg = self.vit_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let (images, labels) = vit_batch(&ins, ctx)?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let (loss, _, grads) = cfg
+                    .loss_preds_grad(&params, images, labels, true)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let opt_out =
+                    opt_update_set(opt, &mut params, &grads, &ins, lr, step)
+                        .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(params));
+                out.extend(opt_out);
+                Ok(out)
+            }
+            Step::VitMomFlora { rank, opt } => {
+                let cfg = self.vit_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let (images, labels) = vit_batch(&ins, ctx)?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let tick = (
+                    ins.useed("seed_cur")?,
+                    ins.useed("seed_next")?,
+                    ins.num("resample")? >= 0.5,
+                );
+                let (loss, _, grads) = cfg
+                    .loss_preds_grad(&params, images, labels, true)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let (opt_out, mom_out) = momentum_step_set(
+                    opt, Some(rank), true, &mut params, &grads, &ins,
+                    Some(tick), lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(params));
+                out.extend(opt_out);
+                out.extend(mom_out);
+                Ok(out)
+            }
         }
     }
 }
@@ -804,10 +1996,44 @@ impl BackendExec for NativeExec {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::values::{scalar_f32, scalar_u32, tensor_f32};
+    use crate::runtime::values::{
+        scalar_f32, scalar_u32, tensor_f32, tensor_i32, zeros_for,
+    };
 
     fn exec<'a>(backend: &'a NativeBackend, name: &str) -> &'a Rc<NativeExec> {
         backend.execs.get(name).unwrap()
+    }
+
+    /// Mini-harness for multi-tensor executables: inputs are pulled from a
+    /// name→tensor map in manifest order, outputs are routed back into it
+    /// by name. Returns the loss when the step produces one.
+    fn run_named(
+        manifest: &Manifest,
+        backend: &NativeBackend,
+        name: &str,
+        vals: &mut BTreeMap<String, Tensor>,
+    ) -> Option<f32> {
+        let info = manifest.executable(name).unwrap();
+        let e = exec(backend, name);
+        let inputs: Vec<Tensor> = info
+            .inputs
+            .iter()
+            .map(|t| {
+                vals.get(&t.name)
+                    .unwrap_or_else(|| panic!("{name}: missing {}", t.name))
+                    .clone()
+            })
+            .collect();
+        let outs = e.run(&inputs).unwrap();
+        assert_eq!(outs.len(), info.outputs.len(), "{name}: arity");
+        let mut loss = None;
+        for (spec, val) in info.outputs.iter().zip(outs) {
+            if spec.name == "loss" {
+                loss = val.first_f32().ok();
+            }
+            vals.insert(spec.name.clone(), val);
+        }
+        loss
     }
 
     fn toy_batch(v: usize, s: usize) -> (Tensor, Tensor) {
@@ -1044,6 +2270,180 @@ mod tests {
         // the transfer rotates the momentum into a new subspace, so the
         // resulting EMA state must differ from the quiet step's
         assert_ne!(quiet[2], resampled[2]);
+    }
+
+    #[test]
+    fn transformer_and_vit_catalogs_cover_every_optimizer() {
+        let (manifest, _) = catalog();
+        for opt in OptimizerKind::ALL {
+            let o = opt.name();
+            for exe in [
+                format!("lora-tiny/plain_step_{o}"),
+                format!("lora-tiny/update_flora_r8_{o}"),
+                format!("lora-tiny/update_naive_{o}"),
+                format!("lora-tiny/mom_step_flora_r8_{o}"),
+                format!("lora-tiny/mom_step_flora_notransfer_r8_{o}"),
+                format!("lora-tiny/mom_step_naive_{o}"),
+                format!("lora-tiny/lora_r8_update_{o}"),
+                format!("lora-tiny/lora_r8_mom_step_{o}"),
+                format!("vit-tiny/step_{o}"),
+                format!("vit-tiny/step_flora_r8_{o}"),
+            ] {
+                assert!(
+                    manifest.executables.contains_key(&exe),
+                    "missing {exe}"
+                );
+            }
+        }
+        for exe in [
+            "lora-tiny/init",
+            "lora-tiny/eval",
+            "lora-tiny/greedy",
+            "lora-tiny/micro_naive",
+            "lora-tiny/micro_flora_r8",
+            "lora-tiny/lora_r8_init",
+            "lora-tiny/lora_r8_micro",
+            "lora-tiny/lora_r8_eval",
+            "lora-tiny/lora_r8_greedy",
+            "lora-tiny/galore_step_r8",
+            "vit-tiny/init",
+            "vit-tiny/eval",
+        ] {
+            assert!(manifest.executables.contains_key(exe), "missing {exe}");
+        }
+        assert_eq!(manifest.models["lora-tiny"].kind, "lm");
+        assert_eq!(manifest.models["vit-tiny"].kind, "vit");
+        assert_eq!(manifest.models["vit-tiny"].get("image_size"), Some(8));
+        assert_eq!(manifest.models["vit-tiny"].get("n_classes"), Some(10));
+    }
+
+    #[test]
+    fn compile_error_names_the_model_families() {
+        let (_, mut backend) = catalog();
+        let info = ExecutableInfo {
+            name: "nope/step".into(),
+            file: PathBuf::from("native"),
+            model: "nope".into(),
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let err = backend.compile(&info).err().expect("unknown exe accepted");
+        for m in ["lm-tiny", "lm-small", "lm-base", "lora-tiny", "vit-tiny"] {
+            assert!(err.contains(m), "error does not name {m}: {err}");
+        }
+    }
+
+    #[test]
+    fn transformer_plain_step_descends_on_repeated_batch() {
+        let (manifest, backend) = catalog();
+        let mut vals = BTreeMap::new();
+        vals.insert("seed".to_string(), scalar_u32(0));
+        run_named(&manifest, &backend, "lora-tiny/init", &mut vals);
+        let (toks, mask) = toy_batch(64, 16);
+        vals.insert("batch/tokens".to_string(), toks);
+        vals.insert("batch/mask".to_string(), mask);
+        vals.insert("lr".to_string(), scalar_f32(0.5));
+        let mut losses = Vec::new();
+        for s in 0..30 {
+            vals.insert("step".to_string(), scalar_f32(s as f32));
+            let loss = run_named(
+                &manifest,
+                &backend,
+                "lora-tiny/plain_step_sgd",
+                &mut vals,
+            )
+            .unwrap();
+            losses.push(loss);
+        }
+        let first = losses[0];
+        let last = *losses.last().unwrap();
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        assert!((first - (64f32).ln()).abs() < 0.5, "first={first}");
+        assert!(last < first - 0.3, "no descent: {first} -> {last}");
+    }
+
+    #[test]
+    fn lora_init_and_micro_follow_the_chain_rule() {
+        let (manifest, backend) = catalog();
+        let mut vals = BTreeMap::new();
+        vals.insert("seed".to_string(), scalar_u32(2));
+        run_named(&manifest, &backend, "lora-tiny/init", &mut vals);
+        run_named(&manifest, &backend, "lora-tiny/lora_r4_init", &mut vals);
+        // B halves start at zero, A halves are Gaussian
+        let b = vals.get("train/lora_B/layer0/attn/wq").unwrap();
+        assert!(b.to_f32_vec().unwrap().iter().all(|&x| x == 0.0));
+        let a = vals.get("train/lora_A/layer0/attn/wq").unwrap();
+        assert!(a.to_f32_vec().unwrap().iter().any(|&x| x != 0.0));
+        let (toks, mask) = toy_batch(64, 16);
+        vals.insert("batch/tokens".to_string(), toks);
+        vals.insert("batch/mask".to_string(), mask);
+        let info = manifest.executable("lora-tiny/lora_r4_micro").unwrap();
+        for t in &info.inputs {
+            if t.name.starts_with("acc/") {
+                vals.insert(t.name.clone(), zeros_for(t).unwrap());
+            }
+        }
+        let loss =
+            run_named(&manifest, &backend, "lora-tiny/lora_r4_micro", &mut vals)
+                .unwrap();
+        assert!(loss.is_finite());
+        // dB = dW·Aᵀ is nonzero; dA = Bᵀ·dW is exactly zero while B = 0
+        let accb = vals
+            .get("acc/lora_B/layer0/attn/wq")
+            .unwrap()
+            .to_f32_vec()
+            .unwrap();
+        assert!(accb.iter().any(|&x| x != 0.0));
+        let acca = vals
+            .get("acc/lora_A/layer0/attn/wq")
+            .unwrap()
+            .to_f32_vec()
+            .unwrap();
+        assert!(acca.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn vit_step_adam_descends_and_eval_reports_preds() {
+        let (manifest, backend) = catalog();
+        let mut vals = BTreeMap::new();
+        vals.insert("seed".to_string(), scalar_u32(1));
+        run_named(&manifest, &backend, "vit-tiny/init", &mut vals);
+        let task = crate::data::images::ImageTask::cifar_like(10, 8, 3, 0.25, 3);
+        let mut cursor = 0u64;
+        let (images, labels) = task.fill_flat(4, 0, &mut cursor, 3);
+        vals.insert(
+            "batch/images".to_string(),
+            tensor_f32(&[4, 8, 8, 3], &images).unwrap(),
+        );
+        vals.insert(
+            "batch/labels".to_string(),
+            tensor_i32(&[4], &labels).unwrap(),
+        );
+        vals.insert("lr".to_string(), scalar_f32(0.01));
+        let info = manifest.executable("vit-tiny/step_adam").unwrap();
+        for t in &info.inputs {
+            if t.name.starts_with("opt/") {
+                vals.insert(t.name.clone(), zeros_for(t).unwrap());
+            }
+        }
+        let mut losses = Vec::new();
+        for s in 0..30 {
+            vals.insert("step".to_string(), scalar_f32(s as f32));
+            losses.push(
+                run_named(&manifest, &backend, "vit-tiny/step_adam", &mut vals)
+                    .unwrap(),
+            );
+        }
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        assert!(
+            *losses.last().unwrap() < losses[0] - 0.2,
+            "no descent: {losses:?}"
+        );
+        let loss = run_named(&manifest, &backend, "vit-tiny/eval", &mut vals);
+        assert!(loss.unwrap().is_finite());
+        let preds = vals.get("preds").unwrap().to_i32_vec().unwrap();
+        assert_eq!(preds.len(), 4);
+        assert!(preds.iter().all(|&p| (0..10).contains(&p)));
     }
 
     #[test]

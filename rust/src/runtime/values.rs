@@ -331,6 +331,36 @@ impl Route {
 /// Builder for one executable invocation: typed scalars + the batch map.
 /// State inputs are pulled from the [`StateStore`] by name at assembly
 /// time, in the executable's declared input order.
+///
+/// # Example: assemble a fused step's inputs by name
+///
+/// ```
+/// use std::path::PathBuf;
+/// use flora::runtime::manifest::ExecutableInfo;
+/// use flora::runtime::{StateGroup, StateStore, StepIo, TensorSpec};
+///
+/// let f32s = |name: &str, shape: &[usize]| TensorSpec {
+///     name: name.into(),
+///     shape: shape.to_vec(),
+///     dtype: "float32".into(),
+/// };
+/// // an executable that consumes the params plus the (lr, step) pair
+/// let info = ExecutableInfo {
+///     name: "demo/plain_step_sgd".into(),
+///     file: PathBuf::from("native"),
+///     model: "demo".into(),
+///     inputs: vec![f32s("params/w", &[2, 2]), f32s("lr", &[]), f32s("step", &[])],
+///     outputs: vec![],
+/// };
+/// let mut state = StateStore::new(None);
+/// state
+///     .put_zeros(StateGroup::Params, vec![f32s("params/w", &[2, 2])])
+///     .unwrap();
+/// let inputs = StepIo::new().lr_step(0.1, 3).inputs_for(&info, &state).unwrap();
+/// assert_eq!(inputs.len(), 3);
+/// assert_eq!(inputs[1].first_f32().unwrap(), 0.1); // routed by NAME
+/// assert_eq!(inputs[2].first_f32().unwrap(), 3.0);
+/// ```
 #[derive(Default)]
 pub struct StepIo {
     scalars: BTreeMap<ScalarKey, Tensor>,

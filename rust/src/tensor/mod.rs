@@ -2,13 +2,17 @@
 //!
 //! Used by the Figure-1 pilot study (MLP + LoRA/RP/RRP updaters with
 //! hand-derived gradients), by the rust-side random-projection reference
-//! (`rp`), and by the metrics/memory machinery. This is NOT on the training
-//! hot path of the big experiments — those run inside AOT-compiled XLA — so
-//! clarity beats vectorization tricks here; the micro_rp bench still tracks
-//! its GEMM against the XLA kernel for the §Perf log.
+//! (`rp`), by the native transformer models (`crate::model` — forward AND
+//! manual backward, so the ops here carry their VJPs), and by the
+//! metrics/memory machinery. Clarity beats vectorization tricks here; the
+//! micro_rp bench still tracks the GEMM against the XLA kernel for the
+//! §Perf log.
 
 mod matrix;
 mod ops;
 
 pub use matrix::Matrix;
-pub use ops::{gelu, relu, softmax_rows};
+pub use ops::{
+    gelu, gelu_grad, relu, rms_norm_rows, rms_norm_rows_vjp, softmax_rows,
+    softmax_rows_vjp, RMS_EPS,
+};

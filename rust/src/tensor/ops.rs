@@ -1,6 +1,12 @@
-//! Elementwise nonlinearities and row-softmax for the pilot MLP.
+//! Elementwise nonlinearities, row-softmax and row RMS-norm, plus their
+//! VJPs — the op set behind the pilot MLP and the native transformer's
+//! manual backward pass (`crate::model`). Every VJP here is checked
+//! against central finite differences in this file's tests.
 
 use super::Matrix;
+
+/// eps added to the mean square in the RMS-norm denominator.
+pub const RMS_EPS: f32 = 1e-6;
 
 pub fn relu(x: &Matrix) -> Matrix {
     x.map(|v| v.max(0.0))
@@ -31,6 +37,83 @@ pub fn softmax_rows(x: &Matrix) -> Matrix {
         }
     }
     out
+}
+
+/// Pointwise derivative of the tanh-approximation [`gelu`].
+pub fn gelu_grad(x: &Matrix) -> Matrix {
+    x.map(|v| {
+        let c = (2.0f32 / std::f32::consts::PI).sqrt();
+        let u = c * (v + 0.044715 * v * v * v);
+        let t = u.tanh();
+        0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * c * (1.0 + 3.0 * 0.044715 * v * v)
+    })
+}
+
+/// VJP of [`softmax_rows`]: given the forward probabilities `p` and the
+/// cotangent `dp`, returns `dz` with `dz_j = p_j (dp_j - Σ_k dp_k p_k)`
+/// per row. Rows whose probability mass is exactly zero (masked-out
+/// attention targets) get a zero gradient automatically.
+pub fn softmax_rows_vjp(probs: &Matrix, dprobs: &Matrix) -> Matrix {
+    assert_eq!(probs.shape(), dprobs.shape());
+    let mut out = Matrix::zeros(probs.rows, probs.cols);
+    for i in 0..probs.rows {
+        let p = probs.row(i);
+        let dp = dprobs.row(i);
+        let dot: f32 = p.iter().zip(dp.iter()).map(|(a, b)| a * b).sum();
+        let orow = &mut out.data[i * probs.cols..(i + 1) * probs.cols];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = p[j] * (dp[j] - dot);
+        }
+    }
+    out
+}
+
+/// RMS-norm over each row with a learned `[1, d]` scale — the T5-style
+/// layer normalization (no mean subtraction) used by the transformer's
+/// `ln*` layers, mirroring `layers.rms_norm` on the python side:
+/// `y = x / sqrt(mean(x^2) + eps) * scale`.
+pub fn rms_norm_rows(x: &Matrix, scale: &Matrix) -> Matrix {
+    assert_eq!(scale.shape(), (1, x.cols), "rms_norm scale must be [1, d]");
+    let d = x.cols as f32;
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        let orow = &mut out.data[i * x.cols..(i + 1) * x.cols];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = row[j] * inv * scale.at(0, j);
+        }
+    }
+    out
+}
+
+/// VJP of [`rms_norm_rows`]: returns `(dx, dscale)`. The inverse RMS is
+/// recomputed from `x` (cheaper than caching it through the layer stack).
+pub fn rms_norm_rows_vjp(x: &Matrix, scale: &Matrix, dy: &Matrix) -> (Matrix, Matrix) {
+    assert_eq!(scale.shape(), (1, x.cols), "rms_norm scale must be [1, d]");
+    assert_eq!(x.shape(), dy.shape());
+    let d = x.cols as f32;
+    let mut dx = Matrix::zeros(x.rows, x.cols);
+    let mut dscale = Matrix::zeros(1, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let dyrow = dy.row(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        // dot = Σ_j dy_j s_j x_j drives the d(inv)/dx term
+        let mut dot = 0.0f32;
+        for j in 0..x.cols {
+            dot += dyrow[j] * scale.at(0, j) * row[j];
+            *dscale.at_mut(0, j) += dyrow[j] * row[j] * inv;
+        }
+        let k = inv * inv * inv / d;
+        let dxrow = &mut dx.data[i * x.cols..(i + 1) * x.cols];
+        for (j, o) in dxrow.iter_mut().enumerate() {
+            *o = inv * scale.at(0, j) * dyrow[j] - k * row[j] * dot;
+        }
+    }
+    (dx, dscale)
 }
 
 #[cfg(test)]
@@ -70,5 +153,116 @@ mod tests {
         assert!(g.at(0, 0).abs() < 1e-3);
         assert_eq!(g.at(0, 1), 0.0);
         assert!((g.at(0, 2) - 10.0).abs() < 1e-3);
+    }
+
+    use crate::util::rng::Rng;
+
+    fn randn(seed: u64, n: usize, m: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(n, m, 1.0, &mut rng)
+    }
+
+    fn close(fd: f32, an: f32, who: &str) {
+        assert!(
+            (fd - an).abs() < 1e-3 + 1e-2 * fd.abs().max(an.abs()),
+            "{who}: fd={fd} analytic={an}"
+        );
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_differences() {
+        let x = Matrix::from_vec(1, 7, vec![-3.0, -1.0, -0.2, 0.0, 0.3, 1.5, 4.0]);
+        let g = gelu_grad(&x);
+        let eps = 1e-3f32;
+        for j in 0..x.cols {
+            let mut xp = x.clone();
+            *xp.at_mut(0, j) += eps;
+            let mut xm = x.clone();
+            *xm.at_mut(0, j) -= eps;
+            let fd = (gelu(&xp).at(0, j) - gelu(&xm).at(0, j)) / (2.0 * eps);
+            close(fd, g.at(0, j), "gelu'");
+        }
+    }
+
+    #[test]
+    fn softmax_vjp_matches_finite_differences() {
+        // scalar objective: f(z) = <softmax(z), c> for a fixed cotangent c
+        let z = randn(10, 3, 5);
+        let c = randn(11, 3, 5);
+        let probs = softmax_rows(&z);
+        let dz = softmax_rows_vjp(&probs, &c);
+        let f = |z: &Matrix| -> f32 {
+            softmax_rows(z)
+                .data
+                .iter()
+                .zip(c.data.iter())
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let eps = 1e-3f32;
+        for &(i, j) in &[(0usize, 0usize), (1, 2), (2, 4)] {
+            let mut zp = z.clone();
+            *zp.at_mut(i, j) += eps;
+            let mut zm = z.clone();
+            *zm.at_mut(i, j) -= eps;
+            let fd = (f(&zp) - f(&zm)) / (2.0 * eps);
+            close(fd, dz.at(i, j), "softmax vjp");
+        }
+    }
+
+    #[test]
+    fn softmax_vjp_zero_on_masked_targets() {
+        // a -1e30 score yields probability 0, so the VJP must be exactly 0
+        let z = Matrix::from_vec(1, 3, vec![0.5, -1e30, 1.0]);
+        let probs = softmax_rows(&z);
+        assert_eq!(probs.at(0, 1), 0.0);
+        let dz = softmax_rows_vjp(&probs, &randn(12, 1, 3));
+        assert_eq!(dz.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn rms_norm_rows_scales_to_unit_rms() {
+        let x = randn(13, 4, 16);
+        let ones = Matrix::from_fn(1, 16, |_, _| 1.0);
+        let y = rms_norm_rows(&x, &ones);
+        for i in 0..4 {
+            let rms: f32 =
+                (y.row(i).iter().map(|v| v * v).sum::<f32>() / 16.0).sqrt();
+            assert!((rms - 1.0).abs() < 1e-3, "row {i}: rms={rms}");
+        }
+    }
+
+    #[test]
+    fn rms_norm_vjp_matches_finite_differences() {
+        // scalar objective: f(x, s) = <rms_norm(x, s), c>
+        let x = randn(14, 3, 8);
+        let s = randn(15, 1, 8).map(|v| 1.0 + 0.3 * v);
+        let c = randn(16, 3, 8);
+        let (dx, ds) = rms_norm_rows_vjp(&x, &s, &c);
+        let f = |x: &Matrix, s: &Matrix| -> f32 {
+            rms_norm_rows(x, s)
+                .data
+                .iter()
+                .zip(c.data.iter())
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let eps = 1e-3f32;
+        for &(i, j) in &[(0usize, 0usize), (1, 3), (2, 7)] {
+            let mut xp = x.clone();
+            *xp.at_mut(i, j) += eps;
+            let mut xm = x.clone();
+            *xm.at_mut(i, j) -= eps;
+            let fd = (f(&xp, &s) - f(&xm, &s)) / (2.0 * eps);
+            close(fd, dx.at(i, j), "rms dx");
+        }
+        for j in [0usize, 4, 7] {
+            let mut sp = s.clone();
+            *sp.at_mut(0, j) += eps;
+            let mut sm = s.clone();
+            *sm.at_mut(0, j) -= eps;
+            let fd = (f(&x, &sp) - f(&x, &sm)) / (2.0 * eps);
+            close(fd, ds.at(0, j), "rms dscale");
+        }
     }
 }
