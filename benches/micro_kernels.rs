@@ -1,0 +1,289 @@
+//! Kernel/attention throughput microbench (not a paper table; seeds the
+//! §Perf trajectory) — emits `BENCH_kernels.json`.
+//!
+//! For every native catalog size (the `lora-*` LM grid and the `vit-*`
+//! grid) it measures tokens/sec for:
+//!
+//!   * `forward`          — model loss only (`want_grad = false`)
+//!   * `forward_backward` — loss + full manual gradient set
+//!   * `flora_step`       — a complete FLORA Algorithm-2 training step
+//!                          (rank 8, Adafactor base) through the Trainer
+//!
+//! and, as the refactor's acceptance metric, the attention core's
+//! forward+backward throughput on the batched GEMM path
+//! (`model::blocks::attention_*`) against the retained pre-refactor
+//! scalar nests (`model::blocks::reference`) — `attn_fwd_bwd_speedup`
+//! at lora-tiny scale is the ≥5× gate.
+//!
+//! Run: cargo bench --bench micro_kernels [-- --quick --parallelism N]
+
+use flora::bench::paper::BenchArgs;
+use flora::bench::time_it;
+use flora::config::{TaskKind, TrainConfig};
+use flora::coordinator::{MethodSpec, Trainer};
+use flora::data::images::ImageTask;
+use flora::model::blocks::{self, reference, BlockDims};
+use flora::model::{TransformerConfig, VitConfig};
+use flora::opt::OptimizerKind;
+use flora::tensor::{Matrix, Parallelism};
+use flora::util::rng::Rng;
+
+const BATCH: usize = 4;
+const FLORA_RANK: usize = 8;
+
+struct SizeResult {
+    model: &'static str,
+    family: &'static str,
+    tokens_per_batch: usize,
+    forward_tok_s: f64,
+    forward_backward_tok_s: f64,
+    flora_step_tok_s: f64,
+    attn_scalar_tok_s: f64,
+    attn_batched_tok_s: f64,
+}
+
+impl SizeResult {
+    fn speedup(&self) -> f64 {
+        if self.attn_scalar_tok_s > 0.0 {
+            self.attn_batched_tok_s / self.attn_scalar_tok_s
+        } else {
+            0.0
+        }
+    }
+}
+
+fn tok_s(tokens: usize, mean_secs: f64) -> f64 {
+    if mean_secs > 0.0 {
+        tokens as f64 / mean_secs
+    } else {
+        0.0
+    }
+}
+
+/// tokens/sec of one full FLORA momentum step via the Trainer (catalog
+/// executable path, so decompression/transfer costs are included). The
+/// thread budget must ride in the config: Trainer installs
+/// `cfg.parallelism` process-wide, so leaving it at the default would
+/// reset the budget the direct kernel measurements rely on.
+fn flora_step_tok_s(
+    model: &str,
+    task: TaskKind,
+    tokens: usize,
+    steps: usize,
+    parallelism: Parallelism,
+) -> Result<f64, String> {
+    let cfg = TrainConfig {
+        model: model.into(),
+        task,
+        method: MethodSpec::Flora { rank: FLORA_RANK },
+        optimizer: OptimizerKind::Adafactor,
+        lr: 0.01,
+        steps,
+        tau: 1,
+        kappa: 50,
+        batch: BATCH,
+        seed: 0,
+        eval_every: 0,
+        eval_samples: 8,
+        parallelism,
+        ..Default::default()
+    };
+    let report = Trainer::new(cfg, "native")
+        .and_then(|mut t| t.run())
+        .map_err(|e| format!("{model}: flora step failed: {e}"))?;
+    // one step consumes `tokens` (= batch * seq) tokens
+    Ok(report.steps_per_sec * tokens as f64)
+}
+
+/// Attention-core fwd+bwd tokens/sec: batched GEMM path vs the retained
+/// scalar reference, on random activations at this size.
+fn attention_pair(dims: BlockDims, b: usize, s: usize, iters: usize) -> (f64, f64) {
+    let mut rng = Rng::new(42);
+    let q = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+    let k = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+    let v = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+    let dctx = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+    let scalar = time_it(1, iters, || {
+        let (ctx, probs) = reference::attention_forward(&q, &k, &v, dims, b, s, true);
+        let grads = reference::attention_backward(&q, &k, &v, &probs, &dctx, dims, b, s);
+        std::hint::black_box((ctx, grads));
+    });
+    let batched = time_it(1, iters, || {
+        let (ctx, probs) = blocks::attention_forward(&q, &k, &v, dims, b, s, true);
+        let grads = blocks::attention_backward(&q, &k, &v, &probs, &dctx, dims, b, s);
+        std::hint::black_box((ctx, grads));
+    });
+    (tok_s(b * s, scalar.mean()), tok_s(b * s, batched.mean()))
+}
+
+fn lm_toy_batch(vocab: usize, s: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut toks = vec![0i32; BATCH * s];
+    let mut mask = vec![0.0f32; BATCH * s];
+    for bi in 0..BATCH {
+        for i in 0..s {
+            toks[bi * s + i] = (5 + (bi + i) % (vocab - 5)) as i32;
+            if i >= s / 2 {
+                mask[bi * s + i] = 1.0;
+            }
+        }
+    }
+    (toks, mask)
+}
+
+fn measure_lm(
+    model: &'static str,
+    cfg: TransformerConfig,
+    iters: usize,
+    par: Parallelism,
+) -> Result<SizeResult, String> {
+    let params = cfg.init(0);
+    let s = cfg.seq_len;
+    let tokens = BATCH * s;
+    let (toks, mask) = lm_toy_batch(cfg.vocab, s);
+    let fwd = time_it(1, iters, || {
+        let r = cfg.loss_and_grad(&params, &toks, &mask, BATCH, s, false);
+        std::hint::black_box(r.unwrap());
+    });
+    let fwd_bwd = time_it(1, iters, || {
+        let r = cfg.loss_and_grad(&params, &toks, &mask, BATCH, s, true);
+        std::hint::black_box(r.unwrap());
+    });
+    let (attn_scalar, attn_batched) = attention_pair(cfg.dims, BATCH, s, iters * 4);
+    Ok(SizeResult {
+        model,
+        family: "lm",
+        tokens_per_batch: tokens,
+        forward_tok_s: tok_s(tokens, fwd.mean()),
+        forward_backward_tok_s: tok_s(tokens, fwd_bwd.mean()),
+        flora_step_tok_s: flora_step_tok_s(model, TaskKind::Lm, tokens, iters, par)?,
+        attn_scalar_tok_s: attn_scalar,
+        attn_batched_tok_s: attn_batched,
+    })
+}
+
+fn measure_vit(
+    model: &'static str,
+    cfg: VitConfig,
+    iters: usize,
+    par: Parallelism,
+) -> Result<SizeResult, String> {
+    let params = cfg.init(0);
+    let tokens = BATCH * cfg.seq();
+    let task =
+        ImageTask::cifar_like(cfg.n_classes, cfg.image_size, cfg.channels, 0.25, 3);
+    let mut cursor = 0u64;
+    let (images, labels) = task.fill_flat(BATCH, 0, &mut cursor, 3);
+    let fwd = time_it(1, iters, || {
+        let r = cfg.loss_preds_grad(&params, &images, &labels, false);
+        std::hint::black_box(r.unwrap());
+    });
+    let fwd_bwd = time_it(1, iters, || {
+        let r = cfg.loss_preds_grad(&params, &images, &labels, true);
+        std::hint::black_box(r.unwrap());
+    });
+    let (attn_scalar, attn_batched) =
+        attention_pair(cfg.dims, BATCH, cfg.seq(), iters * 4);
+    Ok(SizeResult {
+        model,
+        family: "vit",
+        tokens_per_batch: tokens,
+        forward_tok_s: tok_s(tokens, fwd.mean()),
+        forward_backward_tok_s: tok_s(tokens, fwd_bwd.mean()),
+        flora_step_tok_s: flora_step_tok_s(model, TaskKind::Vit, tokens, iters, par)?,
+        attn_scalar_tok_s: attn_scalar,
+        attn_batched_tok_s: attn_batched,
+    })
+}
+
+fn json_of(results: &[SizeResult], parallelism: usize, quick: bool) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"micro_kernels\",\n");
+    out.push_str(&format!("  \"parallelism\": {parallelism},\n"));
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str("  \"sizes\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"model\": \"{}\", \"family\": \"{}\", \
+             \"tokens_per_batch\": {}, \"forward_tok_s\": {:.1}, \
+             \"forward_backward_tok_s\": {:.1}, \"flora_step_tok_s\": {:.1}, \
+             \"attn_fwd_bwd_scalar_tok_s\": {:.1}, \
+             \"attn_fwd_bwd_batched_tok_s\": {:.1}, \
+             \"attn_fwd_bwd_speedup\": {:.2}}}{}\n",
+            r.model,
+            r.family,
+            r.tokens_per_batch,
+            r.forward_tok_s,
+            r.forward_backward_tok_s,
+            r.flora_step_tok_s,
+            r.attn_scalar_tok_s,
+            r.attn_batched_tok_s,
+            r.speedup(),
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let iters = args.steps.unwrap_or(if args.quick { 4 } else { 12 });
+    let mut results = Vec::new();
+    for (name, cfg) in TransformerConfig::catalog_grid() {
+        if args.quick && name == "lora-base" {
+            continue; // the CI smoke stays fast; full runs cover it
+        }
+        eprintln!("[micro_kernels] measuring {name} ...");
+        results.push(measure_lm(name, cfg, iters, args.parallelism).unwrap_or_else(|e| {
+            // a broken training path must FAIL the bench (CI smoke gate)
+            eprintln!("[micro_kernels] {e}");
+            std::process::exit(1);
+        }));
+    }
+    for (name, cfg) in VitConfig::catalog_grid() {
+        eprintln!("[micro_kernels] measuring {name} ...");
+        results.push(measure_vit(name, cfg, iters, args.parallelism).unwrap_or_else(|e| {
+            eprintln!("[micro_kernels] {e}");
+            std::process::exit(1);
+        }));
+    }
+
+    let mut table = flora::bench::Table::new(
+        &format!(
+            "kernel throughput (tokens/sec, batch {BATCH}, parallelism {})",
+            args.parallelism.threads()
+        ),
+        &["Model", "fwd", "fwd+bwd", "flora step", "attn scalar", "attn batched", "speedup"],
+    );
+    for r in &results {
+        table.row(vec![
+            r.model.to_string(),
+            format!("{:.0}", r.forward_tok_s),
+            format!("{:.0}", r.forward_backward_tok_s),
+            format!("{:.0}", r.flora_step_tok_s),
+            format!("{:.0}", r.attn_scalar_tok_s),
+            format!("{:.0}", r.attn_batched_tok_s),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    table.print();
+
+    // the refactor's headline number; not asserted (CI runners vary) but
+    // surfaced loudly so a regression is visible in the log
+    if let Some(tiny) = results.iter().find(|r| r.model == "lora-tiny") {
+        let s = tiny.speedup();
+        if s < 5.0 {
+            eprintln!(
+                "[micro_kernels] WARNING: lora-tiny attention fwd+bwd \
+                 speedup {s:.2}x is below the 5x acceptance gate"
+            );
+        }
+    }
+
+    let json = json_of(&results, args.parallelism.threads(), args.quick);
+    let path = "BENCH_kernels.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

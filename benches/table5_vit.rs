@@ -33,8 +33,12 @@ fn main() {
         ("Base", MethodSpec::None, OptimizerKind::Adam, 0.003f32),
         ("Base", MethodSpec::Flora { rank: 16 }, OptimizerKind::Adafactor, 0.01),
     ];
-    // measured rows: the native vit-tiny transformer needs no artifacts
-    let model = if args.backend == "native" { "vit-tiny" } else { "vit-cifar" };
+    // measured rows: the native vit transformers need no artifacts;
+    // `-- --model vit-small` sweeps the native size grid
+    let default_model =
+        if args.backend == "native" { "vit-tiny" } else { "vit-cifar" };
+    let model = args.model.clone().unwrap_or_else(|| default_model.into());
+    let model = model.as_str();
     if args.require_artifacts() {
         let rt = shared_runtime(args.spec()).expect("runtime");
         for (scale, method, opt, lr) in cases {
@@ -52,6 +56,7 @@ fn main() {
                 seed: 0,
                 eval_every: 0,
                 eval_samples: 64,
+                parallelism: args.parallelism,
             };
             let report = Trainer::with_runtime(cfg, rt.clone()).and_then(|mut t| t.run());
             // analytic memory at ViT-Base scale (86M)

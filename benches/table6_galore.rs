@@ -46,6 +46,7 @@ fn main() {
                 seed: 0,
                 eval_every: 0,
                 eval_samples: 64,
+                ..Default::default()
             };
             if matches!(method, MethodSpec::Galore { .. }) {
                 cfg.optimizer = OptimizerKind::Adam; // GaLore = Adam-in-subspace

@@ -31,6 +31,7 @@ fn main() -> Result<(), String> {
         seed: 0,
         eval_every: 4,
         eval_samples: 16,
+        ..Default::default()
     };
     println!(
         "quickstart: FLORA(4) + Adafactor gradient accumulation on \

@@ -22,6 +22,7 @@ fn run(method: MethodSpec, lr: f32) -> Result<(), String> {
         seed: 0,
         eval_every: 0,
         eval_samples: 32,
+        ..Default::default()
     };
     let mut trainer = Trainer::new(cfg, "artifacts")?;
     let report = trainer.run()?;

@@ -29,6 +29,7 @@ fn main() -> Result<(), String> {
         seed: 0,
         eval_every: 25,
         eval_samples: 64,
+        ..Default::default()
     };
     println!(
         "train_lm: lm-base (d=128, 4 layers) from scratch, FLORA(16) momentum, {steps} steps"

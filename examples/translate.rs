@@ -25,6 +25,7 @@ fn main() -> Result<(), String> {
         seed: 0,
         eval_every: 10,
         eval_samples: 32,
+        ..Default::default()
     };
     println!("translate: FLORA(16) accumulation on IWSLT-sim (lm-small)");
     let mut trainer = Trainer::new(cfg, "artifacts")?;

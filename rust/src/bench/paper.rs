@@ -190,9 +190,10 @@ pub fn render_analytic_only(
 /// Bench-binary arg parsing: `--quick` (fewer steps), `--steps N`,
 /// `--artifacts DIR`, `--backend native|xla`,
 /// `--optimizer sgd|adam|adafactor|adafactor_nofactor`,
-/// `--model NAME` (e.g. `lora-tiny` to run a table on the native
-/// transformer instead of the bigram lm-small). cargo bench passes
-/// `--bench`; ignore unknown flags.
+/// `--model NAME` (e.g. `lora-small` to run a table on a different
+/// native-catalog size than its default), `--parallelism N` (kernel
+/// thread budget, installed process-wide; results are bit-identical at
+/// every N). cargo bench passes `--bench`; ignore unknown flags.
 pub struct BenchArgs {
     pub quick: bool,
     pub steps: Option<usize>,
@@ -203,8 +204,12 @@ pub struct BenchArgs {
     /// the paper's Adafactor; both backends execute all of them).
     pub optimizer: Option<OptimizerKind>,
     /// Model override for every measured cell (tables default to
-    /// lm-small; `lora-tiny` runs the native transformer catalog).
+    /// lm-small; `lora-tiny`/`lora-small`/... sweep the native
+    /// transformer size grid).
     pub model: Option<String>,
+    /// Kernel thread budget (`tensor::Parallelism`), already installed
+    /// by `parse()`.
+    pub parallelism: crate::tensor::Parallelism,
 }
 
 impl BenchArgs {
@@ -217,6 +222,7 @@ impl BenchArgs {
             backend: "xla".into(),
             optimizer: None,
             model: None,
+            parallelism: crate::tensor::Parallelism::single(),
         };
         let mut i = 0;
         while i < argv.len() {
@@ -224,6 +230,21 @@ impl BenchArgs {
                 "--quick" => out.quick = true,
                 "--steps" if i + 1 < argv.len() => {
                     out.steps = argv[i + 1].parse().ok();
+                    i += 1;
+                }
+                "--parallelism" if i + 1 < argv.len() => {
+                    match argv[i + 1].parse::<usize>() {
+                        Ok(n) if n >= 1 => {
+                            out.parallelism = crate::tensor::Parallelism::new(n)
+                        }
+                        _ => {
+                            eprintln!(
+                                "--parallelism: expected integer >= 1, got {:?}",
+                                argv[i + 1]
+                            );
+                            std::process::exit(2);
+                        }
+                    }
                     i += 1;
                 }
                 "--artifacts" if i + 1 < argv.len() => {
@@ -259,6 +280,9 @@ impl BenchArgs {
             }
             i += 1;
         }
+        // install the thread budget for every kernel this bench runs;
+        // bit-identical results at any setting, so this only moves time
+        out.parallelism.install();
         out
     }
 
@@ -272,8 +296,10 @@ impl BenchArgs {
     }
 
     /// Apply the CLI overrides a bench honors per cell: the `--optimizer`
-    /// selector and the `--model` override (the native backend executes
-    /// every base optimizer, so no per-backend remap is needed anymore).
+    /// selector, the `--model` override (the native backend executes
+    /// every base optimizer, so no per-backend remap is needed anymore)
+    /// and the `--parallelism` thread budget (Trainer installs it from
+    /// the config, so it must ride along per cell).
     pub fn adjust(&self, cfg: &mut TrainConfig) {
         if let Some(opt) = self.optimizer {
             cfg.optimizer = opt;
@@ -281,6 +307,7 @@ impl BenchArgs {
         if let Some(model) = &self.model {
             cfg.model = model.clone();
         }
+        cfg.parallelism = self.parallelism;
     }
 
     /// True when the selected backend can run the measured cells: always
@@ -318,6 +345,7 @@ pub fn base_config(task: TaskKind, steps: usize, tau: usize) -> TrainConfig {
         seed: 0,
         eval_every: 0,
         eval_samples: 32,
+        ..Default::default()
     }
 }
 
@@ -356,6 +384,7 @@ mod tests {
             backend: "native".into(),
             optimizer: None,
             model: None,
+            parallelism: crate::tensor::Parallelism::single(),
         };
         assert_eq!(args.spec(), "native");
         assert!(args.require_artifacts(), "native never needs artifacts");

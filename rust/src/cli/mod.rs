@@ -96,6 +96,8 @@ COMMANDS:
                   --rank N --optimizer sgd|adam|adafactor|adafactor_nofactor
                   --lr F --steps N --tau N
                   --kappa N --batch N --seed N --config file.toml
+                  --parallelism N (kernel thread budget; results are
+                  bit-identical at every N — see docs/ARCHITECTURE.md)
                   --backend native|xla (native = pure rust, no artifacts)
     eval        evaluate a fresh init (loss + generation metric)
                   --model lm-small --task sum --samples N --backend native|xla
@@ -107,16 +109,18 @@ COMMANDS:
                   --artifacts DIR [--exe NAME] [--backend native]
     help        show this message
 
-Switches: `--list-catalog` (with any command) prints the full native
-catalog inventory grouped by model family.
+Switches: `--list-catalog` (with any command) prints the native catalog
+inventory grouped by model family and size, with rank/optimizer
+variants collapsed into `r{N}`/`{opt}` patterns.
 
 Backends: `--backend native` runs the generated pure-rust catalog — the
-bigram LMs (lm-tiny/lm-small/lm-base) PLUS the native transformers:
-`lora-tiny` (causal LM; full-tune, LoRA-adapter and GaLore entries) and
-`vit-tiny` (ViT; `--model vit-tiny` implies `--task vit`) — every base
-optimizer in plain/accumulation/momentum modes, no artifacts or XLA
-needed. The default `xla` backend loads AOT artifacts via PJRT and needs
-a build with `--features xla`.
+bigram LMs (lm-tiny/lm-small/lm-base) PLUS the native transformer size
+grids: `lora-tiny`/`lora-small`/`lora-base` (causal LMs; full-tune,
+LoRA-adapter and GaLore entries) and `vit-tiny`/`vit-small` (ViTs;
+`--model vit-*` implies `--task vit`) — every base optimizer in
+plain/accumulation/momentum modes, no artifacts or XLA needed. The
+default `xla` backend loads AOT artifacts via PJRT and needs a build
+with `--features xla`.
 
 Benches reproducing each paper table/figure: `cargo bench --bench <name>`
 (figure1_pilot, table1_accumulation, table2_momentum, table3_kappa,

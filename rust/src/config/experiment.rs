@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 use super::toml::{parse_toml, TomlValue};
 use crate::coordinator::method::MethodSpec;
 use crate::opt::OptimizerKind;
+use crate::tensor::Parallelism;
 
 /// Which synthetic workload drives training (DESIGN.md §4 mappings).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,6 +71,11 @@ pub struct TrainConfig {
     pub seed: u64,
     pub eval_every: usize,
     pub eval_samples: usize,
+    /// tensor-kernel thread budget (`--parallelism N`);
+    /// `Trainer::with_runtime` installs it process-wide, so it takes
+    /// effect on every construction path. Bit-identical results at
+    /// every setting — see `tensor::Parallelism`.
+    pub parallelism: Parallelism,
 }
 
 impl Default for TrainConfig {
@@ -87,6 +93,7 @@ impl Default for TrainConfig {
             seed: 0,
             eval_every: 50,
             eval_samples: 16,
+            parallelism: Parallelism::single(),
         }
     }
 }
@@ -145,6 +152,13 @@ impl ExperimentConfig {
                 "train.seed" => cfg.train.seed = req_int(k, v)? as u64,
                 "train.eval_every" => cfg.train.eval_every = req_int(k, v)? as usize,
                 "train.eval_samples" => cfg.train.eval_samples = req_int(k, v)? as usize,
+                "train.parallelism" => {
+                    let n = req_int(k, v)?;
+                    if n < 1 {
+                        return Err("parallelism must be >= 1".into());
+                    }
+                    cfg.train.parallelism = Parallelism::new(n as usize);
+                }
                 _ => return Err(format!("unknown config key {k:?}")),
             }
         }
@@ -232,6 +246,17 @@ mod tests {
     #[test]
     fn zero_tau_rejected() {
         assert!(ExperimentConfig::from_toml_str("train.tau = 0").is_err());
+    }
+
+    #[test]
+    fn parallelism_parses_and_rejects_zero() {
+        let c = ExperimentConfig::from_toml_str("train.parallelism = 4").unwrap();
+        assert_eq!(c.train.parallelism, Parallelism::new(4));
+        assert_eq!(
+            ExperimentConfig::default().train.parallelism,
+            Parallelism::single()
+        );
+        assert!(ExperimentConfig::from_toml_str("train.parallelism = 0").is_err());
     }
 
     #[test]

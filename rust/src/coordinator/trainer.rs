@@ -100,6 +100,11 @@ impl Trainer {
         cfg: TrainConfig,
         rt: Rc<RefCell<Runtime>>,
     ) -> Result<Self, String> {
+        // every construction path funnels here, so the config's kernel
+        // thread budget always takes effect — no launcher has to remember
+        // to install it. Safe as a process-wide side effect: results are
+        // bit-identical at every setting (tensor::Parallelism).
+        cfg.parallelism.install();
         let (model, ledger) = {
             let rt = rt.borrow();
             (rt.manifest.model(&cfg.model)?.clone(), rt.ledger.clone())

@@ -20,10 +20,13 @@
 //! executables through the `runtime::Backend` boundary over
 //! backend-neutral tensors: the default build ships the pure-rust
 //! **native** backend (generated catalog covering the bigram LMs AND the
-//! [`model`] transformers — a causal LM with LoRA adapters plus a ViT,
-//! both with manual backward passes — so it builds and tests on a bare
-//! machine, zero dependencies), and the original PJRT path that loads the
-//! AOT artifacts lives behind the `xla` cargo feature.
+//! [`model`] transformer size grids — causal LMs with LoRA adapters plus
+//! ViTs, all with manual backward passes on the cache-blocked,
+//! optionally row-parallel GEMM kernels in [`tensor`]
+//! ([`tensor::Parallelism`]; bit-identical at every thread count) — so
+//! it builds and tests on a bare machine, zero dependencies), and the
+//! original PJRT path that loads the AOT artifacts lives behind the
+//! `xla` cargo feature.
 //!
 //! See README.md for the backend matrix, DESIGN.md for the system
 //! inventory and EXPERIMENTS.md for the paper-vs-measured record.

@@ -71,6 +71,15 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.train.seed = args.u64_flag("seed", cfg.train.seed)?;
     cfg.train.eval_every = args.usize_flag("eval-every", cfg.train.eval_every)?;
     cfg.train.eval_samples = args.usize_flag("eval-samples", cfg.train.eval_samples)?;
+    let threads =
+        args.usize_flag("parallelism", cfg.train.parallelism.threads())?;
+    if threads == 0 {
+        return Err("--parallelism: must be >= 1".into());
+    }
+    cfg.train.parallelism = flora::tensor::Parallelism::new(threads);
+    // install the kernel thread budget process-wide; results are
+    // bit-identical at every setting (tensor::Parallelism)
+    cfg.train.parallelism.install();
     cfg.artifacts_dir = args.flag_or("artifacts", &cfg.artifacts_dir);
     // the backend spec rides in artifacts_dir ("native" is reserved —
     // Runtime::from_spec dispatches on it); the native catalog executes
@@ -214,28 +223,13 @@ fn cmd_memory(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// `flora --list-catalog` (with any or no command): the full native
-/// catalog inventory, grouped by model family.
+/// `flora --list-catalog` (with any or no command): the native catalog
+/// inventory grouped by family and size, rank/optimizer variants
+/// collapsed (`runtime::catalog_summary`) so the size grid stays
+/// readable.
 fn cmd_list_catalog() -> Result<(), String> {
     let manifest = flora::runtime::native_manifest();
-    println!(
-        "native catalog: {} models, {} executables",
-        manifest.models.len(),
-        manifest.executables.len()
-    );
-    for (model, info) in &manifest.models {
-        // group on the manifest's model field, not the name prefix
-        let entries: Vec<&String> = manifest
-            .executables
-            .values()
-            .filter(|e| &e.model == model)
-            .map(|e| &e.name)
-            .collect();
-        println!("\n{model} (kind {}, {} entries):", info.kind, entries.len());
-        for e in entries {
-            println!("  {e}");
-        }
-    }
+    print!("{}", flora::runtime::catalog_summary(&manifest));
     Ok(())
 }
 

@@ -15,16 +15,20 @@
 //! intermediates; the elementwise/softmax/norm VJPs come from
 //! `tensor::ops` where each is finite-difference-checked, and the whole
 //! stack is FD-checked again end-to-end in `model::transformer` tests.
+//!
+//! Attention is matmul-shaped end to end: QKᵀ, the masked softmax (and
+//! its VJP), and the context/cotangent accumulations all run on the
+//! batched panel primitives of `tensor::batched`, which pack the
+//! head-strided views into contiguous panels for the cache-blocked
+//! kernels. The pre-refactor scalar nests survive in [`reference`] as
+//! the bit-exactness oracle and microbench baseline.
 
 use super::{add_grad, pget, ParamSet};
 use crate::tensor::{
-    gelu, gelu_grad, rms_norm_rows, rms_norm_rows_vjp, softmax_rows,
-    softmax_rows_vjp, Matrix,
+    batched_matmul, batched_matmul_nt, batched_matmul_tn, gather_heads,
+    gelu, gelu_grad, rms_norm_rows, rms_norm_rows_vjp, scatter_heads,
+    softmax_rows_masked, softmax_rows_vjp_batched, BatchedMatrix, Matrix,
 };
-
-/// Score assigned to causally-masked attention targets before the
-/// softmax; exp(-1e30 - max) underflows to exactly 0 probability.
-const MASKED: f32 = -1e30;
 
 /// Dimensions of the encoder stack shared by the LM and ViT configs.
 #[derive(Clone, Copy, Debug)]
@@ -61,15 +65,18 @@ impl BlockDims {
     }
 }
 
-/// Forward intermediates of one block, kept for the backward pass.
+/// Forward intermediates of one block, kept for the backward pass. The
+/// q/k/v projections are cached in their PACKED `[b*h, s, dh]` panel
+/// form (same bytes as the flat matrices) so the backward contractions
+/// reuse them without re-gathering.
 pub(crate) struct LayerCache {
     x_in: Matrix,
     n1: Matrix,
-    q: Matrix,
-    k: Matrix,
-    v: Matrix,
-    /// attention probabilities per (batch, head), each `[s, s]`
-    probs: Vec<Matrix>,
+    qh: BatchedMatrix,
+    kh: BatchedMatrix,
+    vh: BatchedMatrix,
+    /// attention probabilities, one `[s, s]` panel per (batch, head)
+    probs: BatchedMatrix,
     ctx: Matrix,
     x_mid: Matrix,
     n2: Matrix,
@@ -90,20 +97,22 @@ pub(crate) fn stack_forward(
     debug_assert_eq!(x0.shape(), (b * s, dims.d_model));
     let mut x = x0;
     let mut caches = Vec::with_capacity(dims.n_layers);
+    let h = dims.n_heads;
+    let dh = dims.head_dim();
     for l in 0..dims.n_layers {
         let p = |suffix: &str| format!("layer{l}/{suffix}");
         let n1 = rms_norm_rows(&x, pget(params, &p("ln1/scale")));
-        let q = n1.matmul(pget(params, &p("attn/wq")));
-        let k = n1.matmul(pget(params, &p("attn/wk")));
-        let v = n1.matmul(pget(params, &p("attn/wv")));
-        let (ctx, probs) = attention_forward(&q, &k, &v, dims, b, s, causal);
+        let qh = gather_heads(&n1.matmul(pget(params, &p("attn/wq"))), b, s, h, dh);
+        let kh = gather_heads(&n1.matmul(pget(params, &p("attn/wk"))), b, s, h, dh);
+        let vh = gather_heads(&n1.matmul(pget(params, &p("attn/wv"))), b, s, h, dh);
+        let (ctx, probs) = attention_forward_packed(&qh, &kh, &vh, dims, b, s, causal);
         let attn_out = ctx.matmul(pget(params, &p("attn/wo")));
         let x_mid = &x + &attn_out;
         let n2 = rms_norm_rows(&x_mid, pget(params, &p("ln2/scale")));
         let h1 = n2.matmul(pget(params, &p("ffn/w1")));
         let ff = gelu(&h1).matmul(pget(params, &p("ffn/w2")));
         let x_out = &x_mid + &ff;
-        caches.push(LayerCache { x_in: x, n1, q, k, v, probs, ctx, x_mid, n2, h1 });
+        caches.push(LayerCache { x_in: x, n1, qh, kh, vh, probs, ctx, x_mid, n2, h1 });
         x = x_out;
     }
     (x, caches)
@@ -142,7 +151,9 @@ pub(crate) fn stack_backward(
         // attention branch: d attn_out = dx_mid (residual of x_mid)
         add_grad(grads, &p("attn/wo"), cache.ctx.matmul_tn(&dx_mid));
         let dctx = dx_mid.matmul_nt(pget(params, &p("attn/wo")));
-        let (dq, dk, dv) = attention_backward(&cache, &dctx, dims, b, s);
+        let (dq, dk, dv) = attention_backward_packed(
+            &cache.qh, &cache.kh, &cache.vh, &cache.probs, &dctx, dims, b, s,
+        );
         add_grad(grads, &p("attn/wq"), cache.n1.matmul_tn(&dq));
         add_grad(grads, &p("attn/wk"), cache.n1.matmul_tn(&dk));
         add_grad(grads, &p("attn/wv"), cache.n1.matmul_tn(&dv));
@@ -158,10 +169,17 @@ pub(crate) fn stack_backward(
     dx
 }
 
-/// Multi-head scaled-dot-product attention on `[b*s, d]` activations.
-/// Returns the context (pre-`Wo`) and the per-(batch, head) probability
-/// matrices the backward pass needs.
-fn attention_forward(
+/// Multi-head scaled-dot-product attention on `[b*s, d]` activations,
+/// phrased entirely as batched GEMMs: the head-strided q/k/v views are
+/// packed into contiguous `[b*h, s, dh]` panels, QKᵀ and probs·V run on
+/// the cache-blocked kernels, and the causal mask is applied inside the
+/// masked softmax. Returns the context (pre-`Wo`) and the probability
+/// panels the backward pass needs.
+///
+/// Bit-identical to the retained scalar path ([`reference`]) for every
+/// `Parallelism` setting — the `attention_matches_scalar_reference` test
+/// compares them exactly.
+pub fn attention_forward(
     q: &Matrix,
     k: &Matrix,
     v: &Matrix,
@@ -169,107 +187,217 @@ fn attention_forward(
     b: usize,
     s: usize,
     causal: bool,
-) -> (Matrix, Vec<Matrix>) {
-    let d = dims.d_model;
+) -> (Matrix, BatchedMatrix) {
+    let h = dims.n_heads;
+    let dh = dims.head_dim();
+    let qh = gather_heads(q, b, s, h, dh);
+    let kh = gather_heads(k, b, s, h, dh);
+    let vh = gather_heads(v, b, s, h, dh);
+    attention_forward_packed(&qh, &kh, &vh, dims, b, s, causal)
+}
+
+/// [`attention_forward`] on already-packed `[b*h, s, dh]` q/k/v panels —
+/// the stack keeps the panels in its [`LayerCache`], so forward and
+/// backward each pack exactly once.
+pub(crate) fn attention_forward_packed(
+    qh: &BatchedMatrix,
+    kh: &BatchedMatrix,
+    vh: &BatchedMatrix,
+    dims: BlockDims,
+    b: usize,
+    s: usize,
+    causal: bool,
+) -> (Matrix, BatchedMatrix) {
     let h = dims.n_heads;
     let dh = dims.head_dim();
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut ctx = Matrix::zeros(b * s, d);
-    let mut probs_all = Vec::with_capacity(b * h);
-    for bi in 0..b {
-        for hi in 0..h {
-            let off = hi * dh;
-            let mut scores = Matrix::zeros(s, s);
-            for i in 0..s {
-                let qrow = q.row(bi * s + i);
-                for j in 0..s {
-                    if causal && j > i {
-                        *scores.at_mut(i, j) = MASKED;
-                        continue;
-                    }
-                    let krow = k.row(bi * s + j);
-                    let mut acc = 0.0f32;
-                    for t in 0..dh {
-                        acc += qrow[off + t] * krow[off + t];
-                    }
-                    *scores.at_mut(i, j) = acc * scale;
-                }
-            }
-            let probs = softmax_rows(&scores);
-            for i in 0..s {
-                let prow = probs.row(i);
-                for j in 0..s {
-                    let pij = prow[j];
-                    let vrow = v.row(bi * s + j);
-                    for t in 0..dh {
-                        *ctx.at_mut(bi * s + i, off + t) += pij * vrow[off + t];
-                    }
-                }
-            }
-            probs_all.push(probs);
-        }
-    }
-    (ctx, probs_all)
+    let mut probs = batched_matmul_nt(qh, kh, scale);
+    softmax_rows_masked(&mut probs, causal);
+    let ctxh = batched_matmul(&probs, vh);
+    (scatter_heads(&ctxh, b, s, h, dh), probs)
 }
 
 /// Backward of [`attention_forward`]: cotangents of q, k, v given the
-/// context cotangent. Masked targets carry zero probability, so their
-/// score gradients vanish without special-casing.
-fn attention_backward(
-    cache: &LayerCache,
+/// context cotangent — the same four contractions (dprobs = dctx·Vᵀ,
+/// dV = probsᵀ·dctx, dQ = dS·K, dK = dSᵀ·Q) as batched GEMMs, with the
+/// softmax VJP in between. Masked targets carry zero probability, so
+/// their score gradients vanish without special-casing.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_backward(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    probs: &BatchedMatrix,
     dctx: &Matrix,
     dims: BlockDims,
     b: usize,
     s: usize,
 ) -> (Matrix, Matrix, Matrix) {
-    let d = dims.d_model;
+    let h = dims.n_heads;
+    let dh = dims.head_dim();
+    let qh = gather_heads(q, b, s, h, dh);
+    let kh = gather_heads(k, b, s, h, dh);
+    let vh = gather_heads(v, b, s, h, dh);
+    attention_backward_packed(&qh, &kh, &vh, probs, dctx, dims, b, s)
+}
+
+/// [`attention_backward`] on the cached packed panels.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_backward_packed(
+    qh: &BatchedMatrix,
+    kh: &BatchedMatrix,
+    vh: &BatchedMatrix,
+    probs: &BatchedMatrix,
+    dctx: &Matrix,
+    dims: BlockDims,
+    b: usize,
+    s: usize,
+) -> (Matrix, Matrix, Matrix) {
     let h = dims.n_heads;
     let dh = dims.head_dim();
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut dq = Matrix::zeros(b * s, d);
-    let mut dk = Matrix::zeros(b * s, d);
-    let mut dv = Matrix::zeros(b * s, d);
-    for bi in 0..b {
-        for hi in 0..h {
-            let off = hi * dh;
-            let probs = &cache.probs[bi * h + hi];
-            // dprobs[i][j] = <dctx[(b,i)], v[(b,j)]> over this head's slice
-            let mut dprobs = Matrix::zeros(s, s);
-            for i in 0..s {
-                let dcrow = dctx.row(bi * s + i);
-                let prow = probs.row(i);
-                for j in 0..s {
-                    let vrow = cache.v.row(bi * s + j);
-                    let mut acc = 0.0f32;
-                    for t in 0..dh {
-                        acc += dcrow[off + t] * vrow[off + t];
+    let dctxh = gather_heads(dctx, b, s, h, dh);
+    let dprobs = batched_matmul_nt(&dctxh, vh, 1.0);
+    let dvh = batched_matmul_tn(probs, &dctxh);
+    // fold the score scale into the cotangent ONCE (elementwise, exactly
+    // like the scalar path's `g = dscores * scale`) so dQ/dK stay
+    // bit-identical to the reference
+    let mut dscores = softmax_rows_vjp_batched(probs, &dprobs);
+    dscores.scale_inplace(scale);
+    let dqh = batched_matmul(&dscores, kh);
+    let dkh = batched_matmul_tn(&dscores, qh);
+    (
+        scatter_heads(&dqh, b, s, h, dh),
+        scatter_heads(&dkh, b, s, h, dh),
+        scatter_heads(&dvh, b, s, h, dh),
+    )
+}
+
+/// The pre-refactor scalar attention, retained verbatim as the numerical
+/// oracle for the batched path (bit-compared in this module's tests) and
+/// as the `benches/micro_kernels.rs` throughput baseline. Not called by
+/// any training path.
+pub mod reference {
+    use super::BlockDims;
+    use crate::tensor::{softmax_rows, softmax_rows_vjp, Matrix};
+
+    /// Score assigned to causally-masked attention targets before the
+    /// softmax; exp(-1e30 - max) underflows to exactly 0 probability.
+    const MASKED: f32 = -1e30;
+
+    /// Scalar-loop multi-head attention forward (the pre-refactor code).
+    pub fn attention_forward(
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        dims: BlockDims,
+        b: usize,
+        s: usize,
+        causal: bool,
+    ) -> (Matrix, Vec<Matrix>) {
+        let d = dims.d_model;
+        let h = dims.n_heads;
+        let dh = dims.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = Matrix::zeros(b * s, d);
+        let mut probs_all = Vec::with_capacity(b * h);
+        for bi in 0..b {
+            for hi in 0..h {
+                let off = hi * dh;
+                let mut scores = Matrix::zeros(s, s);
+                for i in 0..s {
+                    let qrow = q.row(bi * s + i);
+                    for j in 0..s {
+                        if causal && j > i {
+                            *scores.at_mut(i, j) = MASKED;
+                            continue;
+                        }
+                        let krow = k.row(bi * s + j);
+                        let mut acc = 0.0f32;
+                        for t in 0..dh {
+                            acc += qrow[off + t] * krow[off + t];
+                        }
+                        *scores.at_mut(i, j) = acc * scale;
                     }
-                    *dprobs.at_mut(i, j) = acc;
                 }
-                // dv[(b,j)] += probs[i][j] * dctx[(b,i)]
-                for j in 0..s {
-                    let pij = prow[j];
-                    for t in 0..dh {
-                        *dv.at_mut(bi * s + j, off + t) += pij * dcrow[off + t];
+                let probs = softmax_rows(&scores);
+                for i in 0..s {
+                    let prow = probs.row(i);
+                    for j in 0..s {
+                        let pij = prow[j];
+                        let vrow = v.row(bi * s + j);
+                        for t in 0..dh {
+                            *ctx.at_mut(bi * s + i, off + t) += pij * vrow[off + t];
+                        }
                     }
                 }
+                probs_all.push(probs);
             }
-            let dscores = softmax_rows_vjp(probs, &dprobs);
-            for i in 0..s {
-                let dsrow = dscores.row(i);
-                for j in 0..s {
-                    let g = dsrow[j] * scale;
-                    let krow = cache.k.row(bi * s + j);
-                    let qrow = cache.q.row(bi * s + i);
-                    for t in 0..dh {
-                        *dq.at_mut(bi * s + i, off + t) += g * krow[off + t];
-                        *dk.at_mut(bi * s + j, off + t) += g * qrow[off + t];
+        }
+        (ctx, probs_all)
+    }
+
+    /// Scalar-loop attention backward (the pre-refactor code).
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_backward(
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        probs_all: &[Matrix],
+        dctx: &Matrix,
+        dims: BlockDims,
+        b: usize,
+        s: usize,
+    ) -> (Matrix, Matrix, Matrix) {
+        let d = dims.d_model;
+        let h = dims.n_heads;
+        let dh = dims.head_dim();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut dq = Matrix::zeros(b * s, d);
+        let mut dk = Matrix::zeros(b * s, d);
+        let mut dv = Matrix::zeros(b * s, d);
+        for bi in 0..b {
+            for hi in 0..h {
+                let off = hi * dh;
+                let probs = &probs_all[bi * h + hi];
+                // dprobs[i][j] = <dctx[(b,i)], v[(b,j)]> over this head
+                let mut dprobs = Matrix::zeros(s, s);
+                for i in 0..s {
+                    let dcrow = dctx.row(bi * s + i);
+                    let prow = probs.row(i);
+                    for j in 0..s {
+                        let vrow = v.row(bi * s + j);
+                        let mut acc = 0.0f32;
+                        for t in 0..dh {
+                            acc += dcrow[off + t] * vrow[off + t];
+                        }
+                        *dprobs.at_mut(i, j) = acc;
+                    }
+                    // dv[(b,j)] += probs[i][j] * dctx[(b,i)]
+                    for j in 0..s {
+                        let pij = prow[j];
+                        for t in 0..dh {
+                            *dv.at_mut(bi * s + j, off + t) += pij * dcrow[off + t];
+                        }
+                    }
+                }
+                let dscores = softmax_rows_vjp(probs, &dprobs);
+                for i in 0..s {
+                    let dsrow = dscores.row(i);
+                    for j in 0..s {
+                        let g = dsrow[j] * scale;
+                        let krow = k.row(bi * s + j);
+                        let qrow = q.row(bi * s + i);
+                        for t in 0..dh {
+                            *dq.at_mut(bi * s + i, off + t) += g * krow[off + t];
+                            *dk.at_mut(bi * s + j, off + t) += g * qrow[off + t];
+                        }
                     }
                 }
             }
         }
+        (dq, dk, dv)
     }
-    (dq, dk, dv)
 }
 
 #[cfg(test)]
@@ -295,6 +423,37 @@ mod tests {
             }
         }
         params
+    }
+
+    #[test]
+    fn attention_matches_scalar_reference_bit_for_bit() {
+        // the batched GEMM path must reproduce the retained scalar
+        // attention EXACTLY — forward context, probabilities, and all
+        // three backward cotangents — in both masking modes
+        let dims = BlockDims { d_model: 12, n_layers: 1, n_heads: 3, d_ff: 24 };
+        let (b, s) = (2usize, 5usize);
+        let mut rng = Rng::new(7);
+        let q = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        let k = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        let v = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        let dctx = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        for causal in [true, false] {
+            let (ctx, probs) = attention_forward(&q, &k, &v, dims, b, s, causal);
+            let (ctx_ref, probs_ref) =
+                reference::attention_forward(&q, &k, &v, dims, b, s, causal);
+            assert!(ctx.allclose(&ctx_ref, 0.0), "ctx (causal={causal})");
+            for (p, want) in (0..probs.batch).zip(probs_ref.iter()) {
+                assert_eq!(probs.panel(p), &want.data[..], "probs panel {p}");
+            }
+            let (dq, dk, dv) =
+                attention_backward(&q, &k, &v, &probs, &dctx, dims, b, s);
+            let (dq_ref, dk_ref, dv_ref) = reference::attention_backward(
+                &q, &k, &v, &probs_ref, &dctx, dims, b, s,
+            );
+            assert!(dq.allclose(&dq_ref, 0.0), "dq (causal={causal})");
+            assert!(dk.allclose(&dk_ref, 0.0), "dk (causal={causal})");
+            assert!(dv.allclose(&dv_ref, 0.0), "dv (causal={causal})");
+        }
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Shared fused softmax cross-entropy head.
+//!
+//! Both native model families end in the same block: gather the feature
+//! rows that carry a prediction, multiply by a class matrix, take a
+//! numerically-stable softmax cross-entropy, and (in training) scatter
+//! `dlogits`-driven gradients back. The LM (`transformer.rs`, tied
+//! embedding head, mask-weighted positions) and the ViT (`vit.rs`,
+//! `head/w`, uniform weights over the batch) used to carry two copies of
+//! the forward+gradient block; this module is the single shared one —
+//! and, because the logits/backward contractions are now whole-matrix
+//! GEMMs on the blocked kernels, it is also the fast path.
+
+use crate::tensor::Matrix;
+
+/// Fused masked softmax cross-entropy over precomputed `logits`
+/// (`[n_examples, n_classes]`). Example `e` has target class
+/// `targets[e]` and weight `weights[e]` (> 0; zero-weight examples are
+/// the caller's to filter out). Returns the weighted-mean loss
+/// `Σ_e w_e · CE_e / Σ_e w_e` (accumulated in f64, like both former
+/// copies) and — with `want_grad` — `dlogits` with
+/// `dlogits[e][c] = w_e/Σw · (p_c − 1{c = target_e})`, i.e. the exact
+/// cotangent of the mean loss. Without `want_grad` the gradient matrix
+/// is empty (`0×0`).
+pub(crate) fn fused_softmax_xent(
+    logits: &Matrix,
+    targets: &[usize],
+    weights: &[f32],
+    want_grad: bool,
+) -> (f32, Matrix) {
+    let (n, c) = logits.shape();
+    assert_eq!(targets.len(), n, "one target per logits row");
+    assert_eq!(weights.len(), n, "one weight per logits row");
+    let total_w: f64 = weights.iter().map(|&w| w as f64).sum();
+    let mut dlogits = if want_grad {
+        Matrix::zeros(n, c)
+    } else {
+        Matrix::zeros(0, 0)
+    };
+    if total_w <= 0.0 {
+        return (0.0, dlogits);
+    }
+    let inv_w = (1.0 / total_w) as f32;
+    let mut loss = 0.0f64;
+    let mut expd = vec![0.0f32; c];
+    for e in 0..n {
+        let row = logits.row(e);
+        let tgt = targets[e];
+        debug_assert!(tgt < c, "target {tgt} out of range for {c} classes");
+        let wt = weights[e];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut denom = 0.0f32;
+        for (ex, &x) in expd.iter_mut().zip(row.iter()) {
+            *ex = (x - mx).exp();
+            denom += *ex;
+        }
+        loss += wt as f64 * (denom.ln() + mx - row[tgt]) as f64;
+        if want_grad {
+            let drow = &mut dlogits.data[e * c..(e + 1) * c];
+            for (t, (dl, &ex)) in drow.iter_mut().zip(expd.iter()).enumerate() {
+                let p = ex / denom;
+                *dl = wt * inv_w * (p - if t == tgt { 1.0 } else { 0.0 });
+            }
+        }
+    }
+    ((loss / total_w) as f32, dlogits)
+}
+
+/// Row-wise argmax with first-max tie-breaking (strict `>`), matching
+/// the scalar argmax loops the eval paths used.
+pub(crate) fn argmax_rows(m: &Matrix) -> Vec<usize> {
+    (0..m.rows)
+        .map(|i| {
+            let row = m.row(i);
+            let mut best = 0usize;
+            for (j, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Pack the listed `rows` of `x` into a dense `[rows.len(), x.cols]`
+/// matrix (the prediction-carrying feature rows).
+pub(crate) fn gather_rows(x: &Matrix, rows: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(rows.len(), x.cols);
+    for (e, &r) in rows.iter().enumerate() {
+        out.data[e * x.cols..(e + 1) * x.cols].copy_from_slice(x.row(r));
+    }
+    out
+}
+
+/// Scatter-accumulate `src` row `e` into `dst` row `rows[e]`
+/// (`dst[rows[e]] += src[e]`) — the inverse of [`gather_rows`] for
+/// cotangents. Accumulating (not assigning) keeps repeated target rows
+/// correct, though the current callers' row lists are disjoint.
+pub(crate) fn scatter_rows_add(dst: &mut Matrix, rows: &[usize], src: &Matrix) {
+    assert_eq!(src.rows, rows.len());
+    assert_eq!(src.cols, dst.cols);
+    for (e, &r) in rows.iter().enumerate() {
+        let drow = &mut dst.data[r * dst.cols..(r + 1) * dst.cols];
+        for (d, &s) in drow.iter_mut().zip(src.row(e).iter()) {
+            *d += s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(seed: u64, n: usize, m: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(n, m, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn uniform_logits_give_ln_c_loss() {
+        let logits = Matrix::zeros(3, 8);
+        let (loss, _) = fused_softmax_xent(&logits, &[0, 3, 7], &[1.0; 3], false);
+        assert!((loss - (8f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let logits = randn(1, 4, 6);
+        let targets = [2usize, 0, 5, 3];
+        let weights = [1.0f32, 0.5, 2.0, 1.0];
+        let (_, d) = fused_softmax_xent(&logits, &targets, &weights, true);
+        let eps = 1e-3f32;
+        for &(e, c) in &[(0usize, 2usize), (1, 1), (2, 5), (3, 0)] {
+            let mut lp = logits.clone();
+            *lp.at_mut(e, c) += eps;
+            let mut lm = logits.clone();
+            *lm.at_mut(e, c) -= eps;
+            let fp = fused_softmax_xent(&lp, &targets, &weights, false).0;
+            let fm = fused_softmax_xent(&lm, &targets, &weights, false).0;
+            let fd = (fp - fm) / (2.0 * eps);
+            let an = d.at(e, c);
+            assert!(
+                (fd - an).abs() < 1e-3 + 1e-2 * fd.abs().max(an.abs()),
+                "({e},{c}): fd={fd} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn dlogits_rows_sum_to_zero() {
+        // softmax probabilities sum to 1 and the one-hot subtracts 1
+        let logits = randn(2, 3, 5);
+        let (_, d) = fused_softmax_xent(&logits, &[1, 4, 0], &[1.0, 3.0, 0.5], true);
+        for e in 0..3 {
+            let s: f32 = d.row(e).iter().sum();
+            assert!(s.abs() < 1e-6, "row {e} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn zero_total_weight_is_a_zero_loss() {
+        let logits = randn(3, 2, 4);
+        let (loss, d) = fused_softmax_xent(&logits, &[0, 1], &[0.0, 0.0], true);
+        assert_eq!(loss, 0.0);
+        assert_eq!(d.shape(), (2, 4));
+        assert!(d.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn argmax_rows_first_max_wins_ties() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 3.0, 3.0, -1.0, -5.0, -1.0]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_accumulates() {
+        let x = randn(4, 6, 3);
+        let rows = [4usize, 1, 4];
+        let g = gather_rows(&x, &rows);
+        assert!(g.row(0) == x.row(4) && g.row(1) == x.row(1));
+        let mut dst = Matrix::zeros(6, 3);
+        scatter_rows_add(&mut dst, &rows, &g);
+        // row 4 was scattered twice
+        for j in 0..3 {
+            assert_eq!(dst.at(4, j), 2.0 * x.at(4, j));
+            assert_eq!(dst.at(1, j), x.at(1, j));
+            assert_eq!(dst.at(0, j), 0.0);
+        }
+    }
+}

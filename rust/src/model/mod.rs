@@ -16,8 +16,14 @@
 //! `layer0/ffn/w1`, `ln*/scale`, ...), so [`is_projectable`] encodes the
 //! paper's §3.1 rule ("projections on attention and feed-forward layers
 //! only") in one place for the native catalog too.
+//!
+//! Both families share the fused softmax cross-entropy head (`head`) and
+//! ship a size grid (`TransformerConfig::catalog_grid`,
+//! `VitConfig::catalog_grid`) that `runtime/native.rs` registers
+//! wholesale.
 
 pub mod blocks;
+pub(crate) mod head;
 pub mod lora;
 pub mod transformer;
 pub mod vit;
@@ -70,6 +76,59 @@ pub(crate) fn zero_grads(shapes: &[(String, [usize; 2])]) -> ParamSet {
         .iter()
         .map(|(n, s)| (n.clone(), Matrix::zeros(s[0], s[1])))
         .collect()
+}
+
+/// Shared scaffolding for the model-family gradient tests.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::ParamSet;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    /// Directional finite-difference check shared by the transformer and
+    /// ViT tests: draws a random direction `u` over EVERY parameter and
+    /// compares `<grads, u>` against `(f(θ+εu) − f(θ−εu)) / 2ε`.
+    pub(crate) fn assert_directional_fd(
+        params: &ParamSet,
+        grads: &ParamSet,
+        loss: impl Fn(&ParamSet) -> f32,
+        eps: f32,
+        rtol: f32,
+        seed: u64,
+    ) {
+        let mut rng = Rng::new(seed);
+        let u: ParamSet = params
+            .iter()
+            .map(|(k, m)| {
+                (k.clone(), Matrix::gaussian(m.rows, m.cols, 1.0, &mut rng))
+            })
+            .collect();
+        let shifted = |sign: f32| -> ParamSet {
+            params
+                .iter()
+                .map(|(k, m)| {
+                    let mut m2 = m.clone();
+                    m2.add_scaled_inplace(&u[k], sign * eps);
+                    (k.clone(), m2)
+                })
+                .collect()
+        };
+        let fd = (loss(&shifted(1.0)) - loss(&shifted(-1.0))) / (2.0 * eps);
+        let analytic: f32 = grads
+            .iter()
+            .map(|(k, g)| {
+                g.data
+                    .iter()
+                    .zip(u[k].data.iter())
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+            })
+            .sum();
+        assert!(
+            (fd - analytic).abs() < rtol * (1.0 + fd.abs().max(analytic.abs())),
+            "fd={fd} analytic={analytic}"
+        );
+    }
 }
 
 #[cfg(test)]

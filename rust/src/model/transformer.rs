@@ -5,6 +5,7 @@
 //! `lm_loss` / `lm_greedy_decode`) shape-for-shape and name-for-name.
 
 use super::blocks::{stack_backward, stack_forward, BlockDims};
+use super::head::{argmax_rows, fused_softmax_xent, gather_rows, scatter_rows_add};
 use super::{add_grad, pget, zero_grads, ParamSet};
 use crate::tensor::{rms_norm_rows, rms_norm_rows_vjp, Matrix};
 use crate::util::rng::{derive_seed, Rng};
@@ -27,6 +28,36 @@ impl TransformerConfig {
             seq_len: 16,
             dims: BlockDims { d_model: 32, n_layers: 1, n_heads: 2, d_ff: 64 },
         }
+    }
+
+    /// The `lora-small` catalog model: 2 layers at d=64, the first rung
+    /// of the native size grid.
+    pub fn small() -> Self {
+        Self {
+            vocab: 128,
+            seq_len: 32,
+            dims: BlockDims { d_model: 64, n_layers: 2, n_heads: 4, d_ff: 128 },
+        }
+    }
+
+    /// The `lora-base` catalog model: 2 layers at d=128, the largest
+    /// native LM size.
+    pub fn base() -> Self {
+        Self {
+            vocab: 256,
+            seq_len: 64,
+            dims: BlockDims { d_model: 128, n_layers: 2, n_heads: 4, d_ff: 256 },
+        }
+    }
+
+    /// The (name, config) grid the native catalog registers — one source
+    /// of truth shared by `runtime/native.rs` and the kernel microbench.
+    pub fn catalog_grid() -> Vec<(&'static str, TransformerConfig)> {
+        vec![
+            ("lora-tiny", Self::tiny()),
+            ("lora-small", Self::small()),
+            ("lora-base", Self::base()),
+        ]
     }
 
     /// (name, shape) of every parameter, sorted by name (the ABI order).
@@ -136,6 +167,10 @@ impl TransformerConfig {
     /// weighted by `mask[i]`), normalized by the total mask weight —
     /// `layers.lm_loss` exactly. With `want_grad`, also the full gradient
     /// set (every parameter present, zeros where untouched).
+    ///
+    /// The head is the shared fused CE block (`model::head`): gather the
+    /// masked-in feature rows, one `F·embᵀ` GEMM for the logits, fused
+    /// softmax-CE forward+gradient, then GEMMs back for `dnf`/`demb`.
     pub fn loss_and_grad(
         &self,
         params: &ParamSet,
@@ -150,76 +185,45 @@ impl TransformerConfig {
             return Err("mask/tokens length mismatch".into());
         }
         let d = self.dims.d_model;
-        let v = self.vocab;
         let mut grads = if want_grad {
             zero_grads(&self.param_shapes())
         } else {
             ParamSet::new()
         };
-        let total_w: f64 = (0..rows)
-            .flat_map(|bi| (1..s).map(move |i| (bi, i)))
-            .map(|(bi, i)| mask[bi * s + i].max(0.0) as f64)
-            .sum();
-        if total_w <= 0.0 {
-            return Ok((0.0, grads));
-        }
-        let inv_w = (1.0 / total_w) as f32;
-
-        let (n_f, cache) = self.forward(params, tokens, rows, s, want_grad);
-        let emb = pget(params, "embed/tok");
-        let mut dnf = Matrix::zeros(if want_grad { rows * s } else { 0 }, d);
-        // tied head: the embedding gradient collects BOTH the head term
-        // and (later) the input-embedding term
-        let mut demb = Matrix::zeros(if want_grad { v } else { 0 }, d);
-        let mut loss = 0.0f64;
-        let mut logits = vec![0.0f32; v];
+        // prediction-carrying positions: feature row bi*s+i-1 predicts
+        // token i with weight mask[i]
+        let mut frows = Vec::new();
+        let mut targets = Vec::new();
+        let mut weights = Vec::new();
         for bi in 0..rows {
             for i in 1..s {
                 let wt = mask[bi * s + i];
                 if wt <= 0.0 {
                     continue;
                 }
-                let tgt = tokens[bi * s + i] as usize;
-                let r = bi * s + i - 1;
-                let xr = n_f.row(r);
-                for (t, l) in logits.iter_mut().enumerate() {
-                    let erow = emb.row(t);
-                    let mut acc = 0.0f32;
-                    for j in 0..d {
-                        acc += xr[j] * erow[j];
-                    }
-                    *l = acc;
-                }
-                let mx = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-                let raw_tgt = logits[tgt];
-                let mut denom = 0.0f32;
-                for l in logits.iter_mut() {
-                    *l = (*l - mx).exp();
-                    denom += *l;
-                }
-                loss += wt as f64 * (denom.ln() + mx - raw_tgt) as f64;
-                if want_grad {
-                    for (t, &e) in logits.iter().enumerate() {
-                        let p = e / denom;
-                        let dl =
-                            wt * inv_w * (p - if t == tgt { 1.0 } else { 0.0 });
-                        let erow = emb.row(t);
-                        let dnfrow = &mut dnf.data[r * d..(r + 1) * d];
-                        for j in 0..d {
-                            dnfrow[j] += dl * erow[j];
-                        }
-                        let drow = &mut demb.data[t * d..(t + 1) * d];
-                        for j in 0..d {
-                            drow[j] += dl * xr[j];
-                        }
-                    }
-                }
+                frows.push(bi * s + i - 1);
+                targets.push(tokens[bi * s + i] as usize);
+                weights.push(wt);
             }
         }
-        let loss = (loss / total_w) as f32;
+        if frows.is_empty() {
+            return Ok((0.0, grads));
+        }
+
+        let (n_f, cache) = self.forward(params, tokens, rows, s, want_grad);
+        let emb = pget(params, "embed/tok");
+        let feats = gather_rows(&n_f, &frows);
+        let logits = feats.matmul_nt(emb); // tied head: [n_ex, v]
+        let (loss, dlogits) =
+            fused_softmax_xent(&logits, &targets, &weights, want_grad);
         if !want_grad {
             return Ok((loss, grads));
         }
+        let mut dnf = Matrix::zeros(rows * s, d);
+        scatter_rows_add(&mut dnf, &frows, &dlogits.matmul(emb));
+        // tied head: the embedding gradient collects BOTH the head term
+        // and (later) the input-embedding term
+        let mut demb = dlogits.matmul_tn(&feats);
 
         let (x_out, caches) = cache.expect("forward kept no caches");
         let (dx_out, dfinal) =
@@ -262,28 +266,17 @@ impl TransformerConfig {
         prompt_len: usize,
     ) -> Result<(), String> {
         self.check_batch(tokens, rows, s)?;
-        let d = self.dims.d_model;
         let emb_shape = pget(params, "embed/tok").shape();
-        debug_assert_eq!(emb_shape, (self.vocab, d));
+        debug_assert_eq!(emb_shape, (self.vocab, self.dims.d_model));
         for i in prompt_len.max(1)..s {
             let (n_f, _) = self.forward(params, tokens, rows, s, false);
             let emb = pget(params, "embed/tok");
-            for bi in 0..rows {
-                let xr = n_f.row(bi * s + i - 1);
-                let mut best = 0usize;
-                let mut best_v = f32::NEG_INFINITY;
-                for t in 0..self.vocab {
-                    let erow = emb.row(t);
-                    let mut acc = 0.0f32;
-                    for j in 0..d {
-                        acc += xr[j] * erow[j];
-                    }
-                    if acc > best_v {
-                        best_v = acc;
-                        best = t;
-                    }
-                }
-                tokens[bi * s + i] = best as i32;
+            // one logits GEMM over every row's predecessor position;
+            // argmax_rows keeps the scalar loop's first-max tie-breaking
+            let frows: Vec<usize> = (0..rows).map(|bi| bi * s + i - 1).collect();
+            let logits = gather_rows(&n_f, &frows).matmul_nt(emb);
+            for (bi, &cls) in argmax_rows(&logits).iter().enumerate() {
+                tokens[bi * s + i] = cls as i32;
             }
         }
         Ok(())
@@ -293,7 +286,6 @@ impl TransformerConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
 
     fn toy_batch(cfg: &TransformerConfig, rows: usize) -> (Vec<i32>, Vec<f32>) {
         let s = cfg.seq_len;
@@ -363,45 +355,13 @@ mod tests {
         let (_, grads) = cfg
             .loss_and_grad(&params, &toks, &mask, rows, s, true)
             .unwrap();
-        // directional derivative along a random direction over ALL params
-        let mut rng = Rng::new(5);
-        let u: ParamSet = params
-            .iter()
-            .map(|(k, m)| (k.clone(), Matrix::gaussian(m.rows, m.cols, 1.0, &mut rng)))
-            .collect();
-        let eps = 1e-2f32;
-        let shifted = |sign: f32| -> ParamSet {
-            params
-                .iter()
-                .map(|(k, m)| {
-                    let mut m2 = m.clone();
-                    m2.add_scaled_inplace(&u[k], sign * eps);
-                    (k.clone(), m2)
-                })
-                .collect()
-        };
-        let lp = cfg
-            .loss_and_grad(&shifted(1.0), &toks, &mask, rows, s, false)
-            .unwrap()
-            .0;
-        let lm = cfg
-            .loss_and_grad(&shifted(-1.0), &toks, &mask, rows, s, false)
-            .unwrap()
-            .0;
-        let fd = (lp - lm) / (2.0 * eps);
-        let analytic: f32 = grads
-            .iter()
-            .map(|(k, g)| {
-                g.data
-                    .iter()
-                    .zip(u[k].data.iter())
-                    .map(|(a, b)| a * b)
-                    .sum::<f32>()
-            })
-            .sum();
-        assert!(
-            (fd - analytic).abs() < 3e-2 * (1.0 + fd.abs().max(analytic.abs())),
-            "fd={fd} analytic={analytic}"
+        crate::model::testutil::assert_directional_fd(
+            &params,
+            &grads,
+            |p| cfg.loss_and_grad(p, &toks, &mask, rows, s, false).unwrap().0,
+            1e-2,
+            3e-2,
+            5,
         );
     }
 
@@ -441,6 +401,44 @@ mod tests {
                 "{name}[{i},{j}]: fd={fd} analytic={an}"
             );
         }
+    }
+
+    #[test]
+    fn catalog_grid_sizes_are_monotone_and_valid() {
+        let grid = TransformerConfig::catalog_grid();
+        assert_eq!(grid[0].0, "lora-tiny");
+        for w in grid.windows(2) {
+            assert!(w[0].1.param_count() < w[1].1.param_count());
+        }
+        for (name, cfg) in &grid {
+            assert_eq!(cfg.dims.d_model % cfg.dims.n_heads, 0, "{name}");
+            assert!(cfg.vocab > 0 && cfg.seq_len > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn small_config_gradient_matches_directional_fd() {
+        // the acceptance gate for the size grid: FD gradient checks pass
+        // on the batched attention path at lora-small scale (short batch
+        // slice — check_batch allows s <= seq_len)
+        let cfg = TransformerConfig::small();
+        let params = cfg.init(11);
+        let (rows, s) = (1usize, 8usize);
+        let toks: Vec<i32> = (0..rows * s)
+            .map(|r| ((7 * r + 3) % cfg.vocab) as i32)
+            .collect();
+        let mask = vec![1.0f32; rows * s];
+        let (_, grads) = cfg
+            .loss_and_grad(&params, &toks, &mask, rows, s, true)
+            .unwrap();
+        crate::model::testutil::assert_directional_fd(
+            &params,
+            &grads,
+            |p| cfg.loss_and_grad(p, &toks, &mask, rows, s, false).unwrap().0,
+            1e-2,
+            3e-2,
+            12,
+        );
     }
 
     #[test]

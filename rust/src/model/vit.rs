@@ -6,6 +6,7 @@
 //! ([`crate::data::images::patchify_hwc`]).
 
 use super::blocks::{stack_backward, stack_forward, BlockDims};
+use super::head::{argmax_rows, fused_softmax_xent, gather_rows, scatter_rows_add};
 use super::{add_grad, pget, zero_grads, ParamSet};
 use crate::data::images::patchify_hwc;
 use crate::tensor::{rms_norm_rows, rms_norm_rows_vjp, Matrix};
@@ -31,6 +32,24 @@ impl VitConfig {
             n_classes: 10,
             dims: BlockDims { d_model: 32, n_layers: 1, n_heads: 2, d_ff: 64 },
         }
+    }
+
+    /// The `vit-small` catalog model: 16×16 images (17-token sequences)
+    /// through a 2-layer d=64 encoder — the ViT rung of the size grid.
+    pub fn small() -> Self {
+        Self {
+            image_size: 16,
+            patch_size: 4,
+            channels: 3,
+            n_classes: 10,
+            dims: BlockDims { d_model: 64, n_layers: 2, n_heads: 4, d_ff: 128 },
+        }
+    }
+
+    /// The (name, config) grid the native catalog registers — shared
+    /// with `runtime/native.rs` and the kernel microbench.
+    pub fn catalog_grid() -> Vec<(&'static str, VitConfig)> {
+        vec![("vit-tiny", Self::tiny()), ("vit-small", Self::small())]
     }
 
     pub fn n_patches(&self) -> usize {
@@ -148,58 +167,24 @@ impl VitConfig {
         } else {
             ParamSet::new()
         };
-        let mut dnf = Matrix::zeros(if want_grad { b * s } else { 0 }, d);
-        let mut dhead = Matrix::zeros(
-            if want_grad { d } else { 0 },
-            if want_grad { self.n_classes } else { 0 },
-        );
-        let mut loss = 0.0f64;
-        let mut preds = Vec::with_capacity(b);
-        let inv_b = 1.0 / b as f32;
-        let mut logits = vec![0.0f32; self.n_classes];
-        for bi in 0..b {
-            let xr = n_f.row(bi * s); // the CLS position
-            for (c, l) in logits.iter_mut().enumerate() {
-                let mut acc = 0.0f32;
-                for j in 0..d {
-                    acc += xr[j] * head.at(j, c);
-                }
-                *l = acc;
-            }
-            let mut best = 0usize;
-            for c in 1..self.n_classes {
-                if logits[c] > logits[best] {
-                    best = c;
-                }
-            }
-            preds.push(best as i32);
-            let tgt = labels[bi] as usize;
-            let mx = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-            let raw_tgt = logits[tgt];
-            let mut denom = 0.0f32;
-            for l in logits.iter_mut() {
-                *l = (*l - mx).exp();
-                denom += *l;
-            }
-            loss += ((denom.ln() + mx - raw_tgt) * inv_b) as f64;
-            if want_grad {
-                for (c, &e) in logits.iter().enumerate() {
-                    let p = e / denom;
-                    let dl = inv_b * (p - if c == tgt { 1.0 } else { 0.0 });
-                    let dnfrow = &mut dnf.data[bi * s * d..(bi * s + 1) * d];
-                    for j in 0..d {
-                        dnfrow[j] += dl * head.at(j, c);
-                        *dhead.at_mut(j, c) += dl * xr[j];
-                    }
-                }
-            }
-        }
-        let loss = loss as f32;
+        // the shared fused CE head (`model::head`): one CLS-rows GEMM for
+        // the logits, fused softmax-CE forward+gradient, GEMMs back for
+        // dhead / dnf — the same block the LM's tied head uses
+        let frows: Vec<usize> = (0..b).map(|bi| bi * s).collect();
+        let feats = gather_rows(&n_f, &frows); // the CLS positions
+        let logits = feats.matmul(head); // [b, n_classes]
+        let preds: Vec<i32> =
+            argmax_rows(&logits).iter().map(|&c| c as i32).collect();
+        let targets: Vec<usize> = labels.iter().map(|&l| l as usize).collect();
+        let (loss, dlogits) =
+            fused_softmax_xent(&logits, &targets, &vec![1.0f32; b], want_grad);
         if !want_grad {
             return Ok((loss, preds, grads));
         }
 
-        add_grad(&mut grads, "head/w", dhead);
+        add_grad(&mut grads, "head/w", feats.matmul_tn(&dlogits));
+        let mut dnf = Matrix::zeros(b * s, d);
+        scatter_rows_add(&mut dnf, &frows, &dlogits.matmul_nt(head));
         let (dx_out, dfinal) =
             rms_norm_rows_vjp(&x_out, pget(params, "final_ln/scale"), &dnf);
         add_grad(&mut grads, "final_ln/scale", dfinal);
@@ -294,44 +279,35 @@ mod tests {
         let (_, _, grads) = cfg
             .loss_preds_grad(&params, &images, &labels, true)
             .unwrap();
-        let mut rng = crate::util::rng::Rng::new(5);
-        let u: ParamSet = params
-            .iter()
-            .map(|(k, m)| (k.clone(), Matrix::gaussian(m.rows, m.cols, 1.0, &mut rng)))
-            .collect();
-        let eps = 1e-2f32;
-        let shifted = |sign: f32| -> ParamSet {
-            params
-                .iter()
-                .map(|(k, m)| {
-                    let mut m2 = m.clone();
-                    m2.add_scaled_inplace(&u[k], sign * eps);
-                    (k.clone(), m2)
-                })
-                .collect()
-        };
-        let lp = cfg
-            .loss_preds_grad(&shifted(1.0), &images, &labels, false)
-            .unwrap()
-            .0;
-        let lm = cfg
-            .loss_preds_grad(&shifted(-1.0), &images, &labels, false)
-            .unwrap()
-            .0;
-        let fd = (lp - lm) / (2.0 * eps);
-        let analytic: f32 = grads
-            .iter()
-            .map(|(k, g)| {
-                g.data
-                    .iter()
-                    .zip(u[k].data.iter())
-                    .map(|(a, b)| a * b)
-                    .sum::<f32>()
-            })
-            .sum();
-        assert!(
-            (fd - analytic).abs() < 3e-2 * (1.0 + fd.abs().max(analytic.abs())),
-            "fd={fd} analytic={analytic}"
+        crate::model::testutil::assert_directional_fd(
+            &params,
+            &grads,
+            |p| cfg.loss_preds_grad(p, &images, &labels, false).unwrap().0,
+            1e-2,
+            3e-2,
+            5,
+        );
+    }
+
+    #[test]
+    fn small_config_gradient_matches_directional_fd() {
+        // size-grid acceptance: FD check on the batched attention path at
+        // vit-small scale
+        let cfg = VitConfig::small();
+        assert_eq!(cfg.n_patches(), 16);
+        assert_eq!(cfg.seq(), 17);
+        let params = cfg.init(9);
+        let (images, labels) = batch(&cfg, 2, 10);
+        let (_, _, grads) = cfg
+            .loss_preds_grad(&params, &images, &labels, true)
+            .unwrap();
+        crate::model::testutil::assert_directional_fd(
+            &params,
+            &grads,
+            |p| cfg.loss_preds_grad(p, &images, &labels, false).unwrap().0,
+            1e-2,
+            3e-2,
+            13,
         );
     }
 

@@ -28,7 +28,7 @@ pub mod values;
 pub use backend::{Backend, BackendExec};
 pub use client::{Executable, Runtime};
 pub use manifest::{Manifest, ModelInfo, TensorSpec};
-pub use native::{native_manifest, NativeBackend};
+pub use native::{catalog_summary, native_manifest, NativeBackend};
 pub use state::StateStore;
 pub use values::{
     scalar_f32, scalar_i32, scalar_u32, tensor_f32, tensor_i32, zeros_for,

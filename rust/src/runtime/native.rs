@@ -14,13 +14,16 @@
 //!     a single `[vocab, vocab]` next-token logit table trained with
 //!     masked softmax cross-entropy — deliberately the smallest model with
 //!     a 2-D gradient, because FLORA's subject is the *gradient pipeline*;
-//!   * the pure-rust TRANSFORMERS from [`crate::model`]: the `lora-tiny`
-//!     causal LM (full-tune, LoRA-adapter and GaLore entries) and the
-//!     `vit-tiny` ViT (Table-5 workload), both with manual backward
-//!     passes, so the paper's LoRA and ViT experiments run XLA-free. On
-//!     multi-matrix parameter sets every projectable (attention/MLP)
-//!     matrix gets an independent per-parameter projection seed; the
-//!     embeddings/norms/heads follow the paper's "naive procedure".
+//!   * the pure-rust TRANSFORMERS from [`crate::model`], each a SIZE
+//!     GRID like the bigram models: the causal LMs
+//!     `lora-tiny`/`lora-small`/`lora-base` (full-tune, LoRA-adapter and
+//!     GaLore entries) and the ViTs `vit-tiny`/`vit-small` (Table-5
+//!     workload), all with manual backward passes on the batched
+//!     attention kernels, so the paper's LoRA and ViT experiments run —
+//!     and sweep sizes — XLA-free. On multi-matrix parameter sets every
+//!     projectable (attention/MLP) matrix gets an independent
+//!     per-parameter projection seed; the embeddings/norms/heads follow
+//!     the paper's "naive procedure".
 //!
 //! The coordinator above cannot tell the families apart — it sees the
 //! same manifest groups, scalars and executable names either way.
@@ -30,8 +33,7 @@
 //!     (a JL subspace) instead of an SVD of the gradient; the memory and
 //!     scheduling semantics the coordinator exercises (P lives in state,
 //!     moments live in the subspace, refresh every κ steps) are identical.
-//!   * one transformer/ViT size each (the AOT path carries a size grid);
-//!     the per-model rank grids differ (`RANKS` vs `TF_RANKS`).
+//!   * the per-model rank grids differ (`RANKS` vs `TF_RANKS`).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -62,8 +64,9 @@ const SPEC_BATCH: usize = 4;
 const MODELS: [(&str, usize, usize); 3] =
     [("lm-tiny", 64, 32), ("lm-small", 256, 64), ("lm-base", 512, 64)];
 
-/// Ranks of the transformer-family entries (`lora-tiny`, `vit-tiny`;
-/// d_model 32, so 32 is the full-rank end of the sweep).
+/// Ranks of the transformer-family entries (every `lora-*`/`vit-*`
+/// size; 32 is full-rank on the tiny models' d_model and a 1/4 ratio on
+/// `lora-base`).
 const TF_RANKS: [usize; 4] = [4, 8, 16, 32];
 
 /// Which fused step a native executable performs. Update-bearing steps
@@ -185,6 +188,89 @@ pub fn native_manifest() -> Manifest {
     catalog().0
 }
 
+/// Human-readable catalog inventory grouped by model family (`lm` /
+/// `lora` / `vit`) and size (smallest first), with the rank and
+/// base-optimizer variants of each step collapsed into `r{N}` / `{opt}`
+/// patterns — what `flora --list-catalog` prints. Grouping is what keeps
+/// the size-grid catalog readable: hundreds of executables collapse to a
+/// dozen step patterns per model.
+pub fn catalog_summary(manifest: &Manifest) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "native catalog: {} models, {} executables",
+        manifest.models.len(),
+        manifest.executables.len()
+    );
+    // family = the model-name prefix before the first '-'
+    let mut families: BTreeMap<&str, Vec<&ModelInfo>> = BTreeMap::new();
+    for info in manifest.models.values() {
+        let fam = info.name.split('-').next().unwrap_or(&info.name);
+        families.entry(fam).or_default().push(info);
+    }
+    for (fam, mut infos) in families {
+        infos.sort_by_key(|m| {
+            (m.get("d_model").unwrap_or(0), m.get("vocab").unwrap_or(0), m.name.clone())
+        });
+        let names: Vec<&str> = infos.iter().map(|m| m.name.as_str()).collect();
+        let _ = writeln!(out, "\n{fam} family (sizes: {}):", names.join(" < "));
+        for info in &infos {
+            let mut patterns: BTreeMap<String, usize> = BTreeMap::new();
+            for e in manifest.executables.values().filter(|e| e.model == info.name) {
+                let entry =
+                    e.name.split_once('/').map(|(_, s)| s).unwrap_or(&e.name);
+                *patterns.entry(collapse_entry(entry)).or_default() += 1;
+            }
+            let total: usize = patterns.values().sum();
+            let _ = writeln!(
+                out,
+                "  {} (kind {}, {} entries):",
+                info.name, info.kind, total
+            );
+            for (pat, n) in patterns {
+                if n == 1 {
+                    let _ = writeln!(out, "    {pat}");
+                } else {
+                    let _ = writeln!(out, "    {pat}  x{n}");
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Collapse one executable name (model prefix stripped) to its step
+/// pattern: any `_r<digits>` becomes `_r{N}` and a trailing
+/// base-optimizer name becomes `{opt}`.
+fn collapse_entry(name: &str) -> String {
+    let mut base = name.to_string();
+    for opt in OptimizerKind::ALL {
+        let suffix = format!("_{}", opt.name());
+        if base.ends_with(&suffix) {
+            base.truncate(base.len() - suffix.len());
+            base.push_str("_{opt}");
+            break;
+        }
+    }
+    let b = base.as_bytes();
+    let mut out = String::with_capacity(base.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'_' && i + 2 < b.len() && b[i + 1] == b'r' && b[i + 2].is_ascii_digit() {
+            out.push_str("_r{N}");
+            i += 2;
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+        } else {
+            out.push(b[i] as char);
+            i += 1;
+        }
+    }
+    out
+}
+
 /// Build the native catalog: the manifest the coordinator consumes plus
 /// the backend that executes it. Both come from one generator so the ABI
 /// (names, input/output order, shapes) cannot drift between them.
@@ -204,7 +290,12 @@ pub fn catalog() -> (Manifest, NativeBackend) {
             ModelInfo { name: model.to_string(), kind: "lm".into(), fields },
         );
 
-        let fam = Family::Bigram { vocab };
+        let mut reg = Registrar {
+            executables: &mut executables,
+            execs: &mut execs,
+            model: model.to_string(),
+            family: Family::Bigram { vocab },
+        };
         let v = vocab;
         let s = seq_len;
         let b = SPEC_BATCH;
@@ -218,31 +309,19 @@ pub fn catalog() -> (Manifest, NativeBackend) {
         let acc_full = f32s("acc/w", &[v, v]);
         let mom_full = f32s("mom/w", &[v, v]);
 
-        register(
-            &mut executables,
-            &mut execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/init"),
             Step::Init,
             vec![seed.clone()],
             vec![params.clone()],
         );
-        register(
-            &mut executables,
-            &mut execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/eval"),
             Step::Eval,
             vec![params.clone(), tokens.clone(), mask.clone()],
             vec![loss.clone()],
         );
-        register(
-            &mut executables,
-            &mut execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/greedy"),
             Step::Greedy,
             vec![
@@ -255,11 +334,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
 
         // Algorithm-1 micro steps accumulate only — no optimizer involved,
         // so one entry each regardless of the base optimizer.
-        register(
-            &mut executables,
-            &mut execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/micro_naive"),
             Step::MicroNaive,
             vec![
@@ -276,11 +351,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 continue;
             }
             let acc = f32s("acc/w", &[v, r]);
-            register(
-                &mut executables,
-                &mut execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/micro_flora_r{r}"),
                 Step::MicroFlora { rank: r },
                 vec![
@@ -305,11 +376,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 .collect();
             let o = opt.name();
 
-            register(
-                &mut executables,
-                &mut execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/plain_step_{o}"),
                 Step::Plain { opt },
                 splice(
@@ -319,11 +386,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 ),
                 splice(vec![loss.clone(), params.clone()], &opt_specs, vec![]),
             );
-            register(
-                &mut executables,
-                &mut execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/update_naive_{o}"),
                 Step::UpdateNaive { opt },
                 splice(
@@ -333,11 +396,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 ),
                 splice(vec![params.clone()], &opt_specs, vec![]),
             );
-            register(
-                &mut executables,
-                &mut execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/mom_step_naive_{o}"),
                 Step::MomNaive { opt },
                 splice(
@@ -358,11 +417,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                 }
                 let acc = f32s("acc/w", &[v, r]);
                 let mom = f32s("mom/w", &[v, r]);
-                register(
-                    &mut executables,
-                    &mut execs,
-                    model,
-                    &fam,
+                reg.add(
                     format!("{model}/update_flora_r{r}_{o}"),
                     Step::UpdateFlora { rank: r, opt },
                     splice(
@@ -395,21 +450,13 @@ pub fn catalog() -> (Manifest, NativeBackend) {
                     &opt_specs,
                     vec![],
                 );
-                register(
-                    &mut executables,
-                    &mut execs,
-                    model,
-                    &fam,
+                reg.add(
                     format!("{model}/mom_step_flora_r{r}_{o}"),
                     Step::MomFlora { rank: r, transfer: true, opt },
                     mom_inputs.clone(),
                     mom_outputs.clone(),
                 );
-                register(
-                    &mut executables,
-                    &mut execs,
-                    model,
-                    &fam,
+                reg.add(
                     format!("{model}/mom_step_flora_notransfer_r{r}_{o}"),
                     Step::MomFlora { rank: r, transfer: false, opt },
                     mom_inputs,
@@ -424,11 +471,7 @@ pub fn catalog() -> (Manifest, NativeBackend) {
             if r > v {
                 continue;
             }
-            register(
-                &mut executables,
-                &mut execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/galore_step_r{r}"),
                 Step::GaloreStep { rank: r },
                 vec![
@@ -454,8 +497,12 @@ pub fn catalog() -> (Manifest, NativeBackend) {
         }
     }
 
-    register_transformer(&mut models, &mut executables, &mut execs);
-    register_vit(&mut models, &mut executables, &mut execs);
+    for (name, cfg) in TransformerConfig::catalog_grid() {
+        register_lm_family(&mut models, &mut executables, &mut execs, name, cfg);
+    }
+    for (name, cfg) in VitConfig::catalog_grid() {
+        register_vit_family(&mut models, &mut executables, &mut execs, name, cfg);
+    }
 
     let families: Vec<String> = models.keys().cloned().collect();
     let manifest =
@@ -486,31 +533,46 @@ fn splice(
     head
 }
 
-#[allow(clippy::too_many_arguments)]
-fn register(
-    executables: &mut BTreeMap<String, ExecutableInfo>,
-    execs: &mut BTreeMap<String, Rc<NativeExec>>,
-    model: &str,
-    family: &Family,
-    name: String,
-    step: Step,
-    inputs: Vec<TensorSpec>,
-    outputs: Vec<TensorSpec>,
-) {
-    executables.insert(
-        name.clone(),
-        ExecutableInfo {
-            name: name.clone(),
-            file: PathBuf::from("native"),
-            model: model.to_string(),
-            inputs: inputs.clone(),
-            outputs,
-        },
-    );
-    execs.insert(
-        name.clone(),
-        Rc::new(NativeExec { name, family: family.clone(), step, inputs }),
-    );
+/// Per-family catalog builder: closes over the manifest/executor maps
+/// and a family's fixed arguments (model name + [`Family`]), so one
+/// catalog entry is one `add(...)` call — the closure that replaced the
+/// ~35 open-coded `register(&mut executables, &mut execs, model, &fam,
+/// ...)` sites (PR-3 review item).
+struct Registrar<'a> {
+    executables: &'a mut BTreeMap<String, ExecutableInfo>,
+    execs: &'a mut BTreeMap<String, Rc<NativeExec>>,
+    model: String,
+    family: Family,
+}
+
+impl Registrar<'_> {
+    fn add(
+        &mut self,
+        name: String,
+        step: Step,
+        inputs: Vec<TensorSpec>,
+        outputs: Vec<TensorSpec>,
+    ) {
+        self.executables.insert(
+            name.clone(),
+            ExecutableInfo {
+                name: name.clone(),
+                file: PathBuf::from("native"),
+                model: self.model.clone(),
+                inputs: inputs.clone(),
+                outputs,
+            },
+        );
+        self.execs.insert(
+            name.clone(),
+            Rc::new(NativeExec {
+                name,
+                family: self.family.clone(),
+                step,
+                inputs,
+            }),
+        );
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -575,17 +637,18 @@ fn galore_specs(shapes: &Shapes, rank: usize) -> Vec<TensorSpec> {
     out
 }
 
-/// The `lora-tiny` transformer catalog: init/eval/greedy, plain steps,
-/// Algorithm-1 micro/update, Algorithm-2 momentum (± transfer), the LoRA
-/// adapter baseline and GaLore — each update-bearing step over every base
-/// optimizer, exactly the surface the bigram models expose.
-fn register_transformer(
+/// One `lora-*` transformer catalog family: init/eval/greedy, plain
+/// steps, Algorithm-1 micro/update, Algorithm-2 momentum (± transfer),
+/// the LoRA adapter baseline and GaLore — each update-bearing step over
+/// every base optimizer, exactly the surface the bigram models expose.
+/// Called once per `TransformerConfig::catalog_grid()` size.
+fn register_lm_family(
     models: &mut BTreeMap<String, ModelInfo>,
     executables: &mut BTreeMap<String, ExecutableInfo>,
     execs: &mut BTreeMap<String, Rc<NativeExec>>,
+    model: &str,
+    cfg: TransformerConfig,
 ) {
-    let cfg = TransformerConfig::tiny();
-    let model = "lora-tiny";
     let mut fields = BTreeMap::new();
     fields.insert("vocab".to_string(), cfg.vocab as f64);
     fields.insert("seq_len".to_string(), cfg.seq_len as f64);
@@ -598,7 +661,12 @@ fn register_transformer(
         ModelInfo { name: model.to_string(), kind: "lm".into(), fields },
     );
 
-    let fam = Family::Lm(cfg);
+    let mut reg = Registrar {
+        executables,
+        execs,
+        model: model.to_string(),
+        family: Family::Lm(cfg),
+    };
     let shapes = cfg.param_shapes();
     let pspecs = set_specs("params", &shapes);
     let b = SPEC_BATCH;
@@ -613,31 +681,19 @@ fn register_transformer(
     let acc_naive = method_specs("acc", &shapes, None);
     let mom_naive = method_specs("mom", &shapes, None);
 
-    register(
-        executables,
-        execs,
-        model,
-        &fam,
+    reg.add(
         format!("{model}/init"),
         Step::TfInit,
         vec![seed.clone()],
         pspecs.clone(),
     );
-    register(
-        executables,
-        execs,
-        model,
-        &fam,
+    reg.add(
         format!("{model}/eval"),
         Step::TfEval,
         splice(pspecs.clone(), &[], vec![tokens.clone(), mask.clone()]),
         vec![loss.clone()],
     );
-    register(
-        executables,
-        execs,
-        model,
-        &fam,
+    reg.add(
         format!("{model}/greedy"),
         Step::TfGreedy,
         splice(
@@ -647,11 +703,7 @@ fn register_transformer(
         ),
         vec![spec("tokens", &[b, s], "int32")],
     );
-    register(
-        executables,
-        execs,
-        model,
-        &fam,
+    reg.add(
         format!("{model}/micro_naive"),
         Step::TfMicroNaive,
         splice(pspecs.clone(), &acc_naive, vec![tokens.clone(), mask.clone()]),
@@ -659,11 +711,7 @@ fn register_transformer(
     );
     for r in TF_RANKS {
         let acc = method_specs("acc", &shapes, Some(r));
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/micro_flora_r{r}"),
             Step::TfMicroFlora { rank: r },
             splice(
@@ -678,11 +726,7 @@ fn register_transformer(
     for opt in OptimizerKind::ALL {
         let ospecs = opt_specs(&shapes, opt);
         let o = opt.name();
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/plain_step_{o}"),
             Step::TfPlain { opt },
             splice(
@@ -692,11 +736,7 @@ fn register_transformer(
             ),
             splice(splice(vec![loss.clone()], &pspecs, vec![]), &ospecs, vec![]),
         );
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/update_naive_{o}"),
             Step::TfUpdateNaive { opt },
             splice(
@@ -706,11 +746,7 @@ fn register_transformer(
             ),
             splice(pspecs.clone(), &ospecs, vec![]),
         );
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/mom_step_naive_{o}"),
             Step::TfMomNaive { opt },
             splice(
@@ -726,11 +762,7 @@ fn register_transformer(
         );
         for r in TF_RANKS {
             let acc = method_specs("acc", &shapes, Some(r));
-            register(
-                executables,
-                execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/update_flora_r{r}_{o}"),
                 Step::TfUpdateFlora { rank: r, opt },
                 splice(
@@ -759,21 +791,13 @@ fn register_transformer(
                 &mom,
                 vec![],
             );
-            register(
-                executables,
-                execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/mom_step_flora_r{r}_{o}"),
                 Step::TfMomFlora { rank: r, transfer: true, opt },
                 mom_in.clone(),
                 mom_out.clone(),
             );
-            register(
-                executables,
-                execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/mom_step_flora_notransfer_r{r}_{o}"),
                 Step::TfMomFlora { rank: r, transfer: false, opt },
                 mom_in,
@@ -788,21 +812,13 @@ fn register_transformer(
         let tshapes = adapter.trainable_shapes();
         let tspecs = set_specs("train", &tshapes);
         let acc_t = method_specs("acc", &tshapes, None);
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/lora_r{r}_init"),
             Step::LoraInit { rank: r },
             splice(pspecs.clone(), &[], vec![seed.clone()]),
             tspecs.clone(),
         );
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/lora_r{r}_eval"),
             Step::LoraEval { rank: r },
             splice(
@@ -812,11 +828,7 @@ fn register_transformer(
             ),
             vec![loss.clone()],
         );
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/lora_r{r}_greedy"),
             Step::LoraGreedy { rank: r },
             splice(
@@ -826,11 +838,7 @@ fn register_transformer(
             ),
             vec![spec("tokens", &[b, s], "int32")],
         );
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/lora_r{r}_micro"),
             Step::LoraMicro { rank: r },
             splice(
@@ -843,11 +851,7 @@ fn register_transformer(
         for opt in OptimizerKind::ALL {
             let o = opt.name();
             let ospecs_t = opt_specs(&tshapes, opt);
-            register(
-                executables,
-                execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/lora_r{r}_update_{o}"),
                 Step::LoraUpdate { rank: r, opt },
                 splice(
@@ -858,11 +862,7 @@ fn register_transformer(
                 splice(tspecs.clone(), &ospecs_t, vec![]),
             );
             let mom_t = method_specs("mom", &tshapes, None);
-            register(
-                executables,
-                execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/lora_r{r}_mom_step_{o}"),
                 Step::LoraMom { rank: r, opt },
                 splice(
@@ -886,11 +886,7 @@ fn register_transformer(
             );
         }
         let gspecs = galore_specs(&shapes, r);
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/galore_step_r{r}"),
             Step::TfGalore { rank: r },
             splice(
@@ -910,16 +906,17 @@ fn register_transformer(
     }
 }
 
-/// The `vit-tiny` catalog: Table-5 training steps (plain per optimizer
-/// and FLORA Algorithm-2 momentum per rank × optimizer), plus init and a
-/// loss+preds eval.
-fn register_vit(
+/// One `vit-*` catalog family: Table-5 training steps (plain per
+/// optimizer and FLORA Algorithm-2 momentum per rank × optimizer), plus
+/// init and a loss+preds eval. Called once per
+/// `VitConfig::catalog_grid()` size.
+fn register_vit_family(
     models: &mut BTreeMap<String, ModelInfo>,
     executables: &mut BTreeMap<String, ExecutableInfo>,
     execs: &mut BTreeMap<String, Rc<NativeExec>>,
+    model: &str,
+    cfg: VitConfig,
 ) {
-    let cfg = VitConfig::tiny();
-    let model = "vit-tiny";
     let mut fields = BTreeMap::new();
     fields.insert("image_size".to_string(), cfg.image_size as f64);
     fields.insert("patch_size".to_string(), cfg.patch_size as f64);
@@ -934,7 +931,12 @@ fn register_vit(
         ModelInfo { name: model.to_string(), kind: "vit".into(), fields },
     );
 
-    let fam = Family::Vit(cfg);
+    let mut reg = Registrar {
+        executables,
+        execs,
+        model: model.to_string(),
+        family: Family::Vit(cfg),
+    };
     let shapes = cfg.param_shapes();
     let pspecs = set_specs("params", &shapes);
     let b = SPEC_BATCH;
@@ -945,21 +947,13 @@ fn register_vit(
     let lr = f32s("lr", &[]);
     let step_s = f32s("step", &[]);
 
-    register(
-        executables,
-        execs,
-        model,
-        &fam,
+    reg.add(
         format!("{model}/init"),
         Step::VitInit,
         vec![spec("seed", &[], "uint32")],
         pspecs.clone(),
     );
-    register(
-        executables,
-        execs,
-        model,
-        &fam,
+    reg.add(
         format!("{model}/eval"),
         Step::VitEval,
         splice(pspecs.clone(), &[], vec![images.clone(), labels.clone()]),
@@ -968,11 +962,7 @@ fn register_vit(
     for opt in OptimizerKind::ALL {
         let o = opt.name();
         let ospecs = opt_specs(&shapes, opt);
-        register(
-            executables,
-            execs,
-            model,
-            &fam,
+        reg.add(
             format!("{model}/step_{o}"),
             Step::VitPlain { opt },
             splice(
@@ -984,11 +974,7 @@ fn register_vit(
         );
         for r in TF_RANKS {
             let mom = method_specs("mom", &shapes, Some(r));
-            register(
-                executables,
-                execs,
-                model,
-                &fam,
+            reg.add(
                 format!("{model}/step_flora_r{r}_{o}"),
                 Step::VitMomFlora { rank: r, opt },
                 splice(
@@ -2315,6 +2301,65 @@ mod tests {
         assert_eq!(manifest.models["vit-tiny"].kind, "vit");
         assert_eq!(manifest.models["vit-tiny"].get("image_size"), Some(8));
         assert_eq!(manifest.models["vit-tiny"].get("n_classes"), Some(10));
+    }
+
+    #[test]
+    fn size_grid_registers_every_family_size() {
+        let (manifest, _) = catalog();
+        for model in ["lora-tiny", "lora-small", "lora-base"] {
+            for entry in [
+                "init",
+                "eval",
+                "greedy",
+                "plain_step_sgd",
+                "micro_flora_r8",
+                "update_flora_r8_adafactor",
+                "mom_step_flora_r8_adam",
+                "mom_step_flora_notransfer_r8_sgd",
+                "lora_r8_init",
+                "lora_r8_update_adam",
+                "galore_step_r8",
+            ] {
+                let exe = format!("{model}/{entry}");
+                assert!(manifest.executables.contains_key(&exe), "missing {exe}");
+            }
+        }
+        for model in ["vit-tiny", "vit-small"] {
+            for entry in ["init", "eval", "step_adam", "step_flora_r8_adafactor"] {
+                let exe = format!("{model}/{entry}");
+                assert!(manifest.executables.contains_key(&exe), "missing {exe}");
+            }
+        }
+        // the grid really is a size grid: d_model strictly grows
+        let d = |m: &str| manifest.models[m].get("d_model").unwrap();
+        assert!(d("lora-tiny") < d("lora-small") && d("lora-small") < d("lora-base"));
+        assert!(d("vit-tiny") < d("vit-small"));
+        assert_eq!(manifest.models["lora-small"].get("n_layers"), Some(2));
+        assert_eq!(manifest.models["vit-small"].get("image_size"), Some(16));
+    }
+
+    #[test]
+    fn catalog_summary_groups_by_family_and_collapses_variants() {
+        let (manifest, _) = catalog();
+        let s = catalog_summary(&manifest);
+        for header in [
+            "lm family (sizes: lm-tiny < lm-small < lm-base):",
+            "lora family (sizes: lora-tiny < lora-small < lora-base):",
+            "vit family (sizes: vit-tiny < vit-small):",
+        ] {
+            assert!(s.contains(header), "missing {header:?} in:\n{s}");
+        }
+        // rank/optimizer variants are collapsed with their counts...
+        assert!(s.contains("plain_step_{opt}  x4"), "{s}");
+        assert!(s.contains("mom_step_flora_r{N}_{opt}  x16"), "{s}");
+        assert!(s.contains("lora_r{N}_update_{opt}  x16"), "{s}");
+        assert!(s.contains("galore_step_r{N}  x4"), "{s}");
+        // ...so no raw variant names leak through
+        assert!(!s.contains("plain_step_adam"), "{s}");
+        assert!(!s.contains("_r8"), "{s}");
+        assert_eq!(collapse_entry("mom_step_flora_notransfer_r16_adafactor_nofactor"),
+            "mom_step_flora_notransfer_r{N}_{opt}");
+        assert_eq!(collapse_entry("micro_naive"), "micro_naive");
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Batched tensor primitives for multi-head attention: a contiguous
+//! `[batch, rows, cols]` panel type, batched GEMMs over it, and the
+//! masked row-softmax (+ VJP) that attention applies to score panels.
+//!
+//! Head-strided activations (`[b*s, n_heads*head_dim]` matrices where
+//! head `h` owns columns `[h*dh, (h+1)*dh)`) are packed into contiguous
+//! per-(batch, head) panels by [`gather_heads`] — the BLIS-style pack —
+//! so every attention contraction (QKᵀ, probs·V and their transposed
+//! backward forms) runs on the cache-blocked kernels of
+//! `tensor::kernels` instead of scalar index arithmetic.
+//!
+//! Numerics: each batched op calls the same serial per-panel kernel
+//! bodies the `Matrix` GEMMs use, with the batch dimension as the
+//! parallel split — results are bit-identical to the per-panel `Matrix`
+//! ops and to the retained scalar attention reference
+//! (`model::blocks::reference`) for every thread count.
+
+use super::kernels::{matmul_band, matmul_nt_band, matmul_tn_band, par_rows};
+use super::Matrix;
+
+/// A dense stack of `batch` equally-shaped row-major matrices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchedMatrix {
+    pub batch: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl BatchedMatrix {
+    pub fn zeros(batch: usize, rows: usize, cols: usize) -> Self {
+        Self { batch, rows, cols, data: vec![0.0; batch * rows * cols] }
+    }
+
+    /// One panel's `rows * cols` slice.
+    pub fn panel(&self, b: usize) -> &[f32] {
+        let n = self.rows * self.cols;
+        &self.data[b * n..(b + 1) * n]
+    }
+
+    pub fn panel_mut(&mut self, b: usize) -> &mut [f32] {
+        let n = self.rows * self.cols;
+        &mut self.data[b * n..(b + 1) * n]
+    }
+
+    /// Copy one panel out as a standalone [`Matrix`] (tests, debugging).
+    pub fn to_matrix(&self, b: usize) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.panel(b).to_vec())
+    }
+
+    /// In-place elementwise scale (e.g. folding the attention score scale
+    /// into a cotangent before the backward GEMMs).
+    pub fn scale_inplace(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+}
+
+/// Pack head-strided activations `x: [b*s, heads*dh]` into contiguous
+/// `[b*heads, s, dh]` panels (panel `bi*heads + hi` is batch `bi`, head
+/// `hi`).
+pub fn gather_heads(x: &Matrix, b: usize, s: usize, heads: usize, dh: usize) -> BatchedMatrix {
+    debug_assert_eq!(x.shape(), (b * s, heads * dh));
+    let mut out = BatchedMatrix::zeros(b * heads, s, dh);
+    for bi in 0..b {
+        for hi in 0..heads {
+            let panel = out.panel_mut(bi * heads + hi);
+            for i in 0..s {
+                let src = &x.row(bi * s + i)[hi * dh..(hi + 1) * dh];
+                panel[i * dh..(i + 1) * dh].copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+/// Unpack `[b*heads, s, dh]` panels back into a head-strided
+/// `[b*s, heads*dh]` matrix — the inverse of [`gather_heads`].
+pub fn scatter_heads(src: &BatchedMatrix, b: usize, s: usize, heads: usize, dh: usize) -> Matrix {
+    debug_assert_eq!((src.batch, src.rows, src.cols), (b * heads, s, dh));
+    let mut out = Matrix::zeros(b * s, heads * dh);
+    for bi in 0..b {
+        for hi in 0..heads {
+            let panel = src.panel(bi * heads + hi);
+            for i in 0..s {
+                let dst = &mut out.data[(bi * s + i) * heads * dh + hi * dh
+                    ..(bi * s + i) * heads * dh + (hi + 1) * dh];
+                dst.copy_from_slice(&panel[i * dh..(i + 1) * dh]);
+            }
+        }
+    }
+    out
+}
+
+/// `C[p] = A[p] @ B[p]` per panel, parallel over panels.
+pub fn batched_matmul(a: &BatchedMatrix, b: &BatchedMatrix) -> BatchedMatrix {
+    assert_eq!(a.batch, b.batch, "batched_matmul batch mismatch");
+    assert_eq!(a.cols, b.rows, "batched_matmul [{},{}] @ [{},{}]", a.rows, a.cols, b.rows, b.cols);
+    let mut out = BatchedMatrix::zeros(a.batch, a.rows, b.cols);
+    let (n, k, m) = (a.rows, a.cols, b.cols);
+    let flops = a.batch * n * k * m;
+    par_rows(&mut out.data, a.batch, n * m, flops, |chunk, first, count| {
+        for p in 0..count {
+            matmul_band(
+                &mut chunk[p * n * m..(p + 1) * n * m],
+                &a.data[(first + p) * n * k..(first + p + 1) * n * k],
+                &b.data[(first + p) * k * m..(first + p + 1) * k * m],
+                n,
+                k,
+                m,
+            );
+        }
+    });
+    out
+}
+
+/// `C[p] = alpha * (A[p] @ B[p]^T)` per panel (the QKᵀ shape; `alpha`
+/// is the `1/sqrt(dh)` attention scale, applied to each finished dot
+/// exactly like the scalar reference), parallel over panels.
+pub fn batched_matmul_nt(a: &BatchedMatrix, b: &BatchedMatrix, alpha: f32) -> BatchedMatrix {
+    assert_eq!(a.batch, b.batch, "batched_matmul_nt batch mismatch");
+    assert_eq!(a.cols, b.cols, "batched_matmul_nt cols {} vs {}", a.cols, b.cols);
+    let mut out = BatchedMatrix::zeros(a.batch, a.rows, b.rows);
+    let (n, k, m) = (a.rows, a.cols, b.rows);
+    let flops = a.batch * n * k * m;
+    par_rows(&mut out.data, a.batch, n * m, flops, |chunk, first, count| {
+        for p in 0..count {
+            matmul_nt_band(
+                &mut chunk[p * n * m..(p + 1) * n * m],
+                &a.data[(first + p) * n * k..(first + p + 1) * n * k],
+                &b.data[(first + p) * m * k..(first + p + 1) * m * k],
+                n,
+                k,
+                m,
+                alpha,
+            );
+        }
+    });
+    out
+}
+
+/// `C[p] = A[p]^T @ B[p]` per panel (the `probsᵀ·dctx` backward shape),
+/// parallel over panels.
+pub fn batched_matmul_tn(a: &BatchedMatrix, b: &BatchedMatrix) -> BatchedMatrix {
+    assert_eq!(a.batch, b.batch, "batched_matmul_tn batch mismatch");
+    assert_eq!(a.rows, b.rows, "batched_matmul_tn rows {} vs {}", a.rows, b.rows);
+    let mut out = BatchedMatrix::zeros(a.batch, a.cols, b.cols);
+    let (rows, acols, m) = (a.rows, a.cols, b.cols);
+    let flops = a.batch * rows * acols * m;
+    par_rows(&mut out.data, a.batch, acols * m, flops, |chunk, first, count| {
+        for p in 0..count {
+            matmul_tn_band(
+                &mut chunk[p * acols * m..(p + 1) * acols * m],
+                &a.data[(first + p) * rows * acols..(first + p + 1) * rows * acols],
+                &b.data[(first + p) * rows * m..(first + p + 1) * rows * m],
+                rows,
+                acols,
+                m,
+                0,
+                acols,
+            );
+        }
+    });
+    out
+}
+
+/// In-place numerically-stable softmax over every panel row. With
+/// `causal`, row `i` only attends to columns `0..=i`; masked columns get
+/// **exactly** zero probability — bit-identical to softmaxing a row whose
+/// masked scores were set to -1e30 (their exps underflow to +0 and add
+/// nothing to the denominator), which is what the scalar reference does.
+pub fn softmax_rows_masked(x: &mut BatchedMatrix, causal: bool) {
+    let (rows, cols) = (x.rows, x.cols);
+    for p in 0..x.batch {
+        let panel = x.panel_mut(p);
+        for i in 0..rows {
+            let valid = if causal { (i + 1).min(cols) } else { cols };
+            let row = &mut panel[i * cols..(i + 1) * cols];
+            let mx = row[..valid].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut denom = 0.0f32;
+            for v in row[..valid].iter_mut() {
+                *v = (*v - mx).exp();
+                denom += *v;
+            }
+            for v in row[..valid].iter_mut() {
+                *v /= denom;
+            }
+            for v in row[valid..].iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// VJP of [`softmax_rows_masked`] per panel row:
+/// `dz_j = p_j (dp_j - Σ_k dp_k p_k)`. Masked columns carry zero
+/// probability, so their score gradients vanish without special-casing —
+/// the batched mirror of `tensor::ops::softmax_rows_vjp`.
+pub fn softmax_rows_vjp_batched(probs: &BatchedMatrix, dprobs: &BatchedMatrix) -> BatchedMatrix {
+    assert_eq!(
+        (probs.batch, probs.rows, probs.cols),
+        (dprobs.batch, dprobs.rows, dprobs.cols),
+        "softmax_rows_vjp_batched shape mismatch"
+    );
+    let mut out = BatchedMatrix::zeros(probs.batch, probs.rows, probs.cols);
+    let cols = probs.cols;
+    for pnl in 0..probs.batch {
+        let p = probs.panel(pnl);
+        let dp = dprobs.panel(pnl);
+        let o = out.panel_mut(pnl);
+        for i in 0..probs.rows {
+            let prow = &p[i * cols..(i + 1) * cols];
+            let dprow = &dp[i * cols..(i + 1) * cols];
+            let dot: f32 = prow.iter().zip(dprow.iter()).map(|(a, b)| a * b).sum();
+            for (j, v) in o[i * cols..(i + 1) * cols].iter_mut().enumerate() {
+                *v = prow[j] * (dprow[j] - dot);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{softmax_rows, softmax_rows_vjp};
+    use crate::util::rng::Rng;
+
+    fn randb(seed: u64, batch: usize, rows: usize, cols: usize) -> BatchedMatrix {
+        let mut rng = Rng::new(seed);
+        let mut out = BatchedMatrix::zeros(batch, rows, cols);
+        rng.fill_gaussian(&mut out.data, 1.0);
+        out
+    }
+
+    #[test]
+    fn gather_scatter_heads_roundtrip() {
+        let mut rng = Rng::new(0);
+        let (b, s, h, dh) = (2usize, 5usize, 3usize, 4usize);
+        let x = Matrix::gaussian(b * s, h * dh, 1.0, &mut rng);
+        let packed = gather_heads(&x, b, s, h, dh);
+        assert_eq!((packed.batch, packed.rows, packed.cols), (b * h, s, dh));
+        // panel (bi, hi) row i is x row bi*s+i, columns hi*dh..
+        let (bi, hi, i) = (1usize, 2usize, 3usize);
+        assert_eq!(
+            packed.panel(bi * h + hi)[i * dh..(i + 1) * dh],
+            x.row(bi * s + i)[hi * dh..(hi + 1) * dh]
+        );
+        let back = scatter_heads(&packed, b, s, h, dh);
+        assert!(back.allclose(&x, 0.0));
+    }
+
+    #[test]
+    fn batched_matmuls_bit_match_per_panel_matrix_ops() {
+        let a = randb(1, 3, 6, 5);
+        let b = randb(2, 3, 5, 7);
+        let c = batched_matmul(&a, &b);
+        for p in 0..3 {
+            let want = a.to_matrix(p).matmul(&b.to_matrix(p));
+            assert!(c.to_matrix(p).allclose(&want, 0.0), "panel {p}");
+        }
+        let bt = randb(3, 3, 7, 5);
+        let cnt = batched_matmul_nt(&a, &bt, 1.0);
+        for p in 0..3 {
+            let want = a.to_matrix(p).matmul_nt(&bt.to_matrix(p));
+            assert!(cnt.to_matrix(p).allclose(&want, 0.0), "nt panel {p}");
+        }
+        let b2 = randb(4, 3, 6, 4);
+        let ctn = batched_matmul_tn(&a, &b2);
+        for p in 0..3 {
+            let want = a.to_matrix(p).matmul_tn(&b2.to_matrix(p));
+            assert!(ctn.to_matrix(p).allclose(&want, 0.0), "tn panel {p}");
+        }
+    }
+
+    #[test]
+    fn batched_matmul_nt_applies_alpha_after_the_dot() {
+        let a = randb(5, 2, 3, 4);
+        let b = randb(6, 2, 3, 4);
+        let scaled = batched_matmul_nt(&a, &b, 0.25);
+        let plain = batched_matmul_nt(&a, &b, 1.0);
+        for (s, p) in scaled.data.iter().zip(plain.data.iter()) {
+            assert_eq!(*s, p * 0.25);
+        }
+    }
+
+    #[test]
+    fn masked_softmax_matches_minus_1e30_scores() {
+        // the old scalar path wrote -1e30 into masked slots then softmaxed
+        // the full row; the masked kernel must be bit-identical
+        let mut x = randb(7, 2, 6, 6);
+        let mut reference = BatchedMatrix::zeros(2, 6, 6);
+        for p in 0..2 {
+            let mut m = x.to_matrix(p);
+            for i in 0..6 {
+                for j in (i + 1)..6 {
+                    *m.at_mut(i, j) = -1e30;
+                }
+            }
+            let sm = softmax_rows(&m);
+            reference.panel_mut(p).copy_from_slice(&sm.data);
+        }
+        softmax_rows_masked(&mut x, true);
+        assert_eq!(x.data, reference.data);
+        // masked entries are exactly zero
+        for p in 0..2 {
+            for i in 0..6 {
+                for j in (i + 1)..6 {
+                    assert_eq!(x.panel(p)[i * 6 + j], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unmasked_softmax_rows_sum_to_one() {
+        let mut x = randb(8, 3, 4, 5);
+        softmax_rows_masked(&mut x, false);
+        for p in 0..3 {
+            for i in 0..4 {
+                let sum: f32 = x.panel(p)[i * 5..(i + 1) * 5].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_softmax_vjp_matches_matrix_vjp() {
+        let mut z = randb(9, 2, 4, 4);
+        softmax_rows_masked(&mut z, true);
+        let dp = randb(10, 2, 4, 4);
+        let dz = softmax_rows_vjp_batched(&z, &dp);
+        for p in 0..2 {
+            let want = softmax_rows_vjp(&z.to_matrix(p), &dp.to_matrix(p));
+            assert!(dz.to_matrix(p).allclose(&want, 0.0), "panel {p}");
+        }
+    }
+}

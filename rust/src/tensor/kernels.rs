@@ -1,0 +1,278 @@
+//! Cache-blocked GEMM kernels over raw row-major slices, plus the opt-in
+//! row-parallel driver behind the global [`Parallelism`] config.
+//!
+//! These are the slice-level engines behind `Matrix::{matmul, matmul_nt,
+//! matmul_tn}` and the batched attention primitives in
+//! [`super::batched`]. Three properties are load-bearing and tested:
+//!
+//!   1. **Bit-equality with the retained naive kernels.** Every output
+//!      element accumulates its contraction terms in strictly ascending
+//!      `k` order with a single f32 accumulator, exactly like the naive
+//!      triple loop — blocking only reorders *which element is computed
+//!      when*, never the per-element summation order. The property tests
+//!      in `rust/tests/properties.rs` bit-compare blocked against naive
+//!      on random rectangular shapes.
+//!   2. **Bit-equality across thread counts.** The parallel path splits
+//!      the *output rows* into disjoint bands; each band is computed by
+//!      exactly one thread running the identical serial kernel, so the
+//!      result is bit-identical for every `Parallelism` setting (the
+//!      `--parallelism 1` vs `2` CI matrix exercises this end-to-end).
+//!   3. **No zero-skips.** As in PR 1, `0.0 * NaN` must stay NaN —
+//!      non-finite gradients may not be laundered by a fast path.
+//!
+//! Zero new dependencies: threading is `std::thread::scope` only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Rows of the shared (`B`) operand kept hot per k-panel. With the j-tile
+/// below, one panel is `K_BLOCK * J_BLOCK * 4` bytes = 32 KiB — L1-sized.
+const K_BLOCK: usize = 64;
+/// Output-column tile width (f32 elements).
+const J_BLOCK: usize = 128;
+/// Minimum multiply count before the parallel path engages; below this
+/// the `thread::scope` spawn cost dominates any speedup.
+const PAR_MIN_FLOPS: usize = 1 << 15;
+
+static PARALLELISM: AtomicUsize = AtomicUsize::new(1);
+
+/// Thread budget for the tensor kernels. `Parallelism::new(1)` (the
+/// default) is fully serial; higher values let the big GEMMs split their
+/// output rows across `std::thread::scope` workers.
+///
+/// Determinism guarantee: results are **bit-identical for every thread
+/// count** — each output row is owned by exactly one thread running the
+/// same serial kernel, so no floating-point reassociation ever happens.
+/// The setting is a process-wide tuning knob, not part of any model's
+/// semantics, which is why it lives in a global rather than threading
+/// through every call site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// A budget of `threads` worker threads (clamped to >= 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// The serial default.
+    pub fn single() -> Self {
+        Self::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Install this budget as the process-wide kernel setting.
+    pub fn install(self) {
+        PARALLELISM.store(self.threads, Ordering::Relaxed);
+    }
+
+    /// The currently-installed budget.
+    pub fn current() -> Self {
+        Self::new(PARALLELISM.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+/// Split `out` (owning `rows` rows of `row_width` f32s) into per-thread
+/// row bands and run `kernel(band, first_row, n_rows)` on each. Serial
+/// when the installed budget is 1, the work is below [`PAR_MIN_FLOPS`]
+/// multiplies, or there is only one row.
+pub(crate) fn par_rows<F>(out: &mut [f32], rows: usize, row_width: usize, flops: usize, kernel: F)
+where
+    F: Fn(&mut [f32], usize, usize) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_width);
+    let budget = Parallelism::current().threads();
+    let threads = if flops < PAR_MIN_FLOPS { 1 } else { budget.min(rows).max(1) };
+    if threads <= 1 {
+        kernel(out, 0, rows);
+        return;
+    }
+    let chunk = rows.div_ceil(threads);
+    let kernel = &kernel;
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let take = chunk.min(rows - row0);
+            let (band, tail) = std::mem::take(&mut rest).split_at_mut(take * row_width);
+            rest = tail;
+            let first = row0;
+            scope.spawn(move || kernel(band, first, take));
+            row0 += take;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// serial blocked kernels (the per-band bodies)
+// ---------------------------------------------------------------------
+
+/// `C += A @ B` on a band of `n` output rows: blocked ikj. `a` is the
+/// band's rows of A (`n x k`), `b` the full B (`k x m`), `c` the band's
+/// rows of C (`n x m`, pre-zeroed by the caller).
+pub(crate) fn matmul_band(c: &mut [f32], a: &[f32], b: &[f32], n: usize, k: usize, m: usize) {
+    for j0 in (0..m).step_by(J_BLOCK) {
+        let j1 = (j0 + J_BLOCK).min(m);
+        for k0 in (0..k).step_by(K_BLOCK) {
+            let k1 = (k0 + K_BLOCK).min(k);
+            for i in 0..n {
+                let arow = &a[i * k..(i + 1) * k];
+                let ctile = &mut c[i * m + j0..i * m + j1];
+                for (kk, &aik) in arow[k0..k1].iter().enumerate() {
+                    let brow = &b[(k0 + kk) * m + j0..(k0 + kk) * m + j1];
+                    for (o, &bkj) in ctile.iter_mut().zip(brow.iter()) {
+                        *o += aik * bkj;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = alpha * (A @ B^T)` on a band of `n` output rows: dot-product
+/// kernel with a B-row tile kept hot across the band. `a` is the band's
+/// rows of A (`n x k`), `b` the full B (`m x k`), `c` the band (`n x m`).
+/// `alpha` multiplies each finished dot (the attention score scale);
+/// pass 1.0 for a plain product.
+pub(crate) fn matmul_nt_band(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    alpha: f32,
+) {
+    for j0 in (0..m).step_by(K_BLOCK) {
+        let j1 = (j0 + K_BLOCK).min(m);
+        for i in 0..n {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in j0..j1 {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow.iter()) {
+                    acc += x * y;
+                }
+                c[i * m + j] = acc * alpha;
+            }
+        }
+    }
+}
+
+/// `C += A^T @ B` on a band of C rows `[i0, i0+n)` (columns of A): for
+/// every contraction row `k`, the band's C rows accumulate
+/// `A[k][i] * B[k][j]` in ascending `k` order. `a` is the FULL A
+/// (`rows x acols`), `b` the full B (`rows x m`), `c` the band
+/// (`n x m`, pre-zeroed).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_tn_band(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    acols: usize,
+    m: usize,
+    i0: usize,
+    n: usize,
+) {
+    for k in 0..rows {
+        let arow = &a[k * acols..(k + 1) * acols];
+        let brow = &b[k * m..(k + 1) * m];
+        for i in 0..n {
+            let aki = arow[i0 + i];
+            let crow = &mut c[i * m..(i + 1) * m];
+            for (o, &bkj) in crow.iter_mut().zip(brow.iter()) {
+                *o += aki * bkj;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// parallel entry points (row-banded over the output)
+// ---------------------------------------------------------------------
+
+/// `C = A @ B` into a pre-zeroed `c` (`n x m`), row-parallel.
+pub(crate) fn matmul_into(c: &mut [f32], a: &[f32], b: &[f32], n: usize, k: usize, m: usize) {
+    par_rows(c, n, m, n * k * m, |band, first, rows| {
+        matmul_band(band, &a[first * k..(first + rows) * k], b, rows, k, m);
+    });
+}
+
+/// `C = alpha * (A @ B^T)` into `c` (`n x m`), row-parallel.
+pub(crate) fn matmul_nt_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    alpha: f32,
+) {
+    par_rows(c, n, m, n * k * m, |band, first, rows| {
+        matmul_nt_band(band, &a[first * k..(first + rows) * k], b, rows, k, m, alpha);
+    });
+}
+
+/// `C = A^T @ B` into a pre-zeroed `c` (`acols x m`), parallel over C's
+/// rows (= A's columns); every thread streams the full A and B.
+pub(crate) fn matmul_tn_into(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    acols: usize,
+    m: usize,
+) {
+    par_rows(c, acols, m, rows * acols * m, |band, first, n| {
+        matmul_tn_band(band, a, b, rows, acols, m, first, n);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_clamps() {
+        assert_eq!(Parallelism::new(0).threads(), 1);
+        assert_eq!(Parallelism::default(), Parallelism::single());
+    }
+
+    // NOTE: this is the only test in the lib binary that installs a
+    // non-default Parallelism, so the install/assert pair cannot race
+    // with a concurrent test (and even if it could, kernel RESULTS are
+    // bit-identical at every setting — only `current()` would wobble).
+    #[test]
+    fn install_and_par_rows_cover_every_row_once() {
+        let before = Parallelism::current();
+        Parallelism::new(4).install();
+        assert_eq!(Parallelism::current().threads(), 4);
+        // rows * width big enough to clear PAR_MIN_FLOPS via the fake
+        // flops argument; each band stamps its rows with first+i
+        let (rows, width) = (17usize, 8usize);
+        let mut out = vec![-1.0f32; rows * width];
+        par_rows(&mut out, rows, width, PAR_MIN_FLOPS * 2, |band, first, n| {
+            for i in 0..n {
+                for x in band[i * width..(i + 1) * width].iter_mut() {
+                    *x = (first + i) as f32;
+                }
+            }
+        });
+        before.install();
+        for r in 0..rows {
+            let row = &out[r * width..(r + 1) * width];
+            assert!(row.iter().all(|&x| x == r as f32), "row {r}");
+        }
+    }
+}

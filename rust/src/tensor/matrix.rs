@@ -62,12 +62,51 @@ impl Matrix {
         (self.rows, self.cols)
     }
 
-    /// C = A @ B. Cache-friendly ikj loop with an accumulator row.
+    /// C = A @ B via the cache-blocked, ikj-ordered kernel
+    /// (`tensor::kernels`), row-parallel under the installed
+    /// [`crate::tensor::Parallelism`]. Bit-identical to [`Self::matmul_naive`]
+    /// for every block size and thread count: each output element
+    /// accumulates its k-terms in the same ascending order.
     ///
     /// No zero-skip on `aik`: skipping would drop IEEE NaN/Inf propagation
     /// (0.0 * NaN is NaN) and silently launder non-finite gradients — see
     /// the `matmul_propagates_nan` regression test.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul {:?} x {:?}", self, b);
+        let mut out = Matrix::zeros(self.rows, b.cols);
+        super::kernels::matmul_into(
+            &mut out.data, &self.data, &b.data, self.rows, self.cols, b.cols,
+        );
+        out
+    }
+
+    /// C = A @ B^T (the rp "compress" GEMM shape), blocked + row-parallel.
+    /// Bit-identical to [`Self::matmul_nt_naive`].
+    pub fn matmul_nt(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_nt {:?} x {:?}", self, b);
+        let mut out = Matrix::zeros(self.rows, b.rows);
+        super::kernels::matmul_nt_into(
+            &mut out.data, &self.data, &b.data, self.rows, self.cols, b.rows, 1.0,
+        );
+        out
+    }
+
+    /// C = A^T @ B, blocked + parallel over C rows. Bit-identical to
+    /// [`Self::matmul_tn_naive`]; like `matmul`, no zero-skip — NaN/Inf
+    /// must propagate.
+    pub fn matmul_tn(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows, "matmul_tn {:?} x {:?}", self, b);
+        let mut out = Matrix::zeros(self.cols, b.cols);
+        super::kernels::matmul_tn_into(
+            &mut out.data, &self.data, &b.data, self.rows, self.cols, b.cols,
+        );
+        out
+    }
+
+    /// The pre-refactor textbook ikj matmul, retained verbatim as the
+    /// bit-exactness oracle for the blocked/parallel kernel (see the
+    /// `prop_matmul_*` tests) and as the microbench baseline.
+    pub fn matmul_naive(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.rows, "matmul {:?} x {:?}", self, b);
         let mut out = Matrix::zeros(self.rows, b.cols);
         for i in 0..self.rows {
@@ -83,8 +122,9 @@ impl Matrix {
         out
     }
 
-    /// C = A @ B^T (the rp "compress" GEMM shape; dot-product inner loop).
-    pub fn matmul_nt(&self, b: &Matrix) -> Matrix {
+    /// Pre-refactor dot-product A @ B^T, retained as the oracle for
+    /// [`Self::matmul_nt`].
+    pub fn matmul_nt_naive(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.cols, "matmul_nt {:?} x {:?}", self, b);
         let mut out = Matrix::zeros(self.rows, b.rows);
         for i in 0..self.rows {
@@ -101,8 +141,8 @@ impl Matrix {
         out
     }
 
-    /// C = A^T @ B. Like `matmul`, no zero-skip: NaN/Inf must propagate.
-    pub fn matmul_tn(&self, b: &Matrix) -> Matrix {
+    /// Pre-refactor A^T @ B, retained as the oracle for [`Self::matmul_tn`].
+    pub fn matmul_tn_naive(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.rows, b.rows, "matmul_tn {:?} x {:?}", self, b);
         let mut out = Matrix::zeros(self.cols, b.cols);
         for k in 0..self.rows {
@@ -324,6 +364,28 @@ mod tests {
         let at = m(2, 1, &[0.0, 1.0]); // same contraction through A^T
         let ct = at.matmul_tn(&b);
         assert!(ct.data.iter().all(|x| x.is_nan()), "{:?}", ct.data);
+    }
+
+    #[test]
+    fn blocked_kernels_bit_match_naive() {
+        // shapes straddling the kernel block sizes; the full randomized
+        // sweep lives in tests/properties.rs
+        let mut rng = Rng::new(9);
+        for (n, k, m) in [(3usize, 5usize, 4usize), (70, 130, 65), (129, 64, 200)] {
+            let a = Matrix::gaussian(n, k, 1.0, &mut rng);
+            let b = Matrix::gaussian(k, m, 1.0, &mut rng);
+            assert!(a.matmul(&b).allclose(&a.matmul_naive(&b), 0.0), "({n},{k},{m})");
+            let bt = Matrix::gaussian(m, k, 1.0, &mut rng);
+            assert!(
+                a.matmul_nt(&bt).allclose(&a.matmul_nt_naive(&bt), 0.0),
+                "nt ({n},{k},{m})"
+            );
+            let b2 = Matrix::gaussian(n, m, 1.0, &mut rng);
+            assert!(
+                a.matmul_tn(&b2).allclose(&a.matmul_tn_naive(&b2), 0.0),
+                "tn ({n},{k},{m})"
+            );
+        }
     }
 
     #[test]

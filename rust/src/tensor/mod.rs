@@ -1,16 +1,32 @@
-//! Pure-rust f32 matrix substrate.
+//! Pure-rust f32 tensor substrate.
 //!
 //! Used by the Figure-1 pilot study (MLP + LoRA/RP/RRP updaters with
 //! hand-derived gradients), by the rust-side random-projection reference
 //! (`rp`), by the native transformer models (`crate::model` — forward AND
 //! manual backward, so the ops here carry their VJPs), and by the
-//! metrics/memory machinery. Clarity beats vectorization tricks here; the
-//! micro_rp bench still tracks the GEMM against the XLA kernel for the
-//! §Perf log.
+//! metrics/memory machinery.
+//!
+//! The GEMM hot path lives in `kernels`: cache-blocked, ikj-ordered
+//! kernels over row slices with an opt-in `std::thread::scope`
+//! row-parallel path behind the process-wide [`Parallelism`] config
+//! (`--parallelism N` on the CLI and benches). The pre-refactor naive
+//! kernels are retained as `Matrix::*_naive` bit-exactness oracles, and
+//! `batched` packs head-strided attention views into contiguous panels
+//! so QKᵀ/probs·V run on the same kernels. Both the blocked and the
+//! threaded paths are bit-identical to the naive serial ones (see
+//! `kernels` for why), so `Parallelism` never changes any result.
 
+mod batched;
+mod kernels;
 mod matrix;
 mod ops;
 
+pub use batched::{
+    batched_matmul, batched_matmul_nt, batched_matmul_tn, gather_heads,
+    scatter_heads, softmax_rows_masked, softmax_rows_vjp_batched,
+    BatchedMatrix,
+};
+pub use kernels::Parallelism;
 pub use matrix::Matrix;
 pub use ops::{
     gelu, gelu_grad, relu, rms_norm_rows, rms_norm_rows_vjp, softmax_rows,

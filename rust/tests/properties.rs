@@ -125,6 +125,116 @@ fn prop_projection_rows_near_unit_norm_scaled() {
 }
 
 // ---------------------------------------------------------------------
+// blocked/parallel GEMM kernels vs the retained naive references
+// ---------------------------------------------------------------------
+
+use flora::tensor::Parallelism;
+
+#[test]
+fn prop_blocked_matmuls_bit_match_naive_on_random_rectangles() {
+    // random rectangular shapes, including ones straddling the kernel
+    // block sizes; the blocked kernels accumulate each element's k-terms
+    // in the same ascending order as the naive triple loop, so the
+    // comparison is EXACT (tolerance 0), not ULP-scaled
+    let mut rng = Rng::new(20);
+    for trial in 0..24 {
+        let (n, k, m) = if trial < 18 {
+            (
+                1 + rng.next_below(40),
+                1 + rng.next_below(40),
+                1 + rng.next_below(40),
+            )
+        } else {
+            // force the k/j blocking paths (> 64 / > 128)
+            (
+                60 + rng.next_below(90),
+                60 + rng.next_below(90),
+                100 + rng.next_below(80),
+            )
+        };
+        let a = Matrix::gaussian(n, k, 1.0, &mut rng);
+        let b = Matrix::gaussian(k, m, 1.0, &mut rng);
+        assert!(
+            a.matmul(&b).allclose(&a.matmul_naive(&b), 0.0),
+            "matmul ({n},{k},{m})"
+        );
+        let bt = Matrix::gaussian(m, k, 1.0, &mut rng);
+        assert!(
+            a.matmul_nt(&bt).allclose(&a.matmul_nt_naive(&bt), 0.0),
+            "matmul_nt ({n},{k},{m})"
+        );
+        let b2 = Matrix::gaussian(n, m, 1.0, &mut rng);
+        assert!(
+            a.matmul_tn(&b2).allclose(&a.matmul_tn_naive(&b2), 0.0),
+            "matmul_tn ({n},{k},{m})"
+        );
+    }
+}
+
+#[test]
+fn prop_parallel_matmuls_bit_match_serial() {
+    // the row-parallel path must be bit-identical to serial at every
+    // thread budget (each output row is owned by one thread running the
+    // identical kernel). Safe to flip the global mid-test-suite for the
+    // same reason: other tests' results cannot change either.
+    let mut rng = Rng::new(21);
+    // big enough to clear the parallel-engagement threshold
+    let a = Matrix::gaussian(150, 90, 1.0, &mut rng);
+    let b = Matrix::gaussian(90, 120, 1.0, &mut rng);
+    let bt = Matrix::gaussian(120, 90, 1.0, &mut rng);
+    let b2 = Matrix::gaussian(150, 110, 1.0, &mut rng);
+    let before = Parallelism::current();
+    Parallelism::single().install();
+    let (serial, serial_nt, serial_tn) =
+        (a.matmul(&b), a.matmul_nt(&bt), a.matmul_tn(&b2));
+    for threads in [2usize, 3, 7] {
+        Parallelism::new(threads).install();
+        assert!(a.matmul(&b).allclose(&serial, 0.0), "threads={threads}");
+        assert!(
+            a.matmul_nt(&bt).allclose(&serial_nt, 0.0),
+            "nt threads={threads}"
+        );
+        assert!(
+            a.matmul_tn(&b2).allclose(&serial_tn, 0.0),
+            "tn threads={threads}"
+        );
+    }
+    before.install();
+}
+
+#[test]
+fn prop_blocked_kernels_propagate_nan_and_inf() {
+    // the PR-1 regression, re-run against the blocked/parallel kernels at
+    // sizes that exercise the blocking: a zero row times a NaN/Inf column
+    // must stay non-finite (0 * NaN = NaN; no zero-skip fast paths)
+    let (n, k, m) = (70usize, 130usize, 150usize);
+    let mut a = Matrix::zeros(n, k);
+    *a.at_mut(0, k - 1) = 1.0; // row 0 hits the NaN row of b with weight 1
+    let mut b = Matrix::zeros(k, m);
+    for j in 0..m {
+        *b.at_mut(k - 1, j) = f32::NAN;
+    }
+    let c = a.matmul(&b);
+    assert!(c.row(0).iter().all(|x| x.is_nan()), "NaN row laundered");
+    // row 1 of a is all zero, but 0 * NaN in the contraction is NaN
+    assert!(c.row(1).iter().all(|x| x.is_nan()), "0*NaN must stay NaN");
+
+    let mut binf = Matrix::zeros(k, m);
+    *binf.at_mut(0, 0) = f32::INFINITY;
+    let cinf = a.matmul(&binf);
+    assert!(cinf.at(1, 0).is_nan(), "0*inf must be NaN");
+    assert_eq!(cinf.at(1, 1), 0.0);
+
+    // same contractions through the nt/tn kernels
+    let bnan = Matrix::from_fn(3, k, |_, j| if j == 0 { f32::NAN } else { 1.0 });
+    let cnt = a.matmul_nt(&bnan);
+    assert!(cnt.data.iter().all(|x| x.is_nan()));
+    let annan = Matrix::from_fn(n, 3, |i, _| if i == 0 { f32::NAN } else { 0.0 });
+    let ctn = annan.matmul_tn(&Matrix::from_fn(n, m, |_, _| 1.0));
+    assert!(ctn.data.iter().all(|x| x.is_nan()));
+}
+
+// ---------------------------------------------------------------------
 // data-task invariants
 // ---------------------------------------------------------------------
 
