@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Warn-only BENCH_kernels.json trajectory diff for CI.
+
+Usage: bench_diff.py <current.json> [baseline.json]
+
+The kernel microbench APPENDS one snapshot per invocation — and the CI
+smoke step invokes it more than once (pool and scope drivers) — so "the
+committed baseline" cannot be recovered from the current file alone.
+The workflow therefore snapshots the committed file BEFORE the bench
+runs and passes it as the second argument: the baseline is that file's
+last entry, and the fresh measurement is chosen from the entries the
+bench appended (preferring the pool driver, the production default).
+With no baseline file the script falls back to the last two entries of
+the current file and says so.
+
+This script renders a markdown comparison (shared numeric fields, per
+model) for the job summary. It NEVER fails the job: regressions on
+shared CI runners are a signal to investigate, not a gate (the bench
+binary itself exits non-zero on real errors, which is the failing
+condition). Comparability caveats are printed loudly: entries can
+differ in parallelism, --quick, runtime driver, and provenance (the
+first committed points were measured with the C GEMM-path mirror,
+benches/mirror/kernel_mirror.c, whose absolute numbers overstate
+full-model throughput — see docs/PERFORMANCE.md).
+"""
+
+import json
+import sys
+
+
+def fmt(x):
+    if not isinstance(x, (int, float)):
+        return str(x)
+    # keep decimals on small metrics (the attention speedup gate lives
+    # around 5.x — ':,.0f' would render baseline and fresh identically
+    # while the delta column disagrees)
+    return f"{x:,.2f}" if abs(x) < 100 else f"{x:,.0f}"
+
+
+def load_trajectory(path):
+    try:
+        with open(path) as f:
+            return json.load(f).get("trajectory", [])
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench diff: cannot read {path}: {e}")
+        return None
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
+    baseline_path = sys.argv[2] if len(sys.argv) > 2 else None
+    traj = load_trajectory(path)
+    if traj is None:
+        return
+    if baseline_path:
+        base_traj = load_trajectory(baseline_path)
+        if not base_traj:
+            print("bench diff: empty/unreadable baseline, nothing to diff")
+            return
+        base = base_traj[-1]
+        if traj[: len(base_traj)] == base_traj:
+            appended = traj[len(base_traj):]
+        else:
+            # the bench starts a FRESH trajectory when the committed file
+            # was unparsable/not schema-2 — fall back to matching the
+            # appended entries by their provenance tag
+            appended = [
+                s
+                for s in traj
+                if s.get("provenance", "").startswith("cargo-bench")
+            ]
+        if not appended:
+            print("bench diff: the bench appended no snapshot, nothing to diff")
+            return
+        pool_runs = [s for s in appended if s.get("runtime") == "pool"]
+        fresh = pool_runs[-1] if pool_runs else appended[-1]
+    else:
+        if len(traj) < 2:
+            print(f"bench diff: {len(traj)} trajectory entr(y/ies), nothing to diff")
+            return
+        print("bench diff: no baseline file given — comparing the last two entries\n")
+        fresh, base = traj[-1], traj[-2]
+
+    print("### kernel bench vs committed baseline (warn-only)\n")
+    for label, snap in [("baseline", base), ("fresh", fresh)]:
+        print(
+            f"- **{label}**: runtime={snap.get('runtime')} "
+            f"parallelism={snap.get('parallelism')} quick={snap.get('quick')} "
+            f"— {snap.get('provenance', 'no provenance')}"
+        )
+    if base.get("provenance", "").split()[0:1] != fresh.get("provenance", "").split()[0:1]:
+        print(
+            "\n> provenance differs — absolute numbers are NOT comparable "
+            "(the mirror measures the GEMM path only); read deltas as "
+            "directional at best.\n"
+        )
+
+    base_sizes = {s["model"]: s for s in base.get("sizes", [])}
+    rows = []
+    for s in fresh.get("sizes", []):
+        b = base_sizes.get(s["model"])
+        if not b:
+            continue
+        shared = [
+            k
+            for k, v in s.items()
+            if isinstance(v, (int, float))
+            and isinstance(b.get(k), (int, float))
+            and k != "tokens_per_batch"
+        ]
+        for k in shared:
+            old, new = b[k], s[k]
+            delta = (new - old) / old * 100 if old else float("nan")
+            flag = " ⚠️" if old and delta < -10 else ""
+            rows.append((s["model"], k, fmt(old), fmt(new), f"{delta:+.1f}%{flag}"))
+    if not rows:
+        print("\nno shared numeric fields between the two snapshots")
+        return
+    print("\n| model | metric | baseline | fresh | delta |")
+    print("|---|---|---:|---:|---:|")
+    for r in rows:
+        print("| " + " | ".join(r) + " |")
+
+
+if __name__ == "__main__":
+    main()

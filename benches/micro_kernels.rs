@@ -1,5 +1,5 @@
-//! Kernel/attention throughput microbench (not a paper table; seeds the
-//! §Perf trajectory) — emits `BENCH_kernels.json`.
+//! Kernel/attention throughput microbench (not a paper table; grows the
+//! §Perf trajectory) — APPENDS a snapshot to `BENCH_kernels.json`.
 //!
 //! For every native catalog size (the `lora-*` LM grid and the `vit-*`
 //! grid) it measures tokens/sec for:
@@ -9,13 +9,23 @@
 //!   * `flora_step`       — a complete FLORA Algorithm-2 training step
 //!                          (rank 8, Adafactor base) through the Trainer
 //!
-//! and, as the refactor's acceptance metric, the attention core's
+//! and, as the PR-4 refactor's acceptance metric, the attention core's
 //! forward+backward throughput on the batched GEMM path
 //! (`model::blocks::attention_*`) against the retained pre-refactor
 //! scalar nests (`model::blocks::reference`) — `attn_fwd_bwd_speedup`
 //! at lora-tiny scale is the ≥5× gate.
 //!
-//! Run: cargo bench --bench micro_kernels [-- --quick --parallelism N]
+//! `BENCH_kernels.json` is a schema-2 TRAJECTORY: a list of dated-by-PR
+//! snapshots (see docs/PERFORMANCE.md for a worked reading example).
+//! This bench parses the committed file, appends one `cargo-bench`
+//! snapshot, and re-renders — it never rewrites history. `--runtime
+//! scope` re-measures on the retained per-call `thread::scope` driver
+//! for pool-vs-scope A/B pairs (results bit-identical, only time moves).
+//!
+//! Run: cargo bench --bench micro_kernels
+//!        [-- --quick --parallelism N --runtime pool|scope]
+
+use std::collections::BTreeMap;
 
 use flora::bench::paper::BenchArgs;
 use flora::bench::time_it;
@@ -25,7 +35,8 @@ use flora::data::images::ImageTask;
 use flora::model::blocks::{self, reference, BlockDims};
 use flora::model::{TransformerConfig, VitConfig};
 use flora::opt::OptimizerKind;
-use flora::tensor::{Matrix, Parallelism};
+use flora::tensor::{KernelDriver, Matrix, Parallelism};
+use flora::util::json::{self, Json};
 use flora::util::rng::Rng;
 
 const BATCH: usize = 4;
@@ -195,34 +206,78 @@ fn measure_vit(
     })
 }
 
-fn json_of(results: &[SizeResult], parallelism: usize, quick: bool) -> String {
-    let mut out = String::from("{\n");
-    out.push_str("  \"bench\": \"micro_kernels\",\n");
-    out.push_str(&format!("  \"parallelism\": {parallelism},\n"));
-    out.push_str(&format!("  \"quick\": {quick},\n"));
-    out.push_str("  \"sizes\": [\n");
-    for (i, r) in results.iter().enumerate() {
-        out.push_str(&format!(
-            "    {{\"model\": \"{}\", \"family\": \"{}\", \
-             \"tokens_per_batch\": {}, \"forward_tok_s\": {:.1}, \
-             \"forward_backward_tok_s\": {:.1}, \"flora_step_tok_s\": {:.1}, \
-             \"attn_fwd_bwd_scalar_tok_s\": {:.1}, \
-             \"attn_fwd_bwd_batched_tok_s\": {:.1}, \
-             \"attn_fwd_bwd_speedup\": {:.2}}}{}\n",
-            r.model,
-            r.family,
-            r.tokens_per_batch,
-            r.forward_tok_s,
-            r.forward_backward_tok_s,
-            r.flora_step_tok_s,
-            r.attn_scalar_tok_s,
-            r.attn_batched_tok_s,
-            r.speedup(),
-            if i + 1 < results.len() { "," } else { "" },
-        ));
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn round1(x: f64) -> Json {
+    Json::Num((x * 10.0).round() / 10.0)
+}
+
+/// One schema-2 trajectory snapshot for this invocation.
+fn snapshot_of(results: &[SizeResult], args: &BenchArgs) -> Json {
+    let runtime = match args.parallelism.driver() {
+        KernelDriver::Pool => "pool",
+        KernelDriver::Scope => "scope",
+    };
+    let sizes: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("model", Json::Str(r.model.into())),
+                ("family", Json::Str(r.family.into())),
+                ("tokens_per_batch", Json::Num(r.tokens_per_batch as f64)),
+                ("forward_tok_s", round1(r.forward_tok_s)),
+                ("forward_backward_tok_s", round1(r.forward_backward_tok_s)),
+                ("flora_step_tok_s", round1(r.flora_step_tok_s)),
+                ("attn_fwd_bwd_scalar_tok_s", round1(r.attn_scalar_tok_s)),
+                ("attn_fwd_bwd_batched_tok_s", round1(r.attn_batched_tok_s)),
+                (
+                    "attn_fwd_bwd_speedup",
+                    Json::Num((r.speedup() * 100.0).round() / 100.0),
+                ),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("runtime", Json::Str(runtime.into())),
+        ("parallelism", Json::Num(args.parallelism.threads() as f64)),
+        ("quick", Json::Bool(args.quick)),
+        ("provenance", Json::Str("cargo-bench micro_kernels".into())),
+        ("sizes", Json::Arr(sizes)),
+    ])
+}
+
+/// Append `snapshot` to the trajectory in `path` (schema 2). A missing,
+/// unparsable, or schema-1 file starts a fresh trajectory rather than
+/// erroring — the committed baseline is documentation, not a lockfile.
+fn append_snapshot(path: &str, snapshot: Json) -> String {
+    let mut trajectory: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(old) = json::parse(&text) {
+            if old.get("schema").and_then(Json::as_usize) == Some(2) {
+                if let Some(arr) = old.get("trajectory").and_then(Json::as_arr) {
+                    trajectory = arr.to_vec();
+                }
+            }
+        }
     }
-    out.push_str("  ]\n}\n");
-    out
+    trajectory.push(snapshot);
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("micro_kernels".into()));
+    root.insert("schema".to_string(), Json::Num(2.0));
+    root.insert(
+        "comment".to_string(),
+        Json::Str(
+            "Per-PR kernel-throughput trajectory (tokens/sec). Entries are \
+             appended, never rewritten; `cargo bench --bench micro_kernels` \
+             appends a fresh cargo-bench snapshot. How to read this file: \
+             docs/PERFORMANCE.md."
+                .into(),
+        ),
+    );
+    root.insert("trajectory".to_string(), Json::Arr(trajectory));
+    Json::Obj(root).render()
 }
 
 fn main() {
@@ -250,8 +305,9 @@ fn main() {
 
     let mut table = flora::bench::Table::new(
         &format!(
-            "kernel throughput (tokens/sec, batch {BATCH}, parallelism {})",
-            args.parallelism.threads()
+            "kernel throughput (tokens/sec, batch {BATCH}, parallelism {}, runtime {:?})",
+            args.parallelism.threads(),
+            args.parallelism.driver()
         ),
         &["Model", "fwd", "fwd+bwd", "flora step", "attn scalar", "attn batched", "speedup"],
     );
@@ -280,10 +336,15 @@ fn main() {
         }
     }
 
-    let json = json_of(&results, args.parallelism.threads(), args.quick);
     let path = "BENCH_kernels.json";
-    match std::fs::write(path, &json) {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
+    let rendered = append_snapshot(path, snapshot_of(&results, &args));
+    match std::fs::write(path, &rendered) {
+        Ok(()) => println!("\nappended snapshot to {path}"),
+        Err(e) => {
+            // growing the trajectory is this bench's one artifact; a
+            // silent skip would let CI go green on a broken append
+            eprintln!("could not write {path}: {e}");
+            std::process::exit(1);
+        }
     }
 }

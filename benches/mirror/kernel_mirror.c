@@ -1,0 +1,555 @@
+/* kernel_mirror.c — C mirror of the rust tensor-kernel hot path, used to
+ * measure the PR-5 tentpole (persistent worker pool + fused QKV +
+ * unrolled inner loops) against the PR-4 baseline (std::thread::scope
+ * spawn per GEMM call + unfused QKV + single-step loops) on machines
+ * where cargo is unavailable (the build container). It seeds the first
+ * BENCH_kernels.json trajectory point; `cargo bench --bench
+ * micro_kernels -- --runtime scope|pool` reproduces the same A/B on the
+ * real crate.
+ *
+ * What is mirrored, faithfully:
+ *   - the three blocked band kernels of rust/src/tensor/kernels.rs in
+ *     BOTH forms (PR-4 single-step loops; PR-5 unrolled forms), same
+ *     K_BLOCK/J_BLOCK and the same PAR_MIN_FLOPS engagement gate;
+ *   - the row-band parallel driver in both lifecycles: one pthread
+ *     spawn+join per call (the thread::scope mirror) vs a persistent
+ *     pool (mutex+condvar job board, caller computes band 0) — band
+ *     splits identical to the rust code;
+ *   - the per-step GEMM call sequence of the native transformer/ViT
+ *     models (forward and forward+backward), including one dispatch per
+ *     *batched* attention op exactly like tensor/batched.rs, with the
+ *     unfused (3 GEMM) vs fused ([d,3d]) QKV layouts.
+ *
+ * What is NOT mirrored (documented in docs/PERFORMANCE.md): elementwise
+ * ops (softmax/RMS-norm/GELU), embedding gathers, and the optimizer —
+ * so absolute tokens/sec here overstate the full-model numbers the rust
+ * bench reports. The pre/post RATIO is the honest measurement: both
+ * variants omit the same work.
+ *
+ * Build & run:  gcc -O2 -pthread -o kernel_mirror kernel_mirror.c -lm
+ *               ./kernel_mirror 4          # parallelism (thread budget)
+ */
+#include <pthread.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define K_BLOCK 64
+#define J_BLOCK 128
+#define PAR_MIN_FLOPS (1 << 15)
+#define MAX_THREADS 16
+
+static int g_threads = 4;
+
+/* ------------------------------------------------------------------ */
+/* band kernels, PR-4 (plain) and PR-5 (unrolled) forms               */
+/* ------------------------------------------------------------------ */
+
+static void matmul_band_plain(float *c, const float *a, const float *b,
+                              int n, int k, int m) {
+    for (int j0 = 0; j0 < m; j0 += J_BLOCK) {
+        int j1 = j0 + J_BLOCK < m ? j0 + J_BLOCK : m;
+        for (int k0 = 0; k0 < k; k0 += K_BLOCK) {
+            int k1 = k0 + K_BLOCK < k ? k0 + K_BLOCK : k;
+            for (int i = 0; i < n; i++) {
+                const float *arow = a + (size_t)i * k;
+                float *ctile = c + (size_t)i * m;
+                for (int kk = k0; kk < k1; kk++) {
+                    float aik = arow[kk];
+                    const float *brow = b + (size_t)kk * m;
+                    for (int j = j0; j < j1; j++) ctile[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+static void matmul_band_unroll(float *c, const float *a, const float *b,
+                               int n, int k, int m) {
+    for (int j0 = 0; j0 < m; j0 += J_BLOCK) {
+        int j1 = j0 + J_BLOCK < m ? j0 + J_BLOCK : m;
+        for (int k0 = 0; k0 < k; k0 += K_BLOCK) {
+            int k1 = k0 + K_BLOCK < k ? k0 + K_BLOCK : k;
+            for (int i = 0; i < n; i++) {
+                const float *arow = a + (size_t)i * k;
+                float *ctile = c + (size_t)i * m;
+                int kk = k0;
+                for (; kk + 4 <= k1; kk += 4) {
+                    float a0 = arow[kk], a1 = arow[kk + 1];
+                    float a2 = arow[kk + 2], a3 = arow[kk + 3];
+                    const float *b0 = b + (size_t)kk * m;
+                    const float *b1 = b + (size_t)(kk + 1) * m;
+                    const float *b2 = b + (size_t)(kk + 2) * m;
+                    const float *b3 = b + (size_t)(kk + 3) * m;
+                    for (int j = j0; j < j1; j++) {
+                        float acc = ctile[j];
+                        acc += a0 * b0[j];
+                        acc += a1 * b1[j];
+                        acc += a2 * b2[j];
+                        acc += a3 * b3[j];
+                        ctile[j] = acc;
+                    }
+                }
+                for (; kk < k1; kk++) {
+                    float aik = arow[kk];
+                    const float *brow = b + (size_t)kk * m;
+                    for (int j = j0; j < j1; j++) ctile[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+static void nt_band_plain(float *c, const float *a, const float *b, int n,
+                          int k, int m, float alpha) {
+    for (int j0 = 0; j0 < m; j0 += K_BLOCK) {
+        int j1 = j0 + K_BLOCK < m ? j0 + K_BLOCK : m;
+        for (int i = 0; i < n; i++) {
+            const float *arow = a + (size_t)i * k;
+            for (int j = j0; j < j1; j++) {
+                const float *brow = b + (size_t)j * k;
+                float acc = 0.0f;
+                for (int t = 0; t < k; t++) acc += arow[t] * brow[t];
+                c[(size_t)i * m + j] = acc * alpha;
+            }
+        }
+    }
+}
+
+static void nt_band_unroll(float *c, const float *a, const float *b, int n,
+                           int k, int m, float alpha) {
+    for (int j0 = 0; j0 < m; j0 += K_BLOCK) {
+        int j1 = j0 + K_BLOCK < m ? j0 + K_BLOCK : m;
+        for (int i = 0; i < n; i++) {
+            const float *arow = a + (size_t)i * k;
+            float *crow = c + (size_t)i * m;
+            int j = j0;
+            for (; j + 4 <= j1; j += 4) {
+                const float *b0 = b + (size_t)j * k;
+                const float *b1 = b + (size_t)(j + 1) * k;
+                const float *b2 = b + (size_t)(j + 2) * k;
+                const float *b3 = b + (size_t)(j + 3) * k;
+                float acc0 = 0, acc1 = 0, acc2 = 0, acc3 = 0;
+                for (int t = 0; t < k; t++) {
+                    float x = arow[t];
+                    acc0 += x * b0[t];
+                    acc1 += x * b1[t];
+                    acc2 += x * b2[t];
+                    acc3 += x * b3[t];
+                }
+                crow[j] = acc0 * alpha;
+                crow[j + 1] = acc1 * alpha;
+                crow[j + 2] = acc2 * alpha;
+                crow[j + 3] = acc3 * alpha;
+            }
+            for (; j < j1; j++) {
+                const float *brow = b + (size_t)j * k;
+                float acc = 0.0f;
+                for (int t = 0; t < k; t++) acc += arow[t] * brow[t];
+                crow[j] = acc * alpha;
+            }
+        }
+    }
+}
+
+static void tn_band_plain(float *c, const float *a, const float *b, int rows,
+                          int acols, int m, int i0, int n) {
+    for (int kk = 0; kk < rows; kk++) {
+        const float *arow = a + (size_t)kk * acols;
+        const float *brow = b + (size_t)kk * m;
+        for (int i = 0; i < n; i++) {
+            float aki = arow[i0 + i];
+            float *crow = c + (size_t)i * m;
+            for (int j = 0; j < m; j++) crow[j] += aki * brow[j];
+        }
+    }
+}
+
+static void tn_band_unroll(float *c, const float *a, const float *b, int rows,
+                           int acols, int m, int i0, int n) {
+    int kk = 0;
+    for (; kk + 2 <= rows; kk += 2) {
+        const float *ar0 = a + (size_t)kk * acols;
+        const float *ar1 = a + (size_t)(kk + 1) * acols;
+        const float *br0 = b + (size_t)kk * m;
+        const float *br1 = b + (size_t)(kk + 1) * m;
+        for (int i = 0; i < n; i++) {
+            float a0 = ar0[i0 + i], a1 = ar1[i0 + i];
+            float *crow = c + (size_t)i * m;
+            for (int j = 0; j < m; j++) {
+                float acc = crow[j];
+                acc += a0 * br0[j];
+                acc += a1 * br1[j];
+                crow[j] = acc;
+            }
+        }
+    }
+    if (kk < rows) /* tail: at most one contraction row, plain form */
+        tn_band_plain(c, a + (size_t)kk * acols, b + (size_t)kk * m,
+                      rows - kk, acols, m, i0, n);
+}
+
+/* ------------------------------------------------------------------ */
+/* one GEMM "op": kind + shapes (+panel batch for the attention ops)  */
+/* ------------------------------------------------------------------ */
+
+typedef enum { OP_N, OP_NT, OP_TN } OpKind;
+
+typedef struct {
+    OpKind kind;
+    int batch; /* 1 for plain matrix ops; b*h for batched attention ops */
+    int n, k, m;
+    float *a, *b, *c;
+} Op;
+
+typedef struct {
+    const Op *op;
+    int unrolled;
+    int first, count; /* band: rows for plain ops, panels for batched */
+} Band;
+
+/* operand element counts per kind: N: a n*k, b k*m, c n*m;
+ * NT: b m*k; TN (n=rows, k=acols): a n*k, b n*m, c k*m */
+static void op_sizes(const Op *o, size_t *an, size_t *bn, size_t *cn) {
+    *an = (size_t)o->n * o->k;
+    *bn = o->kind == OP_NT ? (size_t)o->m * o->k
+          : o->kind == OP_TN ? (size_t)o->n * o->m
+                             : (size_t)o->k * o->m;
+    *cn = o->kind == OP_TN ? (size_t)o->k * o->m : (size_t)o->n * o->m;
+}
+
+static void run_band(const Band *bd) {
+    const Op *o = bd->op;
+    size_t an, bn, cn;
+    op_sizes(o, &an, &bn, &cn);
+    if (o->batch > 1) { /* bands are whole panels */
+        for (int p = bd->first; p < bd->first + bd->count; p++) {
+            float *a = o->a + (size_t)p * an, *b = o->b + (size_t)p * bn,
+                  *c = o->c + (size_t)p * cn;
+            memset(c, 0, cn * sizeof(float));
+            switch (o->kind) {
+            case OP_N:
+                (bd->unrolled ? matmul_band_unroll : matmul_band_plain)(
+                    c, a, b, o->n, o->k, o->m);
+                break;
+            case OP_NT:
+                (bd->unrolled ? nt_band_unroll : nt_band_plain)(
+                    c, a, b, o->n, o->k, o->m, 1.0f);
+                break;
+            case OP_TN:
+                (bd->unrolled ? tn_band_unroll : tn_band_plain)(
+                    c, a, b, o->n, o->k, o->m, 0, o->k);
+                break;
+            }
+        }
+        return;
+    }
+    /* plain op: bands are output rows (TN bands are A-columns) */
+    int first = bd->first, count = bd->count;
+    switch (o->kind) {
+    case OP_N: {
+        float *c = o->c + (size_t)first * o->m;
+        memset(c, 0, (size_t)count * o->m * sizeof(float));
+        (bd->unrolled ? matmul_band_unroll : matmul_band_plain)(
+            c, o->a + (size_t)first * o->k, o->b, count, o->k, o->m);
+        break;
+    }
+    case OP_NT: {
+        float *c = o->c + (size_t)first * o->m;
+        (bd->unrolled ? nt_band_unroll : nt_band_plain)(
+            c, o->a + (size_t)first * o->k, o->b, count, o->k, o->m, 1.0f);
+        break;
+    }
+    case OP_TN: {
+        float *c = o->c + (size_t)first * o->m;
+        memset(c, 0, (size_t)count * o->m * sizeof(float));
+        (bd->unrolled ? tn_band_unroll : tn_band_plain)(
+            c, o->a, o->b, o->n, o->k, o->m, first, count);
+        break;
+    }
+    }
+}
+
+/* rows available for banding + the flop gate, mirroring par_rows */
+static int op_rows(const Op *o) { return o->batch > 1 ? o->batch : (o->kind == OP_TN ? o->k : o->n); }
+static long op_flops(const Op *o) {
+    long f = (long)o->n * o->k * o->m;
+    if (o->kind == OP_TN) f = (long)o->n * o->k * o->m; /* rows*acols*m */
+    return f * (o->batch > 1 ? o->batch : 1);
+}
+
+/* ------------------------------------------------------------------ */
+/* driver 1: spawn-per-call (the thread::scope mirror)                */
+/* ------------------------------------------------------------------ */
+
+static void *band_thread(void *arg) {
+    run_band((Band *)arg);
+    return NULL;
+}
+
+static void dispatch_scope(const Op *o, int unrolled) {
+    int rows = op_rows(o);
+    int threads = g_threads < rows ? g_threads : rows;
+    if (op_flops(o) < PAR_MIN_FLOPS || threads <= 1) {
+        Band bd = {o, unrolled, 0, rows};
+        run_band(&bd);
+        return;
+    }
+    int chunk = (rows + threads - 1) / threads;
+    pthread_t tids[MAX_THREADS];
+    Band bands[MAX_THREADS];
+    int nb = 0;
+    for (int r0 = 0; r0 < rows; r0 += chunk) {
+        int take = chunk < rows - r0 ? chunk : rows - r0;
+        bands[nb] = (Band){o, unrolled, r0, take};
+        pthread_create(&tids[nb], NULL, band_thread, &bands[nb]);
+        nb++;
+    }
+    for (int i = 0; i < nb; i++) pthread_join(tids[i], NULL);
+}
+
+/* ------------------------------------------------------------------ */
+/* driver 2: persistent pool (mutex+condvar job board, caller works)  */
+/* ------------------------------------------------------------------ */
+
+static pthread_mutex_t pool_mu = PTHREAD_MUTEX_INITIALIZER;
+static pthread_cond_t pool_cv = PTHREAD_COND_INITIALIZER;
+static pthread_cond_t done_cv = PTHREAD_COND_INITIALIZER;
+static Band pool_bands[MAX_THREADS];
+static int pool_nbands = 0, pool_taken = 0, pool_done = 0;
+static long pool_gen = 0;
+static int pool_workers = 0, pool_shutdown = 0;
+
+static void *pool_worker(void *arg) {
+    (void)arg;
+    long seen = 0;
+    pthread_mutex_lock(&pool_mu);
+    for (;;) {
+        while (!pool_shutdown && (pool_gen == seen || pool_taken >= pool_nbands))
+            pthread_cond_wait(&pool_cv, &pool_mu);
+        if (pool_shutdown) break;
+        seen = pool_gen;
+        while (pool_taken < pool_nbands) {
+            Band *bd = &pool_bands[pool_taken++];
+            pthread_mutex_unlock(&pool_mu);
+            run_band(bd);
+            pthread_mutex_lock(&pool_mu);
+            pool_done++;
+            if (pool_done == pool_nbands) pthread_cond_signal(&done_cv);
+        }
+    }
+    pthread_mutex_unlock(&pool_mu);
+    return NULL;
+}
+
+static pthread_t pool_tids[MAX_THREADS];
+
+static void pool_start(int workers) {
+    pool_workers = workers;
+    for (int i = 0; i < workers; i++)
+        pthread_create(&pool_tids[i], NULL, pool_worker, NULL);
+}
+
+static void pool_stop(void) {
+    pthread_mutex_lock(&pool_mu);
+    pool_shutdown = 1;
+    pthread_cond_broadcast(&pool_cv);
+    pthread_mutex_unlock(&pool_mu);
+    for (int i = 0; i < pool_workers; i++) pthread_join(pool_tids[i], NULL);
+    pool_shutdown = 0;
+    pool_workers = 0;
+}
+
+static void dispatch_pool(const Op *o, int unrolled) {
+    int rows = op_rows(o);
+    int threads = g_threads < rows ? g_threads : rows;
+    if (op_flops(o) < PAR_MIN_FLOPS || threads <= 1) {
+        Band bd = {o, unrolled, 0, rows};
+        run_band(&bd);
+        return;
+    }
+    int chunk = (rows + threads - 1) / threads;
+    /* caller owns band 0; the rest go on the job board */
+    Band own = {o, unrolled, 0, chunk < rows ? chunk : rows};
+    pthread_mutex_lock(&pool_mu);
+    pool_nbands = 0;
+    for (int r0 = own.count; r0 < rows; r0 += chunk) {
+        int take = chunk < rows - r0 ? chunk : rows - r0;
+        pool_bands[pool_nbands++] = (Band){o, unrolled, r0, take};
+    }
+    pool_taken = 0;
+    pool_done = 0;
+    pool_gen++;
+    int nbands = pool_nbands;
+    pthread_cond_broadcast(&pool_cv);
+    pthread_mutex_unlock(&pool_mu);
+    run_band(&own);
+    pthread_mutex_lock(&pool_mu);
+    while (pool_done < nbands) pthread_cond_wait(&done_cv, &pool_mu);
+    pool_nbands = 0;
+    pthread_mutex_unlock(&pool_mu);
+}
+
+/* ------------------------------------------------------------------ */
+/* model GEMM mixes                                                   */
+/* ------------------------------------------------------------------ */
+
+typedef struct {
+    const char *name, *family;
+    int vocab, seq, d, layers, heads, dff;
+    int image, patch, channels, classes; /* vit only */
+} Model;
+
+static const Model MODELS[] = {
+    {"lora-small", "lm", 128, 32, 64, 2, 4, 128, 0, 0, 0, 0},
+    {"lora-base", "lm", 256, 64, 128, 2, 4, 256, 0, 0, 0, 0},
+    {"vit-small", "vit", 0, 0, 64, 2, 4, 128, 16, 4, 3, 10},
+};
+#define BATCH 4
+
+typedef struct {
+    Op ops[512];
+    int n;
+} Mix;
+
+static float *buf(size_t n) {
+    float *p = malloc(n * sizeof(float));
+    for (size_t i = 0; i < n; i++) p[i] = (float)((i * 2654435761u >> 8) & 1023) / 1024.0f - 0.5f;
+    return p;
+}
+
+static void push(Mix *mx, OpKind kind, int batch, int n, int k, int m) {
+    Op *o = &mx->ops[mx->n++];
+    *o = (Op){kind, batch, n, k, m, NULL, NULL, NULL};
+    size_t an, bn, cn;
+    op_sizes(o, &an, &bn, &cn);
+    o->a = buf((size_t)batch * an);
+    o->b = buf((size_t)batch * bn);
+    o->c = buf((size_t)batch * cn);
+}
+
+/* forward GEMM sequence for one step; fused toggles the QKV layout */
+static void build_mix(Mix *mx, const Model *md, int fused, int backward) {
+    mx->n = 0;
+    int s = md->family[0] == 'v' ? (md->image / md->patch) * (md->image / md->patch) + 1
+                                 : md->seq;
+    int bs = BATCH * s, d = md->d, f = md->dff, h = md->heads, dh = d / h;
+    int panels = BATCH * h;
+    if (md->family[0] == 'v') { /* patch embedding */
+        int np = s - 1, pd = md->channels * md->patch * md->patch;
+        push(mx, OP_N, 1, BATCH * np, pd, d);
+    }
+    for (int l = 0; l < md->layers; l++) {
+        if (fused) push(mx, OP_N, 1, bs, d, 3 * d);
+        else for (int i = 0; i < 3; i++) push(mx, OP_N, 1, bs, d, d);
+        push(mx, OP_NT, panels, s, dh, s); /* QK^T  */
+        push(mx, OP_N, panels, s, s, dh);  /* P @ V */
+        push(mx, OP_N, 1, bs, d, d);       /* Wo    */
+        push(mx, OP_N, 1, bs, d, f);       /* W1    */
+        push(mx, OP_N, 1, bs, f, d);       /* W2    */
+    }
+    if (md->family[0] == 'v') push(mx, OP_N, 1, BATCH, d, md->classes);
+    else push(mx, OP_NT, 1, BATCH * md->seq / 2, d, md->vocab); /* tied head */
+    if (!backward) return;
+    /* backward contractions, reverse order (shapes are what matters) */
+    if (md->family[0] == 'v') {
+        push(mx, OP_TN, 1, BATCH, d, md->classes);  /* dW head  */
+        push(mx, OP_NT, 1, BATCH, md->classes, d);  /* dfeats   */
+    } else {
+        int nex = BATCH * md->seq / 2;
+        push(mx, OP_N, 1, nex, md->vocab, d);  /* dnf   */
+        push(mx, OP_TN, 1, nex, md->vocab, d); /* demb  */
+    }
+    for (int l = 0; l < md->layers; l++) {
+        push(mx, OP_TN, 1, bs, f, d);      /* dW2    */
+        push(mx, OP_NT, 1, bs, d, f);      /* da     */
+        push(mx, OP_TN, 1, bs, d, f);      /* dW1    */
+        push(mx, OP_NT, 1, bs, f, d);      /* dn2    */
+        push(mx, OP_TN, 1, bs, d, d);      /* dWo    */
+        push(mx, OP_NT, 1, bs, d, d);      /* dctx   */
+        push(mx, OP_NT, panels, s, dh, s); /* dprobs */
+        push(mx, OP_TN, panels, s, s, dh); /* dV     */
+        push(mx, OP_N, panels, s, s, dh);  /* dQ     */
+        push(mx, OP_TN, panels, s, s, dh); /* dK     */
+        if (fused) {
+            push(mx, OP_TN, 1, bs, d, 3 * d); /* dWqkv */
+            push(mx, OP_NT, 1, bs, 3 * d, d); /* dn1   */
+        } else {
+            for (int i = 0; i < 3; i++) push(mx, OP_TN, 1, bs, d, d);
+            for (int i = 0; i < 3; i++) push(mx, OP_NT, 1, bs, d, d);
+        }
+    }
+    if (md->family[0] == 'v') {
+        int np = s - 1, pd = md->channels * md->patch * md->patch;
+        push(mx, OP_TN, 1, BATCH * np, pd, d); /* dPatchEmbed */
+    }
+}
+
+static void free_mix(Mix *mx) {
+    for (int i = 0; i < mx->n; i++) {
+        free(mx->ops[i].a);
+        free(mx->ops[i].b);
+        free(mx->ops[i].c);
+    }
+}
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec * 1e-9;
+}
+
+/* tokens/sec for one mix under one (driver, kernel-form) variant */
+static double measure(const Mix *mx, int pool, int unrolled, int tokens,
+                      int iters) {
+    void (*dispatch)(const Op *, int) = pool ? dispatch_pool : dispatch_scope;
+    for (int i = 0; i < mx->n; i++) dispatch(&mx->ops[i], unrolled); /* warm */
+    double t0 = now_s();
+    for (int it = 0; it < iters; it++)
+        for (int i = 0; i < mx->n; i++) dispatch(&mx->ops[i], unrolled);
+    double dt = (now_s() - t0) / iters;
+    return tokens / dt;
+}
+
+int main(int argc, char **argv) {
+    g_threads = argc > 1 ? atoi(argv[1]) : 4;
+    if (g_threads < 1) g_threads = 1;
+    if (g_threads > MAX_THREADS) g_threads = MAX_THREADS;
+    int iters = argc > 2 ? atoi(argv[2]) : 12;
+    pool_start(g_threads - 1);
+    printf("{\n  \"parallelism\": %d,\n  \"variants\": [\n", g_threads);
+    for (int variant = 0; variant < 2; variant++) {
+        /* variant 0: PR-4 (scope spawn, unfused, plain loops)
+         * variant 1: PR-5 (pool, fused QKV, unrolled loops)     */
+        int pool = variant, fused = variant, unrolled = variant;
+        printf("    {\"runtime\": \"%s\", \"qkv\": \"%s\", \"kernels\": \"%s\", \"sizes\": [\n",
+               pool ? "pool" : "scope", fused ? "fused" : "unfused",
+               unrolled ? "unrolled" : "plain");
+        for (size_t mi = 0; mi < sizeof(MODELS) / sizeof(MODELS[0]); mi++) {
+            const Model *md = &MODELS[mi];
+            int s = md->family[0] == 'v'
+                        ? (md->image / md->patch) * (md->image / md->patch) + 1
+                        : md->seq;
+            int tokens = BATCH * s;
+            Mix fwd, both;
+            build_mix(&fwd, md, fused, 0);
+            build_mix(&both, md, fused, 1);
+            double f = measure(&fwd, pool, unrolled, tokens, iters);
+            double fb = measure(&both, pool, unrolled, tokens, iters);
+            free_mix(&fwd);
+            free_mix(&both);
+            printf("      {\"model\": \"%s\", \"family\": \"%s\", "
+                   "\"tokens_per_batch\": %d, \"forward_tok_s\": %.1f, "
+                   "\"forward_backward_tok_s\": %.1f}%s\n",
+                   md->name, md->family, tokens, f, fb,
+                   mi + 1 < sizeof(MODELS) / sizeof(MODELS[0]) ? "," : "");
+            fflush(stdout);
+        }
+        printf("    ]}%s\n", variant == 0 ? "," : "");
+    }
+    printf("  ]\n}\n");
+    pool_stop();
+    return 0;
+}

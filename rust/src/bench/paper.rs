@@ -193,7 +193,10 @@ pub fn render_analytic_only(
 /// `--model NAME` (e.g. `lora-small` to run a table on a different
 /// native-catalog size than its default), `--parallelism N` (kernel
 /// thread budget, installed process-wide; results are bit-identical at
-/// every N). cargo bench passes `--bench`; ignore unknown flags.
+/// every N), `--runtime pool|scope` (parallel driver: the persistent
+/// worker pool, or the retained per-call `thread::scope` baseline for
+/// A/B perf comparisons — results are bit-identical either way).
+/// cargo bench passes `--bench`; ignore unknown flags.
 pub struct BenchArgs {
     pub quick: bool,
     pub steps: Option<usize>,
@@ -224,6 +227,9 @@ impl BenchArgs {
             model: None,
             parallelism: crate::tensor::Parallelism::single(),
         };
+        // --runtime is order-independent of --parallelism: remember the
+        // driver choice, apply it to the final thread budget below
+        let mut scope_driver = false;
         let mut i = 0;
         while i < argv.len() {
             match argv[i].as_str() {
@@ -242,6 +248,17 @@ impl BenchArgs {
                                 "--parallelism: expected integer >= 1, got {:?}",
                                 argv[i + 1]
                             );
+                            std::process::exit(2);
+                        }
+                    }
+                    i += 1;
+                }
+                "--runtime" if i + 1 < argv.len() => {
+                    match argv[i + 1].as_str() {
+                        "pool" => scope_driver = false,
+                        "scope" => scope_driver = true,
+                        other => {
+                            eprintln!("--runtime: expected pool|scope, got {other:?}");
                             std::process::exit(2);
                         }
                     }
@@ -280,8 +297,13 @@ impl BenchArgs {
             }
             i += 1;
         }
+        if scope_driver {
+            out.parallelism =
+                crate::tensor::Parallelism::scoped(out.parallelism.threads());
+        }
         // install the thread budget for every kernel this bench runs;
-        // bit-identical results at any setting, so this only moves time
+        // bit-identical results at any setting/driver, so this only
+        // moves time
         out.parallelism.install();
         out
     }

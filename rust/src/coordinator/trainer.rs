@@ -102,8 +102,13 @@ impl Trainer {
     ) -> Result<Self, String> {
         // every construction path funnels here, so the config's kernel
         // thread budget always takes effect — no launcher has to remember
-        // to install it. Safe as a process-wide side effect: results are
-        // bit-identical at every setting (tensor::Parallelism).
+        // to install it. install() also (eagerly) starts or grows the
+        // persistent kernel worker pool, so thread spawn happens at
+        // trainer construction, never inside a timed step, and repeated
+        // trainer lifecycles in one process reuse the same warm pool
+        // (grow-only resize — see tensor::Parallelism::install). Safe as
+        // a process-wide side effect: results are bit-identical at every
+        // setting and for either driver (tensor::Parallelism).
         cfg.parallelism.install();
         let (model, ledger) = {
             let rt = rt.borrow();

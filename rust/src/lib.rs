@@ -23,7 +23,8 @@
 //! [`model`] transformer size grids — causal LMs with LoRA adapters plus
 //! ViTs, all with manual backward passes on the cache-blocked,
 //! optionally row-parallel GEMM kernels in [`tensor`]
-//! ([`tensor::Parallelism`]; bit-identical at every thread count) — so
+//! ([`tensor::Parallelism`] over a persistent worker pool; bit-identical
+//! at every thread count — docs/PERFORMANCE.md is the tuning guide) — so
 //! it builds and tests on a bare machine, zero dependencies), and the
 //! original PJRT path that loads the AOT artifacts lives behind the
 //! `xla` cargo feature.

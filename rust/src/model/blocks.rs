@@ -22,12 +22,34 @@
 //! head-strided views into contiguous panels for the cache-blocked
 //! kernels. The pre-refactor scalar nests survive in [`reference`] as
 //! the bit-exactness oracle and microbench baseline.
+//!
+//! # Fused QKV
+//!
+//! Since PR 5 the three per-layer input projections run as ONE GEMM:
+//! `wq|wk|wv` are packed into a `[d, 3d]` panel
+//! ([`Matrix::concat_cols`]), the forward computes `qkv = n1 · Wqkv`
+//! and slices the thirds straight into head panels
+//! (`gather_heads_at`), and the backward packs `dq|dk|dv` into one
+//! `[b*s, 3d]` cotangent so `dWqkv = n1ᵀ · dqkv` (split back into the
+//! three parameter gradients) and `dn1 = dqkv · Wqkvᵀ` are one GEMM
+//! each instead of three. Column blocks of a GEMM contract
+//! independently, so the fused forward and the three parameter
+//! gradients are **bit-identical** to the unfused products (the
+//! [`reference::qkv_unfused`] oracle asserts this exactly); only `dn1`
+//! sums its 3d contraction terms in one ascending pass instead of as
+//! three partial sums added afterwards — same math, one float
+//! re-association, covered by the finite-difference stack tests and an
+//! allclose oracle comparison. The packed `Wqkv` panel is built once
+//! per layer per forward and cached in [`LayerCache`] (parameters
+//! mutate every optimizer step, so caching across steps would need
+//! invalidation machinery for an O(d²)-vs-O(b·s·d²) saving).
 
 use super::{add_grad, pget, ParamSet};
 use crate::tensor::{
     batched_matmul, batched_matmul_nt, batched_matmul_tn, gather_heads,
-    gelu, gelu_grad, rms_norm_rows, rms_norm_rows_vjp, scatter_heads,
-    softmax_rows_masked, softmax_rows_vjp_batched, BatchedMatrix, Matrix,
+    gather_heads_at, gelu, gelu_grad, rms_norm_rows, rms_norm_rows_vjp,
+    scatter_heads, scatter_heads_at, softmax_rows_masked,
+    softmax_rows_vjp_batched, BatchedMatrix, Matrix,
 };
 
 /// Dimensions of the encoder stack shared by the LM and ViT configs.
@@ -68,10 +90,14 @@ impl BlockDims {
 /// Forward intermediates of one block, kept for the backward pass. The
 /// q/k/v projections are cached in their PACKED `[b*h, s, dh]` panel
 /// form (same bytes as the flat matrices) so the backward contractions
-/// reuse them without re-gathering.
+/// reuse them without re-gathering, and the fused `[d, 3d]` `wq|wk|wv`
+/// panel is kept so the backward's `dn1 = dqkv · Wqkvᵀ` GEMM never
+/// re-packs the parameters.
 pub(crate) struct LayerCache {
     x_in: Matrix,
     n1: Matrix,
+    /// the packed `wq|wk|wv` projection panel this forward used
+    wqkv: Matrix,
     qh: BatchedMatrix,
     kh: BatchedMatrix,
     vh: BatchedMatrix,
@@ -81,6 +107,15 @@ pub(crate) struct LayerCache {
     x_mid: Matrix,
     n2: Matrix,
     h1: Matrix,
+}
+
+/// Pack layer `l`'s `wq|wk|wv` into the fused `[d, 3d]` projection panel.
+fn pack_wqkv(params: &ParamSet, l: usize) -> Matrix {
+    Matrix::concat_cols(&[
+        pget(params, &format!("layer{l}/attn/wq")),
+        pget(params, &format!("layer{l}/attn/wk")),
+        pget(params, &format!("layer{l}/attn/wv")),
+    ])
 }
 
 /// Run the whole block stack. Returns the output activations (input to
@@ -99,12 +134,17 @@ pub(crate) fn stack_forward(
     let mut caches = Vec::with_capacity(dims.n_layers);
     let h = dims.n_heads;
     let dh = dims.head_dim();
+    let d = dims.d_model;
     for l in 0..dims.n_layers {
         let p = |suffix: &str| format!("layer{l}/{suffix}");
         let n1 = rms_norm_rows(&x, pget(params, &p("ln1/scale")));
-        let qh = gather_heads(&n1.matmul(pget(params, &p("attn/wq"))), b, s, h, dh);
-        let kh = gather_heads(&n1.matmul(pget(params, &p("attn/wk"))), b, s, h, dh);
-        let vh = gather_heads(&n1.matmul(pget(params, &p("attn/wv"))), b, s, h, dh);
+        // fused QKV: one [b*s, d] x [d, 3d] GEMM; the thirds' column
+        // blocks are bit-identical to the three separate projections
+        let wqkv = pack_wqkv(params, l);
+        let qkv = n1.matmul(&wqkv);
+        let qh = gather_heads_at(&qkv, b, s, h, dh, 0);
+        let kh = gather_heads_at(&qkv, b, s, h, dh, d);
+        let vh = gather_heads_at(&qkv, b, s, h, dh, 2 * d);
         let (ctx, probs) = attention_forward_packed(&qh, &kh, &vh, dims, b, s, causal);
         let attn_out = ctx.matmul(pget(params, &p("attn/wo")));
         let x_mid = &x + &attn_out;
@@ -112,7 +152,9 @@ pub(crate) fn stack_forward(
         let h1 = n2.matmul(pget(params, &p("ffn/w1")));
         let ff = gelu(&h1).matmul(pget(params, &p("ffn/w2")));
         let x_out = &x_mid + &ff;
-        caches.push(LayerCache { x_in: x, n1, qh, kh, vh, probs, ctx, x_mid, n2, h1 });
+        caches.push(LayerCache {
+            x_in: x, n1, wqkv, qh, kh, vh, probs, ctx, x_mid, n2, h1,
+        });
         x = x_out;
     }
     (x, caches)
@@ -151,15 +193,24 @@ pub(crate) fn stack_backward(
         // attention branch: d attn_out = dx_mid (residual of x_mid)
         add_grad(grads, &p("attn/wo"), cache.ctx.matmul_tn(&dx_mid));
         let dctx = dx_mid.matmul_nt(pget(params, &p("attn/wo")));
-        let (dq, dk, dv) = attention_backward_packed(
+        let (dqh, dkh, dvh) = attention_backward_panels(
             &cache.qh, &cache.kh, &cache.vh, &cache.probs, &dctx, dims, b, s,
         );
-        add_grad(grads, &p("attn/wq"), cache.n1.matmul_tn(&dq));
-        add_grad(grads, &p("attn/wk"), cache.n1.matmul_tn(&dk));
-        add_grad(grads, &p("attn/wv"), cache.n1.matmul_tn(&dv));
-        let mut dn1 = dq.matmul_nt(pget(params, &p("attn/wq")));
-        dn1.add_scaled_inplace(&dk.matmul_nt(pget(params, &p("attn/wk"))), 1.0);
-        dn1.add_scaled_inplace(&dv.matmul_nt(pget(params, &p("attn/wv"))), 1.0);
+        // fused QKV backward: pack dq|dk|dv into one [b*s, 3d] cotangent;
+        // dWqkv = n1ᵀ·dqkv splits into the three parameter gradients
+        // (bit-identical to the unfused products — independent column
+        // blocks), and dn1 = dqkv·Wqkvᵀ is one GEMM over all 3d terms
+        let d = dims.d_model;
+        let mut dqkv = Matrix::zeros(b * s, 3 * d);
+        scatter_heads_at(&mut dqkv, &dqh, b, s, dims.n_heads, dims.head_dim(), 0);
+        scatter_heads_at(&mut dqkv, &dkh, b, s, dims.n_heads, dims.head_dim(), d);
+        scatter_heads_at(&mut dqkv, &dvh, b, s, dims.n_heads, dims.head_dim(), 2 * d);
+        let dwqkv = cache.n1.matmul_tn(&dqkv);
+        let mut dw = dwqkv.split_cols(&[d, d, d]);
+        add_grad(grads, &p("attn/wv"), dw.pop().expect("dwv"));
+        add_grad(grads, &p("attn/wk"), dw.pop().expect("dwk"));
+        add_grad(grads, &p("attn/wq"), dw.pop().expect("dwq"));
+        let dn1 = dqkv.matmul_nt(&cache.wqkv);
         let (dx_in_norm, dln1) =
             rms_norm_rows_vjp(&cache.x_in, pget(params, &p("ln1/scale")), &dn1);
         add_grad(grads, &p("ln1/scale"), dln1);
@@ -255,6 +306,31 @@ pub(crate) fn attention_backward_packed(
 ) -> (Matrix, Matrix, Matrix) {
     let h = dims.n_heads;
     let dh = dims.head_dim();
+    let (dqh, dkh, dvh) =
+        attention_backward_panels(qh, kh, vh, probs, dctx, dims, b, s);
+    (
+        scatter_heads(&dqh, b, s, h, dh),
+        scatter_heads(&dkh, b, s, h, dh),
+        scatter_heads(&dvh, b, s, h, dh),
+    )
+}
+
+/// The attention cotangents in PANEL form (`[b*h, s, dh]`), before any
+/// scatter — the fused-QKV backward scatters all three into one
+/// `[b*s, 3d]` matrix instead of three separate ones.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_backward_panels(
+    qh: &BatchedMatrix,
+    kh: &BatchedMatrix,
+    vh: &BatchedMatrix,
+    probs: &BatchedMatrix,
+    dctx: &Matrix,
+    dims: BlockDims,
+    b: usize,
+    s: usize,
+) -> (BatchedMatrix, BatchedMatrix, BatchedMatrix) {
+    let h = dims.n_heads;
+    let dh = dims.head_dim();
     let scale = 1.0 / (dh as f32).sqrt();
     let dctxh = gather_heads(dctx, b, s, h, dh);
     let dprobs = batched_matmul_nt(&dctxh, vh, 1.0);
@@ -266,11 +342,7 @@ pub(crate) fn attention_backward_packed(
     dscores.scale_inplace(scale);
     let dqh = batched_matmul(&dscores, kh);
     let dkh = batched_matmul_tn(&dscores, qh);
-    (
-        scatter_heads(&dqh, b, s, h, dh),
-        scatter_heads(&dkh, b, s, h, dh),
-        scatter_heads(&dvh, b, s, h, dh),
-    )
+    (dqh, dkh, dvh)
 }
 
 /// The pre-refactor scalar attention, retained verbatim as the numerical
@@ -280,6 +352,49 @@ pub(crate) fn attention_backward_packed(
 pub mod reference {
     use super::BlockDims;
     use crate::tensor::{softmax_rows, softmax_rows_vjp, Matrix};
+
+    /// The pre-fusion per-layer input projections, retained as the
+    /// fused-QKV oracle. Runs on the NAIVE kernels so it is independent
+    /// of both the blocking and the fusion under test.
+    ///
+    /// Forward and the three parameter gradients are bit-identical to
+    /// the fused path (column blocks of a GEMM contract independently);
+    /// `dn1` is returned in the pre-fusion association — three partial
+    /// sums added afterwards — which the fused single-pass contraction
+    /// matches only to rounding (see the module docs).
+    pub mod qkv_unfused {
+        use crate::tensor::Matrix;
+
+        /// `(q, k, v)` — three separate naive projections.
+        pub fn forward(
+            n1: &Matrix,
+            wq: &Matrix,
+            wk: &Matrix,
+            wv: &Matrix,
+        ) -> (Matrix, Matrix, Matrix) {
+            (n1.matmul_naive(wq), n1.matmul_naive(wk), n1.matmul_naive(wv))
+        }
+
+        /// `(dwq, dwk, dwv, dn1)` from the projection cotangents.
+        #[allow(clippy::too_many_arguments)]
+        pub fn backward(
+            n1: &Matrix,
+            wq: &Matrix,
+            wk: &Matrix,
+            wv: &Matrix,
+            dq: &Matrix,
+            dk: &Matrix,
+            dv: &Matrix,
+        ) -> (Matrix, Matrix, Matrix, Matrix) {
+            let dwq = n1.matmul_tn_naive(dq);
+            let dwk = n1.matmul_tn_naive(dk);
+            let dwv = n1.matmul_tn_naive(dv);
+            let mut dn1 = dq.matmul_nt_naive(wq);
+            dn1.add_scaled_inplace(&dk.matmul_nt_naive(wk), 1.0);
+            dn1.add_scaled_inplace(&dv.matmul_nt_naive(wv), 1.0);
+            (dwq, dwk, dwv, dn1)
+        }
+    }
 
     /// Score assigned to causally-masked attention targets before the
     /// softmax; exp(-1e30 - max) underflows to exactly 0 probability.
@@ -454,6 +569,58 @@ mod tests {
             assert!(dk.allclose(&dk_ref, 0.0), "dk (causal={causal})");
             assert!(dv.allclose(&dv_ref, 0.0), "dv (causal={causal})");
         }
+    }
+
+    #[test]
+    fn fused_qkv_matches_unfused_reference() {
+        // the fused [d,3d] projection against the retained naive unfused
+        // oracle: forward thirds and the three parameter gradients must
+        // be BIT-identical (independent GEMM column blocks); dn1 differs
+        // only by one documented re-association, checked two ways
+        let dims = BlockDims { d_model: 12, n_layers: 1, n_heads: 3, d_ff: 24 };
+        let d = dims.d_model;
+        let (b, s) = (2usize, 5usize);
+        let (h, dh) = (dims.n_heads, dims.head_dim());
+        let mut rng = Rng::new(31);
+        let n1 = Matrix::gaussian(b * s, d, 1.0, &mut rng);
+        let wq = Matrix::gaussian(d, d, 1.0, &mut rng);
+        let wk = Matrix::gaussian(d, d, 1.0, &mut rng);
+        let wv = Matrix::gaussian(d, d, 1.0, &mut rng);
+
+        // forward: one fused GEMM, thirds bit-equal to the naive oracle
+        let wqkv = Matrix::concat_cols(&[&wq, &wk, &wv]);
+        let qkv = n1.matmul(&wqkv);
+        let (q_ref, k_ref, v_ref) =
+            reference::qkv_unfused::forward(&n1, &wq, &wk, &wv);
+        let thirds = qkv.split_cols(&[d, d, d]);
+        assert!(thirds[0].allclose(&q_ref, 0.0), "fused q");
+        assert!(thirds[1].allclose(&k_ref, 0.0), "fused k");
+        assert!(thirds[2].allclose(&v_ref, 0.0), "fused v");
+        // the head panels sliced straight from the fused activation
+        // match packing the separate projections
+        for (col0, want) in [(0, &q_ref), (d, &k_ref), (2 * d, &v_ref)] {
+            let direct = gather_heads_at(&qkv, b, s, h, dh, col0);
+            let via = crate::tensor::gather_heads(want, b, s, h, dh);
+            assert_eq!(direct.data, via.data, "panel at col {col0}");
+        }
+
+        // backward: fused dWqkv splits into bit-equal parameter grads
+        let dq = Matrix::gaussian(b * s, d, 1.0, &mut rng);
+        let dk = Matrix::gaussian(b * s, d, 1.0, &mut rng);
+        let dv = Matrix::gaussian(b * s, d, 1.0, &mut rng);
+        let dqkv = Matrix::concat_cols(&[&dq, &dk, &dv]);
+        let dwqkv = n1.matmul_tn(&dqkv);
+        let dn1 = dqkv.matmul_nt(&wqkv);
+        let (dwq_ref, dwk_ref, dwv_ref, dn1_ref) =
+            reference::qkv_unfused::backward(&n1, &wq, &wk, &wv, &dq, &dk, &dv);
+        let dws = dwqkv.split_cols(&[d, d, d]);
+        assert!(dws[0].allclose(&dwq_ref, 0.0), "dwq");
+        assert!(dws[1].allclose(&dwk_ref, 0.0), "dwk");
+        assert!(dws[2].allclose(&dwv_ref, 0.0), "dwv");
+        // dn1: bit-equal to the naive kernel at the SAME (fused)
+        // association, and within rounding of the pre-fusion association
+        assert!(dn1.allclose(&dqkv.matmul_nt_naive(&wqkv), 0.0), "dn1 kernel");
+        assert!(dn1.allclose(&dn1_ref, 1e-4), "dn1 association drift");
     }
 
     #[test]

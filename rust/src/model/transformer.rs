@@ -3,6 +3,13 @@
 //! TIED LM head (logits = x · embed/tokᵀ), with a fully manual backward
 //! pass. Mirrors `python/compile/layers.py` (`LMConfig` / `lm_forward` /
 //! `lm_loss` / `lm_greedy_decode`) shape-for-shape and name-for-name.
+//!
+//! Per-layer attention projections run fused (one `[d, 3d]` QKV GEMM,
+//! see `blocks`): the parameters stay the separate `attn/wq|wk|wv`
+//! matrices of the manifest ABI — fusion is a kernel-layout choice
+//! whose packed panels live in the per-forward `LayerCache`, not a
+//! model-surface change, so checkpoints, state routing and the
+//! projectable-parameter rule are untouched.
 
 use super::blocks::{stack_backward, stack_forward, BlockDims};
 use super::head::{argmax_rows, fused_softmax_xent, gather_rows, scatter_rows_add};

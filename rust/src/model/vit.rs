@@ -3,7 +3,11 @@
 //! final RMS-norm → classification head on the CLS token, with a manual
 //! backward pass. Mirrors `python/compile/vit.py` name-for-name; the
 //! patchification itself lives with the image data
-//! ([`crate::data::images::patchify_hwc`]).
+//! ([`crate::data::images::patchify_hwc`]). Like the LM, the encoder's
+//! attention projections execute as one fused `[d, 3d]` QKV GEMM with
+//! the packed panels cached per forward in `blocks::LayerCache` — the
+//! `attn/wq|wk|wv` parameter surface (and so every checkpoint and
+//! compression rule) is unchanged.
 
 use super::blocks::{stack_backward, stack_forward, BlockDims};
 use super::head::{argmax_rows, fused_softmax_xent, gather_rows, scatter_rows_add};

@@ -62,12 +62,29 @@ impl BatchedMatrix {
 /// `hi`).
 pub fn gather_heads(x: &Matrix, b: usize, s: usize, heads: usize, dh: usize) -> BatchedMatrix {
     debug_assert_eq!(x.shape(), (b * s, heads * dh));
+    gather_heads_at(x, b, s, heads, dh, 0)
+}
+
+/// [`gather_heads`] on a column window: pack the head-strided view that
+/// starts at column `col0` of a wider activation matrix. This is how the
+/// fused-QKV path slices the q/k/v thirds of one packed `[b*s, 3d]`
+/// projection without materializing three intermediate matrices.
+pub fn gather_heads_at(
+    x: &Matrix,
+    b: usize,
+    s: usize,
+    heads: usize,
+    dh: usize,
+    col0: usize,
+) -> BatchedMatrix {
+    debug_assert_eq!(x.rows, b * s);
+    debug_assert!(col0 + heads * dh <= x.cols, "gather_heads_at window oob");
     let mut out = BatchedMatrix::zeros(b * heads, s, dh);
     for bi in 0..b {
         for hi in 0..heads {
             let panel = out.panel_mut(bi * heads + hi);
             for i in 0..s {
-                let src = &x.row(bi * s + i)[hi * dh..(hi + 1) * dh];
+                let src = &x.row(bi * s + i)[col0 + hi * dh..col0 + (hi + 1) * dh];
                 panel[i * dh..(i + 1) * dh].copy_from_slice(src);
             }
         }
@@ -78,19 +95,40 @@ pub fn gather_heads(x: &Matrix, b: usize, s: usize, heads: usize, dh: usize) -> 
 /// Unpack `[b*heads, s, dh]` panels back into a head-strided
 /// `[b*s, heads*dh]` matrix — the inverse of [`gather_heads`].
 pub fn scatter_heads(src: &BatchedMatrix, b: usize, s: usize, heads: usize, dh: usize) -> Matrix {
-    debug_assert_eq!((src.batch, src.rows, src.cols), (b * heads, s, dh));
     let mut out = Matrix::zeros(b * s, heads * dh);
+    scatter_heads_at(&mut out, src, b, s, heads, dh, 0);
+    out
+}
+
+/// [`scatter_heads`] into a column window of an existing (wider) matrix:
+/// writes panel `(bi, hi)` row `i` into `dst` row `bi*s + i`, columns
+/// `[col0 + hi*dh, col0 + (hi+1)*dh)`. The fused-QKV backward packs the
+/// three attention cotangents into one `[b*s, 3d]` matrix this way so a
+/// single GEMM produces all of `dWq|dWk|dWv` (and one more, `dn1`).
+pub fn scatter_heads_at(
+    dst: &mut Matrix,
+    src: &BatchedMatrix,
+    b: usize,
+    s: usize,
+    heads: usize,
+    dh: usize,
+    col0: usize,
+) {
+    debug_assert_eq!((src.batch, src.rows, src.cols), (b * heads, s, dh));
+    debug_assert_eq!(dst.rows, b * s);
+    debug_assert!(col0 + heads * dh <= dst.cols, "scatter_heads_at window oob");
+    let w = dst.cols;
     for bi in 0..b {
         for hi in 0..heads {
             let panel = src.panel(bi * heads + hi);
             for i in 0..s {
-                let dst = &mut out.data[(bi * s + i) * heads * dh + hi * dh
-                    ..(bi * s + i) * heads * dh + (hi + 1) * dh];
-                dst.copy_from_slice(&panel[i * dh..(i + 1) * dh]);
+                let r = bi * s + i;
+                let out =
+                    &mut dst.data[r * w + col0 + hi * dh..r * w + col0 + (hi + 1) * dh];
+                out.copy_from_slice(&panel[i * dh..(i + 1) * dh]);
             }
         }
     }
-    out
 }
 
 /// `C[p] = A[p] @ B[p]` per panel, parallel over panels.
@@ -249,6 +287,29 @@ mod tests {
         );
         let back = scatter_heads(&packed, b, s, h, dh);
         assert!(back.allclose(&x, 0.0));
+    }
+
+    #[test]
+    fn offset_gather_scatter_window_a_wider_matrix() {
+        // a [b*s, 3d]-style packed activation: the q/k/v thirds gathered
+        // with col0 offsets must equal gathering pre-split copies
+        let mut rng = Rng::new(11);
+        let (b, s, h, dh) = (2usize, 3usize, 2usize, 2usize);
+        let d = h * dh;
+        let wide = Matrix::gaussian(b * s, 3 * d, 1.0, &mut rng);
+        for (third, col0) in [(0usize, 0usize), (1, d), (2, 2 * d)] {
+            let split = Matrix::from_fn(b * s, d, |i, j| wide.at(i, col0 + j));
+            let direct = gather_heads_at(&wide, b, s, h, dh, col0);
+            let via_split = gather_heads(&split, b, s, h, dh);
+            assert_eq!(direct.data, via_split.data, "third {third}");
+        }
+        // scatter back into a fresh wide matrix reassembles it exactly
+        let mut back = Matrix::zeros(b * s, 3 * d);
+        for col0 in [0, d, 2 * d] {
+            let panels = gather_heads_at(&wide, b, s, h, dh, col0);
+            scatter_heads_at(&mut back, &panels, b, s, h, dh, col0);
+        }
+        assert!(back.allclose(&wide, 0.0));
     }
 
     #[test]

@@ -8,21 +8,47 @@
 //!   1. **Bit-equality with the retained naive kernels.** Every output
 //!      element accumulates its contraction terms in strictly ascending
 //!      `k` order with a single f32 accumulator, exactly like the naive
-//!      triple loop — blocking only reorders *which element is computed
-//!      when*, never the per-element summation order. The property tests
+//!      triple loop — blocking and unrolling only reorder *which element
+//!      is computed when* (and how many independent elements advance per
+//!      pass), never one element's summation order. The property tests
 //!      in `rust/tests/properties.rs` bit-compare blocked against naive
 //!      on random rectangular shapes.
-//!   2. **Bit-equality across thread counts.** The parallel path splits
-//!      the *output rows* into disjoint bands; each band is computed by
-//!      exactly one thread running the identical serial kernel, so the
-//!      result is bit-identical for every `Parallelism` setting (the
-//!      `--parallelism 1` vs `2` CI matrix exercises this end-to-end).
+//!   2. **Bit-equality across thread counts and drivers.** The parallel
+//!      path splits the *output rows* into disjoint bands; each band is
+//!      computed by exactly one thread running the identical serial
+//!      kernel, so the result is bit-identical for every `Parallelism`
+//!      setting and for both parallel drivers (the persistent
+//!      [worker pool](#the-worker-pool) and the retained
+//!      `std::thread::scope` oracle). The `--parallelism 1` vs `2` CI
+//!      matrix exercises this end-to-end.
 //!   3. **No zero-skips.** As in PR 1, `0.0 * NaN` must stay NaN —
 //!      non-finite gradients may not be laundered by a fast path.
 //!
-//! Zero new dependencies: threading is `std::thread::scope` only.
+//! # The worker pool
+//!
+//! Since PR 5 the default parallel driver is a **persistent, lazily
+//! started worker pool** (`std::sync` channels + condvar only, zero new
+//! dependencies). The PR-4 driver spawned OS threads via
+//! `std::thread::scope` on *every* GEMM call; at catalog sizes a
+//! transformer step issues hundreds of kernel calls, so per-call spawn
+//! and join dominated the win from threading. The pool starts its
+//! workers once — eagerly on [`Parallelism::install`] (the path
+//! `Trainer::with_runtime` drives) or lazily on the first parallel
+//! kernel call — and every subsequent call only enqueues band jobs and
+//! waits on a latch.
+//!
+//! The scope driver survives as [`Parallelism::scoped`]: it is the A/B
+//! baseline for `benches/micro_kernels.rs --runtime scope` and the
+//! bit-exactness oracle the pool is tested against (band splits and band
+//! bodies are shared, so results are bit-identical by construction; the
+//! tests verify it anyway).
+//!
+//! Zero new dependencies: threading is `std::thread` + `std::sync` only.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Rows of the shared (`B`) operand kept hot per k-panel. With the j-tile
 /// below, one panel is `K_BLOCK * J_BLOCK * 4` bytes = 32 KiB — L1-sized.
@@ -30,30 +56,67 @@ const K_BLOCK: usize = 64;
 /// Output-column tile width (f32 elements).
 const J_BLOCK: usize = 128;
 /// Minimum multiply count before the parallel path engages; below this
-/// the `thread::scope` spawn cost dominates any speedup.
+/// even pool dispatch (an enqueue + latch wait) costs more than it saves.
 const PAR_MIN_FLOPS: usize = 1 << 15;
 
 static PARALLELISM: AtomicUsize = AtomicUsize::new(1);
+static DRIVER: AtomicU8 = AtomicU8::new(DRIVER_POOL);
 
-/// Thread budget for the tensor kernels. `Parallelism::new(1)` (the
-/// default) is fully serial; higher values let the big GEMMs split their
-/// output rows across `std::thread::scope` workers.
+const DRIVER_POOL: u8 = 0;
+const DRIVER_SCOPE: u8 = 1;
+
+/// Which mechanism fans band jobs out to OS threads. Selected through
+/// [`Parallelism`]; results are bit-identical either way (same band
+/// splits, same serial band bodies), so this only moves time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelDriver {
+    /// The persistent worker pool (default): threads start once and are
+    /// reused by every subsequent kernel call.
+    Pool,
+    /// The PR-4 `std::thread::scope` per-call spawn, retained as the A/B
+    /// benchmark baseline (`--runtime scope`) and pool test oracle.
+    Scope,
+}
+
+/// Thread budget (and parallel driver) for the tensor kernels.
+/// `Parallelism::new(1)` (the default) is fully serial; higher values let
+/// the big GEMMs split their output rows across worker threads.
 ///
 /// Determinism guarantee: results are **bit-identical for every thread
-/// count** — each output row is owned by exactly one thread running the
-/// same serial kernel, so no floating-point reassociation ever happens.
-/// The setting is a process-wide tuning knob, not part of any model's
-/// semantics, which is why it lives in a global rather than threading
-/// through every call site.
+/// count and either driver** — each output row is owned by exactly one
+/// thread running the same serial kernel, so no floating-point
+/// reassociation ever happens. The setting is a process-wide tuning knob,
+/// not part of any model's semantics, which is why it lives in a global
+/// rather than threading through every call site.
+///
+/// ```
+/// use flora::tensor::{Matrix, Parallelism};
+///
+/// // install() puts the budget into effect process-wide and (for the
+/// // pool driver) makes sure budget-1 workers are running
+/// Parallelism::new(2).install();
+/// assert_eq!(Parallelism::current().threads(), 2);
+///
+/// let a = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+/// let b = Matrix::from_vec(2, 1, vec![3.0, 4.0]);
+/// assert_eq!(a.matmul(&b).data, vec![11.0]);
+///
+/// // back to serial: the pool workers stay parked (no teardown cost,
+/// // no further fan-out) until a bigger budget is installed again
+/// Parallelism::single().install();
+/// assert_eq!(Parallelism::current().threads(), 1);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Parallelism {
     threads: usize,
+    driver: KernelDriver,
 }
 
 impl Parallelism {
-    /// A budget of `threads` worker threads (clamped to >= 1).
+    /// A budget of `threads` worker threads (clamped to >= 1) on the
+    /// default pool driver.
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1) }
+        Self { threads: threads.max(1), driver: KernelDriver::Pool }
     }
 
     /// The serial default.
@@ -61,18 +124,90 @@ impl Parallelism {
         Self::new(1)
     }
 
+    /// A budget of `threads` on the retained `std::thread::scope`
+    /// per-call driver — the pre-pool (PR-4) code path, kept as the A/B
+    /// benchmark baseline and as the pool's bit-exactness oracle.
+    pub fn scoped(threads: usize) -> Self {
+        Self { threads: threads.max(1), driver: KernelDriver::Scope }
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// Install this budget as the process-wide kernel setting.
+    pub fn driver(&self) -> KernelDriver {
+        self.driver
+    }
+
+    /// Install this budget as the process-wide kernel setting and, on the
+    /// pool driver with `threads > 1`, eagerly make sure the pool has
+    /// `threads - 1` workers running (the calling thread is the remaining
+    /// band owner). `Trainer::with_runtime` funnels every training run
+    /// through here, so the spawn cost is paid at trainer construction,
+    /// never inside a timed step.
+    ///
+    /// Semantics when the pool is already running (**resize, not
+    /// rebuild**): the per-call fan-out follows the newly installed
+    /// budget immediately; the pool itself only *grows* — installing a
+    /// larger budget spawns the missing workers, installing a smaller
+    /// one parks the surplus on the idle job queue (a blocked `recv`,
+    /// no CPU cost) rather than tearing threads down. Repeated
+    /// trainer lifecycles therefore reuse one warm pool instead of
+    /// re-spawning threads per run — see `pool_workers` and the
+    /// pool-reuse regression test in `rust/tests/integration.rs`.
     pub fn install(self) {
         PARALLELISM.store(self.threads, Ordering::Relaxed);
+        DRIVER.store(
+            match self.driver {
+                KernelDriver::Pool => DRIVER_POOL,
+                KernelDriver::Scope => DRIVER_SCOPE,
+            },
+            Ordering::Relaxed,
+        );
+        if self.driver == KernelDriver::Pool && self.threads > 1 {
+            ensure_pool(self.threads - 1);
+        }
     }
 
     /// The currently-installed budget.
     pub fn current() -> Self {
-        Self::new(PARALLELISM.load(Ordering::Relaxed))
+        let driver = match DRIVER.load(Ordering::Relaxed) {
+            DRIVER_SCOPE => KernelDriver::Scope,
+            _ => KernelDriver::Pool,
+        };
+        Self {
+            threads: PARALLELISM.load(Ordering::Relaxed).max(1),
+            driver,
+        }
+    }
+
+    /// Number of live pool workers (0 when the pool has never started or
+    /// was shut down). Observability hook for the pool-reuse regression
+    /// test: two trainer lifecycles must not grow this past
+    /// `max_budget - 1`.
+    pub fn pool_workers() -> usize {
+        match POOL.lock() {
+            Ok(g) => g.as_ref().map_or(0, |p| p.workers.len()),
+            Err(p) => p.into_inner().as_ref().map_or(0, |p| p.workers.len()),
+        }
+    }
+
+    /// Stop and join every pool worker. Only needed by tests that assert
+    /// clean teardown/restart — a long-lived process keeps the warm pool
+    /// for its whole life, and process exit reaps the (parked) workers
+    /// without joining. The next parallel kernel call or `install`
+    /// lazily restarts the pool.
+    pub fn shutdown_pool() {
+        let pool = match POOL.lock() {
+            Ok(mut g) => g.take(),
+            Err(p) => p.into_inner().take(),
+        };
+        if let Some(pool) = pool {
+            drop(pool.sender); // disconnects every worker's recv()
+            for h in pool.workers {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -82,23 +217,209 @@ impl Default for Parallelism {
     }
 }
 
+// ---------------------------------------------------------------------
+// the persistent worker pool
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// Set inside pool workers so a kernel that (transitively) calls
+    /// `par_rows` from a band body degrades to serial instead of
+    /// deadlocking on its own queue. No current kernel nests, but the
+    /// guard makes that a perf question rather than a correctness one.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Completion latch for one `par_rows` call: counts outstanding band
+/// jobs; `wait` blocks until every one has finished (normally or by
+/// panic).
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Self {
+        Self {
+            state: Mutex::new(LatchState { remaining, panicked: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        st.remaining -= 1;
+        st.panicked |= panicked;
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every job completed; true if any band panicked.
+    fn wait(&self) -> bool {
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        while st.remaining > 0 {
+            st = match self.cv.wait(st) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        st.panicked
+    }
+}
+
+/// One lifetime-erased band job.
+///
+/// Safety contract: `par_rows` does not return (not even by unwinding)
+/// until the job's latch has counted every band down, so the raw kernel,
+/// band, and latch pointers outlive every worker access; bands are
+/// disjoint `split_at_mut` slices, so no two jobs alias.
+struct Job {
+    /// Monomorphized trampoline that re-types `ctx` back to the caller's
+    /// kernel closure — sidesteps `dyn` trait-object lifetime defaults.
+    call: unsafe fn(*const (), &mut [f32], usize, usize),
+    ctx: *const (),
+    band: *mut f32,
+    band_len: usize,
+    first: usize,
+    rows: usize,
+    latch: *const Latch,
+}
+
+// Safety: see the Job doc — all pointees are kept alive by the
+// wait-before-return invariant of `par_rows`, the band is an exclusive
+// disjoint slice, and `ctx` points at a `Sync` closure.
+unsafe impl Send for Job {}
+
+impl Job {
+    fn run(self) {
+        // a panicking band must still count down (otherwise the caller
+        // deadlocks and the borrow-liveness argument collapses); the
+        // panic is re-raised on the calling thread by par_rows_pool
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // Safety: the par_rows wait-before-return invariant
+            unsafe {
+                let band = std::slice::from_raw_parts_mut(self.band, self.band_len);
+                (self.call)(self.ctx, band, self.first, self.rows);
+            }
+        }));
+        // Safety: the latch lives on the caller's stack until wait() sees 0
+        unsafe { (*self.latch).complete(result.is_err()) };
+    }
+}
+
+unsafe fn call_kernel<F>(ctx: *const (), band: &mut [f32], first: usize, rows: usize)
+where
+    F: Fn(&mut [f32], usize, usize) + Sync,
+{
+    let kernel = &*(ctx as *const F);
+    kernel(band, first, rows);
+}
+
+struct Pool {
+    sender: Sender<Job>,
+    /// Shared by every worker (the textbook `Mutex<Receiver>` fan-out);
+    /// kept here so `ensure_pool` can grow the pool onto the same queue.
+    receiver: Arc<Mutex<Receiver<Job>>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+static POOL: Mutex<Option<Pool>> = Mutex::new(None);
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    IS_POOL_WORKER.with(|w| w.set(true));
+    loop {
+        // hold the queue lock only for the blocking recv; job bodies run
+        // unlocked so workers drain bands concurrently
+        let job = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job.run(),
+            Err(_) => return, // sender dropped: pool shut down
+        }
+    }
+}
+
+/// Make sure the pool exists and has at least `workers` threads; grows
+/// (never shrinks) so the warm pool is reused across trainer lifecycles.
+/// Returns a cheap clone of the job sender.
+fn ensure_pool(workers: usize) -> Sender<Job> {
+    let mut guard = match POOL.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    let pool = guard.get_or_insert_with(|| {
+        let (sender, receiver) = channel::<Job>();
+        Pool {
+            sender,
+            receiver: Arc::new(Mutex::new(receiver)),
+            workers: Vec::new(),
+        }
+    });
+    while pool.workers.len() < workers {
+        let rx = Arc::clone(&pool.receiver);
+        let idx = pool.workers.len();
+        let handle = std::thread::Builder::new()
+            .name(format!("flora-kernel-{idx}"))
+            .spawn(move || worker_loop(rx))
+            .expect("spawning kernel pool worker");
+        pool.workers.push(handle);
+    }
+    pool.sender.clone()
+}
+
 /// Split `out` (owning `rows` rows of `row_width` f32s) into per-thread
 /// row bands and run `kernel(band, first_row, n_rows)` on each. Serial
 /// when the installed budget is 1, the work is below [`PAR_MIN_FLOPS`]
-/// multiplies, or there is only one row.
+/// multiplies, there is only one row, or the caller is itself a pool
+/// worker. Band splits depend only on the thread budget — never on the
+/// driver — and per-element summation order does not depend on bands at
+/// all, so every (budget, driver) combination is bit-identical.
 pub(crate) fn par_rows<F>(out: &mut [f32], rows: usize, row_width: usize, flops: usize, kernel: F)
 where
     F: Fn(&mut [f32], usize, usize) + Sync,
 {
     debug_assert_eq!(out.len(), rows * row_width);
-    let budget = Parallelism::current().threads();
-    let threads = if flops < PAR_MIN_FLOPS { 1 } else { budget.min(rows).max(1) };
+    let cfg = Parallelism::current();
+    let nested = IS_POOL_WORKER.with(|w| w.get());
+    let threads = if flops < PAR_MIN_FLOPS || nested {
+        1
+    } else {
+        cfg.threads().min(rows).max(1)
+    };
     if threads <= 1 {
         kernel(out, 0, rows);
         return;
     }
+    match cfg.driver() {
+        KernelDriver::Scope => par_rows_scope(out, rows, row_width, threads, &kernel),
+        KernelDriver::Pool => par_rows_pool(out, rows, row_width, threads, &kernel),
+    }
+}
+
+/// The PR-4 driver: spawn one scoped OS thread per band, implicitly join
+/// at scope exit. Retained verbatim as the pool's oracle and the
+/// `--runtime scope` benchmark baseline.
+fn par_rows_scope<F>(out: &mut [f32], rows: usize, row_width: usize, threads: usize, kernel: &F)
+where
+    F: Fn(&mut [f32], usize, usize) + Sync,
+{
     let chunk = rows.div_ceil(threads);
-    let kernel = &kernel;
     std::thread::scope(|scope| {
         let mut rest = out;
         let mut row0 = 0usize;
@@ -113,6 +434,74 @@ where
     });
 }
 
+/// The pool driver: identical band split to the scope driver, but bands
+/// after the first are enqueued on the persistent pool while the calling
+/// thread computes band 0 itself; a latch then joins the call.
+fn par_rows_pool<F>(out: &mut [f32], rows: usize, row_width: usize, threads: usize, kernel: &F)
+where
+    F: Fn(&mut [f32], usize, usize) + Sync,
+{
+    let chunk = rows.div_ceil(threads);
+    let own = chunk.min(rows);
+    let (own_band, mut rest) = out.split_at_mut(own * row_width);
+    // collect the worker bands up front so the latch knows its count
+    let mut bands: Vec<(&mut [f32], usize, usize)> = Vec::new();
+    let mut row0 = own;
+    while row0 < rows {
+        let take = chunk.min(rows - row0);
+        let (band, tail) = std::mem::take(&mut rest).split_at_mut(take * row_width);
+        rest = tail;
+        bands.push((band, row0, take));
+        row0 += take;
+    }
+    if bands.is_empty() {
+        kernel(own_band, 0, own);
+        return;
+    }
+
+    let latch = Latch::new(bands.len());
+    let sender = ensure_pool(threads - 1);
+    for (band, first, take) in bands {
+        let job = Job {
+            call: call_kernel::<F>,
+            ctx: kernel as *const F as *const (),
+            band: band.as_mut_ptr(),
+            band_len: band.len(),
+            first,
+            rows: take,
+            latch: &latch as *const Latch,
+        };
+        if let Err(err) = sender.send(job) {
+            // pool shut down between ensure and send: run the band here
+            err.0.run();
+        }
+    }
+
+    // even if our own band panics below, the guard's Drop waits for the
+    // outstanding jobs first — the raw pointers in flight must not
+    // outlive this frame
+    struct WaitGuard<'a>(&'a Latch);
+    impl Drop for WaitGuard<'_> {
+        fn drop(&mut self) {
+            self.0.wait();
+        }
+    }
+    let guard = WaitGuard(&latch);
+    kernel(own_band, 0, own);
+    drop(guard);
+
+    let panicked = {
+        let st = match latch.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        st.panicked
+    };
+    if panicked {
+        panic!("a parallel kernel band panicked on a pool worker");
+    }
+}
+
 // ---------------------------------------------------------------------
 // serial blocked kernels (the per-band bodies)
 // ---------------------------------------------------------------------
@@ -120,19 +509,49 @@ where
 /// `C += A @ B` on a band of `n` output rows: blocked ikj. `a` is the
 /// band's rows of A (`n x k`), `b` the full B (`k x m`), `c` the band's
 /// rows of C (`n x m`, pre-zeroed by the caller).
+///
+/// The k-loop advances four rows of B per pass over the C tile: each
+/// `C[i][j]` still receives its k-terms one at a time in ascending k
+/// (four chained `+=` on one accumulator), so results stay bit-identical
+/// to the naive ikj loop, while C is loaded/stored 4x less often and the
+/// j-direction stays a contiguous independent-lane loop the
+/// autovectorizer handles.
 pub(crate) fn matmul_band(c: &mut [f32], a: &[f32], b: &[f32], n: usize, k: usize, m: usize) {
     for j0 in (0..m).step_by(J_BLOCK) {
         let j1 = (j0 + J_BLOCK).min(m);
         for k0 in (0..k).step_by(K_BLOCK) {
             let k1 = (k0 + K_BLOCK).min(k);
             for i in 0..n {
-                let arow = &a[i * k..(i + 1) * k];
+                let arow = &a[i * k + k0..i * k + k1];
                 let ctile = &mut c[i * m + j0..i * m + j1];
-                for (kk, &aik) in arow[k0..k1].iter().enumerate() {
+                let mut kk = 0usize;
+                while kk + 4 <= arow.len() {
+                    let (a0, a1) = (arow[kk], arow[kk + 1]);
+                    let (a2, a3) = (arow[kk + 2], arow[kk + 3]);
+                    let b0 = &b[(k0 + kk) * m + j0..(k0 + kk) * m + j1];
+                    let b1 = &b[(k0 + kk + 1) * m + j0..(k0 + kk + 1) * m + j1];
+                    let b2 = &b[(k0 + kk + 2) * m + j0..(k0 + kk + 2) * m + j1];
+                    let b3 = &b[(k0 + kk + 3) * m + j0..(k0 + kk + 3) * m + j1];
+                    for ((((o, &x0), &x1), &x2), &x3) in
+                        ctile.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                    {
+                        // ascending k, one rounding per term — naive order
+                        let mut acc = *o;
+                        acc += a0 * x0;
+                        acc += a1 * x1;
+                        acc += a2 * x2;
+                        acc += a3 * x3;
+                        *o = acc;
+                    }
+                    kk += 4;
+                }
+                while kk < arow.len() {
+                    let aik = arow[kk];
                     let brow = &b[(k0 + kk) * m + j0..(k0 + kk) * m + j1];
                     for (o, &bkj) in ctile.iter_mut().zip(brow.iter()) {
                         *o += aik * bkj;
                     }
+                    kk += 1;
                 }
             }
         }
@@ -144,6 +563,13 @@ pub(crate) fn matmul_band(c: &mut [f32], a: &[f32], b: &[f32], n: usize, k: usiz
 /// rows of A (`n x k`), `b` the full B (`m x k`), `c` the band (`n x m`).
 /// `alpha` multiplies each finished dot (the attention score scale);
 /// pass 1.0 for a plain product.
+///
+/// Four output columns advance together: four *independent* single-
+/// accumulator dots over the same contiguous `a` row, which breaks the
+/// one-dot dependency chain (ILP) and forms an SLP lane group the
+/// autovectorizer can turn into vertical SIMD — all without touching any
+/// single element's ascending-k summation order, so bit-identity with
+/// `matmul_nt_naive` holds.
 pub(crate) fn matmul_nt_band(
     c: &mut [f32],
     a: &[f32],
@@ -157,13 +583,37 @@ pub(crate) fn matmul_nt_band(
         let j1 = (j0 + K_BLOCK).min(m);
         for i in 0..n {
             let arow = &a[i * k..(i + 1) * k];
-            for j in j0..j1 {
+            let crow = &mut c[i * m..(i + 1) * m];
+            let mut j = j0;
+            while j + 4 <= j1 {
+                let b0 = &b[j * k..(j + 1) * k];
+                let b1 = &b[(j + 1) * k..(j + 2) * k];
+                let b2 = &b[(j + 2) * k..(j + 3) * k];
+                let b3 = &b[(j + 3) * k..(j + 4) * k];
+                let (mut acc0, mut acc1) = (0.0f32, 0.0f32);
+                let (mut acc2, mut acc3) = (0.0f32, 0.0f32);
+                for ((((&x, &y0), &y1), &y2), &y3) in
+                    arow.iter().zip(b0).zip(b1).zip(b2).zip(b3)
+                {
+                    acc0 += x * y0;
+                    acc1 += x * y1;
+                    acc2 += x * y2;
+                    acc3 += x * y3;
+                }
+                crow[j] = acc0 * alpha;
+                crow[j + 1] = acc1 * alpha;
+                crow[j + 2] = acc2 * alpha;
+                crow[j + 3] = acc3 * alpha;
+                j += 4;
+            }
+            while j < j1 {
                 let brow = &b[j * k..(j + 1) * k];
                 let mut acc = 0.0f32;
                 for (x, y) in arow.iter().zip(brow.iter()) {
                     acc += x * y;
                 }
-                c[i * m + j] = acc * alpha;
+                crow[j] = acc * alpha;
+                j += 1;
             }
         }
     }
@@ -174,6 +624,11 @@ pub(crate) fn matmul_nt_band(
 /// `A[k][i] * B[k][j]` in ascending `k` order. `a` is the FULL A
 /// (`rows x acols`), `b` the full B (`rows x m`), `c` the band
 /// (`n x m`, pre-zeroed).
+///
+/// Two contraction rows advance per pass (chained `+=`, ascending k, so
+/// bit-identity with `matmul_tn_naive` holds) — C rows are loaded and
+/// stored half as often, and the inner loop stays a contiguous
+/// independent-lane axpy.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul_tn_band(
     c: &mut [f32],
@@ -185,9 +640,28 @@ pub(crate) fn matmul_tn_band(
     i0: usize,
     n: usize,
 ) {
-    for k in 0..rows {
-        let arow = &a[k * acols..(k + 1) * acols];
-        let brow = &b[k * m..(k + 1) * m];
+    let mut kk = 0usize;
+    while kk + 2 <= rows {
+        let ar0 = &a[kk * acols..(kk + 1) * acols];
+        let ar1 = &a[(kk + 1) * acols..(kk + 2) * acols];
+        let br0 = &b[kk * m..(kk + 1) * m];
+        let br1 = &b[(kk + 1) * m..(kk + 2) * m];
+        for i in 0..n {
+            let a0 = ar0[i0 + i];
+            let a1 = ar1[i0 + i];
+            let crow = &mut c[i * m..(i + 1) * m];
+            for ((o, &x0), &x1) in crow.iter_mut().zip(br0).zip(br1) {
+                let mut acc = *o;
+                acc += a0 * x0;
+                acc += a1 * x1;
+                *o = acc;
+            }
+        }
+        kk += 2;
+    }
+    if kk < rows {
+        let arow = &a[kk * acols..(kk + 1) * acols];
+        let brow = &b[kk * m..(kk + 1) * m];
         for i in 0..n {
             let aki = arow[i0 + i];
             let crow = &mut c[i * m..(i + 1) * m];
@@ -243,24 +717,32 @@ pub(crate) fn matmul_tn_into(
 mod tests {
     use super::*;
 
+    /// Tests that install a non-default Parallelism or poke the global
+    /// pool serialize on this lock so concurrent lib tests can't observe
+    /// each other's settings. (Kernel RESULTS are bit-identical at every
+    /// setting, so only the `current()`/`pool_workers()` assertions need
+    /// the discipline.)
+    static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        match INSTALL_LOCK.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
     #[test]
     fn parallelism_clamps() {
         assert_eq!(Parallelism::new(0).threads(), 1);
         assert_eq!(Parallelism::default(), Parallelism::single());
+        assert_eq!(Parallelism::scoped(0).threads(), 1);
+        assert_eq!(Parallelism::scoped(3).driver(), KernelDriver::Scope);
+        assert_eq!(Parallelism::new(3).driver(), KernelDriver::Pool);
     }
 
-    // NOTE: this is the only test in the lib binary that installs a
-    // non-default Parallelism, so the install/assert pair cannot race
-    // with a concurrent test (and even if it could, kernel RESULTS are
-    // bit-identical at every setting — only `current()` would wobble).
-    #[test]
-    fn install_and_par_rows_cover_every_row_once() {
+    fn stamp_rows(driver: Parallelism, rows: usize, width: usize) -> Vec<f32> {
         let before = Parallelism::current();
-        Parallelism::new(4).install();
-        assert_eq!(Parallelism::current().threads(), 4);
-        // rows * width big enough to clear PAR_MIN_FLOPS via the fake
-        // flops argument; each band stamps its rows with first+i
-        let (rows, width) = (17usize, 8usize);
+        driver.install();
         let mut out = vec![-1.0f32; rows * width];
         par_rows(&mut out, rows, width, PAR_MIN_FLOPS * 2, |band, first, n| {
             for i in 0..n {
@@ -270,9 +752,82 @@ mod tests {
             }
         });
         before.install();
-        for r in 0..rows {
-            let row = &out[r * width..(r + 1) * width];
-            assert!(row.iter().all(|&x| x == r as f32), "row {r}");
+        out
+    }
+
+    #[test]
+    fn install_and_par_rows_cover_every_row_once() {
+        let _g = lock();
+        for driver in [Parallelism::new(4), Parallelism::scoped(4)] {
+            let (rows, width) = (17usize, 8usize);
+            let out = stamp_rows(driver, rows, width);
+            for r in 0..rows {
+                let row = &out[r * width..(r + 1) * width];
+                assert!(row.iter().all(|&x| x == r as f32), "{driver:?} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_and_grows_monotonically() {
+        let _g = lock();
+        Parallelism::shutdown_pool();
+        assert_eq!(Parallelism::pool_workers(), 0);
+        // install starts budget-1 workers eagerly
+        Parallelism::new(3).install();
+        assert_eq!(Parallelism::pool_workers(), 2);
+        // repeated installs at the same or smaller budget REUSE the pool
+        Parallelism::new(3).install();
+        Parallelism::new(2).install();
+        assert_eq!(Parallelism::pool_workers(), 2);
+        // a larger budget grows it
+        Parallelism::new(4).install();
+        assert_eq!(Parallelism::pool_workers(), 3);
+        // many parallel calls never add workers
+        for _ in 0..8 {
+            let _ = stamp_rows(Parallelism::new(4), 23, 8);
+        }
+        assert_eq!(Parallelism::pool_workers(), 3);
+        // teardown + restart is clean (drop to a serial budget first so
+        // stamp_rows' save/restore cannot eagerly regrow the pool)
+        Parallelism::single().install();
+        Parallelism::shutdown_pool();
+        assert_eq!(Parallelism::pool_workers(), 0);
+        let out = stamp_rows(Parallelism::new(2), 9, 4);
+        assert!(out.iter().all(|&x| x >= 0.0), "lazy restart failed");
+        assert_eq!(Parallelism::pool_workers(), 1);
+        Parallelism::single().install();
+    }
+
+    #[test]
+    fn pool_and_scope_drivers_stamp_identically() {
+        let _g = lock();
+        let (rows, width) = (31usize, 5usize);
+        let a = stamp_rows(Parallelism::new(4), rows, width);
+        let b = stamp_rows(Parallelism::scoped(4), rows, width);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pool_band_panic_propagates_without_deadlock() {
+        let _g = lock();
+        let before = Parallelism::current();
+        Parallelism::new(4).install();
+        let caught = std::panic::catch_unwind(|| {
+            let (rows, width) = (16usize, 4usize);
+            let mut out = vec![0.0f32; rows * width];
+            par_rows(&mut out, rows, width, PAR_MIN_FLOPS * 2, |_, first, _| {
+                if first > 0 {
+                    panic!("boom in band {first}");
+                }
+            });
+        });
+        before.install();
+        assert!(caught.is_err(), "worker panic must surface on the caller");
+        // the pool survives a panicked job and still runs work
+        let out = stamp_rows(Parallelism::new(4), 12, 3);
+        for r in 0..12 {
+            assert!(out[r * 3..(r + 1) * 3].iter().all(|&x| x == r as f32));
         }
     }
 }

@@ -7,14 +7,18 @@
 //! metrics/memory machinery.
 //!
 //! The GEMM hot path lives in `kernels`: cache-blocked, ikj-ordered
-//! kernels over row slices with an opt-in `std::thread::scope`
-//! row-parallel path behind the process-wide [`Parallelism`] config
-//! (`--parallelism N` on the CLI and benches). The pre-refactor naive
-//! kernels are retained as `Matrix::*_naive` bit-exactness oracles, and
-//! `batched` packs head-strided attention views into contiguous panels
-//! so QKᵀ/probs·V run on the same kernels. Both the blocked and the
-//! threaded paths are bit-identical to the naive serial ones (see
-//! `kernels` for why), so `Parallelism` never changes any result.
+//! kernels over row slices with an opt-in row-parallel path behind the
+//! process-wide [`Parallelism`] config (`--parallelism N` on the CLI and
+//! benches). Parallel band jobs run on a **persistent worker pool**
+//! (started lazily or by `Parallelism::install`; `std::sync` only) — the
+//! PR-4 per-call `std::thread::scope` driver survives as
+//! [`Parallelism::scoped`], the A/B baseline and pool oracle. The
+//! pre-refactor naive kernels are retained as `Matrix::*_naive`
+//! bit-exactness oracles, and `batched` packs head-strided attention
+//! views into contiguous panels so QKᵀ/probs·V run on the same kernels.
+//! Blocked, pooled, and scoped paths are all bit-identical to the naive
+//! serial ones (see `kernels` for why), so `Parallelism` never changes
+//! any result. `docs/PERFORMANCE.md` is the tuning guide.
 
 mod batched;
 mod kernels;
@@ -23,10 +27,10 @@ mod ops;
 
 pub use batched::{
     batched_matmul, batched_matmul_nt, batched_matmul_tn, gather_heads,
-    scatter_heads, softmax_rows_masked, softmax_rows_vjp_batched,
-    BatchedMatrix,
+    gather_heads_at, scatter_heads, scatter_heads_at, softmax_rows_masked,
+    softmax_rows_vjp_batched, BatchedMatrix,
 };
-pub use kernels::Parallelism;
+pub use kernels::{KernelDriver, Parallelism};
 pub use matrix::Matrix;
 pub use ops::{
     gelu, gelu_grad, relu, rms_norm_rows, rms_norm_rows_vjp, softmax_rows,

@@ -1,9 +1,12 @@
-//! Minimal JSON parser for artifacts/manifest.json.
+//! Minimal JSON parser + renderer for artifacts/manifest.json and the
+//! BENCH_kernels.json perf trajectory.
 //!
-//! serde is not in the offline vendor set, and the manifest is the only JSON
-//! this binary reads, so a small recursive-descent parser is the right-sized
-//! dependency. Supports the full JSON grammar (objects, arrays, strings with
-//! escapes, numbers, bool, null); errors carry byte offsets.
+//! serde is not in the offline vendor set, and these are the only JSON
+//! documents this binary touches, so a small recursive-descent parser is
+//! the right-sized dependency. Supports the full JSON grammar (objects,
+//! arrays, strings with escapes, numbers, bool, null); errors carry byte
+//! offsets. [`Json::render`] is the write side — the kernel microbench
+//! parses the committed trajectory, appends a snapshot, and re-renders.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -65,6 +68,88 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Pretty-print with 2-space indentation. Integers render without a
+    /// fractional part; other finite numbers use f64's shortest-roundtrip
+    /// form, so parse → render → parse is value-preserving for every
+    /// document the parser accepts. Non-finite numbers (which JSON cannot
+    /// represent and the parser would reject on re-read) render as
+    /// `null` — a lossy but always-parsable downgrade.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn render_into(&self, out: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent + 1);
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    // JSON has no NaN/Inf; "NaN" would fail the next
+                    // parse and (for the bench trajectory) torch the
+                    // whole committed history on re-append
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, v) in items.iter().enumerate() {
+                    out.push_str(&pad);
+                    v.render_into(out, indent + 1);
+                    out.push_str(if i + 1 < items.len() { ",\n" } else { "\n" });
+                }
+                out.push_str(&"  ".repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    out.push_str(&pad);
+                    render_string(k, out);
+                    out.push_str(": ");
+                    v.render_into(out, indent + 1);
+                    out.push_str(if i + 1 < m.len() { ",\n" } else { "\n" });
+                }
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 #[derive(Debug)]
@@ -342,5 +427,41 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn render_roundtrips() {
+        let doc = r#"{"a": [1, 2.5, {"b": "c\nd"}], "d": false,
+                      "e": null, "f": [], "g": {}, "n": -31556.25}"#;
+        let v = parse(doc).unwrap();
+        let rendered = v.render();
+        assert_eq!(parse(&rendered).unwrap(), v, "{rendered}");
+        // integers stay integers, floats stay shortest-roundtrip
+        assert!(rendered.contains("2.5"));
+        assert!(!rendered.contains("1.0"));
+        assert!(rendered.contains("-31556.25"));
+    }
+
+    #[test]
+    fn render_escapes_control_characters() {
+        let v = Json::Str("a\"b\\c\u{1}\n".into());
+        let r = v.render();
+        assert_eq!(parse(r.trim()).unwrap(), v);
+    }
+
+    #[test]
+    fn render_downgrades_non_finite_numbers_to_null() {
+        // JSON cannot carry NaN/Inf; rendering them raw would make the
+        // output unparsable by this module's own parser
+        let v = Json::Arr(vec![
+            Json::Num(f64::NAN),
+            Json::Num(f64::INFINITY),
+            Json::Num(1.5),
+        ]);
+        let reparsed = parse(&v.render()).unwrap();
+        assert_eq!(
+            reparsed,
+            Json::Arr(vec![Json::Null, Json::Null, Json::Num(1.5)])
+        );
     }
 }

@@ -569,6 +569,56 @@ fn native_parallelism_determinism_end_to_end() {
     );
 }
 
+/// Pool-reuse regression: two full trainer lifecycles in one process
+/// must share ONE warm worker pool — the second run spawns no new
+/// threads (grow-only resize), both complete without deadlock, and the
+/// loss curves are identical (same config, same seed, warm vs cold
+/// pool). Guards the PR-5 lifecycle contract of
+/// `tensor::Parallelism::install` / `Trainer::with_runtime`.
+#[test]
+fn native_pool_reused_across_trainer_lifecycles() {
+    use flora::tensor::Parallelism;
+    let run = || {
+        let mut c = tf_cfg(MethodSpec::Flora { rank: 8 }, TaskKind::Lm, 1, 6);
+        c.model = "lora-small".into();
+        c.parallelism = Parallelism::new(3);
+        let mut tr = Trainer::native(c).unwrap();
+        tr.run().unwrap().train_losses
+    };
+    let first = run();
+    assert!(
+        Parallelism::pool_workers() >= 2,
+        "trainer construction should have started the pool \
+         (got {} workers)",
+        Parallelism::pool_workers()
+    );
+    for lifecycle in 0..3 {
+        let again = run();
+        assert_eq!(first, again, "warm-pool lifecycle {lifecycle} diverged");
+    }
+    // the leak bound: pool growth is capped by the LARGEST budget any
+    // test in this binary installs — 4 from the determinism test's
+    // default, or FLORA_TEST_PARALLELISM when the CI matrix raises it —
+    // minus the calling thread, no matter how many trainer lifecycles
+    // ran. A per-lifecycle thread leak would blow past this
+    // immediately. (Other tests may run concurrently and legitimately
+    // grow the pool within the cap, so the bound — not run-to-run
+    // equality — is the invariant.)
+    let max_budget = std::env::var("FLORA_TEST_PARALLELISM")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(4)
+        .max(4);
+    assert!(
+        Parallelism::pool_workers() <= max_budget - 1,
+        "pool grew past the max-budget cap: {} workers (cap {})",
+        Parallelism::pool_workers(),
+        max_budget - 1
+    );
+    // restore the binary's serial default without tearing the pool down
+    Parallelism::single().install();
+}
+
 /// FLORA accumulation keeps the method state compressed on every
 /// projectable (attention/MLP) matrix and full-size on the naive ones —
 /// the live ledger must match the model-shape arithmetic exactly.

@@ -234,6 +234,65 @@ fn prop_blocked_kernels_propagate_nan_and_inf() {
     assert!(ctn.data.iter().all(|x| x.is_nan()));
 }
 
+#[test]
+fn prop_pool_vs_scope_vs_naive_bit_match_on_random_rectangles() {
+    // the PR-5 worker pool against the retained thread::scope driver
+    // against the naive serial oracles: all three must agree EXACTLY on
+    // random rectangles big enough to clear the parallel-engagement
+    // threshold, at several thread budgets. Comparison is on the raw f32
+    // BITS (allclose treats NaN != NaN, and the poisoned trials below
+    // must check that non-finite values propagate identically too).
+    fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+        a.shape() == b.shape()
+            && a.data
+                .iter()
+                .zip(b.data.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+    let mut rng = Rng::new(22);
+    for trial in 0..6 {
+        let (n, k, m) = (
+            40 + rng.next_below(120),
+            40 + rng.next_below(120),
+            40 + rng.next_below(120),
+        );
+        let mut a = Matrix::gaussian(n, k, 1.0, &mut rng);
+        let b = Matrix::gaussian(k, m, 1.0, &mut rng);
+        let bt = Matrix::gaussian(m, k, 1.0, &mut rng);
+        let b2 = Matrix::gaussian(n, m, 1.0, &mut rng);
+        if trial >= 4 {
+            // poison with non-finite values: NaN/Inf must propagate
+            // identically through every driver (no zero-skips anywhere)
+            *a.at_mut(0, k / 2) = f32::NAN;
+            *a.at_mut(n / 2, 0) = f32::INFINITY;
+        }
+        let before = Parallelism::current();
+        let (naive, naive_nt, naive_tn) =
+            (a.matmul_naive(&b), a.matmul_nt_naive(&bt), a.matmul_tn_naive(&b2));
+        for budget in [
+            Parallelism::new(2),
+            Parallelism::scoped(2),
+            Parallelism::new(5),
+            Parallelism::scoped(5),
+        ] {
+            budget.install();
+            assert!(
+                bits_equal(&a.matmul(&b), &naive),
+                "matmul {budget:?} ({n},{k},{m}) trial {trial}"
+            );
+            assert!(
+                bits_equal(&a.matmul_nt(&bt), &naive_nt),
+                "matmul_nt {budget:?} ({n},{k},{m}) trial {trial}"
+            );
+            assert!(
+                bits_equal(&a.matmul_tn(&b2), &naive_tn),
+                "matmul_tn {budget:?} ({n},{k},{m}) trial {trial}"
+            );
+        }
+        before.install();
+    }
+}
+
 // ---------------------------------------------------------------------
 // data-task invariants
 // ---------------------------------------------------------------------
