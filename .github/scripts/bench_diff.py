@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Warn-only BENCH_kernels.json trajectory diff for CI.
+"""Warn-only bench-trajectory diff for CI (BENCH_kernels.json,
+BENCH_serving.json — any schema-2 trajectory file).
 
 Usage: bench_diff.py <current.json> [baseline.json]
 
@@ -81,7 +82,7 @@ def main():
         print("bench diff: no baseline file given — comparing the last two entries\n")
         fresh, base = traj[-1], traj[-2]
 
-    print("### kernel bench vs committed baseline (warn-only)\n")
+    print(f"### bench diff: {path} vs committed baseline (warn-only)\n")
     for label, snap in [("baseline", base), ("fresh", fresh)]:
         print(
             f"- **{label}**: runtime={snap.get('runtime')} "

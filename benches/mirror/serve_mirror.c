@@ -1,0 +1,418 @@
+/* serve_mirror.c — C mirror of the PR-6 multi-adapter serving decode hot
+ * path (rust/src/model/decode.rs), used to seed the first
+ * BENCH_serving.json trajectory point on machines where cargo is
+ * unavailable (the build container). `cargo bench --bench serving`
+ * reproduces the same batched-vs-sequential A/B on the real crate.
+ *
+ * What is mirrored, faithfully:
+ *   - the exact GEMM sequence of one KV-cache greedy decode: a prefill
+ *     chunk over the prompt, then one single-token chunk per generated
+ *     token with a growing attention context t, per layer:
+ *       fused QKV        [b*m, d] @ [d, 3d]
+ *       LoRA corrections (xB)A per projection — 2 batched ops with
+ *                        PER-PANEL operands (tensor/batched.rs
+ *                        batched_matmul_ops), never materializing BA
+ *       QK^T / P@V       b*h panels against the t-row cache
+ *       Wo, W1, W2       + their (xB)A correction pairs
+ *     plus the per-iteration tied-head logit row;
+ *   - the band kernels (unrolled forms) + persistent-pool driver and
+ *     PAR_MIN_FLOPS gate of rust/src/tensor/kernels.rs — band splits
+ *     identical, so the batched path's better parallel engagement
+ *     (b panels of work per dispatch vs 1) is captured honestly;
+ *   - batch sizes 1 and 4 at rank 8 over the lora-* catalog grid with
+ *     the serve defaults prompt_len = seq/2, max_new = seq/4.
+ *
+ * What is NOT mirrored (documented in docs/SERVING.md §6): softmax,
+ * RMS-norm, GELU, embedding gathers, KV-cache append/view copies, the
+ * argmax, and the batcher/registry bookkeeping — so absolute tokens/sec
+ * here overstate the rust bench's full numbers. The batched/sequential
+ * RATIO is the honest measurement: both variants omit the same work.
+ *
+ * Build & run:  gcc -O2 -pthread -o serve_mirror serve_mirror.c -lm
+ *               ./serve_mirror 4          # parallelism (thread budget)
+ */
+#include <pthread.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define K_BLOCK 64
+#define J_BLOCK 128
+#define PAR_MIN_FLOPS (1 << 15)
+#define MAX_THREADS 16
+#define RANK 8
+
+static int g_threads = 4;
+
+/* ------------------------------------------------------------------ */
+/* band kernels (the PR-5 unrolled forms — the production config)     */
+/* ------------------------------------------------------------------ */
+
+static void matmul_band(float *c, const float *a, const float *b, int n,
+                        int k, int m) {
+    for (int j0 = 0; j0 < m; j0 += J_BLOCK) {
+        int j1 = j0 + J_BLOCK < m ? j0 + J_BLOCK : m;
+        for (int k0 = 0; k0 < k; k0 += K_BLOCK) {
+            int k1 = k0 + K_BLOCK < k ? k0 + K_BLOCK : k;
+            for (int i = 0; i < n; i++) {
+                const float *arow = a + (size_t)i * k;
+                float *ctile = c + (size_t)i * m;
+                int kk = k0;
+                for (; kk + 4 <= k1; kk += 4) {
+                    float a0 = arow[kk], a1 = arow[kk + 1];
+                    float a2 = arow[kk + 2], a3 = arow[kk + 3];
+                    const float *b0 = b + (size_t)kk * m;
+                    const float *b1 = b + (size_t)(kk + 1) * m;
+                    const float *b2 = b + (size_t)(kk + 2) * m;
+                    const float *b3 = b + (size_t)(kk + 3) * m;
+                    for (int j = j0; j < j1; j++) {
+                        float acc = ctile[j];
+                        acc += a0 * b0[j];
+                        acc += a1 * b1[j];
+                        acc += a2 * b2[j];
+                        acc += a3 * b3[j];
+                        ctile[j] = acc;
+                    }
+                }
+                for (; kk < k1; kk++) {
+                    float aik = arow[kk];
+                    const float *brow = b + (size_t)kk * m;
+                    for (int j = j0; j < j1; j++) ctile[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+static void nt_band(float *c, const float *a, const float *b, int n, int k,
+                    int m, float alpha) {
+    for (int j0 = 0; j0 < m; j0 += K_BLOCK) {
+        int j1 = j0 + K_BLOCK < m ? j0 + K_BLOCK : m;
+        for (int i = 0; i < n; i++) {
+            const float *arow = a + (size_t)i * k;
+            float *crow = c + (size_t)i * m;
+            int j = j0;
+            for (; j + 4 <= j1; j += 4) {
+                const float *b0 = b + (size_t)j * k;
+                const float *b1 = b + (size_t)(j + 1) * k;
+                const float *b2 = b + (size_t)(j + 2) * k;
+                const float *b3 = b + (size_t)(j + 3) * k;
+                float acc0 = 0, acc1 = 0, acc2 = 0, acc3 = 0;
+                for (int t = 0; t < k; t++) {
+                    float x = arow[t];
+                    acc0 += x * b0[t];
+                    acc1 += x * b1[t];
+                    acc2 += x * b2[t];
+                    acc3 += x * b3[t];
+                }
+                crow[j] = acc0 * alpha;
+                crow[j + 1] = acc1 * alpha;
+                crow[j + 2] = acc2 * alpha;
+                crow[j + 3] = acc3 * alpha;
+            }
+            for (; j < j1; j++) {
+                const float *brow = b + (size_t)j * k;
+                float acc = 0.0f;
+                for (int t = 0; t < k; t++) acc += arow[t] * brow[t];
+                crow[j] = acc * alpha;
+            }
+        }
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* ops: N (plain or per-panel-operand batched) and NT (panel-batched) */
+/* ------------------------------------------------------------------ */
+
+typedef enum { OP_N, OP_NT } OpKind;
+
+typedef struct {
+    OpKind kind;
+    int batch; /* panels; per-panel B operands mirror batched_matmul_ops */
+    int n, k, m;
+    float *a, *b, *c;
+} Op;
+
+typedef struct {
+    const Op *op;
+    int first, count; /* band: rows for batch==1, panels otherwise */
+} Band;
+
+static void op_sizes(const Op *o, size_t *an, size_t *bn, size_t *cn) {
+    *an = (size_t)o->n * o->k;
+    *bn = o->kind == OP_NT ? (size_t)o->m * o->k : (size_t)o->k * o->m;
+    *cn = (size_t)o->n * o->m;
+}
+
+static void run_band(const Band *bd) {
+    const Op *o = bd->op;
+    size_t an, bn, cn;
+    op_sizes(o, &an, &bn, &cn);
+    if (o->batch > 1) { /* bands are whole panels, per-panel operands */
+        for (int p = bd->first; p < bd->first + bd->count; p++) {
+            float *a = o->a + (size_t)p * an, *b = o->b + (size_t)p * bn,
+                  *c = o->c + (size_t)p * cn;
+            memset(c, 0, cn * sizeof(float));
+            if (o->kind == OP_N) matmul_band(c, a, b, o->n, o->k, o->m);
+            else nt_band(c, a, b, o->n, o->k, o->m, 1.0f);
+        }
+        return;
+    }
+    float *c = o->c + (size_t)bd->first * o->m;
+    const float *a = o->a + (size_t)bd->first * o->k;
+    if (o->kind == OP_N) {
+        memset(c, 0, (size_t)bd->count * o->m * sizeof(float));
+        matmul_band(c, a, o->b, bd->count, o->k, o->m);
+    } else {
+        nt_band(c, a, o->b, bd->count, o->k, o->m, 1.0f);
+    }
+}
+
+static int op_rows(const Op *o) { return o->batch > 1 ? o->batch : o->n; }
+static long op_flops(const Op *o) {
+    return (long)o->n * o->k * o->m * (o->batch > 1 ? o->batch : 1);
+}
+
+/* persistent pool (mutex+condvar job board, caller computes band 0) */
+
+static pthread_mutex_t pool_mu = PTHREAD_MUTEX_INITIALIZER;
+static pthread_cond_t pool_cv = PTHREAD_COND_INITIALIZER;
+static pthread_cond_t done_cv = PTHREAD_COND_INITIALIZER;
+static Band pool_bands[MAX_THREADS];
+static int pool_nbands = 0, pool_taken = 0, pool_done = 0;
+static long pool_gen = 0;
+static int pool_workers = 0, pool_shutdown = 0;
+
+static void *pool_worker(void *arg) {
+    (void)arg;
+    long seen = 0;
+    pthread_mutex_lock(&pool_mu);
+    for (;;) {
+        while (!pool_shutdown && (pool_gen == seen || pool_taken >= pool_nbands))
+            pthread_cond_wait(&pool_cv, &pool_mu);
+        if (pool_shutdown) break;
+        seen = pool_gen;
+        while (pool_taken < pool_nbands) {
+            Band *bd = &pool_bands[pool_taken++];
+            pthread_mutex_unlock(&pool_mu);
+            run_band(bd);
+            pthread_mutex_lock(&pool_mu);
+            pool_done++;
+            if (pool_done == pool_nbands) pthread_cond_signal(&done_cv);
+        }
+    }
+    pthread_mutex_unlock(&pool_mu);
+    return NULL;
+}
+
+static pthread_t pool_tids[MAX_THREADS];
+
+static void pool_start(int workers) {
+    pool_workers = workers;
+    for (int i = 0; i < workers; i++)
+        pthread_create(&pool_tids[i], NULL, pool_worker, NULL);
+}
+
+static void pool_stop(void) {
+    pthread_mutex_lock(&pool_mu);
+    pool_shutdown = 1;
+    pthread_cond_broadcast(&pool_cv);
+    pthread_mutex_unlock(&pool_mu);
+    for (int i = 0; i < pool_workers; i++) pthread_join(pool_tids[i], NULL);
+    pool_shutdown = 0;
+    pool_workers = 0;
+}
+
+static void dispatch(const Op *o) {
+    int rows = op_rows(o);
+    int threads = g_threads < rows ? g_threads : rows;
+    if (op_flops(o) < PAR_MIN_FLOPS || threads <= 1) {
+        Band bd = {o, 0, rows};
+        run_band(&bd);
+        return;
+    }
+    int chunk = (rows + threads - 1) / threads;
+    Band own = {o, 0, chunk < rows ? chunk : rows};
+    pthread_mutex_lock(&pool_mu);
+    pool_nbands = 0;
+    for (int r0 = own.count; r0 < rows; r0 += chunk) {
+        int take = chunk < rows - r0 ? chunk : rows - r0;
+        pool_bands[pool_nbands++] = (Band){o, r0, take};
+    }
+    pool_taken = 0;
+    pool_done = 0;
+    pool_gen++;
+    int nbands = pool_nbands;
+    pthread_cond_broadcast(&pool_cv);
+    pthread_mutex_unlock(&pool_mu);
+    run_band(&own);
+    pthread_mutex_lock(&pool_mu);
+    while (pool_done < nbands) pthread_cond_wait(&done_cv, &pool_mu);
+    pool_nbands = 0;
+    pthread_mutex_unlock(&pool_mu);
+}
+
+/* ------------------------------------------------------------------ */
+/* the serving decode GEMM mix                                        */
+/* ------------------------------------------------------------------ */
+
+typedef struct {
+    const char *name;
+    int vocab, seq, d, layers, heads, dff;
+} Model;
+
+/* the lora-* size grid of model/transformer.rs catalog_grid() */
+static const Model MODELS[] = {
+    {"lora-tiny", 64, 16, 32, 1, 2, 64},
+    {"lora-small", 128, 32, 64, 2, 4, 128},
+    {"lora-base", 256, 64, 128, 2, 4, 256},
+};
+
+typedef struct {
+    Op ops[4096];
+    int n;
+} Mix;
+
+static float *buf(size_t n) {
+    float *p = malloc(n * sizeof(float));
+    for (size_t i = 0; i < n; i++)
+        p[i] = (float)((i * 2654435761u >> 8) & 1023) / 1024.0f - 0.5f;
+    return p;
+}
+
+static void push(Mix *mx, OpKind kind, int batch, int n, int k, int m) {
+    Op *o = &mx->ops[mx->n++];
+    *o = (Op){kind, batch, n, k, m, NULL, NULL, NULL};
+    size_t an, bn, cn;
+    op_sizes(o, &an, &bn, &cn);
+    o->a = buf((size_t)batch * an);
+    o->b = buf((size_t)batch * bn);
+    o->c = buf((size_t)batch * cn);
+}
+
+/* one decode chunk of m new tokens for b requests at total context t:
+ * the GEMM sequence of decode.rs forward_chunk (adapted weights) */
+static void push_chunk(Mix *mx, const Model *md, int b, int m, int t) {
+    int d = md->d, f = md->dff, h = md->heads, dh = d / h;
+    for (int l = 0; l < md->layers; l++) {
+        push(mx, OP_N, 1, b * m, d, 3 * d); /* fused QKV */
+        for (int p = 0; p < 3; p++) {       /* q/k/v (xB)A corrections */
+            push(mx, OP_N, b, m, d, RANK);
+            push(mx, OP_N, b, m, RANK, d);
+        }
+        push(mx, OP_NT, b * h, m, dh, t); /* Q @ cacheK^T */
+        push(mx, OP_N, b * h, m, t, dh);  /* P @ cacheV   */
+        push(mx, OP_N, 1, b * m, d, d);   /* Wo           */
+        push(mx, OP_N, b, m, d, RANK);
+        push(mx, OP_N, b, m, RANK, d);
+        push(mx, OP_N, 1, b * m, d, f); /* W1 */
+        push(mx, OP_N, b, m, d, RANK);
+        push(mx, OP_N, b, m, RANK, f);
+        push(mx, OP_N, 1, b * m, f, d); /* W2 */
+        push(mx, OP_N, b, m, f, RANK);
+        push(mx, OP_N, b, m, RANK, d);
+    }
+}
+
+/* the whole greedy decode: prefill + one chunk per generated token,
+ * with the tied-head logit row per iteration (drive() in decode.rs) */
+static void build_decode(Mix *mx, const Model *md, int b, int prompt,
+                         int max_new) {
+    mx->n = 0;
+    int s = prompt + max_new;
+    push_chunk(mx, md, b, prompt, prompt);
+    for (int i = prompt; i < s; i++) {
+        push(mx, OP_NT, 1, b, md->d, md->vocab); /* logits */
+        if (i + 1 < s) push_chunk(mx, md, b, 1, i + 1);
+    }
+}
+
+static void free_mix(Mix *mx) {
+    for (int i = 0; i < mx->n; i++) {
+        free(mx->ops[i].a);
+        free(mx->ops[i].b);
+        free(mx->ops[i].c);
+    }
+}
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec * 1e-9;
+}
+
+static void run_mix(const Mix *mx) {
+    for (int i = 0; i < mx->n; i++) dispatch(&mx->ops[i]);
+}
+
+static int cmp_d(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+/* nearest-rank percentile, matching util::timing::Samples */
+static double pctl(double *xs, int n, double p) {
+    qsort(xs, n, sizeof(double), cmp_d);
+    int rank = (int)((p / 100.0) * (n - 1) + 0.5);
+    return xs[rank < n - 1 ? rank : n - 1];
+}
+
+#define MAX_ITERS 64
+
+int main(int argc, char **argv) {
+    g_threads = argc > 1 ? atoi(argv[1]) : 4;
+    if (g_threads < 1) g_threads = 1;
+    if (g_threads > MAX_THREADS) g_threads = MAX_THREADS;
+    int iters = argc > 2 ? atoi(argv[2]) : 12;
+    if (iters > MAX_ITERS) iters = MAX_ITERS;
+    pool_start(g_threads - 1);
+    printf("{\n  \"parallelism\": %d,\n  \"provenance\": \"c-mirror serve_mirror\",\n  \"sizes\": [\n",
+           g_threads);
+    int first_row = 1;
+    for (size_t mi = 0; mi < sizeof(MODELS) / sizeof(MODELS[0]); mi++) {
+        const Model *md = &MODELS[mi];
+        int prompt = md->seq / 2, max_new = md->seq / 4;
+        int s = prompt + max_new;
+        static const int BS[] = {1, 4};
+        for (size_t bi = 0; bi < 2; bi++) {
+            int b = BS[bi];
+            Mix batched, solo;
+            build_decode(&batched, md, b, prompt, max_new);
+            build_decode(&solo, md, 1, prompt, max_new);
+            run_mix(&batched); /* warm */
+            double lat[MAX_ITERS];
+            double t0 = now_s();
+            for (int it = 0; it < iters; it++) {
+                double s0 = now_s();
+                run_mix(&batched);
+                lat[it] = now_s() - s0;
+            }
+            double mean_b = (now_s() - t0) / iters;
+            run_mix(&solo); /* warm */
+            t0 = now_s();
+            for (int it = 0; it < iters; it++)
+                for (int r = 0; r < b; r++) run_mix(&solo);
+            double mean_s = (now_s() - t0) / iters;
+            free_mix(&batched);
+            free_mix(&solo);
+            double gen = (double)(b * max_new);
+            long kv = (long)md->layers * 2 * b * s * md->d * 4;
+            printf("%s      {\"model\": \"%s/b%d\", \"base_model\": \"%s\", "
+                   "\"batch\": %d, \"rank\": %d, \"prompt_len\": %d, "
+                   "\"max_new\": %d, \"decode_tok_s\": %.1f, "
+                   "\"seq_tok_s\": %.1f, \"batch_speedup\": %.3f, "
+                   "\"p50_ms\": %.3f, \"p95_ms\": %.3f, \"kv_bytes\": %ld}",
+                   first_row ? "" : ",\n", md->name, b, md->name, b,
+                   RANK, prompt, max_new, gen / mean_b, gen / mean_s,
+                   mean_s / mean_b, pctl(lat, iters, 50.0) * 1e3,
+                   pctl(lat, iters, 95.0) * 1e3, kv);
+            first_row = 0;
+            fflush(stdout);
+        }
+    }
+    printf("\n  ]\n}\n");
+    pool_stop();
+    return 0;
+}

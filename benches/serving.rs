@@ -1,0 +1,246 @@
+//! Multi-adapter serving throughput bench (not a paper table; grows the
+//! serving trajectory) — APPENDS a snapshot to `BENCH_serving.json`.
+//!
+//! For every native LM catalog size (skipping `lora-base` under
+//! `--quick`, same as micro_kernels) it decodes a fixed mixed-adapter
+//! workload at batch sizes 1 and 4 through `model::decode::serve_greedy`
+//! — the KV-cache greedy path with per-request `(xB)A` adapter
+//! corrections — and reports:
+//!
+//!   * `decode_tok_s`   — generated tokens/sec for the batched call
+//!   * `seq_tok_s`      — the same requests as b sequential single-
+//!                        adapter calls (the bit-compare oracle path)
+//!   * `batch_speedup`  — decode_tok_s / seq_tok_s (1.0 by construction
+//!                        at b=1; the batching win at b=4)
+//!   * `p50_ms`/`p95_ms`— per-batch decode latency percentiles
+//!   * `kv_bytes`       — KV-cache footprint at this (b, s):
+//!                        `n_layers * 2 * b * s * d_model * 4`
+//!
+//! Before timing, each size runs `runtime::serve::oracle_check` once at
+//! the largest batch — a bit-identity tripwire, not a tolerance check —
+//! and the bench exits non-zero on any mismatch, so a throughput number
+//! can never be recorded for a wrong result.
+//!
+//! `BENCH_serving.json` is a schema-2 TRAJECTORY like BENCH_kernels.json
+//! (append-only; see docs/SERVING.md §6 for the methodology and
+//! docs/PERFORMANCE.md for the schema precedent).
+//!
+//! Run: cargo bench --bench serving [-- --quick --parallelism N]
+
+use std::collections::BTreeMap;
+
+use flora::bench::paper::BenchArgs;
+use flora::bench::time_it;
+use flora::model::decode::serve_greedy;
+use flora::model::TransformerConfig;
+use flora::runtime::serve::oracle_check;
+use flora::runtime::AdapterRegistry;
+use flora::util::json::{self, Json};
+
+const RANK: usize = 8;
+const BATCHES: [usize; 2] = [1, 4];
+
+struct Cell {
+    key: String,
+    base_model: &'static str,
+    batch: usize,
+    prompt_len: usize,
+    max_new: usize,
+    decode_tok_s: f64,
+    seq_tok_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    kv_bytes: usize,
+}
+
+impl Cell {
+    fn speedup(&self) -> f64 {
+        if self.seq_tok_s > 0.0 {
+            self.decode_tok_s / self.seq_tok_s
+        } else {
+            0.0
+        }
+    }
+}
+
+fn prompt_for(req: usize, prompt_len: usize, vocab: usize) -> Vec<i32> {
+    (0..prompt_len).map(|j| ((3 + req + 2 * j) % vocab) as i32).collect()
+}
+
+fn measure(name: &'static str, cfg: TransformerConfig, iters: usize) -> Vec<Cell> {
+    let base = cfg.init(0);
+    let max_b = *BATCHES.iter().max().unwrap();
+    let mut reg = AdapterRegistry::new(max_b);
+    let names: Vec<String> = (0..max_b).map(|i| format!("adapter-{i}")).collect();
+    for (i, n) in names.iter().enumerate() {
+        reg.insert_synthetic(n, &cfg, &base, RANK, 1 + i as u64)
+            .expect("synthetic adapter");
+    }
+    let adapters = reg.get_many(&names).expect("resident adapters");
+
+    let prompt_len = (cfg.seq_len / 2).max(1);
+    let max_new = (cfg.seq_len / 4).max(1);
+    let s = prompt_len + max_new;
+    let prompts: Vec<Vec<i32>> =
+        (0..max_b).map(|i| prompt_for(i, prompt_len, cfg.vocab)).collect();
+
+    // bit-identity tripwire before any timing: batched == sequential
+    if let Err(e) = oracle_check(&cfg, &base, &adapters, &prompts, max_new) {
+        eprintln!("[serving] {name}: oracle mismatch: {e}");
+        std::process::exit(1);
+    }
+
+    let mut template = vec![0i32; max_b * s];
+    for (bi, p) in prompts.iter().enumerate() {
+        template[bi * s..bi * s + prompt_len].copy_from_slice(p);
+    }
+
+    let mut cells = Vec::new();
+    for &b in &BATCHES {
+        let ads = &adapters[..b];
+        let tmpl = &template[..b * s];
+        let batched = time_it(1, iters, || {
+            let mut toks = tmpl.to_vec();
+            serve_greedy(&cfg, &base, ads, &mut toks, s, prompt_len).unwrap();
+            std::hint::black_box(&toks);
+        });
+        let sequential = time_it(1, iters, || {
+            for bi in 0..b {
+                let mut toks = tmpl[bi * s..(bi + 1) * s].to_vec();
+                serve_greedy(&cfg, &base, &ads[bi..bi + 1], &mut toks, s, prompt_len)
+                    .unwrap();
+                std::hint::black_box(&toks);
+            }
+        });
+        let gen = (b * max_new) as f64;
+        cells.push(Cell {
+            key: format!("{name}/b{b}"),
+            base_model: name,
+            batch: b,
+            prompt_len,
+            max_new,
+            decode_tok_s: gen / batched.mean().max(1e-12),
+            seq_tok_s: gen / sequential.mean().max(1e-12),
+            p50_ms: batched.percentile(50.0) * 1e3,
+            p95_ms: batched.percentile(95.0) * 1e3,
+            kv_bytes: cfg.dims.n_layers * 2 * b * s * cfg.dims.d_model * 4,
+        });
+    }
+    cells
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn round1(x: f64) -> Json {
+    Json::Num((x * 10.0).round() / 10.0)
+}
+
+fn round3(x: f64) -> Json {
+    Json::Num((x * 1000.0).round() / 1000.0)
+}
+
+fn snapshot_of(cells: &[Cell], args: &BenchArgs) -> Json {
+    let sizes: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("model", Json::Str(c.key.clone())),
+                ("base_model", Json::Str(c.base_model.into())),
+                ("batch", Json::Num(c.batch as f64)),
+                ("rank", Json::Num(RANK as f64)),
+                ("prompt_len", Json::Num(c.prompt_len as f64)),
+                ("max_new", Json::Num(c.max_new as f64)),
+                ("decode_tok_s", round1(c.decode_tok_s)),
+                ("seq_tok_s", round1(c.seq_tok_s)),
+                ("batch_speedup", round3(c.speedup())),
+                ("p50_ms", round3(c.p50_ms)),
+                ("p95_ms", round3(c.p95_ms)),
+                ("kv_bytes", Json::Num(c.kv_bytes as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("parallelism", Json::Num(args.parallelism.threads() as f64)),
+        ("quick", Json::Bool(args.quick)),
+        ("provenance", Json::Str("cargo-bench serving".into())),
+        ("sizes", Json::Arr(sizes)),
+    ])
+}
+
+/// Append `snapshot` to the schema-2 trajectory in `path` (same
+/// append-never-rewrite contract as micro_kernels).
+fn append_snapshot(path: &str, snapshot: Json) -> String {
+    let mut trajectory: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(old) = json::parse(&text) {
+            if old.get("schema").and_then(Json::as_usize) == Some(2) {
+                if let Some(arr) = old.get("trajectory").and_then(Json::as_arr) {
+                    trajectory = arr.to_vec();
+                }
+            }
+        }
+    }
+    trajectory.push(snapshot);
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serving".into()));
+    root.insert("schema".to_string(), Json::Num(2.0));
+    root.insert(
+        "comment".to_string(),
+        Json::Str(
+            "Per-PR multi-adapter serving trajectory (decode tokens/sec + \
+             per-batch latency percentiles). Entries are appended, never \
+             rewritten; `cargo bench --bench serving` appends a fresh \
+             cargo-bench snapshot. How to read this file: docs/SERVING.md."
+                .into(),
+        ),
+    );
+    root.insert("trajectory".to_string(), Json::Arr(trajectory));
+    Json::Obj(root).render()
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let iters = args.steps.unwrap_or(if args.quick { 4 } else { 12 });
+    let mut cells = Vec::new();
+    for (name, cfg) in TransformerConfig::catalog_grid() {
+        if args.quick && name == "lora-base" {
+            continue; // the CI smoke stays fast; full runs cover it
+        }
+        eprintln!("[serving] measuring {name} ...");
+        cells.extend(measure(name, cfg, iters));
+    }
+
+    let mut table = flora::bench::Table::new(
+        &format!(
+            "serving decode throughput (rank {RANK}, parallelism {})",
+            args.parallelism.threads()
+        ),
+        &["Size", "b", "decode tok/s", "seq tok/s", "speedup", "p50 ms", "p95 ms"],
+    );
+    for c in &cells {
+        table.row(vec![
+            c.key.clone(),
+            format!("{}", c.batch),
+            format!("{:.0}", c.decode_tok_s),
+            format!("{:.0}", c.seq_tok_s),
+            format!("{:.2}x", c.speedup()),
+            format!("{:.2}", c.p50_ms),
+            format!("{:.2}", c.p95_ms),
+        ]);
+    }
+    table.print();
+
+    let path = "BENCH_serving.json";
+    let rendered = append_snapshot(path, snapshot_of(&cells, &args));
+    match std::fs::write(path, &rendered) {
+        Ok(()) => println!("\nappended snapshot to {path}"),
+        Err(e) => {
+            // growing the trajectory is this bench's one artifact; a
+            // silent skip would let CI go green on a broken append
+            eprintln!("could not write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -107,6 +107,15 @@ COMMANDS:
                   --model t5-small|t5-3b|gpt2-base|gpt2-xl --optimizer ...
     inspect     list manifest executables and their ABI
                   --artifacts DIR [--exe NAME] [--backend native]
+    serve       batched multi-adapter inference on the native LM catalog
+                  --model lora-tiny|lora-small|lora-base --config file.toml
+                  --adapters N (synthetic adapters) --rank N --capacity N
+                  --checkpoint PATH (hot-load a trained adapter too)
+                  --requests N --prompt-len N --max-new N --gap-ms MS
+                  --max-batch N --max-wait-ms MS --seed N --parallelism N
+                  --verify (bit-compare every batch vs the sequential
+                  single-request oracle; non-zero exit on any mismatch)
+                  See docs/SERVING.md for the architecture and policy.
     help        show this message
 
 Switches: `--list-catalog` (with any command) prints the native catalog

@@ -3,7 +3,9 @@
 //! benches consume.
 
 pub mod experiment;
+pub mod serve;
 pub mod toml;
 
 pub use experiment::{ExperimentConfig, TaskKind, TrainConfig};
+pub use serve::ServeConfig;
 pub use toml::{parse_toml, TomlValue};

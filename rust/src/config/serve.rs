@@ -1,0 +1,214 @@
+//! Typed `flora serve` configuration: batching knobs, model choice and
+//! the synthetic-traffic parameters, buildable from a `[serve]` TOML
+//! table (`--config`) with CLI flags layered on top by the launcher.
+
+use std::collections::BTreeMap;
+
+use super::toml::{parse_toml, TomlValue};
+use crate::tensor::Parallelism;
+
+/// Everything `flora serve` needs to run one serving session.
+///
+/// ```
+/// use flora::config::ServeConfig;
+///
+/// let cfg = ServeConfig::from_toml_str(r#"
+///     [serve]
+///     model = "lora-small"
+///     max_batch = 8
+///     max_wait_ms = 25
+///     adapters = 4
+///     rank = 8
+/// "#).unwrap();
+/// assert_eq!(cfg.model, "lora-small");
+/// assert_eq!(cfg.max_batch, 8);
+/// assert_eq!(cfg.max_wait_ms, 25);
+/// assert_eq!(cfg.rank, 8);
+/// // unknown keys are an error (typo defence)
+/// assert!(ServeConfig::from_toml_str("serve.max_batsh = 2").is_err());
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// native catalog LM size (`lora-tiny` | `lora-small` | `lora-base`)
+    pub model: String,
+    /// close a batch at this many shape-compatible requests
+    pub max_batch: usize,
+    /// ... or once the oldest queued request has waited this long
+    pub max_wait_ms: u64,
+    /// synthetic adapters to register (`adapter-0` … `adapter-{n-1}`)
+    pub adapters: usize,
+    /// adapter registry capacity (defaults to `adapters`, min 1)
+    pub capacity: usize,
+    /// LoRA rank of the synthetic adapters
+    pub rank: usize,
+    /// synthetic requests to submit
+    pub requests: usize,
+    /// prompt length per request; 0 means half the model's seq_len
+    pub prompt_len: usize,
+    /// tokens to generate per request; 0 means a quarter of seq_len
+    pub max_new: usize,
+    /// base-weight + synthetic-adapter seed
+    pub seed: u64,
+    /// synthetic arrival gap between consecutive requests
+    pub gap_ms: u64,
+    /// tensor-kernel thread budget (installed process-wide)
+    pub parallelism: Parallelism,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            model: "lora-tiny".into(),
+            max_batch: 4,
+            max_wait_ms: 50,
+            adapters: 3,
+            capacity: 0,
+            rank: 8,
+            requests: 6,
+            prompt_len: 0,
+            max_new: 0,
+            seed: 0,
+            gap_ms: 0,
+            parallelism: Parallelism::single(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a TOML document; unknown keys are an error.
+    pub fn from_toml_str(doc: &str) -> Result<Self, String> {
+        let map = parse_toml(doc).map_err(|e| e.to_string())?;
+        Self::from_map(&map)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let doc = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_toml_str(&doc)
+    }
+
+    fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Self, String> {
+        let mut cfg = ServeConfig::default();
+        for (k, v) in map {
+            match k.as_str() {
+                "serve.model" => cfg.model = req_str(k, v)?,
+                "serve.max_batch" => cfg.max_batch = req_pos(k, v)?,
+                "serve.max_wait_ms" => cfg.max_wait_ms = req_int(k, v)? as u64,
+                "serve.adapters" => cfg.adapters = req_pos(k, v)?,
+                "serve.capacity" => cfg.capacity = req_int(k, v)? as usize,
+                "serve.rank" => cfg.rank = req_pos(k, v)?,
+                "serve.requests" => cfg.requests = req_pos(k, v)?,
+                "serve.prompt_len" => cfg.prompt_len = req_int(k, v)? as usize,
+                "serve.max_new" => cfg.max_new = req_int(k, v)? as usize,
+                "serve.seed" => cfg.seed = req_int(k, v)? as u64,
+                "serve.gap_ms" => cfg.gap_ms = req_int(k, v)? as u64,
+                "serve.parallelism" => {
+                    cfg.parallelism = Parallelism::new(req_pos(k, v)?);
+                }
+                _ => return Err(format!("unknown config key {k:?}")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Registry capacity after defaulting: `capacity` if set, else room
+    /// for every configured adapter.
+    pub fn effective_capacity(&self) -> usize {
+        if self.capacity > 0 {
+            self.capacity
+        } else {
+            self.adapters.max(1)
+        }
+    }
+
+    /// Prompt length after defaulting against a model's `seq_len`.
+    pub fn effective_prompt_len(&self, seq_len: usize) -> usize {
+        if self.prompt_len > 0 {
+            self.prompt_len
+        } else {
+            (seq_len / 2).max(1)
+        }
+    }
+
+    /// Generation length after defaulting against a model's `seq_len`.
+    pub fn effective_max_new(&self, seq_len: usize) -> usize {
+        if self.max_new > 0 {
+            self.max_new
+        } else {
+            (seq_len / 4).max(1)
+        }
+    }
+}
+
+fn req_str(k: &str, v: &TomlValue) -> Result<String, String> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("{k}: expected string"))
+}
+
+fn req_int(k: &str, v: &TomlValue) -> Result<i64, String> {
+    let n = v.as_i64().ok_or_else(|| format!("{k}: expected integer"))?;
+    if n < 0 {
+        return Err(format!("{k}: must be >= 0"));
+    }
+    Ok(n)
+}
+
+fn req_pos(k: &str, v: &TomlValue) -> Result<usize, String> {
+    let n = req_int(k, v)?;
+    if n < 1 {
+        return Err(format!("{k}: must be >= 1"));
+    }
+    Ok(n as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_effective_values() {
+        let c = ServeConfig::default();
+        assert_eq!(c.model, "lora-tiny");
+        assert_eq!(c.effective_capacity(), 3);
+        assert_eq!(c.effective_prompt_len(16), 8);
+        assert_eq!(c.effective_max_new(16), 4);
+    }
+
+    #[test]
+    fn full_roundtrip_from_toml() {
+        let c = ServeConfig::from_toml_str(
+            r#"
+            [serve]
+            model = "lora-base"
+            max_batch = 8
+            max_wait_ms = 10
+            adapters = 5
+            capacity = 2
+            rank = 16
+            requests = 20
+            prompt_len = 12
+            max_new = 6
+            seed = 9
+            gap_ms = 3
+            parallelism = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.model, "lora-base");
+        assert_eq!((c.max_batch, c.max_wait_ms), (8, 10));
+        assert_eq!((c.adapters, c.effective_capacity()), (5, 2));
+        assert_eq!((c.rank, c.requests), (16, 20));
+        assert_eq!((c.prompt_len, c.max_new), (12, 6));
+        assert_eq!((c.seed, c.gap_ms), (9, 3));
+        assert_eq!(c.parallelism, Parallelism::new(2));
+    }
+
+    #[test]
+    fn rejects_unknown_and_invalid() {
+        assert!(ServeConfig::from_toml_str("serve.modell = \"x\"").is_err());
+        assert!(ServeConfig::from_toml_str("serve.max_batch = 0").is_err());
+        assert!(ServeConfig::from_toml_str("serve.rank = -2").is_err());
+        assert!(ServeConfig::from_toml_str("serve.model = 5").is_err());
+    }
+}

@@ -29,6 +29,7 @@ fn main() {
             "pilot" => cmd_pilot(&args),
             "memory" => cmd_memory(&args),
             "inspect" => cmd_inspect(&args),
+            "serve" => cmd_serve(&args),
             "help" | "" => {
                 println!("{USAGE}");
                 Ok(())
@@ -220,6 +221,182 @@ fn cmd_memory(args: &Args) -> Result<(), String> {
         ]);
     }
     table.print();
+    Ok(())
+}
+
+/// `flora serve`: spin up the multi-adapter serving tier on a native
+/// catalog LM, push a synthetic mixed-adapter workload through the
+/// dynamic batcher, and report throughput + latency. With `--verify`,
+/// every response is additionally bit-compared against the sequential
+/// single-request oracle (`runtime::serve::oracle_check`) — the CI
+/// smoke job runs exactly that. `docs/SERVING.md` is the handbook.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    use flora::config::ServeConfig;
+    use flora::model::TransformerConfig;
+    use flora::runtime::{AdapterRegistry, BatchPolicy, Server};
+    use flora::util::timing::{Samples, Timer};
+
+    let mut cfg = match args.flag("config") {
+        Some(path) => ServeConfig::from_file(path)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(m) = args.flag("model") {
+        cfg.model = m.to_string();
+    }
+    cfg.max_batch = args.usize_flag("max-batch", cfg.max_batch)?;
+    cfg.max_wait_ms = args.u64_flag("max-wait-ms", cfg.max_wait_ms)?;
+    cfg.adapters = args.usize_flag("adapters", cfg.adapters)?;
+    cfg.capacity = args.usize_flag("capacity", cfg.capacity)?;
+    cfg.rank = args.usize_flag("rank", cfg.rank)?;
+    cfg.requests = args.usize_flag("requests", cfg.requests)?;
+    // --synthetic N is an alias for --requests N (the smoke job's spelling)
+    cfg.requests = args.usize_flag("synthetic", cfg.requests)?;
+    cfg.prompt_len = args.usize_flag("prompt-len", cfg.prompt_len)?;
+    cfg.max_new = args.usize_flag("max-new", cfg.max_new)?;
+    cfg.seed = args.u64_flag("seed", cfg.seed)?;
+    cfg.gap_ms = args.u64_flag("gap-ms", cfg.gap_ms)?;
+    let threads = args.usize_flag("parallelism", cfg.parallelism.threads())?;
+    if threads == 0 {
+        return Err("--parallelism: must be >= 1".into());
+    }
+    if cfg.adapters == 0 || cfg.requests == 0 || cfg.max_batch == 0 || cfg.rank == 0 {
+        return Err("adapters, requests, max-batch and rank must be >= 1".into());
+    }
+    cfg.parallelism = flora::tensor::Parallelism::new(threads);
+    cfg.parallelism.install();
+
+    let model = TransformerConfig::catalog_grid()
+        .into_iter()
+        .find(|(n, _)| *n == cfg.model)
+        .map(|(_, c)| c)
+        .ok_or_else(|| {
+            format!(
+                "--model: unknown serving model {:?} (want lora-tiny|lora-small|lora-base)",
+                cfg.model
+            )
+        })?;
+    let prompt_len = cfg.effective_prompt_len(model.seq_len);
+    let max_new = cfg.effective_max_new(model.seq_len);
+    if prompt_len + max_new > model.seq_len {
+        return Err(format!(
+            "prompt_len {prompt_len} + max_new {max_new} exceeds {} seq_len {}",
+            cfg.model, model.seq_len
+        ));
+    }
+
+    let base = model.init(cfg.seed);
+    let mut registry = AdapterRegistry::new(cfg.effective_capacity());
+    for i in 0..cfg.adapters {
+        registry.insert_synthetic(
+            &format!("adapter-{i}"),
+            &model,
+            &base,
+            cfg.rank,
+            cfg.seed.wrapping_add(1 + i as u64),
+        )?;
+    }
+    if let Some(path) = args.flag("checkpoint") {
+        let rank = registry.load_checkpoint("ckpt", path)?;
+        println!("hot-loaded adapter \"ckpt\" (rank {rank}) from {path}");
+    }
+    let adapter_names = registry.names();
+    println!(
+        "serving {} | {} adapters (rank {}, {} resident) | policy max_batch={} max_wait={}ms",
+        cfg.model,
+        adapter_names.len(),
+        registry.rank().unwrap_or(cfg.rank),
+        human::bytes(registry.state_bytes() as u64),
+        cfg.max_batch,
+        cfg.max_wait_ms,
+    );
+
+    let policy = BatchPolicy { max_batch: cfg.max_batch, max_wait_ms: cfg.max_wait_ms };
+    let mut srv = Server::new(model, base.clone(), registry, policy);
+    // synthetic open-loop traffic: request i arrives at i*gap_ms under
+    // adapter i % adapters, with a deterministic prompt
+    let mut batch_lat = Samples::new();
+    let mut batches = 0usize;
+    for i in 0..cfg.requests {
+        let now = i as u64 * cfg.gap_ms;
+        let name = &adapter_names[i % adapter_names.len()];
+        let prompt: Vec<i32> =
+            (0..prompt_len).map(|j| ((3 + i + 2 * j) % model.vocab) as i32).collect();
+        srv.submit(name, prompt, max_new, now)?;
+        let t = Timer::start();
+        if srv.step(now, false)?.is_some() {
+            batch_lat.push(t.elapsed_secs());
+            batches += 1;
+        }
+    }
+    let close = cfg.requests as u64 * cfg.gap_ms + cfg.max_wait_ms;
+    loop {
+        let t = Timer::start();
+        if srv.step(close, true)?.is_none() {
+            break;
+        }
+        batch_lat.push(t.elapsed_secs());
+        batches += 1;
+    }
+    let responses = srv.take_responses();
+    if responses.len() != cfg.requests {
+        return Err(format!(
+            "served {} responses for {} requests",
+            responses.len(),
+            cfg.requests
+        ));
+    }
+    let new_tokens: usize = responses.iter().map(|r| r.new_tokens).sum();
+    let total_secs: f64 = batch_lat.mean() * batch_lat.len() as f64;
+    println!(
+        "{} responses in {batches} batches | {:.1} tok/s decode | batch latency p50={:.2}ms p95={:.2}ms",
+        responses.len(),
+        new_tokens as f64 / total_secs.max(1e-9),
+        batch_lat.percentile(50.0) * 1e3,
+        batch_lat.percentile(95.0) * 1e3,
+    );
+    let stats = srv.registry.stats();
+    println!(
+        "registry: loads={} hits={} misses={} evictions={}",
+        stats.loads, stats.hits, stats.misses, stats.evictions
+    );
+    for r in responses.iter().take(4) {
+        println!(
+            "  req {} [{}] batch={} queue={}ms tokens {:?}",
+            r.id,
+            r.adapter,
+            r.batch_size,
+            r.queue_ms,
+            &r.tokens[prompt_len..]
+        );
+    }
+
+    if args.has("verify") {
+        // re-run every served request through the bit-compare oracle and
+        // require the SERVED tokens to match the sequential streams
+        let names: Vec<String> = responses.iter().map(|r| r.adapter.clone()).collect();
+        let adapters = srv.registry.get_many(&names)?;
+        let prompts: Vec<Vec<i32>> =
+            responses.iter().map(|r| r.tokens[..prompt_len].to_vec()).collect();
+        let solo = flora::runtime::serve::oracle_check(
+            &model,
+            &base,
+            &adapters,
+            &prompts,
+            max_new,
+        )?;
+        for (r, want) in responses.iter().zip(&solo) {
+            if &r.tokens != want {
+                return Err(format!(
+                    "verify: served tokens for req {} diverge from the sequential oracle",
+                    r.id
+                ));
+            }
+        }
+        println!(
+            "verify: {} responses bit-match the sequential single-adapter oracle",
+            responses.len()
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,520 @@
+//! KV-cache incremental decode and the multi-adapter serving forward.
+//!
+//! Two entry points share one engine:
+//!
+//! - [`greedy_kv`]: the plain-weights KV-cache greedy decode. Each step
+//!   embeds ONE new position per request, runs it through the stack
+//!   against cached keys/values, and argmaxes the tied head — turning
+//!   the O(s) full recomputes of `TransformerConfig::greedy` into
+//!   O(1)-per-token GEMM-shaped work. Token-for-token equal to the
+//!   full-recompute path (see *Numerics* below).
+//! - [`serve_greedy`]: the same loop over a heterogeneous batch where
+//!   request `bi` carries its **own** [`AdapterParams`]. Base weights
+//!   run as ordinary stacked GEMMs; per-request low-rank corrections run
+//!   in the `(x·B)·A` contraction order through
+//!   [`batched_matmul_ops`] — one batched GEMM whose panel `bi`
+//!   contracts against request `bi`'s factor — so `B·A` is never
+//!   materialized and adapter cost stays O(s·d·r) per weight. LoRA also
+//!   trains the passthrough parameters (embedding tables, norm scales),
+//!   so those are applied per request too.
+//!
+//! # Numerics
+//!
+//! **Batched vs. sequential is bit-identical.** Every op in this path is
+//! row-local (GEMM rows, RMS-norm rows, softmax rows, embeds, the tied
+//! head) or panel-local (attention panels `[bi*h, (bi+1)*h)`), and the
+//! kernels' parallel row-band split never re-associates a sum — so the
+//! batched forward over B requests reproduces B single-request forwards
+//! bit-for-bit, NaN/Inf included. `runtime::serve::oracle_check` and the
+//! integration suite assert this exactly.
+//!
+//! **KV-cache vs. full recompute is token-identical.** The
+//! full-recompute path scores *future* positions too, zeroes them in the
+//! masked softmax, and accumulates their `0.0 · v` terms trailing the
+//! real ones. With finite activations those terms only perturb the SIGN
+//! of exact zeros (`-0.0 + 0.0 = +0.0`), never a nonzero value, and
+//! `argmax_rows` compares with `>` where `+0.0 > -0.0` is false — so the
+//! emitted token streams match exactly even where activation bit
+//! patterns drift in zero sign. The regression test walks the whole lora
+//! size grid on this claim.
+
+use super::head::argmax_rows;
+use super::lora::AdapterParams;
+use super::transformer::TransformerConfig;
+use super::{pget, ParamSet};
+use crate::tensor::{
+    add_panels_at, batched_matmul, batched_matmul_nt, batched_matmul_ops,
+    gather_heads_at, gelu, scatter_heads, softmax_rows_masked_offset,
+    BatchedMatrix, Matrix, RMS_EPS,
+};
+
+/// The weight view one decode runs under: a single merged/plain
+/// parameter set, or a frozen base plus one adapter per request.
+enum Weights<'a> {
+    Plain(&'a ParamSet),
+    Adapted { base: &'a ParamSet, adapters: &'a [&'a AdapterParams] },
+}
+
+impl<'a> Weights<'a> {
+    fn base(&self) -> &'a ParamSet {
+        match self {
+            Weights::Plain(p) => p,
+            Weights::Adapted { base, .. } => base,
+        }
+    }
+
+    /// Request `bi`'s value for a passthrough parameter (embedding
+    /// table, norm scale). Plain: the shared set. Adapted: the
+    /// adapter's trained copy, falling back to base if absent.
+    fn pass(&self, bi: usize, name: &str) -> &'a Matrix {
+        match self {
+            Weights::Plain(p) => pget(p, name),
+            Weights::Adapted { base, adapters } => adapters[bi]
+                .passthrough(name)
+                .unwrap_or_else(|| pget(base, name)),
+        }
+    }
+
+    /// Accumulate per-request `(x·B)·A` corrections for projected
+    /// weight `name` into columns `[col0, col0 + A.cols)` of `into`
+    /// (`xp` = the GEMM input as per-request panels). No-op on the
+    /// plain path or when the weight is not adapted.
+    fn add_low_rank(&self, xp: &BatchedMatrix, name: &str, into: &mut Matrix, col0: usize) {
+        let Weights::Adapted { adapters, .. } = self else { return };
+        let mut bs = Vec::with_capacity(adapters.len());
+        let mut avs = Vec::with_capacity(adapters.len());
+        for ad in adapters.iter() {
+            // adapters share one trainable ABI, so either every request
+            // adapts this weight or none does
+            match ad.low_rank(name) {
+                Some((b, a)) => {
+                    bs.push(b);
+                    avs.push(a);
+                }
+                None => return,
+            }
+        }
+        let xb = batched_matmul_ops(xp, &bs);
+        let corr = batched_matmul_ops(&xb, &avs);
+        add_panels_at(into, &corr, col0);
+    }
+}
+
+/// `tensor::ops::rms_norm_rows` with a per-request scale vector: rows
+/// `[bi*m, (bi+1)*m)` normalize against request `bi`'s scale. The inner
+/// loop mirrors the shared op exactly, so with equal scales the output
+/// is bit-identical to one `rms_norm_rows` call.
+fn rms_norm_per_request(w: &Weights, x: &Matrix, b: usize, name: &str) -> Matrix {
+    let m = x.rows / b;
+    let d = x.cols as f32;
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for bi in 0..b {
+        let scale = w.pass(bi, name);
+        debug_assert_eq!(scale.shape(), (1, x.cols));
+        for i in 0..m {
+            let r = bi * m + i;
+            let row = x.row(r);
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d;
+            let inv = 1.0 / (ms + RMS_EPS).sqrt();
+            let orow = &mut out.data[r * x.cols..(r + 1) * x.cols];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = row[j] * inv * scale.at(0, j);
+            }
+        }
+    }
+    out
+}
+
+/// Per-layer key/value panels, `[b*h, capacity, dh]` with the first
+/// `len` rows live. Appends are contiguous row copies; attention views
+/// pack the live prefix into compact panels for the batched GEMMs.
+struct KvCache {
+    k: Vec<BatchedMatrix>,
+    v: Vec<BatchedMatrix>,
+    len: usize,
+}
+
+impl KvCache {
+    fn new(layers: usize, bh: usize, capacity: usize, dh: usize) -> Self {
+        Self {
+            k: (0..layers).map(|_| BatchedMatrix::zeros(bh, capacity, dh)).collect(),
+            v: (0..layers).map(|_| BatchedMatrix::zeros(bh, capacity, dh)).collect(),
+            len: 0,
+        }
+    }
+
+    /// Write a chunk's new keys/values at rows `[len, len + kh.rows)` of
+    /// layer `l`. `len` itself advances once per chunk via [`advance`],
+    /// after every layer has appended.
+    ///
+    /// [`advance`]: KvCache::advance
+    fn append(&mut self, l: usize, kh: &BatchedMatrix, vh: &BatchedMatrix) {
+        let dh = kh.cols;
+        let t0 = self.len;
+        for p in 0..kh.batch {
+            self.k[l].panel_mut(p)[t0 * dh..(t0 + kh.rows) * dh]
+                .copy_from_slice(kh.panel(p));
+            self.v[l].panel_mut(p)[t0 * dh..(t0 + vh.rows) * dh]
+                .copy_from_slice(vh.panel(p));
+        }
+    }
+
+    fn advance(&mut self, m: usize) {
+        self.len += m;
+    }
+
+    /// Compact copies of the first `t` live rows of layer `l`'s panels.
+    fn view(&self, l: usize, t: usize) -> (BatchedMatrix, BatchedMatrix) {
+        let pack = |full: &BatchedMatrix| {
+            let dh = full.cols;
+            let mut out = BatchedMatrix::zeros(full.batch, t, dh);
+            for p in 0..full.batch {
+                out.panel_mut(p).copy_from_slice(&full.panel(p)[..t * dh]);
+            }
+            out
+        };
+        (pack(&self.k[l]), pack(&self.v[l]))
+    }
+}
+
+/// The fused `[d, 3d]` base `wq|wk|wv` panels, packed once per decode
+/// (`blocks::pack_wqkv`'s layout) instead of once per step.
+fn pack_all_wqkv(base: &ParamSet, layers: usize) -> Vec<Matrix> {
+    (0..layers)
+        .map(|l| {
+            Matrix::concat_cols(&[
+                pget(base, &format!("layer{l}/attn/wq")),
+                pget(base, &format!("layer{l}/attn/wk")),
+                pget(base, &format!("layer{l}/attn/wv")),
+            ])
+        })
+        .collect()
+}
+
+/// Run positions `[t0, t0 + m)` of every request through the stack,
+/// extending `cache` (which must hold exactly the first `t0` positions),
+/// and return the final-normed activations `[b*m, d]`.
+#[allow(clippy::too_many_arguments)]
+fn forward_chunk(
+    w: &Weights,
+    cfg: &TransformerConfig,
+    wqkv: &[Matrix],
+    cache: &mut KvCache,
+    tokens: &[i32],
+    b: usize,
+    s_total: usize,
+    t0: usize,
+    m: usize,
+) -> Matrix {
+    debug_assert_eq!(cache.len, t0);
+    let dims = cfg.dims;
+    let d = dims.d_model;
+    let h = dims.n_heads;
+    let dh = dims.head_dim();
+    let mut x = Matrix::zeros(b * m, d);
+    for bi in 0..b {
+        let tok = w.pass(bi, "embed/tok");
+        let pos = w.pass(bi, "embed/pos");
+        for i in 0..m {
+            let r = bi * m + i;
+            let trow = tok.row(tokens[bi * s_total + t0 + i] as usize);
+            let prow = pos.row(t0 + i);
+            let xrow = &mut x.data[r * d..(r + 1) * d];
+            for j in 0..d {
+                xrow[j] = trow[j] + prow[j];
+            }
+        }
+    }
+    let scale = 1.0 / (dh as f32).sqrt();
+    for l in 0..dims.n_layers {
+        let p = |suffix: &str| format!("layer{l}/{suffix}");
+        let n1 = rms_norm_per_request(w, &x, b, &p("ln1/scale"));
+        let mut qkv = n1.matmul(&wqkv[l]);
+        let n1p = BatchedMatrix::from_matrix(&n1, b);
+        w.add_low_rank(&n1p, &p("attn/wq"), &mut qkv, 0);
+        w.add_low_rank(&n1p, &p("attn/wk"), &mut qkv, d);
+        w.add_low_rank(&n1p, &p("attn/wv"), &mut qkv, 2 * d);
+        let qh = gather_heads_at(&qkv, b, m, h, dh, 0);
+        let kh = gather_heads_at(&qkv, b, m, h, dh, d);
+        let vh = gather_heads_at(&qkv, b, m, h, dh, 2 * d);
+        cache.append(l, &kh, &vh);
+        let (kv, vv) = cache.view(l, t0 + m);
+        let mut probs = batched_matmul_nt(&qh, &kv, scale);
+        softmax_rows_masked_offset(&mut probs, t0);
+        let ctxh = batched_matmul(&probs, &vv);
+        let ctx = scatter_heads(&ctxh, b, m, h, dh);
+        let mut attn_out = ctx.matmul(pget(w.base(), &p("attn/wo")));
+        let ctxp = BatchedMatrix::from_matrix(&ctx, b);
+        w.add_low_rank(&ctxp, &p("attn/wo"), &mut attn_out, 0);
+        let x_mid = &x + &attn_out;
+        let n2 = rms_norm_per_request(w, &x_mid, b, &p("ln2/scale"));
+        let mut h1 = n2.matmul(pget(w.base(), &p("ffn/w1")));
+        let n2p = BatchedMatrix::from_matrix(&n2, b);
+        w.add_low_rank(&n2p, &p("ffn/w1"), &mut h1, 0);
+        let g = gelu(&h1);
+        let mut ff = g.matmul(pget(w.base(), &p("ffn/w2")));
+        let gp = BatchedMatrix::from_matrix(&g, b);
+        w.add_low_rank(&gp, &p("ffn/w2"), &mut ff, 0);
+        x = &x_mid + &ff;
+    }
+    cache.advance(m);
+    rms_norm_per_request(w, &x, b, "final_ln/scale")
+}
+
+/// `TransformerConfig::check_batch`'s rules, restated here because the
+/// serving tier validates before the config's private check would run.
+fn check(cfg: &TransformerConfig, tokens: &[i32], rows: usize, s: usize) -> Result<(), String> {
+    if rows == 0 {
+        return Err("decode needs at least one request".into());
+    }
+    if s == 0 || s > cfg.seq_len {
+        return Err(format!(
+            "decode seq {s} outside the model's positional table (seq_len {})",
+            cfg.seq_len
+        ));
+    }
+    if tokens.len() != rows * s {
+        return Err(format!("tokens length {} != rows {rows} * seq {s}", tokens.len()));
+    }
+    for &t in tokens {
+        if t < 0 || t as usize >= cfg.vocab {
+            return Err(format!("token id {t} out of range for vocab {}", cfg.vocab));
+        }
+    }
+    Ok(())
+}
+
+fn drive(
+    w: &Weights,
+    cfg: &TransformerConfig,
+    tokens: &mut [i32],
+    b: usize,
+    s: usize,
+    prompt_len: usize,
+) -> Result<(), String> {
+    check(cfg, tokens, b, s)?;
+    let p0 = prompt_len.max(1);
+    if p0 >= s {
+        return Ok(());
+    }
+    let wqkv = pack_all_wqkv(w.base(), cfg.dims.n_layers);
+    let mut cache =
+        KvCache::new(cfg.dims.n_layers, b * cfg.dims.n_heads, s, cfg.dims.head_dim());
+    // prefill the prompt in one chunk, then one position per step
+    let mut last = forward_chunk(w, cfg, &wqkv, &mut cache, tokens, b, s, 0, p0);
+    let d = cfg.dims.d_model;
+    for i in p0..s {
+        let m_prev = last.rows / b;
+        for bi in 0..b {
+            let r = bi * m_prev + m_prev - 1;
+            let feats = Matrix::from_vec(1, d, last.row(r).to_vec());
+            // tied head, per request: logits = feats · embᵀ
+            let logits = feats.matmul_nt(w.pass(bi, "embed/tok"));
+            tokens[bi * s + i] = argmax_rows(&logits)[0] as i32;
+        }
+        if i + 1 < s {
+            last = forward_chunk(w, cfg, &wqkv, &mut cache, tokens, b, s, i, 1);
+        }
+    }
+    Ok(())
+}
+
+/// KV-cache greedy decode with plain (merged or base) weights: the
+/// incremental counterpart of `TransformerConfig::greedy`, emitting
+/// token-for-token the same continuation.
+pub fn greedy_kv(
+    cfg: &TransformerConfig,
+    params: &ParamSet,
+    tokens: &mut [i32],
+    rows: usize,
+    s: usize,
+    prompt_len: usize,
+) -> Result<(), String> {
+    drive(&Weights::Plain(params), cfg, tokens, rows, s, prompt_len)
+}
+
+/// KV-cache greedy decode over a heterogeneous batch: request `bi` (rows
+/// `[bi*s, (bi+1)*s)` of `tokens`) decodes under `base` patched by
+/// `adapters[bi]`. Bit-identical to running each request alone — the
+/// batched low-rank corrections are panel-local, see the module docs.
+pub fn serve_greedy(
+    cfg: &TransformerConfig,
+    base: &ParamSet,
+    adapters: &[&AdapterParams],
+    tokens: &mut [i32],
+    s: usize,
+    prompt_len: usize,
+) -> Result<(), String> {
+    drive(
+        &Weights::Adapted { base, adapters },
+        cfg,
+        tokens,
+        adapters.len(),
+        s,
+        prompt_len,
+    )
+}
+
+/// One full causal adapted forward (no decode loop): the final-normed
+/// activations `[b*s, d]` for `b = adapters.len()` requests. This is the
+/// serving tier's bit-compare surface — the batched result must equal
+/// per-request calls at batch 1 byte-for-byte.
+pub fn serve_prefill(
+    cfg: &TransformerConfig,
+    base: &ParamSet,
+    adapters: &[&AdapterParams],
+    tokens: &[i32],
+    s: usize,
+) -> Result<Matrix, String> {
+    let b = adapters.len();
+    check(cfg, tokens, b, s)?;
+    let w = Weights::Adapted { base, adapters };
+    let wqkv = pack_all_wqkv(base, cfg.dims.n_layers);
+    let mut cache =
+        KvCache::new(cfg.dims.n_layers, b * cfg.dims.n_heads, s, cfg.dims.head_dim());
+    Ok(forward_chunk(&w, cfg, &wqkv, &mut cache, tokens, b, s, 0, s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lora::LoraAdapter;
+    use crate::util::rng::{derive_seed, Rng};
+
+    fn prompt_tokens(cfg: &TransformerConfig, rows: usize, salt: usize) -> Vec<i32> {
+        let s = cfg.seq_len;
+        (0..rows * s)
+            .map(|r| ((3 + salt + (r % s) * 2 + r / s) % cfg.vocab) as i32)
+            .collect()
+    }
+
+    fn synthetic_adapter(
+        cfg: &TransformerConfig,
+        base: &ParamSet,
+        rank: usize,
+        seed: u64,
+    ) -> AdapterParams {
+        let ad = LoraAdapter::new(cfg.param_shapes(), rank);
+        let mut train = ad.init_trainable(base, seed);
+        // B = 0 at init would make every adapter collapse onto the base;
+        // give each a small distinct B so outputs diverge
+        let names: Vec<String> =
+            train.keys().filter(|n| n.starts_with("lora_B/")).cloned().collect();
+        for (i, name) in names.iter().enumerate() {
+            let m = train.get_mut(name).unwrap();
+            let mut rng = Rng::new(derive_seed(seed ^ 0x5e21, i as u64));
+            rng.fill_gaussian(&mut m.data, 0.05);
+        }
+        AdapterParams::from_trainable(&train).unwrap()
+    }
+
+    #[test]
+    fn kv_greedy_matches_full_recompute_on_tiny() {
+        let cfg = TransformerConfig::tiny();
+        let params = cfg.init(4);
+        let s = cfg.seq_len;
+        let toks = prompt_tokens(&cfg, 2, 0);
+        let mut full = toks.clone();
+        cfg.greedy(&params, &mut full, 2, s, 4).unwrap();
+        let mut kv = toks;
+        greedy_kv(&cfg, &params, &mut kv, 2, s, 4).unwrap();
+        assert_eq!(kv, full);
+    }
+
+    #[test]
+    fn batched_serve_bit_matches_sequential_requests() {
+        let cfg = TransformerConfig::tiny();
+        let base = cfg.init(5);
+        let adapters: Vec<AdapterParams> =
+            (0..3).map(|i| synthetic_adapter(&cfg, &base, 4, 100 + i)).collect();
+        let refs: Vec<&AdapterParams> = adapters.iter().collect();
+        let s = cfg.seq_len;
+        let mut toks: Vec<i32> = Vec::new();
+        for bi in 0..3 {
+            toks.extend(prompt_tokens(&cfg, 1, bi));
+        }
+        // batched prefill activations vs per-request at batch 1: exact bits
+        let batched = serve_prefill(&cfg, &base, &refs, &toks, s).unwrap();
+        for bi in 0..3 {
+            let solo =
+                serve_prefill(&cfg, &base, &refs[bi..bi + 1], &toks[bi * s..(bi + 1) * s], s)
+                    .unwrap();
+            for (g, w) in batched.data[bi * s * cfg.dims.d_model..(bi + 1) * s * cfg.dims.d_model]
+                .iter()
+                .zip(solo.data.iter())
+            {
+                assert_eq!(g.to_bits(), w.to_bits(), "request {bi}");
+            }
+        }
+        // and the decoded token streams agree
+        let mut batch_toks = toks.clone();
+        serve_greedy(&cfg, &base, &refs, &mut batch_toks, s, 6).unwrap();
+        for bi in 0..3 {
+            let mut solo = toks[bi * s..(bi + 1) * s].to_vec();
+            serve_greedy(&cfg, &base, &refs[bi..bi + 1], &mut solo, s, 6).unwrap();
+            assert_eq!(&batch_toks[bi * s..(bi + 1) * s], &solo[..], "request {bi}");
+        }
+        // distinct adapters actually produce distinct continuations
+        let mut a0 = toks[..s].to_vec();
+        let mut a1 = toks[..s].to_vec();
+        serve_greedy(&cfg, &base, &refs[0..1], &mut a0, s, 6).unwrap();
+        serve_greedy(&cfg, &base, &refs[1..2], &mut a1, s, 6).unwrap();
+        assert_ne!(a0, a1, "adapters 0 and 1 decoded identically");
+    }
+
+    #[test]
+    fn nan_inf_poisoned_adapter_stays_bit_identical() {
+        // kernel-oracle convention: non-finite values must propagate the
+        // same way through the batched and sequential paths
+        let cfg = TransformerConfig::tiny();
+        let base = cfg.init(6);
+        let mut adapters: Vec<AdapterParams> =
+            (0..2).map(|i| synthetic_adapter(&cfg, &base, 4, 200 + i)).collect();
+        {
+            let ad = LoraAdapter::new(cfg.param_shapes(), 4);
+            let mut train = ad.init_trainable(&base, 300);
+            let bname = "lora_B/layer0/attn/wq";
+            *train.get_mut(bname).unwrap().at_mut(0, 0) = f32::NAN;
+            *train.get_mut(bname).unwrap().at_mut(1, 1) = f32::INFINITY;
+            adapters.push(AdapterParams::from_trainable(&train).unwrap());
+        }
+        let refs: Vec<&AdapterParams> = adapters.iter().collect();
+        let s = cfg.seq_len;
+        let mut toks: Vec<i32> = Vec::new();
+        for bi in 0..3 {
+            toks.extend(prompt_tokens(&cfg, 1, bi));
+        }
+        let batched = serve_prefill(&cfg, &base, &refs, &toks, s).unwrap();
+        // the poisoned request's activations are non-finite...
+        let d = cfg.dims.d_model;
+        assert!(batched.data[2 * s * d..].iter().any(|v| !v.is_finite()));
+        // ...the clean requests' are not (panel isolation)...
+        assert!(batched.data[..2 * s * d].iter().all(|v| v.is_finite()));
+        // ...and all three panels bit-match their sequential runs
+        for bi in 0..3 {
+            let solo =
+                serve_prefill(&cfg, &base, &refs[bi..bi + 1], &toks[bi * s..(bi + 1) * s], s)
+                    .unwrap();
+            for (g, w) in batched.data[bi * s * d..(bi + 1) * s * d].iter().zip(solo.data.iter())
+            {
+                assert_eq!(g.to_bits(), w.to_bits(), "request {bi}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_validates_inputs() {
+        let cfg = TransformerConfig::tiny();
+        let params = cfg.init(0);
+        let mut toks = vec![0i32; cfg.seq_len];
+        assert!(greedy_kv(&cfg, &params, &mut toks, 0, cfg.seq_len, 2).is_err());
+        assert!(greedy_kv(&cfg, &params, &mut toks, 1, cfg.seq_len + 9, 2).is_err());
+        let mut bad = vec![99i32; cfg.seq_len];
+        assert!(greedy_kv(&cfg, &params, &mut bad, 1, cfg.seq_len, 2).is_err());
+        // prompt covering the whole window is a no-op, not an error
+        let mut full = vec![1i32; cfg.seq_len];
+        let before = full.clone();
+        greedy_kv(&cfg, &params, &mut full, 1, cfg.seq_len, cfg.seq_len).unwrap();
+        assert_eq!(full, before);
+    }
+}

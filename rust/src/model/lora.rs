@@ -9,6 +9,7 @@
 use super::{is_projectable, pget, ParamSet};
 use crate::tensor::Matrix;
 use crate::util::rng::{derive_seed, Rng};
+use std::collections::BTreeMap;
 
 /// Bookkeeping for the LoRA parameterization of one base parameter set.
 pub struct LoraAdapter {
@@ -116,6 +117,103 @@ impl LoraAdapter {
     }
 }
 
+/// One adapter's state in the form the serving tier consumes: the
+/// low-rank factors kept **split** (`B ∈ R^{n×r}`, `A ∈ R^{r×m}` per
+/// projected weight, keyed by the base parameter name) plus the
+/// passthrough parameters (embeddings, norm scales) that LoRA trains
+/// directly. The split form is the whole point: the serve forward
+/// contracts `(x·B)·A` per request and never materializes `B·A`, so a
+/// rank-8 adapter for lora-base stays ~292 KiB of state instead of a
+/// full merged weight copy — cheap enough to hot-load and evict.
+#[derive(Clone, Debug)]
+pub struct AdapterParams {
+    pub rank: usize,
+    low_rank: BTreeMap<String, (Matrix, Matrix)>,
+    passthrough: ParamSet,
+}
+
+impl AdapterParams {
+    /// Split a trainable parameter set (the `train/` state-group layout:
+    /// `lora_B/{name}` + `lora_A/{name}` pairs plus passthrough tensors,
+    /// as produced by [`LoraAdapter::init_trainable`] or restored from a
+    /// checkpoint) into serving form. The rank is inferred from the `A`
+    /// factors; mismatched or unpaired factors are an error.
+    pub fn from_trainable(train: &ParamSet) -> Result<Self, String> {
+        let mut low_rank: BTreeMap<String, (Matrix, Matrix)> = BTreeMap::new();
+        let mut passthrough = ParamSet::new();
+        let mut rank = None;
+        for (name, value) in train {
+            if let Some(base_name) = name.strip_prefix("lora_A/") {
+                let bname = format!("lora_B/{base_name}");
+                let b = train
+                    .get(&bname)
+                    .ok_or_else(|| format!("adapter: {name} has no paired {bname}"))?;
+                if b.cols != value.rows {
+                    return Err(format!(
+                        "adapter: {base_name} factor shapes B[{},{}] / A[{},{}] do not chain",
+                        b.rows, b.cols, value.rows, value.cols
+                    ));
+                }
+                match rank {
+                    None => rank = Some(value.rows),
+                    Some(r) if r != value.rows => {
+                        return Err(format!(
+                            "adapter: mixed ranks {r} and {} (at {base_name})",
+                            value.rows
+                        ))
+                    }
+                    _ => {}
+                }
+                low_rank.insert(base_name.to_string(), (b.clone(), value.clone()));
+            } else if let Some(base_name) = name.strip_prefix("lora_B/") {
+                if !train.contains_key(&format!("lora_A/{base_name}")) {
+                    return Err(format!("adapter: {name} has no paired lora_A/{base_name}"));
+                }
+            } else {
+                passthrough.insert(name.clone(), value.clone());
+            }
+        }
+        let rank = rank.ok_or_else(|| "adapter: no lora_A/* factors found".to_string())?;
+        Ok(Self { rank, low_rank, passthrough })
+    }
+
+    /// The split `(B, A)` factors for base parameter `name`, if it is a
+    /// projected (adapted) weight.
+    pub fn low_rank(&self, name: &str) -> Option<(&Matrix, &Matrix)> {
+        self.low_rank.get(name).map(|(b, a)| (b, a))
+    }
+
+    /// The adapter's own value for a passthrough parameter (embedding
+    /// table, norm scale) — serving uses these per request, because LoRA
+    /// trains them directly.
+    pub fn passthrough(&self, name: &str) -> Option<&Matrix> {
+        self.passthrough.get(name)
+    }
+
+    /// Number of projected weights this adapter patches.
+    pub fn num_projected(&self) -> usize {
+        self.low_rank.len()
+    }
+
+    /// Total scalars of adapter state (factors + passthrough).
+    pub fn param_count(&self) -> usize {
+        let lr: usize = self
+            .low_rank
+            .values()
+            .map(|(b, a)| b.rows * b.cols + a.rows * a.cols)
+            .sum();
+        let pt: usize = self.passthrough.values().map(|m| m.rows * m.cols).sum();
+        lr + pt
+    }
+
+    /// Resident bytes of adapter state (f32 payload only) — the number
+    /// the registry's capacity accounting and `docs/SERVING.md`'s
+    /// lifecycle math quote.
+    pub fn state_bytes(&self) -> usize {
+        4 * self.param_count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +291,43 @@ mod tests {
         assert!(tg["lora_A/layer0/attn/wq"].allclose(&b.matmul_tn(dw), 1e-6));
         // passthrough gradients flow verbatim
         assert!(tg["embed/tok"].allclose(&dmerged["embed/tok"], 0.0));
+    }
+
+    #[test]
+    fn adapter_params_split_roundtrips_the_trainable_set() {
+        let (cfg, ad) = adapter(4);
+        let base = cfg.init(0);
+        let train = ad.init_trainable(&base, 7);
+        let ap = AdapterParams::from_trainable(&train).unwrap();
+        assert_eq!(ap.rank, 4);
+        assert_eq!(ap.num_projected(), 6); // 1 layer: wq wk wv wo w1 w2
+        let (b, a) = ap.low_rank("layer0/attn/wq").unwrap();
+        assert!(b.allclose(&train["lora_B/layer0/attn/wq"], 0.0));
+        assert!(a.allclose(&train["lora_A/layer0/attn/wq"], 0.0));
+        assert!(ap.low_rank("embed/tok").is_none());
+        assert!(ap.passthrough("embed/tok").unwrap().allclose(&train["embed/tok"], 0.0));
+        let want: usize = train.values().map(|m| m.rows * m.cols).sum();
+        assert_eq!(ap.param_count(), want);
+        assert_eq!(ap.state_bytes(), 4 * want);
+    }
+
+    #[test]
+    fn adapter_params_rejects_malformed_sets() {
+        let (cfg, ad) = adapter(4);
+        let base = cfg.init(0);
+        let train = ad.init_trainable(&base, 7);
+        // unpaired A
+        let mut broken = train.clone();
+        broken.remove("lora_B/layer0/attn/wq");
+        assert!(AdapterParams::from_trainable(&broken).is_err());
+        // unpaired B
+        let mut broken = train.clone();
+        broken.remove("lora_A/layer0/attn/wq");
+        assert!(AdapterParams::from_trainable(&broken).is_err());
+        // no factors at all
+        let mut none = ParamSet::new();
+        none.insert("embed/tok".into(), Matrix::zeros(2, 2));
+        assert!(AdapterParams::from_trainable(&none).is_err());
     }
 
     #[test]

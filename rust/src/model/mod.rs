@@ -23,13 +23,14 @@
 //! wholesale.
 
 pub mod blocks;
+pub mod decode;
 pub(crate) mod head;
 pub mod lora;
 pub mod transformer;
 pub mod vit;
 
 pub use blocks::BlockDims;
-pub use lora::LoraAdapter;
+pub use lora::{AdapterParams, LoraAdapter};
 pub use transformer::TransformerConfig;
 pub use vit::VitConfig;
 

@@ -288,6 +288,22 @@ impl TransformerConfig {
         }
         Ok(())
     }
+
+    /// [`greedy`](Self::greedy) on the KV-cache incremental engine
+    /// (`model::decode`): one position per step against cached
+    /// keys/values instead of a full recompute. Emits token-for-token
+    /// the same continuation — see `decode`'s module docs for why the
+    /// equality is token-level, not activation-bit-level.
+    pub fn greedy_kv(
+        &self,
+        params: &ParamSet,
+        tokens: &mut [i32],
+        rows: usize,
+        s: usize,
+        prompt_len: usize,
+    ) -> Result<(), String> {
+        super::decode::greedy_kv(self, params, tokens, rows, s, prompt_len)
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,327 @@
+//! The serving tier's adapter registry: a capacity-bounded, LRU-evicting
+//! cache of resident [`AdapterParams`], hot-loadable from training
+//! checkpoints. The paper's observation that adapters are *seeded random
+//! projections with tiny state* is what makes this registry cheap: a
+//! rank-8 lora-base adapter is ~292 KiB resident, so hundreds fit where
+//! one merged weight copy would live, and a miss costs one checkpoint
+//! read plus a factor split — no base-weight traffic at all.
+//!
+//! Provenance is recorded per entry ([`AdapterProvenance`]): either the
+//! checkpoint path the `train/` state group was restored from, or the
+//! seed a synthetic (demo/bench) adapter was derived with — the
+//! lifecycle contract `docs/SERVING.md` §2 documents.
+//!
+//! The registry pins one rank per process (first insert wins): the
+//! batcher groups requests only by shape, and [`serve_greedy`]'s batched
+//! `(x·B)·A` corrections need every panel's factors to share `[n, r]` /
+//! `[r, m]` shapes. Mixed-rank fleets run as separate registries.
+//!
+//! [`serve_greedy`]: crate::model::decode::serve_greedy
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::model::{AdapterParams, LoraAdapter, ParamSet, TransformerConfig};
+use crate::tensor::Matrix;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Where an adapter's state came from — kept with the entry so serving
+/// responses and bench snapshots can be traced back to training runs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdapterProvenance {
+    /// Restored from the `train/` state group of this checkpoint file.
+    Checkpoint(String),
+    /// Synthesized in-process from this seed (demo and bench traffic).
+    Synthetic { seed: u64 },
+}
+
+/// Lifecycle counters, reported by `flora serve` and the smoke tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdapterStats {
+    pub loads: usize,
+    pub evictions: usize,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+struct Entry {
+    params: AdapterParams,
+    provenance: AdapterProvenance,
+    last_used: u64,
+}
+
+/// Capacity-bounded LRU cache of resident adapters, keyed by name.
+///
+/// ```
+/// use flora::model::TransformerConfig;
+/// use flora::runtime::AdapterRegistry;
+///
+/// let cfg = TransformerConfig::tiny();
+/// let base = cfg.init(0);
+/// let mut reg = AdapterRegistry::new(2);
+/// reg.insert_synthetic("alice", &cfg, &base, 4, 1).unwrap();
+/// reg.insert_synthetic("bob", &cfg, &base, 4, 2).unwrap();
+/// assert_eq!(reg.len(), 2);
+/// assert_eq!(reg.rank(), Some(4));
+///
+/// // touching "alice" makes "bob" the LRU entry, so a third insert
+/// // at capacity 2 evicts "bob"
+/// assert!(reg.get("alice").is_some());
+/// reg.insert_synthetic("carol", &cfg, &base, 4, 3).unwrap();
+/// assert!(reg.get("bob").is_none());
+/// assert!(reg.get("alice").is_some());
+/// assert_eq!(reg.stats().evictions, 1);
+/// ```
+pub struct AdapterRegistry {
+    capacity: usize,
+    entries: BTreeMap<String, Entry>,
+    rank: Option<usize>,
+    tick: u64,
+    stats: AdapterStats,
+}
+
+impl AdapterRegistry {
+    /// A registry holding at most `capacity` resident adapters.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "adapter registry capacity must be >= 1");
+        Self {
+            capacity,
+            entries: BTreeMap::new(),
+            rank: None,
+            tick: 0,
+            stats: AdapterStats::default(),
+        }
+    }
+
+    /// Insert (or replace) an adapter, evicting the least-recently-used
+    /// resident entry if the registry is at capacity. The first insert
+    /// pins the registry's rank; later inserts must match it.
+    pub fn insert(
+        &mut self,
+        name: &str,
+        params: AdapterParams,
+        provenance: AdapterProvenance,
+    ) -> Result<(), String> {
+        match self.rank {
+            None => self.rank = Some(params.rank),
+            Some(r) if r != params.rank => {
+                return Err(format!(
+                    "adapter {name:?} has rank {} but the registry serves rank {r}",
+                    params.rank
+                ))
+            }
+            _ => {}
+        }
+        if !self.entries.contains_key(name) && self.entries.len() >= self.capacity {
+            if let Some(lru) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(n, _)| n.clone())
+            {
+                self.entries.remove(&lru);
+                self.stats.evictions += 1;
+            }
+        }
+        self.tick += 1;
+        self.entries
+            .insert(name.to_string(), Entry { params, provenance, last_used: self.tick });
+        self.stats.loads += 1;
+        Ok(())
+    }
+
+    /// Load an adapter from the `train/` state group of a training
+    /// checkpoint (`Trainer::save_checkpoint`'s format). Returns the
+    /// inferred rank.
+    pub fn load_checkpoint(&mut self, name: &str, path: &str) -> Result<usize, String> {
+        let ck = Checkpoint::load(path)?;
+        let group = ck
+            .groups
+            .iter()
+            .find(|g| g.name == "train")
+            .ok_or_else(|| format!("checkpoint {path} has no `train` state group"))?;
+        let mut train = ParamSet::new();
+        for (spec, data) in &group.tensors {
+            let key = spec.name.strip_prefix("train/").unwrap_or(&spec.name);
+            let (rows, cols) = match spec.shape.len() {
+                2 => (spec.shape[0], spec.shape[1]),
+                1 => (1, spec.shape[0]),
+                n => {
+                    return Err(format!(
+                        "checkpoint {path}: tensor {} has unsupported rank {n}",
+                        spec.name
+                    ))
+                }
+            };
+            if rows * cols != data.len() {
+                return Err(format!(
+                    "checkpoint {path}: tensor {} shape/payload mismatch",
+                    spec.name
+                ));
+            }
+            train.insert(key.to_string(), Matrix::from_vec(rows, cols, data.clone()));
+        }
+        let params = AdapterParams::from_trainable(&train)?;
+        let rank = params.rank;
+        self.insert(name, params, AdapterProvenance::Checkpoint(path.to_string()))?;
+        Ok(rank)
+    }
+
+    /// Insert a seeded synthetic adapter: `LoraAdapter::init_trainable`
+    /// state with each `B` factor perturbed to a small Gaussian (a
+    /// zero `B` would make every adapter serve base-model outputs).
+    /// Demo and bench traffic only — real serving loads checkpoints.
+    pub fn insert_synthetic(
+        &mut self,
+        name: &str,
+        cfg: &TransformerConfig,
+        base: &ParamSet,
+        rank: usize,
+        seed: u64,
+    ) -> Result<(), String> {
+        let ad = LoraAdapter::new(cfg.param_shapes(), rank);
+        let mut train = ad.init_trainable(base, seed);
+        let bnames: Vec<String> =
+            train.keys().filter(|n| n.starts_with("lora_B/")).cloned().collect();
+        for (i, bname) in bnames.iter().enumerate() {
+            let m = train.get_mut(bname).unwrap();
+            let mut rng = Rng::new(derive_seed(seed ^ 0x5e21, i as u64));
+            rng.fill_gaussian(&mut m.data, 0.05);
+        }
+        let params = AdapterParams::from_trainable(&train)?;
+        self.insert(name, params, AdapterProvenance::Synthetic { seed })
+    }
+
+    /// Fetch a resident adapter, marking it most-recently-used.
+    pub fn get(&mut self, name: &str) -> Option<&AdapterParams> {
+        if !self.entries.contains_key(name) {
+            self.stats.misses += 1;
+            return None;
+        }
+        self.tick += 1;
+        self.stats.hits += 1;
+        let e = self.entries.get_mut(name).unwrap();
+        e.last_used = self.tick;
+        Some(&self.entries[name].params)
+    }
+
+    /// Fetch one batch's adapters in request order (all marked used).
+    /// Errors on the first non-resident name — the serve executor treats
+    /// that as a routing bug, not a cache miss to absorb silently.
+    pub fn get_many(&mut self, names: &[String]) -> Result<Vec<&AdapterParams>, String> {
+        for n in names {
+            if !self.entries.contains_key(n) {
+                self.stats.misses += 1;
+                return Err(format!("adapter {n:?} is not resident"));
+            }
+        }
+        for n in names {
+            self.tick += 1;
+            self.stats.hits += 1;
+            self.entries.get_mut(n).unwrap().last_used = self.tick;
+        }
+        Ok(names.iter().map(|n| &self.entries[n].params).collect())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn provenance(&self, name: &str) -> Option<&AdapterProvenance> {
+        self.entries.get(name).map(|e| &e.provenance)
+    }
+
+    /// Resident adapter names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The rank every resident adapter shares (None while empty).
+    pub fn rank(&self) -> Option<usize> {
+        self.rank
+    }
+
+    /// Total resident adapter state in bytes (f32 payload).
+    pub fn state_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.params.state_bytes()).sum()
+    }
+
+    pub fn stats(&self) -> AdapterStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_registry(capacity: usize) -> (TransformerConfig, ParamSet, AdapterRegistry) {
+        let cfg = TransformerConfig::tiny();
+        let base = cfg.init(0);
+        (cfg, base, AdapterRegistry::new(capacity))
+    }
+
+    #[test]
+    fn lru_eviction_follows_recency_not_insertion() {
+        let (cfg, base, mut reg) = tiny_registry(2);
+        reg.insert_synthetic("a", &cfg, &base, 4, 1).unwrap();
+        reg.insert_synthetic("b", &cfg, &base, 4, 2).unwrap();
+        assert!(reg.get("a").is_some()); // "b" is now LRU
+        reg.insert_synthetic("c", &cfg, &base, 4, 3).unwrap();
+        assert!(reg.contains("a") && reg.contains("c") && !reg.contains("b"));
+        let st = reg.stats();
+        assert_eq!((st.loads, st.evictions), (3, 1));
+    }
+
+    #[test]
+    fn reinsert_does_not_evict() {
+        let (cfg, base, mut reg) = tiny_registry(2);
+        reg.insert_synthetic("a", &cfg, &base, 4, 1).unwrap();
+        reg.insert_synthetic("b", &cfg, &base, 4, 2).unwrap();
+        reg.insert_synthetic("a", &cfg, &base, 4, 9).unwrap(); // replace in place
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.stats().evictions, 0);
+        assert_eq!(reg.provenance("a"), Some(&AdapterProvenance::Synthetic { seed: 9 }));
+    }
+
+    #[test]
+    fn rank_is_pinned_by_first_insert() {
+        let (cfg, base, mut reg) = tiny_registry(4);
+        reg.insert_synthetic("a", &cfg, &base, 4, 1).unwrap();
+        let err = reg.insert_synthetic("b", &cfg, &base, 8, 2).unwrap_err();
+        assert!(err.contains("rank"), "{err}");
+        assert_eq!(reg.rank(), Some(4));
+    }
+
+    #[test]
+    fn get_many_preserves_order_and_errors_on_missing() {
+        let (cfg, base, mut reg) = tiny_registry(4);
+        reg.insert_synthetic("a", &cfg, &base, 4, 1).unwrap();
+        reg.insert_synthetic("b", &cfg, &base, 4, 2).unwrap();
+        let names = vec!["b".to_string(), "a".to_string(), "b".to_string()];
+        let got = reg.get_many(&names).unwrap();
+        assert_eq!(got.len(), 3);
+        assert!(std::ptr::eq(got[0], got[2]));
+        assert!(reg.get_many(&["ghost".to_string()]).is_err());
+        assert_eq!(reg.stats().misses, 1);
+    }
+
+    #[test]
+    fn state_bytes_track_residency() {
+        let (cfg, base, mut reg) = tiny_registry(4);
+        assert_eq!(reg.state_bytes(), 0);
+        reg.insert_synthetic("a", &cfg, &base, 4, 1).unwrap();
+        let one = reg.state_bytes();
+        assert!(one > 0);
+        reg.insert_synthetic("b", &cfg, &base, 4, 2).unwrap();
+        assert_eq!(reg.state_bytes(), 2 * one);
+    }
+}

@@ -15,17 +15,26 @@
 //!     **text** — xla_extension 0.5.1 rejects jax≥0.5 serialized protos
 //!     (64-bit instruction ids); the text parser reassigns ids (DESIGN.md
 //!     §8).
+//!
+//! The **serving tier** ([`adapters`] + [`serve`]) also lives here: a
+//! capacity-bounded LRU adapter registry and a dynamic batcher feeding
+//! the KV-cache multi-adapter decode of `model::decode`, behind the
+//! `flora serve` subcommand. `docs/SERVING.md` is the handbook.
 
+pub mod adapters;
 pub mod backend;
 pub mod client;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "xla")]
 pub mod pjrt;
+pub mod serve;
 pub mod state;
 pub mod values;
 
+pub use adapters::{AdapterProvenance, AdapterRegistry, AdapterStats};
 pub use backend::{Backend, BackendExec};
+pub use serve::{BatchPolicy, Batcher, Server, ServeRequest, ServeResponse};
 pub use client::{Executable, Runtime};
 pub use manifest::{Manifest, ModelInfo, TensorSpec};
 pub use native::{catalog_summary, native_manifest, NativeBackend};

@@ -1,0 +1,455 @@
+//! `flora serve`'s execution core: a request queue with dynamic batching
+//! (max-batch + max-wait policy), and a driver that runs each formed
+//! batch through the KV-cache multi-adapter decode
+//! (`model::decode::serve_greedy`).
+//!
+//! Batches are **shape-homogeneous**: the batcher only groups requests
+//! that share `(prompt_len, max_new)`. The alternative — padding ragged
+//! prompts — would change the GEMM row sets and could flip `-0.0` sums
+//! to `+0.0`, breaking the tier's bit-compare oracle; grouping by shape
+//! keeps every batched request bit-identical to its solo run (the
+//! latency cost of waiting for shape-mates is bounded by `max_wait_ms`).
+//! Adapter-rank homogeneity is the registry's job
+//! ([`AdapterRegistry`](super::AdapterRegistry) pins one rank), so any
+//! mix of *adapters* can share a batch — that is the whole point.
+//!
+//! Time is a caller-supplied millisecond clock, so batching policy is
+//! deterministic and unit-testable; `flora serve` feeds it a synthetic
+//! arrival schedule, wall-clock only enters the measured latencies.
+
+use super::adapters::AdapterRegistry;
+use crate::model::decode::{serve_greedy, serve_prefill};
+use crate::model::{AdapterParams, ParamSet, TransformerConfig};
+use std::collections::VecDeque;
+
+/// One inference request: decode `max_new` tokens greedily after
+/// `prompt`, under the named adapter.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub adapter: String,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub arrival_ms: u64,
+}
+
+/// A finished request: the full token stream (prompt + continuation)
+/// plus the batching telemetry the bench records.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub adapter: String,
+    pub tokens: Vec<i32>,
+    /// generated suffix length
+    pub new_tokens: usize,
+    /// time spent queued before the batch formed
+    pub queue_ms: u64,
+    /// size of the batch this request decoded in
+    pub batch_size: usize,
+}
+
+/// Dynamic-batching policy: close a batch as soon as `max_batch`
+/// shape-compatible requests are queued, or once the oldest has waited
+/// `max_wait_ms` — the standard latency/throughput dial
+/// (`docs/SERVING.md` §3).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait_ms: 50 }
+    }
+}
+
+/// FIFO request queue + batch former. Purely synchronous: `push`
+/// enqueues, [`form_batch`](Batcher::form_batch) decides.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<ServeRequest>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        Self { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: ServeRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Try to close a batch at `now_ms`: take the oldest request plus
+    /// every queued shape-mate (same `(prompt_len, max_new)`), FIFO, up
+    /// to `max_batch`. Returns `None` while the group is still short of
+    /// `max_batch` AND the oldest request has waited under
+    /// `max_wait_ms` — unless `force` (drain/shutdown) is set.
+    pub fn form_batch(&mut self, now_ms: u64, force: bool) -> Option<Vec<ServeRequest>> {
+        let head = self.queue.front()?;
+        let key = (head.prompt.len(), head.max_new);
+        let group = self
+            .queue
+            .iter()
+            .filter(|r| (r.prompt.len(), r.max_new) == key)
+            .count()
+            .min(self.policy.max_batch);
+        let waited = now_ms.saturating_sub(head.arrival_ms);
+        if group < self.policy.max_batch && waited < self.policy.max_wait_ms && !force {
+            return None;
+        }
+        let mut batch = Vec::with_capacity(group);
+        let mut rest = VecDeque::with_capacity(self.queue.len() - group);
+        while let Some(r) = self.queue.pop_front() {
+            if batch.len() < self.policy.max_batch && (r.prompt.len(), r.max_new) == key {
+                batch.push(r);
+            } else {
+                rest.push_back(r);
+            }
+        }
+        self.queue = rest;
+        Some(batch)
+    }
+}
+
+/// Telemetry for one executed batch.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    pub batch_size: usize,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    pub adapters: Vec<String>,
+}
+
+/// The one-process serve driver: owns the base weights, the adapter
+/// registry and the batcher; [`step`](Server::step) forms and executes
+/// one batch, [`drain`](Server::drain) flushes the queue.
+pub struct Server {
+    cfg: TransformerConfig,
+    base: ParamSet,
+    pub registry: AdapterRegistry,
+    batcher: Batcher,
+    next_id: u64,
+    responses: Vec<ServeResponse>,
+}
+
+impl Server {
+    pub fn new(
+        cfg: TransformerConfig,
+        base: ParamSet,
+        registry: AdapterRegistry,
+        policy: BatchPolicy,
+    ) -> Self {
+        Self { cfg, base, registry, batcher: Batcher::new(policy), next_id: 0, responses: Vec::new() }
+    }
+
+    pub fn config(&self) -> &TransformerConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a request; returns its id. Validates shape and adapter
+    /// residency up front so malformed requests fail at submission, not
+    /// mid-batch.
+    pub fn submit(
+        &mut self,
+        adapter: &str,
+        prompt: Vec<i32>,
+        max_new: usize,
+        now_ms: u64,
+    ) -> Result<u64, String> {
+        if prompt.is_empty() {
+            return Err("empty prompt".into());
+        }
+        if max_new == 0 {
+            return Err("max_new must be >= 1".into());
+        }
+        if prompt.len() + max_new > self.cfg.seq_len {
+            return Err(format!(
+                "prompt {} + max_new {max_new} exceeds seq_len {}",
+                prompt.len(),
+                self.cfg.seq_len
+            ));
+        }
+        for &t in &prompt {
+            if t < 0 || t as usize >= self.cfg.vocab {
+                return Err(format!("token id {t} out of range for vocab {}", self.cfg.vocab));
+            }
+        }
+        if !self.registry.contains(adapter) {
+            return Err(format!("adapter {adapter:?} is not resident"));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.batcher.push(ServeRequest {
+            id,
+            adapter: adapter.to_string(),
+            prompt,
+            max_new,
+            arrival_ms: now_ms,
+        });
+        Ok(id)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Form and execute at most one batch at `now_ms`. Returns the
+    /// batch's telemetry, or `None` if the policy kept the queue open.
+    pub fn step(&mut self, now_ms: u64, force: bool) -> Result<Option<BatchReport>, String> {
+        let Some(batch) = self.batcher.form_batch(now_ms, force) else {
+            return Ok(None);
+        };
+        let b = batch.len();
+        let prompt_len = batch[0].prompt.len();
+        let max_new = batch[0].max_new;
+        let s = prompt_len + max_new;
+        let mut tokens = vec![0i32; b * s];
+        for (bi, r) in batch.iter().enumerate() {
+            tokens[bi * s..bi * s + prompt_len].copy_from_slice(&r.prompt);
+        }
+        let names: Vec<String> = batch.iter().map(|r| r.adapter.clone()).collect();
+        {
+            let adapters = self.registry.get_many(&names)?;
+            serve_greedy(&self.cfg, &self.base, &adapters, &mut tokens, s, prompt_len)?;
+        }
+        for (bi, r) in batch.iter().enumerate() {
+            self.responses.push(ServeResponse {
+                id: r.id,
+                adapter: r.adapter.clone(),
+                tokens: tokens[bi * s..(bi + 1) * s].to_vec(),
+                new_tokens: max_new,
+                queue_ms: now_ms.saturating_sub(r.arrival_ms),
+                batch_size: b,
+            });
+        }
+        Ok(Some(BatchReport { batch_size: b, prompt_len, new_tokens: max_new, adapters: names }))
+    }
+
+    /// Flush the queue (force-forming batches) and return how many
+    /// batches ran.
+    pub fn drain(&mut self, now_ms: u64) -> Result<usize, String> {
+        let mut n = 0;
+        while self.step(now_ms, true)?.is_some() {
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Take all finished responses accumulated so far.
+    pub fn take_responses(&mut self) -> Vec<ServeResponse> {
+        std::mem::take(&mut self.responses)
+    }
+}
+
+/// The serving tier's bit-compare oracle: run one batch of prompts with
+/// per-request adapters BOTH batched and as single-request forwards, and
+/// require (a) prefill activations byte-identical per request, and
+/// (b) greedy token streams identical. Returns the batched streams.
+///
+/// This is the acceptance gate `flora serve --verify` and the CI smoke
+/// job run; the integration suite calls it with NaN/Inf-poisoned
+/// adapters too.
+pub fn oracle_check(
+    cfg: &TransformerConfig,
+    base: &ParamSet,
+    adapters: &[&AdapterParams],
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>, String> {
+    let b = adapters.len();
+    if b == 0 || prompts.len() != b {
+        return Err(format!("oracle_check: {} adapters vs {} prompts", b, prompts.len()));
+    }
+    let prompt_len = prompts[0].len();
+    if prompts.iter().any(|p| p.len() != prompt_len) {
+        return Err("oracle_check: ragged prompts (batches are shape-homogeneous)".into());
+    }
+    let s = prompt_len + max_new;
+    let mut tokens = vec![0i32; b * s];
+    for (bi, p) in prompts.iter().enumerate() {
+        tokens[bi * s..bi * s + prompt_len].copy_from_slice(p);
+    }
+    // (a) prefill activations: batched vs per-request, exact bits
+    let batched = serve_prefill(cfg, base, adapters, &tokens, s)?;
+    let d = cfg.dims.d_model;
+    for bi in 0..b {
+        let solo =
+            serve_prefill(cfg, base, &adapters[bi..bi + 1], &tokens[bi * s..(bi + 1) * s], s)?;
+        let panel = &batched.data[bi * s * d..(bi + 1) * s * d];
+        for (j, (g, w)) in panel.iter().zip(solo.data.iter()).enumerate() {
+            if g.to_bits() != w.to_bits() {
+                return Err(format!(
+                    "prefill mismatch: request {bi} element {j}: batched {g:?} vs solo {w:?}"
+                ));
+            }
+        }
+    }
+    // (b) decoded token streams: batched vs per-request
+    let mut batch_toks = tokens.clone();
+    serve_greedy(cfg, base, adapters, &mut batch_toks, s, prompt_len)?;
+    let mut out = Vec::with_capacity(b);
+    for bi in 0..b {
+        let mut solo = tokens[bi * s..(bi + 1) * s].to_vec();
+        serve_greedy(cfg, base, &adapters[bi..bi + 1], &mut solo, s, prompt_len)?;
+        if batch_toks[bi * s..(bi + 1) * s] != solo[..] {
+            return Err(format!(
+                "decode mismatch: request {bi}: batched {:?} vs solo {:?}",
+                &batch_toks[bi * s..(bi + 1) * s],
+                &solo
+            ));
+        }
+        out.push(solo);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, plen: usize, max_new: usize, at: u64) -> ServeRequest {
+        ServeRequest {
+            id,
+            adapter: format!("a{id}"),
+            prompt: vec![1; plen],
+            max_new,
+            arrival_ms: at,
+        }
+    }
+
+    #[test]
+    fn batcher_waits_then_fires_on_max_wait() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait_ms: 50 });
+        b.push(req(0, 4, 2, 100));
+        b.push(req(1, 4, 2, 110));
+        assert!(b.form_batch(120, false).is_none(), "under max_wait with a short group");
+        let batch = b.form_batch(150, false).expect("max_wait elapsed");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn batcher_fires_immediately_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait_ms: 1000 });
+        b.push(req(0, 4, 2, 0));
+        b.push(req(1, 4, 2, 0));
+        b.push(req(2, 4, 2, 0));
+        let batch = b.form_batch(0, false).expect("max_batch reached");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn batcher_groups_by_shape_only() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait_ms: 0 });
+        b.push(req(0, 4, 2, 0));
+        b.push(req(1, 6, 2, 0)); // different prompt_len
+        b.push(req(2, 4, 3, 0)); // different max_new
+        b.push(req(3, 4, 2, 0)); // shape-mate of 0
+        let batch = b.form_batch(0, false).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
+        // the others stay queued in order
+        assert_eq!(b.pending(), 2);
+        let next = b.form_batch(0, false).unwrap();
+        assert_eq!(next[0].id, 1);
+    }
+
+    #[test]
+    fn empty_queue_never_forms() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.form_batch(1 << 40, true).is_none());
+    }
+
+    fn demo_server(max_batch: usize) -> Server {
+        let cfg = TransformerConfig::tiny();
+        let base = cfg.init(0);
+        let mut reg = AdapterRegistry::new(8);
+        for i in 0..3 {
+            reg.insert_synthetic(&format!("ad{i}"), &cfg, &base, 4, 10 + i as u64).unwrap();
+        }
+        Server::new(cfg, base, reg, BatchPolicy { max_batch, max_wait_ms: 50 })
+    }
+
+    #[test]
+    fn server_answers_mixed_adapter_batches() {
+        let mut srv = demo_server(4);
+        let plen = 8;
+        let mut ids = Vec::new();
+        for i in 0..3u64 {
+            let prompt: Vec<i32> = (0..plen).map(|j| ((3 + i as usize + 2 * j) % 64) as i32).collect();
+            ids.push(srv.submit(&format!("ad{i}"), prompt, 4, i * 5).unwrap());
+        }
+        assert!(srv.step(10, false).unwrap().is_none(), "policy holds the batch open");
+        let report = srv.step(60, false).unwrap().expect("max_wait elapsed");
+        assert_eq!(report.batch_size, 3);
+        assert_eq!(report.adapters, vec!["ad0", "ad1", "ad2"]);
+        let resp = srv.take_responses();
+        assert_eq!(resp.len(), 3);
+        for (r, id) in resp.iter().zip(&ids) {
+            assert_eq!(r.id, *id);
+            assert_eq!(r.tokens.len(), plen + 4);
+            assert_eq!(r.batch_size, 3);
+            // the prompt region is preserved verbatim
+            assert!(r.tokens[..plen].iter().all(|&t| (0..64).contains(&t)));
+        }
+        // each response bit-matches a solo rerun of the same request
+        for r in &resp {
+            let mut solo_reg = AdapterRegistry::new(8);
+            let cfg = TransformerConfig::tiny();
+            let base = cfg.init(0);
+            solo_reg
+                .insert_synthetic(&r.adapter, &cfg, &base, 4, 10 + r.adapter[2..].parse::<u64>().unwrap())
+                .unwrap();
+            let mut solo = Server::new(cfg, base, solo_reg, BatchPolicy { max_batch: 1, max_wait_ms: 0 });
+            solo.submit(&r.adapter, r.tokens[..plen].to_vec(), 4, 0).unwrap();
+            solo.drain(0).unwrap();
+            let sr = solo.take_responses();
+            assert_eq!(sr[0].tokens, r.tokens, "adapter {}", r.adapter);
+        }
+    }
+
+    #[test]
+    fn server_rejects_bad_submissions() {
+        let mut srv = demo_server(4);
+        assert!(srv.submit("ad0", vec![], 2, 0).is_err());
+        assert!(srv.submit("ad0", vec![1; 4], 0, 0).is_err());
+        assert!(srv.submit("ad0", vec![1; 20], 4, 0).is_err(), "overflows seq_len");
+        assert!(srv.submit("ad0", vec![-3; 4], 2, 0).is_err());
+        assert!(srv.submit("ghost", vec![1; 4], 2, 0).is_err());
+    }
+
+    #[test]
+    fn drain_flushes_mixed_shapes_as_separate_batches() {
+        let mut srv = demo_server(4);
+        srv.submit("ad0", vec![1; 4], 2, 0).unwrap();
+        srv.submit("ad1", vec![1; 6], 2, 0).unwrap();
+        srv.submit("ad2", vec![1; 4], 2, 0).unwrap();
+        let batches = srv.drain(0).unwrap();
+        assert_eq!(batches, 2, "two shape groups");
+        assert_eq!(srv.take_responses().len(), 3);
+        assert_eq!(srv.pending(), 0);
+    }
+
+    #[test]
+    fn oracle_check_passes_on_served_traffic() {
+        let cfg = TransformerConfig::tiny();
+        let base = cfg.init(0);
+        let mut reg = AdapterRegistry::new(8);
+        for i in 0..3 {
+            reg.insert_synthetic(&format!("ad{i}"), &cfg, &base, 4, 40 + i as u64).unwrap();
+        }
+        let names: Vec<String> = (0..3).map(|i| format!("ad{i}")).collect();
+        let adapters = reg.get_many(&names).unwrap();
+        let prompts: Vec<Vec<i32>> =
+            (0..3).map(|i| (0..8).map(|j| ((5 + i + 3 * j) % 64) as i32).collect()).collect();
+        let streams = oracle_check(&cfg, &base, &adapters, &prompts, 4).unwrap();
+        assert_eq!(streams.len(), 3);
+        assert!(streams.iter().all(|s| s.len() == 12));
+    }
+}

@@ -48,6 +48,17 @@ impl BatchedMatrix {
         Matrix::from_vec(self.rows, self.cols, self.panel(b).to_vec())
     }
 
+    /// Reinterpret a `[batch*rows, cols]` activation matrix as `batch`
+    /// contiguous `[rows, cols]` panels (request `p` owns rows
+    /// `[p*rows, (p+1)*rows)`). Row-major layout makes this a pure copy
+    /// with no reindexing — the serving tier uses it to turn one stacked
+    /// activation into the per-request panels that
+    /// [`batched_matmul_ops`] contracts against per-request adapters.
+    pub fn from_matrix(x: &Matrix, batch: usize) -> Self {
+        assert!(batch > 0 && x.rows % batch == 0, "from_matrix: {} rows not divisible by batch {}", x.rows, batch);
+        Self { batch, rows: x.rows / batch, cols: x.cols, data: x.data.clone() }
+    }
+
     /// In-place elementwise scale (e.g. folding the attention score scale
     /// into a cotangent before the backward GEMMs).
     pub fn scale_inplace(&mut self, s: f32) {
@@ -203,17 +214,107 @@ pub fn batched_matmul_tn(a: &BatchedMatrix, b: &BatchedMatrix) -> BatchedMatrix 
     out
 }
 
+/// `C[p] = A[p] @ ops[p]` — one batched GEMM where every panel contracts
+/// against its **own** right-hand operand. This is the serving-tier
+/// primitive: with `A = [batch, s, n]` request activations and
+/// `ops[p]` request `p`'s adapter factor, one call applies `batch`
+/// *distinct* adapters in the `(xB)A` contraction order without ever
+/// materializing any `B·A` product. All operands must share one
+/// `[k, m]` shape (the batcher guarantees rank-homogeneous batches).
+///
+/// Numerics: each panel runs the same serial `matmul_band` body the
+/// per-panel `Matrix::matmul` uses, so panel `p` is bit-identical to
+/// `a.to_matrix(p).matmul(ops[p])` — including NaN/Inf propagation.
+pub fn batched_matmul_ops(a: &BatchedMatrix, ops: &[&Matrix]) -> BatchedMatrix {
+    assert_eq!(a.batch, ops.len(), "batched_matmul_ops: {} panels vs {} operands", a.batch, ops.len());
+    let (k, m) = ops[0].shape();
+    for (p, op) in ops.iter().enumerate() {
+        assert_eq!(op.shape(), (k, m), "batched_matmul_ops: operand {p} shape mismatch");
+    }
+    assert_eq!(a.cols, k, "batched_matmul_ops [{},{}] @ [{},{}]", a.rows, a.cols, k, m);
+    let mut out = BatchedMatrix::zeros(a.batch, a.rows, m);
+    let n = a.rows;
+    let flops = a.batch * n * k * m;
+    par_rows(&mut out.data, a.batch, n * m, flops, |chunk, first, count| {
+        for p in 0..count {
+            matmul_band(
+                &mut chunk[p * n * m..(p + 1) * n * m],
+                &a.data[(first + p) * n * k..(first + p + 1) * n * k],
+                &ops[first + p].data,
+                n,
+                k,
+                m,
+            );
+        }
+    });
+    out
+}
+
+/// Add panel `p` of `src: [batch, rows, w]` into the column window
+/// `[col0, col0+w)` of rows `[p*rows, (p+1)*rows)` of `dst`. The serving
+/// forward uses this to accumulate per-request `(xB)A` adapter
+/// corrections into the q/k/v thirds of the fused base projection.
+pub fn add_panels_at(dst: &mut Matrix, src: &BatchedMatrix, col0: usize) {
+    assert_eq!(dst.rows, src.batch * src.rows, "add_panels_at row mismatch");
+    assert!(col0 + src.cols <= dst.cols, "add_panels_at window oob");
+    let w = dst.cols;
+    for p in 0..src.batch {
+        let panel = src.panel(p);
+        for i in 0..src.rows {
+            let r = p * src.rows + i;
+            let out = &mut dst.data[r * w + col0..r * w + col0 + src.cols];
+            for (o, s) in out.iter_mut().zip(&panel[i * src.cols..(i + 1) * src.cols]) {
+                *o += *s;
+            }
+        }
+    }
+}
+
 /// In-place numerically-stable softmax over every panel row. With
 /// `causal`, row `i` only attends to columns `0..=i`; masked columns get
 /// **exactly** zero probability — bit-identical to softmaxing a row whose
 /// masked scores were set to -1e30 (their exps underflow to +0 and add
 /// nothing to the denominator), which is what the scalar reference does.
 pub fn softmax_rows_masked(x: &mut BatchedMatrix, causal: bool) {
+    if causal {
+        return softmax_rows_masked_offset(x, 0);
+    }
     let (rows, cols) = (x.rows, x.cols);
     for p in 0..x.batch {
         let panel = x.panel_mut(p);
         for i in 0..rows {
-            let valid = if causal { (i + 1).min(cols) } else { cols };
+            let valid = cols;
+            let row = &mut panel[i * cols..(i + 1) * cols];
+            let mx = row[..valid].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut denom = 0.0f32;
+            for v in row[..valid].iter_mut() {
+                *v = (*v - mx).exp();
+                denom += *v;
+            }
+            for v in row[..valid].iter_mut() {
+                *v /= denom;
+            }
+            for v in row[valid..].iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Causal row-softmax for an **offset** score chunk: panel row `i`
+/// holds the scores of global position `t0 + i` against key columns
+/// `[0, cols)`, so it may attend to columns `0..=t0+i`. `t0 = 0` with
+/// `cols == rows` is exactly the [`softmax_rows_masked`] causal case
+/// (which delegates here); `rows = 1, t0 = t, cols = t+1` is one
+/// KV-cache decode step, where the whole row is valid. Masked columns
+/// get exactly zero probability, same convention as the full-recompute
+/// path.
+pub fn softmax_rows_masked_offset(x: &mut BatchedMatrix, t0: usize) {
+    let (rows, cols) = (x.rows, x.cols);
+    for p in 0..x.batch {
+        let panel = x.panel_mut(p);
+        for i in 0..rows {
+            let valid = (t0 + i + 1).min(cols);
             let row = &mut panel[i * cols..(i + 1) * cols];
             let mx = row[..valid].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
             let mut denom = 0.0f32;
@@ -332,6 +433,81 @@ mod tests {
         for p in 0..3 {
             let want = a.to_matrix(p).matmul_tn(&b2.to_matrix(p));
             assert!(ctn.to_matrix(p).allclose(&want, 0.0), "tn panel {p}");
+        }
+    }
+
+    #[test]
+    fn batched_matmul_ops_bit_matches_per_panel_matmul() {
+        // three panels, three *different* right operands — incl. one
+        // poisoned with NaN/Inf, per the kernel-oracle convention
+        let a = randb(21, 3, 4, 6);
+        let mut rng = Rng::new(22);
+        let mut ops: Vec<Matrix> = (0..3).map(|_| Matrix::gaussian(6, 5, 1.0, &mut rng)).collect();
+        *ops[1].at_mut(2, 3) = f32::NAN;
+        *ops[1].at_mut(0, 0) = f32::INFINITY;
+        let refs: Vec<&Matrix> = ops.iter().collect();
+        let c = batched_matmul_ops(&a, &refs);
+        assert_eq!((c.batch, c.rows, c.cols), (3, 4, 5));
+        for p in 0..3 {
+            let want = a.to_matrix(p).matmul(&ops[p]);
+            let got = c.to_matrix(p);
+            for (g, w) in got.data.iter().zip(want.data.iter()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "panel {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_matrix_panels_are_row_bands() {
+        let mut rng = Rng::new(23);
+        let x = Matrix::gaussian(6, 4, 1.0, &mut rng);
+        let panels = BatchedMatrix::from_matrix(&x, 3);
+        assert_eq!((panels.batch, panels.rows, panels.cols), (3, 2, 4));
+        for p in 0..3 {
+            for i in 0..2 {
+                assert_eq!(&panels.panel(p)[i * 4..(i + 1) * 4], x.row(p * 2 + i));
+            }
+        }
+    }
+
+    #[test]
+    fn add_panels_at_accumulates_into_column_window() {
+        let mut rng = Rng::new(24);
+        let base = Matrix::gaussian(4, 9, 1.0, &mut rng);
+        let corr = randb(25, 2, 2, 3);
+        let mut dst = base.clone();
+        add_panels_at(&mut dst, &corr, 3);
+        for p in 0..2 {
+            for i in 0..2 {
+                for j in 0..9 {
+                    let r = p * 2 + i;
+                    let want = if (3..6).contains(&j) {
+                        base.at(r, j) + corr.panel(p)[i * 3 + (j - 3)]
+                    } else {
+                        base.at(r, j)
+                    };
+                    assert_eq!(dst.at(r, j), want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn offset_softmax_matches_full_causal_window() {
+        // decode chunk [t0, t0+m) scored against all t0+m keys must
+        // reproduce rows t0.. of the full causal softmax bit-for-bit
+        let (b, s, t0) = (2usize, 6usize, 4usize);
+        let m = s - t0;
+        let full = randb(26, b, s, s);
+        let mut want = full.clone();
+        softmax_rows_masked(&mut want, true);
+        let mut chunk = BatchedMatrix::zeros(b, m, s);
+        for p in 0..b {
+            chunk.panel_mut(p).copy_from_slice(&full.panel(p)[t0 * s..]);
+        }
+        softmax_rows_masked_offset(&mut chunk, t0);
+        for p in 0..b {
+            assert_eq!(chunk.panel(p), &want.panel(p)[t0 * s..], "panel {p}");
         }
     }
 

@@ -26,8 +26,9 @@ mod matrix;
 mod ops;
 
 pub use batched::{
-    batched_matmul, batched_matmul_nt, batched_matmul_tn, gather_heads,
-    gather_heads_at, scatter_heads, scatter_heads_at, softmax_rows_masked,
+    add_panels_at, batched_matmul, batched_matmul_nt, batched_matmul_ops,
+    batched_matmul_tn, gather_heads, gather_heads_at, scatter_heads,
+    scatter_heads_at, softmax_rows_masked, softmax_rows_masked_offset,
     softmax_rows_vjp_batched, BatchedMatrix,
 };
 pub use kernels::{KernelDriver, Parallelism};

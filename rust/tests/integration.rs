@@ -1110,3 +1110,165 @@ fn ablation_notransfer_executable_runs() {
     let report = tr.run().unwrap();
     assert!(report.final_train_loss().is_finite());
 }
+
+// ---------------------------------------------------------------------
+// serving tier (native, always runs): KV-cache decode + multi-adapter
+// batching — the `flora serve` subsystem end-to-end
+// ---------------------------------------------------------------------
+
+use flora::model::{AdapterParams, LoraAdapter, ParamSet, TransformerConfig};
+use flora::runtime::serve::oracle_check;
+use flora::runtime::{AdapterRegistry, BatchPolicy, Server};
+use flora::util::rng::{derive_seed, Rng};
+
+/// A synthetic serving adapter: LoRA-initialized trainables with a small
+/// distinct gaussian B (B = 0 at init would collapse every adapter onto
+/// the base model and the heterogeneity tests would test nothing).
+fn serving_adapter(
+    cfg: &TransformerConfig,
+    base: &ParamSet,
+    rank: usize,
+    seed: u64,
+) -> AdapterParams {
+    let ad = LoraAdapter::new(cfg.param_shapes(), rank);
+    let mut train = ad.init_trainable(base, seed);
+    let names: Vec<String> =
+        train.keys().filter(|n| n.starts_with("lora_B/")).cloned().collect();
+    for (i, name) in names.iter().enumerate() {
+        let m = train.get_mut(name).unwrap();
+        let mut rng = Rng::new(derive_seed(seed ^ 0x5e21, i as u64));
+        rng.fill_gaussian(&mut m.data, 0.05);
+    }
+    AdapterParams::from_trainable(&train).unwrap()
+}
+
+fn serving_prompt(cfg: &TransformerConfig, req: usize, len: usize) -> Vec<i32> {
+    (0..len).map(|j| ((3 + req + 2 * j) % cfg.vocab) as i32).collect()
+}
+
+/// KV-cache greedy decode is token-for-token equal to the existing
+/// full-recompute greedy across the whole lora size grid (the regression
+/// gate for the serving decode engine). Equality is at the TOKEN level by
+/// design: the KV path's attention over a compacted cache can flip the
+/// sign of exact zeros, which argmax (strict `>`) cannot observe — see
+/// model::decode's module docs for the full argument.
+#[test]
+fn native_serving_kv_greedy_matches_full_recompute_across_grid() {
+    for (name, cfg) in TransformerConfig::catalog_grid() {
+        let params = cfg.init(7);
+        let s = cfg.seq_len;
+        let rows = 2;
+        for prompt_len in [1, (s / 2).max(1), s - 1] {
+            let mut template = vec![0i32; rows * s];
+            for bi in 0..rows {
+                template[bi * s..bi * s + prompt_len]
+                    .copy_from_slice(&serving_prompt(&cfg, bi, prompt_len));
+            }
+            let mut full = template.clone();
+            let mut kv = template;
+            cfg.greedy(&params, &mut full, rows, s, prompt_len).unwrap();
+            cfg.greedy_kv(&params, &mut kv, rows, s, prompt_len).unwrap();
+            assert_eq!(
+                full, kv,
+                "{name}: KV-cache greedy diverged from full recompute \
+                 (prompt_len {prompt_len})"
+            );
+        }
+    }
+}
+
+/// One batched forward over B requests with B DISTINCT adapters is
+/// bit-identical to B sequential single-adapter forwards — including an
+/// adapter poisoned with NaN/Inf, per the kernel-oracle convention
+/// (`oracle_check` compares prefill activations via `to_bits` and greedy
+/// streams token-for-token, erroring on any divergence).
+#[test]
+fn native_serving_batched_adapters_bit_match_sequential_oracle() {
+    for (name, cfg) in TransformerConfig::catalog_grid() {
+        if name == "lora-base" {
+            continue; // tiny + small keep the suite fast; bench covers base
+        }
+        let base = cfg.init(11);
+        let mut adapters: Vec<AdapterParams> = (0..2)
+            .map(|i| serving_adapter(&cfg, &base, 4, 100 + i))
+            .collect();
+        {
+            // heterogeneity includes non-finite values: a poisoned B must
+            // stay confined to its own request panel, bit-exactly
+            let ad = LoraAdapter::new(cfg.param_shapes(), 4);
+            let mut train = ad.init_trainable(&base, 300);
+            let b = train.get_mut("lora_B/layer0/attn/wq").unwrap();
+            *b.at_mut(0, 0) = f32::NAN;
+            *b.at_mut(1, 1) = f32::INFINITY;
+            adapters.push(AdapterParams::from_trainable(&train).unwrap());
+        }
+        let refs: Vec<&AdapterParams> = adapters.iter().collect();
+        let prompt_len = (cfg.seq_len / 2).max(1);
+        let max_new = (cfg.seq_len / 4).max(1);
+        let prompts: Vec<Vec<i32>> =
+            (0..refs.len()).map(|i| serving_prompt(&cfg, i, prompt_len)).collect();
+        oracle_check(&cfg, &base, &refs, &prompts, max_new)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+/// The full serving stack across layers: train a real LoRA adapter with
+/// the Trainer, save a checkpoint, hot-load it into the AdapterRegistry
+/// next to synthetic adapters, and answer a mixed-adapter workload whose
+/// served tokens bit-match the sequential oracle.
+#[test]
+fn native_serving_hot_loads_trained_checkpoint_and_serves() {
+    let mut c = tf_cfg(MethodSpec::Lora { rank: 4 }, TaskKind::Lm, 1, 3);
+    c.lr = tf_lr(OptimizerKind::Sgd, false);
+    let mut tr = Trainer::native(c).unwrap();
+    tr.run().unwrap();
+    let path = std::env::temp_dir().join("flora_serve_hotload_ckpt.bin");
+    let path_s = path.to_str().unwrap();
+    tr.save_checkpoint(path_s).unwrap();
+
+    let cfg = TransformerConfig::catalog_grid()
+        .into_iter()
+        .find(|(n, _)| *n == "lora-tiny")
+        .unwrap()
+        .1;
+    let base = cfg.init(0);
+    let mut registry = AdapterRegistry::new(3);
+    for i in 0..2u64 {
+        let ad = serving_adapter(&cfg, &base, 4, 40 + i);
+        registry
+            .insert(
+                &format!("adapter-{i}"),
+                ad,
+                flora::runtime::AdapterProvenance::Synthetic { seed: 40 + i },
+            )
+            .unwrap();
+    }
+    let rank = registry.load_checkpoint("tuned", path_s).unwrap();
+    assert_eq!(rank, 4, "hot-loaded adapter rank");
+    std::fs::remove_file(&path).ok();
+
+    let prompt_len = cfg.seq_len / 2;
+    let max_new = cfg.seq_len / 4;
+    let policy = BatchPolicy { max_batch: 4, max_wait_ms: 50 };
+    let mut srv = Server::new(cfg, base.clone(), registry, policy);
+    let names = ["adapter-0", "tuned", "adapter-1", "tuned"];
+    for (i, n) in names.iter().enumerate() {
+        srv.submit(n, serving_prompt(&cfg, i, prompt_len), max_new, 0)
+            .unwrap();
+    }
+    srv.drain(0).unwrap();
+    let responses = srv.take_responses();
+    assert_eq!(responses.len(), names.len(), "every request answered");
+
+    // the served tokens must bit-match a fresh sequential-oracle rerun
+    let want_names: Vec<String> =
+        responses.iter().map(|r| r.adapter.clone()).collect();
+    let adapters = srv.registry.get_many(&want_names).unwrap();
+    let prompts: Vec<Vec<i32>> =
+        responses.iter().map(|r| r.tokens[..prompt_len].to_vec()).collect();
+    let solo = oracle_check(&cfg, &base, &adapters, &prompts, max_new).unwrap();
+    for (r, want) in responses.iter().zip(&solo) {
+        assert_eq!(&r.tokens, want, "req {} vs sequential oracle", r.id);
+        assert!(r.batch_size >= 1 && r.batch_size <= 4);
+    }
+}
