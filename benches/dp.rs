@@ -1,0 +1,236 @@
+//! Flora-compressed data-parallel training bench (not a paper table;
+//! grows the dp trajectory) — APPENDS a snapshot to `BENCH_dp.json`.
+//!
+//! For every native LM catalog size (skipping `lora-base` under
+//! `--quick`, same as serving/micro_kernels) it trains the dp tier in
+//! both reduce modes and reports:
+//!
+//!   * `steps_per_sec`        — optimizer steps/sec for the whole
+//!                              fan-out → reduce → step loop
+//!   * `per_step_sent_bytes`  — ledger upload bytes of one data step in
+//!                              the configured mode (exact, analytic)
+//!   * `per_step_full_bytes`  — the same step under full-gradient
+//!                              exchange
+//!   * `comms_ratio`          — sent/full (~r/d for compressed at the
+//!                              square attn/ffn shapes)
+//!
+//! Before timing, each size runs the W∈{1,2} bit-identity tripwire —
+//! the same config at 1 and 2 workers must produce raw-bits-identical
+//! loss curves and final parameters — and the bench exits non-zero on
+//! any mismatch, so a throughput number can never be recorded for a
+//! wrong trajectory.
+//!
+//! `BENCH_dp.json` is a schema-2 TRAJECTORY like BENCH_serving.json
+//! (append-only; docs/DISTRIBUTED.md §6 has the methodology). The
+//! seed point is a C mirror of the comms path
+//! (`benches/mirror/dp_mirror.c`), provenance-tagged as such.
+//!
+//! Run: cargo bench --bench dp [-- --quick --workers N --parallelism N]
+
+use std::collections::BTreeMap;
+
+use flora::bench::paper::BenchArgs;
+use flora::config::DpConfig;
+use flora::model::TransformerConfig;
+use flora::runtime::dp::{DpTrainer, ReduceMode};
+use flora::util::json::{self, Json};
+
+const SHARDS: usize = 4;
+const RANK: usize = 8;
+
+struct Cell {
+    key: String,
+    model: String,
+    workers: usize,
+    reduce: ReduceMode,
+    steps_per_sec: f64,
+    per_step_sent: u64,
+    per_step_full: u64,
+    ratio: f64,
+    final_loss: f32,
+}
+
+fn dp_cfg(
+    model: &str,
+    workers: usize,
+    steps: usize,
+    reduce: ReduceMode,
+    args: &BenchArgs,
+) -> DpConfig {
+    let mut cfg = DpConfig::default();
+    cfg.train.model = model.to_string();
+    cfg.train.steps = steps;
+    cfg.train.workers = workers;
+    cfg.train.parallelism = args.parallelism;
+    cfg.shards = SHARDS;
+    cfg.reduce = reduce;
+    cfg
+}
+
+/// The W∈{1,2} raw-bits gate: run the same config at 1 and 2 workers
+/// and demand identical loss curves + final params. Exit non-zero on
+/// divergence — never record a number for a wrong trajectory.
+fn tripwire(model: &str, args: &BenchArgs) {
+    let steps = 3;
+    let mut solo = DpTrainer::new(dp_cfg(model, 1, steps, ReduceMode::Compressed, args))
+        .expect("dp trainer (W=1)");
+    let mut duo = DpTrainer::new(dp_cfg(model, 2, steps, ReduceMode::Compressed, args))
+        .expect("dp trainer (W=2)");
+    let a = solo.run().expect("W=1 run");
+    let b = duo.run().expect("W=2 run");
+    let la: Vec<u32> = a.train_losses.iter().map(|x| x.to_bits()).collect();
+    let lb: Vec<u32> = b.train_losses.iter().map(|x| x.to_bits()).collect();
+    if la != lb {
+        eprintln!("[dp] {model}: W=2 loss curve diverges from W=1");
+        std::process::exit(1);
+    }
+    for (name, p) in solo.params() {
+        let q = &duo.params()[name];
+        let pb: Vec<u32> = p.data.iter().map(|x| x.to_bits()).collect();
+        let qb: Vec<u32> = q.data.iter().map(|x| x.to_bits()).collect();
+        if pb != qb {
+            eprintln!("[dp] {model}: W=2 parameter {name} diverges from W=1");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn measure(model: &str, workers: usize, steps: usize, args: &BenchArgs) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for reduce in [ReduceMode::Compressed, ReduceMode::Full] {
+        let mut tr = DpTrainer::new(dp_cfg(model, workers, steps, reduce, args))
+            .expect("dp trainer");
+        let report = tr.run().expect("dp run");
+        let ledger = report.ledger;
+        cells.push(Cell {
+            key: format!("{model}/{reduce}"),
+            model: model.to_string(),
+            workers,
+            reduce,
+            steps_per_sec: report.steps_per_sec,
+            per_step_sent: ledger.per_step_sent(),
+            per_step_full: ledger.per_step_full(),
+            ratio: ledger.ratio(),
+            final_loss: report.train_losses.last().copied().unwrap_or(f32::NAN),
+        });
+    }
+    cells
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn round3(x: f64) -> Json {
+    Json::Num((x * 1000.0).round() / 1000.0)
+}
+
+fn round6(x: f64) -> Json {
+    Json::Num((x * 1e6).round() / 1e6)
+}
+
+fn snapshot_of(cells: &[Cell], args: &BenchArgs) -> Json {
+    let sizes: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("model", Json::Str(c.key.clone())),
+                ("base_model", Json::Str(c.model.clone())),
+                ("workers", Json::Num(c.workers as f64)),
+                ("shards", Json::Num(SHARDS as f64)),
+                ("rank", Json::Num(RANK as f64)),
+                ("reduce", Json::Str(c.reduce.name().into())),
+                ("steps_per_sec", round3(c.steps_per_sec)),
+                ("per_step_sent_bytes", Json::Num(c.per_step_sent as f64)),
+                ("per_step_full_bytes", Json::Num(c.per_step_full as f64)),
+                ("comms_ratio", round6(c.ratio)),
+                ("final_loss", round6(c.final_loss as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("parallelism", Json::Num(args.parallelism.threads() as f64)),
+        ("quick", Json::Bool(args.quick)),
+        ("provenance", Json::Str("cargo-bench dp".into())),
+        ("sizes", Json::Arr(sizes)),
+    ])
+}
+
+/// Append `snapshot` to the schema-2 trajectory in `path` (same
+/// append-never-rewrite contract as the other trajectory files).
+fn append_snapshot(path: &str, snapshot: Json) -> String {
+    let mut trajectory: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(old) = json::parse(&text) {
+            if old.get("schema").and_then(Json::as_usize) == Some(2) {
+                if let Some(arr) = old.get("trajectory").and_then(Json::as_arr) {
+                    trajectory = arr.to_vec();
+                }
+            }
+        }
+    }
+    trajectory.push(snapshot);
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("dp".into()));
+    root.insert("schema".to_string(), Json::Num(2.0));
+    root.insert(
+        "comment".to_string(),
+        Json::Str(
+            "Per-PR data-parallel training trajectory (optimizer steps/sec \
+             + exact comms bytes per data step, compressed vs full reduce). \
+             Entries are appended, never rewritten; `cargo bench --bench dp` \
+             appends a fresh cargo-bench snapshot after the W-invariance \
+             tripwire. How to read this file: docs/DISTRIBUTED.md."
+                .into(),
+        ),
+    );
+    root.insert("trajectory".to_string(), Json::Arr(trajectory));
+    Json::Obj(root).render()
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = args.steps.unwrap_or(if args.quick { 4 } else { 12 });
+    let workers = args.workers.clamp(1, SHARDS);
+    let mut cells = Vec::new();
+    for (name, _) in TransformerConfig::catalog_grid() {
+        if args.quick && name == "lora-base" {
+            continue; // the CI smoke stays fast; full runs cover it
+        }
+        eprintln!("[dp] tripwire {name} (W=1 vs W=2) ...");
+        tripwire(name, &args);
+        eprintln!("[dp] measuring {name} at workers={workers} ...");
+        cells.extend(measure(name, workers, steps, &args));
+    }
+
+    let mut table = flora::bench::Table::new(
+        &format!(
+            "dp training (shards {SHARDS}, rank {RANK}, workers {workers}, parallelism {})",
+            args.parallelism.threads()
+        ),
+        &["Size/mode", "steps/s", "sent/step", "full/step", "ratio", "final loss"],
+    );
+    for c in &cells {
+        table.row(vec![
+            c.key.clone(),
+            format!("{:.2}", c.steps_per_sec),
+            flora::util::human::bytes(c.per_step_sent),
+            flora::util::human::bytes(c.per_step_full),
+            format!("{:.4}", c.ratio),
+            format!("{:.4}", c.final_loss),
+        ]);
+    }
+    table.print();
+
+    let path = "BENCH_dp.json";
+    let rendered = append_snapshot(path, snapshot_of(&cells, &args));
+    match std::fs::write(path, &rendered) {
+        Ok(()) => println!("\nappended snapshot to {path}"),
+        Err(e) => {
+            // growing the trajectory is this bench's one artifact; a
+            // silent skip would let CI go green on a broken append
+            eprintln!("could not write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

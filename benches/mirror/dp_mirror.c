@@ -1,0 +1,262 @@
+/* dp_mirror.c — C mirror of the PR-7 data-parallel comms path
+ * (rust/src/runtime/dp/), used to seed the first BENCH_dp.json
+ * trajectory point on machines where cargo is unavailable (the build
+ * container). `cargo bench --bench dp` reproduces the same
+ * compressed-vs-full A/B on the real crate.
+ *
+ * What is mirrored, faithfully:
+ *   - the per-parameter shard payloads of one dp data step over the
+ *     exact lora-* catalog shapes (embed/pos, embed/tok, final_ln and
+ *     per-layer attn wq/wk/wv/wo [d,d], ffn w1 [d,f] / w2 [f,d],
+ *     ln scales — transformer.rs param_shapes), S = 4 shards, rank 8;
+ *   - the COMPRESSED wire: each shard projects its attn/ffn gradients
+ *     C_s = G_s A^T (n x r) before the exchange, the reducer sums the
+ *     S payloads in fixed ascending shard order (one f32 accumulator
+ *     per element, exactly like Matrix::reduce_sum), then decompresses
+ *     ONCE: Ghat = (sum C) A / S;
+ *   - the FULL wire baseline: fixed-order reduce of the raw n x m
+ *     gradients, then one compress+decompress of the reduced gradient
+ *     (the trainer's full-mode semantics — compression moves after the
+ *     exchange, the optimizer math is unchanged);
+ *   - the byte ledger: the same step_bytes formula as
+ *     runtime/dp/reduce.rs — sent = 4*S*sum(n*r | n*m), so the
+ *     compression ratio printed here is exactly the rust ledger's.
+ *
+ * What is NOT mirrored (documented in docs/DISTRIBUTED.md §6): the
+ * forward/backward gradient computation, the optimizer step, and the
+ * worker-pool scheduling — so absolute steps/sec here WILDLY overstate
+ * the full cargo-bench figures (which pay tau * S forward/backwards per
+ * step). The compressed/full RATIO of wire bytes and reduce+transform
+ * time is the honest measurement: both variants omit the same work.
+ *
+ * Build & run:  gcc -O2 -o dp_mirror dp_mirror.c -lm
+ *               ./dp_mirror            # [iters]
+ */
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define SHARDS 4
+#define RANK 8
+#define MAX_PARAMS 32
+
+typedef struct {
+    const char *name;
+    int vocab, seq, d, f, layers;
+} Model;
+
+static const Model MODELS[] = {
+    {"lora-tiny", 64, 16, 32, 64, 1},
+    {"lora-small", 128, 32, 64, 128, 2},
+    {"lora-base", 256, 64, 128, 256, 2},
+};
+
+typedef struct {
+    char name[32];
+    int n, m;
+    int projectable; /* attn/ or ffn/ — ships n x RANK when compressed */
+} Shape;
+
+/* transformer.rs param_shapes for one catalog model (sorted order does
+ * not matter here — the reduce is per-parameter) */
+static int model_shapes(const Model *md, Shape *out) {
+    int k = 0;
+    out[k] = (Shape){"embed/pos", 0, 0, 0};
+    out[k].n = md->seq;
+    out[k++].m = md->d;
+    out[k] = (Shape){"embed/tok", 0, 0, 0};
+    out[k].n = md->vocab;
+    out[k++].m = md->d;
+    out[k] = (Shape){"final_ln/scale", 1, 0, 0};
+    out[k++].m = md->d;
+    for (int l = 0; l < md->layers; l++) {
+        static const char *sq[] = {"attn/wq", "attn/wk", "attn/wv", "attn/wo"};
+        for (int i = 0; i < 4; i++) {
+            snprintf(out[k].name, sizeof(out[k].name), "layer%d/%s", l, sq[i]);
+            out[k].n = md->d;
+            out[k].m = md->d;
+            out[k++].projectable = 1;
+        }
+        snprintf(out[k].name, sizeof(out[k].name), "layer%d/ffn/w1", l);
+        out[k].n = md->d;
+        out[k].m = md->f;
+        out[k++].projectable = 1;
+        snprintf(out[k].name, sizeof(out[k].name), "layer%d/ffn/w2", l);
+        out[k].n = md->f;
+        out[k].m = md->d;
+        out[k++].projectable = 1;
+        snprintf(out[k].name, sizeof(out[k].name), "layer%d/ln1/scale", l);
+        out[k].n = 1;
+        out[k].m = md->d;
+        out[k++].projectable = 0;
+        snprintf(out[k].name, sizeof(out[k].name), "layer%d/ln2/scale", l);
+        out[k].n = 1;
+        out[k].m = md->d;
+        out[k++].projectable = 0;
+    }
+    return k;
+}
+
+/* xorshift fill, deterministic per (param, shard) */
+static void fill(float *x, size_t len, uint64_t seed) {
+    uint64_t s = seed * 6364136223846793005ull + 1442695040888963407ull;
+    for (size_t i = 0; i < len; i++) {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        x[i] = (float)((int64_t)(s >> 40) - (1 << 23)) * 1e-7f;
+    }
+}
+
+/* C[n x r] += G[n x m] . A^T, A[r x m] (rp::compress) */
+static void compress(float *c, const float *g, const float *a, int n, int m) {
+    for (int i = 0; i < n; i++)
+        for (int j = 0; j < RANK; j++) {
+            float acc = 0.0f;
+            const float *gi = g + (size_t)i * m;
+            const float *aj = a + (size_t)j * m;
+            for (int k = 0; k < m; k++) acc += gi[k] * aj[k];
+            c[(size_t)i * RANK + j] = acc;
+        }
+}
+
+/* Ghat[n x m] = C[n x r] . A / denom (rp::decompress) */
+static void decompress(float *ghat, const float *c, const float *a, int n,
+                       int m, float denom) {
+    memset(ghat, 0, (size_t)n * m * sizeof(float));
+    for (int i = 0; i < n; i++)
+        for (int j = 0; j < RANK; j++) {
+            float cij = c[(size_t)i * RANK + j] / denom;
+            const float *aj = a + (size_t)j * m;
+            float *gi = ghat + (size_t)i * m;
+            for (int k = 0; k < m; k++) gi[k] += cij * aj[k];
+        }
+}
+
+/* fixed ascending shard order, one f32 accumulator per element —
+ * Matrix::reduce_sum */
+static void reduce_fixed_order(float *dst, float *const srcs[SHARDS],
+                               size_t len) {
+    memset(dst, 0, len * sizeof(float));
+    for (int s = 0; s < SHARDS; s++)
+        for (size_t i = 0; i < len; i++) dst[i] += srcs[s][i];
+}
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec * 1e-9;
+}
+
+/* one data step's reduce+transform work in the given mode; returns a
+ * checksum so the work cannot be optimized away */
+static float step_once(const Shape *shapes, int nparams,
+                       float *grads[MAX_PARAMS][SHARDS],
+                       float *comp[MAX_PARAMS][SHARDS], float *proj[MAX_PARAMS],
+                       float *red, float *ghat, int compressed) {
+    float sink = 0.0f;
+    for (int p = 0; p < nparams; p++) {
+        const Shape *sh = &shapes[p];
+        size_t full = (size_t)sh->n * sh->m;
+        if (sh->projectable && compressed) {
+            /* workers ship n x r; reduce compressed; decompress once */
+            for (int s = 0; s < SHARDS; s++)
+                compress(comp[p][s], grads[p][s], proj[p], sh->n, sh->m);
+            reduce_fixed_order(red, comp[p], (size_t)sh->n * RANK);
+            decompress(ghat, red, proj[p], sh->n, sh->m, (float)SHARDS);
+        } else if (sh->projectable) {
+            /* full wire: reduce raw grads, compress after the exchange */
+            reduce_fixed_order(red, grads[p], full);
+            compress(comp[p][0], red, proj[p], sh->n, sh->m);
+            decompress(ghat, comp[p][0], proj[p], sh->n, sh->m,
+                       (float)SHARDS);
+        } else {
+            reduce_fixed_order(red, grads[p], full);
+            for (size_t i = 0; i < full; i++) ghat[i] = red[i] / SHARDS;
+        }
+        sink += ghat[0];
+    }
+    return sink;
+}
+
+int main(int argc, char **argv) {
+    int iters = argc > 1 ? atoi(argv[1]) : 50;
+    if (iters < 1) iters = 1;
+    printf("{\n  \"parallelism\": 1,\n  \"provenance\": \"c-mirror dp_mirror\",\n  \"sizes\": [\n");
+    int first_row = 1;
+    float sink = 0.0f;
+    for (size_t mi = 0; mi < sizeof(MODELS) / sizeof(MODELS[0]); mi++) {
+        const Model *md = &MODELS[mi];
+        Shape shapes[MAX_PARAMS];
+        int nparams = model_shapes(md, shapes);
+        size_t maxfull = 0;
+        for (int p = 0; p < nparams; p++) {
+            size_t full = (size_t)shapes[p].n * shapes[p].m;
+            if (full > maxfull) maxfull = full;
+        }
+        static float *grads[MAX_PARAMS][SHARDS];
+        static float *comp[MAX_PARAMS][SHARDS];
+        static float *proj[MAX_PARAMS];
+        for (int p = 0; p < nparams; p++) {
+            size_t full = (size_t)shapes[p].n * shapes[p].m;
+            for (int s = 0; s < SHARDS; s++) {
+                grads[p][s] = malloc(full * sizeof(float));
+                fill(grads[p][s], full, 1000u * mi + 10u * p + s);
+                comp[p][s] = malloc((size_t)shapes[p].n * RANK * sizeof(float));
+            }
+            proj[p] = malloc((size_t)RANK * shapes[p].m * sizeof(float));
+            fill(proj[p], (size_t)RANK * shapes[p].m, 777u + p);
+        }
+        float *red = malloc(maxfull * sizeof(float));
+        float *ghat = malloc(maxfull * sizeof(float));
+
+        /* the ledger's step_bytes formula, verbatim */
+        long sent_comp = 0, sent_full = 0;
+        for (int p = 0; p < nparams; p++) {
+            long full = 4L * shapes[p].n * shapes[p].m;
+            sent_full += SHARDS * full;
+            sent_comp += SHARDS * (shapes[p].projectable
+                                       ? 4L * shapes[p].n * RANK
+                                       : full);
+        }
+
+        for (int mode = 1; mode >= 0; mode--) { /* compressed, then full */
+            sink += step_once(shapes, nparams, grads, comp, proj, red, ghat,
+                              mode); /* warm */
+            double t0 = now_s();
+            for (int it = 0; it < iters; it++)
+                sink += step_once(shapes, nparams, grads, comp, proj, red,
+                                  ghat, mode);
+            double per_step = (now_s() - t0) / iters;
+            long sent = mode ? sent_comp : sent_full;
+            printf("%s      {\"model\": \"%s/%s\", \"base_model\": \"%s\", "
+                   "\"workers\": 1, \"shards\": %d, \"rank\": %d, "
+                   "\"reduce\": \"%s\", \"steps_per_sec\": %.3f, "
+                   "\"per_step_sent_bytes\": %ld, "
+                   "\"per_step_full_bytes\": %ld, \"comms_ratio\": %.6f, "
+                   "\"final_loss\": null}",
+                   first_row ? "" : ",\n", md->name,
+                   mode ? "compressed" : "full", md->name, SHARDS, RANK,
+                   mode ? "compressed" : "full", 1.0 / per_step, sent,
+                   sent_full, (double)sent / (double)sent_full);
+            first_row = 0;
+            fflush(stdout);
+        }
+
+        for (int p = 0; p < nparams; p++) {
+            for (int s = 0; s < SHARDS; s++) {
+                free(grads[p][s]);
+                free(comp[p][s]);
+            }
+            free(proj[p]);
+        }
+        free(red);
+        free(ghat);
+    }
+    printf("\n  ]\n}\n");
+    /* keep the checksum alive */
+    fprintf(stderr, "checksum %.6f\n", (double)sink);
+    return 0;
+}

@@ -193,7 +193,9 @@ pub fn render_analytic_only(
 /// `--model NAME` (e.g. `lora-small` to run a table on a different
 /// native-catalog size than its default), `--parallelism N` (kernel
 /// thread budget, installed process-wide; results are bit-identical at
-/// every N), `--runtime pool|scope` (parallel driver: the persistent
+/// every N), `--workers N` (dp worker count for `--bench dp`; results
+/// are bit-identical at every N), `--runtime pool|scope` (parallel
+/// driver: the persistent
 /// worker pool, or the retained per-call `thread::scope` baseline for
 /// A/B perf comparisons — results are bit-identical either way).
 /// cargo bench passes `--bench`; ignore unknown flags.
@@ -213,6 +215,8 @@ pub struct BenchArgs {
     /// Kernel thread budget (`tensor::Parallelism`), already installed
     /// by `parse()`.
     pub parallelism: crate::tensor::Parallelism,
+    /// dp worker count (`--bench dp` only; other benches ignore it).
+    pub workers: usize,
 }
 
 impl BenchArgs {
@@ -226,6 +230,7 @@ impl BenchArgs {
             optimizer: None,
             model: None,
             parallelism: crate::tensor::Parallelism::single(),
+            workers: 1,
         };
         // --runtime is order-independent of --parallelism: remember the
         // driver choice, apply it to the final thread budget below
@@ -246,6 +251,19 @@ impl BenchArgs {
                         _ => {
                             eprintln!(
                                 "--parallelism: expected integer >= 1, got {:?}",
+                                argv[i + 1]
+                            );
+                            std::process::exit(2);
+                        }
+                    }
+                    i += 1;
+                }
+                "--workers" if i + 1 < argv.len() => {
+                    match argv[i + 1].parse::<usize>() {
+                        Ok(n) if n >= 1 => out.workers = n,
+                        _ => {
+                            eprintln!(
+                                "--workers: expected integer >= 1, got {:?}",
                                 argv[i + 1]
                             );
                             std::process::exit(2);
@@ -330,6 +348,7 @@ impl BenchArgs {
             cfg.model = model.clone();
         }
         cfg.parallelism = self.parallelism;
+        cfg.workers = self.workers;
     }
 
     /// True when the selected backend can run the measured cells: always
@@ -407,6 +426,7 @@ mod tests {
             optimizer: None,
             model: None,
             parallelism: crate::tensor::Parallelism::single(),
+            workers: 1,
         };
         assert_eq!(args.spec(), "native");
         assert!(args.require_artifacts(), "native never needs artifacts");

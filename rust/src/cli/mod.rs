@@ -99,6 +99,7 @@ COMMANDS:
                   --parallelism N (kernel thread budget; results are
                   bit-identical at every N — see docs/ARCHITECTURE.md)
                   --backend native|xla (native = pure rust, no artifacts)
+                  (--workers N > 1 is rejected here — that is train-dp)
     eval        evaluate a fresh init (loss + generation metric)
                   --model lm-small --task sum --samples N --backend native|xla
     pilot       run the Figure-1 pilot study in pure rust
@@ -107,6 +108,21 @@ COMMANDS:
                   --model t5-small|t5-3b|gpt2-base|gpt2-xl --optimizer ...
     inspect     list manifest executables and their ABI
                   --artifacts DIR [--exe NAME] [--backend native]
+    train-dp    data-parallel training with Flora-compressed gradient
+                exchange: workers ship rank-r projected gradients into a
+                fixed-order reduce (bit-identical at every --workers)
+                  --model lora-tiny|lora-small|lora-base --config file.toml
+                  --workers N (threads executing shards; must be <= shards)
+                  --shards N (logical gradient shards — the determinism
+                  grain; per-step documents = shards x batch)
+                  --reduce compressed|full (what goes on the wire)
+                  --rank N --optimizer sgd|adam|adafactor|adafactor_nofactor
+                  --lr F --steps N --tau N --kappa N --batch N --seed N
+                  --parallelism N (kernel threads per worker; workers x
+                  parallelism must fit the pool budget)
+                  --verify (re-run at workers=1 and raw-bits-compare the
+                  loss curve + final params; non-zero exit on divergence)
+                  See docs/DISTRIBUTED.md for the architecture and math.
     serve       batched multi-adapter inference on the native LM catalog
                   --model lora-tiny|lora-small|lora-base --config file.toml
                   --adapters N (synthetic adapters) --rank N --capacity N

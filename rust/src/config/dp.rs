@@ -1,0 +1,255 @@
+//! Typed `flora train-dp` configuration: the shared training knobs of
+//! [`TrainConfig`] (including `train.workers`) plus the dp-tier policy —
+//! the logical shard count and the reduce wire format. Buildable from a
+//! TOML file with `[train]`/`[dp]` tables, with CLI flags layered on top
+//! by the launcher.
+
+use std::collections::BTreeMap;
+
+use super::experiment::{check_pool_budget, ExperimentConfig, TaskKind, TrainConfig};
+use super::toml::{parse_toml, TomlValue};
+use crate::coordinator::method::MethodSpec;
+use crate::runtime::dp::ReduceMode;
+
+/// Everything `flora train-dp` needs for one data-parallel run.
+///
+/// The **shard count is the mathematical grain** of a dp run: it fixes
+/// the data partition and the fixed-order reduction slots. `workers`
+/// only decides how many threads execute those shards, which is why the
+/// trainer is bit-identical at every worker count (docs/DISTRIBUTED.md).
+///
+/// ```
+/// use flora::config::DpConfig;
+/// use flora::runtime::dp::ReduceMode;
+///
+/// let cfg = DpConfig::from_toml_str(r#"
+///     [train]
+///     model = "lora-tiny"
+///     workers = 2
+///     steps = 8
+///     [dp]
+///     shards = 4
+///     reduce = "compressed"
+/// "#).unwrap();
+/// assert_eq!(cfg.train.workers, 2);
+/// assert_eq!(cfg.shards, 4);
+/// assert_eq!(cfg.reduce, ReduceMode::Compressed);
+/// cfg.validate().unwrap();
+/// // unknown keys are an error (typo defence)
+/// assert!(DpConfig::from_toml_str("dp.shardz = 2").is_err());
+/// // more workers than shards cannot be scheduled
+/// let mut bad = cfg.clone();
+/// bad.train.workers = 8;
+/// assert!(bad.validate().unwrap_err().contains("workers"));
+/// ```
+#[derive(Clone, Debug)]
+pub struct DpConfig {
+    /// shared training knobs (model, optimizer, lr, τ, κ, seed,
+    /// `workers`, `parallelism`, ...)
+    pub train: TrainConfig,
+    /// logical gradient shards per optimizer step — the determinism
+    /// grain; per-step documents consumed = `shards × batch`
+    pub shards: usize,
+    /// what workers put on the wire (`compressed` = rank-r projected
+    /// states, `full` = raw gradients; the A/B for the comms claim)
+    pub reduce: ReduceMode,
+}
+
+impl Default for DpConfig {
+    fn default() -> Self {
+        Self {
+            // dp trains the native LM family on the language task
+            train: TrainConfig {
+                model: "lora-tiny".into(),
+                task: TaskKind::Lm,
+                method: MethodSpec::Flora { rank: 8 },
+                steps: 20,
+                batch: 2,
+                kappa: 4,
+                ..TrainConfig::default()
+            },
+            shards: 4,
+            reduce: ReduceMode::Compressed,
+        }
+    }
+}
+
+impl DpConfig {
+    /// Load from a TOML document; unknown keys are an error.
+    pub fn from_toml_str(doc: &str) -> Result<Self, String> {
+        let map = parse_toml(doc).map_err(|e| e.to_string())?;
+        Self::from_map(&map)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let doc = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_toml_str(&doc)
+    }
+
+    fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Self, String> {
+        let mut cfg = DpConfig::default();
+        // split off the dp.* keys, hand the rest to the shared
+        // experiment parser (which owns the train.* vocabulary)
+        let mut rest: BTreeMap<String, TomlValue> = BTreeMap::new();
+        for (k, v) in map {
+            match k.as_str() {
+                "dp.shards" => {
+                    let n = v.as_i64().ok_or_else(|| format!("{k}: expected integer"))?;
+                    if n < 1 {
+                        return Err(format!("{k}: must be >= 1"));
+                    }
+                    cfg.shards = n as usize;
+                }
+                "dp.reduce" => {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| format!("{k}: expected string"))?;
+                    cfg.reduce = ReduceMode::parse(s)?;
+                }
+                _ => {
+                    rest.insert(k.clone(), v.clone());
+                }
+            }
+        }
+        if !rest.is_empty() {
+            // a bare `train.rank` means "flora at this rank" here (dp is
+            // always flora); the experiment parser would drop it without
+            // an accompanying method key
+            if rest.contains_key("train.rank") && !rest.contains_key("train.method") {
+                rest.insert("train.method".into(), TomlValue::Str("flora".into()));
+            }
+            let exp = ExperimentConfig::from_map(&rest)?;
+            // the experiment parser starts from ITS defaults; keep only
+            // train.* (dp has no artifacts), re-seating dp's model/task
+            // defaults for keys the document left unset
+            let mut train = exp.train;
+            if !rest.contains_key("train.model") {
+                train.model = cfg.train.model.clone();
+            }
+            if !rest.contains_key("train.task") {
+                train.task = cfg.train.task;
+            }
+            if !rest.contains_key("train.method") {
+                train.method = cfg.train.method;
+            }
+            if !rest.contains_key("train.steps") {
+                train.steps = cfg.train.steps;
+            }
+            if !rest.contains_key("train.batch") {
+                train.batch = cfg.train.batch;
+            }
+            if !rest.contains_key("train.kappa") {
+                train.kappa = cfg.train.kappa;
+            }
+            cfg.train = train;
+        }
+        Ok(cfg)
+    }
+
+    /// All the cross-field rules, with loud errors: the dp tier needs a
+    /// Flora method on the LM task, at least as many shards as workers,
+    /// and a `workers × parallelism` product within the pool budget.
+    pub fn validate(&self) -> Result<(), String> {
+        let t = &self.train;
+        if !matches!(t.method, MethodSpec::Flora { .. }) {
+            return Err(format!(
+                "train-dp exchanges Flora-compressed gradients; method {:?} has no \
+                 compressed wire format (use --method flora --rank R)",
+                t.method
+            ));
+        }
+        if t.task != TaskKind::Lm {
+            return Err(format!(
+                "train-dp shards the C4-sim LM corpus; task {:?} is not sharded \
+                 (use the lora-* models / lm task)",
+                t.task
+            ));
+        }
+        if self.shards < 1 {
+            return Err("dp.shards must be >= 1".into());
+        }
+        if t.workers > self.shards {
+            return Err(format!(
+                "workers ({}) exceeds shards ({}) — extra workers would idle; \
+                 lower --workers or raise --shards",
+                t.workers, self.shards
+            ));
+        }
+        if t.steps < 1 || t.batch < 1 || t.tau < 1 || t.kappa < 1 {
+            return Err("steps, batch, tau and kappa must all be >= 1".into());
+        }
+        check_pool_budget(t)
+    }
+
+    /// The Flora rank of the configured method (call after `validate`).
+    pub fn rank(&self) -> usize {
+        match self.train.method {
+            MethodSpec::Flora { rank } => rank,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Parallelism;
+
+    #[test]
+    fn defaults_validate() {
+        let c = DpConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.reduce, ReduceMode::Compressed);
+        assert_eq!(c.rank(), 8);
+    }
+
+    #[test]
+    fn dp_keys_and_train_keys_coexist() {
+        let c = DpConfig::from_toml_str(
+            r#"
+            [train]
+            model = "lora-small"
+            optimizer = "sgd"
+            workers = 3
+            steps = 6
+            [dp]
+            shards = 6
+            reduce = "full"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.train.model, "lora-small");
+        assert_eq!(c.train.workers, 3);
+        assert_eq!(c.shards, 6);
+        assert_eq!(c.reduce, ReduceMode::Full);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_non_flora_and_non_lm() {
+        let mut c = DpConfig::default();
+        c.train.method = MethodSpec::Naive;
+        assert!(c.validate().unwrap_err().contains("wire format"));
+        let mut c = DpConfig::default();
+        c.train.task = TaskKind::Sum;
+        assert!(c.validate().unwrap_err().contains("LM"));
+    }
+
+    #[test]
+    fn pool_budget_guard_is_loud() {
+        let mut c = DpConfig::default();
+        c.train.workers = 32;
+        c.train.parallelism = Parallelism::new(8);
+        c.shards = 32;
+        let e = c.validate().unwrap_err();
+        assert!(e.contains("pool budget"), "{e}");
+    }
+
+    #[test]
+    fn bad_reduce_mode_rejected() {
+        let e = DpConfig::from_toml_str(r#"dp.reduce = "zstd""#).unwrap_err();
+        assert!(e.contains("compressed|full"), "{e}");
+    }
+}

@@ -76,6 +76,11 @@ pub struct TrainConfig {
     /// effect on every construction path. Bit-identical results at
     /// every setting — see `tensor::Parallelism`.
     pub parallelism: Parallelism,
+    /// data-parallel worker count (`--workers N` / `train.workers`).
+    /// Only the dp tier (`flora train-dp`, `runtime::dp`) consumes
+    /// values above 1 — `flora train` rejects them loudly. Results are
+    /// bit-identical at every setting; see `docs/DISTRIBUTED.md`.
+    pub workers: usize,
 }
 
 impl Default for TrainConfig {
@@ -94,6 +99,7 @@ impl Default for TrainConfig {
             eval_every: 50,
             eval_samples: 16,
             parallelism: Parallelism::single(),
+            workers: 1,
         }
     }
 }
@@ -129,7 +135,7 @@ impl ExperimentConfig {
         Self::from_toml_str(&doc)
     }
 
-    fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Self, String> {
+    pub(crate) fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Self, String> {
         let mut cfg = ExperimentConfig::default();
         let mut method_name: Option<String> = None;
         let mut rank: Option<u64> = None;
@@ -159,6 +165,13 @@ impl ExperimentConfig {
                     }
                     cfg.train.parallelism = Parallelism::new(n as usize);
                 }
+                "train.workers" => {
+                    let n = req_int(k, v)?;
+                    if n < 1 {
+                        return Err("workers must be >= 1".into());
+                    }
+                    cfg.train.workers = n as usize;
+                }
                 _ => return Err(format!("unknown config key {k:?}")),
             }
         }
@@ -168,8 +181,29 @@ impl ExperimentConfig {
         if cfg.train.tau == 0 || cfg.train.batch == 0 {
             return Err("tau and batch must be >= 1".into());
         }
+        check_pool_budget(&cfg.train)?;
         Ok(cfg)
     }
+}
+
+/// Loud pool-budget guard: the kernel pool is grow-only and process-wide,
+/// so `workers × parallelism` (dp tasks times each task's band budget)
+/// above [`crate::tensor::POOL_BUDGET`] would pin an absurd thread count
+/// for the process lifetime. Every config entry point rejects it up
+/// front with the arithmetic spelled out.
+pub(crate) fn check_pool_budget(train: &TrainConfig) -> Result<(), String> {
+    let total = train.workers * train.parallelism.threads();
+    if total > crate::tensor::POOL_BUDGET {
+        return Err(format!(
+            "workers ({}) x parallelism ({}) = {} exceeds the pool budget of {} \
+             threads — lower one of them",
+            train.workers,
+            train.parallelism.threads(),
+            total,
+            crate::tensor::POOL_BUDGET,
+        ));
+    }
+    Ok(())
 }
 
 fn req_str(k: &str, v: &TomlValue) -> Result<String, String> {
@@ -257,6 +291,20 @@ mod tests {
             Parallelism::single()
         );
         assert!(ExperimentConfig::from_toml_str("train.parallelism = 0").is_err());
+    }
+
+    #[test]
+    fn workers_parse_reject_zero_and_guard_the_pool_budget() {
+        let c = ExperimentConfig::from_toml_str("train.workers = 4").unwrap();
+        assert_eq!(c.train.workers, 4);
+        assert_eq!(ExperimentConfig::default().train.workers, 1);
+        assert!(ExperimentConfig::from_toml_str("train.workers = 0").is_err());
+        let e = ExperimentConfig::from_toml_str(
+            "train.workers = 16\ntrain.parallelism = 16",
+        )
+        .unwrap_err();
+        assert!(e.contains("pool budget"), "{e}");
+        assert!(e.contains("256"), "spell out the arithmetic: {e}");
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! offline vendor set) plus the typed experiment configs the launcher and
 //! benches consume.
 
+pub mod dp;
 pub mod experiment;
 pub mod serve;
 pub mod toml;
 
+pub use dp::DpConfig;
 pub use experiment::{ExperimentConfig, TaskKind, TrainConfig};
 pub use serve::ServeConfig;
 pub use toml::{parse_toml, TomlValue};

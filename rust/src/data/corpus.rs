@@ -66,6 +66,28 @@ impl LmTask {
         }
     }
 
+    /// Shard `shard` of `shards`'s batch for global data step `step`:
+    /// documents `(step·S + shard)·batch ..+ batch` — contiguous blocks
+    /// whose shard-order concatenation is EXACTLY the serial stream a
+    /// single consumer sees through [`fill_batch`](Self::fill_batch)
+    /// with a running cursor. Per-shard streams are therefore disjoint,
+    /// reproducible, and independent of how many physical workers
+    /// execute them (workers never appear in the addressing at all) —
+    /// the data half of the dp tier's W-invariance contract, regression
+    /// tested below and relied on by `runtime::dp::ShardPlan`.
+    pub fn fill_shard_batch(
+        &self,
+        out: &mut LmBatch,
+        split: u64,
+        step: u64,
+        shard: usize,
+        shards: usize,
+    ) {
+        assert!(shard < shards, "shard {shard} out of range for {shards} shards");
+        let mut cursor = (step * shards as u64 + shard as u64) * out.batch as u64;
+        self.fill_batch(out, split, &mut cursor);
+    }
+
     /// Entropy rate of the chain in nats — a floor for achievable loss,
     /// reported alongside PPL in the Table-6 bench.
     pub fn entropy_rate(&self) -> f64 {
@@ -121,6 +143,66 @@ mod tests {
         let t = LmTask::new(256, 64, 3);
         let h = t.entropy_rate();
         assert!(h > 0.0 && h < (t.branch as f64).ln() + 1e-9);
+    }
+
+    #[test]
+    fn shard_union_equals_serial_stream_order_exact() {
+        // concatenating the S shard batches of each step, in shard
+        // order, reproduces the unsharded stream token-for-token and
+        // mask-for-mask — the dp determinism regression
+        let t = LmTask::new(128, 16, 9);
+        let (batch, shards, steps) = (3usize, 4usize, 3u64);
+        let mut serial = LmBatch::zeros(batch, 16);
+        let mut cursor = 0u64;
+        let mut serial_rows: Vec<(Vec<i32>, Vec<u32>)> = Vec::new();
+        for _ in 0..steps * shards as u64 {
+            t.fill_batch(&mut serial, 0, &mut cursor);
+            for r in 0..batch {
+                let off = r * 16;
+                serial_rows.push((
+                    serial.tokens[off..off + 16].to_vec(),
+                    serial.mask[off..off + 16].iter().map(|m| m.to_bits()).collect(),
+                ));
+            }
+        }
+        let mut sharded_rows: Vec<(Vec<i32>, Vec<u32>)> = Vec::new();
+        let mut b = LmBatch::zeros(batch, 16);
+        for step in 0..steps {
+            for shard in 0..shards {
+                t.fill_shard_batch(&mut b, 0, step, shard, shards);
+                for r in 0..batch {
+                    let off = r * 16;
+                    sharded_rows.push((
+                        b.tokens[off..off + 16].to_vec(),
+                        b.mask[off..off + 16].iter().map(|m| m.to_bits()).collect(),
+                    ));
+                }
+            }
+        }
+        assert_eq!(serial_rows, sharded_rows);
+    }
+
+    #[test]
+    fn shard_batches_reproducible_and_disjoint() {
+        let t = LmTask::new(128, 16, 10);
+        let mut a = LmBatch::zeros(2, 16);
+        let mut b = LmBatch::zeros(2, 16);
+        // reproducible: the same (step, shard, shards) twice
+        t.fill_shard_batch(&mut a, 0, 5, 1, 4);
+        t.fill_shard_batch(&mut b, 0, 5, 1, 4);
+        assert_eq!(a.tokens, b.tokens);
+        // disjoint document ranges: every (step, shard) cell addresses
+        // its own cursor block, so no two cells within a step coincide
+        t.fill_shard_batch(&mut b, 0, 5, 2, 4);
+        assert_ne!(a.tokens, b.tokens);
+        // and the shard grid, not the worker count, defines the stream:
+        // shard 1 of 4 at step 0 (batch 2) is documents 2..4 — the same
+        // rows the serial stream yields after shard 0's block
+        t.fill_shard_batch(&mut a, 0, 0, 1, 4);
+        let mut serial = LmBatch::zeros(2, 16);
+        let mut cursor = 2u64; // skip shard 0's two documents
+        t.fill_batch(&mut serial, 0, &mut cursor);
+        assert_eq!(a.tokens, serial.tokens);
     }
 
     #[test]

@@ -94,6 +94,37 @@ mod tests {
     }
 
     #[test]
+    fn sampler_is_stateless_across_interleaved_streams() {
+        // the sampler holds no mutable state (all randomness lives in the
+        // caller's Rng), so concurrent per-shard document streams sharing
+        // one Zipf can never couple — interleaving two streams yields
+        // exactly what each yields alone. This is the property the dp
+        // tier's per-shard corpus determinism rests on.
+        let z = Zipf::new(30, 1.2);
+        let solo = |seed: u64| -> Vec<usize> {
+            let mut r = Rng::new(seed);
+            (0..40).map(|_| z.sample(&mut r)).collect()
+        };
+        let (a_solo, b_solo) = (solo(3), solo(4));
+        let mut ra = Rng::new(3);
+        let mut rb = Rng::new(4);
+        let mut a_mixed = Vec::new();
+        let mut b_mixed = Vec::new();
+        for i in 0..40 {
+            // alternate which stream draws first
+            if i % 2 == 0 {
+                a_mixed.push(z.sample(&mut ra));
+                b_mixed.push(z.sample(&mut rb));
+            } else {
+                b_mixed.push(z.sample(&mut rb));
+                a_mixed.push(z.sample(&mut ra));
+            }
+        }
+        assert_eq!(a_solo, a_mixed);
+        assert_eq!(b_solo, b_mixed);
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let z = Zipf::new(30, 1.0);
         let a: Vec<usize> = {

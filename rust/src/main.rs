@@ -30,6 +30,7 @@ fn main() {
             "memory" => cmd_memory(&args),
             "inspect" => cmd_inspect(&args),
             "serve" => cmd_serve(&args),
+            "train-dp" => cmd_train_dp(&args),
             "help" | "" => {
                 println!("{USAGE}");
                 Ok(())
@@ -70,6 +71,7 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.train.kappa = args.usize_flag("kappa", cfg.train.kappa)?;
     cfg.train.batch = args.usize_flag("batch", cfg.train.batch)?;
     cfg.train.seed = args.u64_flag("seed", cfg.train.seed)?;
+    cfg.train.workers = args.usize_flag("workers", cfg.train.workers)?;
     cfg.train.eval_every = args.usize_flag("eval-every", cfg.train.eval_every)?;
     cfg.train.eval_samples = args.usize_flag("eval-samples", cfg.train.eval_samples)?;
     let threads =
@@ -97,6 +99,13 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
 
 fn cmd_train(args: &Args) -> Result<(), String> {
     let cfg = experiment_from_args(args)?;
+    if cfg.train.workers > 1 {
+        return Err(format!(
+            "train is the single-process trainer; --workers {} is the \
+             data-parallel tier — use `flora train-dp` (docs/DISTRIBUTED.md)",
+            cfg.train.workers
+        ));
+    }
     println!(
         "training {} on task={} method={} optimizer={} steps={} tau={} kappa={}",
         cfg.train.model,
@@ -395,6 +404,120 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         println!(
             "verify: {} responses bit-match the sequential single-adapter oracle",
             responses.len()
+        );
+    }
+    Ok(())
+}
+
+/// `flora train-dp`: data-parallel training with Flora-compressed
+/// gradient exchange. Workers on the persistent kernel pool compute
+/// shard gradients, project them to rank r, and a fixed-order reduce
+/// sums the compressed states before one decompress-and-step — so the
+/// parameter trajectory is bit-identical at every `--workers`. With
+/// `--verify`, the whole run is re-executed at `workers=1` and the loss
+/// curve plus final parameters are raw-bits-compared — the CI smoke job
+/// runs exactly that. `docs/DISTRIBUTED.md` is the handbook.
+fn cmd_train_dp(args: &Args) -> Result<(), String> {
+    use flora::config::DpConfig;
+    use flora::runtime::dp::{DpTrainer, ReduceMode};
+
+    let mut cfg = match args.flag("config") {
+        Some(path) => DpConfig::from_file(path)?,
+        None => DpConfig::default(),
+    };
+    if let Some(m) = args.flag("model") {
+        cfg.train.model = m.to_string();
+    }
+    if let Some(o) = args.flag("optimizer") {
+        cfg.train.optimizer = OptimizerKind::parse(o)?;
+    }
+    // dp is always flora — --rank adjusts the method in place
+    cfg.train.method =
+        MethodSpec::Flora { rank: args.usize_flag("rank", cfg.rank())? };
+    cfg.train.lr = args.f32_flag("lr", cfg.train.lr)?;
+    cfg.train.steps = args.usize_flag("steps", cfg.train.steps)?;
+    cfg.train.tau = args.usize_flag("tau", cfg.train.tau)?;
+    cfg.train.kappa = args.usize_flag("kappa", cfg.train.kappa)?;
+    cfg.train.batch = args.usize_flag("batch", cfg.train.batch)?;
+    cfg.train.seed = args.u64_flag("seed", cfg.train.seed)?;
+    cfg.train.workers = args.usize_flag("workers", cfg.train.workers)?;
+    cfg.shards = args.usize_flag("shards", cfg.shards)?;
+    if let Some(r) = args.flag("reduce") {
+        cfg.reduce = ReduceMode::parse(r)?;
+    }
+    let threads =
+        args.usize_flag("parallelism", cfg.train.parallelism.threads())?;
+    if threads == 0 {
+        return Err("--parallelism: must be >= 1".into());
+    }
+    cfg.train.parallelism = flora::tensor::Parallelism::new(threads);
+    if cfg.train.workers == 0 {
+        return Err("--workers: must be >= 1".into());
+    }
+    cfg.validate()?;
+
+    println!(
+        "dp training {} | workers={} shards={} reduce={} | optimizer={} rank={} steps={} tau={} kappa={}",
+        cfg.train.model,
+        cfg.train.workers,
+        cfg.shards,
+        cfg.reduce,
+        cfg.train.optimizer,
+        cfg.rank(),
+        cfg.train.steps,
+        cfg.train.tau,
+        cfg.train.kappa,
+    );
+    let mut tr = DpTrainer::new(cfg.clone())?;
+    let report = tr.run()?;
+    let ledger = report.ledger;
+    println!(
+        "done: final_train_loss={:.4} ({:.1} steps/s over {} data steps)",
+        report.train_losses.last().copied().unwrap_or(f32::NAN),
+        report.steps_per_sec,
+        ledger.steps,
+    );
+    println!(
+        "comms: {}/step on the wire vs {}/step full-gradient — ratio {:.4} ({:.1}x compression)",
+        human::bytes(ledger.per_step_sent()),
+        human::bytes(ledger.per_step_full()),
+        ledger.ratio(),
+        1.0 / ledger.ratio().max(1e-12),
+    );
+
+    if args.has("verify") {
+        // re-run the identical config single-worker and demand raw-bits
+        // equality of the loss curve and every final parameter
+        let mut solo_cfg = cfg.clone();
+        solo_cfg.train.workers = 1;
+        let mut solo = DpTrainer::new(solo_cfg)?;
+        let solo_report = solo.run()?;
+        let got: Vec<u32> =
+            report.train_losses.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> =
+            solo_report.train_losses.iter().map(|x| x.to_bits()).collect();
+        if got != want {
+            return Err(format!(
+                "verify: loss curve at workers={} diverges from the workers=1 oracle",
+                cfg.train.workers
+            ));
+        }
+        for (name, p) in tr.params() {
+            let q = &solo.params()[name];
+            let pb: Vec<u32> = p.data.iter().map(|x| x.to_bits()).collect();
+            let qb: Vec<u32> = q.data.iter().map(|x| x.to_bits()).collect();
+            if pb != qb {
+                return Err(format!(
+                    "verify: parameter {name} at workers={} diverges from the workers=1 oracle",
+                    cfg.train.workers
+                ));
+            }
+        }
+        println!(
+            "verify: workers={} run bit-matches the workers=1 oracle ({} params, {} steps)",
+            cfg.train.workers,
+            tr.params().len(),
+            report.train_losses.len(),
         );
     }
     Ok(())

@@ -35,6 +35,21 @@ pub struct SubspaceTick {
     pub transfer: bool,
 }
 
+impl SubspaceTick {
+    /// The projection seed ACTIVE for this tick's gradient compression:
+    /// `seed_next` on resample steps (the freshly sampled subspace),
+    /// `seed_cur` otherwise. Data-parallel workers compress with this
+    /// seed so the reduced compressed gradient lands in the same
+    /// subspace the momentum EMA lives in after any transfer.
+    pub fn active_seed(&self) -> u64 {
+        if self.resample {
+            self.seed_next
+        } else {
+            self.seed_cur
+        }
+    }
+}
+
 /// Algorithm-1/-2 state machine over one parameter matrix, composing a
 /// [`BaseOptimizer`] with the `rp` projection algebra.
 ///
@@ -140,10 +155,37 @@ impl<O: BaseOptimizer> FloraCompressor<O> {
         lr: f32,
         step: f32,
     ) -> Result<(), String> {
-        let m_dim = grad.cols;
+        // compress with the tick's ACTIVE projection (a_new on resample
+        // steps); transfer only mutates `mom` and compression only reads
+        // `grad`, so compressing up front is bit-identical to the
+        // pre-refactor order that built A inside the resample branch
+        let a = self.projection(tick.active_seed(), grad.cols);
+        let c = rp::compress(grad, &a);
+        self.momentum_step_compressed(param, mom, opt_state, &c, tick, lr, step)
+    }
+
+    /// [`momentum_step`](Self::momentum_step) on a **pre-compressed**
+    /// gradient `c = G Aᵀ` (A = the active projection of this tick, see
+    /// [`SubspaceTick::active_seed`]). This is the data-parallel entry
+    /// point: dp workers compress their shard gradients locally, the
+    /// reducer sums the compressed states in fixed shard order, and only
+    /// the reduced (and mean-scaled) `c` reaches the step — exact by
+    /// linearity of compression, `Σ_s G_s Aᵀ = (Σ_s G_s) Aᵀ`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn momentum_step_compressed(
+        &self,
+        param: &mut Matrix,
+        mom: &mut Matrix,
+        opt_state: &mut [Matrix],
+        c: &Matrix,
+        tick: SubspaceTick,
+        lr: f32,
+        step: f32,
+    ) -> Result<(), String> {
+        let m_dim = param.cols;
         // Algorithm 2 line 13: seed_cur is the OLD subspace on resample
-        // steps; the transfer moves the EMA before the new compression
-        // (and the freshly built A(seed_next) stays the active projection).
+        // steps; the transfer moves the EMA before the new coordinates
+        // are blended in (and A(seed_next) stays the active projection).
         let a = if tick.resample {
             let a_new = self.projection(tick.seed_next, m_dim);
             if tick.transfer {
@@ -154,9 +196,8 @@ impl<O: BaseOptimizer> FloraCompressor<O> {
         } else {
             self.projection(tick.seed_cur, m_dim)
         };
-        let c = rp::compress(grad, &a);
         let mut next = mom.scale(self.beta);
-        next.add_scaled_inplace(&c, 1.0 - self.beta);
+        next.add_scaled_inplace(c, 1.0 - self.beta);
         *mom = next;
         let eff = rp::decompress(mom, &a);
         self.base.update(param, &eff, opt_state, lr, step)
@@ -229,6 +270,50 @@ mod tests {
         // the transfer rotates the EMA; the ablation keeps coordinates
         assert!(!quiet.allclose(&transferred, 1e-5));
         assert!(!transferred.allclose(&reinterpreted, 1e-5));
+    }
+
+    #[test]
+    fn momentum_step_compressed_bit_matches_momentum_step() {
+        let comp = FloraCompressor::new(Sgd, 4);
+        let g = randn(6, 8, 24);
+        for (resample, transfer) in [(false, true), (true, true), (true, false)] {
+            let tick = SubspaceTick { seed_cur: 10, seed_next: 11, resample, transfer };
+            let mut w1 = randn(7, 8, 24);
+            let mut m1 = randn(8, 8, 4).scale(0.1);
+            let mut s1 = Vec::new();
+            comp.momentum_step(&mut w1, &mut m1, &mut s1, &g, tick, 0.1, 0.0).unwrap();
+
+            // identical starting state (randn is seed-deterministic)
+            let mut w2 = randn(7, 8, 24);
+            let mut m2 = randn(8, 8, 4).scale(0.1);
+            let mut s2 = Vec::new();
+            let a = comp.projection(tick.active_seed(), g.cols);
+            let c = rp::compress(&g, &a);
+            comp.momentum_step_compressed(&mut w2, &mut m2, &mut s2, &c, tick, 0.1, 0.0)
+                .unwrap();
+
+            let b1: Vec<u32> = w1.data.iter().map(|x| x.to_bits()).collect();
+            let b2: Vec<u32> = w2.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(b1, b2, "resample={resample} transfer={transfer}");
+            let mb1: Vec<u32> = m1.data.iter().map(|x| x.to_bits()).collect();
+            let mb2: Vec<u32> = m2.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(mb1, mb2, "momentum resample={resample} transfer={transfer}");
+        }
+    }
+
+    #[test]
+    fn compression_is_linear_over_shard_gradients() {
+        // the dp reducer's theorem: Σ_s compress(G_s) == compress(Σ_s G_s)
+        let comp = FloraCompressor::new(Sgd, 4);
+        let shards: Vec<Matrix> = (0..3).map(|s| randn(20 + s, 8, 24)).collect();
+        let a = comp.projection(77, 24);
+        let summed = Matrix::reduce_sum(&shards.iter().collect::<Vec<_>>());
+        let of_sum = rp::compress(&summed, &a);
+        let mut sum_of = Matrix::zeros(8, 4);
+        for g in &shards {
+            sum_of.add_scaled_inplace(&rp::compress(g, &a), 1.0);
+        }
+        assert!(sum_of.allclose(&of_sum, 1e-4));
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! Data-parallel training with Flora-compressed communication — the
+//! paper's thesis (*low-rank adapters are secretly gradient
+//! compressors*) applied to the wire: workers exchange rank-r projected
+//! gradients instead of full `n×m` grads, and the reducer decompresses
+//! **once**, after summation, through the shared seeded projection.
+//!
+//! # Why `W=1` and `W=N` are bit-identical
+//!
+//! The whole tier is arranged so the optimizer-visible computation never
+//! mentions the worker count:
+//!
+//! 1. **Data**: the corpus is addressed by a `(step, shard)` grid fixed
+//!    by `dp.shards` — shard `s` of step `k` is documents
+//!    `(k·S + s)·batch ..`, a pure function with no worker in it
+//!    (`ShardPlan`, `LmTask::fill_shard_batch`).
+//! 2. **Per-shard compute**: each shard's loss/gradient/compression is a
+//!    deterministic function of `(params, step, shard)` — the kernels
+//!    are bit-identical at every thread budget (the PR-4/5 invariant),
+//!    and the projection is regenerated from the per-parameter seed.
+//!    Workers only decide *which thread* evaluates the function.
+//! 3. **Reduction**: shard payloads are summed in ascending shard order
+//!    on the coordinating thread (`reduce_fixed_order`), every element
+//!    left-to-right with one f32 accumulator — so the reduced gradient,
+//!    and therefore the optimizer step, is byte-for-byte the same at
+//!    every `--workers`. `flora train-dp --verify` re-runs at `W=1` and
+//!    raw-bits-compares; the integration grid does `W ∈ {1,2,4}`.
+//!
+//! Compressed-mode reduction is *exact* (not approximate) relative to
+//! compressing the summed gradient, by linearity: `Σ_s G_s Aᵀ =
+//! (Σ_s G_s) Aᵀ`. The `full` reduce mode exists as the A/B baseline —
+//! same trajectory up to float reassociation, ~`d/r`× the bytes
+//! ([`CommsLedger`] measures; `docs/DISTRIBUTED.md` has the math).
+
+pub mod reduce;
+pub mod shard;
+pub mod worker;
+
+pub use reduce::{reduce_fixed_order, step_bytes, CommsLedger, ReduceMode};
+pub use shard::ShardPlan;
+pub use worker::{run_step_workers, shard_grad, ShardGrad, StepProjection};
+
+use std::collections::BTreeMap;
+
+use crate::config::DpConfig;
+use crate::coordinator::seeds::{AccumSeeds, MomentumSeeds};
+use crate::data::corpus::LmTask;
+use crate::model::{is_projectable, ParamSet, TransformerConfig};
+use crate::opt::{BaseOptimizer, FloraCompressor, SubspaceTick, MOMENTUM_BETA};
+use crate::rp;
+use crate::tensor::Matrix;
+use crate::util::rng::derive_seed;
+use crate::util::timing::Timer;
+
+/// Split index of the training stream (mirrors `coordinator::task`).
+const TRAIN_SPLIT: u64 = 0;
+
+/// Fault injection for the NaN/Inf propagation regression: after the
+/// named shard's payload is computed (and before reduction), poison its
+/// first two elements of `param` with NaN and +Inf. A poisoned worker
+/// must surface in the reduced step — never be averaged away or
+/// laundered by a skip — and must do so identically at every worker
+/// count. Test-facing; production configs never set it.
+#[derive(Clone, Debug)]
+pub struct GradFault {
+    pub shard: usize,
+    pub param: String,
+}
+
+/// Per-optimizer-step outcome the trainer reports.
+#[derive(Clone, Debug)]
+pub struct DpReport {
+    /// mean training loss per optimizer step (fixed-order mean over
+    /// shards, then over τ micro-steps)
+    pub train_losses: Vec<f32>,
+    pub ledger: CommsLedger,
+    pub wallclock_secs: f64,
+    pub steps_per_sec: f64,
+}
+
+enum DpMode {
+    /// Algorithm 1: τ micro-steps share a cycle seed, accumulate
+    /// compressed, decompress once at cycle end (`tau > 1`)
+    Accumulation,
+    /// Algorithm 2: momentum-in-subspace with κ-resample (`tau == 1`)
+    Momentum,
+}
+
+/// The dp training loop: shard fan-out → fixed-order reduce → one
+/// decompress-and-step, with the comms ledger attached.
+pub struct DpTrainer {
+    cfg: DpConfig,
+    model: TransformerConfig,
+    task: LmTask,
+    plan: ShardPlan,
+    comp: FloraCompressor<Box<dyn BaseOptimizer>>,
+    params: ParamSet,
+    /// per-parameter base-optimizer state (full-size, like the
+    /// single-process runtime — only the *wire* is compressed)
+    opt_state: BTreeMap<String, Vec<Matrix>>,
+    /// per-parameter method state: compressed accumulator / subspace
+    /// momentum `[n, r]` for projectables, full-size for the rest
+    method: BTreeMap<String, Matrix>,
+    ledger: CommsLedger,
+    /// analytic upload bytes of one data step in the configured /
+    /// full-exchange modes (one `step_bytes` formula, precomputed)
+    bytes_sent_per_step: u64,
+    bytes_full_per_step: u64,
+    mode: DpMode,
+    accum_seeds: AccumSeeds,
+    momentum_seeds: MomentumSeeds,
+    /// data steps consumed (each = one shard grid row; τ per opt step)
+    data_step: u64,
+    /// optimizer steps taken
+    opt_step: usize,
+    fault: Option<GradFault>,
+}
+
+impl DpTrainer {
+    pub fn new(cfg: DpConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        cfg.train.parallelism.install();
+        let model = Self::lookup_model(&cfg.train.model)?;
+        let rank = cfg.rank();
+        let base = cfg.train.optimizer.build();
+        let comp = FloraCompressor::new(base, rank);
+        let seed = cfg.train.seed;
+        let task = LmTask::new(model.vocab, model.seq_len, derive_seed(seed, 0xDA7A));
+        let params = model.init(seed);
+        let mut opt_state = BTreeMap::new();
+        let mut method = BTreeMap::new();
+        for (name, p) in &params {
+            opt_state.insert(name.clone(), comp.base().init_state(p.rows, p.cols));
+            let m = if is_projectable(name) {
+                Matrix::zeros(p.rows, rank)
+            } else {
+                Matrix::zeros(p.rows, p.cols)
+            };
+            method.insert(name.clone(), m);
+        }
+        let mode = if cfg.train.tau > 1 { DpMode::Accumulation } else { DpMode::Momentum };
+        let plan = ShardPlan::new(cfg.shards, cfg.train.batch);
+        let shapes = model.param_shapes();
+        let bytes_sent_per_step = step_bytes(&shapes, rank, plan.shards, cfg.reduce);
+        let bytes_full_per_step = step_bytes(&shapes, rank, plan.shards, ReduceMode::Full);
+        Ok(Self {
+            accum_seeds: AccumSeeds::new(derive_seed(seed, 0xACC)),
+            momentum_seeds: MomentumSeeds::new(derive_seed(seed, 0xE3A), cfg.train.kappa),
+            cfg,
+            model,
+            task,
+            plan,
+            comp,
+            params,
+            opt_state,
+            method,
+            ledger: CommsLedger::default(),
+            bytes_sent_per_step,
+            bytes_full_per_step,
+            mode,
+            data_step: 0,
+            opt_step: 0,
+            fault: None,
+        })
+    }
+
+    fn lookup_model(name: &str) -> Result<TransformerConfig, String> {
+        TransformerConfig::catalog_grid()
+            .into_iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, c)| c)
+            .ok_or_else(|| {
+                let names: Vec<&str> =
+                    TransformerConfig::catalog_grid().iter().map(|(n, _)| *n).collect();
+                format!(
+                    "model {name:?} is not dp-capable; train-dp runs the native LM \
+                     family: {} (flora --list-catalog marks them)",
+                    names.join(" | ")
+                )
+            })
+    }
+
+    pub fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    pub fn ledger(&self) -> &CommsLedger {
+        &self.ledger
+    }
+
+    /// Install the NaN/Inf fault injection (see [`GradFault`]).
+    pub fn inject_fault(&mut self, fault: GradFault) {
+        assert!(fault.shard < self.plan.shards, "fault shard out of range");
+        self.fault = Some(fault);
+    }
+
+    /// One data step: fan shards out over the workers, apply any fault,
+    /// account bytes, and reduce in fixed shard order. Returns the
+    /// fixed-order mean shard loss and the reduced payload.
+    fn reduced_step(
+        &mut self,
+        mode: ReduceMode,
+        proj: StepProjection,
+    ) -> Result<(f32, BTreeMap<String, Matrix>), String> {
+        let mut grads = run_step_workers(
+            &self.model,
+            &self.params,
+            &self.task,
+            &self.plan,
+            self.cfg.train.workers,
+            TRAIN_SPLIT,
+            self.data_step,
+            mode,
+            proj,
+        )?;
+        self.data_step += 1;
+        if let Some(f) = &self.fault {
+            let payload = &mut grads[f.shard].payload;
+            let m = payload.get_mut(&f.param).ok_or_else(|| {
+                format!("fault injection: no parameter {:?} in the payload", f.param)
+            })?;
+            m.data[0] = f32::NAN;
+            if m.data.len() > 1 {
+                m.data[1] = f32::INFINITY;
+            }
+        }
+        self.ledger.record_step(self.bytes_sent_per_step, self.bytes_full_per_step);
+        // fixed-order loss mean: ascending shard order, then one divide
+        let mut loss_sum = 0.0f32;
+        for g in &grads {
+            loss_sum += g.loss;
+        }
+        let loss = loss_sum / self.plan.shards as f32;
+        let payloads: Vec<BTreeMap<String, Matrix>> =
+            grads.into_iter().map(|g| g.payload).collect();
+        Ok((loss, reduce_fixed_order(&payloads)))
+    }
+
+    /// One optimizer step (τ data steps in accumulation mode).
+    pub fn train_step(&mut self) -> Result<f32, String> {
+        let mode = self.cfg.reduce;
+        let rank = self.cfg.rank();
+        let lr = self.cfg.train.lr;
+        let step_f = self.opt_step as f32;
+        let shards_f = self.plan.shards as f32;
+        let loss = match self.mode {
+            DpMode::Accumulation => {
+                let tau = self.cfg.train.tau;
+                let cycle_seed = self.accum_seeds.current() as u64;
+                let proj = StepProjection { rank, cycle_seed };
+                let mut loss_sum = 0.0f32;
+                for _micro in 0..tau {
+                    let (loss, reduced) = self.reduced_step(mode, proj)?;
+                    loss_sum += loss;
+                    // fold the reduced payload into the accumulators;
+                    // under `full` reduce the projectables are compressed
+                    // HERE (post-reduction) instead of on the workers —
+                    // same optimizer semantics, ~d/r× the bytes
+                    for (idx, (name, r)) in reduced.iter().enumerate() {
+                        let acc = self.method.get_mut(name).expect("method state");
+                        if is_projectable(name) && mode == ReduceMode::Full {
+                            self.comp.accumulate(acc, r, rp::param_seed(cycle_seed, idx));
+                        } else {
+                            acc.add_scaled_inplace(r, 1.0);
+                        }
+                    }
+                }
+                // cycle end: decompress ÷(τ·S) — each reduced payload was
+                // a SUM over shards of shard-means — and base-step
+                for (idx, (name, w)) in self.params.iter_mut().enumerate() {
+                    let acc = self.method.get_mut(name).expect("method state");
+                    let st = self.opt_state.get_mut(name).expect("opt state");
+                    if is_projectable(name) {
+                        self.comp.apply_accumulated(
+                            w,
+                            acc,
+                            st,
+                            rp::param_seed(cycle_seed, idx),
+                            (tau * self.plan.shards) as f32,
+                            lr,
+                            step_f,
+                        )?;
+                    } else {
+                        let ghat = acc.scale(1.0 / (tau as f32 * shards_f));
+                        self.comp.base().update(w, &ghat, st, lr, step_f)?;
+                    }
+                    *acc = Matrix::zeros(acc.rows, acc.cols);
+                }
+                self.accum_seeds.advance();
+                loss_sum / tau as f32
+            }
+            DpMode::Momentum => {
+                let tick = self.momentum_seeds.tick();
+                let resample = tick.resample > 0.5;
+                let active = if resample { tick.seed_next } else { tick.seed_cur } as u64;
+                let proj = StepProjection { rank, cycle_seed: active };
+                let (loss, reduced) = self.reduced_step(mode, proj)?;
+                for (idx, (name, w)) in self.params.iter_mut().enumerate() {
+                    let r = &reduced[name];
+                    let mom = self.method.get_mut(name).expect("method state");
+                    let st = self.opt_state.get_mut(name).expect("opt state");
+                    if is_projectable(name) {
+                        let ptick = SubspaceTick {
+                            seed_cur: rp::param_seed(tick.seed_cur as u64, idx),
+                            seed_next: rp::param_seed(tick.seed_next as u64, idx),
+                            resample,
+                            transfer: true,
+                        };
+                        // mean over shards; under `full` reduce, compress
+                        // the mean with the ACTIVE projection first
+                        let c = if mode == ReduceMode::Full {
+                            let a = self
+                                .comp
+                                .projection(rp::param_seed(active, idx), w.cols);
+                            rp::compress(&r.scale(1.0 / shards_f), &a)
+                        } else {
+                            r.scale(1.0 / shards_f)
+                        };
+                        self.comp
+                            .momentum_step_compressed(w, mom, st, &c, ptick, lr, step_f)?;
+                    } else {
+                        // full-space EMA, exactly as the single-process
+                        // native runtime treats non-projectables
+                        let g = r.scale(1.0 / shards_f);
+                        let mut next = mom.scale(MOMENTUM_BETA);
+                        next.add_scaled_inplace(&g, 1.0 - MOMENTUM_BETA);
+                        self.comp.base().update(w, &next, st, lr, step_f)?;
+                        *mom = next;
+                    }
+                }
+                loss
+            }
+        };
+        self.opt_step += 1;
+        Ok(loss)
+    }
+
+    /// Train for the configured number of optimizer steps.
+    pub fn run(&mut self) -> Result<DpReport, String> {
+        let timer = Timer::start();
+        let steps = self.cfg.train.steps;
+        let mut train_losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            train_losses.push(self.train_step()?);
+        }
+        let wallclock_secs = timer.elapsed_secs();
+        Ok(DpReport {
+            train_losses,
+            ledger: self.ledger,
+            wallclock_secs,
+            steps_per_sec: if wallclock_secs > 0.0 { steps as f64 / wallclock_secs } else { 0.0 },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::OptimizerKind;
+    use crate::tensor::Parallelism;
+
+    fn tiny_cfg(workers: usize, steps: usize) -> DpConfig {
+        let mut cfg = DpConfig::default();
+        cfg.train.workers = workers;
+        cfg.train.steps = steps;
+        cfg.train.optimizer = OptimizerKind::Sgd;
+        cfg.train.parallelism = Parallelism::single();
+        cfg
+    }
+
+    #[test]
+    fn trainer_runs_and_ledger_counts_every_data_step() {
+        let mut t = DpTrainer::new(tiny_cfg(1, 3)).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.train_losses.len(), 3);
+        assert!(report.train_losses.iter().all(|l| l.is_finite()));
+        // tau = 1: one data step per optimizer step
+        assert_eq!(report.ledger.steps, 3);
+        assert!(report.ledger.bytes_sent < report.ledger.bytes_full);
+    }
+
+    #[test]
+    fn unknown_model_error_names_the_dp_capable_family() {
+        let mut cfg = tiny_cfg(1, 1);
+        cfg.train.model = "lm-small".into();
+        let e = DpTrainer::new(cfg).unwrap_err();
+        assert!(e.contains("lora-tiny"), "{e}");
+        assert!(e.contains("list-catalog"), "{e}");
+    }
+
+    #[test]
+    fn accumulation_mode_consumes_tau_data_steps() {
+        let mut cfg = tiny_cfg(1, 2);
+        cfg.train.tau = 3;
+        let mut t = DpTrainer::new(cfg).unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.ledger.steps, 6, "2 opt steps x tau 3 data steps");
+    }
+}

@@ -1,0 +1,216 @@
+//! The fixed-order compressed all-reduce and its byte ledger.
+//!
+//! One dp data step produces `shards` payloads (per-parameter compressed
+//! states, or raw gradients in `full` mode). [`reduce_fixed_order`] sums
+//! them **in ascending shard order, on the calling thread**, via
+//! `Matrix::reduce_sum` — every element accumulates shard contributions
+//! left-to-right with a single f32 accumulator, so the reduced value is
+//! bit-identical no matter how many workers produced the payloads or how
+//! the kernel pool banded the rows. This is the second half of the
+//! tier's W-invariance proof (docs/DISTRIBUTED.md).
+//!
+//! [`CommsLedger`] does the paper's accounting: what crossed the
+//! reduction boundary (`bytes_sent`) vs what full-gradient exchange
+//! would have moved (`bytes_full`). Both are exact integer counts, so
+//! the compression ratio is testable with `==`, not tolerance.
+
+use std::collections::BTreeMap;
+
+use crate::model::is_projectable;
+use crate::tensor::Matrix;
+
+/// What workers put on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceMode {
+    /// rank-r projected states for projectable params (`C = G Aᵀ`,
+    /// `n×r` floats instead of `n×m`) — the paper's thesis as a comms
+    /// strategy
+    Compressed,
+    /// raw gradients — the A/B baseline the ledger compares against
+    Full,
+}
+
+impl ReduceMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "compressed" => Ok(ReduceMode::Compressed),
+            "full" => Ok(ReduceMode::Full),
+            _ => Err(format!("unknown reduce mode {s:?} (want compressed|full)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceMode::Compressed => "compressed",
+            ReduceMode::Full => "full",
+        }
+    }
+}
+
+impl std::fmt::Display for ReduceMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Exact byte accounting of the gradient exchange, accumulated per data
+/// step. "Sent" counts every shard's upload into the reduction (the
+/// all-reduce ingress — the quantity the rank knob shrinks); "full" is
+/// the same step under [`ReduceMode::Full`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommsLedger {
+    pub steps: u64,
+    pub bytes_sent: u64,
+    pub bytes_full: u64,
+}
+
+impl CommsLedger {
+    pub fn record_step(&mut self, sent: u64, full: u64) {
+        self.steps += 1;
+        self.bytes_sent += sent;
+        self.bytes_full += full;
+    }
+
+    /// bytes_sent / bytes_full — the measured compression ratio; 1.0
+    /// for a `full`-mode run, ~`r/d` for compressed at square shapes.
+    pub fn ratio(&self) -> f64 {
+        if self.bytes_full == 0 {
+            1.0
+        } else {
+            self.bytes_sent as f64 / self.bytes_full as f64
+        }
+    }
+
+    pub fn per_step_sent(&self) -> u64 {
+        if self.steps == 0 {
+            0
+        } else {
+            self.bytes_sent / self.steps
+        }
+    }
+
+    pub fn per_step_full(&self) -> u64 {
+        if self.steps == 0 {
+            0
+        } else {
+            self.bytes_full / self.steps
+        }
+    }
+}
+
+/// Analytic upload volume of ONE data step: `shards × Σ_p payload(p)`
+/// bytes, where a projectable `n×m` parameter ships `n×r` f32s under
+/// [`ReduceMode::Compressed`] and `n×m` otherwise (non-projectables —
+/// embeddings, LN scales — always go full-size, exactly as Algorithm 1
+/// keeps them uncompressed). The trainer's ledger and the
+/// `BENCH_dp.json` mirror both derive from this one formula, so the
+/// measured-vs-analytic check in the tests is exact.
+pub fn step_bytes(
+    shapes: &[(String, [usize; 2])],
+    rank: usize,
+    shards: usize,
+    mode: ReduceMode,
+) -> u64 {
+    let per_shard: u64 = shapes
+        .iter()
+        .map(|(name, [n, m])| {
+            let floats = if mode == ReduceMode::Compressed && is_projectable(name) {
+                n * rank
+            } else {
+                n * m
+            };
+            4 * floats as u64
+        })
+        .sum();
+    per_shard * shards as u64
+}
+
+/// Sum the per-shard payloads in **fixed ascending shard order**. All
+/// payloads must carry identical key sets (the workers build them from
+/// the same complete gradient `ParamSet`). Runs on the calling thread;
+/// the inner elementwise sums may band across the pool without
+/// affecting any element's summation order (`Matrix::reduce_sum`).
+pub fn reduce_fixed_order(payloads: &[BTreeMap<String, Matrix>]) -> BTreeMap<String, Matrix> {
+    assert!(!payloads.is_empty(), "reduce of zero shards");
+    let mut out = BTreeMap::new();
+    for name in payloads[0].keys() {
+        let srcs: Vec<&Matrix> = payloads
+            .iter()
+            .map(|p| p.get(name).expect("shard payloads must share keys"))
+            .collect();
+        out.insert(name.clone(), Matrix::reduce_sum(&srcs));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        assert_eq!(ReduceMode::parse("compressed").unwrap(), ReduceMode::Compressed);
+        assert_eq!(ReduceMode::parse("full").unwrap(), ReduceMode::Full);
+        assert_eq!(ReduceMode::Compressed.to_string(), "compressed");
+        assert!(ReduceMode::parse("gzip").unwrap_err().contains("compressed|full"));
+    }
+
+    #[test]
+    fn ledger_arithmetic_is_exact() {
+        let mut l = CommsLedger::default();
+        l.record_step(100, 400);
+        l.record_step(100, 400);
+        assert_eq!(l.steps, 2);
+        assert_eq!(l.per_step_sent(), 100);
+        assert_eq!(l.per_step_full(), 400);
+        assert_eq!(l.ratio(), 0.25);
+        assert_eq!(CommsLedger::default().ratio(), 1.0);
+    }
+
+    #[test]
+    fn step_bytes_compresses_only_projectables() {
+        let shapes = vec![
+            ("embed/tok".to_string(), [64usize, 32usize]),
+            ("layer0/attn/wq".to_string(), [32, 32]),
+        ];
+        let rank = 8;
+        let full = step_bytes(&shapes, rank, 2, ReduceMode::Full);
+        let comp = step_bytes(&shapes, rank, 2, ReduceMode::Compressed);
+        // full: 2 shards * 4B * (64*32 + 32*32); compressed swaps the
+        // attn matrix for 32*8
+        assert_eq!(full, 2 * 4 * (64 * 32 + 32 * 32));
+        assert_eq!(comp, 2 * 4 * (64 * 32 + 32 * 8));
+    }
+
+    #[test]
+    fn reduce_fixed_order_is_left_to_right_per_element() {
+        let mk = |v: f32| {
+            let mut m = BTreeMap::new();
+            m.insert("w".to_string(), Matrix::from_vec(1, 2, vec![v, v * 2.0]));
+            m
+        };
+        let reduced = reduce_fixed_order(&[mk(1.0), mk(10.0), mk(100.0)]);
+        // oracle: explicit serial left-to-right sum
+        let mut oracle = Matrix::zeros(1, 2);
+        for v in [1.0f32, 10.0, 100.0] {
+            oracle.add_scaled_inplace(&Matrix::from_vec(1, 2, vec![v, v * 2.0]), 1.0);
+        }
+        let got: Vec<u32> = reduced["w"].data.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = oracle.data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn reduce_preserves_nan_and_inf() {
+        let mk = |v: f32| {
+            let mut m = BTreeMap::new();
+            m.insert("w".to_string(), Matrix::from_vec(1, 2, vec![v, 1.0]));
+            m
+        };
+        let reduced = reduce_fixed_order(&[mk(f32::NAN), mk(2.0)]);
+        assert!(reduced["w"].data[0].is_nan(), "NaN must survive the reduce");
+        assert_eq!(reduced["w"].data[1], 3.0);
+        let reduced = reduce_fixed_order(&[mk(f32::INFINITY), mk(2.0)]);
+        assert!(reduced["w"].data[0].is_infinite());
+    }
+}

@@ -1,0 +1,102 @@
+//! Deterministic corpus sharding: the logical shard grid of a dp run.
+//!
+//! The grid is **fixed by config, never by worker count**. `shards`
+//! defines both the data partition (which documents feed which gradient
+//! shard — see `LmTask::fill_shard_batch`) and the reduction slots the
+//! reducer sums in ascending order. Workers only claim shards
+//! round-robin, so changing `--workers` changes *which thread* computes
+//! a shard, never *what* is computed or *in what order* it is reduced —
+//! the first half of the tier's W-invariance proof (docs/DISTRIBUTED.md).
+
+use crate::data::corpus::LmTask;
+use crate::data::LmBatch;
+
+/// The shard grid of one dp run: `shards` gradient shards per data
+/// step, each a `batch`-row block of the deterministic document stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub shards: usize,
+    /// rows per shard batch (the per-shard micro-batch size)
+    pub batch: usize,
+}
+
+impl ShardPlan {
+    pub fn new(shards: usize, batch: usize) -> Self {
+        assert!(shards >= 1, "a dp run needs at least one shard");
+        assert!(batch >= 1, "a shard batch needs at least one row");
+        Self { shards, batch }
+    }
+
+    /// First document index of `(step, shard)`: contiguous blocks in
+    /// shard order, so concatenating the shards of consecutive steps
+    /// reproduces the serial stream exactly (regression-tested in
+    /// `data::corpus`).
+    pub fn start_cursor(&self, step: u64, shard: usize) -> u64 {
+        debug_assert!(shard < self.shards);
+        (step * self.shards as u64 + shard as u64) * self.batch as u64
+    }
+
+    /// Shards owned by worker `w` of `workers`: round-robin `w, w+W,
+    /// w+2W, …` — every shard lands on exactly one worker for any
+    /// `workers >= 1`, and `workers = shards` gives one shard each.
+    pub fn assignment(&self, workers: usize, w: usize) -> Vec<usize> {
+        (w..self.shards).step_by(workers.max(1)).collect()
+    }
+
+    /// Fill `out` with shard `shard`'s rows of data step `step`.
+    pub fn fill(&self, task: &LmTask, out: &mut LmBatch, split: u64, step: u64, shard: usize) {
+        debug_assert_eq!(out.batch, self.batch);
+        task.fill_shard_batch(out, split, step, shard, self.shards);
+    }
+
+    /// Documents one data step consumes across all shards.
+    pub fn docs_per_step(&self) -> u64 {
+        (self.shards * self.batch) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_partitions_all_shards() {
+        let plan = ShardPlan::new(7, 2);
+        for workers in 1..=7 {
+            let mut seen = vec![0usize; plan.shards];
+            for w in 0..workers {
+                for s in plan.assignment(workers, w) {
+                    seen[s] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "workers={workers}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn start_cursor_is_contiguous_in_shard_order() {
+        let plan = ShardPlan::new(4, 3);
+        let mut want = 0u64;
+        for step in 0..3u64 {
+            for shard in 0..plan.shards {
+                assert_eq!(plan.start_cursor(step, shard), want);
+                want += plan.batch as u64;
+            }
+        }
+        assert_eq!(plan.docs_per_step(), 12);
+    }
+
+    #[test]
+    fn fill_agrees_with_corpus_shard_addressing() {
+        // ShardPlan::fill and LmTask::fill_shard_batch must share one
+        // cursor formula — cross-layer consistency check
+        let t = LmTask::new(128, 16, 3);
+        let plan = ShardPlan::new(4, 2);
+        let mut a = LmBatch::zeros(2, 16);
+        let mut b = LmBatch::zeros(2, 16);
+        plan.fill(&t, &mut a, 0, 5, 3);
+        let mut cursor = plan.start_cursor(5, 3);
+        t.fill_batch(&mut b, 0, &mut cursor);
+        assert_eq!(a.tokens, b.tokens);
+    }
+}

@@ -1,0 +1,195 @@
+//! The in-process worker tier: shard gradients computed (and, in
+//! compressed mode, rank-r projected) concurrently on the persistent
+//! kernel pool.
+//!
+//! A worker is not a stateful object — it is a *task index* handed to
+//! `tensor::pool_tasks`, which walks its round-robin shard assignment
+//! and deposits each shard's result in that **shard's** slot. Nothing a
+//! worker computes depends on which thread ran it: the shard batch is a
+//! pure function of `(step, shard)`, the forward/backward kernels are
+//! bit-identical at every thread budget, and the projection is
+//! regenerated from the per-parameter seed. The reducer then walks the
+//! slots in ascending shard order — so the whole step is a deterministic
+//! function of the config, independent of `workers`.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::reduce::ReduceMode;
+use super::shard::ShardPlan;
+use crate::data::corpus::LmTask;
+use crate::data::LmBatch;
+use crate::model::{is_projectable, ParamSet, TransformerConfig};
+use crate::rp;
+use crate::tensor::{pool_tasks, Matrix};
+
+/// Projection spec of one data step: the Flora rank plus the ACTIVE
+/// cycle/subspace seed (Algorithm-1 cycle seed, or Algorithm-2 active
+/// seed per `SubspaceTick::active_seed`). Per-parameter seeds derive
+/// from it by enumeration index over the sorted `ParamSet`, exactly as
+/// the single-process runtime does.
+#[derive(Clone, Copy, Debug)]
+pub struct StepProjection {
+    pub rank: usize,
+    pub cycle_seed: u64,
+}
+
+/// One shard's contribution to a step: its masked-mean loss and its
+/// wire payload (compressed states for projectable params under
+/// [`ReduceMode::Compressed`], raw gradients otherwise).
+#[derive(Clone, Debug)]
+pub struct ShardGrad {
+    pub loss: f32,
+    pub payload: BTreeMap<String, Matrix>,
+}
+
+/// Compute ONE shard's gradient payload for data step `step`.
+pub fn shard_grad(
+    model: &TransformerConfig,
+    params: &ParamSet,
+    task: &LmTask,
+    plan: &ShardPlan,
+    split: u64,
+    step: u64,
+    shard: usize,
+    mode: ReduceMode,
+    proj: StepProjection,
+) -> Result<ShardGrad, String> {
+    let mut batch = LmBatch::zeros(plan.batch, model.seq_len);
+    plan.fill(task, &mut batch, split, step, shard);
+    let (loss, grads) = model.loss_and_grad(
+        params,
+        &batch.tokens,
+        &batch.mask,
+        plan.batch,
+        model.seq_len,
+        true,
+    )?;
+    let payload = match mode {
+        ReduceMode::Compressed => grads
+            .iter()
+            .enumerate()
+            .map(|(idx, (name, g))| {
+                if is_projectable(name) {
+                    let seed = rp::param_seed(proj.cycle_seed, idx);
+                    let a = rp::projection(seed, proj.rank, g.cols);
+                    (name.clone(), rp::compress(g, &a))
+                } else {
+                    (name.clone(), g.clone())
+                }
+            })
+            .collect(),
+        ReduceMode::Full => grads,
+    };
+    Ok(ShardGrad { loss, payload })
+}
+
+/// Run every shard of one data step across `workers` pool tasks and
+/// return the results **indexed by shard** — slot `s` holds shard `s`
+/// no matter which worker computed it. Errors from any shard surface
+/// (lowest shard index wins, deterministically).
+#[allow(clippy::too_many_arguments)]
+pub fn run_step_workers(
+    model: &TransformerConfig,
+    params: &ParamSet,
+    task: &LmTask,
+    plan: &ShardPlan,
+    workers: usize,
+    split: u64,
+    step: u64,
+    mode: ReduceMode,
+    proj: StepProjection,
+) -> Result<Vec<ShardGrad>, String> {
+    let slots: Vec<Mutex<Option<Result<ShardGrad, String>>>> =
+        (0..plan.shards).map(|_| Mutex::new(None)).collect();
+    let workers = workers.clamp(1, plan.shards);
+    pool_tasks(workers, |w| {
+        for shard in plan.assignment(workers, w) {
+            let r = shard_grad(model, params, task, plan, split, step, shard, mode, proj);
+            *slots[shard].lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
+        }
+    });
+    let mut out = Vec::with_capacity(plan.shards);
+    for (shard, slot) in slots.into_iter().enumerate() {
+        let r = slot
+            .into_inner()
+            .unwrap_or_else(|p| p.into_inner())
+            .unwrap_or_else(|| Err(format!("shard {shard} produced no result")));
+        out.push(r?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_counts_are_invisible_in_the_results() {
+        // the unit-level half of the tier's bit-identity claim: the same
+        // step computed by 1, 2, and 4 workers yields byte-identical
+        // shard slots
+        let model = TransformerConfig::tiny();
+        let params = model.init(0);
+        let task = LmTask::new(model.vocab, model.seq_len, 7);
+        let plan = ShardPlan::new(4, 2);
+        let proj = StepProjection { rank: 4, cycle_seed: 99 };
+        let run = |workers: usize| {
+            run_step_workers(
+                &model,
+                &params,
+                &task,
+                &plan,
+                workers,
+                0,
+                0,
+                ReduceMode::Compressed,
+                proj,
+            )
+            .unwrap()
+        };
+        let base = run(1);
+        for workers in [2usize, 4] {
+            let got = run(workers);
+            assert_eq!(got.len(), base.len());
+            for (s, (a, b)) in base.iter().zip(&got).enumerate() {
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "shard {s} loss");
+                for (name, ma) in &a.payload {
+                    let mb = &b.payload[name];
+                    let ba: Vec<u32> = ma.data.iter().map(|x| x.to_bits()).collect();
+                    let bb: Vec<u32> = mb.data.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(ba, bb, "workers={workers} shard {s} {name}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_payloads_project_only_projectables() {
+        let model = TransformerConfig::tiny();
+        let params = model.init(0);
+        let task = LmTask::new(model.vocab, model.seq_len, 7);
+        let plan = ShardPlan::new(2, 2);
+        let proj = StepProjection { rank: 4, cycle_seed: 5 };
+        let g = shard_grad(
+            &model,
+            &params,
+            &task,
+            &plan,
+            0,
+            0,
+            0,
+            ReduceMode::Compressed,
+            proj,
+        )
+        .unwrap();
+        for (name, m) in &g.payload {
+            let full = &params[name];
+            if is_projectable(name) {
+                assert_eq!((m.rows, m.cols), (full.rows, proj.rank), "{name}");
+            } else {
+                assert_eq!((m.rows, m.cols), (full.rows, full.cols), "{name}");
+            }
+        }
+    }
+}

@@ -20,10 +20,18 @@
 //! capacity-bounded LRU adapter registry and a dynamic batcher feeding
 //! the KV-cache multi-adapter decode of `model::decode`, behind the
 //! `flora serve` subcommand. `docs/SERVING.md` is the handbook.
+//!
+//! The **data-parallel tier** ([`dp`]) trains the native LM family with
+//! Flora-compressed gradient exchange behind `flora train-dp`: workers
+//! on the persistent kernel pool ship rank-r projected gradients into a
+//! fixed-order reduce, bit-identical at every `--workers`, with a
+//! [`CommsLedger`] accounting the O(rd)-vs-O(d²) bytes.
+//! `docs/DISTRIBUTED.md` is the handbook.
 
 pub mod adapters;
 pub mod backend;
 pub mod client;
+pub mod dp;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "xla")]
@@ -34,6 +42,7 @@ pub mod values;
 
 pub use adapters::{AdapterProvenance, AdapterRegistry, AdapterStats};
 pub use backend::{Backend, BackendExec};
+pub use dp::{CommsLedger, DpReport, DpTrainer, ReduceMode, ShardPlan};
 pub use serve::{BatchPolicy, Batcher, Server, ServeRequest, ServeResponse};
 pub use client::{Executable, Runtime};
 pub use manifest::{Manifest, ModelInfo, TensorSpec};

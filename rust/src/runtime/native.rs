@@ -209,6 +209,12 @@ pub fn catalog_summary(manifest: &Manifest) -> String {
         let fam = info.name.split('-').next().unwrap_or(&info.name);
         families.entry(fam).or_default().push(info);
     }
+    // models `flora train-dp` can shard (the native transformer LM grid)
+    let dp_capable: Vec<&str> = crate::model::TransformerConfig::catalog_grid()
+        .iter()
+        .map(|(n, _)| *n)
+        .collect();
+    let mut any_dp = false;
     for (fam, mut infos) in families {
         infos.sort_by_key(|m| {
             (m.get("d_model").unwrap_or(0), m.get("vocab").unwrap_or(0), m.name.clone())
@@ -223,10 +229,16 @@ pub fn catalog_summary(manifest: &Manifest) -> String {
                 *patterns.entry(collapse_entry(entry)).or_default() += 1;
             }
             let total: usize = patterns.values().sum();
+            let dp_tag = if dp_capable.contains(&info.name.as_str()) {
+                any_dp = true;
+                " [dp]"
+            } else {
+                ""
+            };
             let _ = writeln!(
                 out,
-                "  {} (kind {}, {} entries):",
-                info.name, info.kind, total
+                "  {} (kind {}, {} entries){}:",
+                info.name, info.kind, total, dp_tag
             );
             for (pat, n) in patterns {
                 if n == 1 {
@@ -236,6 +248,13 @@ pub fn catalog_summary(manifest: &Manifest) -> String {
                 }
             }
         }
+    }
+    if any_dp {
+        let _ = writeln!(
+            out,
+            "\n[dp] = runs under `flora train-dp` (Flora-compressed \
+             data-parallel training; docs/DISTRIBUTED.md)"
+        );
     }
     out
 }
@@ -2360,6 +2379,29 @@ mod tests {
         assert_eq!(collapse_entry("mom_step_flora_notransfer_r16_adafactor_nofactor"),
             "mom_step_flora_notransfer_r{N}_{opt}");
         assert_eq!(collapse_entry("micro_naive"), "micro_naive");
+    }
+
+    #[test]
+    fn catalog_summary_marks_dp_capable_models() {
+        let (manifest, _) = catalog();
+        let s = catalog_summary(&manifest);
+        // every train-dp-capable model (the native transformer LM grid)
+        // carries the [dp] tag; bigram LMs and ViTs do not
+        for name in ["lora-tiny", "lora-small", "lora-base"] {
+            let line = s
+                .lines()
+                .find(|l| l.trim_start().starts_with(&format!("{name} (")))
+                .unwrap_or_else(|| panic!("no summary line for {name}:\n{s}"));
+            assert!(line.contains("[dp]"), "{line}");
+        }
+        for name in ["lm-small", "vit-tiny"] {
+            let line = s
+                .lines()
+                .find(|l| l.trim_start().starts_with(&format!("{name} (")))
+                .unwrap_or_else(|| panic!("no summary line for {name}:\n{s}"));
+            assert!(!line.contains("[dp]"), "{line}");
+        }
+        assert!(s.contains("train-dp"), "legend missing:\n{s}");
     }
 
     #[test]

@@ -217,6 +217,14 @@ impl Default for Parallelism {
     }
 }
 
+/// Ceiling on the total thread fan-out one process may configure:
+/// `workers × parallelism` (data-parallel worker tasks times the kernel
+/// band budget each may use) must stay within this. The config/CLI
+/// layers reject violations loudly BEFORE any pool growth happens —
+/// the pool is grow-only, so an absurd budget would otherwise pin
+/// threads for the process lifetime.
+pub const POOL_BUDGET: usize = 64;
+
 // ---------------------------------------------------------------------
 // the persistent worker pool
 // ---------------------------------------------------------------------
@@ -500,6 +508,120 @@ where
     if panicked {
         panic!("a parallel kernel band panicked on a pool worker");
     }
+}
+
+// ---------------------------------------------------------------------
+// task fan-out (the dp worker tier rides the same pool)
+// ---------------------------------------------------------------------
+
+unsafe fn call_task<F>(ctx: *const (), _band: &mut [f32], index: usize, _rows: usize)
+where
+    F: Fn(usize) + Sync,
+{
+    let task = &*(ctx as *const F);
+    task(index);
+}
+
+/// Run `task(0) .. task(n-1)` concurrently on the persistent pool and
+/// return once every index has completed exactly once. This is the
+/// fan-out primitive under the data-parallel worker tier
+/// (`runtime::dp`): each index is one dp worker's slice of a step.
+///
+/// Task 0 runs on the calling thread while 1..n are enqueued as pool
+/// jobs (reusing [`Job`] with an empty band — the trampoline carries
+/// the task index in the `first` slot). Serial (a plain in-order loop)
+/// when `n <= 1` or the caller is itself a pool worker.
+///
+/// Scheduling is intentionally allowed to vary run-to-run; nothing a
+/// task computes may depend on *which thread* ran it. The dp tier keeps
+/// its bit-identity contract because each task writes only its own
+/// result slot and all cross-task reduction happens in fixed index
+/// order on the calling thread afterwards.
+///
+/// No deadlock with nested kernels: a task's own `par_rows` calls may
+/// enqueue band jobs behind busy workers, but pool workers never wait
+/// on the pool (their nested kernels degrade to serial via
+/// `IS_POOL_WORKER`), so every queued job is eventually drained.
+pub fn pool_tasks<F>(n: usize, task: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n <= 1 || IS_POOL_WORKER.with(|w| w.get()) {
+        for i in 0..n {
+            task(i);
+        }
+        return;
+    }
+
+    let latch = Latch::new(n - 1);
+    let sender = ensure_pool(n - 1);
+    for i in 1..n {
+        let job = Job {
+            call: call_task::<F>,
+            ctx: &task as *const F as *const (),
+            band: std::ptr::NonNull::<f32>::dangling().as_ptr(),
+            band_len: 0,
+            first: i,
+            rows: 0,
+            latch: &latch as *const Latch,
+        };
+        if let Err(err) = sender.send(job) {
+            // pool shut down between ensure and send: run the task here
+            err.0.run();
+        }
+    }
+
+    // mirror par_rows_pool: even if task 0 panics, wait for in-flight
+    // jobs before the frame (and the raw latch/ctx pointers) dies
+    struct WaitGuard<'a>(&'a Latch);
+    impl Drop for WaitGuard<'_> {
+        fn drop(&mut self) {
+            self.0.wait();
+        }
+    }
+    let guard = WaitGuard(&latch);
+    task(0);
+    drop(guard);
+
+    let panicked = {
+        let st = match latch.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        st.panicked
+    };
+    if panicked {
+        panic!("a data-parallel worker task panicked on a pool worker");
+    }
+}
+
+/// Panel-local fixed-order reduction: `dst[e] += Σ_s srcs[s][e]` with
+/// every element's additions in ascending source order. Row bands may
+/// run on the pool, but banding never changes an element's summation
+/// order (each element belongs to exactly one band and accumulates
+/// source-by-source with one f32 accumulator), so the reduction is
+/// bit-identical at every thread budget — the same argument as the
+/// GEMM kernels'. This is the dp tier's all-reduce core.
+pub(crate) fn reduce_rows_in_order(
+    dst: &mut [f32],
+    rows: usize,
+    row_width: usize,
+    srcs: &[&[f32]],
+) {
+    debug_assert_eq!(dst.len(), rows * row_width);
+    for s in srcs {
+        debug_assert_eq!(s.len(), dst.len());
+    }
+    let flops = rows * row_width * srcs.len();
+    par_rows(dst, rows, row_width, flops, |band, first, n| {
+        let lo = first * row_width;
+        let hi = lo + n * row_width;
+        for src in srcs {
+            for (d, s) in band.iter_mut().zip(&src[lo..hi]) {
+                *d += *s;
+            }
+        }
+    });
 }
 
 // ---------------------------------------------------------------------
@@ -829,5 +951,105 @@ mod tests {
         for r in 0..12 {
             assert!(out[r * 3..(r + 1) * 3].iter().all(|&x| x == r as f32));
         }
+    }
+
+    #[test]
+    fn pool_tasks_runs_every_index_exactly_once() {
+        let _g = lock();
+        for n in [1usize, 2, 3, 4] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool_tasks(n, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "n={n} task {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_tasks_nested_kernels_complete() {
+        let _g = lock();
+        let before = Parallelism::current();
+        Parallelism::new(2).install();
+        // each task runs a pool-eligible kernel of its own; tasks on pool
+        // workers degrade those to serial, task 0 may fan out — results
+        // must be identical either way
+        let outs: Vec<Mutex<Vec<f32>>> = (0..3).map(|_| Mutex::new(Vec::new())).collect();
+        pool_tasks(3, |i| {
+            let (rows, width) = (16usize, 4usize);
+            let mut out = vec![0.0f32; rows * width];
+            par_rows(&mut out, rows, width, PAR_MIN_FLOPS * 2, |band, first, n| {
+                for r in 0..n {
+                    for x in band[r * width..(r + 1) * width].iter_mut() {
+                        *x = (first + r) as f32;
+                    }
+                }
+            });
+            *outs[i].lock().unwrap() = out;
+        });
+        before.install();
+        let first = outs[0].lock().unwrap().clone();
+        assert!(!first.is_empty());
+        for o in &outs {
+            assert_eq!(*o.lock().unwrap(), first);
+        }
+    }
+
+    #[test]
+    fn pool_tasks_panic_propagates_without_deadlock() {
+        let _g = lock();
+        let caught = std::panic::catch_unwind(|| {
+            pool_tasks(3, |i| {
+                if i == 2 {
+                    panic!("boom in task {i}");
+                }
+            });
+        });
+        assert!(caught.is_err(), "task panic must surface on the caller");
+    }
+
+    #[test]
+    fn reduce_rows_in_order_is_serial_left_to_right_sum_at_any_budget() {
+        let _g = lock();
+        let (rows, width, nsrc) = (13usize, 7, 5);
+        let srcs: Vec<Vec<f32>> = (0..nsrc)
+            .map(|s| {
+                (0..rows * width)
+                    .map(|e| ((s * 31 + e * 17) % 97) as f32 * 0.13 - 6.0)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = srcs.iter().map(|s| s.as_slice()).collect();
+        // oracle: plain in-order loop, one accumulator per element
+        let mut oracle = vec![0.0f32; rows * width];
+        for s in &srcs {
+            for (d, x) in oracle.iter_mut().zip(s) {
+                *d += *x;
+            }
+        }
+        let before = Parallelism::current();
+        for budget in [1usize, 2, 4] {
+            Parallelism::new(budget).install();
+            let mut dst = vec![0.0f32; rows * width];
+            reduce_rows_in_order(&mut dst, rows, width, &refs);
+            let a: Vec<u32> = dst.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = oracle.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "budget {budget}");
+        }
+        before.install();
+    }
+
+    #[test]
+    fn reduce_rows_in_order_preserves_non_finite() {
+        let _g = lock();
+        let mut dst = vec![0.0f32; 4];
+        let a = [1.0f32, f32::NAN, f32::INFINITY, -1.0];
+        let b = [2.0f32, 1.0, f32::NEG_INFINITY, 3.0];
+        reduce_rows_in_order(&mut dst, 1, 4, &[&a, &b]);
+        assert_eq!(dst[0], 3.0);
+        assert!(dst[1].is_nan(), "NaN must not be laundered by the reduce");
+        assert!(dst[2].is_nan(), "inf + -inf is NaN");
+        assert_eq!(dst[3], 2.0);
     }
 }

@@ -217,6 +217,24 @@ impl Matrix {
         }
     }
 
+    /// Fixed-order sum of equally-shaped matrices — the dp tier's
+    /// reduction core. Every element accumulates its terms in ascending
+    /// `srcs` order with one f32 accumulator, independent of how the
+    /// row bands land on the kernel pool, so the result is bit-identical
+    /// at every thread budget and for every physical worker layout that
+    /// produced the sources (see `tensor::kernels::reduce_rows_in_order`).
+    pub fn reduce_sum(srcs: &[&Matrix]) -> Matrix {
+        assert!(!srcs.is_empty(), "reduce_sum needs at least one source");
+        let (rows, cols) = srcs[0].shape();
+        for s in srcs {
+            assert_eq!(s.shape(), (rows, cols), "reduce_sum shape mismatch");
+        }
+        let mut out = Matrix::zeros(rows, cols);
+        let slices: Vec<&[f32]> = srcs.iter().map(|s| s.data.as_slice()).collect();
+        super::kernels::reduce_rows_in_order(&mut out.data, rows, cols, &slices);
+        out
+    }
+
     /// self += other * s (fused update used by the pilot's SGD rules).
     pub fn add_scaled_inplace(&mut self, other: &Matrix, s: f32) {
         assert_eq!(self.shape(), other.shape());
@@ -317,6 +335,22 @@ mod tests {
 
     fn m(rows: usize, cols: usize, v: &[f32]) -> Matrix {
         Matrix::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn reduce_sum_is_fixed_order_elementwise() {
+        let a = m(2, 2, &[1., 2., 3., 4.]);
+        let b = m(2, 2, &[10., 20., 30., 40.]);
+        let c = m(2, 2, &[100., 200., 300., 400.]);
+        let r = Matrix::reduce_sum(&[&a, &b, &c]);
+        // oracle: explicit left-to-right accumulation
+        let mut oracle = Matrix::zeros(2, 2);
+        for src in [&a, &b, &c] {
+            oracle.add_scaled_inplace(src, 1.0);
+        }
+        let rb: Vec<u32> = r.data.iter().map(|x| x.to_bits()).collect();
+        let ob: Vec<u32> = oracle.data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(rb, ob);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub use batched::{
     scatter_heads_at, softmax_rows_masked, softmax_rows_masked_offset,
     softmax_rows_vjp_batched, BatchedMatrix,
 };
-pub use kernels::{KernelDriver, Parallelism};
+pub use kernels::{pool_tasks, KernelDriver, Parallelism, POOL_BUDGET};
 pub use matrix::Matrix;
 pub use ops::{
     gelu, gelu_grad, relu, rms_norm_rows, rms_norm_rows_vjp, softmax_rows,

@@ -1272,3 +1272,198 @@ fn native_serving_hot_loads_trained_checkpoint_and_serves() {
         assert!(r.batch_size >= 1 && r.batch_size <= 4);
     }
 }
+
+// ---------------------------------------------------------------------
+// data-parallel tier (native, always runs): Flora-compressed gradient
+// exchange — the `flora train-dp` subsystem end-to-end
+// ---------------------------------------------------------------------
+
+use flora::config::DpConfig;
+use flora::runtime::dp::{step_bytes, DpTrainer, GradFault, ReduceMode};
+
+/// Shared dp test config: one kernel thread per worker so that
+/// `workers ≤ 4` stays inside the pool budget the other tests in this
+/// binary install (the warm-pool lifecycle test caps pool growth).
+fn dp_test_cfg(
+    model: &str,
+    opt: OptimizerKind,
+    workers: usize,
+    tau: usize,
+    steps: usize,
+    reduce: ReduceMode,
+) -> DpConfig {
+    use flora::tensor::Parallelism;
+    let mut cfg = DpConfig::default();
+    cfg.train.model = model.to_string();
+    cfg.train.optimizer = opt;
+    cfg.train.workers = workers;
+    cfg.train.tau = tau;
+    cfg.train.steps = steps;
+    cfg.train.kappa = 2; // momentum runs resample within a short test
+    cfg.train.parallelism = Parallelism::single();
+    cfg.shards = 4;
+    cfg.reduce = reduce;
+    cfg
+}
+
+fn dp_run(cfg: DpConfig) -> (Vec<u32>, Vec<(String, Vec<u32>)>) {
+    let mut tr = DpTrainer::new(cfg).unwrap();
+    let report = tr.run().unwrap();
+    let losses = report.train_losses.iter().map(|x| x.to_bits()).collect();
+    let params = tr
+        .params()
+        .iter()
+        .map(|(n, p)| {
+            (n.clone(), p.data.iter().map(|x| x.to_bits()).collect())
+        })
+        .collect();
+    (losses, params)
+}
+
+/// THE dp acceptance gate: the same config trained at W ∈ {1, 2, 4}
+/// produces raw-bits-identical loss curves and final parameters, across
+/// two base optimizers, both Flora modes (Algorithm-1 accumulation with
+/// τ > 1 and Algorithm-2 momentum with κ-resampling inside the run),
+/// and two catalog sizes.
+#[test]
+fn native_dp_bit_identity_across_worker_counts() {
+    let combos: [(&str, OptimizerKind, usize, usize); 3] = [
+        // Algorithm 1: τ = 2 micro-steps share a cycle seed
+        ("lora-tiny", OptimizerKind::Sgd, 2, 4),
+        // Algorithm 2: momentum-in-subspace, κ = 2 resamples mid-run
+        ("lora-tiny", OptimizerKind::Adafactor, 1, 4),
+        ("lora-small", OptimizerKind::Sgd, 1, 2),
+    ];
+    for (model, opt, tau, steps) in combos {
+        let (base_losses, base_params) =
+            dp_run(dp_test_cfg(model, opt, 1, tau, steps, ReduceMode::Compressed));
+        assert!(
+            base_losses.iter().all(|b| f32::from_bits(*b).is_finite()),
+            "{model}/{opt:?}: non-finite loss at W=1"
+        );
+        for workers in [2usize, 4] {
+            let (losses, params) = dp_run(dp_test_cfg(
+                model,
+                opt,
+                workers,
+                tau,
+                steps,
+                ReduceMode::Compressed,
+            ));
+            assert_eq!(
+                losses, base_losses,
+                "{model}/{opt:?} tau={tau}: loss curve diverged at W={workers}"
+            );
+            assert_eq!(
+                params, base_params,
+                "{model}/{opt:?} tau={tau}: final params diverged at W={workers}"
+            );
+        }
+    }
+}
+
+/// A shard poisoned with NaN/Inf must SURFACE in the trained parameters
+/// — never be averaged away or laundered by a skip — and must do so
+/// raw-bits-identically at every worker count (the fault targets a
+/// shard slot, which is the W-independent unit).
+#[test]
+fn native_dp_poisoned_shard_propagates_identically() {
+    let fault = || GradFault {
+        shard: 1,
+        param: "layer0/attn/wq".to_string(),
+    };
+    let run = |workers: usize| {
+        let mut tr = DpTrainer::new(dp_test_cfg(
+            "lora-tiny",
+            OptimizerKind::Sgd,
+            workers,
+            1,
+            2,
+            ReduceMode::Compressed,
+        ))
+        .unwrap();
+        tr.inject_fault(fault());
+        let report = tr.run().unwrap();
+        let losses: Vec<u32> =
+            report.train_losses.iter().map(|x| x.to_bits()).collect();
+        let wq: Vec<u32> =
+            tr.params()["layer0/attn/wq"].data.iter().map(|x| x.to_bits()).collect();
+        (losses, wq)
+    };
+    let (l1, wq1) = run(1);
+    let (l2, wq2) = run(2);
+    assert_eq!(l1, l2, "poisoned loss curve diverged across worker counts");
+    assert_eq!(wq1, wq2, "poisoned params diverged across worker counts");
+    assert!(
+        wq1.iter().any(|b| !f32::from_bits(*b).is_finite()),
+        "the poison was averaged away — NaN/Inf must survive the reduce"
+    );
+}
+
+/// The CommsLedger matches the analytic `step_bytes` formula EXACTLY
+/// (integer bytes, `==` not tolerance) at catalog rank: compressed mode
+/// ships rank-r states for attn/ffn params, full mode ships everything.
+#[test]
+fn native_dp_comms_ledger_matches_analytic_ratio() {
+    let shapes = TransformerConfig::tiny().param_shapes();
+    for (reduce, steps, tau) in
+        [(ReduceMode::Compressed, 2, 1), (ReduceMode::Full, 1, 2)]
+    {
+        let cfg =
+            dp_test_cfg("lora-tiny", OptimizerKind::Sgd, 2, tau, steps, reduce);
+        let rank = cfg.rank();
+        let shards = cfg.shards;
+        let mut tr = DpTrainer::new(cfg).unwrap();
+        let report = tr.run().unwrap();
+        let data_steps = (steps * tau) as u64;
+        let sent = step_bytes(&shapes, rank, shards, reduce);
+        let full = step_bytes(&shapes, rank, shards, ReduceMode::Full);
+        assert_eq!(report.ledger.steps, data_steps);
+        assert_eq!(report.ledger.bytes_sent, data_steps * sent);
+        assert_eq!(report.ledger.bytes_full, data_steps * full);
+        match reduce {
+            ReduceMode::Compressed => assert!(
+                report.ledger.bytes_sent < report.ledger.bytes_full,
+                "compressed mode must shrink the wire"
+            ),
+            ReduceMode::Full => assert_eq!(
+                report.ledger.bytes_sent, report.ledger.bytes_full,
+                "full mode ships everything"
+            ),
+        }
+    }
+}
+
+/// Compressed reduce is exact up to float reassociation relative to the
+/// full-gradient wire: `Σ_s (G_s Aᵀ) = (Σ_s G_s) Aᵀ` in real
+/// arithmetic, so one optimizer step under either mode lands within
+/// float-noise of the other (the modes are NOT bit-equal — the
+/// summation order differs — which is exactly why both exist as an
+/// A/B).
+#[test]
+fn native_dp_full_reduce_matches_compressed_within_tolerance() {
+    let run = |reduce: ReduceMode| {
+        let mut tr = DpTrainer::new(dp_test_cfg(
+            "lora-tiny",
+            OptimizerKind::Sgd,
+            2,
+            1,
+            1,
+            reduce,
+        ))
+        .unwrap();
+        tr.run().unwrap();
+        tr.params().clone()
+    };
+    let comp = run(ReduceMode::Compressed);
+    let full = run(ReduceMode::Full);
+    for (name, p) in &comp {
+        let q = &full[name];
+        for (i, (a, b)) in p.data.iter().zip(&q.data).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                "{name}[{i}]: compressed {a} vs full {b}"
+            );
+        }
+    }
+}
