@@ -1,28 +1,43 @@
 #!/usr/bin/env python3
-"""Warn-only bench-trajectory diff for CI (BENCH_kernels.json,
-BENCH_serving.json — any schema-2 trajectory file).
+"""Bench-trajectory diff + regression gate for CI (BENCH_kernels.json,
+BENCH_serving.json, BENCH_dp.json — any schema-2 trajectory file).
 
-Usage: bench_diff.py <current.json> [baseline.json]
+Usage:
+    bench_diff.py <current.json> [baseline.json]
+                  [--gate] [--budgets BENCH_BUDGETS.toml] [--section NAME]
 
-The kernel microbench APPENDS one snapshot per invocation — and the CI
-smoke step invokes it more than once (pool and scope drivers) — so "the
+The benches APPEND one snapshot per invocation — and the CI smoke step
+can invoke them more than once (pool and scope drivers) — so "the
 committed baseline" cannot be recovered from the current file alone.
-The workflow therefore snapshots the committed file BEFORE the bench
-runs and passes it as the second argument: the baseline is that file's
-last entry, and the fresh measurement is chosen from the entries the
-bench appended (preferring the pool driver, the production default).
-With no baseline file the script falls back to the last two entries of
-the current file and says so.
+The workflow snapshots the committed file BEFORE the bench runs and
+passes it as the second argument: the baseline is that file's last
+entry, and the fresh measurement is chosen from the entries the bench
+appended (preferring the pool driver, the production default).
 
-This script renders a markdown comparison (shared numeric fields, per
-model) for the job summary. It NEVER fails the job: regressions on
-shared CI runners are a signal to investigate, not a gate (the bench
-binary itself exits non-zero on real errors, which is the failing
-condition). Comparability caveats are printed loudly: entries can
-differ in parallelism, --quick, runtime driver, and provenance (the
-first committed points were measured with the C GEMM-path mirror,
-benches/mirror/kernel_mirror.c, whose absolute numbers overstate
-full-model throughput — see docs/PERFORMANCE.md).
+Modes:
+
+* warn (default): render the markdown comparison for the job summary
+  and ALWAYS exit 0 — including when the baseline file is absent,
+  empty, or unparsable ("no baseline", exit 0). Budget violations, if
+  a budgets file is given, are printed as warnings.
+
+* gate (--gate): enforce BENCH_BUDGETS.toml (docs/OPS.md §2) and exit
+  1 on any violation — or on a missing baseline/fresh snapshot, since
+  an ungateable run must not look green. Three budget kinds:
+
+  - exact metrics: must match the baseline bit-for-bit whenever the
+    model row carries them on both sides. They are analytic (the dp
+    byte formulas), machine- and worker-count-independent, so they
+    gate against EVERY baseline provenance, c-mirror included.
+  - max_regression_pct over gate_metrics: enforced only for
+    like-for-like pairs — baseline provenance starts with
+    "cargo-bench" AND quick/parallelism agree. C-mirror baselines
+    (ROADMAP item 6) and mismatched run shapes downgrade to warnings,
+    printed loudly.
+  - per-size floors: absolute tokens/sec minimums on the FRESH
+    cargo-bench snapshot, enforced regardless of baseline — the
+    catastrophic-collapse backstop that still bites while the
+    committed baselines are c-mirror.
 """
 
 import json
@@ -39,50 +54,205 @@ def fmt(x):
 
 
 def load_trajectory(path):
+    """Return (trajectory list | None, reason). Tolerates absent files,
+    empty files, and JSON that parses to a non-object (null, a list) —
+    the old version crashed with AttributeError on those."""
     try:
         with open(path) as f:
-            return json.load(f).get("trajectory", [])
+            doc = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"bench diff: cannot read {path}: {e}")
-        return None
+        return None, f"cannot read {path}: {e}"
+    if not isinstance(doc, dict):
+        return None, f"{path}: top level is {type(doc).__name__}, not an object"
+    traj = doc.get("trajectory", [])
+    if not isinstance(traj, list):
+        return None, f"{path}: \"trajectory\" is not a list"
+    return traj, None
+
+
+def parse_budgets(path):
+    """Mini TOML-subset reader (python3.10 has no tomllib; the repo's
+    zero-dep rust parser is the reference — config/toml.rs). Returns
+    {section_name: {key: value}} with sections kept un-flattened."""
+    sections = {}
+    current = None
+    with open(path) as f:
+        for raw in f:
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            if line.startswith("[") and line.endswith("]"):
+                # Segments with TOML-special chars (e.g. the "/" in
+                # serving/dp model ids) are quoted in the file; strip the
+                # quotes so floors lookups match the raw model names.
+                current = line[1:-1].strip().replace('"', "")
+                sections.setdefault(current, {})
+                continue
+            if "=" not in line or current is None:
+                continue
+            key, val = (p.strip() for p in line.split("=", 1))
+            if val.startswith('"') and val.endswith('"'):
+                sections[current][key] = val[1:-1]
+            else:
+                try:
+                    sections[current][key] = float(val)
+                except ValueError:
+                    sections[current][key] = val
+    return sections
+
+
+def section_for(path, override):
+    if override:
+        return override
+    name = path.rsplit("/", 1)[-1]
+    if name.startswith("BENCH_") and name.endswith(".json"):
+        return name[len("BENCH_"):-len(".json")]
+    return name
+
+
+def csv_list(value):
+    return [p.strip() for p in str(value or "").split(",") if p.strip()]
+
+
+def is_cargo_bench(snap):
+    return str(snap.get("provenance", "")).startswith("cargo-bench")
+
+
+def same_shape(a, b):
+    return a.get("quick") == b.get("quick") and a.get(
+        "parallelism"
+    ) == b.get("parallelism")
+
+
+def check_budgets(section, budgets, base, fresh):
+    """Return (violations, warnings) — violation lines fail --gate."""
+    violations, warnings = [], []
+    cfg = budgets.get(section)
+    if cfg is None:
+        violations.append(
+            f"budgets file has no [{section}] section — cannot gate"
+        )
+        return violations, warnings
+
+    base_sizes = {s.get("model"): s for s in base.get("sizes", [])}
+    exact = csv_list(cfg.get("exact"))
+    gate_metrics = csv_list(cfg.get("gate_metrics"))
+    max_pct = cfg.get("max_regression_pct")
+
+    pct_enforced = is_cargo_bench(base) and same_shape(base, fresh)
+    if gate_metrics and max_pct is not None and not pct_enforced:
+        why = (
+            "baseline provenance is not cargo-bench (c-mirror stays "
+            "warn-only per ROADMAP item 6)"
+            if not is_cargo_bench(base)
+            else "baseline and fresh differ in quick/parallelism"
+        )
+        warnings.append(f"percent budgets downgraded to warnings: {why}")
+
+    for row in fresh.get("sizes", []):
+        model = row.get("model")
+        b = base_sizes.get(model)
+        # 1) exactness: analytic metrics must not move, ever
+        if b is not None:
+            for k in exact:
+                if k in row and k in b and row[k] != b[k]:
+                    violations.append(
+                        f"{model} {k}: fresh {row[k]!r} != baseline "
+                        f"{b[k]!r} (exact metric — analytic, must not move)"
+                    )
+        # 2) percent regression budget on throughput metrics
+        if b is not None and max_pct is not None:
+            for k in gate_metrics:
+                old, new = b.get(k), row.get(k)
+                if not isinstance(old, (int, float)) or not isinstance(
+                    new, (int, float)
+                ):
+                    continue
+                if old <= 0:
+                    continue
+                drop = (old - new) / old * 100
+                if drop > max_pct:
+                    line = (
+                        f"{model} {k}: {fmt(new)} is {drop:.1f}% below "
+                        f"baseline {fmt(old)} (budget {max_pct:.0f}%)"
+                    )
+                    (violations if pct_enforced else warnings).append(line)
+        # 3) absolute floors on the fresh snapshot
+        if is_cargo_bench(fresh):
+            floors = budgets.get(f"{section}.floors.{model}", {})
+            for k, floor in floors.items():
+                new = row.get(k)
+                if isinstance(new, (int, float)) and new < floor:
+                    violations.append(
+                        f"{model} {k}: {fmt(new)} is below the absolute "
+                        f"floor {fmt(floor)} (catastrophic collapse)"
+                    )
+    return violations, warnings
+
+
+def parse_args(argv):
+    opts = {"gate": False, "budgets": None, "section": None}
+    positional = []
+    it = iter(argv)
+    for a in it:
+        if a == "--gate":
+            opts["gate"] = True
+        elif a == "--budgets":
+            opts["budgets"] = next(it, None)
+        elif a == "--section":
+            opts["section"] = next(it, None)
+        elif a.startswith("--"):
+            print(f"bench diff: unknown flag {a}")
+            sys.exit(2)
+        else:
+            positional.append(a)
+    return positional, opts
 
 
 def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_kernels.json"
-    baseline_path = sys.argv[2] if len(sys.argv) > 2 else None
-    traj = load_trajectory(path)
+    positional, opts = parse_args(sys.argv[1:])
+    path = positional[0] if positional else "BENCH_kernels.json"
+    baseline_path = positional[1] if len(positional) > 1 else None
+    gate = opts["gate"]
+    mode = "gate" if gate else "warn-only"
+
+    def no_baseline(reason):
+        print(f"bench diff: no baseline — {reason}")
+        if gate:
+            print("bench diff: GATE mode cannot pass without a baseline")
+            sys.exit(1)
+        sys.exit(0)
+
+    traj, err = load_trajectory(path)
     if traj is None:
-        return
+        print(f"bench diff: {err}")
+        sys.exit(1 if gate else 0)
+
     if baseline_path:
-        base_traj = load_trajectory(baseline_path)
+        base_traj, err = load_trajectory(baseline_path)
+        if err:
+            no_baseline(err)
         if not base_traj:
-            print("bench diff: empty/unreadable baseline, nothing to diff")
-            return
+            no_baseline(f"{baseline_path} has an empty trajectory")
         base = base_traj[-1]
         if traj[: len(base_traj)] == base_traj:
             appended = traj[len(base_traj):]
         else:
-            # the bench starts a FRESH trajectory when the committed file
-            # was unparsable/not schema-2 — fall back to matching the
-            # appended entries by their provenance tag
-            appended = [
-                s
-                for s in traj
-                if s.get("provenance", "").startswith("cargo-bench")
-            ]
+            # the current file's history does not extend the baseline
+            # (e.g. a scratch checkout) — match appended entries by tag
+            appended = [s for s in traj if is_cargo_bench(s)]
         if not appended:
             print("bench diff: the bench appended no snapshot, nothing to diff")
-            return
+            sys.exit(1 if gate else 0)
         pool_runs = [s for s in appended if s.get("runtime") == "pool"]
         fresh = pool_runs[-1] if pool_runs else appended[-1]
     else:
         if len(traj) < 2:
-            print(f"bench diff: {len(traj)} trajectory entr(y/ies), nothing to diff")
-            return
+            no_baseline(f"{path} has {len(traj)} trajectory entr(y/ies)")
         print("bench diff: no baseline file given — comparing the last two entries\n")
         fresh, base = traj[-1], traj[-2]
 
-    print(f"### bench diff: {path} vs committed baseline (warn-only)\n")
+    print(f"### bench diff: {path} vs committed baseline ({mode})\n")
     for label, snap in [("baseline", base), ("fresh", fresh)]:
         print(
             f"- **{label}**: runtime={snap.get('runtime')} "
@@ -114,13 +284,40 @@ def main():
             delta = (new - old) / old * 100 if old else float("nan")
             flag = " ⚠️" if old and delta < -10 else ""
             rows.append((s["model"], k, fmt(old), fmt(new), f"{delta:+.1f}%{flag}"))
-    if not rows:
+    if rows:
+        print("\n| model | metric | baseline | fresh | delta |")
+        print("|---|---|---:|---:|---:|")
+        for r in rows:
+            print("| " + " | ".join(r) + " |")
+    else:
         print("\nno shared numeric fields between the two snapshots")
-        return
-    print("\n| model | metric | baseline | fresh | delta |")
-    print("|---|---|---:|---:|---:|")
-    for r in rows:
-        print("| " + " | ".join(r) + " |")
+
+    if opts["budgets"] is None:
+        if gate:
+            print("\nbench diff: GATE mode needs --budgets BENCH_BUDGETS.toml")
+            sys.exit(1)
+        sys.exit(0)
+    try:
+        budgets = parse_budgets(opts["budgets"])
+    except OSError as e:
+        print(f"\nbench diff: cannot read budgets: {e}")
+        sys.exit(1 if gate else 0)
+
+    section = section_for(path, opts["section"])
+    violations, warnings = check_budgets(section, budgets, base, fresh)
+    print(f"\n#### budget check [{section}] ({mode})\n")
+    for w in warnings:
+        print(f"- warn: {w}")
+    for v in violations:
+        print(f"- **GATE**: {v}")
+    if not violations and not warnings:
+        print("- all budgets satisfied")
+    if violations and gate:
+        print(f"\nbench diff: {len(violations)} budget violation(s) — failing")
+        sys.exit(1)
+    if violations:
+        print("\nbench diff: violations reported, warn mode never fails")
+    sys.exit(0)
 
 
 if __name__ == "__main__":

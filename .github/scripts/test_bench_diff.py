@@ -1,0 +1,258 @@
+"""Tests for bench_diff.py — the CI bench gate (run via pytest).
+
+Each test drives the script exactly as the workflow does: a subprocess
+with a current file, an optional baseline file, and the gate flags.
+Covers the no-baseline robustness fix (absent / empty / non-object
+baselines must report "no baseline" and exit 0 in warn mode) and the
+BENCH_BUDGETS.toml gate semantics (percent budgets, absolute floors,
+exact dp byte metrics, and the c-mirror warn-only downgrade)."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+SCRIPT = pathlib.Path(__file__).with_name("bench_diff.py")
+
+BUDGETS = """
+[kernels]
+max_regression_pct = 50.0
+gate_metrics = "forward_tok_s"
+
+[kernels.floors.lora-tiny]
+forward_tok_s = 100.0
+
+[dp]
+max_regression_pct = 70.0
+gate_metrics = "steps_per_sec"
+exact = "per_step_sent_bytes,comms_ratio"
+"""
+
+
+def run(args, cwd):
+    return subprocess.run(
+        [sys.executable, str(SCRIPT)] + [str(a) for a in args],
+        capture_output=True,
+        text=True,
+        cwd=cwd,
+    )
+
+
+def snapshot(provenance, sizes, quick=True, parallelism=2, runtime="pool"):
+    return {
+        "provenance": provenance,
+        "quick": quick,
+        "parallelism": parallelism,
+        "runtime": runtime,
+        "sizes": sizes,
+    }
+
+
+def write_bench(path, trajectory, bench="micro_kernels"):
+    path.write_text(
+        json.dumps(
+            {"bench": bench, "schema": 2, "comment": "t", "trajectory": trajectory}
+        )
+    )
+
+
+def kernels_row(tok_s):
+    return {"model": "lora-tiny", "forward_tok_s": tok_s}
+
+
+def setup(tmp_path, base_tok, fresh_tok, base_prov="cargo-bench micro_kernels"):
+    """Baseline with one snapshot; current = baseline + one appended."""
+    base_snap = snapshot(base_prov, [kernels_row(base_tok)])
+    fresh_snap = snapshot("cargo-bench micro_kernels", [kernels_row(fresh_tok)])
+    baseline = tmp_path / "baseline.json"
+    current = tmp_path / "BENCH_kernels.json"
+    write_bench(baseline, [base_snap])
+    write_bench(current, [base_snap, fresh_snap])
+    budgets = tmp_path / "BENCH_BUDGETS.toml"
+    budgets.write_text(BUDGETS)
+    return current, baseline, budgets
+
+
+# ---------- no-baseline robustness (the old script crashed here) ----------
+
+
+def test_absent_baseline_warns_and_exits_zero(tmp_path):
+    current, _, _ = setup(tmp_path, 1000, 900)
+    r = run([current, tmp_path / "missing.json"], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "no baseline" in r.stdout
+
+
+def test_empty_baseline_file_warns_and_exits_zero(tmp_path):
+    current, baseline, _ = setup(tmp_path, 1000, 900)
+    baseline.write_text("")
+    r = run([current, baseline], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "no baseline" in r.stdout
+
+
+def test_null_json_baseline_warns_and_exits_zero(tmp_path):
+    """json.load returns None here — the old .get() crashed with
+    AttributeError; now it is a clean 'no baseline'."""
+    current, baseline, _ = setup(tmp_path, 1000, 900)
+    baseline.write_text("null")
+    r = run([current, baseline], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "no baseline" in r.stdout
+    assert "Traceback" not in r.stderr
+
+
+def test_list_json_baseline_warns_and_exits_zero(tmp_path):
+    current, baseline, _ = setup(tmp_path, 1000, 900)
+    baseline.write_text("[1, 2]")
+    r = run([current, baseline], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "no baseline" in r.stdout
+
+
+def test_gate_mode_fails_without_baseline(tmp_path):
+    current, _, budgets = setup(tmp_path, 1000, 900)
+    r = run(
+        [current, tmp_path / "missing.json", "--gate", "--budgets", budgets],
+        tmp_path,
+    )
+    assert r.returncode == 1, r.stdout + r.stderr
+
+
+def test_no_appended_snapshot_warn_zero_gate_one(tmp_path):
+    base_snap = snapshot("c-mirror/gemm-path (x)", [kernels_row(1000)])
+    baseline = tmp_path / "baseline.json"
+    current = tmp_path / "BENCH_kernels.json"
+    write_bench(baseline, [base_snap])
+    write_bench(current, [base_snap])  # bench appended nothing
+    budgets = tmp_path / "BENCH_BUDGETS.toml"
+    budgets.write_text(BUDGETS)
+    r = run([current, baseline], tmp_path)
+    assert r.returncode == 0
+    assert "appended no snapshot" in r.stdout
+    r = run([current, baseline, "--gate", "--budgets", budgets], tmp_path)
+    assert r.returncode == 1
+
+
+# ---------- percent regression budgets ----------
+
+
+def test_gate_fails_on_regression_past_budget(tmp_path):
+    current, baseline, budgets = setup(tmp_path, 1000, 400)  # -60% > 50%
+    r = run([current, baseline, "--gate", "--budgets", budgets], tmp_path)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "GATE" in r.stdout
+    assert "forward_tok_s" in r.stdout
+
+
+def test_gate_passes_within_budget(tmp_path):
+    current, baseline, budgets = setup(tmp_path, 1000, 700)  # -30% < 50%
+    r = run([current, baseline, "--gate", "--budgets", budgets], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cmirror_baseline_is_warn_only_for_percent_budgets(tmp_path):
+    current, baseline, budgets = setup(
+        tmp_path, 50000, 400, base_prov="c-mirror/gemm-path (gcc -O2)"
+    )
+    r = run([current, baseline, "--gate", "--budgets", budgets], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "warn-only per ROADMAP item 6" in r.stdout
+
+
+def test_warn_mode_reports_violation_but_exits_zero(tmp_path):
+    current, baseline, budgets = setup(tmp_path, 1000, 400)
+    r = run([current, baseline, "--budgets", budgets], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "GATE" in r.stdout  # reported...
+    assert "warn mode never fails" in r.stdout  # ...but not fatal
+
+
+# ---------- absolute floors ----------
+
+
+def test_floor_on_quoted_slash_model_name_still_matches(tmp_path):
+    """Serving/dp model ids carry slashes, so their floors tables are
+    quoted in the TOML (`[serving.floors."lora-tiny/b1"]`); the reader
+    must strip the quotes or the floor silently never fires."""
+    budgets_text = (
+        "[serving]\n"
+        'gate_metrics = "decode_tok_s"\n'
+        '[serving.floors."lora-tiny/b1"]\n'
+        "decode_tok_s = 100.0\n"
+    )
+    row = {"model": "lora-tiny/b1", "decode_tok_s": 50.0}  # below floor
+    base_snap = snapshot("c-mirror/serve-path (x)", [row])
+    fresh_snap = snapshot("cargo-bench serving", [row])
+    baseline = tmp_path / "baseline.json"
+    current = tmp_path / "BENCH_serving.json"
+    write_bench(baseline, [base_snap], bench="serving")
+    write_bench(current, [base_snap, fresh_snap], bench="serving")
+    budgets = tmp_path / "BENCH_BUDGETS.toml"
+    budgets.write_text(budgets_text)
+    r = run([current, baseline, "--gate", "--budgets", budgets], tmp_path)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "absolute" in r.stdout
+
+
+def test_floor_violation_fails_even_with_cmirror_baseline(tmp_path):
+    current, baseline, budgets = setup(
+        tmp_path, 50000, 50, base_prov="c-mirror/gemm-path (gcc -O2)"
+    )  # fresh 50 < floor 100
+    r = run([current, baseline, "--gate", "--budgets", budgets], tmp_path)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "absolute" in r.stdout
+
+
+# ---------- exact metrics (dp comms bytes) ----------
+
+
+def dp_setup(tmp_path, base_bytes, fresh_bytes):
+    row = lambda b: {
+        "model": "lora-tiny/compressed",
+        "steps_per_sec": 10.0,
+        "per_step_sent_bytes": b,
+        "comms_ratio": 0.41,
+    }
+    base_snap = snapshot("c-mirror/comms-path (x)", [row(base_bytes)])
+    fresh_snap = snapshot("cargo-bench dp", [row(fresh_bytes)])
+    baseline = tmp_path / "baseline.json"
+    current = tmp_path / "BENCH_dp.json"
+    write_bench(baseline, [base_snap], bench="dp")
+    write_bench(current, [base_snap, fresh_snap], bench="dp")
+    budgets = tmp_path / "BENCH_BUDGETS.toml"
+    budgets.write_text(BUDGETS)
+    return current, baseline, budgets
+
+
+def test_exact_metric_mismatch_fails_even_for_cmirror(tmp_path):
+    current, baseline, budgets = dp_setup(tmp_path, 71168, 71169)
+    r = run([current, baseline, "--gate", "--budgets", budgets], tmp_path)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "exact metric" in r.stdout
+
+
+def test_exact_metric_match_passes(tmp_path):
+    current, baseline, budgets = dp_setup(tmp_path, 71168, 71168)
+    r = run([current, baseline, "--gate", "--budgets", budgets], tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+# ---------- misc ----------
+
+
+def test_gate_requires_budgets_flag(tmp_path):
+    current, baseline, _ = setup(tmp_path, 1000, 900)
+    r = run([current, baseline, "--gate"], tmp_path)
+    assert r.returncode == 1
+    assert "--budgets" in r.stdout
+
+
+def test_unknown_section_fails_gate(tmp_path):
+    current, baseline, budgets = setup(tmp_path, 1000, 900)
+    r = run(
+        [current, baseline, "--gate", "--budgets", budgets, "--section", "nope"],
+        tmp_path,
+    )
+    assert r.returncode == 1
+    assert "no [nope] section" in r.stdout

@@ -27,13 +27,12 @@
 //!
 //! Run: cargo bench --bench dp [-- --quick --workers N --parallelism N]
 
-use std::collections::BTreeMap;
-
+use flora::bench::contract;
 use flora::bench::paper::BenchArgs;
 use flora::config::DpConfig;
 use flora::model::TransformerConfig;
 use flora::runtime::dp::{DpTrainer, ReduceMode};
-use flora::util::json::{self, Json};
+use flora::util::json::Json;
 
 const SHARDS: usize = 4;
 const RANK: usize = 8;
@@ -149,6 +148,7 @@ fn snapshot_of(cells: &[Cell], args: &BenchArgs) -> Json {
         })
         .collect();
     obj(vec![
+        ("unix_time", Json::Num(contract::unix_time_now() as f64)),
         ("parallelism", Json::Num(args.parallelism.threads() as f64)),
         ("quick", Json::Bool(args.quick)),
         ("provenance", Json::Str("cargo-bench dp".into())),
@@ -156,37 +156,11 @@ fn snapshot_of(cells: &[Cell], args: &BenchArgs) -> Json {
     ])
 }
 
-/// Append `snapshot` to the schema-2 trajectory in `path` (same
-/// append-never-rewrite contract as the other trajectory files).
-fn append_snapshot(path: &str, snapshot: Json) -> String {
-    let mut trajectory: Vec<Json> = Vec::new();
-    if let Ok(text) = std::fs::read_to_string(path) {
-        if let Ok(old) = json::parse(&text) {
-            if old.get("schema").and_then(Json::as_usize) == Some(2) {
-                if let Some(arr) = old.get("trajectory").and_then(Json::as_arr) {
-                    trajectory = arr.to_vec();
-                }
-            }
-        }
-    }
-    trajectory.push(snapshot);
-    let mut root = BTreeMap::new();
-    root.insert("bench".to_string(), Json::Str("dp".into()));
-    root.insert("schema".to_string(), Json::Num(2.0));
-    root.insert(
-        "comment".to_string(),
-        Json::Str(
-            "Per-PR data-parallel training trajectory (optimizer steps/sec \
-             + exact comms bytes per data step, compressed vs full reduce). \
-             Entries are appended, never rewritten; `cargo bench --bench dp` \
-             appends a fresh cargo-bench snapshot after the W-invariance \
-             tripwire. How to read this file: docs/DISTRIBUTED.md."
-                .into(),
-        ),
-    );
-    root.insert("trajectory".to_string(), Json::Arr(trajectory));
-    Json::Obj(root).render()
-}
+const COMMENT: &str = "Per-PR data-parallel training trajectory (optimizer steps/sec \
+     + exact comms bytes per data step, compressed vs full reduce). \
+     Entries are appended, never rewritten; `cargo bench --bench dp` \
+     appends a fresh cargo-bench snapshot after the W-invariance \
+     tripwire. How to read this file: docs/DISTRIBUTED.md.";
 
 fn main() {
     let args = BenchArgs::parse();
@@ -223,13 +197,12 @@ fn main() {
     table.print();
 
     let path = "BENCH_dp.json";
-    let rendered = append_snapshot(path, snapshot_of(&cells, &args));
-    match std::fs::write(path, &rendered) {
+    match contract::append_to_file(path, "dp", COMMENT, snapshot_of(&cells, &args)) {
         Ok(()) => println!("\nappended snapshot to {path}"),
         Err(e) => {
             // growing the trajectory is this bench's one artifact; a
             // silent skip would let CI go green on a broken append
-            eprintln!("could not write {path}: {e}");
+            eprintln!("could not append to {path}: {e}");
             std::process::exit(1);
         }
     }

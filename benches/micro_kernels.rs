@@ -25,8 +25,7 @@
 //! Run: cargo bench --bench micro_kernels
 //!        [-- --quick --parallelism N --runtime pool|scope]
 
-use std::collections::BTreeMap;
-
+use flora::bench::contract;
 use flora::bench::paper::BenchArgs;
 use flora::bench::time_it;
 use flora::config::{TaskKind, TrainConfig};
@@ -36,7 +35,7 @@ use flora::model::blocks::{self, reference, BlockDims};
 use flora::model::{TransformerConfig, VitConfig};
 use flora::opt::OptimizerKind;
 use flora::tensor::{KernelDriver, Matrix, Parallelism};
-use flora::util::json::{self, Json};
+use flora::util::json::Json;
 use flora::util::rng::Rng;
 
 const BATCH: usize = 4;
@@ -240,6 +239,7 @@ fn snapshot_of(results: &[SizeResult], args: &BenchArgs) -> Json {
         })
         .collect();
     obj(vec![
+        ("unix_time", Json::Num(contract::unix_time_now() as f64)),
         ("runtime", Json::Str(runtime.into())),
         ("parallelism", Json::Num(args.parallelism.threads() as f64)),
         ("quick", Json::Bool(args.quick)),
@@ -248,37 +248,10 @@ fn snapshot_of(results: &[SizeResult], args: &BenchArgs) -> Json {
     ])
 }
 
-/// Append `snapshot` to the trajectory in `path` (schema 2). A missing,
-/// unparsable, or schema-1 file starts a fresh trajectory rather than
-/// erroring — the committed baseline is documentation, not a lockfile.
-fn append_snapshot(path: &str, snapshot: Json) -> String {
-    let mut trajectory: Vec<Json> = Vec::new();
-    if let Ok(text) = std::fs::read_to_string(path) {
-        if let Ok(old) = json::parse(&text) {
-            if old.get("schema").and_then(Json::as_usize) == Some(2) {
-                if let Some(arr) = old.get("trajectory").and_then(Json::as_arr) {
-                    trajectory = arr.to_vec();
-                }
-            }
-        }
-    }
-    trajectory.push(snapshot);
-    let mut root = BTreeMap::new();
-    root.insert("bench".to_string(), Json::Str("micro_kernels".into()));
-    root.insert("schema".to_string(), Json::Num(2.0));
-    root.insert(
-        "comment".to_string(),
-        Json::Str(
-            "Per-PR kernel-throughput trajectory (tokens/sec). Entries are \
-             appended, never rewritten; `cargo bench --bench micro_kernels` \
-             appends a fresh cargo-bench snapshot. How to read this file: \
-             docs/PERFORMANCE.md."
-                .into(),
-        ),
-    );
-    root.insert("trajectory".to_string(), Json::Arr(trajectory));
-    Json::Obj(root).render()
-}
+const COMMENT: &str = "Per-PR kernel-throughput trajectory (tokens/sec). Entries are \
+     appended, never rewritten; `cargo bench --bench micro_kernels` \
+     appends a fresh cargo-bench snapshot. How to read this file: \
+     docs/PERFORMANCE.md.";
 
 fn main() {
     let args = BenchArgs::parse();
@@ -337,13 +310,12 @@ fn main() {
     }
 
     let path = "BENCH_kernels.json";
-    let rendered = append_snapshot(path, snapshot_of(&results, &args));
-    match std::fs::write(path, &rendered) {
+    match contract::append_to_file(path, "micro_kernels", COMMENT, snapshot_of(&results, &args)) {
         Ok(()) => println!("\nappended snapshot to {path}"),
         Err(e) => {
             // growing the trajectory is this bench's one artifact; a
             // silent skip would let CI go green on a broken append
-            eprintln!("could not write {path}: {e}");
+            eprintln!("could not append to {path}: {e}");
             std::process::exit(1);
         }
     }

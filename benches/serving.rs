@@ -27,15 +27,14 @@
 //!
 //! Run: cargo bench --bench serving [-- --quick --parallelism N]
 
-use std::collections::BTreeMap;
-
+use flora::bench::contract;
 use flora::bench::paper::BenchArgs;
 use flora::bench::time_it;
 use flora::model::decode::serve_greedy;
 use flora::model::TransformerConfig;
 use flora::runtime::serve::oracle_check;
 use flora::runtime::AdapterRegistry;
-use flora::util::json::{self, Json};
+use flora::util::json::Json;
 
 const RANK: usize = 8;
 const BATCHES: [usize; 2] = [1, 4];
@@ -162,6 +161,7 @@ fn snapshot_of(cells: &[Cell], args: &BenchArgs) -> Json {
         })
         .collect();
     obj(vec![
+        ("unix_time", Json::Num(contract::unix_time_now() as f64)),
         ("parallelism", Json::Num(args.parallelism.threads() as f64)),
         ("quick", Json::Bool(args.quick)),
         ("provenance", Json::Str("cargo-bench serving".into())),
@@ -169,36 +169,10 @@ fn snapshot_of(cells: &[Cell], args: &BenchArgs) -> Json {
     ])
 }
 
-/// Append `snapshot` to the schema-2 trajectory in `path` (same
-/// append-never-rewrite contract as micro_kernels).
-fn append_snapshot(path: &str, snapshot: Json) -> String {
-    let mut trajectory: Vec<Json> = Vec::new();
-    if let Ok(text) = std::fs::read_to_string(path) {
-        if let Ok(old) = json::parse(&text) {
-            if old.get("schema").and_then(Json::as_usize) == Some(2) {
-                if let Some(arr) = old.get("trajectory").and_then(Json::as_arr) {
-                    trajectory = arr.to_vec();
-                }
-            }
-        }
-    }
-    trajectory.push(snapshot);
-    let mut root = BTreeMap::new();
-    root.insert("bench".to_string(), Json::Str("serving".into()));
-    root.insert("schema".to_string(), Json::Num(2.0));
-    root.insert(
-        "comment".to_string(),
-        Json::Str(
-            "Per-PR multi-adapter serving trajectory (decode tokens/sec + \
-             per-batch latency percentiles). Entries are appended, never \
-             rewritten; `cargo bench --bench serving` appends a fresh \
-             cargo-bench snapshot. How to read this file: docs/SERVING.md."
-                .into(),
-        ),
-    );
-    root.insert("trajectory".to_string(), Json::Arr(trajectory));
-    Json::Obj(root).render()
-}
+const COMMENT: &str = "Per-PR multi-adapter serving trajectory (decode tokens/sec + \
+     per-batch latency percentiles). Entries are appended, never \
+     rewritten; `cargo bench --bench serving` appends a fresh \
+     cargo-bench snapshot. How to read this file: docs/SERVING.md.";
 
 fn main() {
     let args = BenchArgs::parse();
@@ -233,13 +207,12 @@ fn main() {
     table.print();
 
     let path = "BENCH_serving.json";
-    let rendered = append_snapshot(path, snapshot_of(&cells, &args));
-    match std::fs::write(path, &rendered) {
+    match contract::append_to_file(path, "serving", COMMENT, snapshot_of(&cells, &args)) {
         Ok(()) => println!("\nappended snapshot to {path}"),
         Err(e) => {
             // growing the trajectory is this bench's one artifact; a
             // silent skip would let CI go green on a broken append
-            eprintln!("could not write {path}: {e}");
+            eprintln!("could not append to {path}: {e}");
             std::process::exit(1);
         }
     }

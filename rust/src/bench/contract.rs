@@ -1,0 +1,589 @@
+//! Versioned contract for the bench trajectory files
+//! (`BENCH_kernels.json`, `BENCH_serving.json`, `BENCH_dp.json`).
+//!
+//! PRs 4–7 grew three append-only "schema 2" JSON trajectories, but the
+//! format lived as an unspoken convention duplicated across the three
+//! bench binaries: each re-implemented `append_snapshot` and — worse —
+//! silently started a FRESH trajectory whenever the existing file
+//! failed to parse, so a corrupted history could be overwritten without
+//! anyone noticing. This module promotes the convention to a typed,
+//! validated contract:
+//!
+//! * [`BenchFile`] / [`Snapshot`] / [`SizeRow`] — typed deserialization
+//!   over the zero-dep [`crate::util::json`] values;
+//! * [`BenchFile::validate`] — rejects unknown schema versions, missing
+//!   provenance tags, non-monotonic `pr`/`unix_time` stamps, and
+//!   NaN/negative metrics, each with a distinct path-bearing message;
+//! * [`append_to_file`] — the single append path shared by all three
+//!   bench binaries: the existing file must already satisfy the
+//!   contract (no silent fresh-start) and the assembled document is
+//!   re-validated *before* the file is touched, so a bench that
+//!   produced a NaN metric can never land it on disk (the JSON
+//!   renderer would downgrade it to `null` and hide the bug).
+//!
+//! `flora doctor` and the contract test suite (`rust/tests/ops.rs`)
+//! validate the committed files through the same code path CI gates
+//! on. Versioning policy lives in docs/OPS.md §1.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::util::json::{self, Json};
+
+/// The one trajectory schema this build reads and writes. Additive
+/// snapshot fields do NOT bump this; breaking shape changes do (and
+/// must ship a migration for the committed files — docs/OPS.md §1).
+pub const SCHEMA_VERSION: usize = 2;
+
+/// The committed trajectory files and the `bench` name each must carry.
+pub const COMMITTED_FILES: [(&str, &str); 3] = [
+    ("BENCH_kernels.json", "micro_kernels"),
+    ("BENCH_serving.json", "serving"),
+    ("BENCH_dp.json", "dp"),
+];
+
+/// What is wrong with a metric value ([`ContractError::BadMetric`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricFault {
+    /// NaN or ±Inf — only constructible in memory; the JSON renderer
+    /// would have silently written `null`, which is why appends
+    /// validate the typed document *before* rendering.
+    NonFinite,
+    /// All trajectory metrics are magnitudes (tok/s, bytes, ratios,
+    /// losses on these tasks); a negative value is a harness bug.
+    Negative,
+}
+
+/// A contract violation. Every variant renders a distinct message and
+/// carries the file path (or a caller-chosen label for in-memory
+/// documents) so CI logs and doctor receipts name the offender.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ContractError {
+    /// The file could not be read at all.
+    Io { path: String, msg: String },
+    /// The bytes are not valid JSON (truncation, corruption).
+    Parse { path: String, msg: String },
+    /// Valid JSON with the wrong shape (missing/mistyped fields).
+    Shape { path: String, msg: String },
+    /// The file's `bench` name is not the one the caller expected.
+    WrongBench {
+        path: String,
+        want: String,
+        found: String,
+    },
+    /// `schema` is absent or not [`SCHEMA_VERSION`].
+    UnknownSchema { path: String, found: Option<usize> },
+    /// A contract-valid file carries at least one snapshot.
+    EmptyTrajectory { path: String },
+    /// Snapshot `index` has no provenance tag.
+    MissingProvenance { path: String, index: usize },
+    /// `pr` or `unix_time` decreased between consecutive snapshots.
+    NonMonotonic {
+        path: String,
+        field: &'static str,
+        index: usize,
+        prev: u64,
+        found: u64,
+    },
+    /// A metric value is NaN/Inf or negative.
+    BadMetric {
+        path: String,
+        index: usize,
+        model: String,
+        key: String,
+        fault: MetricFault,
+    },
+}
+
+impl fmt::Display for ContractError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ContractError::Io { path, msg } => write!(f, "{path}: cannot read: {msg}"),
+            ContractError::Parse { path, msg } => {
+                write!(f, "{path}: invalid JSON (truncated or corrupt): {msg}")
+            }
+            ContractError::Shape { path, msg } => write!(f, "{path}: {msg}"),
+            ContractError::WrongBench { path, want, found } => write!(
+                f,
+                "{path}: bench name {found:?} does not match the expected {want:?}"
+            ),
+            ContractError::UnknownSchema { path, found } => {
+                let found = match found {
+                    Some(v) => v.to_string(),
+                    None => "none".to_string(),
+                };
+                write!(
+                    f,
+                    "{path}: unsupported schema version {found} — this build reads \
+                     schema {SCHEMA_VERSION} only (versioning policy: docs/OPS.md)"
+                )
+            }
+            ContractError::EmptyTrajectory { path } => write!(
+                f,
+                "{path}: trajectory is empty — a contract-valid bench file \
+                 carries at least one snapshot"
+            ),
+            ContractError::MissingProvenance { path, index } => write!(
+                f,
+                "{path}: trajectory[{index}] has no provenance tag — every \
+                 snapshot must say how it was measured (cargo-bench vs c-mirror)"
+            ),
+            ContractError::NonMonotonic {
+                path,
+                field,
+                index,
+                prev,
+                found,
+            } => write!(
+                f,
+                "{path}: trajectory[{index}] {field} {found} goes backwards \
+                 from {prev} — trajectories are append-only"
+            ),
+            ContractError::BadMetric {
+                path,
+                index,
+                model,
+                key,
+                fault,
+            } => {
+                let what = match fault {
+                    MetricFault::NonFinite => "NaN/non-finite",
+                    MetricFault::Negative => "negative",
+                };
+                write!(
+                    f,
+                    "{path}: trajectory[{index}] size {model:?} metric {key:?} is {what}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ContractError {}
+
+/// One measured size inside a snapshot. Numeric fields become
+/// `metrics` (JSON `null` → `None`, e.g. the dp seed's unmeasured
+/// `final_loss`); string fields become `tags` (family, reduce mode…).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SizeRow {
+    pub model: String,
+    pub metrics: BTreeMap<String, Option<f64>>,
+    pub tags: BTreeMap<String, String>,
+}
+
+/// One appended bench run. All fields except `sizes` are optional at
+/// *parse* time; [`BenchFile::validate`] additionally demands
+/// provenance and monotone `pr`/`unix_time` stamps.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub pr: Option<u64>,
+    pub unix_time: Option<u64>,
+    pub label: Option<String>,
+    pub runtime: Option<String>,
+    pub parallelism: Option<u64>,
+    pub quick: Option<bool>,
+    pub provenance: Option<String>,
+    pub sizes: Vec<SizeRow>,
+}
+
+/// A whole trajectory file, typed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchFile {
+    pub bench: String,
+    pub schema: Option<usize>,
+    pub comment: Option<String>,
+    pub trajectory: Vec<Snapshot>,
+}
+
+fn shape(path: &str, msg: String) -> ContractError {
+    ContractError::Shape {
+        path: path.to_string(),
+        msg,
+    }
+}
+
+fn opt_u64(doc: &Json, key: &str, path: &str, ctx: &str) -> Result<Option<u64>, ContractError> {
+    match doc.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(v)) if v.is_finite() && *v >= 0.0 && v.fract() == 0.0 => Ok(Some(*v as u64)),
+        Some(_) => Err(shape(
+            path,
+            format!("{ctx} field {key:?} is not a non-negative integer"),
+        )),
+    }
+}
+
+fn opt_str(doc: &Json, key: &str, path: &str, ctx: &str) -> Result<Option<String>, ContractError> {
+    match doc.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => Err(shape(path, format!("{ctx} field {key:?} is not a string"))),
+    }
+}
+
+impl BenchFile {
+    /// Parse JSON text into a typed file. `path` only labels errors.
+    pub fn parse(path: &str, text: &str) -> Result<Self, ContractError> {
+        let doc = json::parse(text).map_err(|e| ContractError::Parse {
+            path: path.to_string(),
+            msg: e.to_string(),
+        })?;
+        Self::from_json(path, &doc)
+    }
+
+    /// Type an already-parsed JSON document (shape checks only — run
+    /// [`BenchFile::validate`] for the semantic contract).
+    pub fn from_json(path: &str, doc: &Json) -> Result<Self, ContractError> {
+        let root = doc
+            .as_obj()
+            .ok_or_else(|| shape(path, "top level is not a JSON object".into()))?;
+        let bench = match root.get("bench") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => return Err(shape(path, "missing or non-string \"bench\" name".into())),
+        };
+        let schema = match root.get("schema") {
+            None | Some(Json::Null) => None,
+            Some(j) => j.as_usize(), // non-integer numbers read as "unknown version"
+        };
+        let comment = opt_str(doc, "comment", path, "top-level")?;
+        let entries = match root.get("trajectory") {
+            Some(Json::Arr(a)) => a,
+            _ => return Err(shape(path, "missing \"trajectory\" array".into())),
+        };
+        let mut trajectory = Vec::with_capacity(entries.len());
+        for (i, entry) in entries.iter().enumerate() {
+            trajectory.push(Snapshot::from_json(path, i, entry)?);
+        }
+        Ok(BenchFile {
+            bench,
+            schema,
+            comment,
+            trajectory,
+        })
+    }
+
+    /// Read + parse + validate a file on disk.
+    pub fn load(path: &str) -> Result<Self, ContractError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ContractError::Io {
+            path: path.to_string(),
+            msg: e.to_string(),
+        })?;
+        let file = Self::parse(path, &text)?;
+        file.validate(path)?;
+        Ok(file)
+    }
+
+    /// Enforce the semantic contract: known schema version, non-empty
+    /// trajectory, provenance on every snapshot, monotone `pr` /
+    /// `unix_time` stamps, and finite non-negative metrics.
+    pub fn validate(&self, path: &str) -> Result<(), ContractError> {
+        if self.bench.is_empty() {
+            return Err(shape(path, "\"bench\" name is empty".into()));
+        }
+        if self.schema != Some(SCHEMA_VERSION) {
+            return Err(ContractError::UnknownSchema {
+                path: path.to_string(),
+                found: self.schema,
+            });
+        }
+        if self.trajectory.is_empty() {
+            return Err(ContractError::EmptyTrajectory {
+                path: path.to_string(),
+            });
+        }
+        let mut last_pr: Option<u64> = None;
+        let mut last_time: Option<u64> = None;
+        for (i, snap) in self.trajectory.iter().enumerate() {
+            if snap.provenance.as_deref().unwrap_or("").is_empty() {
+                return Err(ContractError::MissingProvenance {
+                    path: path.to_string(),
+                    index: i,
+                });
+            }
+            if snap.sizes.is_empty() {
+                return Err(shape(
+                    path,
+                    format!("trajectory[{i}] has no size rows — nothing was measured"),
+                ));
+            }
+            for (field, value, last) in [
+                ("pr", snap.pr, &mut last_pr),
+                ("unix_time", snap.unix_time, &mut last_time),
+            ] {
+                if let Some(v) = value {
+                    if let Some(prev) = *last {
+                        if v < prev {
+                            return Err(ContractError::NonMonotonic {
+                                path: path.to_string(),
+                                field,
+                                index: i,
+                                prev,
+                                found: v,
+                            });
+                        }
+                    }
+                    *last = Some(v);
+                }
+            }
+            for row in &snap.sizes {
+                for (key, value) in &row.metrics {
+                    let Some(v) = value else { continue }; // null = unmeasured, fine
+                    let fault = if !v.is_finite() {
+                        Some(MetricFault::NonFinite)
+                    } else if *v < 0.0 {
+                        Some(MetricFault::Negative)
+                    } else {
+                        None
+                    };
+                    if let Some(fault) = fault {
+                        return Err(ContractError::BadMetric {
+                            path: path.to_string(),
+                            index: i,
+                            model: row.model.clone(),
+                            key: key.clone(),
+                            fault,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Snapshot {
+    fn from_json(path: &str, index: usize, doc: &Json) -> Result<Self, ContractError> {
+        let ctx = format!("trajectory[{index}]");
+        if doc.as_obj().is_none() {
+            return Err(shape(path, format!("{ctx} is not an object")));
+        }
+        let sizes_json = match doc.get("sizes") {
+            Some(Json::Arr(a)) => a.as_slice(),
+            None => &[],
+            Some(_) => return Err(shape(path, format!("{ctx} field \"sizes\" is not an array"))),
+        };
+        let mut sizes = Vec::with_capacity(sizes_json.len());
+        for (j, row) in sizes_json.iter().enumerate() {
+            sizes.push(SizeRow::from_json(path, &format!("{ctx} sizes[{j}]"), row)?);
+        }
+        Ok(Snapshot {
+            pr: opt_u64(doc, "pr", path, &ctx)?,
+            unix_time: opt_u64(doc, "unix_time", path, &ctx)?,
+            label: opt_str(doc, "label", path, &ctx)?,
+            runtime: opt_str(doc, "runtime", path, &ctx)?,
+            parallelism: opt_u64(doc, "parallelism", path, &ctx)?,
+            quick: match doc.get("quick") {
+                None | Some(Json::Null) => None,
+                Some(Json::Bool(b)) => Some(*b),
+                Some(_) => {
+                    return Err(shape(path, format!("{ctx} field \"quick\" is not a bool")))
+                }
+            },
+            provenance: opt_str(doc, "provenance", path, &ctx)?,
+            sizes,
+        })
+    }
+}
+
+impl SizeRow {
+    fn from_json(path: &str, ctx: &str, doc: &Json) -> Result<Self, ContractError> {
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| shape(path, format!("{ctx} is not an object")))?;
+        let model = match obj.get("model") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => return Err(shape(path, format!("{ctx} has no string \"model\" key"))),
+        };
+        let mut metrics = BTreeMap::new();
+        let mut tags = BTreeMap::new();
+        for (key, value) in obj {
+            if key == "model" {
+                continue;
+            }
+            match value {
+                Json::Num(v) => {
+                    metrics.insert(key.clone(), Some(*v));
+                }
+                Json::Null => {
+                    metrics.insert(key.clone(), None);
+                }
+                Json::Str(s) => {
+                    tags.insert(key.clone(), s.clone());
+                }
+                Json::Bool(b) => {
+                    tags.insert(key.clone(), b.to_string());
+                }
+                Json::Arr(_) | Json::Obj(_) => {
+                    return Err(shape(
+                        path,
+                        format!("{ctx} key {key:?} nests an array/object — sizes are flat"),
+                    ));
+                }
+            }
+        }
+        Ok(SizeRow {
+            model,
+            metrics,
+            tags,
+        })
+    }
+}
+
+/// Seconds since the Unix epoch, for stamping appended snapshots.
+/// Exact to well under f64 precision, so round-trips through JSON.
+pub fn unix_time_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Append `snapshot` to the schema-2 trajectory at `path` — the single
+/// append path for all three bench binaries.
+///
+/// * missing file → a fresh one-snapshot trajectory (first run in a
+///   scratch checkout);
+/// * existing file → must parse AND validate under the contract with
+///   the expected `bench` name. This replaces the old per-bench
+///   behaviour of silently starting over on a corrupt file.
+/// * the assembled document is validated again before rendering, so a
+///   NaN/negative fresh metric fails the bench here instead of being
+///   laundered to `null` by the renderer.
+///
+/// Existing trajectory entries are carried over as raw JSON — appends
+/// never reformat history.
+pub fn append_to_file(
+    path: &str,
+    bench: &str,
+    comment: &str,
+    snapshot: Json,
+) -> Result<(), String> {
+    let mut trajectory: Vec<Json> = Vec::new();
+    match std::fs::read_to_string(path) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => return Err(format!("{path}: cannot read: {e}")),
+        Ok(text) => {
+            let existing = BenchFile::parse(path, &text).map_err(|e| e.to_string())?;
+            existing.validate(path).map_err(|e| e.to_string())?;
+            if existing.bench != bench {
+                return Err(ContractError::WrongBench {
+                    path: path.to_string(),
+                    want: bench.to_string(),
+                    found: existing.bench,
+                }
+                .to_string());
+            }
+            // parse succeeded above; keep the raw entries untouched
+            if let Some(arr) = json::parse(&text)
+                .ok()
+                .as_ref()
+                .and_then(|d| d.get("trajectory"))
+                .and_then(Json::as_arr)
+            {
+                trajectory = arr.to_vec();
+            }
+        }
+    }
+    trajectory.push(snapshot);
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str(bench.to_string()));
+    root.insert("schema".to_string(), Json::Num(SCHEMA_VERSION as f64));
+    root.insert("comment".to_string(), Json::Str(comment.to_string()));
+    root.insert("trajectory".to_string(), Json::Arr(trajectory));
+    let doc = Json::Obj(root);
+
+    let typed = BenchFile::from_json(path, &doc).map_err(|e| e.to_string())?;
+    typed.validate(path).map_err(|e| e.to_string())?;
+
+    std::fs::write(path, doc.render()).map_err(|e| format!("{path}: cannot write: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valid_text() -> String {
+        r#"{
+  "bench": "micro_kernels",
+  "schema": 2,
+  "comment": "t",
+  "trajectory": [
+    {
+      "pr": 4,
+      "provenance": "c-mirror/gemm-path (gcc -O2)",
+      "sizes": [{"model": "lora-tiny", "forward_tok_s": 100.5, "family": "lm"}]
+    },
+    {
+      "pr": 5,
+      "unix_time": 1700000000,
+      "provenance": "cargo-bench micro_kernels",
+      "quick": true,
+      "sizes": [{"model": "lora-tiny", "forward_tok_s": 120.0, "final_loss": null}]
+    }
+  ]
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates_a_healthy_file() {
+        let f = BenchFile::parse("t.json", &valid_text()).expect("parse");
+        f.validate("t.json").expect("validate");
+        assert_eq!(f.bench, "micro_kernels");
+        assert_eq!(f.schema, Some(2));
+        assert_eq!(f.trajectory.len(), 2);
+        let row = &f.trajectory[1].sizes[0];
+        assert_eq!(row.metrics["forward_tok_s"], Some(120.0));
+        assert_eq!(row.metrics["final_loss"], None); // null = unmeasured
+        assert_eq!(f.trajectory[0].sizes[0].tags["family"], "lm");
+    }
+
+    #[test]
+    fn append_creates_then_extends_and_refuses_corruption() {
+        let dir = std::env::temp_dir().join(format!("flora-contract-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_t.json");
+        let path = path.to_str().unwrap();
+        let snap = |tok: f64| {
+            json::parse(&format!(
+                r#"{{"provenance": "cargo-bench t", "unix_time": 10,
+                     "sizes": [{{"model": "m", "tok_s": {tok}}}]}}"#
+            ))
+            .unwrap()
+        };
+        append_to_file(path, "t", "c", snap(1.0)).expect("fresh append");
+        append_to_file(path, "t", "c", snap(2.0)).expect("second append");
+        let f = BenchFile::load(path).expect("load");
+        assert_eq!(f.trajectory.len(), 2);
+
+        let err = append_to_file(path, "other", "c", snap(3.0)).unwrap_err();
+        assert!(err.contains("does not match"), "{err}");
+
+        // corrupt the file: appends must refuse, not silently restart
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::write(path, &text[..text.len() / 2]).unwrap();
+        let err = append_to_file(path, "t", "c", snap(3.0)).unwrap_err();
+        assert!(err.contains("invalid JSON"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_rejects_nan_before_the_renderer_can_launder_it() {
+        let dir = std::env::temp_dir().join(format!("flora-contract-nan-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_nan.json");
+        let path = path.to_str().unwrap();
+        let mut row = BTreeMap::new();
+        row.insert("model".to_string(), Json::Str("m".into()));
+        row.insert("tok_s".to_string(), Json::Num(f64::NAN));
+        let mut snap = BTreeMap::new();
+        snap.insert("provenance".to_string(), Json::Str("cargo-bench t".into()));
+        snap.insert("sizes".to_string(), Json::Arr(vec![Json::Obj(row)]));
+        let err = append_to_file(path, "t", "c", Json::Obj(snap)).unwrap_err();
+        assert!(err.contains("NaN"), "{err}");
+        assert!(!std::path::Path::new(path).exists(), "file must not be written");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -2,6 +2,7 @@
 //! offline vendor set) plus table rendering shared by the per-table bench
 //! binaries in benches/.
 
+pub mod contract;
 pub mod paper;
 
 use crate::util::human;

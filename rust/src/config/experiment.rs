@@ -83,6 +83,22 @@ pub struct TrainConfig {
     pub workers: usize,
 }
 
+impl TrainConfig {
+    /// The single-process trainer's worker guard, shared by `flora
+    /// train` and testable without a CLI round-trip (rust/tests/ops.rs
+    /// pins the exact message): values above 1 belong to the dp tier.
+    pub fn reject_multi_worker(&self) -> Result<(), String> {
+        if self.workers > 1 {
+            return Err(format!(
+                "train is the single-process trainer; --workers {} is the \
+                 data-parallel tier — use `flora train-dp` (docs/DISTRIBUTED.md)",
+                self.workers
+            ));
+        }
+        Ok(())
+    }
+}
+
 impl Default for TrainConfig {
     fn default() -> Self {
         Self {

@@ -84,7 +84,10 @@ pub fn parse_toml(input: &str) -> Result<BTreeMap<String, TomlValue>, TomlError>
             if name.is_empty() {
                 return Err(err("empty table name"));
             }
-            section = name.trim().to_string();
+            // Quoted segments (`[a.floors."x/y"]`) carry names with
+            // TOML-special chars; drop the quotes so flat keys read
+            // `a.floors.x/y.key` — matching the raw names consumers use.
+            section = name.trim().replace('"', "");
             continue;
         }
         let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
@@ -251,6 +254,14 @@ mod tests {
     #[test]
     fn duplicate_keys_rejected() {
         assert!(parse_toml("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn quoted_table_segments_flatten_to_raw_names() {
+        // BENCH_BUDGETS.toml quotes slash-bearing model ids; the flat key
+        // must carry the raw name so lookups by model id succeed.
+        let m = parse_toml("[serving.floors.\"lora-tiny/b1\"]\ndecode_tok_s = 100.0").unwrap();
+        assert_eq!(m["serving.floors.lora-tiny/b1.decode_tok_s"].as_f64(), Some(100.0));
     }
 
     #[test]

@@ -4,10 +4,20 @@
 //! and self-describing enough to fail loudly on mismatch).
 //!
 //! Layout (little-endian):
-//!   magic "FLORAckp" | u32 version | u64 step | u64 cursor
+//!   magic "FLORAckp" | u32 version | u64 fnv1a(payload) | payload
+//! where payload is:
+//!   u64 step | u64 cursor
 //!   u32 n_groups × [ name | u32 n_tensors × [ name | u32 ndim × u64 dims
 //!                                             | u64 nbytes | f32 data ] ]
 //! Strings are u32-length-prefixed UTF-8.
+//!
+//! Version 2 (PR 8) added the FNV-1a payload checksum: version-1 files
+//! had no integrity check, so a single flipped bit in the f32 payload
+//! loaded as silently-different weights — the worst possible failure
+//! mode for a tier whose whole pitch is bit-exactness. The checksum is
+//! verified over the raw payload BEFORE any field is parsed, so a
+//! truncated or corrupted file can never half-load, and every error
+//! carries the file path (`checkpoint <path>: ...`).
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -15,7 +25,21 @@ use std::path::Path;
 use crate::runtime::{tensor_f32, Tensor, TensorSpec};
 
 const MAGIC: &[u8; 8] = b"FLORAckp";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// magic + u32 version + u64 checksum
+const HEADER_LEN: usize = 8 + 4 + 8;
+
+/// 64-bit FNV-1a over the serialized payload. Not cryptographic — the
+/// threat model is truncation and bit rot, not an adversary — but any
+/// single-bit flip changes the digest.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 /// A host-side snapshot of one state group.
 pub struct GroupSnapshot {
@@ -52,49 +76,81 @@ fn read_str(r: &mut impl Read) -> Result<String, String> {
 
 impl Checkpoint {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
-        let f = std::fs::File::create(path.as_ref())
-            .map_err(|e| format!("create checkpoint: {e}"))?;
-        let mut w = std::io::BufWriter::new(f);
-        let io = |e: std::io::Error| format!("write checkpoint: {e}");
-        w.write_all(MAGIC).map_err(io)?;
-        w.write_all(&VERSION.to_le_bytes()).map_err(io)?;
-        w.write_all(&self.step.to_le_bytes()).map_err(io)?;
-        w.write_all(&self.cursor.to_le_bytes()).map_err(io)?;
-        w.write_all(&(self.groups.len() as u32).to_le_bytes()).map_err(io)?;
-        for g in &self.groups {
-            write_str(&mut w, &g.name).map_err(io)?;
-            w.write_all(&(g.tensors.len() as u32).to_le_bytes()).map_err(io)?;
-            for (spec, data) in &g.tensors {
-                write_str(&mut w, &spec.name).map_err(io)?;
-                w.write_all(&(spec.shape.len() as u32).to_le_bytes()).map_err(io)?;
-                for &d in &spec.shape {
-                    w.write_all(&(d as u64).to_le_bytes()).map_err(io)?;
-                }
-                w.write_all(&((data.len() * 4) as u64).to_le_bytes()).map_err(io)?;
-                for &x in data {
-                    w.write_all(&x.to_le_bytes()).map_err(io)?;
+        let path = path.as_ref();
+        let io = |e: std::io::Error| format!("checkpoint {}: serialize: {e}", path.display());
+        let mut payload: Vec<u8> = Vec::new();
+        {
+            let w = &mut payload;
+            w.write_all(&self.step.to_le_bytes()).map_err(io)?;
+            w.write_all(&self.cursor.to_le_bytes()).map_err(io)?;
+            w.write_all(&(self.groups.len() as u32).to_le_bytes()).map_err(io)?;
+            for g in &self.groups {
+                write_str(w, &g.name).map_err(io)?;
+                w.write_all(&(g.tensors.len() as u32).to_le_bytes()).map_err(io)?;
+                for (spec, data) in &g.tensors {
+                    write_str(w, &spec.name).map_err(io)?;
+                    w.write_all(&(spec.shape.len() as u32).to_le_bytes()).map_err(io)?;
+                    for &d in &spec.shape {
+                        w.write_all(&(d as u64).to_le_bytes()).map_err(io)?;
+                    }
+                    w.write_all(&((data.len() * 4) as u64).to_le_bytes()).map_err(io)?;
+                    for &x in data {
+                        w.write_all(&x.to_le_bytes()).map_err(io)?;
+                    }
                 }
             }
         }
-        Ok(())
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        std::fs::write(path, &out)
+            .map_err(|e| format!("checkpoint {}: cannot write: {e}", path.display()))
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint, String> {
-        let f = std::fs::File::open(path.as_ref())
-            .map_err(|e| format!("open checkpoint: {e}"))?;
-        let mut r = std::io::BufReader::new(f);
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic).map_err(|e| e.to_string())?;
-        if &magic != MAGIC {
-            return Err("not a flora checkpoint (bad magic)".into());
+        let path = path.as_ref();
+        let shown = path.display();
+        let bytes = std::fs::read(path)
+            .map_err(|e| format!("checkpoint {shown}: cannot read: {e}"))?;
+        if bytes.len() < HEADER_LEN {
+            return Err(format!(
+                "checkpoint {shown}: file is {} bytes — truncated before the header ends",
+                bytes.len()
+            ));
         }
+        if &bytes[..MAGIC.len()] != MAGIC {
+            return Err(format!("checkpoint {shown}: not a flora checkpoint (bad magic)"));
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(format!(
+                "checkpoint {shown}: format version {version}, this build reads \
+                 version {VERSION} (re-save with a current build)"
+            ));
+        }
+        let want = u64::from_le_bytes(bytes[12..HEADER_LEN].try_into().unwrap());
+        let payload = &bytes[HEADER_LEN..];
+        let got = fnv1a(payload);
+        if got != want {
+            return Err(format!(
+                "checkpoint {shown}: payload checksum mismatch \
+                 ({got:016x} != recorded {want:016x}) — the file was truncated or \
+                 corrupted after save; refusing to load garbage weights"
+            ));
+        }
+        Self::parse_payload(payload).map_err(|e| format!("checkpoint {shown}: {e}"))
+    }
+
+    /// Parse the checksum-verified payload. Structural guards stay as a
+    /// second line of defense (they also catch writer bugs, which a
+    /// checksum cannot).
+    fn parse_payload(payload: &[u8]) -> Result<Checkpoint, String> {
+        let mut r = payload;
+        let r = &mut r;
         let mut u32b = [0u8; 4];
         let mut u64b = [0u8; 8];
-        r.read_exact(&mut u32b).map_err(|e| e.to_string())?;
-        let version = u32::from_le_bytes(u32b);
-        if version != VERSION {
-            return Err(format!("checkpoint version {version}, want {VERSION}"));
-        }
         r.read_exact(&mut u64b).map_err(|e| e.to_string())?;
         let step = u64::from_le_bytes(u64b);
         r.read_exact(&mut u64b).map_err(|e| e.to_string())?;
@@ -103,12 +159,12 @@ impl Checkpoint {
         let n_groups = u32::from_le_bytes(u32b);
         let mut groups = Vec::with_capacity(n_groups as usize);
         for _ in 0..n_groups {
-            let gname = read_str(&mut r)?;
+            let gname = read_str(r)?;
             r.read_exact(&mut u32b).map_err(|e| e.to_string())?;
             let n_tensors = u32::from_le_bytes(u32b);
             let mut tensors = Vec::with_capacity(n_tensors as usize);
             for _ in 0..n_tensors {
-                let tname = read_str(&mut r)?;
+                let tname = read_str(r)?;
                 r.read_exact(&mut u32b).map_err(|e| e.to_string())?;
                 let ndim = u32::from_le_bytes(u32b) as usize;
                 if ndim > 8 {
@@ -221,13 +277,44 @@ mod tests {
     }
 
     #[test]
-    fn rejects_truncated() {
+    fn rejects_truncated_with_path_and_checksum() {
         let path = std::env::temp_dir().join("flora_ckpt_trunc.bin");
         let ck = sample();
         ck.save(&path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let e = Checkpoint::load(&path).unwrap_err();
+        assert!(e.contains("checksum mismatch"), "{e}");
+        assert!(e.contains("flora_ckpt_trunc.bin"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_single_bit_flip_in_weights() {
+        let path = std::env::temp_dir().join("flora_ckpt_flip.bin");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one bit deep inside the f32 payload — version 1 loaded
+        // this as silently-different weights
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) * 3 / 4;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let e = Checkpoint::load(&path).unwrap_err();
+        assert!(e.contains("checksum mismatch"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_old_format_version() {
+        let path = std::env::temp_dir().join("flora_ckpt_v1.bin");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let e = Checkpoint::load(&path).unwrap_err();
+        assert!(e.contains("format version 1"), "{e}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,389 @@
+//! `flora doctor` — the ops self-check behind ROADMAP item 5.
+//!
+//! One command answers "is this checkout healthy enough to trust a
+//! bench number or a training run?" by walking the same paths CI
+//! gates on:
+//!
+//! * environment — toolchain build info, kernel thread budget vs the
+//!   process-wide [`crate::tensor::POOL_BUDGET`], and pool liveness
+//!   (`Parallelism::pool_workers` + a real fan-out through
+//!   [`crate::tensor::pool_tasks`]);
+//! * catalog smokes — a short real training run per family (lm / lora /
+//!   vit), the serving tier's batched-vs-sequential bit-identity oracle,
+//!   and the dp tier's W∈{1,2} raw-bits invariance;
+//! * artifacts — every committed `BENCH_*.json` must satisfy the
+//!   versioned [`crate::bench::contract`], and `BENCH_BUDGETS.toml`
+//!   must parse with all three gate sections present.
+//!
+//! [`run`] is a pure function over [`DoctorConfig`] returning a
+//! [`DoctorReport`]; the CLI layer prints the human table plus a
+//! machine-readable JSON receipt (schema in docs/OPS.md §4) and exits
+//! nonzero if any check failed. `--quick` shortens the smokes for the
+//! CI step; the checks themselves are identical.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::bench::contract::{self, BenchFile};
+use crate::config::{DpConfig, TaskKind, TrainConfig};
+use crate::coordinator::{MethodSpec, Trainer};
+use crate::model::TransformerConfig;
+use crate::opt::OptimizerKind;
+use crate::runtime::dp::DpTrainer;
+use crate::runtime::serve::oracle_check;
+use crate::runtime::AdapterRegistry;
+use crate::tensor::{pool_tasks, Parallelism, POOL_BUDGET};
+use crate::util::json::Json;
+
+/// Receipt schema version (`receipt_schema` in the JSON output).
+pub const RECEIPT_SCHEMA: usize = 1;
+
+/// What to check and how hard.
+#[derive(Clone, Debug)]
+pub struct DoctorConfig {
+    /// Shorten the catalog smokes (CI uses this; checks are identical).
+    pub quick: bool,
+    /// Kernel thread budget for the smokes (installed process-wide).
+    pub parallelism: Parallelism,
+    /// Directory holding `BENCH_*.json` + `BENCH_BUDGETS.toml`
+    /// (default "." — run from the repo root).
+    pub bench_dir: String,
+}
+
+impl Default for DoctorConfig {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            parallelism: Parallelism::new(2),
+            bench_dir: ".".into(),
+        }
+    }
+}
+
+/// One check's outcome.
+#[derive(Clone, Debug)]
+pub struct CheckOutcome {
+    pub name: String,
+    pub passed: bool,
+    /// Pass: what was verified. Fail: the error, path-bearing.
+    pub detail: String,
+    pub ms: f64,
+}
+
+/// Everything `doctor` found, renderable as a JSON receipt.
+#[derive(Clone, Debug)]
+pub struct DoctorReport {
+    pub quick: bool,
+    pub parallelism: usize,
+    pub checks: Vec<CheckOutcome>,
+}
+
+impl DoctorReport {
+    pub fn ok(&self) -> bool {
+        self.checks.iter().all(|c| c.passed)
+    }
+
+    pub fn failed_names(&self) -> Vec<String> {
+        self.checks
+            .iter()
+            .filter(|c| !c.passed)
+            .map(|c| c.name.clone())
+            .collect()
+    }
+
+    /// The machine-readable receipt (docs/OPS.md §4). `failed` repeats
+    /// the failing check names so a harness can act without scanning
+    /// the per-check list.
+    pub fn receipt(&self) -> Json {
+        let checks: Vec<Json> = self
+            .checks
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("name", Json::Str(c.name.clone())),
+                    ("status", Json::Str(if c.passed { "ok" } else { "fail" }.into())),
+                    ("detail", Json::Str(c.detail.clone())),
+                    ("ms", Json::Num((c.ms * 10.0).round() / 10.0)),
+                ])
+            })
+            .collect();
+        let failed: Vec<Json> =
+            self.failed_names().into_iter().map(Json::Str).collect();
+        obj(vec![
+            ("tool", Json::Str("flora-doctor".into())),
+            ("receipt_schema", Json::Num(RECEIPT_SCHEMA as f64)),
+            ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+            ("unix_time", Json::Num(contract::unix_time_now() as f64)),
+            ("quick", Json::Bool(self.quick)),
+            ("parallelism", Json::Num(self.parallelism as f64)),
+            ("ok", Json::Bool(self.ok())),
+            ("checks", Json::Arr(checks)),
+            ("failed", Json::Arr(failed)),
+        ])
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Run every check. Never panics and never early-exits: a failed check
+/// is recorded and the rest still run, so one receipt names every
+/// problem at once.
+pub fn run(cfg: &DoctorConfig) -> DoctorReport {
+    let mut checks: Vec<CheckOutcome> = Vec::new();
+    let mut check = |name: String, f: &dyn Fn() -> Result<String, String>| {
+        let t0 = Instant::now();
+        let (passed, detail) = match f() {
+            Ok(d) => (true, d),
+            Err(e) => (false, e),
+        };
+        checks.push(CheckOutcome {
+            name,
+            passed,
+            detail,
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+    };
+
+    let par = cfg.parallelism;
+    let steps = if cfg.quick { 1 } else { 2 };
+    let dp_steps = if cfg.quick { 2 } else { 3 };
+
+    check("toolchain".into(), &check_toolchain);
+    check("thread-budget".into(), &move || check_thread_budget(par));
+    check("pool-health".into(), &move || check_pool_health(par));
+    check("smoke:lm".into(), &move || {
+        smoke_train("lm-tiny", TaskKind::Lm, MethodSpec::Flora { rank: 4 }, steps, par)
+    });
+    check("smoke:lora".into(), &move || {
+        smoke_train("lora-tiny", TaskKind::Lm, MethodSpec::Lora { rank: 4 }, steps, par)
+    });
+    check("smoke:vit".into(), &move || {
+        smoke_train("vit-tiny", TaskKind::Vit, MethodSpec::Flora { rank: 4 }, steps, par)
+    });
+    check("smoke:serve".into(), &smoke_serve);
+    check("smoke:dp".into(), &move || smoke_dp(dp_steps, par));
+    for (file, bench) in contract::COMMITTED_FILES {
+        let dir = cfg.bench_dir.clone();
+        check(format!("bench-contract:{file}"), &move || {
+            check_bench_file(&dir, file, bench)
+        });
+    }
+    let dir = cfg.bench_dir.clone();
+    check("bench-budgets".into(), &move || check_budgets(&dir));
+
+    DoctorReport {
+        quick: cfg.quick,
+        parallelism: cfg.parallelism.threads(),
+        checks,
+    }
+}
+
+fn check_toolchain() -> Result<String, String> {
+    let profile = if cfg!(debug_assertions) { "debug" } else { "release" };
+    let xla = if cfg!(feature = "xla") { "on" } else { "off" };
+    Ok(format!(
+        "flora {} ({profile} build, xla feature {xla}, {})",
+        env!("CARGO_PKG_VERSION"),
+        std::env::consts::ARCH
+    ))
+}
+
+fn check_thread_budget(par: Parallelism) -> Result<String, String> {
+    let threads = par.threads();
+    if threads > POOL_BUDGET {
+        return Err(format!(
+            "requested parallelism {threads} exceeds the process pool budget \
+             of {POOL_BUDGET} threads"
+        ));
+    }
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    let note = if hw > 0 && threads > hw {
+        format!(" — OVERSUBSCRIBED (host reports {hw} hardware threads)")
+    } else {
+        format!(" (host reports {hw} hardware threads)")
+    };
+    Ok(format!("parallelism {threads} within pool budget {POOL_BUDGET}{note}"))
+}
+
+/// Install the budget, then prove the persistent pool is both sized and
+/// alive: `pool_workers` must report at least `threads - 1` workers and
+/// a real `pool_tasks` fan-out must run every task exactly once.
+fn check_pool_health(par: Parallelism) -> Result<String, String> {
+    par.install();
+    let threads = par.threads();
+    let want = threads.saturating_sub(1);
+    let workers = Parallelism::pool_workers();
+    if workers < want {
+        return Err(format!(
+            "pool has {workers} live worker(s) after installing a budget of \
+             {threads} (expected >= {want}) — the persistent pool failed to start"
+        ));
+    }
+    let hits = AtomicUsize::new(0);
+    pool_tasks(threads, |_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    let ran = hits.load(Ordering::Relaxed);
+    if ran != threads {
+        return Err(format!(
+            "pool fan-out ran {ran} of {threads} tasks — jobs are being dropped"
+        ));
+    }
+    Ok(format!(
+        "{workers} live worker(s) for budget {threads}; {ran}/{threads} \
+         fan-out tasks ran"
+    ))
+}
+
+/// A short real training run through the native catalog — the same
+/// construction path as `flora train`.
+fn smoke_train(
+    model: &str,
+    task: TaskKind,
+    method: MethodSpec,
+    steps: usize,
+    par: Parallelism,
+) -> Result<String, String> {
+    let cfg = TrainConfig {
+        model: model.into(),
+        task,
+        method,
+        optimizer: OptimizerKind::Sgd,
+        lr: 0.1,
+        steps,
+        tau: 1,
+        kappa: 4,
+        batch: 2,
+        seed: 0,
+        eval_every: 0,
+        eval_samples: 4,
+        parallelism: par,
+        ..TrainConfig::default()
+    };
+    let report = Trainer::native(cfg)
+        .and_then(|mut t| t.run())
+        .map_err(|e| format!("{model}: {e}"))?;
+    let loss = report.final_train_loss();
+    if !loss.is_finite() {
+        return Err(format!("{model}: non-finite final loss {loss}"));
+    }
+    Ok(format!("{model}: {steps} step(s), final loss {loss:.4}"))
+}
+
+/// The serving tier's tripwire: batched mixed-adapter decode must
+/// bit-match the sequential single-adapter oracle.
+fn smoke_serve() -> Result<String, String> {
+    let (_, cfg) = TransformerConfig::catalog_grid()
+        .into_iter()
+        .find(|(name, _)| *name == "lora-tiny")
+        .ok_or_else(|| "lora-tiny missing from the catalog grid".to_string())?;
+    let base = cfg.init(0);
+    let mut reg = AdapterRegistry::new(2);
+    let names: Vec<String> = (0..2).map(|i| format!("doctor-{i}")).collect();
+    for (i, n) in names.iter().enumerate() {
+        reg.insert_synthetic(n, &cfg, &base, 4, 1 + i as u64)
+            .map_err(|e| format!("synthetic adapter {n}: {e}"))?;
+    }
+    let adapters = reg.get_many(&names)?;
+    let prompt_len = (cfg.seq_len / 2).max(1);
+    let max_new = (cfg.seq_len / 4).max(1);
+    let prompts: Vec<Vec<i32>> = (0..2)
+        .map(|i| (0..prompt_len).map(|j| ((3 + i + 2 * j) % cfg.vocab) as i32).collect())
+        .collect();
+    oracle_check(&cfg, &base, &adapters, &prompts, max_new)
+        .map_err(|e| format!("lora-tiny: oracle mismatch: {e}"))?;
+    Ok(format!(
+        "lora-tiny: batched b=2 decode bit-matches the sequential oracle \
+         ({max_new} new tokens)"
+    ))
+}
+
+/// The dp tier's tripwire: the same config at W=1 and W=2 must produce
+/// raw-bits-identical loss curves and final parameters.
+fn smoke_dp(steps: usize, par: Parallelism) -> Result<String, String> {
+    let mk = |workers: usize| {
+        let mut cfg = DpConfig::default();
+        cfg.train.steps = steps;
+        cfg.train.workers = workers;
+        cfg.train.parallelism = par;
+        cfg.shards = 2;
+        cfg
+    };
+    let model = mk(1).train.model.clone();
+    let run = |workers: usize| {
+        let mut tr = DpTrainer::new(mk(workers))
+            .map_err(|e| format!("{model}: dp trainer (W={workers}): {e}"))?;
+        let report =
+            tr.run().map_err(|e| format!("{model}: dp run (W={workers}): {e}"))?;
+        Ok::<_, String>((report, tr))
+    };
+    let (ra, ta) = run(1)?;
+    let (rb, tb) = run(2)?;
+    let la: Vec<u32> = ra.train_losses.iter().map(|x| x.to_bits()).collect();
+    let lb: Vec<u32> = rb.train_losses.iter().map(|x| x.to_bits()).collect();
+    if la != lb {
+        return Err(format!("{model}: W=2 loss curve diverges from W=1 (raw bits)"));
+    }
+    for (name, p) in ta.params() {
+        let q = &tb.params()[name];
+        let pb: Vec<u32> = p.data.iter().map(|x| x.to_bits()).collect();
+        let qb: Vec<u32> = q.data.iter().map(|x| x.to_bits()).collect();
+        if pb != qb {
+            return Err(format!(
+                "{model}: W=2 parameter {name} diverges from W=1 (raw bits)"
+            ));
+        }
+    }
+    Ok(format!(
+        "{model}: W=2 bit-matches W=1 over {steps} step(s) ({} params)",
+        ta.params().len()
+    ))
+}
+
+fn bench_path(dir: &str, file: &str) -> String {
+    format!("{}/{}", dir.trim_end_matches('/'), file)
+}
+
+/// Validate one committed trajectory against the versioned contract —
+/// the exact code path CI and the bench binaries use.
+fn check_bench_file(dir: &str, file: &str, bench: &str) -> Result<String, String> {
+    let path = bench_path(dir, file);
+    if !std::path::Path::new(&path).exists() {
+        return Err(format!(
+            "{path}: not found — run from the repo root or pass --bench-dir"
+        ));
+    }
+    let f = BenchFile::load(&path).map_err(|e| e.to_string())?;
+    if f.bench != bench {
+        return Err(format!(
+            "{path}: bench name {:?} does not match the expected {bench:?}",
+            f.bench
+        ));
+    }
+    let latest = f.trajectory.last().and_then(|s| s.provenance.clone());
+    Ok(format!(
+        "{path}: schema {} valid, {} snapshot(s), latest provenance {:?}",
+        contract::SCHEMA_VERSION,
+        f.trajectory.len(),
+        latest.unwrap_or_default()
+    ))
+}
+
+/// `BENCH_BUDGETS.toml` must parse under the zero-dep TOML subset and
+/// carry a section per gated bench (the CI gate reads it with its own
+/// mirror parser — this catches a broken edit before it reaches CI).
+fn check_budgets(dir: &str) -> Result<String, String> {
+    let path = bench_path(dir, "BENCH_BUDGETS.toml");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("{path}: cannot read: {e}"))?;
+    let map = crate::config::parse_toml(&text).map_err(|e| format!("{path}: {e}"))?;
+    for section in ["kernels", "serving", "dp"] {
+        let prefix = format!("{section}.");
+        if !map.keys().any(|k| k.starts_with(&prefix)) {
+            return Err(format!("{path}: no [{section}] budget section"));
+        }
+    }
+    Ok(format!("{path}: parses; kernels/serving/dp sections present ({} keys)", map.len()))
+}

@@ -37,6 +37,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod doctor;
 pub mod memory;
 pub mod metrics;
 pub mod model;

@@ -31,6 +31,7 @@ fn main() {
             "inspect" => cmd_inspect(&args),
             "serve" => cmd_serve(&args),
             "train-dp" => cmd_train_dp(&args),
+            "doctor" => cmd_doctor(&args),
             "help" | "" => {
                 println!("{USAGE}");
                 Ok(())
@@ -99,13 +100,7 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
 
 fn cmd_train(args: &Args) -> Result<(), String> {
     let cfg = experiment_from_args(args)?;
-    if cfg.train.workers > 1 {
-        return Err(format!(
-            "train is the single-process trainer; --workers {} is the \
-             data-parallel tier — use `flora train-dp` (docs/DISTRIBUTED.md)",
-            cfg.train.workers
-        ));
-    }
+    cfg.train.reject_multi_worker()?;
     println!(
         "training {} on task={} method={} optimizer={} steps={} tau={} kappa={}",
         cfg.train.model,
@@ -520,6 +515,56 @@ fn cmd_train_dp(args: &Args) -> Result<(), String> {
             report.train_losses.len(),
         );
     }
+    Ok(())
+}
+
+/// `flora doctor`: run every ops self-check (flora::doctor), print the
+/// human table + the machine-readable JSON receipt, exit non-zero if
+/// any check failed. docs/OPS.md documents the receipt schema.
+fn cmd_doctor(args: &Args) -> Result<(), String> {
+    let threads = args.usize_flag("parallelism", 2)?;
+    if threads == 0 {
+        return Err("--parallelism: must be >= 1".into());
+    }
+    let cfg = flora::doctor::DoctorConfig {
+        quick: args.has("quick"),
+        parallelism: flora::tensor::Parallelism::new(threads),
+        bench_dir: args.flag_or("bench-dir", "."),
+    };
+    let report = flora::doctor::run(&cfg);
+    println!(
+        "flora doctor ({} mode, parallelism {})",
+        if report.quick { "quick" } else { "full" },
+        report.parallelism
+    );
+    for c in &report.checks {
+        println!(
+            "  {} {:<32} {} ({:.0} ms)",
+            if c.passed { "ok  " } else { "FAIL" },
+            c.name,
+            c.detail,
+            c.ms
+        );
+    }
+    let receipt = report.receipt().render();
+    match args.flag("receipt") {
+        Some(path) => {
+            std::fs::write(path, &receipt)
+                .map_err(|e| format!("writing receipt {path}: {e}"))?;
+            println!("receipt written to {path}");
+        }
+        None => println!("{receipt}"),
+    }
+    if !report.ok() {
+        let failed = report.failed_names();
+        return Err(format!(
+            "doctor: {} of {} checks failed: {}",
+            failed.len(),
+            report.checks.len(),
+            failed.join(", ")
+        ));
+    }
+    println!("doctor: all {} checks passed", report.checks.len());
     Ok(())
 }
 

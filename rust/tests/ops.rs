@@ -1,0 +1,440 @@
+//! Ops-hardening sweep (PR 8): the versioned bench contract against the
+//! COMMITTED trajectory files and a gallery of corrupt fixtures, the
+//! config-validation error matrix (exact messages — these are the ops
+//! API), checkpoint corruption robustness (truncation and bit flips
+//! must fail loudly with path-bearing errors on both the resume and the
+//! serving hot-load paths), and `flora doctor` end-to-end.
+//!
+//! Registered explicitly in Cargo.toml (`autotests = false`).
+
+use std::collections::BTreeMap;
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use flora::bench::contract::{self, BenchFile, ContractError};
+use flora::config::{DpConfig, ServeConfig, TaskKind, TrainConfig};
+use flora::coordinator::{AccumSeeds, MethodSpec, MomentumSeeds, Trainer};
+use flora::doctor::{self, DoctorConfig};
+use flora::opt::OptimizerKind;
+use flora::runtime::AdapterRegistry;
+use flora::tensor::Parallelism;
+use flora::util::json::{self, Json};
+
+/// Path of a committed repo artifact, independent of the test cwd.
+fn repo_path(name: &str) -> String {
+    format!("{}/{}", env!("CARGO_MANIFEST_DIR"), name)
+}
+
+/// Fresh scratch directory per test (tests share one process).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("flora-ops-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// satellite 1 — bench contract: committed files + negative fixtures
+// ---------------------------------------------------------------------------
+
+/// Every committed trajectory must satisfy the contract through the
+/// exact code path CI and `flora doctor` use, and carry the bench name
+/// the binaries will demand on the next append.
+#[test]
+fn committed_bench_files_satisfy_the_contract() {
+    for (file, bench) in contract::COMMITTED_FILES {
+        let path = repo_path(file);
+        let f = BenchFile::load(&path).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(f.bench, bench, "{file}: bench name");
+        assert_eq!(f.schema, Some(contract::SCHEMA_VERSION), "{file}: schema");
+        assert!(!f.trajectory.is_empty(), "{file}: empty trajectory");
+        for (i, snap) in f.trajectory.iter().enumerate() {
+            assert!(
+                snap.provenance.as_deref().is_some_and(|p| !p.is_empty()),
+                "{file}: trajectory[{i}] has no provenance"
+            );
+            assert!(!snap.sizes.is_empty(), "{file}: trajectory[{i}] has no sizes");
+        }
+    }
+}
+
+/// The dp seed stamps `"final_loss": null` (= unmeasured). The typed
+/// reader must map it to `None` rather than reject or zero it.
+#[test]
+fn null_metrics_read_as_unmeasured_not_errors() {
+    let f = BenchFile::load(&repo_path("BENCH_dp.json")).unwrap();
+    let has_null = f
+        .trajectory
+        .iter()
+        .flat_map(|s| &s.sizes)
+        .any(|row| row.metrics.get("final_loss") == Some(&None));
+    assert!(has_null, "BENCH_dp.json lost its null final_loss sentinel");
+}
+
+fn fixture(schema: &str, snaps: &str) -> String {
+    format!(
+        r#"{{"bench": "micro_kernels", "schema": {schema}, "comment": "t",
+            "trajectory": [{snaps}]}}"#
+    )
+}
+
+const SNAP_OK: &str = r#"{"pr": 9, "provenance": "cargo-bench t",
+    "sizes": [{"model": "m", "tok_s": 1.0}]}"#;
+
+/// Each corruption class produces its own variant AND its own message —
+/// asserted pairwise-distinct so a CI log always names the real fault.
+#[test]
+fn corrupt_fixtures_fail_with_distinct_diagnoses() {
+    let mut messages: Vec<String> = Vec::new();
+    let mut check = |err: ContractError, variant: &str, needle: &str| {
+        let msg = err.to_string();
+        assert!(msg.contains(needle), "{variant}: {msg:?} lacks {needle:?}");
+        assert!(msg.contains("f.json"), "{variant}: {msg:?} lacks the path");
+        messages.push(msg);
+    };
+
+    // truncated JSON (the way a killed bench or a bad merge corrupts it)
+    let text = fixture("2", SNAP_OK);
+    let err = BenchFile::parse("f.json", &text[..text.len() / 2]).unwrap_err();
+    assert!(matches!(err, ContractError::Parse { .. }), "{err}");
+    check(err, "truncated", "invalid JSON");
+
+    // future schema version
+    let f = BenchFile::parse("f.json", &fixture("3", SNAP_OK)).unwrap();
+    let err = f.validate("f.json").unwrap_err();
+    assert!(matches!(err, ContractError::UnknownSchema { found: Some(3), .. }), "{err}");
+    check(err, "schema 3", "unsupported schema version 3");
+
+    // schema field missing entirely (pre-contract file)
+    let text = r#"{"bench": "micro_kernels", "trajectory": []}"#;
+    let err = BenchFile::parse("f.json", text).unwrap().validate("f.json").unwrap_err();
+    assert!(matches!(err, ContractError::UnknownSchema { found: None, .. }), "{err}");
+    check(err, "schema missing", "unsupported schema version none");
+
+    // snapshot with no provenance tag
+    let snap = r#"{"pr": 9, "sizes": [{"model": "m", "tok_s": 1.0}]}"#;
+    let err = BenchFile::parse("f.json", &fixture("2", snap))
+        .unwrap()
+        .validate("f.json")
+        .unwrap_err();
+    assert!(matches!(err, ContractError::MissingProvenance { index: 0, .. }), "{err}");
+    check(err, "no provenance", "no provenance tag");
+
+    // pr going backwards (a trajectory is append-only)
+    let snaps = format!("{SNAP_OK}, {}", SNAP_OK.replace("\"pr\": 9", "\"pr\": 4"));
+    let err = BenchFile::parse("f.json", &fixture("2", &snaps))
+        .unwrap()
+        .validate("f.json")
+        .unwrap_err();
+    assert!(
+        matches!(err, ContractError::NonMonotonic { field: "pr", index: 1, .. }),
+        "{err}"
+    );
+    check(err, "non-monotonic", "goes backwards");
+
+    // negative metric (all trajectory metrics are magnitudes)
+    let snap = SNAP_OK.replace("1.0", "-1.0");
+    let err = BenchFile::parse("f.json", &fixture("2", &snap))
+        .unwrap()
+        .validate("f.json")
+        .unwrap_err();
+    assert!(
+        matches!(
+            err,
+            ContractError::BadMetric { fault: contract::MetricFault::Negative, .. }
+        ),
+        "{err}"
+    );
+    check(err, "negative", "negative");
+
+    // NaN metric — only constructible in memory (JSON text has no NaN;
+    // the renderer would launder it to null, which is exactly why the
+    // append path validates the typed document first)
+    let mut row = BTreeMap::new();
+    row.insert("model".to_string(), Json::Str("m".into()));
+    row.insert("tok_s".to_string(), Json::Num(f64::NAN));
+    let mut snap = BTreeMap::new();
+    snap.insert("provenance".to_string(), Json::Str("cargo-bench t".into()));
+    snap.insert("sizes".to_string(), Json::Arr(vec![Json::Obj(row)]));
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("micro_kernels".into()));
+    root.insert("schema".to_string(), Json::Num(2.0));
+    root.insert("trajectory".to_string(), Json::Arr(vec![Json::Obj(snap)]));
+    let err = BenchFile::from_json("f.json", &Json::Obj(root))
+        .unwrap()
+        .validate("f.json")
+        .unwrap_err();
+    assert!(
+        matches!(
+            err,
+            ContractError::BadMetric { fault: contract::MetricFault::NonFinite, .. }
+        ),
+        "{err}"
+    );
+    check(err, "nan", "NaN");
+
+    let distinct: HashSet<&String> = messages.iter().collect();
+    assert_eq!(distinct.len(), messages.len(), "duplicate diagnoses: {messages:#?}");
+}
+
+/// Round-trip through the shared append path: create, extend, reload —
+/// and the reloaded file still passes against the committed contract.
+#[test]
+fn append_round_trips_through_the_contract() {
+    let dir = tmp_dir("append");
+    let path = dir.join("BENCH_rt.json");
+    let path = path.to_str().unwrap();
+    let snap = |pr: u64, tok: f64| {
+        json::parse(&format!(
+            r#"{{"pr": {pr}, "unix_time": {}, "provenance": "cargo-bench rt",
+                 "quick": false, "sizes": [{{"model": "m", "tok_s": {tok}}}]}}"#,
+            1700000000 + pr
+        ))
+        .unwrap()
+    };
+    contract::append_to_file(path, "rt", "round-trip", snap(1, 10.0)).unwrap();
+    contract::append_to_file(path, "rt", "round-trip", snap(2, 11.0)).unwrap();
+    let f = BenchFile::load(path).unwrap();
+    assert_eq!(f.trajectory.len(), 2);
+    assert_eq!(f.trajectory[1].pr, Some(2));
+    assert_eq!(f.trajectory[1].sizes[0].metrics["tok_s"], Some(11.0));
+
+    // a regressed pr stamp must be refused before the file is touched
+    let before = std::fs::read_to_string(path).unwrap();
+    let err = contract::append_to_file(path, "rt", "round-trip", snap(0, 12.0)).unwrap_err();
+    assert!(err.contains("goes backwards"), "{err}");
+    assert_eq!(std::fs::read_to_string(path).unwrap(), before, "file changed on refusal");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// satellite 2 — config-validation error matrix (exact messages)
+// ---------------------------------------------------------------------------
+
+fn dp_cfg(mutate: impl FnOnce(&mut DpConfig)) -> DpConfig {
+    let mut cfg = DpConfig::default();
+    mutate(&mut cfg);
+    cfg
+}
+
+/// The rejection messages ARE the ops interface — runbooks and CI logs
+/// quote them — so they are pinned with exact equality, not contains().
+#[test]
+fn config_rejections_carry_exact_actionable_messages() {
+    // dp: more workers than shards would idle
+    let err = dp_cfg(|c| {
+        c.train.workers = 8;
+        c.shards = 4;
+    })
+    .validate()
+    .unwrap_err();
+    assert_eq!(
+        err,
+        "workers (8) exceeds shards (4) — extra workers would idle; \
+         lower --workers or raise --shards"
+    );
+
+    // dp: workers x parallelism overflowing the process pool budget
+    let err = dp_cfg(|c| {
+        c.train.workers = 16;
+        c.train.parallelism = Parallelism::new(8);
+        c.shards = 16;
+    })
+    .validate()
+    .unwrap_err();
+    assert_eq!(
+        err,
+        "workers (16) x parallelism (8) = 128 exceeds the pool budget of 64 \
+         threads — lower one of them"
+    );
+
+    // dp: only Flora gradients have a compressed wire format
+    let err = dp_cfg(|c| c.train.method = MethodSpec::Lora { rank: 8 })
+        .validate()
+        .unwrap_err();
+    assert_eq!(
+        err,
+        "train-dp exchanges Flora-compressed gradients; method Lora { rank: 8 } has no \
+         compressed wire format (use --method flora --rank R)"
+    );
+
+    // dp: only the LM corpus is sharded
+    let err = dp_cfg(|c| c.train.task = TaskKind::Sum).validate().unwrap_err();
+    assert_eq!(
+        err,
+        "train-dp shards the C4-sim LM corpus; task Sum is not sharded \
+         (use the lora-* models / lm task)"
+    );
+
+    // serve: a zero batch ceiling would deadlock the batcher
+    let err = ServeConfig::from_toml_str("serve.max_batch = 0").unwrap_err();
+    assert_eq!(err, "serve.max_batch: must be >= 1");
+
+    // train: multi-worker requests belong to the dp tier
+    let cfg = TrainConfig { workers: 2, ..TrainConfig::default() };
+    assert_eq!(
+        cfg.reject_multi_worker().unwrap_err(),
+        "train is the single-process trainer; --workers 2 is the \
+         data-parallel tier — use `flora train-dp` (docs/DISTRIBUTED.md)"
+    );
+    // and one worker stays fine
+    TrainConfig::default().reject_multi_worker().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// satellite 3 — checkpoint corruption robustness
+// ---------------------------------------------------------------------------
+
+fn smoke_cfg(model: &str, method: MethodSpec) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        task: TaskKind::Lm,
+        method,
+        optimizer: OptimizerKind::Sgd,
+        lr: 0.1,
+        steps: 2,
+        tau: 1,
+        kappa: 4,
+        batch: 2,
+        seed: 0,
+        eval_every: 0,
+        eval_samples: 4,
+        ..TrainConfig::default()
+    }
+}
+
+/// Truncate a saved checkpoint mid-payload: `resume_from` must fail
+/// loudly, and the error must carry both the path and the checksum
+/// diagnosis (not a garbled-parse artifact of reading half a file).
+#[test]
+fn truncated_checkpoint_fails_resume_with_path_and_checksum() {
+    let dir = tmp_dir("ckpt-trunc");
+    let path = dir.join("train.ckpt");
+    let path_s = path.to_str().unwrap();
+    let base = smoke_cfg("lm-tiny", MethodSpec::Flora { rank: 4 });
+    let mut t1 = Trainer::native(base.clone()).unwrap();
+    t1.run().unwrap();
+    t1.save_checkpoint(path_s).unwrap();
+
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(bytes.len() > 64, "checkpoint suspiciously small");
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+
+    let mut t2 = Trainer::native(base).unwrap();
+    let err = t2.resume_from(path_s).unwrap_err();
+    assert!(err.contains(path_s), "no path in: {err}");
+    assert!(err.contains("checksum mismatch"), "no diagnosis in: {err}");
+    assert!(err.contains("truncated or corrupted"), "no cause hint in: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Flip ONE bit in the weight payload: the FNV checksum must catch it on
+/// the serving hot-load path — silently serving a corrupted adapter is
+/// the worst failure mode this tier has.
+#[test]
+fn bit_flipped_checkpoint_fails_hot_load_with_path() {
+    let dir = tmp_dir("ckpt-flip");
+    let path = dir.join("adapter.ckpt");
+    let path_s = path.to_str().unwrap();
+    let mut tr = Trainer::native(smoke_cfg("lora-tiny", MethodSpec::Lora { rank: 4 })).unwrap();
+    tr.run().unwrap();
+    tr.save_checkpoint(path_s).unwrap();
+
+    // sanity: the pristine file hot-loads at the trained rank
+    let mut reg = AdapterRegistry::new(2);
+    assert_eq!(reg.load_checkpoint("good", path_s).unwrap(), 4);
+
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2; // well past the header, inside weights
+    bytes[mid] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = reg.load_checkpoint("bad", path_s).unwrap_err();
+    assert!(err.contains(path_s), "no path in: {err}");
+    assert!(err.contains("checksum mismatch"), "no diagnosis in: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A checkpoint saved by a future (or past) format version must be
+/// refused with the version spelled out, not misparsed.
+#[test]
+fn old_format_version_is_refused_on_resume() {
+    let dir = tmp_dir("ckpt-ver");
+    let path = dir.join("old.ckpt");
+    let path_s = path.to_str().unwrap();
+    let base = smoke_cfg("lm-tiny", MethodSpec::Flora { rank: 4 });
+    let mut t1 = Trainer::native(base.clone()).unwrap();
+    t1.run().unwrap();
+    t1.save_checkpoint(path_s).unwrap();
+
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[8..12].copy_from_slice(&1u32.to_le_bytes()); // version 2 -> 1
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Trainer::native(base).unwrap().resume_from(path_s).unwrap_err();
+    assert!(err.contains("format version 1"), "{err}");
+    assert!(err.contains(path_s), "no path in: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resume-after-truncation still works end to end when the file is
+/// intact — the robustness guards must not break the happy path.
+#[test]
+fn intact_checkpoint_still_resumes_and_trains() {
+    let dir = tmp_dir("ckpt-ok");
+    let path = dir.join("ok.ckpt");
+    let path_s = path.to_str().unwrap();
+    let base = smoke_cfg("lm-tiny", MethodSpec::Flora { rank: 4 });
+    let mut t1 = Trainer::native(base.clone()).unwrap();
+    t1.run().unwrap();
+    t1.save_checkpoint(path_s).unwrap();
+
+    let mut t2 = Trainer::native(base).unwrap();
+    t2.resume_from(path_s).unwrap();
+    let mut accum = AccumSeeds::new(0);
+    let mut momentum = MomentumSeeds::new(0, 4);
+    let loss = t2.train_step(&mut accum, &mut momentum).unwrap();
+    assert!(loss.is_finite(), "post-resume step produced {loss}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// tentpole — `flora doctor` end to end
+// ---------------------------------------------------------------------------
+
+/// Healthy checkout: every check passes. Then corrupt ONE committed
+/// artifact copy: only the matching contract check flips, the report
+/// goes unhealthy, and the receipt names the failing check — the
+/// machine-readable promise CI relies on.
+#[test]
+fn doctor_passes_when_healthy_and_names_the_corrupt_artifact() {
+    let dir = tmp_dir("doctor");
+    for (file, _) in contract::COMMITTED_FILES {
+        std::fs::copy(repo_path(file), dir.join(file)).unwrap();
+    }
+    std::fs::copy(repo_path("BENCH_BUDGETS.toml"), dir.join("BENCH_BUDGETS.toml")).unwrap();
+    let cfg = DoctorConfig {
+        quick: true,
+        parallelism: Parallelism::new(2),
+        bench_dir: dir.to_str().unwrap().to_string(),
+    };
+
+    let report = doctor::run(&cfg);
+    assert!(report.ok(), "healthy doctor failed: {:?}", report.failed_names());
+    assert!(report.checks.len() >= 10, "expected a full check sweep");
+    let receipt = report.receipt();
+    assert_eq!(receipt.get("ok"), Some(&Json::Bool(true)));
+
+    // truncate one trajectory copy and re-run
+    let victim = dir.join("BENCH_dp.json");
+    let text = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, &text[..text.len() / 2]).unwrap();
+    let report = doctor::run(&cfg);
+    assert!(!report.ok());
+    assert_eq!(report.failed_names(), vec!["bench-contract:BENCH_dp.json".to_string()]);
+    let receipt = report.receipt();
+    assert_eq!(receipt.get("ok"), Some(&Json::Bool(false)));
+    let rendered = receipt.render();
+    assert!(rendered.contains("bench-contract:BENCH_dp.json"), "{rendered}");
+    assert!(rendered.contains("invalid JSON"), "{rendered}");
+    // the receipt itself must be valid JSON for the harness to consume
+    json::parse(&rendered).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
