@@ -11,9 +11,17 @@
 //!
 //! and, as the PR-4 refactor's acceptance metric, the attention core's
 //! forward+backward throughput on the batched GEMM path
-//! (`model::blocks::attention_*`) against the retained pre-refactor
-//! scalar nests (`model::blocks::reference`) — `attn_fwd_bwd_speedup`
-//! at lora-tiny scale is the ≥5× gate.
+//! (`model::blocks::attention_*` — since PR 9 the **packed**-panel
+//! kernels, with the pool driver's fused single-submission backward
+//! dispatch) against the retained pre-refactor scalar nests
+//! (`model::blocks::reference`) — `attn_fwd_bwd_speedup` at lora-tiny
+//! scale is the ≥5× gate.
+//!
+//! Before measuring anything, the bench runs its oracle tripwires —
+//! packed kernels vs the naive serial references (raw bits, NaN/Inf
+//! poisoned) and the pool-fused vs scope-unfused attention backward —
+//! and EXITS 1 on any divergence: a throughput number from kernels that
+//! changed results is worse than no number.
 //!
 //! `BENCH_kernels.json` is a schema-2 TRAJECTORY: a list of dated-by-PR
 //! snapshots (see docs/PERFORMANCE.md for a worked reading example).
@@ -124,6 +132,71 @@ fn attention_pair(dims: BlockDims, b: usize, s: usize, iters: usize) -> (f64, f6
         std::hint::black_box((ctx, grads));
     });
     (tok_s(b * s, scalar.mean()), tok_s(b * s, batched.mean()))
+}
+
+/// Correctness gate ahead of any timing: the packed/pooled kernels and
+/// the fused attention-backward dispatch must bit-match their retained
+/// oracles. Returns the failure description; the caller exits 1.
+fn oracle_tripwires(par: Parallelism) -> Result<(), String> {
+    fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+        a.shape() == b.shape()
+            && a.data
+                .iter()
+                .zip(b.data.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+    // 1) packed GEMMs vs the naive serial oracles on a ragged
+    //    NaN/Inf-poisoned rectangle, under the bench's own budget
+    par.install();
+    let mut rng = Rng::new(0xbe9c);
+    let (n, k, m) = (67usize, 71usize, 131usize);
+    let mut a = Matrix::gaussian(n, k, 1.0, &mut rng);
+    let b = Matrix::gaussian(k, m, 1.0, &mut rng);
+    let bt = Matrix::gaussian(m, k, 1.0, &mut rng);
+    let b2 = Matrix::gaussian(n, m, 1.0, &mut rng);
+    *a.at_mut(1, 2) = f32::NAN;
+    *a.at_mut(4, 0) = f32::INFINITY;
+    for (layout, got, want) in [
+        ("matmul", a.matmul(&b), a.matmul_naive(&b)),
+        ("matmul_nt", a.matmul_nt(&bt), a.matmul_nt_naive(&bt)),
+        ("matmul_tn", a.matmul_tn(&b2), a.matmul_tn_naive(&b2)),
+    ] {
+        if !bits_equal(&got, &want) {
+            return Err(format!(
+                "{layout} ({n}x{k}x{m}) diverges from the naive oracle \
+                 under {par:?}"
+            ));
+        }
+    }
+    // 2) pool-fused vs scope-unfused attention backward: the same
+    //    gradients, raw bits, through both dispatch routes
+    let dims = TransformerConfig::tiny().dims;
+    let (bq, s) = (2usize, 7usize);
+    let q = Matrix::gaussian(bq * s, dims.d_model, 1.0, &mut rng);
+    let kk = Matrix::gaussian(bq * s, dims.d_model, 1.0, &mut rng);
+    let v = Matrix::gaussian(bq * s, dims.d_model, 1.0, &mut rng);
+    let mut dctx = Matrix::gaussian(bq * s, dims.d_model, 1.0, &mut rng);
+    *dctx.at_mut(0, 0) = f32::NAN;
+    let threads = par.threads().max(2);
+    let run = |budget: Parallelism| {
+        budget.install();
+        let (_, probs) = blocks::attention_forward(&q, &kk, &v, dims, bq, s, true);
+        blocks::attention_backward(&q, &kk, &v, &probs, &dctx, dims, bq, s)
+    };
+    let (dq_p, dk_p, dv_p) = run(Parallelism::new(threads));
+    let (dq_s, dk_s, dv_s) = run(Parallelism::scoped(threads));
+    for (name, p, sc) in
+        [("dq", &dq_p, &dq_s), ("dk", &dk_p, &dk_s), ("dv", &dv_p, &dv_s)]
+    {
+        if !bits_equal(p, sc) {
+            return Err(format!(
+                "attention backward {name}: pool-fused dispatch diverges \
+                 from the scope-unfused oracle"
+            ));
+        }
+    }
+    par.install();
+    Ok(())
 }
 
 fn lm_toy_batch(vocab: usize, s: usize) -> (Vec<i32>, Vec<f32>) {
@@ -255,6 +328,11 @@ const COMMENT: &str = "Per-PR kernel-throughput trajectory (tokens/sec). Entries
 
 fn main() {
     let args = BenchArgs::parse();
+    // correctness before throughput: any oracle divergence kills the run
+    if let Err(e) = oracle_tripwires(args.parallelism) {
+        eprintln!("[micro_kernels] ORACLE TRIPWIRE: {e}");
+        std::process::exit(1);
+    }
     let iters = args.steps.unwrap_or(if args.quick { 4 } else { 12 });
     let mut results = Vec::new();
     for (name, cfg) in TransformerConfig::catalog_grid() {
@@ -297,14 +375,16 @@ fn main() {
     }
     table.print();
 
-    // the refactor's headline number; not asserted (CI runners vary) but
-    // surfaced loudly so a regression is visible in the log
+    // the refactor's headline number, measured against the packed/fused
+    // batched path; not asserted (CI runners vary) but surfaced loudly
+    // so a regression is visible in the log
     if let Some(tiny) = results.iter().find(|r| r.model == "lora-tiny") {
         let s = tiny.speedup();
         if s < 5.0 {
             eprintln!(
                 "[micro_kernels] WARNING: lora-tiny attention fwd+bwd \
-                 speedup {s:.2}x is below the 5x acceptance gate"
+                 speedup {s:.2}x (packed batched path vs scalar nests) \
+                 is below the 5x acceptance gate"
             );
         }
     }

@@ -1,16 +1,22 @@
 /* kernel_mirror.c — C mirror of the rust tensor-kernel hot path, used to
- * measure the PR-5 tentpole (persistent worker pool + fused QKV +
- * unrolled inner loops) against the PR-4 baseline (std::thread::scope
- * spawn per GEMM call + unfused QKV + single-step loops) on machines
- * where cargo is unavailable (the build container). It seeds the first
- * BENCH_kernels.json trajectory point; `cargo bench --bench
- * micro_kernels -- --runtime scope|pool` reproduces the same A/B on the
- * real crate.
+ * measure the kernel-ladder PRs on machines where cargo is unavailable
+ * (the build container). It seeds the BENCH_kernels.json trajectory
+ * points; `cargo bench --bench micro_kernels -- --runtime scope|pool`
+ * reproduces the same A/B on the real crate.
+ *
+ * Three variants, one per committed trajectory point:
+ *   0  PR-4: spawn-per-call driver, unfused QKV, plain single-step loops
+ *   1  PR-5: persistent pool, fused [d,3d] QKV, unrolled inner loops
+ *   2  PR-9: pool + fused QKV + PACKED kernels (B-operand panel packed
+ *      into a reused thread-local scratch so the inner loops are
+ *      stride-1 on both operands) + the 4 backward-attention
+ *      contractions fused into ONE dispatch (one latch instead of four)
  *
  * What is mirrored, faithfully:
- *   - the three blocked band kernels of rust/src/tensor/kernels.rs in
- *     BOTH forms (PR-4 single-step loops; PR-5 unrolled forms), same
- *     K_BLOCK/J_BLOCK and the same PAR_MIN_FLOPS engagement gate;
+ *   - the blocked band kernels of rust/src/tensor/kernels.rs in all
+ *     three forms, same K_BLOCK/J_BLOCK (overridable with
+ *     -DK_BLOCK=.. -DJ_BLOCK=.. for retuning sweeps) and the same
+ *     PAR_MIN_FLOPS engagement gate;
  *   - the row-band parallel driver in both lifecycles: one pthread
  *     spawn+join per call (the thread::scope mirror) vs a persistent
  *     pool (mutex+condvar job board, caller computes band 0) — band
@@ -18,13 +24,18 @@
  *   - the per-step GEMM call sequence of the native transformer/ViT
  *     models (forward and forward+backward), including one dispatch per
  *     *batched* attention op exactly like tensor/batched.rs, with the
- *     unfused (3 GEMM) vs fused ([d,3d]) QKV layouts.
+ *     unfused (3 GEMM) vs fused ([d,3d]) QKV layouts, and (variant 2)
+ *     the panel-local fused backward-attention dispatch of
+ *     model/blocks.rs.
  *
  * What is NOT mirrored (documented in docs/PERFORMANCE.md): elementwise
- * ops (softmax/RMS-norm/GELU), embedding gathers, and the optimizer —
- * so absolute tokens/sec here overstate the full-model numbers the rust
- * bench reports. The pre/post RATIO is the honest measurement: both
- * variants omit the same work.
+ * ops (softmax/RMS-norm/GELU — the fused attention-backward op here
+ * runs its 4 GEMM contractions per panel but stands dprobs in for
+ * dscores, omitting the row-local softmax VJP between them, so all
+ * variants omit identical elementwise work), embedding gathers, and the
+ * optimizer — so absolute tokens/sec here overstate the full-model
+ * numbers the rust bench reports. The pre/post RATIO is the honest
+ * measurement: both variants omit the same work.
  *
  * Build & run:  gcc -O2 -pthread -o kernel_mirror kernel_mirror.c -lm
  *               ./kernel_mirror 4          # parallelism (thread budget)
@@ -36,15 +47,24 @@
 #include <string.h>
 #include <time.h>
 
+#ifndef K_BLOCK
 #define K_BLOCK 64
+#endif
+#ifndef J_BLOCK
 #define J_BLOCK 128
+#endif
 #define PAR_MIN_FLOPS (1 << 15)
 #define MAX_THREADS 16
+
+/* reused per-thread packing scratch: one K×J B-panel (the tn kernel
+ * packs at most a K×K A-chunk, covered by the max below) */
+#define PACK_CAP (K_BLOCK * (J_BLOCK > K_BLOCK ? J_BLOCK : K_BLOCK))
+static _Thread_local float g_pack[PACK_CAP];
 
 static int g_threads = 4;
 
 /* ------------------------------------------------------------------ */
-/* band kernels, PR-4 (plain) and PR-5 (unrolled) forms               */
+/* band kernels: plain (PR-4), unrolled (PR-5), packed (PR-9) forms   */
 /* ------------------------------------------------------------------ */
 
 static void matmul_band_plain(float *c, const float *a, const float *b,
@@ -96,6 +116,57 @@ static void matmul_band_unroll(float *c, const float *a, const float *b,
                     float aik = arow[kk];
                     const float *brow = b + (size_t)kk * m;
                     for (int j = j0; j < j1; j++) ctile[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/* PR-9: the K×J panel of B is copied into the contiguous reused
+ * scratch, then the same 4-step chained accumulation runs stride-1 on
+ * both operands. Packing only moves bytes; per-element ascending-k
+ * accumulation (one f32 chain through C memory) is untouched, so the
+ * result is raw-bits identical to the plain/unrolled forms. */
+static void matmul_band_packed(float *c, const float *a, const float *b,
+                               int n, int k, int m) {
+    float *pack = g_pack;
+    for (int j0 = 0; j0 < m; j0 += J_BLOCK) {
+        int j1 = j0 + J_BLOCK < m ? j0 + J_BLOCK : m;
+        int jw = j1 - j0;
+        for (int k0 = 0; k0 < k; k0 += K_BLOCK) {
+            int k1 = k0 + K_BLOCK < k ? k0 + K_BLOCK : k;
+            int kh = k1 - k0;
+            for (int kk = 0; kk < kh; kk++)
+                memcpy(pack + (size_t)kk * jw,
+                       b + (size_t)(k0 + kk) * m + j0, jw * sizeof(float));
+            for (int i = 0; i < n; i++) {
+                const float *arow = a + (size_t)i * k + k0;
+                float *ctile = c + (size_t)i * m + j0;
+                int kk = 0;
+                for (; kk + 8 <= kh; kk += 8) {
+                    float a0 = arow[kk], a1 = arow[kk + 1];
+                    float a2 = arow[kk + 2], a3 = arow[kk + 3];
+                    float a4 = arow[kk + 4], a5 = arow[kk + 5];
+                    float a6 = arow[kk + 6], a7 = arow[kk + 7];
+                    const float *b0 = pack + (size_t)kk * jw;
+                    for (int j = 0; j < jw; j++) {
+                        const float *bp = b0 + j;
+                        float acc = ctile[j];
+                        acc += a0 * bp[0];
+                        acc += a1 * bp[(size_t)jw];
+                        acc += a2 * bp[(size_t)2 * jw];
+                        acc += a3 * bp[(size_t)3 * jw];
+                        acc += a4 * bp[(size_t)4 * jw];
+                        acc += a5 * bp[(size_t)5 * jw];
+                        acc += a6 * bp[(size_t)6 * jw];
+                        acc += a7 * bp[(size_t)7 * jw];
+                        ctile[j] = acc;
+                    }
+                }
+                for (; kk < kh; kk++) {
+                    float aik = arow[kk];
+                    const float *brow = pack + (size_t)kk * jw;
+                    for (int j = 0; j < jw; j++) ctile[j] += aik * brow[j];
                 }
             }
         }
@@ -154,6 +225,90 @@ static void nt_band_unroll(float *c, const float *a, const float *b, int n,
     }
 }
 
+/* PR-9: B rows of the j-tile are packed; k is blocked by J_BLOCK so the
+ * packed tile fits the scratch, the 4 dot lanes chain their partials
+ * through C (f32 store/load is exact — same rounding sequence as one
+ * register chain), and alpha is applied in ONE final pass per j-tile
+ * (the identical mul-by-alpha the naive form performs on each finished
+ * dot). Raw-bits identical to the plain/unrolled forms. */
+static void nt_band_packed(float *c, const float *a, const float *b, int n,
+                           int k, int m, float alpha) {
+    float *pack = g_pack;
+    for (int j0 = 0; j0 < m; j0 += K_BLOCK) {
+        int j1 = j0 + K_BLOCK < m ? j0 + K_BLOCK : m;
+        int jt = j1 - j0;
+        for (int k0 = 0; k0 < k; k0 += J_BLOCK) {
+            int k1 = k0 + J_BLOCK < k ? k0 + J_BLOCK : k;
+            int kw = k1 - k0;
+            for (int jj = 0; jj < jt; jj++)
+                memcpy(pack + (size_t)jj * kw,
+                       b + (size_t)(j0 + jj) * k + k0, kw * sizeof(float));
+            for (int i = 0; i < n; i++) {
+                const float *arow = a + (size_t)i * k + k0;
+                float *crow = c + (size_t)i * m + j0;
+                int j = 0;
+                for (; j + 8 <= jt; j += 8) {
+                    const float *b0 = pack + (size_t)j * kw;
+                    const float *b1 = b0 + kw, *b2 = b1 + kw, *b3 = b2 + kw;
+                    const float *b4 = b3 + kw, *b5 = b4 + kw, *b6 = b5 + kw,
+                                *b7 = b6 + kw;
+                    float acc0 = 0, acc1 = 0, acc2 = 0, acc3 = 0;
+                    float acc4 = 0, acc5 = 0, acc6 = 0, acc7 = 0;
+                    if (k0 > 0) {
+                        acc0 = crow[j], acc1 = crow[j + 1];
+                        acc2 = crow[j + 2], acc3 = crow[j + 3];
+                        acc4 = crow[j + 4], acc5 = crow[j + 5];
+                        acc6 = crow[j + 6], acc7 = crow[j + 7];
+                    }
+                    for (int t = 0; t < kw; t++) {
+                        float x = arow[t];
+                        acc0 += x * b0[t];
+                        acc1 += x * b1[t];
+                        acc2 += x * b2[t];
+                        acc3 += x * b3[t];
+                        acc4 += x * b4[t];
+                        acc5 += x * b5[t];
+                        acc6 += x * b6[t];
+                        acc7 += x * b7[t];
+                    }
+                    crow[j] = acc0, crow[j + 1] = acc1;
+                    crow[j + 2] = acc2, crow[j + 3] = acc3;
+                    crow[j + 4] = acc4, crow[j + 5] = acc5;
+                    crow[j + 6] = acc6, crow[j + 7] = acc7;
+                }
+                for (; j + 4 <= jt; j += 4) {
+                    const float *b0 = pack + (size_t)j * kw;
+                    const float *b1 = b0 + kw, *b2 = b1 + kw, *b3 = b2 + kw;
+                    float acc0 = 0, acc1 = 0, acc2 = 0, acc3 = 0;
+                    if (k0 > 0) {
+                        acc0 = crow[j], acc1 = crow[j + 1];
+                        acc2 = crow[j + 2], acc3 = crow[j + 3];
+                    }
+                    for (int t = 0; t < kw; t++) {
+                        float x = arow[t];
+                        acc0 += x * b0[t];
+                        acc1 += x * b1[t];
+                        acc2 += x * b2[t];
+                        acc3 += x * b3[t];
+                    }
+                    crow[j] = acc0, crow[j + 1] = acc1;
+                    crow[j + 2] = acc2, crow[j + 3] = acc3;
+                }
+                for (; j < jt; j++) {
+                    const float *brow = pack + (size_t)j * kw;
+                    float acc = k0 > 0 ? crow[j] : 0.0f;
+                    for (int t = 0; t < kw; t++) acc += arow[t] * brow[t];
+                    crow[j] = acc;
+                }
+            }
+        }
+        for (int i = 0; i < n; i++) {
+            float *crow = c + (size_t)i * m;
+            for (int j = j0; j < j1; j++) crow[j] *= alpha;
+        }
+    }
+}
+
 static void tn_band_plain(float *c, const float *a, const float *b, int rows,
                           int acols, int m, int i0, int n) {
     for (int kk = 0; kk < rows; kk++) {
@@ -191,11 +346,92 @@ static void tn_band_unroll(float *c, const float *a, const float *b, int rows,
                       rows - kk, acols, m, i0, n);
 }
 
+/* PR-9: the strided A-column chunk (stride acols between contraction
+ * rows) is packed into contiguous rows of the scratch, then the 2-step
+ * chained axpy runs from the pack. Contraction rows are consumed in the
+ * same ascending order, chained through C memory, so the result is
+ * raw-bits identical to the plain/unrolled forms. */
+static void tn_band_packed(float *c, const float *a, const float *b, int rows,
+                           int acols, int m, int i0, int n) {
+    float *pack = g_pack;
+    for (int r0 = 0; r0 < rows; r0 += K_BLOCK) {
+        int r1 = r0 + K_BLOCK < rows ? r0 + K_BLOCK : rows;
+        int rh = r1 - r0;
+        for (int it = 0; it < n; it += K_BLOCK) {
+            int i2 = it + K_BLOCK < n ? it + K_BLOCK : n;
+            int iw = i2 - it;
+            for (int rr = 0; rr < rh; rr++)
+                memcpy(pack + (size_t)rr * iw,
+                       a + (size_t)(r0 + rr) * acols + i0 + it,
+                       iw * sizeof(float));
+            for (int j0 = 0; j0 < m; j0 += J_BLOCK) {
+                int j1 = j0 + J_BLOCK < m ? j0 + J_BLOCK : m;
+                for (int i = 0; i < iw; i++) {
+                    float *crow = c + (size_t)(it + i) * m;
+                    int rr = 0;
+                    for (; rr + 4 <= rh; rr += 4) {
+                        float a0 = pack[(size_t)rr * iw + i];
+                        float a1 = pack[(size_t)(rr + 1) * iw + i];
+                        float a2 = pack[(size_t)(rr + 2) * iw + i];
+                        float a3 = pack[(size_t)(rr + 3) * iw + i];
+                        const float *br0 = b + (size_t)(r0 + rr) * m;
+                        const float *br1 = br0 + m;
+                        const float *br2 = br1 + m;
+                        const float *br3 = br2 + m;
+                        for (int j = j0; j < j1; j++) {
+                            float acc = crow[j];
+                            acc += a0 * br0[j];
+                            acc += a1 * br1[j];
+                            acc += a2 * br2[j];
+                            acc += a3 * br3[j];
+                            crow[j] = acc;
+                        }
+                    }
+                    for (; rr < rh; rr++) {
+                        float a0 = pack[(size_t)rr * iw + i];
+                        const float *br = b + (size_t)(r0 + rr) * m;
+                        for (int j = j0; j < j1; j++) crow[j] += a0 * br[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/* form: 0 = plain (PR-4), 1 = unrolled (PR-5), 2 = packed (PR-9) */
+static void kern_n(int form, float *c, const float *a, const float *b, int n,
+                   int k, int m) {
+    if (form == 2) matmul_band_packed(c, a, b, n, k, m);
+    else if (form == 1) matmul_band_unroll(c, a, b, n, k, m);
+    else matmul_band_plain(c, a, b, n, k, m);
+}
+
+static void kern_nt(int form, float *c, const float *a, const float *b, int n,
+                    int k, int m, float alpha) {
+    if (form == 2) nt_band_packed(c, a, b, n, k, m, alpha);
+    else if (form == 1) nt_band_unroll(c, a, b, n, k, m, alpha);
+    else nt_band_plain(c, a, b, n, k, m, alpha);
+}
+
+static void kern_tn(int form, float *c, const float *a, const float *b,
+                    int rows, int acols, int m, int i0, int n) {
+    if (form == 2) tn_band_packed(c, a, b, rows, acols, m, i0, n);
+    else if (form == 1) tn_band_unroll(c, a, b, rows, acols, m, i0, n);
+    else tn_band_plain(c, a, b, rows, acols, m, i0, n);
+}
+
 /* ------------------------------------------------------------------ */
 /* one GEMM "op": kind + shapes (+panel batch for the attention ops)  */
 /* ------------------------------------------------------------------ */
 
-typedef enum { OP_N, OP_NT, OP_TN } OpKind;
+/* OP_ATTN_BWD (PR-9) is the fused backward-attention dispatch of
+ * model/blocks.rs: ONE submission whose per-panel body runs all four
+ * backward contractions (dprobs = dctx·Vᵀ, dV = probsᵀ·dctx,
+ * dQ = dS·K, dK = dSᵀ·Q) — one latch instead of four. The mirror
+ * stands dprobs in for dscores (the softmax VJP between them is
+ * elementwise and excluded from every variant, see header). Shapes are
+ * carried as n=s, k=dh, m=s. */
+typedef enum { OP_N, OP_NT, OP_TN, OP_ATTN_BWD } OpKind;
 
 typedef struct {
     OpKind kind;
@@ -206,18 +442,45 @@ typedef struct {
 
 typedef struct {
     const Op *op;
-    int unrolled;
+    int form;
     int first, count; /* band: rows for plain ops, panels for batched */
 } Band;
 
 /* operand element counts per kind: N: a n*k, b k*m, c n*m;
- * NT: b m*k; TN (n=rows, k=acols): a n*k, b n*m, c k*m */
+ * NT: b m*k; TN (n=rows, k=acols): a n*k, b n*m, c k*m;
+ * ATTN_BWD (n=s, k=dh, m=s): a = dctx|probs|q|k, b = v,
+ * c = dprobs|dv|dq|dk */
 static void op_sizes(const Op *o, size_t *an, size_t *bn, size_t *cn) {
+    if (o->kind == OP_ATTN_BWD) {
+        size_t s = o->n, dh = o->k;
+        *an = s * s + 3 * s * dh;
+        *bn = s * dh;
+        *cn = s * s + 3 * s * dh;
+        return;
+    }
     *an = (size_t)o->n * o->k;
     *bn = o->kind == OP_NT ? (size_t)o->m * o->k
           : o->kind == OP_TN ? (size_t)o->n * o->m
                              : (size_t)o->k * o->m;
     *cn = o->kind == OP_TN ? (size_t)o->k * o->m : (size_t)o->n * o->m;
+}
+
+/* the per-panel body of the fused backward-attention dispatch */
+static void attn_bwd_panel(int form, const Op *o, float *a, float *b,
+                           float *c) {
+    int s = o->n, dh = o->k;
+    float *dctx = a, *probs = a + (size_t)s * dh,
+          *q = probs + (size_t)s * s, *kp = q + (size_t)s * dh;
+    float *v = b;
+    float *dprobs = c, *dv = dprobs + (size_t)s * s,
+          *dq = dv + (size_t)s * dh, *dk = dq + (size_t)s * dh;
+    kern_nt(form, dprobs, dctx, v, s, dh, s, 1.0f); /* dprobs = dctx·Vᵀ */
+    memset(dv, 0, (size_t)s * dh * sizeof(float));
+    kern_tn(form, dv, probs, dctx, s, s, dh, 0, s); /* dV = probsᵀ·dctx */
+    memset(dq, 0, (size_t)s * dh * sizeof(float));
+    kern_n(form, dq, dprobs, kp, s, s, dh); /* dQ = dS·K */
+    memset(dk, 0, (size_t)s * dh * sizeof(float));
+    kern_tn(form, dk, dprobs, q, s, s, dh, 0, s); /* dK = dSᵀ·Q */
 }
 
 static void run_band(const Band *bd) {
@@ -228,19 +491,20 @@ static void run_band(const Band *bd) {
         for (int p = bd->first; p < bd->first + bd->count; p++) {
             float *a = o->a + (size_t)p * an, *b = o->b + (size_t)p * bn,
                   *c = o->c + (size_t)p * cn;
-            memset(c, 0, cn * sizeof(float));
             switch (o->kind) {
             case OP_N:
-                (bd->unrolled ? matmul_band_unroll : matmul_band_plain)(
-                    c, a, b, o->n, o->k, o->m);
+                memset(c, 0, cn * sizeof(float));
+                kern_n(bd->form, c, a, b, o->n, o->k, o->m);
                 break;
             case OP_NT:
-                (bd->unrolled ? nt_band_unroll : nt_band_plain)(
-                    c, a, b, o->n, o->k, o->m, 1.0f);
+                kern_nt(bd->form, c, a, b, o->n, o->k, o->m, 1.0f);
                 break;
             case OP_TN:
-                (bd->unrolled ? tn_band_unroll : tn_band_plain)(
-                    c, a, b, o->n, o->k, o->m, 0, o->k);
+                memset(c, 0, cn * sizeof(float));
+                kern_tn(bd->form, c, a, b, o->n, o->k, o->m, 0, o->k);
+                break;
+            case OP_ATTN_BWD:
+                attn_bwd_panel(bd->form, o, a, b, c);
                 break;
             }
         }
@@ -252,23 +516,24 @@ static void run_band(const Band *bd) {
     case OP_N: {
         float *c = o->c + (size_t)first * o->m;
         memset(c, 0, (size_t)count * o->m * sizeof(float));
-        (bd->unrolled ? matmul_band_unroll : matmul_band_plain)(
-            c, o->a + (size_t)first * o->k, o->b, count, o->k, o->m);
+        kern_n(bd->form, c, o->a + (size_t)first * o->k, o->b, count, o->k,
+               o->m);
         break;
     }
     case OP_NT: {
         float *c = o->c + (size_t)first * o->m;
-        (bd->unrolled ? nt_band_unroll : nt_band_plain)(
-            c, o->a + (size_t)first * o->k, o->b, count, o->k, o->m, 1.0f);
+        kern_nt(bd->form, c, o->a + (size_t)first * o->k, o->b, count, o->k,
+                o->m, 1.0f);
         break;
     }
     case OP_TN: {
         float *c = o->c + (size_t)first * o->m;
         memset(c, 0, (size_t)count * o->m * sizeof(float));
-        (bd->unrolled ? tn_band_unroll : tn_band_plain)(
-            c, o->a, o->b, o->n, o->k, o->m, first, count);
+        kern_tn(bd->form, c, o->a, o->b, o->n, o->k, o->m, first, count);
         break;
     }
+    default:
+        break; /* ATTN_BWD is always batched */
     }
 }
 
@@ -277,6 +542,7 @@ static int op_rows(const Op *o) { return o->batch > 1 ? o->batch : (o->kind == O
 static long op_flops(const Op *o) {
     long f = (long)o->n * o->k * o->m;
     if (o->kind == OP_TN) f = (long)o->n * o->k * o->m; /* rows*acols*m */
+    if (o->kind == OP_ATTN_BWD) f = 4L * o->n * o->k * o->m;
     return f * (o->batch > 1 ? o->batch : 1);
 }
 
@@ -289,11 +555,11 @@ static void *band_thread(void *arg) {
     return NULL;
 }
 
-static void dispatch_scope(const Op *o, int unrolled) {
+static void dispatch_scope(const Op *o, int form) {
     int rows = op_rows(o);
     int threads = g_threads < rows ? g_threads : rows;
     if (op_flops(o) < PAR_MIN_FLOPS || threads <= 1) {
-        Band bd = {o, unrolled, 0, rows};
+        Band bd = {o, form, 0, rows};
         run_band(&bd);
         return;
     }
@@ -303,7 +569,7 @@ static void dispatch_scope(const Op *o, int unrolled) {
     int nb = 0;
     for (int r0 = 0; r0 < rows; r0 += chunk) {
         int take = chunk < rows - r0 ? chunk : rows - r0;
-        bands[nb] = (Band){o, unrolled, r0, take};
+        bands[nb] = (Band){o, form, r0, take};
         pthread_create(&tids[nb], NULL, band_thread, &bands[nb]);
         nb++;
     }
@@ -362,22 +628,22 @@ static void pool_stop(void) {
     pool_workers = 0;
 }
 
-static void dispatch_pool(const Op *o, int unrolled) {
+static void dispatch_pool(const Op *o, int form) {
     int rows = op_rows(o);
     int threads = g_threads < rows ? g_threads : rows;
     if (op_flops(o) < PAR_MIN_FLOPS || threads <= 1) {
-        Band bd = {o, unrolled, 0, rows};
+        Band bd = {o, form, 0, rows};
         run_band(&bd);
         return;
     }
     int chunk = (rows + threads - 1) / threads;
     /* caller owns band 0; the rest go on the job board */
-    Band own = {o, unrolled, 0, chunk < rows ? chunk : rows};
+    Band own = {o, form, 0, chunk < rows ? chunk : rows};
     pthread_mutex_lock(&pool_mu);
     pool_nbands = 0;
     for (int r0 = own.count; r0 < rows; r0 += chunk) {
         int take = chunk < rows - r0 ? chunk : rows - r0;
-        pool_bands[pool_nbands++] = (Band){o, unrolled, r0, take};
+        pool_bands[pool_nbands++] = (Band){o, form, r0, take};
     }
     pool_taken = 0;
     pool_done = 0;
@@ -430,8 +696,10 @@ static void push(Mix *mx, OpKind kind, int batch, int n, int k, int m) {
     o->c = buf((size_t)batch * cn);
 }
 
-/* forward GEMM sequence for one step; fused toggles the QKV layout */
-static void build_mix(Mix *mx, const Model *md, int fused, int backward) {
+/* forward GEMM sequence for one step; fused toggles the QKV layout,
+ * fusedattn collapses the 4 backward attention ops into one dispatch */
+static void build_mix(Mix *mx, const Model *md, int fused, int fusedattn,
+                      int backward) {
     mx->n = 0;
     int s = md->family[0] == 'v' ? (md->image / md->patch) * (md->image / md->patch) + 1
                                  : md->seq;
@@ -469,10 +737,14 @@ static void build_mix(Mix *mx, const Model *md, int fused, int backward) {
         push(mx, OP_NT, 1, bs, f, d);      /* dn2    */
         push(mx, OP_TN, 1, bs, d, d);      /* dWo    */
         push(mx, OP_NT, 1, bs, d, d);      /* dctx   */
-        push(mx, OP_NT, panels, s, dh, s); /* dprobs */
-        push(mx, OP_TN, panels, s, s, dh); /* dV     */
-        push(mx, OP_N, panels, s, s, dh);  /* dQ     */
-        push(mx, OP_TN, panels, s, s, dh); /* dK     */
+        if (fusedattn) {
+            push(mx, OP_ATTN_BWD, panels, s, dh, s); /* dprobs|dV|dQ|dK */
+        } else {
+            push(mx, OP_NT, panels, s, dh, s); /* dprobs */
+            push(mx, OP_TN, panels, s, s, dh); /* dV     */
+            push(mx, OP_N, panels, s, s, dh);  /* dQ     */
+            push(mx, OP_TN, panels, s, s, dh); /* dK     */
+        }
         if (fused) {
             push(mx, OP_TN, 1, bs, d, 3 * d); /* dWqkv */
             push(mx, OP_NT, 1, bs, 3 * d, d); /* dn1   */
@@ -502,15 +774,42 @@ static double now_s(void) {
 }
 
 /* tokens/sec for one mix under one (driver, kernel-form) variant */
-static double measure(const Mix *mx, int pool, int unrolled, int tokens,
+static double measure(const Mix *mx, int pool, int form, int tokens,
                       int iters) {
     void (*dispatch)(const Op *, int) = pool ? dispatch_pool : dispatch_scope;
-    for (int i = 0; i < mx->n; i++) dispatch(&mx->ops[i], unrolled); /* warm */
+    for (int i = 0; i < mx->n; i++) dispatch(&mx->ops[i], form); /* warm */
     double t0 = now_s();
     for (int it = 0; it < iters; it++)
-        for (int i = 0; i < mx->n; i++) dispatch(&mx->ops[i], unrolled);
+        for (int i = 0; i < mx->n; i++) dispatch(&mx->ops[i], form);
     double dt = (now_s() - t0) / iters;
     return tokens / dt;
+}
+
+/* raw-bits check: every kernel form must agree exactly on a ragged
+ * rectangle (the rust property tests do this against the naive oracle;
+ * here the plain form IS the oracle) */
+static int selfcheck(void) {
+    int n = 37, k = 71, m = 53, bad = 0;
+    float *a = buf((size_t)n * k), *b = buf((size_t)k * m);
+    float *bt = buf((size_t)m * k);
+    float *c0 = calloc((size_t)n * m, sizeof(float));
+    float *c2 = calloc((size_t)n * m, sizeof(float));
+    matmul_band_plain(c0, a, b, n, k, m);
+    matmul_band_packed(c2, a, b, n, k, m);
+    bad |= memcmp(c0, c2, (size_t)n * m * sizeof(float)) != 0;
+    memset(c0, 0, (size_t)n * m * sizeof(float));
+    memset(c2, 0, (size_t)n * m * sizeof(float));
+    nt_band_plain(c0, a, bt, n, k, m, 0.125f);
+    nt_band_packed(c2, a, bt, n, k, m, 0.125f);
+    bad |= memcmp(c0, c2, (size_t)n * m * sizeof(float)) != 0;
+    float *ct0 = calloc((size_t)k * m, sizeof(float));
+    float *ct2 = calloc((size_t)k * m, sizeof(float));
+    /* tn: a is rows×acols = n×k, band covers all k columns */
+    tn_band_plain(ct0, a, b, n, k, m, 0, k);
+    tn_band_packed(ct2, a, b, n, k, m, 0, k);
+    bad |= memcmp(ct0, ct2, (size_t)k * m * sizeof(float)) != 0;
+    free(a); free(b); free(bt); free(c0); free(c2); free(ct0); free(ct2);
+    return bad;
 }
 
 int main(int argc, char **argv) {
@@ -518,15 +817,24 @@ int main(int argc, char **argv) {
     if (g_threads < 1) g_threads = 1;
     if (g_threads > MAX_THREADS) g_threads = MAX_THREADS;
     int iters = argc > 2 ? atoi(argv[2]) : 12;
+    if (selfcheck()) {
+        fprintf(stderr, "FATAL: packed kernels diverge from plain oracle\n");
+        return 1;
+    }
     pool_start(g_threads - 1);
-    printf("{\n  \"parallelism\": %d,\n  \"variants\": [\n", g_threads);
-    for (int variant = 0; variant < 2; variant++) {
+    printf("{\n  \"parallelism\": %d,\n  \"k_block\": %d,\n  \"j_block\": %d,\n  \"variants\": [\n",
+           g_threads, K_BLOCK, J_BLOCK);
+    for (int variant = 0; variant < 3; variant++) {
         /* variant 0: PR-4 (scope spawn, unfused, plain loops)
-         * variant 1: PR-5 (pool, fused QKV, unrolled loops)     */
-        int pool = variant, fused = variant, unrolled = variant;
-        printf("    {\"runtime\": \"%s\", \"qkv\": \"%s\", \"kernels\": \"%s\", \"sizes\": [\n",
+         * variant 1: PR-5 (pool, fused QKV, unrolled loops)
+         * variant 2: PR-9 (pool, fused QKV, packed kernels, fused
+         *            backward-attention dispatch)                   */
+        int pool = variant >= 1, fused = variant >= 1;
+        int form = variant, fusedattn = variant == 2;
+        printf("    {\"runtime\": \"%s\", \"qkv\": \"%s\", \"kernels\": \"%s\", \"attn_bwd\": \"%s\", \"sizes\": [\n",
                pool ? "pool" : "scope", fused ? "fused" : "unfused",
-               unrolled ? "unrolled" : "plain");
+               form == 2 ? "packed" : form == 1 ? "unrolled" : "plain",
+               fusedattn ? "fused-dispatch" : "per-op");
         for (size_t mi = 0; mi < sizeof(MODELS) / sizeof(MODELS[0]); mi++) {
             const Model *md = &MODELS[mi];
             int s = md->family[0] == 'v'
@@ -534,10 +842,10 @@ int main(int argc, char **argv) {
                         : md->seq;
             int tokens = BATCH * s;
             Mix fwd, both;
-            build_mix(&fwd, md, fused, 0);
-            build_mix(&both, md, fused, 1);
-            double f = measure(&fwd, pool, unrolled, tokens, iters);
-            double fb = measure(&both, pool, unrolled, tokens, iters);
+            build_mix(&fwd, md, fused, fusedattn, 0);
+            build_mix(&both, md, fused, fusedattn, 1);
+            double f = measure(&fwd, pool, form, tokens, iters);
+            double fb = measure(&both, pool, form, tokens, iters);
             free_mix(&fwd);
             free_mix(&both);
             printf("      {\"model\": \"%s\", \"family\": \"%s\", "
@@ -547,7 +855,7 @@ int main(int argc, char **argv) {
                    mi + 1 < sizeof(MODELS) / sizeof(MODELS[0]) ? "," : "");
             fflush(stdout);
         }
-        printf("    ]}%s\n", variant == 0 ? "," : "");
+        printf("    ]}%s\n", variant < 2 ? "," : "");
     }
     printf("  ]\n}\n");
     pool_stop();

@@ -132,10 +132,12 @@ COMMANDS:
                   --verify (bit-compare every batch vs the sequential
                   single-request oracle; non-zero exit on any mismatch)
                   See docs/SERVING.md for the architecture and policy.
-    doctor      ops self-check: toolchain/thread-budget/pool health, a
-                catalog smoke per family (lm/lora/vit, serve oracle,
-                dp W=2 raw-bits), and contract validation of every
-                committed BENCH_*.json + BENCH_BUDGETS.toml
+    doctor      ops self-check: toolchain/thread-budget/pool health, the
+                packed-kernel raw-bits tripwire (pooled packed GEMMs vs
+                the naive oracles, NaN/Inf included), a catalog smoke
+                per family (lm/lora/vit, serve oracle, dp W=2
+                raw-bits), and contract validation of every committed
+                BENCH_*.json + BENCH_BUDGETS.toml
                   --quick (shorten the smokes; same checks — CI uses this)
                   --parallelism N (thread budget for the smokes)
                   --bench-dir DIR (where BENCH_*.json live; default .)

@@ -5,9 +5,11 @@
 //! gates on:
 //!
 //! * environment — toolchain build info, kernel thread budget vs the
-//!   process-wide [`crate::tensor::POOL_BUDGET`], and pool liveness
+//!   process-wide [`crate::tensor::POOL_BUDGET`], pool liveness
 //!   (`Parallelism::pool_workers` + a real fan-out through
-//!   [`crate::tensor::pool_tasks`]);
+//!   [`crate::tensor::pool_tasks`]), and the packed-GEMM raw-bits
+//!   tripwire (pooled packed kernels vs the naive oracles on a ragged
+//!   NaN/Inf-poisoned rectangle);
 //! * catalog smokes — a short real training run per family (lm / lora /
 //!   vit), the serving tier's batched-vs-sequential bit-identity oracle,
 //!   and the dp tier's W∈{1,2} raw-bits invariance;
@@ -32,8 +34,9 @@ use crate::opt::OptimizerKind;
 use crate::runtime::dp::DpTrainer;
 use crate::runtime::serve::oracle_check;
 use crate::runtime::AdapterRegistry;
-use crate::tensor::{pool_tasks, Parallelism, POOL_BUDGET};
+use crate::tensor::{pool_tasks, Matrix, Parallelism, POOL_BUDGET};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Receipt schema version (`receipt_schema` in the JSON output).
 pub const RECEIPT_SCHEMA: usize = 1;
@@ -153,6 +156,7 @@ pub fn run(cfg: &DoctorConfig) -> DoctorReport {
     check("toolchain".into(), &check_toolchain);
     check("thread-budget".into(), &move || check_thread_budget(par));
     check("pool-health".into(), &move || check_pool_health(par));
+    check("kernels".into(), &move || check_kernels(par));
     check("smoke:lm".into(), &move || {
         smoke_train("lm-tiny", TaskKind::Lm, MethodSpec::Flora { rank: 4 }, steps, par)
     });
@@ -234,6 +238,57 @@ fn check_pool_health(par: Parallelism) -> Result<String, String> {
     Ok(format!(
         "{workers} live worker(s) for budget {threads}; {ran}/{threads} \
          fan-out tasks ran"
+    ))
+}
+
+/// The packed-GEMM tripwire (PR 9): the blocked kernels — which pack
+/// the strided operand's panel into a reused thread-local scratch and
+/// run pooled at the installed budget — must reproduce the retained
+/// naive serial oracles **raw-bits** on a ragged random rectangle, for
+/// all three transpose layouts, with NaN/Inf poison propagated (the
+/// kernels never skip zero terms, so `0·NaN` must stay NaN).
+fn check_kernels(par: Parallelism) -> Result<String, String> {
+    par.install();
+    let (n, k, m) = (37usize, 53usize, 41usize);
+    let mut rng = Rng::new(0xd0c);
+    let mut a = Matrix::zeros(n, k); // nn/nt left operand
+    let mut b = Matrix::zeros(k, m); // nn right operand
+    let mut c = Matrix::zeros(m, k); // nt right operand (row-major [m,k])
+    let mut at = Matrix::zeros(k, n); // tn left operand (contraction-major)
+    rng.fill_gaussian(&mut a.data, 1.0);
+    rng.fill_gaussian(&mut b.data, 1.0);
+    rng.fill_gaussian(&mut c.data, 1.0);
+    rng.fill_gaussian(&mut at.data, 1.0);
+    *a.at_mut(3, 5) = f32::NAN;
+    *a.at_mut(7, 11) = f32::INFINITY;
+    *b.at_mut(2, 9) = f32::NEG_INFINITY;
+    *at.at_mut(1, 4) = f32::NAN;
+    let pairs: [(&str, Matrix, Matrix); 3] = [
+        ("nn", a.matmul(&b), a.matmul_naive(&b)),
+        ("nt", a.matmul_nt(&c), a.matmul_nt_naive(&c)),
+        ("tn", at.matmul_tn(&b), at.matmul_tn_naive(&b)),
+    ];
+    for (layout, got, want) in &pairs {
+        if !got.data.iter().any(|v| !v.is_finite()) {
+            return Err(format!(
+                "{layout}: NaN/Inf poison vanished — a kernel is skipping terms"
+            ));
+        }
+        for (i, (g, w)) in got.data.iter().zip(want.data.iter()).enumerate() {
+            if g.to_bits() != w.to_bits() {
+                return Err(format!(
+                    "{layout}: packed kernel diverges from the naive oracle at \
+                     flat index {i}: {g} vs {w} (raw bits {:#010x} vs {:#010x})",
+                    g.to_bits(),
+                    w.to_bits()
+                ));
+            }
+        }
+    }
+    Ok(format!(
+        "packed nn/nt/tn at threads {} bit-match the naive oracles on \
+         {n}x{k}x{m} (NaN/Inf propagated)",
+        par.threads()
     ))
 }
 

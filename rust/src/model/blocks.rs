@@ -46,10 +46,11 @@
 
 use super::{add_grad, pget, ParamSet};
 use crate::tensor::{
-    batched_matmul, batched_matmul_nt, batched_matmul_tn, gather_heads,
-    gather_heads_at, gelu, gelu_grad, rms_norm_rows, rms_norm_rows_vjp,
-    scatter_heads, scatter_heads_at, softmax_rows_masked,
-    softmax_rows_vjp_batched, BatchedMatrix, Matrix,
+    attention_backward_fused, batched_matmul, batched_matmul_nt,
+    batched_matmul_tn, gather_heads, gather_heads_at, gelu, gelu_grad,
+    rms_norm_rows, rms_norm_rows_vjp, scatter_heads, scatter_heads_at,
+    softmax_rows_masked, softmax_rows_vjp_batched, BatchedMatrix, KernelDriver,
+    Matrix, Parallelism,
 };
 
 /// Dimensions of the encoder stack shared by the LM and ViT configs.
@@ -318,6 +319,12 @@ pub(crate) fn attention_backward_packed(
 /// The attention cotangents in PANEL form (`[b*h, s, dh]`), before any
 /// scatter — the fused-QKV backward scatters all three into one
 /// `[b*s, 3d]` matrix instead of three separate ones.
+///
+/// On the pool driver the four contractions run as ONE pool submission
+/// ([`attention_backward_fused`] — one latch instead of four); the scope
+/// driver keeps the four-call sequence, which doubles as the fused
+/// dispatch's bit-exactness oracle (this module's tests compare them
+/// exactly — same band bodies, so identity holds by construction).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attention_backward_panels(
     qh: &BatchedMatrix,
@@ -333,8 +340,28 @@ pub(crate) fn attention_backward_panels(
     let dh = dims.head_dim();
     let scale = 1.0 / (dh as f32).sqrt();
     let dctxh = gather_heads(dctx, b, s, h, dh);
-    let dprobs = batched_matmul_nt(&dctxh, vh, 1.0);
-    let dvh = batched_matmul_tn(probs, &dctxh);
+    match Parallelism::current().driver() {
+        KernelDriver::Pool => {
+            attention_backward_fused(&dctxh, probs, qh, kh, vh, scale)
+        }
+        KernelDriver::Scope => {
+            attention_backward_panels_unfused(&dctxh, probs, qh, kh, vh, scale)
+        }
+    }
+}
+
+/// The pre-PR-9 four-submission backward attention, retained as the
+/// fused dispatch's oracle and the `--runtime scope` baseline path.
+pub(crate) fn attention_backward_panels_unfused(
+    dctxh: &BatchedMatrix,
+    probs: &BatchedMatrix,
+    qh: &BatchedMatrix,
+    kh: &BatchedMatrix,
+    vh: &BatchedMatrix,
+    scale: f32,
+) -> (BatchedMatrix, BatchedMatrix, BatchedMatrix) {
+    let dprobs = batched_matmul_nt(dctxh, vh, 1.0);
+    let dvh = batched_matmul_tn(probs, dctxh);
     // fold the score scale into the cotangent ONCE (elementwise, exactly
     // like the scalar path's `g = dscores * scale`) so dQ/dK stay
     // bit-identical to the reference
@@ -568,6 +595,40 @@ mod tests {
             assert!(dq.allclose(&dq_ref, 0.0), "dq (causal={causal})");
             assert!(dk.allclose(&dk_ref, 0.0), "dk (causal={causal})");
             assert!(dv.allclose(&dv_ref, 0.0), "dv (causal={causal})");
+        }
+    }
+
+    #[test]
+    fn fused_attention_backward_dispatch_matches_unfused_oracle() {
+        // the single-submission backward dispatch vs the retained
+        // four-call sequence: raw bits, NaN/Inf included (kernel-oracle
+        // convention — a fast path may not launder non-finite values)
+        let dims = BlockDims { d_model: 12, n_layers: 1, n_heads: 3, d_ff: 24 };
+        let (b, s) = (2usize, 5usize);
+        let (h, dh) = (dims.n_heads, dims.head_dim());
+        let mut rng = Rng::new(77);
+        let q = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        let k = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        let v = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        let (_, probs) = attention_forward(&q, &k, &v, dims, b, s, true);
+        let mut dctx = Matrix::gaussian(b * s, dims.d_model, 1.0, &mut rng);
+        *dctx.at_mut(0, 0) = f32::NAN;
+        *dctx.at_mut(1, 1) = f32::INFINITY;
+        let qh = gather_heads(&q, b, s, h, dh);
+        let kh = gather_heads(&k, b, s, h, dh);
+        let vh = gather_heads(&v, b, s, h, dh);
+        let dctxh = gather_heads(&dctx, b, s, h, dh);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let (fq, fk, fv) =
+            attention_backward_fused(&dctxh, &probs, &qh, &kh, &vh, scale);
+        let (uq, uk, uv) =
+            attention_backward_panels_unfused(&dctxh, &probs, &qh, &kh, &vh, scale);
+        for (name, got, want) in [("dq", &fq, &uq), ("dk", &fk, &uk), ("dv", &fv, &uv)]
+        {
+            assert!(got.data.iter().any(|x| !x.is_finite()), "{name} poison lost");
+            for (g, w) in got.data.iter().zip(want.data.iter()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{name}");
+            }
         }
     }
 

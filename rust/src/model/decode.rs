@@ -11,10 +11,12 @@
 //! - [`serve_greedy`]: the same loop over a heterogeneous batch where
 //!   request `bi` carries its **own** [`AdapterParams`]. Base weights
 //!   run as ordinary stacked GEMMs; per-request low-rank corrections run
-//!   in the `(x·B)·A` contraction order through
-//!   [`batched_matmul_ops`] — one batched GEMM whose panel `bi`
-//!   contracts against request `bi`'s factor — so `B·A` is never
-//!   materialized and adapter cost stays O(s·d·r) per weight. LoRA also
+//!   through [`batched_matmul_ops`] — one batched GEMM whose panel `bi`
+//!   contracts against request `bi`'s factor — in the contraction order
+//!   [`xba_cheaper`] picks per call site. At every catalog shape that is
+//!   `(x·B)·A`, which never materializes `B·A` and keeps adapter cost
+//!   O(s·d·r) per weight; the `x·(B·A)` fallback covers tall-`x` /
+//!   near-full-rank regimes. LoRA also
 //!   trains the passthrough parameters (embedding tables, norm scales),
 //!   so those are applied per request too.
 //!
@@ -39,13 +41,14 @@
 //! size grid on this claim.
 
 use super::head::argmax_rows;
-use super::lora::AdapterParams;
+use super::lora::{xba_cheaper, AdapterParams};
 use super::transformer::TransformerConfig;
 use super::{pget, ParamSet};
 use crate::tensor::{
     add_panels_at, batched_matmul, batched_matmul_nt, batched_matmul_ops,
-    gather_heads_at, gelu, scatter_heads, softmax_rows_masked_offset,
-    BatchedMatrix, Matrix, RMS_EPS,
+    gather_heads_at, gelu, par_rows, scatter_heads,
+    softmax_rows_masked_offset, BatchedMatrix, Matrix, ELEMWISE_FLOP_WEIGHT,
+    RMS_EPS,
 };
 
 /// The weight view one decode runs under: a single merged/plain
@@ -75,10 +78,17 @@ impl<'a> Weights<'a> {
         }
     }
 
-    /// Accumulate per-request `(x·B)·A` corrections for projected
+    /// Accumulate per-request low-rank corrections for projected
     /// weight `name` into columns `[col0, col0 + A.cols)` of `into`
     /// (`xp` = the GEMM input as per-request panels). No-op on the
     /// plain path or when the weight is not adapted.
+    ///
+    /// The contraction order is chosen per call by [`xba_cheaper`]:
+    /// the default `(x·B)·A` never materializes `B·A` and wins at every
+    /// catalog shape; the `x·(B·A)` fallback exists for tall-`x` /
+    /// near-full-rank regimes. The rule sees only panel shapes, which a
+    /// batched request shares with its solo run, so order choice can
+    /// never break batched-vs-sequential bit-identity.
     fn add_low_rank(&self, xp: &BatchedMatrix, name: &str, into: &mut Matrix, col0: usize) {
         let Weights::Adapted { adapters, .. } = self else { return };
         let mut bs = Vec::with_capacity(adapters.len());
@@ -94,8 +104,15 @@ impl<'a> Weights<'a> {
                 None => return,
             }
         }
-        let xb = batched_matmul_ops(xp, &bs);
-        let corr = batched_matmul_ops(&xb, &avs);
+        let corr = if xba_cheaper(xp.rows, bs[0].rows, bs[0].cols, avs[0].cols) {
+            let xb = batched_matmul_ops(xp, &bs);
+            batched_matmul_ops(&xb, &avs)
+        } else {
+            let bas: Vec<Matrix> =
+                bs.iter().zip(avs.iter()).map(|(b, a)| b.matmul(a)).collect();
+            let ba_refs: Vec<&Matrix> = bas.iter().collect();
+            batched_matmul_ops(xp, &ba_refs)
+        };
         add_panels_at(into, &corr, col0);
     }
 }
@@ -107,21 +124,35 @@ impl<'a> Weights<'a> {
 fn rms_norm_per_request(w: &Weights, x: &Matrix, b: usize, name: &str) -> Matrix {
     let m = x.rows / b;
     let d = x.cols as f32;
+    let cols = x.cols;
     let mut out = Matrix::zeros(x.rows, x.cols);
-    for bi in 0..b {
-        let scale = w.pass(bi, name);
+    // resolve each request's scale once, then band the row-local norm
+    // onto the shared pool — row `r` belongs to request `r / m`, and the
+    // per-row arithmetic order is unchanged, so banding stays
+    // bit-identical to the serial loop
+    let scales: Vec<&Matrix> = (0..b).map(|bi| w.pass(bi, name)).collect();
+    for scale in &scales {
         debug_assert_eq!(scale.shape(), (1, x.cols));
-        for i in 0..m {
-            let r = bi * m + i;
-            let row = x.row(r);
-            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d;
-            let inv = 1.0 / (ms + RMS_EPS).sqrt();
-            let orow = &mut out.data[r * x.cols..(r + 1) * x.cols];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o = row[j] * inv * scale.at(0, j);
-            }
-        }
     }
+    par_rows(
+        &mut out.data,
+        x.rows,
+        cols,
+        x.rows * cols * ELEMWISE_FLOP_WEIGHT,
+        |band, first, take| {
+            for ri in 0..take {
+                let r = first + ri;
+                let scale = scales[r / m];
+                let row = x.row(r);
+                let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d;
+                let inv = 1.0 / (ms + RMS_EPS).sqrt();
+                let orow = &mut band[ri * cols..(ri + 1) * cols];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = row[j] * inv * scale.at(0, j);
+                }
+            }
+        },
+    );
     out
 }
 
@@ -212,19 +243,32 @@ fn forward_chunk(
     let h = dims.n_heads;
     let dh = dims.head_dim();
     let mut x = Matrix::zeros(b * m, d);
-    for bi in 0..b {
-        let tok = w.pass(bi, "embed/tok");
-        let pos = w.pass(bi, "embed/pos");
-        for i in 0..m {
-            let r = bi * m + i;
-            let trow = tok.row(tokens[bi * s_total + t0 + i] as usize);
-            let prow = pos.row(t0 + i);
-            let xrow = &mut x.data[r * d..(r + 1) * d];
-            for j in 0..d {
-                xrow[j] = trow[j] + prow[j];
+    // per-request embedding gather, banded onto the shared pool: each
+    // output row reads only its own request's tables, so the split is
+    // row-local and bit-identical to the serial loop
+    let embeds: Vec<(&Matrix, &Matrix)> = (0..b)
+        .map(|bi| (w.pass(bi, "embed/tok"), w.pass(bi, "embed/pos")))
+        .collect();
+    let total = b * m;
+    par_rows(
+        &mut x.data,
+        total,
+        d,
+        total * d * ELEMWISE_FLOP_WEIGHT,
+        |band, first, take| {
+            for r in 0..take {
+                let gr = first + r;
+                let (bi, i) = (gr / m, gr % m);
+                let (tok, pos) = embeds[bi];
+                let trow = tok.row(tokens[bi * s_total + t0 + i] as usize);
+                let prow = pos.row(t0 + i);
+                let xrow = &mut band[r * d..(r + 1) * d];
+                for j in 0..d {
+                    xrow[j] = trow[j] + prow[j];
+                }
             }
-        }
-    }
+        },
+    );
     let scale = 1.0 / (dh as f32).sqrt();
     for l in 0..dims.n_layers {
         let p = |suffix: &str| format!("layer{l}/{suffix}");
@@ -499,6 +543,48 @@ mod tests {
             {
                 assert_eq!(g.to_bits(), w.to_bits(), "request {bi}");
             }
+        }
+    }
+
+    #[test]
+    fn contraction_order_fallback_bit_matches_naive() {
+        // a tall x against a full-rank 4x4 adapter flips xba_cheaper to
+        // the materialized x·(B·A) branch; its output must bit-match the
+        // same-order naive computation (packed kernels are naive-exact),
+        // propagate non-finite factor entries, and agree with the
+        // factored order to tolerance (different association)
+        let rows = 1024usize;
+        let mut rng = Rng::new(9001);
+        let mut x = Matrix::zeros(rows, 4);
+        rng.fill_gaussian(&mut x.data, 1.0);
+        let mut bmat = Matrix::zeros(4, 4);
+        let mut amat = Matrix::zeros(4, 4);
+        rng.fill_gaussian(&mut bmat.data, 0.5);
+        rng.fill_gaussian(&mut amat.data, 0.5);
+        *bmat.at_mut(3, 3) = f32::NAN;
+        let mut train = ParamSet::new();
+        train.insert("lora_B/w".into(), bmat.clone());
+        train.insert("lora_A/w".into(), amat.clone());
+        let ap = AdapterParams::from_trainable(&train).unwrap();
+        assert!(!xba_cheaper(rows, 4, 4, 4), "test shape must flip the rule");
+        let base = ParamSet::new();
+        let refs = [&ap];
+        let w = Weights::Adapted { base: &base, adapters: &refs };
+        let xp = BatchedMatrix::from_matrix(&x, 1);
+        let mut got = Matrix::zeros(rows, 4);
+        w.add_low_rank(&xp, "w", &mut got, 0);
+        let want = x.matmul_naive(&bmat.matmul_naive(&amat));
+        assert!(want.data.iter().any(|v| v.is_nan()), "poison must reach out");
+        for (g, e) in got.data.iter().zip(want.data.iter()) {
+            assert_eq!(g.to_bits(), e.to_bits());
+        }
+        let fact = x.matmul(&bmat).matmul(&amat);
+        for (g, f) in got.data.iter().zip(fact.data.iter()) {
+            assert!(
+                (g - f).abs() <= 1e-4 * f.abs().max(1.0)
+                    || (g.is_nan() && f.is_nan()),
+                "{g} vs {f}"
+            );
         }
     }
 

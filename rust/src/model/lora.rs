@@ -117,6 +117,23 @@ impl LoraAdapter {
     }
 }
 
+/// Shape-aware contraction order for a low-rank correction
+/// `x·B·A` with `x ∈ R^{rows×n}`, `B ∈ R^{n×r}`, `A ∈ R^{r×m}`:
+/// `true` when the factored order `(x·B)·A` does no more multiply-adds
+/// than materializing `B·A` first and applying it as one GEMM.
+/// `(x·B)·A` costs `rows·r·(n+m)` MACs; `x·(B·A)` costs
+/// `n·r·m + rows·n·m`. At every catalog shape (r ≪ n, m) the factored
+/// order wins — the materialized order only pays off when the row count
+/// dwarfs the weight dims AND the rank is near full (see the unit
+/// tests) — but the serve forward consults this rule per call site
+/// rather than hard-coding the order. The rule depends only on shapes,
+/// which are identical between a batched panel and the same request
+/// served alone, so both paths always pick the same order and the
+/// batched-vs-sequential bit-identity guarantee is untouched.
+pub(crate) fn xba_cheaper(rows: usize, n: usize, r: usize, m: usize) -> bool {
+    rows * r * (n + m) <= n * r * m + rows * n * m
+}
+
 /// One adapter's state in the form the serving tier consumes: the
 /// low-rank factors kept **split** (`B ∈ R^{n×r}`, `A ∈ R^{r×m}` per
 /// projected weight, keyed by the base parameter name) plus the
@@ -328,6 +345,58 @@ mod tests {
         let mut none = ParamSet::new();
         none.insert("embed/tok".into(), Matrix::zeros(2, 2));
         assert!(AdapterParams::from_trainable(&none).is_err());
+    }
+
+    #[test]
+    fn contraction_order_rule_matches_mac_counts() {
+        // the rule IS the FLOP comparison — check it against explicit
+        // counts on a mixed grid, including both winners
+        for (rows, n, r, m) in [
+            (64usize, 128usize, 8usize, 128usize), // catalog-ish: factored wins
+            (1usize, 128usize, 8usize, 384usize),  // single decode row
+            (16usize, 32usize, 4usize, 96usize),
+            (1024usize, 4usize, 4usize, 4usize), // tall x, full rank: materialize wins
+            (4096usize, 8usize, 8usize, 8usize),
+        ] {
+            let factored = rows * r * (n + m);
+            let materialized = n * r * m + rows * n * m;
+            assert_eq!(
+                xba_cheaper(rows, n, r, m),
+                factored <= materialized,
+                "rows={rows} n={n} r={r} m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn factored_order_wins_at_every_catalog_shape() {
+        // r ≪ n, m across the whole lora size grid ⇒ the serve forward's
+        // default (x·B)·A order is always the cheaper one there
+        for (_, cfg) in TransformerConfig::catalog_grid() {
+            for (name, sh) in cfg.param_shapes() {
+                if !is_projectable(&name) {
+                    continue;
+                }
+                for rows in [1usize, cfg.seq_len] {
+                    for r in [4usize, 8, 16] {
+                        assert!(
+                            xba_cheaper(rows, sh[0], r, sh[1]),
+                            "{name} rows={rows} r={r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn materialized_order_exists_and_is_detected() {
+        // rows ≫ n=m and r = n (full rank): (x·B)·A does rows·n·2n MACs
+        // while x·(B·A) does n³ + rows·n² — half the work as rows → ∞
+        assert!(!xba_cheaper(1024, 4, 4, 4));
+        assert!(!xba_cheaper(4096, 8, 8, 8));
+        // shrink the rank back down and the factored order wins again
+        assert!(xba_cheaper(1024, 4, 1, 4));
     }
 
     #[test]

@@ -14,7 +14,9 @@
 use super::blocks::{stack_backward, stack_forward, BlockDims};
 use super::head::{argmax_rows, fused_softmax_xent, gather_rows, scatter_rows_add};
 use super::{add_grad, pget, zero_grads, ParamSet};
-use crate::tensor::{rms_norm_rows, rms_norm_rows_vjp, Matrix};
+use crate::tensor::{
+    par_rows, rms_norm_rows, rms_norm_rows_vjp, Matrix, ELEMWISE_FLOP_WEIGHT,
+};
 use crate::util::rng::{derive_seed, Rng};
 
 /// Configuration of the native LM transformer.
@@ -149,17 +151,28 @@ impl TransformerConfig {
         let tok = pget(params, "embed/tok");
         let pos = pget(params, "embed/pos");
         let mut x0 = Matrix::zeros(rows * s, d);
-        for bi in 0..rows {
-            for i in 0..s {
-                let r = bi * s + i;
-                let trow = tok.row(tokens[r] as usize);
-                let prow = pos.row(i);
-                let xrow = &mut x0.data[r * d..(r + 1) * d];
-                for j in 0..d {
-                    xrow[j] = trow[j] + prow[j];
+        // row-local gather (each output row reads only its own token/pos
+        // rows), so it bands onto the shared pool; banding cannot change
+        // any element's arithmetic, so 1-vs-N parallelism stays
+        // bit-identical
+        let total = rows * s;
+        par_rows(
+            &mut x0.data,
+            total,
+            d,
+            total * d * ELEMWISE_FLOP_WEIGHT,
+            |band, first, take| {
+                for r in 0..take {
+                    let gr = first + r;
+                    let trow = tok.row(tokens[gr] as usize);
+                    let prow = pos.row(gr % s);
+                    let xrow = &mut band[r * d..(r + 1) * d];
+                    for j in 0..d {
+                        xrow[j] = trow[j] + prow[j];
+                    }
                 }
-            }
-        }
+            },
+        );
         let (x_out, caches) =
             stack_forward(params, self.dims, x0, rows, s, true);
         let n_f = rms_norm_rows(&x_out, pget(params, "final_ln/scale"));
@@ -239,7 +252,10 @@ impl TransformerConfig {
         let dx0 = stack_backward(
             params, self.dims, caches, dx_out, rows, s, true, &mut grads,
         );
-        // embedding backward: x0[r] = tok[tokens[r]] + pos[i]
+        // embedding backward: x0[r] = tok[tokens[r]] + pos[i]. This
+        // scatter stays SERIAL: distinct input rows r can hit the same
+        // demb/dpos row (repeated tokens, shared positions across the
+        // batch), so banding it would race and reorder the += chains.
         let mut dpos = Matrix::zeros(self.seq_len, d);
         for bi in 0..rows {
             for i in 0..s {

@@ -15,7 +15,10 @@
 //! ops and to the retained scalar attention reference
 //! (`model::blocks::reference`) for every thread count.
 
-use super::kernels::{matmul_band, matmul_nt_band, matmul_tn_band, par_rows};
+use super::kernels::{
+    matmul_band, matmul_nt_band, matmul_tn_band, par_rows, pool_tasks, Parallelism,
+    ELEMWISE_FLOP_WEIGHT, PAR_MIN_FLOPS,
+};
 use super::Matrix;
 
 /// A dense stack of `batch` equally-shaped row-major matrices.
@@ -279,25 +282,34 @@ pub fn softmax_rows_masked(x: &mut BatchedMatrix, causal: bool) {
     if causal {
         return softmax_rows_masked_offset(x, 0);
     }
-    let (rows, cols) = (x.rows, x.cols);
-    for p in 0..x.batch {
-        let panel = x.panel_mut(p);
-        for i in 0..rows {
-            let valid = cols;
-            let row = &mut panel[i * cols..(i + 1) * cols];
-            let mx = row[..valid].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-            let mut denom = 0.0f32;
-            for v in row[..valid].iter_mut() {
-                *v = (*v - mx).exp();
-                denom += *v;
-            }
-            for v in row[..valid].iter_mut() {
-                *v /= denom;
-            }
-            for v in row[valid..].iter_mut() {
-                *v = 0.0;
-            }
+    let (batch, rows, cols) = (x.batch, x.rows, x.cols);
+    let total = batch * rows;
+    let flops = total * cols * ELEMWISE_FLOP_WEIGHT;
+    // row-banded onto the pool: softmax is row-local, so banding cannot
+    // change any element's arithmetic — bit-identical at every budget
+    par_rows(&mut x.data, total, cols, flops, |band, _first, n| {
+        for r in 0..n {
+            let row = &mut band[r * cols..(r + 1) * cols];
+            softmax_row_in_place(row, cols);
         }
+    });
+}
+
+/// The shared serial softmax row body: exp-normalize `row[..valid]`,
+/// zero the rest. Extracted so the parallel row bands and the serial
+/// fallback are the same code (the oracle property is structural).
+fn softmax_row_in_place(row: &mut [f32], valid: usize) {
+    let mx = row[..valid].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut denom = 0.0f32;
+    for v in row[..valid].iter_mut() {
+        *v = (*v - mx).exp();
+        denom += *v;
+    }
+    for v in row[..valid].iter_mut() {
+        *v /= denom;
+    }
+    for v in row[valid..].iter_mut() {
+        *v = 0.0;
     }
 }
 
@@ -310,26 +322,19 @@ pub fn softmax_rows_masked(x: &mut BatchedMatrix, causal: bool) {
 /// get exactly zero probability, same convention as the full-recompute
 /// path.
 pub fn softmax_rows_masked_offset(x: &mut BatchedMatrix, t0: usize) {
-    let (rows, cols) = (x.rows, x.cols);
-    for p in 0..x.batch {
-        let panel = x.panel_mut(p);
-        for i in 0..rows {
+    let (batch, rows, cols) = (x.batch, x.rows, x.cols);
+    let total = batch * rows;
+    let flops = total * cols * ELEMWISE_FLOP_WEIGHT;
+    // global row gr is panel row gr % rows — the causal bound depends
+    // only on the within-panel position, so the banded kernel recovers it
+    par_rows(&mut x.data, total, cols, flops, |band, first, n| {
+        for r in 0..n {
+            let i = (first + r) % rows;
             let valid = (t0 + i + 1).min(cols);
-            let row = &mut panel[i * cols..(i + 1) * cols];
-            let mx = row[..valid].iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-            let mut denom = 0.0f32;
-            for v in row[..valid].iter_mut() {
-                *v = (*v - mx).exp();
-                denom += *v;
-            }
-            for v in row[..valid].iter_mut() {
-                *v /= denom;
-            }
-            for v in row[valid..].iter_mut() {
-                *v = 0.0;
-            }
+            let row = &mut band[r * cols..(r + 1) * cols];
+            softmax_row_in_place(row, valid);
         }
-    }
+    });
 }
 
 /// VJP of [`softmax_rows_masked`] per panel row:
@@ -344,20 +349,122 @@ pub fn softmax_rows_vjp_batched(probs: &BatchedMatrix, dprobs: &BatchedMatrix) -
     );
     let mut out = BatchedMatrix::zeros(probs.batch, probs.rows, probs.cols);
     let cols = probs.cols;
-    for pnl in 0..probs.batch {
-        let p = probs.panel(pnl);
-        let dp = dprobs.panel(pnl);
-        let o = out.panel_mut(pnl);
-        for i in 0..probs.rows {
-            let prow = &p[i * cols..(i + 1) * cols];
-            let dprow = &dp[i * cols..(i + 1) * cols];
+    let total = probs.batch * probs.rows;
+    let flops = total * cols * ELEMWISE_FLOP_WEIGHT;
+    // row-local (one dot + one elementwise pass per row): banding onto
+    // the pool is bit-identical at every budget
+    par_rows(&mut out.data, total, cols, flops, |band, first, n| {
+        for r in 0..n {
+            let gr = first + r;
+            let prow = &probs.data[gr * cols..(gr + 1) * cols];
+            let dprow = &dprobs.data[gr * cols..(gr + 1) * cols];
             let dot: f32 = prow.iter().zip(dprow.iter()).map(|(a, b)| a * b).sum();
-            for (j, v) in o[i * cols..(i + 1) * cols].iter_mut().enumerate() {
+            for (j, v) in band[r * cols..(r + 1) * cols].iter_mut().enumerate() {
                 *v = prow[j] * (dprow[j] - dot);
             }
         }
-    }
+    });
     out
+}
+
+/// All four backward-attention contractions — `dprobs = dctx·Vᵀ`, the
+/// softmax VJP (+ score-scale fold), `dQ = dS·K`, `dK = dSᵀ·Q`,
+/// `dV = probsᵀ·dctx` — in **one** pool submission. The unfused path
+/// pays four enqueue-and-latch round trips per layer per step (one per
+/// batched GEMM); here the panels are split into contiguous bands once
+/// and each band runs the whole per-panel backward chain, so the step
+/// pays a single latch. Returns `(dqh, dkh, dvh)` panels.
+///
+/// Numerics: each panel runs the identical serial kernel bodies and the
+/// identical VJP-then-scale element order the unfused four-call path
+/// uses, and every output panel is written by exactly one band — so the
+/// result is bit-identical to the unfused sequence by construction, at
+/// every thread budget. `model::blocks` keeps the unfused path as the
+/// oracle and bit-compares the two.
+pub fn attention_backward_fused(
+    dctxh: &BatchedMatrix,
+    probs: &BatchedMatrix,
+    qh: &BatchedMatrix,
+    kh: &BatchedMatrix,
+    vh: &BatchedMatrix,
+    scale: f32,
+) -> (BatchedMatrix, BatchedMatrix, BatchedMatrix) {
+    let (batch, s, dh) = (dctxh.batch, dctxh.rows, dctxh.cols);
+    assert_eq!((probs.batch, probs.rows, probs.cols), (batch, s, s), "probs shape");
+    for (name, m) in [("qh", qh), ("kh", kh), ("vh", vh)] {
+        assert_eq!((m.batch, m.rows, m.cols), (batch, s, dh), "{name} shape");
+    }
+    let mut dscores = BatchedMatrix::zeros(batch, s, s);
+    let mut dq = BatchedMatrix::zeros(batch, s, dh);
+    let mut dk = BatchedMatrix::zeros(batch, s, dh);
+    let mut dv = BatchedMatrix::zeros(batch, s, dh);
+
+    // one band = a contiguous panel range; same split rule as par_rows
+    let flops = 4 * batch * s * s * dh;
+    let threads = if flops < PAR_MIN_FLOPS {
+        1
+    } else {
+        Parallelism::current().threads().min(batch).max(1)
+    };
+    let chunk = batch.div_ceil(threads);
+    let n_bands = batch.div_ceil(chunk);
+
+    // raw panel pointers so one Fn closure can write all four outputs;
+    // panels are disjoint per band, see the Safety comment below
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let psc = SendPtr(dscores.data.as_mut_ptr());
+    let pq = SendPtr(dq.data.as_mut_ptr());
+    let pk = SendPtr(dk.data.as_mut_ptr());
+    let pv = SendPtr(dv.data.as_mut_ptr());
+
+    pool_tasks(n_bands, |t| {
+        let p0 = t * chunk;
+        let p1 = (p0 + chunk).min(batch);
+        for p in p0..p1 {
+            // Safety: bands are disjoint contiguous panel ranges and
+            // `pool_tasks` does not return until every task completed,
+            // so each panel slice is exclusively owned by this task for
+            // the duration of the borrow and never outlives the buffers.
+            let dsc = unsafe {
+                std::slice::from_raw_parts_mut(psc.0.add(p * s * s), s * s)
+            };
+            let dqp = unsafe {
+                std::slice::from_raw_parts_mut(pq.0.add(p * s * dh), s * dh)
+            };
+            let dkp = unsafe {
+                std::slice::from_raw_parts_mut(pk.0.add(p * s * dh), s * dh)
+            };
+            let dvp = unsafe {
+                std::slice::from_raw_parts_mut(pv.0.add(p * s * dh), s * dh)
+            };
+            let dctxp = dctxh.panel(p);
+            let probsp = probs.panel(p);
+            // dprobs = dctx · vᵀ (overwrites dsc — nt semantics)
+            matmul_nt_band(dsc, dctxp, vh.panel(p), s, dh, s, 1.0);
+            // softmax VJP in place, then the scale fold as a SEPARATE
+            // pass — the exact element-op order of
+            // softmax_rows_vjp_batched + scale_inplace
+            for i in 0..s {
+                let prow = &probsp[i * s..(i + 1) * s];
+                let dsrow = &mut dsc[i * s..(i + 1) * s];
+                let dot: f32 =
+                    prow.iter().zip(dsrow.iter()).map(|(a, b)| a * b).sum();
+                for (o, &pj) in dsrow.iter_mut().zip(prow.iter()) {
+                    *o = pj * (*o - dot);
+                }
+            }
+            for o in dsc.iter_mut() {
+                *o *= scale;
+            }
+            // dq = dscores · k ; dk = dscoresᵀ · q ; dv = probsᵀ · dctx
+            matmul_band(dqp, dsc, kh.panel(p), s, s, dh);
+            matmul_tn_band(dkp, dsc, qh.panel(p), s, s, dh, 0, s);
+            matmul_tn_band(dvp, probsp, dctxp, s, s, dh, 0, s);
+        }
+    });
+    (dq, dk, dv)
 }
 
 #[cfg(test)]

@@ -8,11 +8,15 @@
 //!   1. **Bit-equality with the retained naive kernels.** Every output
 //!      element accumulates its contraction terms in strictly ascending
 //!      `k` order with a single f32 accumulator, exactly like the naive
-//!      triple loop — blocking and unrolling only reorder *which element
-//!      is computed when* (and how many independent elements advance per
-//!      pass), never one element's summation order. The property tests
-//!      in `rust/tests/properties.rs` bit-compare blocked against naive
-//!      on random rectangular shapes.
+//!      triple loop — blocking, unrolling, and (since PR 9) packing the
+//!      strided operand's panel into a reused thread-local scratch only
+//!      reorder *which element is computed when* and *where its operand
+//!      bytes are read from* (packing is a pure copy; partial dots chain
+//!      through C via an exact f32 store/load round-trip), never one
+//!      element's summation order. The property tests in
+//!      `rust/tests/properties.rs` bit-compare blocked against naive on
+//!      random rectangular shapes, ragged vs the block sizes, NaN/Inf
+//!      included.
 //!   2. **Bit-equality across thread counts and drivers.** The parallel
 //!      path splits the *output rows* into disjoint bands; each band is
 //!      computed by exactly one thread running the identical serial
@@ -45,19 +49,28 @@
 //!
 //! Zero new dependencies: threading is `std::thread` + `std::sync` only.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// Rows of the shared (`B`) operand kept hot per k-panel. With the j-tile
-/// below, one panel is `K_BLOCK * J_BLOCK * 4` bytes = 32 KiB — L1-sized.
+/// Rows of the shared (`B`) operand packed per k-panel. With the j-tile
+/// below, one packed panel is `K_BLOCK * J_BLOCK * 4` bytes = 32 KiB —
+/// L1-sized. Re-swept for the packed kernels (docs/PERFORMANCE.md §1):
+/// 64/128 stayed optimal under the vectorizing release profile.
 const K_BLOCK: usize = 64;
 /// Output-column tile width (f32 elements).
 const J_BLOCK: usize = 128;
 /// Minimum multiply count before the parallel path engages; below this
 /// even pool dispatch (an enqueue + latch wait) costs more than it saves.
-const PAR_MIN_FLOPS: usize = 1 << 15;
+/// Shared with the batched/elementwise passes so every parallel surface
+/// uses one engagement rule.
+pub(crate) const PAR_MIN_FLOPS: usize = 1 << 15;
+/// Cost weight of one softmax/norm/gather element against
+/// [`PAR_MIN_FLOPS`]'s multiply budget: an exp or rsqrt plus several row
+/// passes is worth roughly 8 multiplies. Conservative, so tiny
+/// decode-step rows stay serial.
+pub(crate) const ELEMWISE_FLOP_WEIGHT: usize = 8;
 
 static PARALLELISM: AtomicUsize = AtomicUsize::new(1);
 static DRIVER: AtomicU8 = AtomicU8::new(DRIVER_POOL);
@@ -625,57 +638,109 @@ pub(crate) fn reduce_rows_in_order(
 }
 
 // ---------------------------------------------------------------------
+// the pack scratch (BLIS-style operand panel packing)
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread packed-panel scratch for the blocked kernels. Grow-only
+    /// and reused across every kernel call on this thread (band bodies run
+    /// on exactly one thread, so each pool worker and the caller each own
+    /// one buffer — no sharing, no locks). Packing is a pure memory copy:
+    /// it never changes which terms an output element sums or in what
+    /// order, so the packed kernels stay bit-identical to the naive ones.
+    static PACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Counts pack-scratch *growth* events across all threads. After warmup
+/// (one growth per thread per high-water panel size) this stays flat —
+/// the steady-state hot loop never allocates. The two-trainer-lifecycle
+/// regression test in `rust/tests/integration.rs` pins this.
+static PACK_ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of times any thread's pack scratch had to grow. Observability
+/// hook for the scratch-reuse regression test; not a perf metric.
+pub fn pack_scratch_allocs() -> usize {
+    PACK_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Run `f` with this thread's pack scratch, grown (never shrunk) to at
+/// least `min_len` f32s. The slice passed to `f` is exactly `min_len`
+/// long; its contents are whatever the previous pack left (callers fully
+/// overwrite the region they read).
+fn with_pack_scratch<R>(min_len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PACK.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < min_len {
+            buf.resize(min_len, 0.0);
+            PACK_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        f(&mut buf[..min_len])
+    })
+}
+
+// ---------------------------------------------------------------------
 // serial blocked kernels (the per-band bodies)
 // ---------------------------------------------------------------------
 
-/// `C += A @ B` on a band of `n` output rows: blocked ikj. `a` is the
+/// `C += A @ B` on a band of `n` output rows: blocked ikj with the K×J
+/// panel of B **packed** into the thread-local scratch. `a` is the
 /// band's rows of A (`n x k`), `b` the full B (`k x m`), `c` the band's
 /// rows of C (`n x m`, pre-zeroed by the caller).
 ///
-/// The k-loop advances four rows of B per pass over the C tile: each
-/// `C[i][j]` still receives its k-terms one at a time in ascending k
-/// (four chained `+=` on one accumulator), so results stay bit-identical
-/// to the naive ikj loop, while C is loaded/stored 4x less often and the
-/// j-direction stays a contiguous independent-lane loop the
-/// autovectorizer handles.
+/// Packing copies each block row of B into a contiguous `kw x jw` panel
+/// once per (j-tile, k-block) and reuses it across every band row, so
+/// the inner loop is stride-1 on both operands (the classic BLIS win).
+/// The k-loop then advances four packed rows per pass over the C tile:
+/// each `C[i][j]` still receives its k-terms one at a time in ascending
+/// k (four chained `+=` on one accumulator), so results stay
+/// bit-identical to the naive ikj loop — packing only moves bytes,
+/// never a summation.
 pub(crate) fn matmul_band(c: &mut [f32], a: &[f32], b: &[f32], n: usize, k: usize, m: usize) {
     for j0 in (0..m).step_by(J_BLOCK) {
         let j1 = (j0 + J_BLOCK).min(m);
+        let jw = j1 - j0;
         for k0 in (0..k).step_by(K_BLOCK) {
             let k1 = (k0 + K_BLOCK).min(k);
-            for i in 0..n {
-                let arow = &a[i * k + k0..i * k + k1];
-                let ctile = &mut c[i * m + j0..i * m + j1];
-                let mut kk = 0usize;
-                while kk + 4 <= arow.len() {
-                    let (a0, a1) = (arow[kk], arow[kk + 1]);
-                    let (a2, a3) = (arow[kk + 2], arow[kk + 3]);
-                    let b0 = &b[(k0 + kk) * m + j0..(k0 + kk) * m + j1];
-                    let b1 = &b[(k0 + kk + 1) * m + j0..(k0 + kk + 1) * m + j1];
-                    let b2 = &b[(k0 + kk + 2) * m + j0..(k0 + kk + 2) * m + j1];
-                    let b3 = &b[(k0 + kk + 3) * m + j0..(k0 + kk + 3) * m + j1];
-                    for ((((o, &x0), &x1), &x2), &x3) in
-                        ctile.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
-                    {
-                        // ascending k, one rounding per term — naive order
-                        let mut acc = *o;
-                        acc += a0 * x0;
-                        acc += a1 * x1;
-                        acc += a2 * x2;
-                        acc += a3 * x3;
-                        *o = acc;
-                    }
-                    kk += 4;
+            let kw = k1 - k0;
+            with_pack_scratch(kw * jw, |pack| {
+                for kk in 0..kw {
+                    pack[kk * jw..(kk + 1) * jw]
+                        .copy_from_slice(&b[(k0 + kk) * m + j0..(k0 + kk) * m + j1]);
                 }
-                while kk < arow.len() {
-                    let aik = arow[kk];
-                    let brow = &b[(k0 + kk) * m + j0..(k0 + kk) * m + j1];
-                    for (o, &bkj) in ctile.iter_mut().zip(brow.iter()) {
-                        *o += aik * bkj;
+                for i in 0..n {
+                    let arow = &a[i * k + k0..i * k + k1];
+                    let ctile = &mut c[i * m + j0..i * m + j1];
+                    let mut kk = 0usize;
+                    while kk + 4 <= kw {
+                        let (a0, a1) = (arow[kk], arow[kk + 1]);
+                        let (a2, a3) = (arow[kk + 2], arow[kk + 3]);
+                        let b0 = &pack[kk * jw..(kk + 1) * jw];
+                        let b1 = &pack[(kk + 1) * jw..(kk + 2) * jw];
+                        let b2 = &pack[(kk + 2) * jw..(kk + 3) * jw];
+                        let b3 = &pack[(kk + 3) * jw..(kk + 4) * jw];
+                        for ((((o, &x0), &x1), &x2), &x3) in
+                            ctile.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                        {
+                            // ascending k, one rounding per term — naive order
+                            let mut acc = *o;
+                            acc += a0 * x0;
+                            acc += a1 * x1;
+                            acc += a2 * x2;
+                            acc += a3 * x3;
+                            *o = acc;
+                        }
+                        kk += 4;
                     }
-                    kk += 1;
+                    while kk < kw {
+                        let aik = arow[kk];
+                        let brow = &pack[kk * jw..(kk + 1) * jw];
+                        for (o, &bkj) in ctile.iter_mut().zip(brow.iter()) {
+                            *o += aik * bkj;
+                        }
+                        kk += 1;
+                    }
                 }
-            }
+            });
         }
     }
 }
@@ -687,10 +752,14 @@ pub(crate) fn matmul_band(c: &mut [f32], a: &[f32], b: &[f32], n: usize, k: usiz
 /// pass 1.0 for a plain product.
 ///
 /// Four output columns advance together: four *independent* single-
-/// accumulator dots over the same contiguous `a` row, which breaks the
-/// one-dot dependency chain (ILP) and forms an SLP lane group the
-/// autovectorizer can turn into vertical SIMD — all without touching any
-/// single element's ascending-k summation order, so bit-identity with
+/// accumulator dots over the same contiguous `a` row, reading four
+/// **packed** rows of B — a contiguous `jw x kw` panel copied into the
+/// thread-local scratch once per (j-tile, k-chunk) and reused across the
+/// band. Long contractions are chunked by `J_BLOCK` along k; partial dots
+/// chain through C (an exact f32 store/load round-trip, no rounding), and
+/// `alpha` multiplies each *finished* dot in one pass per j-tile — the
+/// identical `acc * alpha` the naive kernel performs. No element's
+/// ascending-k summation order ever changes, so bit-identity with
 /// `matmul_nt_naive` holds.
 pub(crate) fn matmul_nt_band(
     c: &mut [f32],
@@ -701,41 +770,69 @@ pub(crate) fn matmul_nt_band(
     m: usize,
     alpha: f32,
 ) {
+    if k == 0 {
+        // naive writes `acc * alpha` with acc = 0.0 even for an empty
+        // contraction — preserve that (alpha may be NaN or negative)
+        for o in c[..n * m].iter_mut() {
+            *o = 0.0 * alpha;
+        }
+        return;
+    }
     for j0 in (0..m).step_by(K_BLOCK) {
         let j1 = (j0 + K_BLOCK).min(m);
+        let jw = j1 - j0;
+        for k0 in (0..k).step_by(J_BLOCK) {
+            let k1 = (k0 + J_BLOCK).min(k);
+            let kw = k1 - k0;
+            with_pack_scratch(jw * kw, |pack| {
+                for jj in 0..jw {
+                    pack[jj * kw..(jj + 1) * kw]
+                        .copy_from_slice(&b[(j0 + jj) * k + k0..(j0 + jj) * k + k1]);
+                }
+                for i in 0..n {
+                    let arow = &a[i * k + k0..i * k + k1];
+                    let crow = &mut c[i * m + j0..i * m + j1];
+                    let mut j = 0usize;
+                    while j + 4 <= jw {
+                        let b0 = &pack[j * kw..(j + 1) * kw];
+                        let b1 = &pack[(j + 1) * kw..(j + 2) * kw];
+                        let b2 = &pack[(j + 2) * kw..(j + 3) * kw];
+                        let b3 = &pack[(j + 3) * kw..(j + 4) * kw];
+                        let (mut acc0, mut acc1, mut acc2, mut acc3) = if k0 == 0 {
+                            (0.0f32, 0.0f32, 0.0f32, 0.0f32)
+                        } else {
+                            (crow[j], crow[j + 1], crow[j + 2], crow[j + 3])
+                        };
+                        for ((((&x, &y0), &y1), &y2), &y3) in
+                            arow.iter().zip(b0).zip(b1).zip(b2).zip(b3)
+                        {
+                            acc0 += x * y0;
+                            acc1 += x * y1;
+                            acc2 += x * y2;
+                            acc3 += x * y3;
+                        }
+                        crow[j] = acc0;
+                        crow[j + 1] = acc1;
+                        crow[j + 2] = acc2;
+                        crow[j + 3] = acc3;
+                        j += 4;
+                    }
+                    while j < jw {
+                        let brow = &pack[j * kw..(j + 1) * kw];
+                        let mut acc = if k0 == 0 { 0.0f32 } else { crow[j] };
+                        for (x, y) in arow.iter().zip(brow.iter()) {
+                            acc += x * y;
+                        }
+                        crow[j] = acc;
+                        j += 1;
+                    }
+                }
+            });
+        }
+        // one alpha pass per j-tile, over the finished raw dots
         for i in 0..n {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * m..(i + 1) * m];
-            let mut j = j0;
-            while j + 4 <= j1 {
-                let b0 = &b[j * k..(j + 1) * k];
-                let b1 = &b[(j + 1) * k..(j + 2) * k];
-                let b2 = &b[(j + 2) * k..(j + 3) * k];
-                let b3 = &b[(j + 3) * k..(j + 4) * k];
-                let (mut acc0, mut acc1) = (0.0f32, 0.0f32);
-                let (mut acc2, mut acc3) = (0.0f32, 0.0f32);
-                for ((((&x, &y0), &y1), &y2), &y3) in
-                    arow.iter().zip(b0).zip(b1).zip(b2).zip(b3)
-                {
-                    acc0 += x * y0;
-                    acc1 += x * y1;
-                    acc2 += x * y2;
-                    acc3 += x * y3;
-                }
-                crow[j] = acc0 * alpha;
-                crow[j + 1] = acc1 * alpha;
-                crow[j + 2] = acc2 * alpha;
-                crow[j + 3] = acc3 * alpha;
-                j += 4;
-            }
-            while j < j1 {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (x, y) in arow.iter().zip(brow.iter()) {
-                    acc += x * y;
-                }
-                crow[j] = acc * alpha;
-                j += 1;
+            for o in c[i * m + j0..i * m + j1].iter_mut() {
+                *o *= alpha;
             }
         }
     }
@@ -747,10 +844,14 @@ pub(crate) fn matmul_nt_band(
 /// (`rows x acols`), `b` the full B (`rows x m`), `c` the band
 /// (`n x m`, pre-zeroed).
 ///
-/// Two contraction rows advance per pass (chained `+=`, ascending k, so
-/// bit-identity with `matmul_tn_naive` holds) — C rows are loaded and
-/// stored half as often, and the inner loop stays a contiguous
-/// independent-lane axpy.
+/// The strided operand here is A (read down a column), so the packing
+/// targets A: each `K_BLOCK`-row contraction chunk's band columns are
+/// copied into a contiguous `rw x iw` scratch panel, turning the strided
+/// column walks into dense panel reads. Two contraction rows advance per
+/// pass (chained `+=`, ascending k, chunk partials chained through C via
+/// an exact f32 store/load round-trip, so bit-identity with
+/// `matmul_tn_naive` holds) — the inner loop stays a contiguous
+/// independent-lane axpy over B rows.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul_tn_band(
     c: &mut [f32],
@@ -762,34 +863,46 @@ pub(crate) fn matmul_tn_band(
     i0: usize,
     n: usize,
 ) {
-    let mut kk = 0usize;
-    while kk + 2 <= rows {
-        let ar0 = &a[kk * acols..(kk + 1) * acols];
-        let ar1 = &a[(kk + 1) * acols..(kk + 2) * acols];
-        let br0 = &b[kk * m..(kk + 1) * m];
-        let br1 = &b[(kk + 1) * m..(kk + 2) * m];
-        for i in 0..n {
-            let a0 = ar0[i0 + i];
-            let a1 = ar1[i0 + i];
-            let crow = &mut c[i * m..(i + 1) * m];
-            for ((o, &x0), &x1) in crow.iter_mut().zip(br0).zip(br1) {
-                let mut acc = *o;
-                acc += a0 * x0;
-                acc += a1 * x1;
-                *o = acc;
-            }
-        }
-        kk += 2;
-    }
-    if kk < rows {
-        let arow = &a[kk * acols..(kk + 1) * acols];
-        let brow = &b[kk * m..(kk + 1) * m];
-        for i in 0..n {
-            let aki = arow[i0 + i];
-            let crow = &mut c[i * m..(i + 1) * m];
-            for (o, &bkj) in crow.iter_mut().zip(brow.iter()) {
-                *o += aki * bkj;
-            }
+    for r0 in (0..rows).step_by(K_BLOCK) {
+        let r1 = (r0 + K_BLOCK).min(rows);
+        let rw = r1 - r0;
+        for it in (0..n).step_by(K_BLOCK) {
+            let i1 = (it + K_BLOCK).min(n);
+            let iw = i1 - it;
+            with_pack_scratch(rw * iw, |pack| {
+                for rr in 0..rw {
+                    pack[rr * iw..(rr + 1) * iw].copy_from_slice(
+                        &a[(r0 + rr) * acols + i0 + it..(r0 + rr) * acols + i0 + i1],
+                    );
+                }
+                for j0 in (0..m).step_by(J_BLOCK) {
+                    let j1 = (j0 + J_BLOCK).min(m);
+                    for i in it..i1 {
+                        let crow = &mut c[i * m + j0..i * m + j1];
+                        let mut rr = 0usize;
+                        while rr + 2 <= rw {
+                            let a0 = pack[rr * iw + (i - it)];
+                            let a1 = pack[(rr + 1) * iw + (i - it)];
+                            let br0 = &b[(r0 + rr) * m + j0..(r0 + rr) * m + j1];
+                            let br1 = &b[(r0 + rr + 1) * m + j0..(r0 + rr + 1) * m + j1];
+                            for ((o, &x0), &x1) in crow.iter_mut().zip(br0).zip(br1) {
+                                let mut acc = *o;
+                                acc += a0 * x0;
+                                acc += a1 * x1;
+                                *o = acc;
+                            }
+                            rr += 2;
+                        }
+                        if rr < rw {
+                            let aki = pack[rr * iw + (i - it)];
+                            let brow = &b[(r0 + rr) * m + j0..(r0 + rr) * m + j1];
+                            for (o, &bkj) in crow.iter_mut().zip(brow.iter()) {
+                                *o += aki * bkj;
+                            }
+                        }
+                    }
+                }
+            });
         }
     }
 }

@@ -7,9 +7,11 @@
 //! metrics/memory machinery.
 //!
 //! The GEMM hot path lives in `kernels`: cache-blocked, ikj-ordered
-//! kernels over row slices with an opt-in row-parallel path behind the
-//! process-wide [`Parallelism`] config (`--parallelism N` on the CLI and
-//! benches). Parallel band jobs run on a **persistent worker pool**
+//! kernels over row slices — since PR 9 with the strided operand's
+//! panel **packed** into a reused thread-local scratch so the inner
+//! loops are stride-1 on both operands — with an opt-in row-parallel
+//! path behind the process-wide [`Parallelism`] config
+//! (`--parallelism N` on the CLI and benches). Parallel band jobs run on a **persistent worker pool**
 //! (started lazily or by `Parallelism::install`; `std::sync` only) — the
 //! PR-4 per-call `std::thread::scope` driver survives as
 //! [`Parallelism::scoped`], the A/B baseline and pool oracle. The
@@ -26,12 +28,17 @@ mod matrix;
 mod ops;
 
 pub use batched::{
-    add_panels_at, batched_matmul, batched_matmul_nt, batched_matmul_ops,
-    batched_matmul_tn, gather_heads, gather_heads_at, scatter_heads,
-    scatter_heads_at, softmax_rows_masked, softmax_rows_masked_offset,
-    softmax_rows_vjp_batched, BatchedMatrix,
+    add_panels_at, attention_backward_fused, batched_matmul, batched_matmul_nt,
+    batched_matmul_ops, batched_matmul_tn, gather_heads, gather_heads_at,
+    scatter_heads, scatter_heads_at, softmax_rows_masked,
+    softmax_rows_masked_offset, softmax_rows_vjp_batched, BatchedMatrix,
 };
-pub use kernels::{pool_tasks, KernelDriver, Parallelism, POOL_BUDGET};
+pub use kernels::{
+    pack_scratch_allocs, pool_tasks, KernelDriver, Parallelism, POOL_BUDGET,
+};
+// the model layer's row-local elementwise passes (embedding gathers,
+// per-request norms) band themselves onto the same pool + threshold
+pub(crate) use kernels::{par_rows, ELEMWISE_FLOP_WEIGHT};
 pub use matrix::Matrix;
 pub use ops::{
     gelu, gelu_grad, relu, rms_norm_rows, rms_norm_rows_vjp, softmax_rows,

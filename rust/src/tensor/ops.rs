@@ -3,6 +3,7 @@
 //! manual backward pass (`crate::model`). Every VJP here is checked
 //! against central finite differences in this file's tests.
 
+use super::kernels::{par_rows, ELEMWISE_FLOP_WEIGHT};
 use super::Matrix;
 
 /// eps added to the mean square in the RMS-norm denominator.
@@ -20,22 +21,28 @@ pub fn gelu(x: &Matrix) -> Matrix {
     })
 }
 
-/// Numerically-stable softmax over each row.
+/// Numerically-stable softmax over each row. Row-local, so the row-banded
+/// parallel path (engaged past the shared flop threshold) is
+/// bit-identical to the serial loop at every thread budget.
 pub fn softmax_rows(x: &Matrix) -> Matrix {
     let mut out = Matrix::zeros(x.rows, x.cols);
-    for i in 0..x.rows {
-        let row = x.row(i);
-        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-        let mut denom = 0.0f32;
-        for (j, &v) in row.iter().enumerate() {
-            let e = (v - mx).exp();
-            *out.at_mut(i, j) = e;
-            denom += e;
+    let cols = x.cols;
+    let flops = x.rows * cols * ELEMWISE_FLOP_WEIGHT;
+    par_rows(&mut out.data, x.rows, cols, flops, |band, first, n| {
+        for r in 0..n {
+            let row = x.row(first + r);
+            let orow = &mut band[r * cols..(r + 1) * cols];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut denom = 0.0f32;
+            for (o, &v) in orow.iter_mut().zip(row.iter()) {
+                *o = (v - mx).exp();
+                denom += *o;
+            }
+            for o in orow.iter_mut() {
+                *o /= denom;
+            }
         }
-        for j in 0..x.cols {
-            *out.at_mut(i, j) /= denom;
-        }
-    }
+    });
     out
 }
 
@@ -75,42 +82,66 @@ pub fn softmax_rows_vjp(probs: &Matrix, dprobs: &Matrix) -> Matrix {
 pub fn rms_norm_rows(x: &Matrix, scale: &Matrix) -> Matrix {
     assert_eq!(scale.shape(), (1, x.cols), "rms_norm scale must be [1, d]");
     let d = x.cols as f32;
+    let cols = x.cols;
     let mut out = Matrix::zeros(x.rows, x.cols);
-    for i in 0..x.rows {
-        let row = x.row(i);
-        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d;
-        let inv = 1.0 / (ms + RMS_EPS).sqrt();
-        let orow = &mut out.data[i * x.cols..(i + 1) * x.cols];
-        for (j, o) in orow.iter_mut().enumerate() {
-            *o = row[j] * inv * scale.at(0, j);
+    let flops = x.rows * cols * ELEMWISE_FLOP_WEIGHT;
+    // row-local: banding onto the pool is bit-identical at every budget
+    par_rows(&mut out.data, x.rows, cols, flops, |band, first, n| {
+        for r in 0..n {
+            let row = x.row(first + r);
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d;
+            let inv = 1.0 / (ms + RMS_EPS).sqrt();
+            let orow = &mut band[r * cols..(r + 1) * cols];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = row[j] * inv * scale.at(0, j);
+            }
         }
-    }
+    });
     out
 }
 
 /// VJP of [`rms_norm_rows`]: returns `(dx, dscale)`. The inverse RMS is
 /// recomputed from `x` (cheaper than caching it through the layer stack).
+///
+/// `dx` is row-local, so it row-bands onto the pool (recomputing each
+/// row's `inv` and `dot` with the identical ascending-`j` arithmetic —
+/// bit-identical to the serial loop). `dscale` accumulates **across**
+/// rows into one `[1, d]` vector, so it stays a serial ascending-row
+/// pass — parallelizing it would need a reduction tree and re-associate
+/// the sum.
 pub fn rms_norm_rows_vjp(x: &Matrix, scale: &Matrix, dy: &Matrix) -> (Matrix, Matrix) {
     assert_eq!(scale.shape(), (1, x.cols), "rms_norm scale must be [1, d]");
     assert_eq!(x.shape(), dy.shape());
     let d = x.cols as f32;
+    let cols = x.cols;
     let mut dx = Matrix::zeros(x.rows, x.cols);
     let mut dscale = Matrix::zeros(1, x.cols);
+    let flops = x.rows * cols * ELEMWISE_FLOP_WEIGHT;
+    par_rows(&mut dx.data, x.rows, cols, flops, |band, first, n| {
+        for r in 0..n {
+            let row = x.row(first + r);
+            let dyrow = dy.row(first + r);
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d;
+            let inv = 1.0 / (ms + RMS_EPS).sqrt();
+            // dot = Σ_j dy_j s_j x_j drives the d(inv)/dx term
+            let mut dot = 0.0f32;
+            for j in 0..cols {
+                dot += dyrow[j] * scale.at(0, j) * row[j];
+            }
+            let k = inv * inv * inv / d;
+            let dxrow = &mut band[r * cols..(r + 1) * cols];
+            for (j, o) in dxrow.iter_mut().enumerate() {
+                *o = inv * scale.at(0, j) * dyrow[j] - k * row[j] * dot;
+            }
+        }
+    });
     for i in 0..x.rows {
         let row = x.row(i);
         let dyrow = dy.row(i);
         let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d;
         let inv = 1.0 / (ms + RMS_EPS).sqrt();
-        // dot = Σ_j dy_j s_j x_j drives the d(inv)/dx term
-        let mut dot = 0.0f32;
-        for j in 0..x.cols {
-            dot += dyrow[j] * scale.at(0, j) * row[j];
+        for j in 0..cols {
             *dscale.at_mut(0, j) += dyrow[j] * row[j] * inv;
-        }
-        let k = inv * inv * inv / d;
-        let dxrow = &mut dx.data[i * x.cols..(i + 1) * x.cols];
-        for (j, o) in dxrow.iter_mut().enumerate() {
-            *o = inv * scale.at(0, j) * dyrow[j] - k * row[j] * dot;
         }
     }
     (dx, dscale)

@@ -619,6 +619,41 @@ fn native_pool_reused_across_trainer_lifecycles() {
     Parallelism::single().install();
 }
 
+/// PR-9 pack-scratch regression: the packed GEMM kernels pack the
+/// strided operand's panel into a thread-local, grow-only scratch
+/// buffer ([`flora::tensor::pack_scratch_allocs`] counts every
+/// grow). Two full trainer lifecycles must REUSE that scratch — after a
+/// warm run, an identical run adds (nearly) zero new allocations. A
+/// per-call-reallocation regression would add one per band-kernel call,
+/// i.e. thousands over even a short run. The counter is process-global
+/// across threads, so the bound leaves slack for concurrently running
+/// tests warming their own threads' scratches, instead of demanding an
+/// exact zero.
+#[test]
+fn native_pack_scratch_reused_across_trainer_lifecycles() {
+    use flora::tensor::{pack_scratch_allocs, Parallelism};
+    let run = || {
+        let mut c = tf_cfg(MethodSpec::Flora { rank: 8 }, TaskKind::Lm, 1, 4);
+        c.model = "lora-small".into();
+        c.parallelism = Parallelism::new(3);
+        let mut tr = Trainer::native(c).unwrap();
+        tr.run().unwrap().train_losses
+    };
+    let first = run();
+    let second = run(); // second pass fully warms every pool thread
+    let c0 = pack_scratch_allocs();
+    let third = run();
+    let grew = pack_scratch_allocs() - c0;
+    assert_eq!(first, second, "warm-pool lifecycle diverged");
+    assert_eq!(first, third, "third lifecycle diverged");
+    assert!(
+        grew <= 16,
+        "pack scratch grew {grew} times during a warm trainer lifecycle — \
+         the reuse contract is broken (per-call allocation?)"
+    );
+    Parallelism::single().install();
+}
+
 /// FLORA accumulation keeps the method state compressed on every
 /// projectable (attention/MLP) matrix and full-size on the naive ones —
 /// the live ledger must match the model-shape arithmetic exactly.

@@ -293,6 +293,101 @@ fn prop_pool_vs_scope_vs_naive_bit_match_on_random_rectangles() {
     }
 }
 
+#[test]
+fn prop_packed_kernels_bit_match_naive_at_block_boundaries() {
+    // PR 9 packs the strided operand's K×J panel into a reused scratch
+    // buffer; the pack is a pure memory copy and the per-element
+    // ascending-k accumulation order is unchanged, so the packed kernels
+    // must stay EXACT against the naive oracles — checked here on ragged
+    // shapes straddling the K_BLOCK=64 / J_BLOCK=128 edges (partial
+    // final panels, single-row/col slivers), with NaN/Inf poison, under
+    // the serial, pooled, and scoped drivers.
+    fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+        a.shape() == b.shape()
+            && a.data
+                .iter()
+                .zip(b.data.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+    let mut rng = Rng::new(23);
+    let edges = [1usize, 3, 63, 64, 65, 127, 128, 129];
+    let before = Parallelism::current();
+    for trial in 0..10 {
+        let n = edges[rng.next_below(edges.len())];
+        let k = edges[rng.next_below(edges.len())];
+        let m = edges[rng.next_below(edges.len())];
+        let mut a = Matrix::gaussian(n, k, 1.0, &mut rng);
+        let b = Matrix::gaussian(k, m, 1.0, &mut rng);
+        let bt = Matrix::gaussian(m, k, 1.0, &mut rng);
+        let b2 = Matrix::gaussian(n, m, 1.0, &mut rng);
+        if trial % 2 == 1 {
+            *a.at_mut(rng.next_below(n), rng.next_below(k)) = f32::NAN;
+            *a.at_mut(rng.next_below(n), rng.next_below(k)) = f32::INFINITY;
+        }
+        let (naive, naive_nt, naive_tn) =
+            (a.matmul_naive(&b), a.matmul_nt_naive(&bt), a.matmul_tn_naive(&b2));
+        for budget in
+            [Parallelism::single(), Parallelism::new(3), Parallelism::scoped(3)]
+        {
+            budget.install();
+            assert!(
+                bits_equal(&a.matmul(&b), &naive),
+                "matmul {budget:?} ({n},{k},{m}) trial {trial}"
+            );
+            assert!(
+                bits_equal(&a.matmul_nt(&bt), &naive_nt),
+                "matmul_nt {budget:?} ({n},{k},{m}) trial {trial}"
+            );
+            assert!(
+                bits_equal(&a.matmul_tn(&b2), &naive_tn),
+                "matmul_tn {budget:?} ({n},{k},{m}) trial {trial}"
+            );
+        }
+    }
+    before.install();
+}
+
+#[test]
+fn prop_parallel_elementwise_passes_bit_match_serial() {
+    // PR 9 bands the row-local elementwise passes (softmax, rms-norm and
+    // its VJP) onto the same pool as the GEMMs. The band split cannot
+    // change any element's arithmetic — each output row is computed by
+    // exactly one thread running the identical per-row body — so every
+    // thread budget and driver must reproduce the serial result raw-bits,
+    // NaN/Inf included.
+    use flora::tensor::{rms_norm_rows, rms_norm_rows_vjp, softmax_rows};
+    fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+        a.shape() == b.shape()
+            && a.data
+                .iter()
+                .zip(b.data.iter())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+    let mut rng = Rng::new(24);
+    // big enough to clear the engagement threshold for elementwise work
+    let mut x = Matrix::gaussian(300, 96, 1.0, &mut rng);
+    *x.at_mut(5, 7) = f32::NAN;
+    *x.at_mut(11, 0) = f32::INFINITY;
+    let scale = Matrix::gaussian(1, 96, 1.0, &mut rng);
+    let dy = Matrix::gaussian(300, 96, 1.0, &mut rng);
+    let before = Parallelism::current();
+    Parallelism::single().install();
+    let sm = softmax_rows(&x);
+    let rn = rms_norm_rows(&x, &scale);
+    let (dx, dscale) = rms_norm_rows_vjp(&x, &scale, &dy);
+    for budget in
+        [Parallelism::new(2), Parallelism::new(5), Parallelism::scoped(3)]
+    {
+        budget.install();
+        assert!(bits_equal(&softmax_rows(&x), &sm), "softmax {budget:?}");
+        assert!(bits_equal(&rms_norm_rows(&x, &scale), &rn), "rms {budget:?}");
+        let (dx2, dscale2) = rms_norm_rows_vjp(&x, &scale, &dy);
+        assert!(bits_equal(&dx2, &dx), "rms vjp dx {budget:?}");
+        assert!(bits_equal(&dscale2, &dscale), "rms vjp dscale {budget:?}");
+    }
+    before.install();
+}
+
 // ---------------------------------------------------------------------
 // data-task invariants
 // ---------------------------------------------------------------------
