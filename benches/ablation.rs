@@ -1,0 +1,266 @@
+//! Adaptive-rank compressor ablation (not a paper table; grows the
+//! compressor-grid trajectory) — APPENDS a snapshot to
+//! `BENCH_ablation.json`.
+//!
+//! For every native LM catalog size (skipping `lora-base` under
+//! `--quick`, same as dp/serving/micro_kernels) it trains the SAME
+//! model under each compressor row and reports:
+//!
+//!   * `final_loss`          — last training loss (the quality axis)
+//!   * `steps_per_sec`       — optimizer steps/sec through the fused
+//!                             native catalog
+//!   * `tok_s`               — tokens/sec (steps/s × τ × batch × seq)
+//!   * `method_state_bytes`  — persistent compressor state (the memory
+//!                             axis; sublinear vs `params_bytes` is the
+//!                             paper's claim, zero for fused AltLoRA ViT
+//!                             steps only)
+//!   * `state_ratio`         — method/params bytes
+//!
+//! Rows: Flora Algorithm 1 (compressed accumulation, τ=4), Flora
+//! Algorithm 2 (momentum-in-subspace, τ=1), AltLoRA
+//! (alternating-projection reconstruction, τ=4) and AdaRank (scheduled
+//! shrinking momentum subspace, halve-at:1 on a κ=8 cycle). All rows
+//! share rank 8 and the paper's Adafactor base unless `--optimizer`
+//! overrides it; learning rates follow the proven integration-matrix
+//! regimes per (optimizer, mode).
+//!
+//! `BENCH_ablation.json` is a schema-2 TRAJECTORY like BENCH_dp.json
+//! (append-only). The seed point is a C mirror of the compressor
+//! algebra (`benches/mirror/ablation_mirror.c`), provenance-tagged as
+//! such. How to read the file: docs/ARCHITECTURE.md (compressor grid).
+//!
+//! Run: cargo bench --bench ablation [-- --quick --parallelism N]
+
+use flora::bench::contract;
+use flora::bench::paper::BenchArgs;
+use flora::config::{TaskKind, TrainConfig};
+use flora::coordinator::{MethodSpec, Trainer};
+use flora::model::TransformerConfig;
+use flora::opt::{OptimizerKind, RankSchedule};
+use flora::util::json::Json;
+
+const RANK: usize = 8;
+
+struct Row {
+    tag: &'static str,
+    method: MethodSpec,
+    tau: usize,
+    kappa: usize,
+    schedule: RankSchedule,
+    /// lr per optimizer, `OptimizerKind::ALL` order — the proven
+    /// integration-matrix regimes for this row's mode.
+    lrs: [f32; 4],
+}
+
+fn rows() -> Vec<Row> {
+    let accum = [0.5, 0.02, 0.1, 0.1];
+    let momentum = [1.0, 0.01, 0.05, 0.05];
+    vec![
+        Row {
+            tag: "flora-alg1",
+            method: MethodSpec::Flora { rank: RANK },
+            tau: 4,
+            kappa: 1000,
+            schedule: RankSchedule::Fixed,
+            lrs: accum,
+        },
+        Row {
+            tag: "flora-alg2",
+            method: MethodSpec::Flora { rank: RANK },
+            tau: 1,
+            kappa: 1000,
+            schedule: RankSchedule::Fixed,
+            lrs: momentum,
+        },
+        Row {
+            tag: "altlora",
+            method: MethodSpec::AltLora { rank: RANK },
+            tau: 4,
+            kappa: 1000,
+            schedule: RankSchedule::Fixed,
+            lrs: accum,
+        },
+        Row {
+            tag: "adarank",
+            method: MethodSpec::AdaRank { rank: RANK },
+            tau: 1,
+            kappa: 8, // short cycles so the shrink schedule actually bites
+            schedule: RankSchedule::HalveAt { every: 1 },
+            lrs: momentum,
+        },
+    ]
+}
+
+struct Cell {
+    key: String,
+    model: String,
+    tag: &'static str,
+    tau: usize,
+    schedule: String,
+    optimizer: OptimizerKind,
+    lr: f32,
+    steps_per_sec: f64,
+    tok_s: f64,
+    method_bytes: u64,
+    params_bytes: u64,
+    final_loss: f32,
+}
+
+fn measure(model: &str, seq_len: usize, row: &Row, steps: usize, args: &BenchArgs) -> Cell {
+    let optimizer = args.optimizer.unwrap_or(OptimizerKind::Adafactor);
+    let oi = OptimizerKind::ALL.iter().position(|o| *o == optimizer).unwrap();
+    let cfg = TrainConfig {
+        model: model.into(),
+        task: TaskKind::Lm,
+        method: row.method,
+        optimizer,
+        lr: row.lrs[oi],
+        steps,
+        tau: row.tau,
+        kappa: row.kappa,
+        batch: 4,
+        seed: 0,
+        eval_every: 0,
+        eval_samples: 8,
+        parallelism: args.parallelism,
+        rank_schedule: row.schedule,
+        ..TrainConfig::default()
+    };
+    let batch = cfg.batch;
+    let lr = cfg.lr;
+    let report = Trainer::native(cfg)
+        .and_then(|mut t| t.run())
+        .unwrap_or_else(|e| {
+            eprintln!("[ablation] {model}/{}: {e}", row.tag);
+            std::process::exit(1);
+        });
+    let bytes = |group: &str| {
+        report
+            .state_bytes
+            .iter()
+            .find(|(g, _)| g == group)
+            .map(|(_, b)| *b)
+            .unwrap_or(0)
+    };
+    Cell {
+        key: format!("{model}/{}", row.tag),
+        model: model.to_string(),
+        tag: row.tag,
+        tau: row.tau,
+        schedule: row.schedule.name(),
+        optimizer,
+        lr,
+        steps_per_sec: report.steps_per_sec,
+        tok_s: report.steps_per_sec * (row.tau * batch * seq_len) as f64,
+        method_bytes: bytes("method"),
+        params_bytes: bytes("params"),
+        final_loss: report.train_losses.last().copied().unwrap_or(f32::NAN),
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn round3(x: f64) -> Json {
+    Json::Num((x * 1000.0).round() / 1000.0)
+}
+
+fn round6(x: f64) -> Json {
+    Json::Num((x * 1e6).round() / 1e6)
+}
+
+fn snapshot_of(cells: &[Cell], steps: usize, args: &BenchArgs) -> Json {
+    let sizes: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let ratio = if c.params_bytes > 0 {
+                c.method_bytes as f64 / c.params_bytes as f64
+            } else {
+                f64::NAN
+            };
+            obj(vec![
+                ("model", Json::Str(c.key.clone())),
+                ("base_model", Json::Str(c.model.clone())),
+                ("compressor", Json::Str(c.tag.into())),
+                ("rank", Json::Num(RANK as f64)),
+                ("tau", Json::Num(c.tau as f64)),
+                ("rank_schedule", Json::Str(c.schedule.clone())),
+                ("optimizer", Json::Str(c.optimizer.to_string())),
+                ("lr", round6(c.lr as f64)),
+                ("steps", Json::Num(steps as f64)),
+                ("steps_per_sec", round3(c.steps_per_sec)),
+                ("tok_s", round3(c.tok_s)),
+                ("method_state_bytes", Json::Num(c.method_bytes as f64)),
+                ("params_bytes", Json::Num(c.params_bytes as f64)),
+                ("state_ratio", round6(ratio)),
+                ("final_loss", round6(c.final_loss as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("unix_time", Json::Num(contract::unix_time_now() as f64)),
+        ("parallelism", Json::Num(args.parallelism.threads() as f64)),
+        ("quick", Json::Bool(args.quick)),
+        ("provenance", Json::Str("cargo-bench ablation".into())),
+        ("sizes", Json::Arr(sizes)),
+    ])
+}
+
+const COMMENT: &str = "Per-PR adaptive-rank compressor ablation trajectory (final loss, \
+     steps/s, tok/s and persistent state bytes for Flora Alg-1/2 vs \
+     AltLoRA vs AdaRank on the native LM size grid). Entries are \
+     appended, never rewritten; `cargo bench --bench ablation` appends \
+     a fresh cargo-bench snapshot. How to read this file: \
+     docs/ARCHITECTURE.md (compressor grid).";
+
+fn main() {
+    let args = BenchArgs::parse();
+    let steps = args.steps.unwrap_or(if args.quick { 4 } else { 30 });
+    let mut cells = Vec::new();
+    for (name, cfg) in TransformerConfig::catalog_grid() {
+        if args.quick && name == "lora-base" {
+            continue; // the CI smoke stays fast; full runs cover it
+        }
+        for row in rows() {
+            eprintln!("[ablation] measuring {name}/{} ...", row.tag);
+            cells.push(measure(name, cfg.seq_len, &row, steps, &args));
+        }
+    }
+
+    let mut table = flora::bench::Table::new(
+        &format!(
+            "compressor ablation (rank {RANK}, {} steps, parallelism {})",
+            steps,
+            args.parallelism.threads()
+        ),
+        &["Size/compressor", "steps/s", "tok/s", "method state", "ratio", "final loss"],
+    );
+    for c in &cells {
+        let ratio = if c.params_bytes > 0 {
+            c.method_bytes as f64 / c.params_bytes as f64
+        } else {
+            f64::NAN
+        };
+        table.row(vec![
+            c.key.clone(),
+            format!("{:.2}", c.steps_per_sec),
+            format!("{:.0}", c.tok_s),
+            flora::util::human::bytes(c.method_bytes),
+            format!("{:.4}", ratio),
+            format!("{:.4}", c.final_loss),
+        ]);
+    }
+    table.print();
+
+    let path = "BENCH_ablation.json";
+    match contract::append_to_file(path, "ablation", COMMENT, snapshot_of(&cells, steps, &args)) {
+        Ok(()) => println!("\nappended snapshot to {path}"),
+        Err(e) => {
+            // growing the trajectory is this bench's one artifact; a
+            // silent skip would let CI go green on a broken append
+            eprintln!("could not append to {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

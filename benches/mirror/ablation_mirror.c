@@ -1,0 +1,410 @@
+/* ablation_mirror.c — C mirror of the PR-10 adaptive-rank compressor
+ * grid (rust/src/opt/{flora,altlora,schedule}.rs), used to seed the
+ * first BENCH_ablation.json trajectory point on machines where cargo is
+ * unavailable (the build container). `cargo bench --bench ablation`
+ * reproduces the same four-way comparison on the real crate.
+ *
+ * What is mirrored, faithfully:
+ *   - the four compressor algebras, step for step, on one projectable
+ *     matrix per catalog size (the layer-0 ffn/w1 shape [d, f]):
+ *       flora-alg1  τ=4 shared-seed accumulation C += G Aᵀ, cycle-end
+ *                   decompress-mean Ĝ = (C/τ) A, fresh seed per cycle;
+ *       flora-alg2  τ=1 momentum-in-subspace M = βM + (1−β) G Aᵀ
+ *                   (β = 0.9), κ=8 resample with transfer
+ *                   M ← (M A_old) A_newᵀ, update Ĝ = M A;
+ *       altlora     τ=4 dual sketches C += G Aᵀ and R += P G, cycle-end
+ *                   alternating solve — A-step (P Pᵀ + εI) A₁ = r̄,
+ *                   B-step B₁ (A₁ Aᵀ) = c̄ (both r×r, partial-pivot
+ *                   elimination, ridge = 1e-4·mean|diag| + 1e-12, the
+ *                   exact altlora.rs constants), Ĝ = B₁ A₁;
+ *       adarank     flora-alg2 whose active rank follows halve-at:1 on
+ *                   the κ-cycle clock (8 → 4 → 2 over 24 steps):
+ *                   truncate the momentum columns FIRST (bit-exact
+ *                   prefix), transfer at the sub-rank of the master
+ *                   sampling law (first ra projection rows), EMA on the
+ *                   live columns only, decompress scaled r0/ra —
+ *                   the exact schedule.rs order;
+ *   - the task: a synthetic quadratic over a rank-8 target
+ *     (L(W) = ½·mean((W − W*)²), ∇L = W − W*, W* = U V normalized to
+ *     unit RMS), so `final_loss` is a REAL measurement of each
+ *     algebra's reconstruction quality under identical SGD steps —
+ *     AltLoRA's solve is exact on rank ≤ r gradients and converges
+ *     where Flora's fixed-projection read-back plateaus;
+ *   - `method_state_bytes`, exactly: n·r·4 (alg1/alg2), (n·r + r·m)·4
+ *     (altlora's dual sketch), n·r·4 master shape (adarank).
+ *
+ * What is NOT mirrored: the transformer forward/backward (gradients
+ * here are the quadratic's, free to evaluate), the catalog/manifest
+ * machinery, and rust bit-reproduction — projections are uniform with
+ * second moment matched to rp's law (E[AᵀA] = I), not the same Gaussian
+ * stream, so losses are statistically comparable, not bit-equal, to the
+ * cargo-bench rows. Absolute steps/sec WILDLY overstate full training
+ * (no model pass); the per-row RATIOS of time and the loss/state
+ * columns are the honest measurement. `tok_s` is null: no tokens flow.
+ *
+ * Build & run:  gcc -O2 -o ablation_mirror ablation_mirror.c -lm
+ *               ./ablation_mirror        # [iters]
+ */
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define R0 8
+#define STEPS 24
+#define TAU_ACC 4
+#define KAPPA 8
+#define BETA 0.9f
+#define RIDGE_EPS 1e-4f
+
+/* Per-row SGD lr, scaled for stability of each estimator's spectrum on
+ * the quadratic: a fresh rank-r projection concentrates the update on
+ * an r-dim subspace with gain ~m/r (master law: ~m/r0 per active
+ * coordinate, times the r0/ra compensation), so accumulation rows take
+ * lr ∝ r/m and momentum rows (damped by 1−β) lr ∝ r0/m; AltLoRA's
+ * reconstruction is exact on this rank-r task (gain ~1), so it runs a
+ * plain 0.3. Each row's lr is recorded in its output. The rust bench
+ * rows likewise carry per-row proven-regime lrs. */
+static float lr_of(int which, int m) {
+    if (which == 2) return 0.3f;
+    if (which == 0) return 0.5f * (float)R0 / (float)m;
+    return 1.0f * (float)R0 / (float)m;
+}
+
+typedef struct {
+    const char *name;
+    int n, m; /* layer0/ffn/w1 = [d, f] of the catalog size */
+} Size;
+
+static const Size SIZES[] = {
+    {"lora-tiny", 32, 64},
+    {"lora-small", 64, 128},
+    {"lora-base", 128, 256},
+};
+
+/* xorshift fill, uniform in ±0.8388608, deterministic per seed */
+static void fill(float *x, size_t len, uint64_t seed) {
+    uint64_t s = seed * 6364136223846793005ull + 1442695040888963407ull;
+    for (size_t i = 0; i < len; i++) {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        x[i] = (float)((int64_t)(s >> 40) - (1 << 23)) * 1e-7f;
+    }
+}
+
+/* projection rows with E[AᵀA] = I: uniform entries rescaled to
+ * variance 1/R0 (rp::projection's second moment; distribution differs,
+ * the algebra only needs the moment) */
+static void fill_proj(float *a, size_t len, uint64_t seed) {
+    fill(a, len, seed);
+    float sd = sqrtf(1.0f / (float)R0) / sqrtf(0.8388608f * 0.8388608f / 3.0f);
+    for (size_t i = 0; i < len; i++) a[i] *= sd;
+}
+
+/* C[n x p] = A[n x k] . B[k x p] */
+static void mm(float *c, const float *a, const float *b, int n, int k, int p) {
+    memset(c, 0, (size_t)n * p * sizeof(float));
+    for (int i = 0; i < n; i++)
+        for (int kk = 0; kk < k; kk++) {
+            float aik = a[(size_t)i * k + kk];
+            const float *bk = b + (size_t)kk * p;
+            float *ci = c + (size_t)i * p;
+            for (int j = 0; j < p; j++) ci[j] += aik * bk[j];
+        }
+}
+
+/* C[n x p] = A[n x k] . B[p x k]ᵀ */
+static void mmt(float *c, const float *a, const float *b, int n, int k, int p) {
+    for (int i = 0; i < n; i++)
+        for (int j = 0; j < p; j++) {
+            float acc = 0.0f;
+            const float *ai = a + (size_t)i * k;
+            const float *bj = b + (size_t)j * k;
+            for (int kk = 0; kk < k; kk++) acc += ai[kk] * bj[kk];
+            c[(size_t)i * p + j] = acc;
+        }
+}
+
+/* solve (S + εI) X = RHS in place of rhs, S r x r row-major, RHS r x k —
+ * the solve_ridge port: ridge = RIDGE_EPS·mean|diag| + 1e-12, partial
+ * pivoting, forward elimination + back substitution */
+static int solve_ridge(const float *s_in, float *x, int r, int k) {
+    float diag = 0.0f;
+    for (int i = 0; i < r; i++) diag += fabsf(s_in[(size_t)i * r + i]);
+    float ridge = RIDGE_EPS * diag / (float)r + 1e-12f;
+    float *a = malloc((size_t)r * r * sizeof(float));
+    for (int i = 0; i < r; i++)
+        for (int j = 0; j < r; j++)
+            a[(size_t)i * r + j] = s_in[(size_t)i * r + j] + (i == j ? ridge : 0.0f);
+    for (int col = 0; col < r; col++) {
+        int piv = col;
+        float best = fabsf(a[(size_t)col * r + col]);
+        for (int row = col + 1; row < r; row++) {
+            float v = fabsf(a[(size_t)row * r + col]);
+            if (v > best) { best = v; piv = row; }
+        }
+        if (best < 1e-20f) { free(a); return -1; }
+        if (piv != col) {
+            for (int j = 0; j < r; j++) {
+                float t = a[(size_t)col * r + j];
+                a[(size_t)col * r + j] = a[(size_t)piv * r + j];
+                a[(size_t)piv * r + j] = t;
+            }
+            for (int j = 0; j < k; j++) {
+                float t = x[(size_t)col * k + j];
+                x[(size_t)col * k + j] = x[(size_t)piv * k + j];
+                x[(size_t)piv * k + j] = t;
+            }
+        }
+        float inv = 1.0f / a[(size_t)col * r + col];
+        for (int row = col + 1; row < r; row++) {
+            float f = a[(size_t)row * r + col] * inv;
+            if (f == 0.0f) continue;
+            for (int j = col; j < r; j++)
+                a[(size_t)row * r + j] -= f * a[(size_t)col * r + j];
+            for (int j = 0; j < k; j++)
+                x[(size_t)row * k + j] -= f * x[(size_t)col * k + j];
+        }
+    }
+    for (int col = r - 1; col >= 0; col--) {
+        float inv = 1.0f / a[(size_t)col * r + col];
+        for (int j = 0; j < k; j++) {
+            float v = x[(size_t)col * k + j];
+            for (int jj = col + 1; jj < r; jj++)
+                v -= a[(size_t)col * r + jj] * x[(size_t)jj * k + j];
+            x[(size_t)col * k + j] = v * inv;
+        }
+    }
+    free(a);
+    return 0;
+}
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec * 1e-9;
+}
+
+/* ½·mean((W − W*)²) */
+static double loss_of(const float *w, const float *wstar, size_t len) {
+    double acc = 0.0;
+    for (size_t i = 0; i < len; i++) {
+        double d = (double)w[i] - (double)wstar[i];
+        acc += d * d;
+    }
+    return 0.5 * acc / (double)len;
+}
+
+/* halve-at:1 on the κ-cycle clock, clamped to >= 1 — schedule.rs */
+static int rank_at(int cycle) {
+    int r = R0 >> (cycle > 30 ? 30 : cycle);
+    return r < 1 ? 1 : r;
+}
+
+typedef struct {
+    const char *tag;
+    int tau;
+    const char *schedule;
+    long state_bytes;
+    double lr, final_loss, steps_per_sec;
+} Row;
+
+/* run one compressor on one size; scratch buffers are caller-allocated
+ * at the largest size. `which`: 0 alg1, 1 alg2, 2 altlora, 3 adarank */
+static Row run_one(const Size *sz, int which, uint64_t seed0, int iters) {
+    int n = sz->n, m = sz->m;
+    float lr = lr_of(which, m);
+    size_t full = (size_t)n * m;
+    float *wstar = malloc(full * sizeof(float));
+    float *w = calloc(full, sizeof(float));
+    float *g = malloc(full * sizeof(float));
+    float *mom = calloc((size_t)n * R0, sizeof(float));
+    float *acc = calloc((size_t)n * R0, sizeof(float));
+    float *ralt = calloc((size_t)R0 * m, sizeof(float));
+    float *proj = malloc((size_t)R0 * m * sizeof(float));
+    float *proj2 = malloc((size_t)R0 * m * sizeof(float));
+    float *probe = malloc((size_t)R0 * n * sizeof(float));
+    float *ghat = malloc(full * sizeof(float));
+    float *tmp_rr = malloc((size_t)R0 * R0 * sizeof(float));
+    float *tmp_rm = malloc((size_t)R0 * m * sizeof(float));
+    float *tmp_nr = malloc((size_t)n * R0 * sizeof(float));
+    float *tmp_rn = malloc((size_t)R0 * n * sizeof(float));
+
+    /* rank-8 target, unit RMS */
+    {
+        float *u = malloc((size_t)n * R0 * sizeof(float));
+        float *v = malloc((size_t)R0 * m * sizeof(float));
+        fill(u, (size_t)n * R0, seed0 + 1);
+        fill(v, (size_t)R0 * m, seed0 + 2);
+        mm(wstar, u, v, n, R0, m);
+        double rms = 0.0;
+        for (size_t i = 0; i < full; i++) rms += (double)wstar[i] * wstar[i];
+        float s = (float)(1.0 / sqrt(rms / (double)full));
+        for (size_t i = 0; i < full; i++) wstar[i] *= s;
+        free(u);
+        free(v);
+    }
+
+    double t0 = 0.0;
+    int timed_steps = 0;
+    for (int rep = 0; rep < iters + 1; rep++) {
+        /* rep 0 is the measured trajectory (also warmup); later reps
+         * re-run the same schedule purely for a stable clock */
+        if (rep == 1) t0 = now_s();
+        memset(w, 0, full * sizeof(float));
+        memset(mom, 0, (size_t)n * R0 * sizeof(float));
+        int ra = R0;
+        for (int step = 0; step < STEPS; step++) {
+            int cycle = step / KAPPA;
+            /* accumulation rows resample every cycle (= every apply);
+             * momentum rows advance their seed on the κ-cycle clock so
+             * seed − 17 is always the previous subspace's seed */
+            uint64_t seed = (which == 0 || which == 2)
+                                ? seed0 + 131u * (uint64_t)step
+                                : seed0 + 31u * (uint64_t)(which + 1) +
+                                      17u * (uint64_t)cycle;
+            for (size_t i = 0; i < full; i++) g[i] = w[i] - wstar[i];
+            if (which == 0) {
+                /* flora-alg1: τ shared-seed micros, decompress mean */
+                fill_proj(proj, (size_t)R0 * m, seed);
+                memset(acc, 0, (size_t)n * R0 * sizeof(float));
+                for (int micro = 0; micro < TAU_ACC; micro++) {
+                    mmt(tmp_nr, g, proj, n, m, R0);
+                    for (size_t i = 0; i < (size_t)n * R0; i++) acc[i] += tmp_nr[i];
+                }
+                for (size_t i = 0; i < (size_t)n * R0; i++) acc[i] /= TAU_ACC;
+                mm(ghat, acc, proj, n, R0, m);
+            } else if (which == 2) {
+                /* altlora: dual sketches + alternating r x r solves */
+                fill_proj(proj, (size_t)R0 * m, seed);
+                fill_proj(probe, (size_t)R0 * n, seed + 0xA17);
+                memset(acc, 0, (size_t)n * R0 * sizeof(float));
+                memset(ralt, 0, (size_t)R0 * m * sizeof(float));
+                for (int micro = 0; micro < TAU_ACC; micro++) {
+                    mmt(tmp_nr, g, proj, n, m, R0);
+                    for (size_t i = 0; i < (size_t)n * R0; i++) acc[i] += tmp_nr[i];
+                    mm(tmp_rm, probe, g, R0, n, m);
+                    for (size_t i = 0; i < (size_t)R0 * m; i++) ralt[i] += tmp_rm[i];
+                }
+                for (size_t i = 0; i < (size_t)n * R0; i++) acc[i] /= TAU_ACC;
+                for (size_t i = 0; i < (size_t)R0 * m; i++) ralt[i] /= TAU_ACC;
+                /* A-step: (P Pᵀ + εI) A₁ = r̄ */
+                mmt(tmp_rr, probe, probe, R0, n, R0);
+                memcpy(tmp_rm, ralt, (size_t)R0 * m * sizeof(float));
+                if (solve_ridge(tmp_rr, tmp_rm, R0, m)) goto fail;
+                /* B-step: (A₁ Aᵀ)ᵀ B₁ᵀ = c̄ᵀ  ⇒ solve for B₁ᵀ [r x n] */
+                mmt(tmp_rr, tmp_rm, proj, R0, m, R0);
+                float *srt = malloc((size_t)R0 * R0 * sizeof(float));
+                for (int i = 0; i < R0; i++)
+                    for (int j = 0; j < R0; j++)
+                        srt[(size_t)i * R0 + j] = tmp_rr[(size_t)j * R0 + i];
+                for (int i = 0; i < R0; i++)
+                    for (int j = 0; j < n; j++)
+                        tmp_rn[(size_t)i * n + j] = acc[(size_t)j * R0 + i];
+                int bad = solve_ridge(srt, tmp_rn, R0, n);
+                free(srt);
+                if (bad) goto fail;
+                /* Ĝ = B₁ A₁ = (B₁ᵀ)ᵀ A₁ */
+                for (int i = 0; i < n; i++)
+                    for (int j = 0; j < R0; j++)
+                        tmp_nr[(size_t)i * R0 + j] = tmp_rn[(size_t)j * n + i];
+                mm(ghat, tmp_nr, tmp_rm, n, R0, m);
+            } else {
+                /* flora-alg2 / adarank: ranked momentum-in-subspace */
+                int resample = step > 0 && step % KAPPA == 0;
+                int ra_next = which == 3 ? rank_at(cycle) : R0;
+                if (resample) {
+                    if (ra_next < ra) /* truncate FIRST (schedule.rs) */
+                        for (int i = 0; i < n; i++)
+                            for (int j = ra_next; j < R0; j++)
+                                mom[(size_t)i * R0 + j] = 0.0f;
+                    ra = ra_next;
+                    /* transfer M ← (M A_old) A_newᵀ at the active rank
+                     * (mom rows are stride R0 — pack the live columns) */
+                    fill_proj(proj2, (size_t)R0 * m, seed - 17u);
+                    fill_proj(proj, (size_t)R0 * m, seed);
+                    for (int i = 0; i < n; i++)
+                        for (int j = 0; j < ra; j++)
+                            tmp_nr[(size_t)i * ra + j] = mom[(size_t)i * R0 + j];
+                    mm(ghat, tmp_nr, proj2, n, ra, m);
+                    mmt(tmp_nr, ghat, proj, n, m, ra);
+                    for (int i = 0; i < n; i++)
+                        for (int j = 0; j < R0; j++)
+                            mom[(size_t)i * R0 + j] =
+                                j < ra ? tmp_nr[(size_t)i * ra + j] : 0.0f;
+                } else {
+                    fill_proj(proj, (size_t)R0 * m, seed);
+                }
+                /* EMA on the live columns, then Ĝ = (r0/ra)·M A */
+                mmt(tmp_nr, g, proj, n, m, ra); /* first ra proj rows */
+                for (int i = 0; i < n; i++)
+                    for (int j = 0; j < ra; j++) {
+                        size_t at = (size_t)i * R0 + j;
+                        mom[at] = BETA * mom[at] +
+                                  (1.0f - BETA) * tmp_nr[(size_t)i * ra + j];
+                    }
+                for (int i = 0; i < n; i++)
+                    for (int j = 0; j < ra; j++)
+                        tmp_nr[(size_t)i * ra + j] = mom[(size_t)i * R0 + j];
+                mm(ghat, tmp_nr, proj, n, ra, m);
+                float comp = (float)R0 / (float)ra;
+                for (size_t i = 0; i < full; i++) ghat[i] *= comp;
+            }
+            for (size_t i = 0; i < full; i++) w[i] -= lr * ghat[i];
+            if (rep >= 1) timed_steps++;
+        }
+    }
+    double elapsed = now_s() - t0;
+
+    Row out;
+    out.tag = which == 0   ? "flora-alg1"
+              : which == 1 ? "flora-alg2"
+              : which == 2 ? "altlora"
+                           : "adarank";
+    out.tau = (which == 0 || which == 2) ? TAU_ACC : 1;
+    out.schedule = which == 3 ? "halve-at:1" : "fixed";
+    out.state_bytes = which == 2 ? 4L * (n * R0 + R0 * m) : 4L * n * R0;
+    out.lr = lr;
+    out.final_loss = loss_of(w, wstar, full);
+    out.steps_per_sec = timed_steps > 0 ? timed_steps / elapsed : 0.0;
+    goto done;
+fail:
+    fprintf(stderr, "solve collapse on %s which=%d\n", sz->name, which);
+    exit(1);
+done:
+    free(wstar); free(w); free(g); free(mom); free(acc); free(ralt);
+    free(proj); free(proj2); free(probe); free(ghat);
+    free(tmp_rr); free(tmp_rm); free(tmp_nr); free(tmp_rn);
+    return out;
+}
+
+int main(int argc, char **argv) {
+    int iters = argc > 1 ? atoi(argv[1]) : 20;
+    if (iters < 1) iters = 1;
+    printf("{\n  \"provenance\": \"c-mirror ablation_mirror\",\n  \"sizes\": [\n");
+    int first = 1;
+    for (size_t si = 0; si < sizeof(SIZES) / sizeof(SIZES[0]); si++) {
+        const Size *sz = &SIZES[si];
+        for (int which = 0; which < 4; which++) {
+            Row r = run_one(sz, which, 9000u + 100u * si, iters);
+            printf("%s      {\"model\": \"%s/%s\", \"base_model\": \"%s\", "
+                   "\"compressor\": \"%s\", \"rank\": %d, \"tau\": %d, "
+                   "\"rank_schedule\": \"%s\", \"optimizer\": \"sgd\", \"lr\": %.6f, "
+                   "\"steps\": %d, \"steps_per_sec\": %.3f, \"tok_s\": null, "
+                   "\"method_state_bytes\": %ld, \"params_bytes\": %ld, "
+                   "\"state_ratio\": %.6f, \"final_loss\": %.6f}",
+                   first ? "" : ",\n", sz->name, r.tag, sz->name, r.tag, R0,
+                   r.tau, r.schedule, r.lr, STEPS, r.steps_per_sec, r.state_bytes,
+                   4L * sz->n * sz->m,
+                   (double)r.state_bytes / (double)(4L * sz->n * sz->m),
+                   r.final_loss);
+            first = 0;
+            fflush(stdout);
+        }
+    }
+    printf("\n  ]\n}\n");
+    return 0;
+}

@@ -36,10 +36,11 @@ use crate::util::json::{self, Json};
 pub const SCHEMA_VERSION: usize = 2;
 
 /// The committed trajectory files and the `bench` name each must carry.
-pub const COMMITTED_FILES: [(&str, &str); 3] = [
+pub const COMMITTED_FILES: [(&str, &str); 4] = [
     ("BENCH_kernels.json", "micro_kernels"),
     ("BENCH_serving.json", "serving"),
     ("BENCH_dp.json", "dp"),
+    ("BENCH_ablation.json", "ablation"),
 ];
 
 /// What is wrong with a metric value ([`ContractError::BadMetric`]).

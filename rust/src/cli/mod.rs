@@ -94,6 +94,10 @@ COMMANDS:
     train       train a model with a chosen method
                   --model lm-small --task sum|mt|lm|vit --method none|naive|flora|lora|galore
                   --rank N --optimizer sgd|adam|adafactor|adafactor_nofactor
+                  --compressor flora|altlora|adarank (flora-family methods
+                  only; picks the accumulate/apply algebra)
+                  --rank-schedule fixed|linear-decay:N|halve-at:N (adarank
+                  shrink schedule, in kappa-cycle units)
                   --lr F --steps N --tau N
                   --kappa N --batch N --seed N --config file.toml
                   --parallelism N (kernel thread budget; results are

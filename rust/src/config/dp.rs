@@ -152,6 +152,23 @@ impl DpConfig {
     /// and a `workers × parallelism` product within the pool budget.
     pub fn validate(&self) -> Result<(), String> {
         let t = &self.train;
+        // the adaptive-rank grid is single-process only: the dp reduce
+        // sums fixed-shape [n, r] sketches across workers, and neither
+        // AltLoRA's dual sketch nor AdaRank's shrinking subspace has a
+        // wire format yet. Reject them by name, ahead of the generic
+        // non-Flora arm, so the hint points at the right tier.
+        if matches!(
+            t.method,
+            MethodSpec::AltLora { .. } | MethodSpec::AdaRank { .. }
+        ) {
+            return Err(format!(
+                "train-dp exchanges Flora-compressed gradients; compressor {} is \
+                 single-process only (rust/src/opt/{}.rs) — drop --compressor or \
+                 use `flora train`",
+                compressor_tag(&t.method),
+                compressor_file(&t.method),
+            ));
+        }
         if !matches!(t.method, MethodSpec::Flora { .. }) {
             return Err(format!(
                 "train-dp exchanges Flora-compressed gradients; method {:?} has no \
@@ -188,6 +205,22 @@ impl DpConfig {
             MethodSpec::Flora { rank } => rank,
             _ => 0,
         }
+    }
+}
+
+fn compressor_tag(m: &MethodSpec) -> &'static str {
+    match m {
+        MethodSpec::AltLora { .. } => "altlora",
+        MethodSpec::AdaRank { .. } => "adarank",
+        _ => "flora",
+    }
+}
+
+fn compressor_file(m: &MethodSpec) -> &'static str {
+    match m {
+        MethodSpec::AltLora { .. } => "altlora",
+        MethodSpec::AdaRank { .. } => "schedule",
+        _ => "flora",
     }
 }
 
@@ -235,6 +268,20 @@ mod tests {
         let mut c = DpConfig::default();
         c.train.task = TaskKind::Sum;
         assert!(c.validate().unwrap_err().contains("LM"));
+    }
+
+    #[test]
+    fn rejects_the_single_process_compressor_grid_by_name() {
+        let mut c = DpConfig::default();
+        c.train.method = MethodSpec::AltLora { rank: 8 };
+        let e = c.validate().unwrap_err();
+        assert!(e.contains("compressor altlora is single-process only"), "{e}");
+        assert!(e.contains("rust/src/opt/altlora.rs"), "{e}");
+        c.train.method = MethodSpec::AdaRank { rank: 8 };
+        let e = c.validate().unwrap_err();
+        assert!(e.contains("compressor adarank is single-process only"), "{e}");
+        assert!(e.contains("rust/src/opt/schedule.rs"), "{e}");
+        assert!(e.contains("flora train"), "{e}");
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 
 use super::toml::{parse_toml, TomlValue};
 use crate::coordinator::method::MethodSpec;
-use crate::opt::OptimizerKind;
+use crate::opt::{CompressorKind, OptimizerKind, RankSchedule};
 use crate::tensor::Parallelism;
 
 /// Which synthetic workload drives training (DESIGN.md §4 mappings).
@@ -81,6 +81,11 @@ pub struct TrainConfig {
     /// values above 1 — `flora train` rejects them loudly. Results are
     /// bit-identical at every setting; see `docs/DISTRIBUTED.md`.
     pub workers: usize,
+    /// adaptive-rank schedule for the `adarank` compressor
+    /// (`--rank-schedule` / `train.rank_schedule`): the momentum
+    /// subspace shrinks at κ-resample boundaries. Ignored by the other
+    /// compressors (they run at the fixed method rank).
+    pub rank_schedule: RankSchedule,
 }
 
 impl TrainConfig {
@@ -116,6 +121,7 @@ impl Default for TrainConfig {
             eval_samples: 16,
             parallelism: Parallelism::single(),
             workers: 1,
+            rank_schedule: RankSchedule::Fixed,
         }
     }
 }
@@ -155,6 +161,7 @@ impl ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
         let mut method_name: Option<String> = None;
         let mut rank: Option<u64> = None;
+        let mut compressor: Option<CompressorKind> = None;
         for (k, v) in map {
             match k.as_str() {
                 "name" => cfg.name = req_str(k, v)?,
@@ -163,6 +170,12 @@ impl ExperimentConfig {
                 "train.task" => cfg.train.task = TaskKind::parse(&req_str(k, v)?)?,
                 "train.method" => method_name = Some(req_str(k, v)?),
                 "train.rank" => rank = Some(req_int(k, v)? as u64),
+                "train.compressor" => {
+                    compressor = Some(CompressorKind::parse(&req_str(k, v)?)?)
+                }
+                "train.rank_schedule" => {
+                    cfg.train.rank_schedule = RankSchedule::parse(&req_str(k, v)?)?
+                }
                 "train.optimizer" => {
                     cfg.train.optimizer = OptimizerKind::parse(&req_str(k, v)?)?
                 }
@@ -193,6 +206,9 @@ impl ExperimentConfig {
         }
         if let Some(name) = method_name {
             cfg.train.method = MethodSpec::parse(&name, rank.unwrap_or(16) as usize)?;
+        }
+        if let Some(kind) = compressor {
+            cfg.train.method = cfg.train.method.with_compressor(kind)?;
         }
         if cfg.train.tau == 0 || cfg.train.batch == 0 {
             return Err("tau and batch must be >= 1".into());
@@ -272,6 +288,46 @@ mod tests {
         assert_eq!(c.train.optimizer, OptimizerKind::Adafactor);
         assert_eq!(c.train.tau, 16);
         assert_eq!(c.train.lr, 0.03);
+    }
+
+    #[test]
+    fn compressor_and_rank_schedule_keys() {
+        let doc = r#"
+            [train]
+            method = "flora"
+            rank = 8
+            compressor = "altlora"
+        "#;
+        let c = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(c.train.method, MethodSpec::AltLora { rank: 8 });
+        let doc = r#"
+            [train]
+            method = "flora"
+            rank = 16
+            compressor = "adarank"
+            rank_schedule = "halve-at:3"
+        "#;
+        let c = ExperimentConfig::from_toml_str(doc).unwrap();
+        assert_eq!(c.train.method, MethodSpec::AdaRank { rank: 16 });
+        assert_eq!(c.train.rank_schedule, RankSchedule::HalveAt { every: 3 });
+        // default schedule is fixed; bad values are loud
+        assert_eq!(
+            ExperimentConfig::default().train.rank_schedule,
+            RankSchedule::Fixed
+        );
+        let e = ExperimentConfig::from_toml_str(r#"train.compressor = "svd""#)
+            .unwrap_err();
+        assert!(e.contains("unknown compressor"), "{e}");
+        let e =
+            ExperimentConfig::from_toml_str(r#"train.rank_schedule = "decay""#)
+                .unwrap_err();
+        assert!(e.contains("rank schedule"), "{e}");
+        // compressor only re-routes the flora family
+        let e = ExperimentConfig::from_toml_str(
+            "train.method = \"galore\"\ntrain.compressor = \"adarank\"",
+        )
+        .unwrap_err();
+        assert!(e.contains("compressor"), "{e}");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! Optimizer-suffixed names take the typed [`OptimizerKind`], so a config
 //! can only ever ask for executables a base optimizer actually exists for.
 
-use crate::opt::OptimizerKind;
+use crate::opt::{CompressorKind, OptimizerKind};
 
 /// The optimizer-state compression method under test.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,6 +22,12 @@ pub enum MethodSpec {
     Lora { rank: usize },
     /// GaLore with projection rank r
     Galore { rank: usize },
+    /// AltLoRA alternating-projection compressor of rank r (dual
+    /// sketches + best rank-r reconstruction; `--compressor altlora`)
+    AltLora { rank: usize },
+    /// Flora Algorithm-2 momentum under an adaptive rank schedule
+    /// (master rank r, shrink-and-migrate; `--compressor adarank`)
+    AdaRank { rank: usize },
 }
 
 impl MethodSpec {
@@ -33,10 +39,37 @@ impl MethodSpec {
             "flora_notransfer" => Ok(MethodSpec::FloraNoTransfer { rank }),
             "lora" => Ok(MethodSpec::Lora { rank }),
             "galore" => Ok(MethodSpec::Galore { rank }),
+            "altlora" => Ok(MethodSpec::AltLora { rank }),
+            "adarank" => Ok(MethodSpec::AdaRank { rank }),
             _ => Err(format!(
-                "unknown method {name:?} (want none|naive|flora|lora|galore)"
+                "unknown method {name:?} (want \
+                 none|naive|flora|lora|galore|altlora|adarank)"
             )),
         }
+    }
+
+    /// Re-route a flora-family method through another compressor algebra
+    /// (`--compressor` / `[train] compressor`). Only the Flora baseline
+    /// re-routes — every other method has no rank-r compressed
+    /// accumulator for the compressor to act on.
+    pub fn with_compressor(self, c: CompressorKind) -> Result<Self, String> {
+        let rank = match self {
+            MethodSpec::Flora { rank }
+            | MethodSpec::AltLora { rank }
+            | MethodSpec::AdaRank { rank } => rank,
+            other => {
+                return Err(format!(
+                    "--compressor {c} requires a flora-family method \
+                     (--method flora --rank R), got {}",
+                    other.label()
+                ))
+            }
+        };
+        Ok(match c {
+            CompressorKind::Flora => MethodSpec::Flora { rank },
+            CompressorKind::AltLora => MethodSpec::AltLora { rank },
+            CompressorKind::AdaRank => MethodSpec::AdaRank { rank },
+        })
     }
 
     pub fn label(&self) -> String {
@@ -49,6 +82,8 @@ impl MethodSpec {
             }
             MethodSpec::Lora { rank } => format!("LoRA({rank})"),
             MethodSpec::Galore { rank } => format!("GaLore({rank})"),
+            MethodSpec::AltLora { rank } => format!("AltLoRA({rank})"),
+            MethodSpec::AdaRank { rank } => format!("AdaRank({rank})"),
         }
     }
 
@@ -57,7 +92,9 @@ impl MethodSpec {
             MethodSpec::Flora { rank }
             | MethodSpec::FloraNoTransfer { rank }
             | MethodSpec::Lora { rank }
-            | MethodSpec::Galore { rank } => Some(*rank),
+            | MethodSpec::Galore { rank }
+            | MethodSpec::AltLora { rank }
+            | MethodSpec::AdaRank { rank } => Some(*rank),
             _ => None,
         }
     }
@@ -72,8 +109,16 @@ impl MethodSpec {
             MethodSpec::None => crate::memory::Method::None,
             MethodSpec::Naive => crate::memory::Method::Naive,
             MethodSpec::Flora { rank }
-            | MethodSpec::FloraNoTransfer { rank } => {
+            | MethodSpec::FloraNoTransfer { rank }
+            // AdaRank allocates the Flora master-rank state and only
+            // shrinks from there; AltLora's dual sketch is ~2x the Flora
+            // accumulator on square-ish matrices — the accountant books
+            // the allocation-time (master) footprint for both
+            | MethodSpec::AdaRank { rank } => {
                 crate::memory::Method::Flora(*rank as u64)
+            }
+            MethodSpec::AltLora { rank } => {
+                crate::memory::Method::Flora(2 * *rank as u64)
             }
             MethodSpec::Lora { rank } => crate::memory::Method::Lora(*rank as u64),
             MethodSpec::Galore { rank } => crate::memory::Method::Galore(*rank as u64),
@@ -96,10 +141,13 @@ impl MethodSpec {
     pub fn micro_exe(&self, model: &str) -> Option<String> {
         match self {
             MethodSpec::None | MethodSpec::Galore { .. } => None,
-            MethodSpec::FloraNoTransfer { .. } => None,
+            MethodSpec::FloraNoTransfer { .. } | MethodSpec::AdaRank { .. } => None,
             MethodSpec::Naive => Some(format!("{model}/micro_naive")),
             MethodSpec::Flora { rank } => {
                 Some(format!("{model}/micro_flora_r{rank}"))
+            }
+            MethodSpec::AltLora { rank } => {
+                Some(format!("{model}/micro_r{rank}_altlora"))
             }
             MethodSpec::Lora { rank } => {
                 Some(format!("{model}/lora_r{rank}_micro"))
@@ -111,12 +159,15 @@ impl MethodSpec {
     pub fn update_exe(&self, model: &str, optimizer: OptimizerKind) -> Option<String> {
         match self {
             MethodSpec::None | MethodSpec::Galore { .. } => None,
-            MethodSpec::FloraNoTransfer { .. } => None,
+            MethodSpec::FloraNoTransfer { .. } | MethodSpec::AdaRank { .. } => None,
             MethodSpec::Naive => {
                 Some(format!("{model}/update_naive_{optimizer}"))
             }
             MethodSpec::Flora { rank } => {
                 Some(format!("{model}/update_flora_r{rank}_{optimizer}"))
+            }
+            MethodSpec::AltLora { rank } => {
+                Some(format!("{model}/update_r{rank}_{optimizer}_altlora"))
             }
             MethodSpec::Lora { rank } => {
                 Some(format!("{model}/lora_r{rank}_update_{optimizer}"))
@@ -133,6 +184,7 @@ impl MethodSpec {
     pub fn momentum_exe(&self, model: &str, optimizer: OptimizerKind) -> Option<String> {
         match self {
             MethodSpec::None | MethodSpec::Galore { .. } => None,
+            MethodSpec::AltLora { .. } => None,
             MethodSpec::FloraNoTransfer { rank } => Some(format!(
                 "{model}/mom_step_flora_notransfer_r{rank}_{optimizer}"
             )),
@@ -141,6 +193,9 @@ impl MethodSpec {
             }
             MethodSpec::Flora { rank } => {
                 Some(format!("{model}/mom_step_flora_r{rank}_{optimizer}"))
+            }
+            MethodSpec::AdaRank { rank } => {
+                Some(format!("{model}/mom_step_r{rank}_{optimizer}_adarank"))
             }
             MethodSpec::Lora { rank } => {
                 Some(format!("{model}/lora_r{rank}_mom_step_{optimizer}"))
@@ -176,6 +231,12 @@ impl MethodSpec {
         match self {
             MethodSpec::Flora { rank } => {
                 format!("{model}/step_flora_r{rank}_{optimizer}")
+            }
+            MethodSpec::AltLora { rank } => {
+                format!("{model}/step_r{rank}_{optimizer}_altlora")
+            }
+            MethodSpec::AdaRank { rank } => {
+                format!("{model}/step_r{rank}_{optimizer}_adarank")
             }
             _ => format!("{model}/step_{optimizer}"),
         }
@@ -232,6 +293,63 @@ mod tests {
         assert!(none.micro_exe("m").is_none());
         assert!(none.update_exe("m", OptimizerKind::Adafactor).is_none());
         assert!(none.momentum_exe("m", OptimizerKind::Adafactor).is_none());
+    }
+
+    #[test]
+    fn compressor_exe_names_match_native_catalog() {
+        let af = OptimizerKind::Adafactor;
+        let alt = MethodSpec::AltLora { rank: 8 };
+        assert_eq!(alt.micro_exe("lora-tiny").unwrap(), "lora-tiny/micro_r8_altlora");
+        assert_eq!(
+            alt.update_exe("lora-tiny", af).unwrap(),
+            "lora-tiny/update_r8_adafactor_altlora"
+        );
+        assert!(alt.momentum_exe("lora-tiny", af).is_none());
+        assert_eq!(
+            alt.vit_step_exe("vit-tiny", OptimizerKind::Sgd),
+            "vit-tiny/step_r8_sgd_altlora"
+        );
+        let ada = MethodSpec::AdaRank { rank: 8 };
+        assert!(ada.micro_exe("lora-tiny").is_none());
+        assert!(ada.update_exe("lora-tiny", af).is_none());
+        assert_eq!(
+            ada.momentum_exe("lora-tiny", af).unwrap(),
+            "lora-tiny/mom_step_r8_adafactor_adarank"
+        );
+        assert_eq!(
+            ada.vit_step_exe("vit-tiny", af),
+            "vit-tiny/step_r8_adafactor_adarank"
+        );
+        assert_eq!(MethodSpec::parse("altlora", 8).unwrap(), alt);
+        assert_eq!(MethodSpec::parse("adarank", 8).unwrap(), ada);
+        assert_eq!(alt.label(), "AltLoRA(8)");
+        assert_eq!(ada.label(), "AdaRank(8)");
+        assert_eq!(alt.rank(), Some(8));
+        assert_eq!(ada.rank(), Some(8));
+    }
+
+    #[test]
+    fn with_compressor_reroutes_flora_family_only() {
+        let flora = MethodSpec::Flora { rank: 16 };
+        assert_eq!(
+            flora.with_compressor(CompressorKind::AltLora).unwrap(),
+            MethodSpec::AltLora { rank: 16 }
+        );
+        assert_eq!(
+            flora.with_compressor(CompressorKind::AdaRank).unwrap(),
+            MethodSpec::AdaRank { rank: 16 }
+        );
+        assert_eq!(
+            MethodSpec::AltLora { rank: 4 }
+                .with_compressor(CompressorKind::Flora)
+                .unwrap(),
+            MethodSpec::Flora { rank: 4 }
+        );
+        let err = MethodSpec::Lora { rank: 8 }
+            .with_compressor(CompressorKind::AltLora)
+            .unwrap_err();
+        assert!(err.contains("flora-family"), "{err}");
+        assert!(MethodSpec::None.with_compressor(CompressorKind::AdaRank).is_err());
     }
 
     #[test]

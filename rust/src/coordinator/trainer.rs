@@ -55,6 +55,12 @@ impl Mode {
         match cfg.method {
             MethodSpec::Galore { .. } => Mode::Galore,
             MethodSpec::None => Mode::Plain,
+            // the compressor grid pins its mode regardless of tau:
+            // AltLoRA only has the dual-sketch accumulate/apply algebra
+            // (τ=1 is a one-micro cycle), AdaRank only the ranked
+            // momentum subspace.
+            MethodSpec::AltLora { .. } => Mode::Accumulation,
+            MethodSpec::AdaRank { .. } => Mode::Momentum,
             _ => {
                 if cfg.tau > 1 {
                     Mode::Accumulation
@@ -314,6 +320,21 @@ impl Trainer {
                         .scalar(ScalarKey::SeedCur, scalar_u32(tick.seed_cur))
                         .scalar(ScalarKey::SeedNext, scalar_u32(tick.seed_next))
                         .scalar(ScalarKey::Resample, scalar_f32(tick.resample));
+                }
+                // adarank steps additionally consume the scheduled active
+                // ranks: rank_cur is the rank the momentum lived at going
+                // into this step, rank_next the schedule's rank for the
+                // cycle this step lands in (they differ exactly on
+                // shrinking resample boundaries).
+                if StepIo::wants(&exe.info, ScalarKey::RankCur) {
+                    let r0 = self.cfg.method.rank().unwrap_or(0);
+                    let kappa = self.cfg.kappa.max(1);
+                    let sched = self.cfg.rank_schedule;
+                    let cur = sched.rank_at(r0, step.saturating_sub(1) / kappa);
+                    let next = sched.rank_at(r0, step / kappa);
+                    io = io
+                        .scalar(ScalarKey::RankCur, scalar_f32(cur as f32))
+                        .scalar(ScalarKey::RankNext, scalar_f32(next as f32));
                 }
                 loss = self
                     .run_step(&exe, &io)?
@@ -585,6 +606,18 @@ mod tests {
         assert_eq!(Mode::of(&cfg), Mode::Plain);
         cfg.method = MethodSpec::Galore { rank: 8 };
         assert_eq!(Mode::of(&cfg), Mode::Galore);
+        cfg.task = TaskKind::Sum;
+        // the compressor-grid methods pin their mode regardless of tau
+        cfg.method = MethodSpec::AltLora { rank: 8 };
+        for tau in [1, 16] {
+            cfg.tau = tau;
+            assert_eq!(Mode::of(&cfg), Mode::Accumulation, "tau={tau}");
+        }
+        cfg.method = MethodSpec::AdaRank { rank: 8 };
+        for tau in [1, 16] {
+            cfg.tau = tau;
+            assert_eq!(Mode::of(&cfg), Mode::Momentum, "tau={tau}");
+        }
         cfg.task = TaskKind::Vit;
         cfg.method = MethodSpec::Flora { rank: 8 };
         assert_eq!(Mode::of(&cfg), Mode::VitStep);
@@ -607,6 +640,16 @@ mod tests {
         assert_eq!(
             Trainer::main_exe_name(&cfg, Mode::Momentum).unwrap(),
             "lm-tiny/mom_step_flora_r8_adafactor"
+        );
+        cfg.method = MethodSpec::AdaRank { rank: 8 };
+        assert_eq!(
+            Trainer::main_exe_name(&cfg, Mode::Momentum).unwrap(),
+            "lm-tiny/mom_step_r8_adafactor_adarank"
+        );
+        cfg.method = MethodSpec::AltLora { rank: 4 };
+        assert_eq!(
+            Trainer::main_exe_name(&cfg, Mode::Accumulation).unwrap(),
+            "lm-tiny/micro_r4_altlora"
         );
     }
 }

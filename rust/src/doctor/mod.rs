@@ -166,6 +166,14 @@ pub fn run(cfg: &DoctorConfig) -> DoctorReport {
     check("smoke:vit".into(), &move || {
         smoke_train("vit-tiny", TaskKind::Vit, MethodSpec::Flora { rank: 4 }, steps, par)
     });
+    // the adaptive-rank compressor grid rides the same smoke: one tiny
+    // run per compressor proves the catalog stamped out its variants
+    check("smoke:altlora".into(), &move || {
+        smoke_train("lora-tiny", TaskKind::Lm, MethodSpec::AltLora { rank: 4 }, steps, par)
+    });
+    check("smoke:adarank".into(), &move || {
+        smoke_train("lora-tiny", TaskKind::Lm, MethodSpec::AdaRank { rank: 4 }, steps, par)
+    });
     check("smoke:serve".into(), &smoke_serve);
     check("smoke:dp".into(), &move || smoke_dp(dp_steps, par));
     for (file, bench) in contract::COMMITTED_FILES {

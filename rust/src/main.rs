@@ -5,7 +5,7 @@ use flora::config::{ExperimentConfig, TaskKind};
 use flora::coordinator::{MethodSpec, Trainer};
 use flora::data::images::ImageTask;
 use flora::memory::{self, Dims, OptKind, StateRole};
-use flora::opt::OptimizerKind;
+use flora::opt::{CompressorKind, OptimizerKind, RankSchedule};
 use flora::pilot;
 use flora::runtime::Manifest;
 use flora::util::human;
@@ -62,6 +62,13 @@ fn experiment_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(m) = args.flag("method") {
         let rank = args.usize_flag("rank", cfg.train.method.rank().unwrap_or(16))?;
         cfg.train.method = MethodSpec::parse(m, rank)?;
+    }
+    if let Some(c) = args.flag("compressor") {
+        cfg.train.method =
+            cfg.train.method.with_compressor(CompressorKind::parse(c)?)?;
+    }
+    if let Some(s) = args.flag("rank-schedule") {
+        cfg.train.rank_schedule = RankSchedule::parse(s)?;
     }
     if let Some(o) = args.flag("optimizer") {
         cfg.train.optimizer = OptimizerKind::parse(o)?;
@@ -426,9 +433,15 @@ fn cmd_train_dp(args: &Args) -> Result<(), String> {
     if let Some(o) = args.flag("optimizer") {
         cfg.train.optimizer = OptimizerKind::parse(o)?;
     }
-    // dp is always flora — --rank adjusts the method in place
+    // dp is always flora — --rank adjusts the method in place, and any
+    // --compressor routes through validate(), which rejects the
+    // single-process grid (altlora/adarank) with the tier hint
     cfg.train.method =
         MethodSpec::Flora { rank: args.usize_flag("rank", cfg.rank())? };
+    if let Some(c) = args.flag("compressor") {
+        cfg.train.method =
+            cfg.train.method.with_compressor(CompressorKind::parse(c)?)?;
+    }
     cfg.train.lr = args.f32_flag("lr", cfg.train.lr)?;
     cfg.train.steps = args.usize_flag("steps", cfg.train.steps)?;
     cfg.train.tau = args.usize_flag("tau", cfg.train.tau)?;

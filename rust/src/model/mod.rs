@@ -79,9 +79,11 @@ pub(crate) fn zero_grads(shapes: &[(String, [usize; 2])]) -> ParamSet {
         .collect()
 }
 
-/// Shared scaffolding for the model-family gradient tests.
-#[cfg(test)]
-pub(crate) mod testutil {
+/// Shared scaffolding for the model-family gradient tests and the
+/// compressor conformance harness (rust/tests/compressors.rs) — public
+/// so integration tests can drive it, compiled into the library either
+/// way (it is a handful of small helpers).
+pub mod testutil {
     use super::ParamSet;
     use crate::tensor::Matrix;
     use crate::util::rng::Rng;
@@ -89,7 +91,7 @@ pub(crate) mod testutil {
     /// Directional finite-difference check shared by the transformer and
     /// ViT tests: draws a random direction `u` over EVERY parameter and
     /// compares `<grads, u>` against `(f(θ+εu) − f(θ−εu)) / 2ε`.
-    pub(crate) fn assert_directional_fd(
+    pub fn assert_directional_fd(
         params: &ParamSet,
         grads: &ParamSet,
         loss: impl Fn(&ParamSet) -> f32,
@@ -129,6 +131,25 @@ pub(crate) mod testutil {
             (fd - analytic).abs() < rtol * (1.0 + fd.abs().max(analytic.abs())),
             "fd={fd} analytic={analytic}"
         );
+    }
+
+    /// Smoothed descent statistic shared by the integration matrix and
+    /// the compressor conformance harness: mean of the first `k` losses
+    /// and the drop from that head to the mean of the last `k`.
+    pub fn smoothed_drop(losses: &[f32], k: usize) -> (f32, f32) {
+        assert!(losses.len() >= k && k > 0, "need >= {k} losses");
+        let head: f32 = losses[..k].iter().sum::<f32>() / k as f32;
+        let tail: f32 = losses[losses.len() - k..].iter().sum::<f32>() / k as f32;
+        (head, head - tail)
+    }
+
+    /// Raw-bits equality over two loss curves — the determinism
+    /// assertion every compressor must pass (`==` on f32 would accept
+    /// -0.0 vs 0.0 and reject NaN == NaN; bits do neither).
+    pub fn assert_bits_equal(label: &str, a: &[f32], b: &[f32]) {
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb, "{label}: loss curves differ in raw bits");
     }
 }
 

@@ -1,0 +1,382 @@
+//! `AltLoraCompressor` — alternating-projection gradient compression.
+//!
+//! AltLoRA's claim (PAPERS.md) is that *solving* for the best rank-r
+//! factors of the accumulated gradient beats reading it back through the
+//! fixed random projection it was compressed with. The catch for a
+//! sublinear-state compressor: the full gradient is never materialized
+//! between micro-steps, so the solve must run on sketches. This module
+//! keeps TWO seeded sketches per parameter `G ∈ R^{n×m}` (both linear in
+//! `G`, so Algorithm-1 accumulation works unchanged):
+//!
+//! * the right sketch `C = Σ G Aᵀ ∈ R^{n×r}` — Flora's own accumulator,
+//!   with `A ∈ R^{r×m}` regenerated from the cycle seed, and
+//! * the left sketch `R = Σ P G ∈ R^{r×m}` — a probe `P ∈ R^{r×n}`
+//!   regenerated from a seed *derived* from the same cycle seed, so the
+//!   `rp` seed lifecycle (per-parameter derivation, cycle advance)
+//!   carries over untouched.
+//!
+//! At cycle end one alternating-projection pass reconstructs the best
+//! rank-r estimate from the two sketches (mean gradients `c̄ = C/τ`,
+//! `r̄ = R/τ`):
+//!
+//! 1. **A-step** — sketched least squares for the right factor with the
+//!    left factor pinned at `Pᵀ`: `A₁ = (P Pᵀ + εI)⁻¹ r̄` (an SPD r×r
+//!    solve).
+//! 2. **B-step** — exact right-sketch consistency `B₁ (A₁ Aᵀ) = c̄`
+//!    (a general r×r solve with partial pivoting), so the estimate
+//!    `Ĝ = B₁ A₁` reproduces the observed accumulator: `Ĝ Aᵀ = c̄`.
+//!
+//! When the mean gradient has rank <= r the reconstruction is *exact*
+//! for generic sketches — strictly better than Flora's `c̄ A`, which
+//! only approaches `Ḡ` in expectation over seeds. The base optimizer
+//! sees the full-size estimate, exactly like [`super::FloraCompressor`].
+
+use super::base::BaseOptimizer;
+use crate::rp;
+use crate::tensor::Matrix;
+use crate::util::rng::derive_seed;
+
+/// Tag deriving the left-probe seed from a cycle's right-projection seed.
+const LEFT_PROBE_TAG: u64 = 0xA17_10_2A;
+
+/// Relative ridge added to both r×r solves (scaled by the mean diagonal
+/// magnitude, so conditioning is dimensionless).
+const RIDGE_EPS: f32 = 1e-4;
+
+/// Alternating-projection compressor over one parameter matrix: dual
+/// seeded sketches in, best rank-r gradient estimate out, any
+/// [`BaseOptimizer`] underneath.
+///
+/// # Example: one accumulate→apply cycle
+///
+/// ```
+/// use flora::opt::{AltLoraCompressor, BaseOptimizer, Sgd};
+/// use flora::tensor::Matrix;
+///
+/// let comp = AltLoraCompressor::new(Sgd, 4);
+/// let mut w = Matrix::zeros(8, 16);
+/// let mut acc = Matrix::zeros(8, 4); // right sketch [n, r]
+/// let mut ralt = Matrix::zeros(4, 16); // left sketch [r, m]
+/// let mut opt_state = comp.base().init_state(8, 16);
+/// let g = Matrix::from_fn(8, 16, |i, j| ((i + 2 * j) % 5) as f32 * 0.1);
+///
+/// let seed = comp.param_seed(7, 0);
+/// comp.accumulate(&mut acc, &mut ralt, &g, seed); // both sketches, one seed
+/// comp.accumulate(&mut acc, &mut ralt, &g, seed);
+/// comp.apply_accumulated(&mut w, &acc, &ralt, &mut opt_state, seed, 2.0, 0.1, 0.0)
+///     .unwrap();
+/// assert!(w.frobenius_norm() > 0.0);
+/// ```
+#[derive(Clone, Debug)]
+pub struct AltLoraCompressor<O> {
+    base: O,
+    rank: usize,
+}
+
+impl<O: BaseOptimizer> AltLoraCompressor<O> {
+    pub fn new(base: O, rank: usize) -> Self {
+        Self { base, rank }
+    }
+
+    pub fn base(&self) -> &O {
+        &self.base
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Per-parameter cycle seed — same derivation as Flora Algorithm 1.
+    pub fn param_seed(&self, cycle_seed: u64, index: usize) -> u64 {
+        rp::param_seed(cycle_seed, index)
+    }
+
+    /// Right projection A ∈ R^{r×m} from the cycle seed (Flora's law).
+    pub fn right_projection(&self, seed: u64, m: usize) -> Matrix {
+        rp::projection(seed, self.rank, m)
+    }
+
+    /// Left probe P ∈ R^{r×n} from the derived probe seed.
+    pub fn left_probe(&self, seed: u64, n: usize) -> Matrix {
+        rp::projection(derive_seed(seed, LEFT_PROBE_TAG), self.rank, n)
+    }
+
+    /// Micro step: `acc += G Aᵀ` and `ralt += P G`, both regenerated from
+    /// the one cycle seed shared by all τ micros. Linearity of both
+    /// sketches is what makes shared-seed accumulation exact.
+    pub fn accumulate(&self, acc: &mut Matrix, ralt: &mut Matrix, grad: &Matrix, seed: u64) {
+        let a = self.right_projection(seed, grad.cols);
+        rp::compress_accumulate(acc, grad, &a);
+        let p = self.left_probe(seed, grad.rows);
+        let left = p.matmul(grad);
+        ralt.add_scaled_inplace(&left, 1.0);
+    }
+
+    /// The alternating-projection estimate Ĝ ∈ R^{n×m} from the two mean
+    /// sketches (`tau` divides both accumulators).
+    pub fn estimate(
+        &self,
+        acc: &Matrix,
+        ralt: &Matrix,
+        seed: u64,
+        tau: f32,
+    ) -> Result<Matrix, String> {
+        let n = acc.rows;
+        let m = ralt.cols;
+        let c_mean = acc.scale(1.0 / tau.max(1.0));
+        let r_mean = ralt.scale(1.0 / tau.max(1.0));
+        let a = self.right_projection(seed, m);
+        let p = self.left_probe(seed, n);
+        // A-step: (P Pᵀ + εI) A₁ = r̄
+        let ppt = p.matmul_nt(&p);
+        let a1 = solve_ridge(&ppt, &r_mean)?;
+        // B-step: B₁ (A₁ Aᵀ) = c̄  ⇔  (A₁ Aᵀ)ᵀ B₁ᵀ = c̄ᵀ
+        let s = a1.matmul_nt(&a);
+        let b1t = solve_ridge(&s.transpose(), &c_mean.transpose())?;
+        Ok(b1t.transpose().matmul(&a1))
+    }
+
+    /// Cycle end: reconstruct the mean-gradient estimate and hand it to
+    /// the base optimizer. The caller zeroes both sketches afterwards
+    /// (the trainer's Method-group zero covers them together).
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_accumulated(
+        &self,
+        param: &mut Matrix,
+        acc: &Matrix,
+        ralt: &Matrix,
+        opt_state: &mut [Matrix],
+        seed: u64,
+        tau: f32,
+        lr: f32,
+        step: f32,
+    ) -> Result<(), String> {
+        let ghat = self.estimate(acc, ralt, seed, tau)?;
+        self.base.update(param, &ghat, opt_state, lr, step)
+    }
+
+    /// Fused τ=1 path (the ViT catalog steps): sketch the fresh gradient
+    /// and reconstruct in one call, no persistent method state.
+    pub fn estimate_from_grad(&self, grad: &Matrix, seed: u64) -> Result<Matrix, String> {
+        let mut acc = Matrix::zeros(grad.rows, self.rank);
+        let mut ralt = Matrix::zeros(self.rank, grad.cols);
+        self.accumulate(&mut acc, &mut ralt, grad, seed);
+        self.estimate(&acc, &ralt, seed, 1.0)
+    }
+}
+
+/// Solve `(S + εI) X = RHS` for `X ∈ R^{r×k}` by Gaussian elimination
+/// with partial pivoting; `ε` is [`RIDGE_EPS`] times the mean absolute
+/// diagonal of `S` (plus a tiny absolute floor), which regularizes both
+/// the SPD A-step and the general B-step without washing out
+/// well-conditioned solves.
+fn solve_ridge(s: &Matrix, rhs: &Matrix) -> Result<Matrix, String> {
+    let r = s.rows;
+    if s.cols != r || rhs.rows != r {
+        return Err(format!(
+            "solve_ridge: S is {:?}, rhs is {:?} (want square S, matching rows)",
+            s.shape(),
+            rhs.shape()
+        ));
+    }
+    let diag_mean: f32 =
+        (0..r).map(|i| s.at(i, i).abs()).sum::<f32>() / r.max(1) as f32;
+    let ridge = RIDGE_EPS * diag_mean + 1e-12;
+    let k = rhs.cols;
+    let mut a: Vec<f32> = Vec::with_capacity(r * r);
+    for i in 0..r {
+        for j in 0..r {
+            a.push(s.at(i, j) + if i == j { ridge } else { 0.0 });
+        }
+    }
+    let mut x: Vec<f32> = rhs.data.clone();
+    for col in 0..r {
+        // partial pivot on the largest remaining magnitude in this column
+        let mut piv = col;
+        let mut best = a[col * r + col].abs();
+        for row in (col + 1)..r {
+            let v = a[row * r + col].abs();
+            if v > best {
+                best = v;
+                piv = row;
+            }
+        }
+        if best < 1e-20 {
+            return Err(format!(
+                "solve_ridge: pivot collapse at column {col} (|pivot|={best:e})"
+            ));
+        }
+        if piv != col {
+            for j in 0..r {
+                a.swap(col * r + j, piv * r + j);
+            }
+            for j in 0..k {
+                x.swap(col * k + j, piv * k + j);
+            }
+        }
+        let inv = 1.0 / a[col * r + col];
+        for row in (col + 1)..r {
+            let f = a[row * r + col] * inv;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..r {
+                a[row * r + j] -= f * a[col * r + j];
+            }
+            for j in 0..k {
+                x[row * k + j] -= f * x[col * k + j];
+            }
+        }
+    }
+    for col in (0..r).rev() {
+        let inv = 1.0 / a[col * r + col];
+        for j in 0..k {
+            let mut v = x[col * k + j];
+            for jj in (col + 1)..r {
+                v -= a[col * r + jj] * x[jj * k + j];
+            }
+            x[col * k + j] = v * inv;
+        }
+    }
+    Ok(Matrix::from_vec(r, k, x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::base::Sgd;
+    use crate::util::rng::Rng;
+
+    fn randn(seed: u64, n: usize, m: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(n, m, 1.0, &mut rng)
+    }
+
+    /// A rank-`r` matrix with generic factors.
+    fn lowrank(seed: u64, n: usize, m: usize, r: usize) -> Matrix {
+        randn(seed, n, r).matmul(&randn(seed + 1, r, m))
+    }
+
+    #[test]
+    fn solve_ridge_recovers_known_solution() {
+        // S X = S X₀ must return ≈ X₀ for a well-conditioned S
+        let x0 = randn(0, 6, 3);
+        let mut s = randn(1, 6, 6).scale(0.1);
+        for i in 0..6 {
+            *s.at_mut(i, i) += 3.0; // diagonally dominant
+        }
+        let rhs = s.matmul(&x0);
+        let x = solve_ridge(&s, &rhs).unwrap();
+        assert!(x.allclose(&x0, 1e-2), "max dev {}", (&x - &x0).max_abs());
+    }
+
+    #[test]
+    fn solve_ridge_rejects_shape_mismatch() {
+        assert!(solve_ridge(&Matrix::zeros(3, 4), &Matrix::zeros(3, 2)).is_err());
+        assert!(solve_ridge(&randn(2, 4, 4), &Matrix::zeros(3, 2)).is_err());
+    }
+
+    #[test]
+    fn accumulate_is_linear_in_the_gradient() {
+        let comp = AltLoraCompressor::new(Sgd, 4);
+        let g1 = randn(3, 8, 24);
+        let g2 = randn(4, 8, 24);
+        let seed = 77;
+        let mut acc = Matrix::zeros(8, 4);
+        let mut ralt = Matrix::zeros(4, 24);
+        comp.accumulate(&mut acc, &mut ralt, &g1, seed);
+        comp.accumulate(&mut acc, &mut ralt, &g2, seed);
+        let mut sum = g1.clone();
+        sum.add_scaled_inplace(&g2, 1.0);
+        let mut acc2 = Matrix::zeros(8, 4);
+        let mut ralt2 = Matrix::zeros(4, 24);
+        comp.accumulate(&mut acc2, &mut ralt2, &sum, seed);
+        assert!(acc.allclose(&acc2, 1e-4));
+        assert!(ralt.allclose(&ralt2, 1e-4));
+    }
+
+    #[test]
+    fn left_and_right_sketch_seeds_differ() {
+        let comp = AltLoraCompressor::new(Sgd, 4);
+        let a = comp.right_projection(9, 16);
+        let p = comp.left_probe(9, 16);
+        assert!(!a.allclose(&p, 1e-3));
+    }
+
+    #[test]
+    fn exact_recovery_of_low_rank_gradients() {
+        // rank(Ḡ) <= r ⇒ the alternating-projection estimate is exact
+        let comp = AltLoraCompressor::new(Sgd, 4);
+        let g = lowrank(10, 12, 20, 3);
+        let ghat = comp.estimate_from_grad(&g, 55).unwrap();
+        let rel = (&ghat - &g).frobenius_norm() / g.frobenius_norm();
+        assert!(rel < 0.02, "relative error {rel}");
+    }
+
+    #[test]
+    fn beats_flora_reconstruction_on_low_rank_gradients() {
+        let comp = AltLoraCompressor::new(Sgd, 4);
+        let g = lowrank(20, 12, 20, 4);
+        let mut alt_err = 0.0f32;
+        let mut flora_err = 0.0f32;
+        for s in 0..8u64 {
+            let ghat = comp.estimate_from_grad(&g, 100 + s).unwrap();
+            alt_err += (&ghat - &g).frobenius_norm();
+            flora_err += (&rp::project_gradient(&g, 100 + s, 4) - &g).frobenius_norm();
+        }
+        assert!(
+            alt_err < 0.2 * flora_err,
+            "alt {alt_err} vs flora {flora_err}"
+        );
+    }
+
+    #[test]
+    fn estimate_reproduces_the_right_sketch() {
+        // B-step consistency: Ĝ Aᵀ == c̄ by construction
+        let comp = AltLoraCompressor::new(Sgd, 4);
+        let g = randn(30, 10, 18);
+        let seed = 42;
+        let mut acc = Matrix::zeros(10, 4);
+        let mut ralt = Matrix::zeros(4, 18);
+        for _ in 0..3 {
+            comp.accumulate(&mut acc, &mut ralt, &g, seed);
+        }
+        let ghat = comp.estimate(&acc, &ralt, seed, 3.0).unwrap();
+        let a = comp.right_projection(seed, 18);
+        let c_mean = acc.scale(1.0 / 3.0);
+        let back = ghat.matmul_nt(&a);
+        let rel = (&back - &c_mean).frobenius_norm() / c_mean.frobenius_norm();
+        assert!(rel < 0.01, "sketch consistency error {rel}");
+    }
+
+    #[test]
+    fn apply_accumulated_with_sgd_matches_manual_estimate() {
+        let comp = AltLoraCompressor::new(Sgd, 4);
+        let g = randn(40, 8, 16);
+        let seed = 13;
+        let mut acc = Matrix::zeros(8, 4);
+        let mut ralt = Matrix::zeros(4, 16);
+        comp.accumulate(&mut acc, &mut ralt, &g, seed);
+        let mut w = randn(41, 8, 16);
+        let mut want = w.clone();
+        let mut st = Vec::new();
+        comp.apply_accumulated(&mut w, &acc, &ralt, &mut st, seed, 1.0, 0.5, 0.0)
+            .unwrap();
+        let ghat = comp.estimate(&acc, &ralt, seed, 1.0).unwrap();
+        want.add_scaled_inplace(&ghat, -0.5);
+        assert!(w.allclose(&want, 1e-5));
+    }
+
+    #[test]
+    fn estimate_is_deterministic_per_seed() {
+        let comp = AltLoraCompressor::new(Sgd, 4);
+        let g = randn(50, 8, 16);
+        let a = comp.estimate_from_grad(&g, 7).unwrap();
+        let b = comp.estimate_from_grad(&g, 7).unwrap();
+        let ba: Vec<u32> = a.data.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ba, bb);
+        let c = comp.estimate_from_grad(&g, 8).unwrap();
+        assert!(!a.allclose(&c, 1e-4));
+    }
+}

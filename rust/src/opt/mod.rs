@@ -16,9 +16,18 @@
 //!   per-parameter seed lifecycle, compressed accumulation
 //!   (`C += G Aᵀ`), cycle-end decompress-and-update, and
 //!   momentum-in-subspace with κ-resample transfer.
+//! * [`AltLoraCompressor`] — alternating-projection compression: dual
+//!   seeded sketches and a best rank-r reconstruction solve instead of
+//!   the fixed-projection read-back (the `altlora` compressor variant).
+//! * [`RankSchedule`] / [`ScheduledFlora`] — adaptive-rank control: the
+//!   momentum subspace shrinks at cycle boundaries with bit-exact state
+//!   migration and byte accounting (the `adarank` compressor variant).
 //! * [`OptimizerKind`] — the typed config/CLI surface
 //!   (`--optimizer sgd|adam|adafactor|adafactor_nofactor`) that the
 //!   native catalog and the AOT manifest names both key on.
+//! * [`CompressorKind`] — the `--compressor flora|altlora|adarank`
+//!   selector mapping a flora-family method onto one of the three
+//!   compression algebras above.
 //!
 //! The semantics mirror `python/compile/optimizers.py` and
 //! `python/compile/flora.py` (the L2 half of the ABI contract), so the
@@ -48,11 +57,65 @@
 //! assert!(w.frobenius_norm() > 0.0);
 //! ```
 
+pub mod altlora;
 pub mod base;
 pub mod flora;
+pub mod schedule;
 
+pub use self::altlora::AltLoraCompressor;
 pub use self::base::{Adafactor, Adam, BaseOptimizer, Sgd};
 pub use self::flora::{FloraCompressor, SubspaceTick, MOMENTUM_BETA};
+pub use self::schedule::{
+    migrate, migrate_in_place, reclaimed_bytes, RankSchedule, RankedTick,
+    ScheduledFlora,
+};
+
+/// The compressor family selector wired through `--compressor` and
+/// `[train] compressor`: which accumulate/apply algebra runs on top of
+/// the flora-family rank-r method state.
+///
+/// * `flora` — Algorithms 1–2 (seeded random projection, the baseline)
+/// * `altlora` — alternating-projection reconstruction
+///   ([`AltLoraCompressor`], dual sketches, best rank-r solve)
+/// * `adarank` — Algorithm-2 momentum under an adaptive
+///   [`RankSchedule`] ([`ScheduledFlora`], shrink-and-migrate)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressorKind {
+    Flora,
+    AltLora,
+    AdaRank,
+}
+
+impl CompressorKind {
+    pub const ALL: [CompressorKind; 3] =
+        [CompressorKind::Flora, CompressorKind::AltLora, CompressorKind::AdaRank];
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "flora" => Ok(CompressorKind::Flora),
+            "altlora" => Ok(CompressorKind::AltLora),
+            "adarank" => Ok(CompressorKind::AdaRank),
+            _ => Err(format!(
+                "unknown compressor {s:?} (want flora|altlora|adarank)"
+            )),
+        }
+    }
+
+    /// The ABI tag used in catalog executable names (`*_altlora`, ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            CompressorKind::Flora => "flora",
+            CompressorKind::AltLora => "altlora",
+            CompressorKind::AdaRank => "adarank",
+        }
+    }
+}
+
+impl std::fmt::Display for CompressorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// The optimizer selector wired through config, the CLI and the catalog
 /// naming scheme (`{model}/plain_step_{optimizer}`, ...).
@@ -125,6 +188,15 @@ mod tests {
             assert_eq!(kind.build().name(), kind.name());
         }
         assert!(OptimizerKind::parse("adamw").is_err());
+    }
+
+    #[test]
+    fn compressor_parse_name_roundtrip() {
+        for kind in CompressorKind::ALL {
+            assert_eq!(CompressorKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.to_string(), kind.name());
+        }
+        assert!(CompressorKind::parse("galore").is_err());
     }
 
     #[test]

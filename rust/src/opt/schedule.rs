@@ -1,0 +1,420 @@
+//! `RankSchedule` — adaptive-rank control over any subspace compressor.
+//!
+//! AdaRankGrad's observation (PAPERS.md) is that the gradient's effective
+//! rank shrinks as training converges, so a compressor can reclaim its
+//! state budget on the fly: shrink the projected rank at cycle
+//! boundaries, truncate the subspace coordinates that die, and account
+//! the bytes handed back. This module owns that lifecycle:
+//!
+//! * [`RankSchedule`] — the typed schedule knob
+//!   (`fixed` / `linear-decay:N` / `halve-at:N`), mapping a resample
+//!   cycle index to an active rank. Monotone nonincreasing, floored at 1.
+//! * [`migrate`] / [`migrate_in_place`] — explicit state migration on a
+//!   shrink: the retained subspace rows survive **bit-exactly** (they are
+//!   a prefix of the projected coordinates), the dropped rows are
+//!   reclaimed, and the reclaimed bytes match [`reclaimed_bytes`].
+//! * [`ScheduledFlora`] — the Algorithm-2 momentum step generalized to a
+//!   ranked subspace: projections come from the *master-rank* sampling
+//!   law ([`crate::rp::projection_sub`]), so a rank-`ra` projection is a
+//!   bit-exact prefix of the rank-`r0` one and shrinking never perturbs
+//!   the retained coordinates.
+//!
+//! The fused native catalog keeps the momentum tensor at its static
+//! master shape `[n, r0]` and zeroes the truncated columns instead of
+//! reallocating (the manifest ABI is shape-stable); the analytic
+//! accountant still books the reclaimed bytes via [`reclaimed_bytes`].
+
+use super::base::BaseOptimizer;
+use super::flora::{FloraCompressor, SubspaceTick};
+use crate::rp;
+use crate::tensor::Matrix;
+
+/// When during training the compressor's rank shrinks. The unit of time
+/// is the *resample cycle* (the κ-interval index), never the raw step,
+/// so a schedule composes with any κ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankSchedule {
+    /// Rank stays at r0 forever (the Flora Algorithm-2 baseline).
+    Fixed,
+    /// Rank drops by 1 every `every` cycles: r(c) = r0 − c/every.
+    LinearDecay { every: usize },
+    /// Rank halves every `every` cycles: r(c) = r0 >> (c/every).
+    HalveAt { every: usize },
+}
+
+impl Default for RankSchedule {
+    fn default() -> Self {
+        RankSchedule::Fixed
+    }
+}
+
+impl RankSchedule {
+    /// Parse the config/CLI spelling: `fixed`, `linear-decay:N`,
+    /// `halve-at:N` (N = cycles between shrinks, >= 1).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s == "fixed" {
+            return Ok(RankSchedule::Fixed);
+        }
+        let every_of = |spec: &str, tag: &str| -> Result<usize, String> {
+            let n: usize = spec.parse().map_err(|_| {
+                format!("rank schedule {tag}:{spec:?}: want a positive cycle count")
+            })?;
+            if n == 0 {
+                return Err(format!("rank schedule {tag}:0: cycle count must be >= 1"));
+            }
+            Ok(n)
+        };
+        match s.split_once(':') {
+            Some(("linear-decay", n)) => {
+                Ok(RankSchedule::LinearDecay { every: every_of(n, "linear-decay")? })
+            }
+            Some(("halve-at", n)) => {
+                Ok(RankSchedule::HalveAt { every: every_of(n, "halve-at")? })
+            }
+            _ => Err(format!(
+                "unknown rank schedule {s:?} (want fixed|linear-decay:N|halve-at:N)"
+            )),
+        }
+    }
+
+    /// The config/CLI spelling this schedule parses back from.
+    pub fn name(&self) -> String {
+        match self {
+            RankSchedule::Fixed => "fixed".into(),
+            RankSchedule::LinearDecay { every } => format!("linear-decay:{every}"),
+            RankSchedule::HalveAt { every } => format!("halve-at:{every}"),
+        }
+    }
+
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, RankSchedule::Fixed)
+    }
+
+    /// Active rank at resample-cycle `cycle` starting from master rank
+    /// `r0`. Monotone nonincreasing in `cycle`, never below 1, never
+    /// above `r0`.
+    pub fn rank_at(&self, r0: usize, cycle: usize) -> usize {
+        let r = match self {
+            RankSchedule::Fixed => r0,
+            RankSchedule::LinearDecay { every } => {
+                r0.saturating_sub(cycle / every)
+            }
+            RankSchedule::HalveAt { every } => {
+                let halvings = (cycle / every).min(63);
+                r0 >> halvings
+            }
+        };
+        r.clamp(1, r0.max(1))
+    }
+}
+
+/// Bytes handed back when a `[n, r_old]` subspace state shrinks to
+/// `rank_new` coordinates: `(r_old − rank_new) · n · 4`.
+pub fn reclaimed_bytes(n: usize, rank_old: usize, rank_new: usize) -> u64 {
+    (rank_old.saturating_sub(rank_new) as u64) * n as u64 * 4
+}
+
+/// Shrink a projected-subspace state `[n, r_old]` to its first
+/// `rank_new` coordinates. The retained columns are copied bit-exactly;
+/// the return pairs the migrated `[n, rank_new]` state with the
+/// reclaimed bytes (exactly [`reclaimed_bytes`]).
+pub fn migrate(state: &Matrix, rank_new: usize) -> Result<(Matrix, u64), String> {
+    let (n, r_old) = state.shape();
+    if rank_new == 0 || rank_new > r_old {
+        return Err(format!(
+            "rank migration: new rank {rank_new} outside 1..={r_old}"
+        ));
+    }
+    let kept = Matrix::from_fn(n, rank_new, |i, j| state.at(i, j));
+    Ok((kept, reclaimed_bytes(n, r_old, rank_new)))
+}
+
+/// [`migrate`] for the fused catalog's shape-stable ABI: the tensor
+/// keeps its master `[n, r0]` shape and every coordinate at column
+/// >= `rank_new` is zeroed in place. Returns the bytes the analytic
+/// accountant books as reclaimed (`rank_active` = the rank live before
+/// the shrink).
+pub fn migrate_in_place(state: &mut Matrix, rank_active: usize, rank_new: usize) -> u64 {
+    let (n, r0) = state.shape();
+    for i in 0..n {
+        for j in rank_new..r0 {
+            *state.at_mut(i, j) = 0.0;
+        }
+    }
+    reclaimed_bytes(n, rank_active.min(r0), rank_new)
+}
+
+/// One ranked Algorithm-2 tick: the seed schedule plus the active ranks
+/// on each side of a (possible) resample boundary. On non-resample steps
+/// `rank_cur == rank_next`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankedTick {
+    pub sub: SubspaceTick,
+    /// Rank the momentum lives at BEFORE this step.
+    pub rank_cur: usize,
+    /// Rank after this step (may shrink only on resample boundaries).
+    pub rank_next: usize,
+}
+
+/// The AdaRank compressor: a [`FloraCompressor`] whose momentum subspace
+/// shrinks under a [`RankSchedule`]. `rank()` of the inner compressor is
+/// the *master* rank r0 — state tensors are sized for it — while each
+/// step runs at the tick's active rank with master-law projections.
+#[derive(Clone, Debug)]
+pub struct ScheduledFlora<O> {
+    flora: FloraCompressor<O>,
+    schedule: RankSchedule,
+}
+
+impl<O: BaseOptimizer> ScheduledFlora<O> {
+    pub fn new(flora: FloraCompressor<O>, schedule: RankSchedule) -> Self {
+        Self { flora, schedule }
+    }
+
+    pub fn flora(&self) -> &FloraCompressor<O> {
+        &self.flora
+    }
+
+    pub fn schedule(&self) -> RankSchedule {
+        self.schedule
+    }
+
+    /// Master rank r0 (the allocated state width).
+    pub fn master_rank(&self) -> usize {
+        self.flora.rank()
+    }
+
+    /// Active rank at resample-cycle `cycle`.
+    pub fn rank_at(&self, cycle: usize) -> usize {
+        self.schedule.rank_at(self.master_rank(), cycle)
+    }
+
+    /// Sub-rank projection at the master sampling law: the first `ra`
+    /// rows of the master rank-r0 projection, bit-exact.
+    pub fn projection_at(&self, seed: u64, ra: usize, m: usize) -> Matrix {
+        rp::projection_sub(seed, ra, self.master_rank(), m)
+    }
+
+    /// One ranked momentum step over a shape-stable `[n, r0]` momentum
+    /// tensor. Order on a shrinking resample boundary: truncate the
+    /// subspace coordinates to `rank_next` FIRST (the retained prefix is
+    /// bit-exact), then transfer the survivors into the next subspace.
+    /// Returns the bytes reclaimed by the truncation (0 off boundaries).
+    ///
+    /// The decompressed effective gradient is scaled by `r0/ra` — the
+    /// sub-projection's Gram matrix has expectation `(ra/r0)·I` under the
+    /// master sampling law, so the compensation keeps the update unbiased
+    /// at every active rank.
+    #[allow(clippy::too_many_arguments)]
+    pub fn momentum_step(
+        &self,
+        param: &mut Matrix,
+        mom: &mut Matrix,
+        opt_state: &mut [Matrix],
+        grad: &Matrix,
+        tick: RankedTick,
+        lr: f32,
+        step: f32,
+    ) -> Result<u64, String> {
+        let r0 = self.master_rank();
+        let m_dim = param.cols;
+        if mom.cols != r0 {
+            return Err(format!(
+                "ranked momentum: state has {} columns, master rank is {r0}",
+                mom.cols
+            ));
+        }
+        if tick.rank_cur > r0 || tick.rank_next > tick.rank_cur || tick.rank_next == 0 {
+            return Err(format!(
+                "ranked momentum: ranks {}->{} invalid under master rank {r0}",
+                tick.rank_cur, tick.rank_next
+            ));
+        }
+        let ra = if tick.sub.resample { tick.rank_next } else { tick.rank_cur };
+        let mut reclaimed = 0u64;
+        if tick.sub.resample {
+            if tick.rank_next < tick.rank_cur {
+                reclaimed = migrate_in_place(mom, tick.rank_cur, tick.rank_next);
+            }
+            if tick.sub.transfer {
+                let a_old = self.projection_at(tick.sub.seed_cur, ra, m_dim);
+                let a_new = self.projection_at(tick.sub.seed_next, ra, m_dim);
+                let (active, _) = migrate(mom, ra)?;
+                let moved = rp::transfer(&active, &a_old, &a_new);
+                write_active(mom, &moved);
+            }
+        }
+        let a = self.projection_at(tick.sub.active_seed(), ra, m_dim);
+        let c = rp::compress(grad, &a);
+        // EMA only the live coordinates; truncated columns stay zero
+        let beta = self.flora.beta();
+        let (mut active, _) = migrate(mom, ra)?;
+        let mut next = active.scale(beta);
+        next.add_scaled_inplace(&c, 1.0 - beta);
+        active = next;
+        write_active(mom, &active);
+        let eff = rp::decompress(&active, &a).scale(r0 as f32 / ra as f32);
+        self.flora.base().update(param, &eff, opt_state, lr, step)?;
+        Ok(reclaimed)
+    }
+}
+
+/// Write the `[n, ra]` active block back into the `[n, r0]` master
+/// tensor, zeroing columns >= ra.
+fn write_active(master: &mut Matrix, active: &Matrix) {
+    let (n, r0) = master.shape();
+    let ra = active.cols;
+    for i in 0..n {
+        for j in 0..r0 {
+            *master.at_mut(i, j) = if j < ra { active.at(i, j) } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::base::Sgd;
+    use crate::util::rng::Rng;
+
+    fn randn(seed: u64, n: usize, m: usize) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::gaussian(n, m, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn parse_name_roundtrip() {
+        for s in ["fixed", "linear-decay:3", "halve-at:2"] {
+            let sched = RankSchedule::parse(s).unwrap();
+            assert_eq!(sched.name(), s);
+        }
+        assert!(RankSchedule::parse("halve-at:0").is_err());
+        assert!(RankSchedule::parse("linear-decay:x").is_err());
+        assert!(RankSchedule::parse("cosine").is_err());
+    }
+
+    #[test]
+    fn schedules_are_monotone_and_floored() {
+        for sched in [
+            RankSchedule::Fixed,
+            RankSchedule::LinearDecay { every: 2 },
+            RankSchedule::HalveAt { every: 3 },
+        ] {
+            let mut last = usize::MAX;
+            for cycle in 0..200 {
+                let r = sched.rank_at(16, cycle);
+                assert!(r >= 1 && r <= 16, "{sched:?} cycle {cycle}: {r}");
+                assert!(r <= last, "{sched:?} not monotone at cycle {cycle}");
+                last = r;
+            }
+        }
+        assert_eq!(RankSchedule::Fixed.rank_at(8, 999), 8);
+        assert_eq!(RankSchedule::HalveAt { every: 1 }.rank_at(8, 2), 2);
+        assert_eq!(RankSchedule::LinearDecay { every: 1 }.rank_at(4, 10), 1);
+    }
+
+    #[test]
+    fn migrate_keeps_prefix_bit_exact_and_accounts_bytes() {
+        let state = randn(0, 6, 8);
+        let (kept, freed) = migrate(&state, 3).unwrap();
+        assert_eq!(kept.shape(), (6, 3));
+        assert_eq!(freed, reclaimed_bytes(6, 8, 3));
+        assert_eq!(freed, 5 * 6 * 4);
+        for i in 0..6 {
+            for j in 0..3 {
+                assert_eq!(kept.at(i, j).to_bits(), state.at(i, j).to_bits());
+            }
+        }
+        assert!(migrate(&state, 0).is_err());
+        assert!(migrate(&state, 9).is_err());
+    }
+
+    #[test]
+    fn migrate_in_place_zeroes_dead_columns() {
+        let mut state = randn(1, 5, 8);
+        let before = state.clone();
+        let freed = migrate_in_place(&mut state, 8, 2);
+        assert_eq!(freed, reclaimed_bytes(5, 8, 2));
+        for i in 0..5 {
+            for j in 0..8 {
+                if j < 2 {
+                    assert_eq!(state.at(i, j).to_bits(), before.at(i, j).to_bits());
+                } else {
+                    assert_eq!(state.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_schedule_full_rank_matches_flora_momentum_bitwise() {
+        // at ra == r0 the ranked step IS Algorithm 2: the sub-projection
+        // equals the full projection and the r0/ra compensation is 1
+        let comp = FloraCompressor::new(Sgd, 4);
+        let sched = ScheduledFlora::new(comp.clone(), RankSchedule::Fixed);
+        let g = randn(2, 6, 16);
+        for (resample, transfer) in [(false, true), (true, true)] {
+            let sub = SubspaceTick { seed_cur: 5, seed_next: 6, resample, transfer };
+            let mut w1 = randn(3, 6, 16);
+            let mut m1 = randn(4, 6, 4).scale(0.1);
+            let mut s1 = Vec::new();
+            comp.momentum_step(&mut w1, &mut m1, &mut s1, &g, sub, 0.1, 0.0).unwrap();
+
+            let mut w2 = randn(3, 6, 16);
+            let mut m2 = randn(4, 6, 4).scale(0.1);
+            let mut s2 = Vec::new();
+            let tick = RankedTick { sub, rank_cur: 4, rank_next: 4 };
+            let freed = sched
+                .momentum_step(&mut w2, &mut m2, &mut s2, &g, tick, 0.1, 0.0)
+                .unwrap();
+            assert_eq!(freed, 0);
+            let b = |m: &Matrix| m.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(b(&w1), b(&w2), "resample={resample}");
+            assert_eq!(b(&m1), b(&m2), "mom resample={resample}");
+        }
+    }
+
+    #[test]
+    fn shrinking_step_truncates_then_transfers_and_reports_bytes() {
+        let sched = ScheduledFlora::new(
+            FloraCompressor::new(Sgd, 8),
+            RankSchedule::HalveAt { every: 1 },
+        );
+        let g = randn(7, 6, 16);
+        let mut w = randn(8, 6, 16);
+        let mut mom = randn(9, 6, 8).scale(0.1);
+        let mut st = Vec::new();
+        let tick = RankedTick {
+            sub: SubspaceTick { seed_cur: 20, seed_next: 21, resample: true, transfer: true },
+            rank_cur: 8,
+            rank_next: 4,
+        };
+        let freed =
+            sched.momentum_step(&mut w, &mut mom, &mut st, &g, tick, 0.1, 0.0).unwrap();
+        assert_eq!(freed, reclaimed_bytes(6, 8, 4));
+        // dead columns must be exactly zero after the step
+        for i in 0..6 {
+            for j in 4..8 {
+                assert_eq!(mom.at(i, j), 0.0, "({i},{j})");
+            }
+        }
+        assert!(w.frobenius_norm() > 0.0);
+    }
+
+    #[test]
+    fn invalid_ranks_are_loud() {
+        let sched = ScheduledFlora::new(FloraCompressor::new(Sgd, 4), RankSchedule::Fixed);
+        let g = randn(10, 4, 8);
+        let mut w = randn(11, 4, 8);
+        let mut mom = Matrix::zeros(4, 4);
+        let mut st = Vec::new();
+        let sub = SubspaceTick { seed_cur: 1, seed_next: 2, resample: false, transfer: true };
+        for (rc, rn) in [(5, 4), (4, 0), (2, 3)] {
+            let tick = RankedTick { sub, rank_cur: rc, rank_next: rn };
+            assert!(
+                sched.momentum_step(&mut w, &mut mom, &mut st, &g, tick, 0.1, 0.0).is_err(),
+                "{rc}->{rn}"
+            );
+        }
+    }
+}

@@ -22,6 +22,19 @@ pub fn param_seed(base: u64, index: usize) -> u64 {
     derive_seed(base, index as u64)
 }
 
+/// The first `r_active` rows of the rank-`r_master` projection for this
+/// seed, at the MASTER sampling law N(0, 1/r_master). Because
+/// [`Matrix::gaussian`] draws row-major from one sequential stream,
+/// `projection_sub(seed, ra, r0, m)` is a bit-exact prefix of
+/// `projection_sub(seed, r0, r0, m)` — the property adaptive-rank
+/// truncation (opt::schedule) relies on. `projection_sub(s, r, r, m)`
+/// equals `projection(s, r, m)`.
+pub fn projection_sub(seed: u64, r_active: usize, r_master: usize, m: usize) -> Matrix {
+    debug_assert!(r_active <= r_master);
+    let mut rng = Rng::new(seed);
+    Matrix::gaussian(r_active, m, (1.0 / r_master.max(1) as f32).sqrt(), &mut rng)
+}
+
 /// Down-project a gradient: C = G Aᵀ ([n,m] → [n,r]).
 pub fn compress(g: &Matrix, a: &Matrix) -> Matrix {
     g.matmul_nt(a)
@@ -137,6 +150,29 @@ mod tests {
         let moved = transfer(&m_state, &a_old, &a_new);
         let ratio = moved.frobenius_norm() / m_state.frobenius_norm();
         assert!(ratio > 0.5 && ratio < 2.2, "ratio={ratio}");
+    }
+
+    #[test]
+    fn projection_sub_is_bit_exact_prefix_of_master() {
+        // adaptive-rank truncation depends on this: the rank-ra projection
+        // IS the first ra rows of the rank-r0 projection, bit for bit
+        let full = projection_sub(31, 16, 16, 24);
+        for ra in [1usize, 4, 9, 16] {
+            let sub = projection_sub(31, ra, 16, 24);
+            assert_eq!(sub.shape(), (ra, 24));
+            for i in 0..ra {
+                for j in 0..24 {
+                    assert_eq!(
+                        sub.at(i, j).to_bits(),
+                        full.at(i, j).to_bits(),
+                        "ra={ra} ({i},{j})"
+                    );
+                }
+            }
+        }
+        // and at ra == r0 it is exactly the Algorithm-1/2 projection
+        let a = projection(31, 16, 24);
+        assert!(full.allclose(&a, 0.0));
     }
 
     #[test]

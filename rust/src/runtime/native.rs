@@ -45,10 +45,14 @@ use super::values::{scalar_f32, Tensor};
 use crate::model::{
     is_projectable, LoraAdapter, ParamSet, TransformerConfig, VitConfig,
 };
-use crate::opt::{Adam, BaseOptimizer, FloraCompressor, OptimizerKind, SubspaceTick, MOMENTUM_BETA};
+use crate::opt::{
+    Adam, AltLoraCompressor, BaseOptimizer, CompressorKind, FloraCompressor,
+    OptimizerKind, RankSchedule, RankedTick, ScheduledFlora, SubspaceTick,
+    MOMENTUM_BETA,
+};
 use crate::rp;
 use crate::tensor::Matrix;
-use crate::util::rng::Rng;
+use crate::util::rng::{derive_seed, Rng};
 
 /// Init scale of the logit table (small ⇒ near-uniform initial loss ln v).
 const INIT_SIGMA: f32 = 0.05;
@@ -98,6 +102,10 @@ enum Step {
     TfMomFlora { rank: usize, transfer: bool, opt: OptimizerKind },
     TfMomNaive { opt: OptimizerKind },
     TfGalore { rank: usize },
+    // transformer LM — adaptive-rank compressor grid
+    TfMicroAlt { rank: usize },
+    TfUpdateAlt { rank: usize, opt: OptimizerKind },
+    TfMomAdaRank { rank: usize, opt: OptimizerKind },
     // transformer LM — LoRA adapter baseline (frozen base + patches)
     LoraInit { rank: usize },
     LoraMicro { rank: usize },
@@ -110,6 +118,8 @@ enum Step {
     VitEval,
     VitPlain { opt: OptimizerKind },
     VitMomFlora { rank: usize, opt: OptimizerKind },
+    VitAltStep { rank: usize, opt: OptimizerKind },
+    VitAdaRank { rank: usize, opt: OptimizerKind },
 }
 
 /// Which model family an executable belongs to (and its configuration).
@@ -261,8 +271,21 @@ pub fn catalog_summary(manifest: &Manifest) -> String {
 
 /// Collapse one executable name (model prefix stripped) to its step
 /// pattern: any `_r<digits>` becomes `_r{N}` and a trailing
-/// base-optimizer name becomes `{opt}`.
+/// base-optimizer name becomes `{opt}`. Compressor-tagged entries
+/// (`*_altlora`, `*_adarank`) keep their tag but collapse identically —
+/// the tag is stripped, the flora-style pattern collapses, then the tag
+/// is re-appended, so the grid grows the summary by one pattern per
+/// compressor instead of one line per rank × optimizer.
 fn collapse_entry(name: &str) -> String {
+    for comp in CompressorKind::ALL {
+        if comp == CompressorKind::Flora {
+            continue;
+        }
+        let tag = format!("_{}", comp.name());
+        if let Some(stripped) = name.strip_suffix(tag.as_str()) {
+            return format!("{}{tag}", collapse_entry(stripped));
+        }
+    }
     let mut base = name.to_string();
     for opt in OptimizerKind::ALL {
         let suffix = format!("_{}", opt.name());
@@ -638,6 +661,17 @@ fn method_specs(prefix: &str, shapes: &Shapes, rank: Option<usize>) -> Vec<Tenso
         .collect()
 }
 
+/// AltLoRA left-sketch specs `ralt/{param}` — `[r, m]` for projectable
+/// parameters ONLY: the naive-procedure parameters accumulate full-size
+/// in `acc/` and need no second sketch.
+fn ralt_specs(shapes: &Shapes, rank: usize) -> Vec<TensorSpec> {
+    shapes
+        .iter()
+        .filter(|(name, _)| is_projectable(name))
+        .map(|(name, sh)| f32s(&format!("ralt/{name}"), &[rank, sh[1]]))
+        .collect()
+}
+
 /// GaLore state specs, per parameter: subspace moments `m`/`v` plus the
 /// STORED projection `proj` on projectable parameters, full-space Adam
 /// moments on the rest.
@@ -740,6 +774,18 @@ fn register_lm_family(
             ),
             splice(vec![loss.clone()], &acc, vec![]),
         );
+        // AltLoRA micro: both sketches accumulate under the one cycle seed
+        let ralt = ralt_specs(&shapes, r);
+        reg.add(
+            format!("{model}/micro_r{r}_altlora"),
+            Step::TfMicroAlt { rank: r },
+            splice(
+                splice(splice(pspecs.clone(), &acc, vec![]), &ralt, vec![]),
+                &[],
+                vec![tokens.clone(), mask.clone(), seed.clone()],
+            ),
+            splice(splice(vec![loss.clone()], &acc, vec![]), &ralt, vec![]),
+        );
     }
 
     for opt in OptimizerKind::ALL {
@@ -821,6 +867,49 @@ fn register_lm_family(
                 Step::TfMomFlora { rank: r, transfer: false, opt },
                 mom_in,
                 mom_out,
+            );
+            // adaptive-rank compressor grid: AltLoRA cycle-end update
+            // (dual sketches in, alternating-projection estimate out) and
+            // the AdaRank ranked momentum step, whose active ranks arrive
+            // as rank_cur/rank_next scalars from the trainer's schedule.
+            let ralt = ralt_specs(&shapes, r);
+            reg.add(
+                format!("{model}/update_r{r}_{o}_altlora"),
+                Step::TfUpdateAlt { rank: r, opt },
+                splice(
+                    splice(
+                        splice(splice(pspecs.clone(), &ospecs, vec![]), &acc, vec![]),
+                        &ralt,
+                        vec![],
+                    ),
+                    &[],
+                    vec![lr.clone(), step_s.clone(), seed.clone(), tau.clone()],
+                ),
+                splice(pspecs.clone(), &ospecs, vec![]),
+            );
+            reg.add(
+                format!("{model}/mom_step_r{r}_{o}_adarank"),
+                Step::TfMomAdaRank { rank: r, opt },
+                splice(
+                    splice(pspecs.clone(), &ospecs, vec![]),
+                    &mom,
+                    vec![
+                        tokens.clone(),
+                        mask.clone(),
+                        lr.clone(),
+                        step_s.clone(),
+                        spec("seed_cur", &[], "uint32"),
+                        spec("seed_next", &[], "uint32"),
+                        f32s("resample", &[]),
+                        f32s("rank_cur", &[]),
+                        f32s("rank_next", &[]),
+                    ],
+                ),
+                splice(
+                    splice(splice(vec![loss.clone()], &pspecs, vec![]), &ospecs, vec![]),
+                    &mom,
+                    vec![],
+                ),
             );
         }
     }
@@ -1005,6 +1094,57 @@ fn register_vit_family(
                         spec("seed_cur", &[], "uint32"),
                         spec("seed_next", &[], "uint32"),
                         f32s("resample", &[]),
+                        lr.clone(),
+                        step_s.clone(),
+                    ],
+                ),
+                splice(
+                    splice(
+                        splice(vec![loss.clone()], &pspecs, vec![]),
+                        &ospecs,
+                        vec![],
+                    ),
+                    &mom,
+                    vec![],
+                ),
+            );
+            // adaptive-rank grid: the fused τ=1 AltLoRA step (per-step
+            // seed derived from the cycle seed, no persistent method
+            // state) and the AdaRank ranked momentum step.
+            reg.add(
+                format!("{model}/step_r{r}_{o}_altlora"),
+                Step::VitAltStep { rank: r, opt },
+                splice(
+                    splice(pspecs.clone(), &ospecs, vec![]),
+                    &[],
+                    vec![
+                        images.clone(),
+                        labels.clone(),
+                        spec("seed_cur", &[], "uint32"),
+                        lr.clone(),
+                        step_s.clone(),
+                    ],
+                ),
+                splice(
+                    splice(vec![loss.clone()], &pspecs, vec![]),
+                    &ospecs,
+                    vec![],
+                ),
+            );
+            reg.add(
+                format!("{model}/step_r{r}_{o}_adarank"),
+                Step::VitAdaRank { rank: r, opt },
+                splice(
+                    splice(splice(pspecs.clone(), &ospecs, vec![]), &mom, vec![]),
+                    &[],
+                    vec![
+                        images.clone(),
+                        labels.clone(),
+                        spec("seed_cur", &[], "uint32"),
+                        spec("seed_next", &[], "uint32"),
+                        f32s("resample", &[]),
+                        f32s("rank_cur", &[]),
+                        f32s("rank_next", &[]),
                         lr.clone(),
                         step_s.clone(),
                     ],
@@ -1426,6 +1566,160 @@ fn momentum_step_set(
     Ok((opt_out, mom_out))
 }
 
+/// AltLoRA micro accumulation over a whole gradient set: dual sketches
+/// (`acc += G Aᵀ`, `ralt += P G`) on projectable parameters, plain
+/// `acc += G` (no left sketch) on the naive-procedure rest. Returns the
+/// `(acc, ralt)` tensors, each group in spec order.
+fn alt_accumulate_set(
+    rank: usize,
+    grads: &ParamSet,
+    ins: &Inputs<'_>,
+    seed: u64,
+) -> Result<(Vec<Tensor>, Vec<Tensor>), String> {
+    let comp = AltLoraCompressor::new(crate::opt::Sgd, rank);
+    let mut acc_out = Vec::new();
+    let mut ralt_out = Vec::new();
+    for (idx, (name, g)) in grads.iter().enumerate() {
+        let mut acc = ins.matrix(&format!("acc/{name}"))?;
+        if is_projectable(name) {
+            let mut ralt = ins.matrix(&format!("ralt/{name}"))?;
+            comp.accumulate(&mut acc, &mut ralt, g, rp::param_seed(seed, idx));
+            ralt_out.push(tensor_of(ralt));
+        } else {
+            acc.add_scaled_inplace(g, 1.0);
+        }
+        acc_out.push(tensor_of(acc));
+    }
+    Ok((acc_out, ralt_out))
+}
+
+/// AltLoRA cycle end over a whole set: alternating-projection estimate
+/// from each projectable parameter's dual sketches, naive mean elsewhere,
+/// then the base-optimizer update. Returns the new opt-state tensors.
+#[allow(clippy::too_many_arguments)]
+fn alt_apply_set(
+    opt: OptimizerKind,
+    rank: usize,
+    params: &mut ParamSet,
+    ins: &Inputs<'_>,
+    seed: u64,
+    tau: f32,
+    lr: f32,
+    step: f32,
+) -> Result<Vec<Tensor>, String> {
+    let o = opt.build();
+    let comp = AltLoraCompressor::new(opt.build(), rank);
+    let names: Vec<String> = params.keys().cloned().collect();
+    let mut out = Vec::new();
+    for (idx, name) in names.iter().enumerate() {
+        let w = params.get_mut(name).expect("name from keys");
+        let acc = ins.matrix(&format!("acc/{name}"))?;
+        let mut st: Vec<Matrix> = o
+            .state_shapes(w.rows, w.cols)
+            .iter()
+            .map(|(slot, _)| ins.matrix(&format!("opt/{name}/{slot}")))
+            .collect::<Result<_, _>>()?;
+        if is_projectable(name) {
+            let ralt = ins.matrix(&format!("ralt/{name}"))?;
+            comp.apply_accumulated(
+                w,
+                &acc,
+                &ralt,
+                &mut st,
+                rp::param_seed(seed, idx),
+                tau,
+                lr,
+                step,
+            )?;
+        } else {
+            let ghat = acc.scale(1.0 / tau.max(1.0));
+            o.update(w, &ghat, &mut st, lr, step)?;
+        }
+        out.extend(st.into_iter().map(tensor_of));
+    }
+    Ok(out)
+}
+
+/// Read and validate the AdaRank active-rank scalars against the
+/// executable's master rank.
+fn active_ranks(
+    ins: &Inputs<'_>,
+    master: usize,
+) -> Result<(usize, usize), String> {
+    let rc = ins.num("rank_cur")?.round() as usize;
+    let rn = ins.num("rank_next")?.round() as usize;
+    if rc == 0 || rc > master || rn == 0 || rn > rc {
+        return Err(format!(
+            "{}: adarank ranks {rc}->{rn} invalid under master rank {master}",
+            ins.ctx
+        ));
+    }
+    Ok((rc, rn))
+}
+
+/// AdaRank ranked momentum over a whole set: projectable parameters run
+/// the [`ScheduledFlora`] step at the tick's active ranks over their
+/// master-shape `[n, r0]` momentum (truncate-then-transfer on shrinking
+/// resamples); everything else keeps the full-space EMA. Returns
+/// (opt-state, momentum) output tensors.
+#[allow(clippy::too_many_arguments)]
+fn adarank_step_set(
+    opt: OptimizerKind,
+    rank: usize,
+    params: &mut ParamSet,
+    grads: &ParamSet,
+    ins: &Inputs<'_>,
+    tick: (u64, u64, bool),
+    ranks: (usize, usize),
+    lr: f32,
+    step: f32,
+) -> Result<(Vec<Tensor>, Vec<Tensor>), String> {
+    let o = opt.build();
+    // the schedule itself lives in the trainer; the executor only sees
+    // the already-scheduled rank_cur/rank_next scalars
+    let sched = ScheduledFlora::new(
+        FloraCompressor::new(opt.build(), rank),
+        RankSchedule::Fixed,
+    );
+    let (seed_cur, seed_next, resample) = tick;
+    let names: Vec<String> = params.keys().cloned().collect();
+    let mut opt_out = Vec::new();
+    let mut mom_out = Vec::new();
+    for (idx, name) in names.iter().enumerate() {
+        let w = params.get_mut(name).expect("name from keys");
+        let g = grads
+            .get(name)
+            .ok_or_else(|| format!("missing gradient for {name}"))?;
+        let mut mom = ins.matrix(&format!("mom/{name}"))?;
+        let mut st: Vec<Matrix> = o
+            .state_shapes(w.rows, w.cols)
+            .iter()
+            .map(|(slot, _)| ins.matrix(&format!("opt/{name}/{slot}")))
+            .collect::<Result<_, _>>()?;
+        if is_projectable(name) {
+            let t = RankedTick {
+                sub: SubspaceTick {
+                    seed_cur: rp::param_seed(seed_cur, idx),
+                    seed_next: rp::param_seed(seed_next, idx),
+                    resample,
+                    transfer: true,
+                },
+                rank_cur: ranks.0,
+                rank_next: ranks.1,
+            };
+            sched.momentum_step(w, &mut mom, &mut st, g, t, lr, step)?;
+        } else {
+            let mut next = mom.scale(MOMENTUM_BETA);
+            next.add_scaled_inplace(g, 1.0 - MOMENTUM_BETA);
+            o.update(w, &next, &mut st, lr, step)?;
+            mom = next;
+        }
+        opt_out.extend(st.into_iter().map(tensor_of));
+        mom_out.push(tensor_of(mom));
+    }
+    Ok((opt_out, mom_out))
+}
+
 /// GaLore over a whole set: Adam-in-subspace with a stored projection on
 /// projectable parameters (refresh regenerates it from the per-parameter
 /// seed), full-space Adam on the rest. Returns the state tensors in spec
@@ -1833,6 +2127,72 @@ impl BackendExec for NativeExec {
             }
 
             // ----------------------------------------------------------
+            // adaptive-rank compressor grid (AltLoRA + AdaRank)
+            // ----------------------------------------------------------
+            Step::TfMicroAlt { rank } => {
+                let cfg = self.lm_cfg()?;
+                let params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let batch = ins.batch()?;
+                let seed = ins.useed("seed")?;
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &params, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let (accs, ralts) = alt_accumulate_set(rank, &grads, &ins, seed)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(accs);
+                out.extend(ralts);
+                Ok(out)
+            }
+            Step::TfUpdateAlt { rank, opt } => {
+                let cfg = self.lm_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let seed = ins.useed("seed")?;
+                let tau = ins.num("tau")?;
+                let opt_out = alt_apply_set(
+                    opt, rank, &mut params, &ins, seed, tau, lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = set_tensors(params);
+                out.extend(opt_out);
+                Ok(out)
+            }
+            Step::TfMomAdaRank { rank, opt } => {
+                let cfg = self.lm_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let batch = ins.batch()?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let tick = (
+                    ins.useed("seed_cur")?,
+                    ins.useed("seed_next")?,
+                    ins.num("resample")? >= 0.5,
+                );
+                let ranks = active_ranks(&ins, rank)?;
+                let (loss, grads) = cfg
+                    .loss_and_grad(
+                        &params, batch.tokens, batch.mask, batch.rows,
+                        batch.seq, true,
+                    )
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let (opt_out, mom_out) = adarank_step_set(
+                    opt, rank, &mut params, &grads, &ins, tick, ranks, lr,
+                    step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(params));
+                out.extend(opt_out);
+                out.extend(mom_out);
+                Ok(out)
+            }
+
+            // ----------------------------------------------------------
             // LoRA adapter baseline (frozen base + trainable patches)
             // ----------------------------------------------------------
             Step::LoraInit { rank } => {
@@ -1986,6 +2346,65 @@ impl BackendExec for NativeExec {
                 let (opt_out, mom_out) = momentum_step_set(
                     opt, Some(rank), true, &mut params, &grads, &ins,
                     Some(tick), lr, step,
+                )
+                .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(params));
+                out.extend(opt_out);
+                out.extend(mom_out);
+                Ok(out)
+            }
+            Step::VitAltStep { rank, opt } => {
+                let cfg = self.vit_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let (images, labels) = vit_batch(&ins, ctx)?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let seed_cur = ins.useed("seed_cur")?;
+                let (loss, _, grads) = cfg
+                    .loss_preds_grad(&params, images, labels, true)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                // fused τ=1 AltLoRA: sketch and reconstruct each
+                // projectable gradient with a per-step seed derived from
+                // the cycle seed — no persistent method state
+                let comp = AltLoraCompressor::new(crate::opt::Sgd, rank);
+                let step_seed = derive_seed(seed_cur, step as u64);
+                let mut eff = ParamSet::new();
+                for (idx, (name, g)) in grads.iter().enumerate() {
+                    let ghat = if is_projectable(name) {
+                        comp.estimate_from_grad(g, rp::param_seed(step_seed, idx))
+                            .map_err(|e| format!("{ctx}: {name}: {e}"))?
+                    } else {
+                        g.clone()
+                    };
+                    eff.insert(name.clone(), ghat);
+                }
+                let opt_out =
+                    opt_update_set(opt, &mut params, &eff, &ins, lr, step)
+                        .map_err(|e| format!("{ctx}: {e}"))?;
+                let mut out = vec![scalar_f32(loss)];
+                out.extend(set_tensors(params));
+                out.extend(opt_out);
+                Ok(out)
+            }
+            Step::VitAdaRank { rank, opt } => {
+                let cfg = self.vit_cfg()?;
+                let mut params = read_set(&ins, &cfg.param_shapes(), "params")?;
+                let (images, labels) = vit_batch(&ins, ctx)?;
+                let lr = ins.num("lr")?;
+                let step = ins.num("step")?;
+                let tick = (
+                    ins.useed("seed_cur")?,
+                    ins.useed("seed_next")?,
+                    ins.num("resample")? >= 0.5,
+                );
+                let ranks = active_ranks(&ins, rank)?;
+                let (loss, _, grads) = cfg
+                    .loss_preds_grad(&params, images, labels, true)
+                    .map_err(|e| format!("{ctx}: {e}"))?;
+                let (opt_out, mom_out) = adarank_step_set(
+                    opt, rank, &mut params, &grads, &ins, tick, ranks, lr,
+                    step,
                 )
                 .map_err(|e| format!("{ctx}: {e}"))?;
                 let mut out = vec![scalar_f32(loss)];
@@ -2291,8 +2710,12 @@ mod tests {
                 format!("lora-tiny/mom_step_naive_{o}"),
                 format!("lora-tiny/lora_r8_update_{o}"),
                 format!("lora-tiny/lora_r8_mom_step_{o}"),
+                format!("lora-tiny/update_r8_{o}_altlora"),
+                format!("lora-tiny/mom_step_r8_{o}_adarank"),
                 format!("vit-tiny/step_{o}"),
                 format!("vit-tiny/step_flora_r8_{o}"),
+                format!("vit-tiny/step_r8_{o}_altlora"),
+                format!("vit-tiny/step_r8_{o}_adarank"),
             ] {
                 assert!(
                     manifest.executables.contains_key(&exe),
@@ -2306,6 +2729,7 @@ mod tests {
             "lora-tiny/greedy",
             "lora-tiny/micro_naive",
             "lora-tiny/micro_flora_r8",
+            "lora-tiny/micro_r8_altlora",
             "lora-tiny/lora_r8_init",
             "lora-tiny/lora_r8_micro",
             "lora-tiny/lora_r8_eval",
@@ -2335,6 +2759,9 @@ mod tests {
                 "update_flora_r8_adafactor",
                 "mom_step_flora_r8_adam",
                 "mom_step_flora_notransfer_r8_sgd",
+                "micro_r8_altlora",
+                "update_r8_adafactor_altlora",
+                "mom_step_r8_adam_adarank",
                 "lora_r8_init",
                 "lora_r8_update_adam",
                 "galore_step_r8",
@@ -2344,7 +2771,14 @@ mod tests {
             }
         }
         for model in ["vit-tiny", "vit-small"] {
-            for entry in ["init", "eval", "step_adam", "step_flora_r8_adafactor"] {
+            for entry in [
+                "init",
+                "eval",
+                "step_adam",
+                "step_flora_r8_adafactor",
+                "step_r8_adam_altlora",
+                "step_r8_sgd_adarank",
+            ] {
                 let exe = format!("{model}/{entry}");
                 assert!(manifest.executables.contains_key(&exe), "missing {exe}");
             }
@@ -2373,12 +2807,31 @@ mod tests {
         assert!(s.contains("mom_step_flora_r{N}_{opt}  x16"), "{s}");
         assert!(s.contains("lora_r{N}_update_{opt}  x16"), "{s}");
         assert!(s.contains("galore_step_r{N}  x4"), "{s}");
+        // ...including the compressor-tagged grid entries...
+        assert!(s.contains("micro_r{N}_altlora  x4"), "{s}");
+        assert!(s.contains("update_r{N}_{opt}_altlora  x16"), "{s}");
+        assert!(s.contains("mom_step_r{N}_{opt}_adarank  x16"), "{s}");
+        assert!(s.contains("step_r{N}_{opt}_altlora  x16"), "{s}");
+        assert!(s.contains("step_r{N}_{opt}_adarank  x16"), "{s}");
         // ...so no raw variant names leak through
         assert!(!s.contains("plain_step_adam"), "{s}");
         assert!(!s.contains("_r8"), "{s}");
         assert_eq!(collapse_entry("mom_step_flora_notransfer_r16_adafactor_nofactor"),
             "mom_step_flora_notransfer_r{N}_{opt}");
         assert_eq!(collapse_entry("micro_naive"), "micro_naive");
+        // compressor tags survive the collapse without exploding it
+        assert_eq!(
+            collapse_entry("update_r8_adafactor_nofactor_altlora"),
+            "update_r{N}_{opt}_altlora"
+        );
+        assert_eq!(
+            collapse_entry("mom_step_r16_adam_adarank"),
+            "mom_step_r{N}_{opt}_adarank"
+        );
+        assert_eq!(
+            collapse_entry("step_r4_sgd_adarank"),
+            "step_r{N}_{opt}_adarank"
+        );
     }
 
     #[test]
@@ -2560,5 +3013,170 @@ mod tests {
         // the factored moments absorbed the gradient energy
         assert!(outs[1].to_f32_vec().unwrap().iter().all(|&x| x >= 0.0));
         assert!(outs[1].to_f32_vec().unwrap().iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn adarank_full_rank_step_matches_flora_momentum() {
+        let (manifest, backend) = catalog();
+        let (toks, mask) = toy_batch(64, 16);
+        let run = |name: &str, extra: &[(&str, Tensor)]| {
+            let mut vals = BTreeMap::new();
+            vals.insert("seed".to_string(), scalar_u32(5));
+            run_named(&manifest, &backend, "lora-tiny/init", &mut vals);
+            vals.insert("batch/tokens".to_string(), toks.clone());
+            vals.insert("batch/mask".to_string(), mask.clone());
+            vals.insert("lr".to_string(), scalar_f32(0.1));
+            vals.insert("step".to_string(), scalar_f32(0.0));
+            vals.insert("seed_cur".to_string(), scalar_u32(21));
+            vals.insert("seed_next".to_string(), scalar_u32(22));
+            vals.insert("resample".to_string(), scalar_f32(0.0));
+            for (k, v) in extra {
+                vals.insert((*k).to_string(), v.clone());
+            }
+            let info = manifest.executable(name).unwrap();
+            for t in &info.inputs {
+                if t.name.starts_with("mom/") {
+                    vals.insert(t.name.clone(), zeros_for(t).unwrap());
+                }
+            }
+            run_named(&manifest, &backend, name, &mut vals);
+            vals
+        };
+        let flora = run("lora-tiny/mom_step_flora_r4_sgd", &[]);
+        let ada = run(
+            "lora-tiny/mom_step_r4_sgd_adarank",
+            &[
+                ("rank_cur", scalar_f32(4.0)),
+                ("rank_next", scalar_f32(4.0)),
+            ],
+        );
+        // at full rank the ranked step IS Algorithm 2, bit for bit
+        for (k, v) in &flora {
+            if k.starts_with("params/") || k.starts_with("mom/") {
+                assert_eq!(Some(v), ada.get(k), "mismatch at {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn adarank_rejects_invalid_rank_scalars() {
+        let (manifest, backend) = catalog();
+        let mut vals = BTreeMap::new();
+        vals.insert("seed".to_string(), scalar_u32(5));
+        run_named(&manifest, &backend, "lora-tiny/init", &mut vals);
+        let (toks, mask) = toy_batch(64, 16);
+        let name = "lora-tiny/mom_step_r4_sgd_adarank";
+        let info = manifest.executable(name).unwrap();
+        vals.insert("batch/tokens".to_string(), toks);
+        vals.insert("batch/mask".to_string(), mask);
+        vals.insert("lr".to_string(), scalar_f32(0.1));
+        vals.insert("step".to_string(), scalar_f32(0.0));
+        vals.insert("seed_cur".to_string(), scalar_u32(1));
+        vals.insert("seed_next".to_string(), scalar_u32(2));
+        vals.insert("resample".to_string(), scalar_f32(0.0));
+        vals.insert("rank_cur".to_string(), scalar_f32(8.0)); // > master 4
+        vals.insert("rank_next".to_string(), scalar_f32(8.0));
+        for t in &info.inputs {
+            if t.name.starts_with("mom/") {
+                vals.insert(t.name.clone(), zeros_for(t).unwrap());
+            }
+        }
+        let inputs: Vec<Tensor> = info
+            .inputs
+            .iter()
+            .map(|t| vals.get(&t.name).unwrap().clone())
+            .collect();
+        let err = exec(&backend, name).run(&inputs).err().expect("accepted");
+        assert!(err.contains("master rank 4"), "{err}");
+    }
+
+    #[test]
+    fn altlora_micro_then_update_reconstructs_and_moves_params() {
+        let (manifest, backend) = catalog();
+        let mut vals = BTreeMap::new();
+        vals.insert("seed".to_string(), scalar_u32(3));
+        run_named(&manifest, &backend, "lora-tiny/init", &mut vals);
+        let (toks, mask) = toy_batch(64, 16);
+        vals.insert("batch/tokens".to_string(), toks);
+        vals.insert("batch/mask".to_string(), mask);
+        let micro = manifest.executable("lora-tiny/micro_r4_altlora").unwrap();
+        for t in &micro.inputs {
+            if t.name.starts_with("acc/") || t.name.starts_with("ralt/") {
+                vals.insert(t.name.clone(), zeros_for(t).unwrap());
+            }
+        }
+        vals.insert("seed".to_string(), scalar_u32(40)); // cycle seed
+        let loss = run_named(
+            &manifest,
+            &backend,
+            "lora-tiny/micro_r4_altlora",
+            &mut vals,
+        )
+        .unwrap();
+        assert!(loss.is_finite());
+        // both sketches picked up gradient mass on a projectable param...
+        let acc = vals
+            .get("acc/layer0/attn/wq")
+            .unwrap()
+            .to_f32_vec()
+            .unwrap();
+        assert!(acc.iter().any(|&x| x != 0.0));
+        let ralt = vals
+            .get("ralt/layer0/attn/wq")
+            .unwrap()
+            .to_f32_vec()
+            .unwrap();
+        assert!(ralt.iter().any(|&x| x != 0.0));
+        // ...and there is NO left sketch for naive-procedure params
+        assert!(!vals.contains_key("ralt/embed/tok"));
+        let before = vals.get("params/layer0/attn/wq").unwrap().clone();
+        vals.insert("lr".to_string(), scalar_f32(0.1));
+        vals.insert("step".to_string(), scalar_f32(0.0));
+        vals.insert("tau".to_string(), scalar_f32(1.0));
+        run_named(
+            &manifest,
+            &backend,
+            "lora-tiny/update_r4_sgd_altlora",
+            &mut vals,
+        );
+        assert_ne!(vals.get("params/layer0/attn/wq").unwrap(), &before);
+    }
+
+    #[test]
+    fn vit_altlora_step_runs_and_descends() {
+        let (manifest, backend) = catalog();
+        let mut vals = BTreeMap::new();
+        vals.insert("seed".to_string(), scalar_u32(1));
+        run_named(&manifest, &backend, "vit-tiny/init", &mut vals);
+        let task = crate::data::images::ImageTask::cifar_like(10, 8, 3, 0.25, 3);
+        let mut cursor = 0u64;
+        let (images, labels) = task.fill_flat(4, 0, &mut cursor, 3);
+        vals.insert(
+            "batch/images".to_string(),
+            tensor_f32(&[4, 8, 8, 3], &images).unwrap(),
+        );
+        vals.insert(
+            "batch/labels".to_string(),
+            tensor_i32(&[4], &labels).unwrap(),
+        );
+        vals.insert("lr".to_string(), scalar_f32(0.01));
+        vals.insert("seed_cur".to_string(), scalar_u32(9));
+        let name = "vit-tiny/step_r4_adam_altlora";
+        let info = manifest.executable(name).unwrap();
+        for t in &info.inputs {
+            if t.name.starts_with("opt/") {
+                vals.insert(t.name.clone(), zeros_for(t).unwrap());
+            }
+        }
+        let mut losses = Vec::new();
+        for s in 0..30 {
+            vals.insert("step".to_string(), scalar_f32(s as f32));
+            losses.push(run_named(&manifest, &backend, name, &mut vals).unwrap());
+        }
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        assert!(
+            *losses.last().unwrap() < losses[0] - 0.05,
+            "no descent: {losses:?}"
+        );
     }
 }

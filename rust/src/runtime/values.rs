@@ -227,6 +227,10 @@ pub enum ScalarKey {
     SeedNext,
     /// Algorithm-2 resample flag (1.0 on κ-interval boundaries).
     Resample,
+    /// AdaRank active rank BEFORE this step (adaptive rank schedule).
+    RankCur,
+    /// AdaRank active rank AFTER this step (shrinks only on resample).
+    RankNext,
     /// Accumulation length τ.
     Tau,
     /// GaLore projection-refresh flag.
@@ -244,6 +248,8 @@ impl ScalarKey {
             ScalarKey::SeedCur => "seed_cur",
             ScalarKey::SeedNext => "seed_next",
             ScalarKey::Resample => "resample",
+            ScalarKey::RankCur => "rank_cur",
+            ScalarKey::RankNext => "rank_next",
             ScalarKey::Tau => "tau",
             ScalarKey::Refresh => "refresh",
             ScalarKey::PromptLen => "prompt_len",
@@ -258,6 +264,8 @@ impl ScalarKey {
             "seed_cur" => Some(ScalarKey::SeedCur),
             "seed_next" => Some(ScalarKey::SeedNext),
             "resample" => Some(ScalarKey::Resample),
+            "rank_cur" => Some(ScalarKey::RankCur),
+            "rank_next" => Some(ScalarKey::RankNext),
             "tau" => Some(ScalarKey::Tau),
             "refresh" => Some(ScalarKey::Refresh),
             "prompt_len" => Some(ScalarKey::PromptLen),
@@ -297,10 +305,11 @@ impl Route {
         }
         // method-owned state prefixes used by both catalogs (flora.py /
         // galore.py state_shapes): accumulator, momentum, GaLore moments +
-        // stored projection. Unknown slash-names are an ERROR, not Method —
-        // a typo'd group must fail at routing time, never train as a
-        // silently zero-initialized tensor.
-        const METHOD_PREFIXES: [&str; 5] = ["acc/", "mom/", "m/", "v/", "proj/"];
+        // stored projection, AltLoRA's left sketch. Unknown slash-names are
+        // an ERROR, not Method — a typo'd group must fail at routing time,
+        // never train as a silently zero-initialized tensor.
+        const METHOD_PREFIXES: [&str; 6] =
+            ["acc/", "mom/", "m/", "v/", "proj/", "ralt/"];
         if name.starts_with("params/") || name.starts_with("base/") {
             Ok(Route::State(StateGroup::Params))
         } else if name.starts_with("train/") {
@@ -585,7 +594,7 @@ mod tests {
             Route::of("opt/embed/tok/vr").unwrap(),
             Route::State(StateGroup::Opt)
         );
-        for method_name in ["acc/w", "mom/w", "proj/w", "m/w", "v/w"] {
+        for method_name in ["acc/w", "mom/w", "proj/w", "m/w", "v/w", "ralt/w"] {
             assert_eq!(
                 Route::of(method_name).unwrap(),
                 Route::State(StateGroup::Method),
@@ -618,6 +627,8 @@ mod tests {
             ScalarKey::SeedCur,
             ScalarKey::SeedNext,
             ScalarKey::Resample,
+            ScalarKey::RankCur,
+            ScalarKey::RankNext,
             ScalarKey::Tau,
             ScalarKey::Refresh,
             ScalarKey::PromptLen,

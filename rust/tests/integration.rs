@@ -248,11 +248,7 @@ fn native_lr(opt: OptimizerKind, momentum: bool) -> f32 {
     }
 }
 
-fn smoothed_drop(losses: &[f32], k: usize) -> (f32, f32) {
-    let head: f32 = losses[..k].iter().sum::<f32>() / k as f32;
-    let tail: f32 = losses[losses.len() - k..].iter().sum::<f32>() / k as f32;
-    (head, head - tail)
-}
+use flora::model::testutil::smoothed_drop;
 
 /// The acceptance matrix: every base optimizer trains lm-tiny end-to-end
 /// in plain, accumulation (τ>1) and momentum modes on the native backend,

@@ -257,6 +257,27 @@ fn config_rejections_carry_exact_actionable_messages() {
          compressed wire format (use --method flora --rank R)"
     );
 
+    // dp: the adaptive-rank compressor grid has no wire format — the
+    // rejection names the compressor, its source file and the right tier
+    let err = dp_cfg(|c| c.train.method = MethodSpec::AltLora { rank: 8 })
+        .validate()
+        .unwrap_err();
+    assert_eq!(
+        err,
+        "train-dp exchanges Flora-compressed gradients; compressor altlora is \
+         single-process only (rust/src/opt/altlora.rs) — drop --compressor or \
+         use `flora train`"
+    );
+    let err = dp_cfg(|c| c.train.method = MethodSpec::AdaRank { rank: 4 })
+        .validate()
+        .unwrap_err();
+    assert_eq!(
+        err,
+        "train-dp exchanges Flora-compressed gradients; compressor adarank is \
+         single-process only (rust/src/opt/schedule.rs) — drop --compressor or \
+         use `flora train`"
+    );
+
     // dp: only the LM corpus is sharded
     let err = dp_cfg(|c| c.train.task = TaskKind::Sum).validate().unwrap_err();
     assert_eq!(

@@ -619,3 +619,208 @@ fn prop_flora_compressor_momentum_composes_with_any_base() {
     // but the parameter step differs (sgd scales with |g|, adam is ~lr)
     assert!(!w_sgd.allclose(&w_adam, 1e-5));
 }
+
+// ---------------------------------------------------------------------
+// adaptive-rank schedule (flora::opt::schedule) invariants
+// ---------------------------------------------------------------------
+
+use flora::opt::{
+    migrate, migrate_in_place, reclaimed_bytes, RankSchedule, RankedTick,
+    ScheduledFlora, SubspaceTick,
+};
+
+#[test]
+fn prop_rank_migration_prefix_is_bit_exact_and_bytes_are_analytic() {
+    // a shrink never rewrites a surviving coordinate: the kept
+    // [n, r_new] block is a raw-bits prefix copy of the old state, and
+    // the reclaimed bytes follow (r_old − r_new)·n·4 exactly, for EVERY
+    // (n, r_old, r_new). The shape-stable in-place twin must agree on
+    // both counts and zero the dead columns outright.
+    let mut dims = Rng::new(909);
+    for trial in 0..25u64 {
+        let n = 1 + dims.next_below(24);
+        let r_old = 1 + dims.next_below(16);
+        let state = randn_mat(1000 + trial, n, r_old);
+        for r_new in 1..=r_old {
+            let (kept, freed) = migrate(&state, r_new).unwrap();
+            assert_eq!(kept.shape(), (n, r_new));
+            assert_eq!(freed, ((r_old - r_new) * n * 4) as u64);
+            assert_eq!(freed, reclaimed_bytes(n, r_old, r_new));
+            for i in 0..n {
+                for j in 0..r_new {
+                    assert_eq!(
+                        kept.at(i, j).to_bits(),
+                        state.at(i, j).to_bits(),
+                        "trial {trial}: ({i},{j}) rewritten at {r_old}->{r_new}"
+                    );
+                }
+            }
+            let mut stable = state.clone();
+            assert_eq!(migrate_in_place(&mut stable, r_old, r_new), freed);
+            for i in 0..n {
+                for j in 0..r_old {
+                    if j < r_new {
+                        assert_eq!(
+                            stable.at(i, j).to_bits(),
+                            state.at(i, j).to_bits(),
+                            "trial {trial}: in-place rewrote ({i},{j})"
+                        );
+                    } else {
+                        assert_eq!(stable.at(i, j), 0.0, "trial {trial}: ({i},{j})");
+                    }
+                }
+            }
+        }
+        assert!(migrate(&state, 0).is_err());
+        assert!(migrate(&state, r_old + 1).is_err());
+    }
+}
+
+#[test]
+fn prop_rank_schedule_parses_back_monotone_and_clamped() {
+    // every spellable schedule roundtrips through name(), and rank_at is
+    // monotone nonincreasing in the cycle, clamped to 1..=r0
+    let mut rng = Rng::new(77);
+    for _ in 0..40 {
+        let every = 1 + rng.next_below(49);
+        let r0 = 1 + rng.next_below(32);
+        for spec in [
+            format!("linear-decay:{every}"),
+            format!("halve-at:{every}"),
+            "fixed".to_string(),
+        ] {
+            let sched = RankSchedule::parse(&spec).unwrap();
+            assert_eq!(sched.name(), spec);
+            let mut last = r0;
+            for cycle in 0..100 {
+                let r = sched.rank_at(r0, cycle);
+                assert!(r >= 1 && r <= r0, "{spec} r0={r0} cycle {cycle}: {r}");
+                assert!(r <= last, "{spec} grew at cycle {cycle}");
+                last = r;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scheduled_flora_shrink_step_matches_manual_subrank_algebra() {
+    // one shrinking resample step, replayed by hand: truncate the
+    // momentum FIRST (bit-exact prefix), transfer the survivors between
+    // the sub-rank projections of the MASTER sampling law, EMA in the
+    // new subspace, then decompress with the r0/ra compensation. Pins
+    // both the operation order and the unbiasedness scaling.
+    let (r0, ra, n, m) = (8usize, 4usize, 16usize, 48usize);
+    let sched = ScheduledFlora::new(
+        FloraCompressor::new(Sgd, r0),
+        RankSchedule::HalveAt { every: 1 },
+    );
+    let beta = sched.flora().beta();
+    let tick = RankedTick {
+        sub: SubspaceTick { seed_cur: 31, seed_next: 32, resample: true, transfer: true },
+        rank_cur: r0,
+        rank_next: ra,
+    };
+    let g = randn_mat(40, n, m);
+    let m0 = randn_mat(41, n, r0).scale(0.1);
+    let w0 = randn_mat(42, n, m);
+
+    let mut w = w0.clone();
+    let mut mom = m0.clone();
+    let mut st = Vec::new();
+    let freed = sched
+        .momentum_step(&mut w, &mut mom, &mut st, &g, tick, 0.2, 0.0)
+        .unwrap();
+    assert_eq!(freed, reclaimed_bytes(n, r0, ra));
+
+    let a_old = rp::projection_sub(31, ra, r0, m);
+    let a_new = rp::projection_sub(32, ra, r0, m);
+    let (trunc, _) = migrate(&m0, ra).unwrap();
+    let mut ema = rp::transfer(&trunc, &a_old, &a_new).scale(beta);
+    ema.add_scaled_inplace(&rp::compress(&g, &a_new), 1.0 - beta);
+    for i in 0..n {
+        for j in 0..r0 {
+            if j < ra {
+                assert_eq!(
+                    mom.at(i, j).to_bits(),
+                    ema.at(i, j).to_bits(),
+                    "active momentum ({i},{j}) off the manual algebra"
+                );
+            } else {
+                assert_eq!(mom.at(i, j), 0.0, "dead column ({i},{j}) not zeroed");
+            }
+        }
+    }
+    let mut manual = w0.clone();
+    manual.add_scaled_inplace(
+        &rp::decompress(&ema, &a_new).scale(r0 as f32 / ra as f32),
+        -0.2,
+    );
+    assert!(w.allclose(&manual, 1e-5), "parameter step off the manual algebra");
+}
+
+#[test]
+fn prop_scheduled_flora_compression_stays_linear_after_a_shrink() {
+    // from zero momentum a ranked step is (1−β)·compress_sub(g): still
+    // LINEAR in the gradient even across a mid-cycle shrinking resample
+    // — the accumulate-linearity that keeps Algorithm 1's shared-seed
+    // cycle argument valid at every active rank.
+    let sched = ScheduledFlora::new(
+        FloraCompressor::new(Sgd, 8),
+        RankSchedule::LinearDecay { every: 1 },
+    );
+    let tick = RankedTick {
+        sub: SubspaceTick { seed_cur: 51, seed_next: 52, resample: true, transfer: true },
+        rank_cur: 8,
+        rank_next: 5,
+    };
+    let step_mom = |g: &Matrix| {
+        let mut w = randn_mat(60, 16, 48);
+        let mut mom = Matrix::zeros(16, 8);
+        let mut st = Vec::new();
+        sched.momentum_step(&mut w, &mut mom, &mut st, g, tick, 0.1, 0.0).unwrap();
+        mom
+    };
+    let g1 = randn_mat(61, 16, 48);
+    let g2 = randn_mat(62, 16, 48);
+    let mut gsum = g1.clone();
+    gsum.add_scaled_inplace(&g2, 1.0);
+    let mut want = step_mom(&g1);
+    want.add_scaled_inplace(&step_mom(&g2), 1.0);
+    assert!(
+        step_mom(&gsum).allclose(&want, 1e-4),
+        "post-shrink compression is not linear in the gradient"
+    );
+}
+
+#[test]
+fn prop_scheduled_flora_shrunk_ema_composes_with_any_base() {
+    // the ranked EMA lives upstream of the base optimizer, exactly like
+    // the full-rank one: the momentum reached through a shrinking
+    // resample must be identical under SGD and Adam bases, and both must
+    // book the same reclaimed bytes.
+    let g = randn_mat(71, 16, 48);
+    let tick = RankedTick {
+        sub: SubspaceTick { seed_cur: 81, seed_next: 82, resample: true, transfer: true },
+        rank_cur: 8,
+        rank_next: 4,
+    };
+    let run = |base: Box<dyn BaseOptimizer>| {
+        let sched = ScheduledFlora::new(
+            FloraCompressor::new(base, 8),
+            RankSchedule::HalveAt { every: 1 },
+        );
+        let mut w = randn_mat(72, 16, 48);
+        let mut mom = randn_mat(73, 16, 8).scale(0.1);
+        let mut st = sched.flora().base().init_state(16, 48);
+        let freed = sched
+            .momentum_step(&mut w, &mut mom, &mut st, &g, tick, 0.1, 0.0)
+            .unwrap();
+        (w, mom, freed)
+    };
+    let (w_sgd, mom_sgd, freed_sgd) = run(Box::new(Sgd));
+    let (w_adam, mom_adam, freed_adam) = run(Box::new(Adam::new()));
+    assert_eq!(freed_sgd, freed_adam);
+    assert_eq!(freed_sgd, reclaimed_bytes(16, 8, 4));
+    assert!(mom_sgd.allclose(&mom_adam, 0.0), "ranked EMA depends on the base?");
+    assert!(!w_sgd.allclose(&w_adam, 1e-5));
+}
